@@ -1,0 +1,32 @@
+//! Quickstart: measure the latency of CAS vs a plain read on the simulated
+//! Haswell testbed, across the memory hierarchy — the paper's Figure 2 in
+//! five lines of API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use atomics_repro::arch;
+use atomics_repro::atomics::OpKind;
+use atomics_repro::bench::latency::LatencyBench;
+use atomics_repro::bench::placement::{PrepLocality, PrepState};
+
+fn main() {
+    let cfg = arch::haswell();
+    println!("CAS vs read latency on {} (M state, local buffer)\n", cfg.name);
+    println!("{:>8} {:>10} {:>10} {:>8}", "buffer", "read [ns]", "CAS [ns]", "Δ [ns]");
+    for size in [16 << 10, 128 << 10, 4 << 20, 32 << 20] {
+        let read = LatencyBench::new(OpKind::Read, PrepState::M, PrepLocality::Local)
+            .run_once(&cfg, size)
+            .unwrap();
+        let cas = LatencyBench::new(OpKind::Cas, PrepState::M, PrepLocality::Local)
+            .run_once(&cfg, size)
+            .unwrap();
+        println!(
+            "{:>8} {:>10.2} {:>10.2} {:>8.2}",
+            atomics_repro::report::human_size(size),
+            read,
+            cas,
+            cas - read
+        );
+    }
+    println!("\nThe gap is E(CAS) ≈ {:.1} ns at every level — the paper's Eq. 1.", cfg.timing.e_cas);
+}

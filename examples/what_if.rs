@@ -1,0 +1,53 @@
+//! What-if architecture explorer: quantify the paper's §6.2 hardware
+//! proposals by running the same S/O-state workloads on Bulldozer with the
+//! MOESI+OL/SL states (§6.2.1), HT Assist S/O tracking (§6.2.2), and the
+//! FastLock relaxed-atomics prefix (§6.2.3) enabled.
+//!
+//! Run: `cargo run --release --example what_if`
+
+use atomics_repro::arch;
+use atomics_repro::atomics::OpKind;
+use atomics_repro::bench::latency::LatencyBench;
+use atomics_repro::bench::placement::{PrepLocality, PrepState};
+
+fn main() {
+    std::env::set_var("FAST", "1");
+    let sizes: Vec<usize> = vec![64 << 10, 1 << 20];
+
+    println!("§6.2.1/§6.2.2 — S-state CAS latency on die-local shared lines [ns]");
+    println!("(the baseline broadcasts invalidations to remote dies; both fixes suppress them)\n");
+    let variants = [
+        ("MOESI (shipping Bulldozer)", arch::bulldozer()),
+        ("+ OL/SL states", arch::bulldozer_with_extensions(true, false, false)),
+        ("+ HT Assist tracking", arch::bulldozer_with_extensions(false, true, false)),
+        ("+ both", arch::bulldozer_with_extensions(true, true, false)),
+    ];
+    for locality in [PrepLocality::SharedL2, PrepLocality::OnChip] {
+        println!("  data owned {}:", locality.label());
+        for (name, cfg) in &variants {
+            let mut bench = LatencyBench::new(OpKind::Cas, PrepState::S, locality);
+            bench.sharer = atomics_repro::bench::placement::SharerPlacement::SameDie;
+            let vals: Vec<f64> = sizes
+                .iter()
+                .filter_map(|&s| bench.run_once(cfg, s))
+                .collect();
+            let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+            println!("    {:<28} {:>7.1} ns", name, mean);
+        }
+        println!();
+    }
+
+    println!("§6.2.3 — FastLock: FAA bandwidth to independent lines [GB/s]");
+    println!("(the lock prefix drains the store buffer; FastLock only drains overlaps)\n");
+    for (name, cfg) in [
+        ("lock prefix (baseline)", arch::bulldozer()),
+        ("FastLock prefix", arch::bulldozer_with_extensions(false, false, true)),
+    ] {
+        let vals: Vec<f64> = sizes
+            .iter()
+            .map(|&s| atomics_repro::bench::bandwidth::mixed_stream_bandwidth(&cfg, s))
+            .collect();
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        println!("  {:<28} {:>7.2} GB/s", name, mean);
+    }
+}

@@ -1,0 +1,76 @@
+"""AOT compile path: lower the L2 model entry points to HLO *text* for the
+Rust PJRT runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` 0.1.6 crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --outdir ../artifacts
+Writes: predict.hlo.txt, fit_step.hlo.txt, nrmse.hlo.txt, manifest.txt
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all():
+    """Lower every artifact; returns {name: hlo_text}."""
+    args = model.example_args()
+    fns = {
+        "predict": model.predict,
+        "fit_step": model.fit_step,
+        "nrmse": model.nrmse,
+    }
+    out = {}
+    for name, fn in fns.items():
+        lowered = jax.jit(fn).lower(*args[name])
+        out[name] = to_hlo_text(lowered)
+    return out
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--outdir", default="../artifacts")
+    parser.add_argument("--out", default=None, help="legacy single-file alias (writes predict)")
+    ns = parser.parse_args()
+
+    outdir = ns.outdir
+    if ns.out is not None:
+        outdir = os.path.dirname(ns.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    texts = lower_all()
+    manifest = []
+    for name, text in texts.items():
+        path = os.path.join(outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(
+            f"{name}: rows={model.BATCH_ROWS} features={model.__dict__['FEATURE_DIM'] if 'FEATURE_DIM' in model.__dict__ else 8} bytes={len(text)}"
+        )
+        print(f"wrote {len(text)} chars to {path}")
+    # legacy alias expected by the original scaffold Makefile
+    legacy = os.path.join(outdir, "model.hlo.txt")
+    with open(legacy, "w") as f:
+        f.write(texts["predict"])
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+if __name__ == "__main__":
+    main()

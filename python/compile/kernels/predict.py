@@ -1,0 +1,63 @@
+"""Layer-1 Pallas kernel: batched evaluation of the analytical latency model.
+
+The model (paper Eq. 1-8) is linear in the parameter vector theta once a
+query is featurized (see rust/src/model/features.rs):  `L = F @ theta`.
+The kernel computes that matvec tiled over rows so the feature matrix
+streams through VMEM block by block.
+
+Hardware adaptation note (DESIGN.md §3): the paper targets x86 CPUs, so
+there is no GPU kernel to port; the hot spot of *this* system is sweeping
+thousands of model evaluations per figure.  The BlockSpec tiles rows in
+chunks of `BLOCK_ROWS` = 128 — an MXU/VPU-friendly leading dimension — and
+broadcasts the small theta tile to every grid step.  On CPU the kernel runs
+under interpret=True (Mosaic custom-calls cannot execute on the CPU PJRT
+plugin); the VMEM footprint per step is BLOCK_ROWS x FEATURE_DIM x 4 B
+(features) + FEATURE_DIM x 4 (theta) + BLOCK_ROWS x 4 (out) ≈ 4.6 KiB,
+far below the 16 MiB VMEM budget, leaving ample double-buffering headroom.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Feature dimension: [r_l1, r_l2, r_l3, hop, mem, e_cas, e_faa, e_swp]
+# (must match rust/src/model/params.rs::THETA_DIM).
+FEATURE_DIM = 8
+BLOCK_ROWS = 128
+
+
+def _predict_kernel(f_ref, theta_ref, out_ref):
+    """One grid step: out[block] = F[block, :] @ theta."""
+    f = f_ref[...]  # (BLOCK_ROWS, FEATURE_DIM)
+    theta = theta_ref[...]  # (1, FEATURE_DIM)
+    # Row-block matvec, expressed as a broadcast-multiply + lane reduction
+    # (VPU-friendly; the MXU picks this up for larger K).
+    out_ref[...] = jnp.sum(f * theta, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def predict(features, theta):
+    """Latency predictions `features @ theta` via the Pallas kernel.
+
+    features: f32[N, FEATURE_DIM] with N a multiple of BLOCK_ROWS.
+    theta:    f32[FEATURE_DIM]
+    returns:  f32[N]
+    """
+    n, k = features.shape
+    assert k == FEATURE_DIM, f"feature dim {k} != {FEATURE_DIM}"
+    assert n % BLOCK_ROWS == 0, f"N={n} must be a multiple of {BLOCK_ROWS}"
+    grid = (n // BLOCK_ROWS,)
+    theta2d = theta.reshape(1, FEATURE_DIM)
+    return pl.pallas_call(
+        _predict_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, FEATURE_DIM), lambda i: (i, 0)),
+            pl.BlockSpec((1, FEATURE_DIM), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(features, theta2d)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the Pallas predict kernel (correctness reference).
+
+Also used as the differentiable forward pass inside the fit step (pallas
+interpret-mode kernels do not define a VJP, and the two are asserted
+allclose by python/tests/test_kernel.py, so the gradients are taken through
+mathematically identical code).
+"""
+
+import jax.numpy as jnp
+
+
+def predict_ref(features, theta):
+    """`features @ theta` — the linear analytical model (Eq. 1-8)."""
+    return features @ theta
+
+
+def nrmse_ref(predicted, observed, weights):
+    """Weighted NRMSE (paper Eq. 12) ignoring masked-out (weight 0) rows."""
+    w = weights
+    n = jnp.maximum(jnp.sum(w), 1.0)
+    mean_obs = jnp.sum(w * observed) / n
+    mse = jnp.sum(w * (predicted - observed) ** 2) / n
+    return jnp.sqrt(mse) / mean_obs

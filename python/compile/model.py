@@ -1,0 +1,68 @@
+"""Layer-2 JAX model: the analytical performance model (paper §4) as a
+batched compute graph, plus the gradient fit step that recovers the Table 2
+parameters from simulator measurements.
+
+Three entry points are AOT-lowered by aot.py and executed from Rust via
+PJRT (Python never runs at benchmark time):
+
+* predict(features, theta)            -> latency[N]          (Pallas kernel)
+* fit_step(features, y, w, theta, lr) -> (theta', loss)      (jax.grad)
+* nrmse(pred, obs, w)                 -> scalar              (Eq. 12)
+
+All shapes are static: N = BATCH_ROWS rows; callers pad with zero-weight
+rows (weight vector w masks them out of the loss/metric).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.predict import BLOCK_ROWS, FEATURE_DIM, predict as predict_kernel
+from .kernels.ref import nrmse_ref, predict_ref
+
+# The static batch the artifacts are exported with. Figure sweeps produce at
+# most a few hundred query rows; Rust pads to this.
+BATCH_ROWS = 512
+assert BATCH_ROWS % BLOCK_ROWS == 0
+
+
+def predict(features, theta):
+    """Batched latency prediction through the Pallas kernel (L = F @ theta)."""
+    return predict_kernel(features, theta)
+
+
+def weighted_mse(theta, features, y, w):
+    """Masked mean-squared error of the linear model."""
+    pred = predict_ref(features, theta)  # differentiable forward
+    n = jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.sum(w * (pred - y) ** 2) / n
+
+
+def fit_step(features, y, w, theta, lr):
+    """One gradient-descent step on the masked MSE.
+
+    Returns (theta', loss-before-step). Rust drives the loop and decides
+    convergence; a non-negativity projection keeps the parameters physical
+    (latencies cannot be negative).
+    """
+    loss, grad = jax.value_and_grad(weighted_mse)(theta, features, y, w)
+    theta_new = jnp.maximum(theta - lr * grad, 0.0)
+    return theta_new, loss
+
+
+def nrmse(pred, obs, w):
+    """Eq. 12 on masked rows."""
+    return nrmse_ref(pred, obs, w)
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering."""
+    f32 = jnp.float32
+    feats = jax.ShapeDtypeStruct((BATCH_ROWS, FEATURE_DIM), f32)
+    vec = jax.ShapeDtypeStruct((BATCH_ROWS,), f32)
+    theta = jax.ShapeDtypeStruct((FEATURE_DIM,), f32)
+    scalar = jax.ShapeDtypeStruct((), f32)
+    return {
+        "predict": (feats, theta),
+        "fit_step": (feats, vec, vec, theta, scalar),
+        "nrmse": (vec, vec, vec),
+    }

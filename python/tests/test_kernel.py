@@ -1,0 +1,82 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the L1 layer.
+
+Hypothesis sweeps shapes and value ranges of the Pallas predict kernel
+against the pure-jnp reference; exact agreement is expected (identical
+operation order on f32)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.predict import BLOCK_ROWS, FEATURE_DIM, predict
+from compile.kernels.ref import predict_ref
+
+
+def _random_case(rng, n):
+    features = rng.uniform(-2.0, 2.0, size=(n, FEATURE_DIM)).astype(np.float32)
+    theta = rng.uniform(0.0, 100.0, size=(FEATURE_DIM,)).astype(np.float32)
+    return features, theta
+
+
+class TestPredictKernel:
+    @pytest.mark.parametrize("blocks", [1, 2, 4])
+    def test_matches_reference_for_block_multiples(self, blocks):
+        rng = np.random.default_rng(blocks)
+        f, t = _random_case(rng, blocks * BLOCK_ROWS)
+        got = np.asarray(predict(jnp.asarray(f), jnp.asarray(t)))
+        want = np.asarray(predict_ref(jnp.asarray(f), jnp.asarray(t)))
+        # f32 reduction order differs between the tiled kernel and the
+        # reference matmul; agreement is to f32 round-off.
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_zero_theta_gives_zero(self):
+        f = jnp.ones((BLOCK_ROWS, FEATURE_DIM), jnp.float32)
+        t = jnp.zeros((FEATURE_DIM,), jnp.float32)
+        assert np.allclose(np.asarray(predict(f, t)), 0.0)
+
+    def test_unit_features_sum_theta(self):
+        f = jnp.ones((BLOCK_ROWS, FEATURE_DIM), jnp.float32)
+        t = jnp.arange(FEATURE_DIM, dtype=jnp.float32)
+        got = np.asarray(predict(f, t))
+        assert np.allclose(got, float(np.arange(FEATURE_DIM).sum()))
+
+    def test_rejects_non_multiple_rows(self):
+        f = jnp.ones((BLOCK_ROWS + 1, FEATURE_DIM), jnp.float32)
+        t = jnp.zeros((FEATURE_DIM,), jnp.float32)
+        with pytest.raises(AssertionError):
+            predict(f, t)
+
+    def test_rejects_wrong_feature_dim(self):
+        f = jnp.ones((BLOCK_ROWS, FEATURE_DIM + 1), jnp.float32)
+        t = jnp.zeros((FEATURE_DIM + 1,), jnp.float32)
+        with pytest.raises(AssertionError):
+            predict(f, t)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        blocks=st.integers(1, 3),
+        scale=st.floats(0.1, 1000.0),
+    )
+    def test_hypothesis_sweep(self, seed, blocks, scale):
+        rng = np.random.default_rng(seed)
+        n = blocks * BLOCK_ROWS
+        f = (rng.standard_normal((n, FEATURE_DIM)) * scale).astype(np.float32)
+        t = (rng.standard_normal(FEATURE_DIM) * scale).astype(np.float32)
+        got = np.asarray(predict(jnp.asarray(f), jnp.asarray(t)))
+        want = np.asarray(f @ t)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-3 * scale)
+
+    def test_paper_table2_haswell_row(self):
+        # A hand-built feature row: local-L1 CAS on Haswell, Eq. 1 with
+        # Table 2 seeds -> r_l1 + e_cas = 5.87 ns.
+        theta = jnp.asarray(
+            [1.17, 3.5, 10.3, 0.0, 65.0, 4.7, 5.6, 5.6], jnp.float32
+        )
+        row = np.zeros((BLOCK_ROWS, FEATURE_DIM), np.float32)
+        row[0, 0] = 1.0  # r_l1
+        row[0, 5] = 1.0  # e_cas
+        got = np.asarray(predict(jnp.asarray(row), theta))
+        assert abs(got[0] - 5.87) < 1e-4
+        assert np.allclose(got[1:], 0.0)

@@ -1,0 +1,45 @@
+//! Ablation benchmarks for the paper's §6.2 hardware proposals: how much do
+//! the MOESI+OL/SL states, HT Assist S/O tracking, and FastLock buy on the
+//! workloads that motivate them? Prints both wall time and the *simulated*
+//! latencies/bandwidths (the interesting output).
+
+use atomics_repro::arch;
+use atomics_repro::atomics::OpKind;
+use atomics_repro::bench::latency::LatencyBench;
+use atomics_repro::bench::placement::{PrepLocality, PrepState};
+use atomics_repro::bench::BandwidthBench;
+use atomics_repro::harness::{black_box, Bencher};
+
+fn main() {
+    let mut b = Bencher::new();
+    let size = 256 << 10;
+
+    b.group("§6.2.1 / §6.2.2 — S-state CAS latency, die-local sharers (simulated ns)");
+    let variants = [
+        ("moesi_baseline", arch::bulldozer()),
+        ("moesi_olsl", arch::bulldozer_with_extensions(true, false, false)),
+        ("moesi_hta_tracking", arch::bulldozer_with_extensions(false, true, false)),
+        ("moesi_both", arch::bulldozer_with_extensions(true, true, false)),
+    ];
+    for (name, cfg) in &variants {
+        let bench = LatencyBench::new(OpKind::Cas, PrepState::S, PrepLocality::SharedL2);
+        let ns = bench.run_once(cfg, size).unwrap();
+        println!("  simulated: {name:<22} {ns:>7.1} ns");
+        b.bench(format!("ablation_{name}"), || {
+            black_box(bench.run_once(cfg, size).unwrap());
+        });
+    }
+
+    b.group("§6.2.3 — FastLock: independent-FAA bandwidth (simulated GB/s)");
+    for (name, cfg) in [
+        ("lock_baseline", arch::bulldozer()),
+        ("fastlock", arch::bulldozer_with_extensions(false, false, true)),
+    ] {
+        let bench = BandwidthBench::new(OpKind::Faa, PrepState::M, PrepLocality::Local);
+        let gbs = bench.run_once(&cfg, size).unwrap();
+        println!("  simulated: {name:<22} {gbs:>7.2} GB/s");
+        b.bench(format!("ablation_{name}"), || {
+            black_box(bench.run_once(&cfg, size).unwrap());
+        });
+    }
+}

@@ -1,0 +1,78 @@
+//! Hot-path microbenchmarks of the simulator engine — the §Perf iteration
+//! targets (EXPERIMENTS.md §Perf). Reports simulated accesses per second.
+
+use atomics_repro::arch;
+use atomics_repro::atomics::Op;
+use atomics_repro::harness::{black_box, Bencher};
+use atomics_repro::sim::Machine;
+
+const N: u64 = 200_000;
+
+fn main() {
+    let mut b = Bencher::new();
+
+    b.group("engine hot paths (throughput = simulated accesses/s)");
+
+    // L1-hit read loop: the floor of every pointer chase.
+    b.bench_throughput("l1_hit_read", N, || {
+        let mut m = Machine::new(arch::haswell());
+        m.access64(0, Op::Read, 0x1000);
+        for _ in 0..N {
+            black_box(m.access64(0, Op::Read, 0x1000));
+        }
+    });
+
+    // L1-hit FAA loop: adds the RMW transition work.
+    b.bench_throughput("l1_hit_faa", N, || {
+        let mut m = Machine::new(arch::haswell());
+        for _ in 0..N {
+            black_box(m.access64(0, Op::Faa { delta: 1 }, 0x1000));
+        }
+    });
+
+    // Streaming misses: tag-array insert/evict chain + coherence updates.
+    b.bench_throughput("stream_miss_read", N, || {
+        let mut m = Machine::new(arch::haswell());
+        for i in 0..N {
+            black_box(m.access64(0, Op::Read, 0x10_0000 + i * 64));
+        }
+    });
+
+    // Ping-pong between two cores: cache-to-cache path + invalidations.
+    b.bench_throughput("pingpong_faa", N, || {
+        let mut m = Machine::new(arch::haswell());
+        for i in 0..N {
+            black_box(m.access64((i % 2) as usize, Op::Faa { delta: 1 }, 0x2000));
+        }
+    });
+
+    // Buffered writes: store-buffer path.
+    b.bench_throughput("buffered_writes", N, || {
+        let mut m = Machine::new(arch::haswell());
+        for i in 0..N {
+            black_box(m.access64(0, Op::Write { value: i }, 0x3000 + (i % 512) * 64));
+        }
+    });
+
+    // Bulldozer shared-state RMW: the broadcast-invalidation path.
+    b.bench_throughput("bulldozer_shared_rmw", N / 10, || {
+        let mut m = Machine::new(arch::bulldozer());
+        m.access64(0, Op::Read, 0x4000);
+        m.access64(2, Op::Read, 0x4000);
+        for _ in 0..N / 10 {
+            black_box(m.access64(0, Op::Faa { delta: 1 }, 0x4000));
+            m.access64(2, Op::Read, 0x4000); // re-share
+        }
+    });
+
+    // Contention event engine (Fig. 8 kernel).
+    b.bench_throughput("event_contention_32t", 32 * 2000, || {
+        let cfg = arch::bulldozer();
+        black_box(atomics_repro::sim::event::run_contention(
+            &cfg,
+            32,
+            atomics_repro::atomics::OpKind::Faa,
+            2000,
+        ));
+    });
+}

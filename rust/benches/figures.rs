@@ -1,0 +1,50 @@
+//! One benchmark per paper table/figure: times the regeneration of each
+//! experiment (DESIGN.md §5 index). Uses the in-tree harness (criterion is
+//! not vendored offline). `BENCH_FAST=1` reduces samples.
+
+use atomics_repro::harness::{black_box, Bencher};
+use atomics_repro::report::{figures, tables};
+
+fn main() {
+    std::env::set_var("FAST", "1"); // bench the reduced sweep; shapes identical
+    let mut b = Bencher::new();
+
+    b.group("tables");
+    b.bench("table1_testbeds", || {
+        black_box(tables::table1().render());
+    });
+    b.bench("table3_overheads_haswell", || {
+        black_box(tables::table3().render());
+    });
+    // table2's fit is exercised in example end_to_end (needs artifacts);
+    // the dataset collection that feeds it is timed here:
+    b.bench("table2_fit_dataset", || {
+        let cfg = atomics_repro::arch::haswell();
+        let sizes = atomics_repro::coordinator::dataset::fit_sizes(&cfg);
+        black_box(atomics_repro::coordinator::collect_latency_dataset(&cfg, &sizes));
+    });
+
+    b.group("latency figures");
+    for id in ["2", "3", "4", "6", "11", "12", "13"] {
+        b.bench(format!("fig{id:>3}_latency"), || {
+            black_box(figures::figure(id).unwrap());
+        });
+    }
+
+    b.group("bandwidth figures");
+    for id in ["5", "9", "15"] {
+        b.bench(format!("fig{id:>3}_bandwidth"), || {
+            black_box(figures::figure(id).unwrap());
+        });
+    }
+
+    b.group("special figures");
+    for id in ["7", "8", "8d", "10a", "14"] {
+        b.bench(format!("fig{id:>3}"), || {
+            black_box(figures::figure(id).unwrap());
+        });
+    }
+    b.bench("fig10b_bfs", || {
+        black_box(figures::figure("10b").unwrap());
+    });
+}

@@ -1,0 +1,125 @@
+//! AMD Bulldozer testbed: 2× Opteron 6272 "Interlagos" (Cray XE6 Monte Rosa
+//! node), 32 cores (Fig. 1b).
+//!
+//! Each socket hosts two 8-core dies connected with HyperTransport; modules
+//! of two cores share a 2 MB L2; the 8 MB per-die L3 is *non-inclusive* and
+//! partially consumed by the HT Assist probe filter. Write-through L1,
+//! MOESI. The paper's case study in coherence-protocol pathologies: shared
+//! -line atomics always broadcast invalidations to remote dies (§5.1.2).
+
+use crate::sim::config::*;
+use crate::sim::mechanisms::Mechanisms;
+use crate::sim::protocol::ProtocolKind;
+use crate::sim::timing::{Level, LocalityClass, OpMatch, OverheadTable, StateClass, Timing};
+use crate::sim::topology::Topology;
+use crate::sim::writebuffer::WriteBufferCfg;
+
+fn overheads() -> OverheadTable {
+    OverheadTable::new()
+        // §5.1.2: atomics take ≈20 ns longer than reads on *local* caches
+        // (beyond E(A)=25, which already covers part of it) but only ≈8 ns
+        // into caches of different cores: encode the local surcharge.
+        .rule_any(OpMatch::AnyAtomic, Some(StateClass::ExclusiveLike), Some(Level::L2), Some(LocalityClass::Local), 8.0)
+        .rule_any(OpMatch::AnyAtomic, Some(StateClass::ExclusiveLike), Some(Level::L3), Some(LocalityClass::Local), 6.0)
+        // Remote accesses come in cheaper than the naive composition.
+        .rule_any(OpMatch::AnyAtomic, None, Some(Level::L1), Some(LocalityClass::Remote), -8.0)
+        .rule_any(OpMatch::AnyAtomic, None, Some(Level::L2), Some(LocalityClass::Remote), -8.0)
+}
+
+pub fn bulldozer() -> MachineConfig {
+    MachineConfig {
+        name: "Bulldozer",
+        cpu_model: "Opteron 6272",
+        // 32 cores: modules of 2 share L2; 8 cores per die; 2 dies/socket.
+        topology: Topology::new(32, 2, 8, 2),
+        // 16 KB write-through L1 per core (Table 1).
+        l1: CacheGeom { size: 16 * 1024, ways: 4, write_policy: WritePolicy::WriteThrough },
+        // 2 MB L2 per 2-core module.
+        l2: CacheGeom { size: 2 << 20, ways: 16, write_policy: WritePolicy::WriteBack },
+        // 8 MB non-inclusive L3 per die; HT Assist steals 1 MB (2/16 ways).
+        l3: Some(CacheGeom { size: 8 << 20, ways: 16, write_policy: WritePolicy::WriteBack }),
+        l3_policy: L3Policy::NonInclusive,
+        protocol: ProtocolKind::Moesi,
+        // Table 2, Bulldozer column.
+        timing: Timing {
+            r_l1: 5.2,
+            r_l2: 8.8,
+            r_l3: 30.0,
+            hop: 62.0, // HyperTransport
+            mem: 75.0,
+            e_cas: 25.0,
+            e_faa: 25.0,
+            e_swp: 25.0,
+            write_issue: 1.0,
+        },
+        overheads: overheads(),
+        write_buffer: WriteBufferCfg { entries: 24, merging: true, fastlock: false },
+        mechanisms: Mechanisms::ALL_OFF,
+        ht_assist: Some(HtAssistCfg {
+            reserved_ways: 2, // 1 MB of the 8 MB L3
+            track_shared: false,
+            shared_capacity: 0,
+        }),
+        muw: true, // §5.5: the MuW fast-migration state
+        contended_write_combining: false, // §5.4: Bulldozer suffers
+        cas128_penalty: (20.0, 5.0), // §5.3
+        unaligned: UnalignedCfg { bus_lock_ns: 560.0 },
+        frequency_mhz: 2100,
+        interconnect: "4x HT 3.1 (6.4 GT/s)",
+        memory: "32GB",
+    }
+}
+
+/// Bulldozer with the paper's §6.2 hardware proposals enabled:
+/// MOESI+OL/SL states (§6.2.1) and HT Assist S/O tracking (§6.2.2).
+/// Used by the ablation benchmarks to quantify the proposed wins.
+pub fn bulldozer_with_extensions(olsl: bool, ht_tracking: bool, fastlock: bool) -> MachineConfig {
+    let mut cfg = bulldozer();
+    if olsl {
+        cfg.name = "Bulldozer+OL/SL";
+        cfg.protocol = ProtocolKind::MoesiOlSl;
+    }
+    if ht_tracking {
+        cfg.name = if olsl { "Bulldozer+OL/SL+HTA" } else { "Bulldozer+HTA" };
+        cfg.ht_assist = Some(HtAssistCfg {
+            reserved_ways: 2,
+            track_shared: true,
+            shared_capacity: 16 * 1024, // 1 MB of 64 B entries
+        });
+    }
+    if fastlock {
+        cfg.write_buffer.fastlock = true;
+    }
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_through_l1() {
+        assert_eq!(bulldozer().l1.write_policy, WritePolicy::WriteThrough);
+    }
+
+    #[test]
+    fn ht_assist_reserves_l3() {
+        let c = bulldozer();
+        assert_eq!(c.effective_l3_bytes(), Some(7 << 20));
+    }
+
+    #[test]
+    fn module_shares_l2() {
+        assert_eq!(bulldozer().l2_shared_by(), 2);
+    }
+
+    #[test]
+    fn extensions_change_protocol() {
+        let e = bulldozer_with_extensions(true, true, true);
+        assert_eq!(e.protocol, ProtocolKind::MoesiOlSl);
+        assert!(e.ht_assist.unwrap().track_shared);
+        assert!(e.write_buffer.fastlock);
+        // base stays MOESI
+        assert_eq!(bulldozer().protocol, ProtocolKind::Moesi);
+    }
+}

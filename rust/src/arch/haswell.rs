@@ -1,0 +1,65 @@
+//! Intel Haswell testbed: Core i7-4770, 4 cores, 1 CPU (Fig. 1a).
+//!
+//! Private L1 (32 KB) and L2 (256 KB), shared inclusive L3 (8 MB) with
+//! core-valid bits, MESIF. The commodity multicore baseline of the paper.
+
+use crate::atomics::OpKind;
+use crate::sim::config::*;
+use crate::sim::mechanisms::Mechanisms;
+use crate::sim::protocol::ProtocolKind;
+use crate::sim::timing::{Level, LocalityClass, OpMatch, OverheadTable, StateClass, Timing};
+use crate::sim::topology::Topology;
+use crate::sim::writebuffer::WriteBufferCfg;
+
+pub fn haswell() -> MachineConfig {
+    // Table 3: the O residual for Haswell (ns).
+    //               op                 state                      level      locality                ns
+    let overheads = OverheadTable::new()
+        .rule(OpMatch::AnyAtomic, StateClass::ExclusiveLike, Level::L2, LocalityClass::Local, 3.8)
+        .rule(OpMatch::AnyAtomic, StateClass::ExclusiveLike, Level::L3, LocalityClass::Local, 3.5)
+        .rule(OpMatch::AnyAtomic, StateClass::ExclusiveLike, Level::L1, LocalityClass::Remote, 3.0)
+        .rule(OpMatch::AnyAtomic, StateClass::ExclusiveLike, Level::L2, LocalityClass::Remote, 5.0)
+        .rule(OpMatch::AnyAtomic, StateClass::ExclusiveLike, Level::L3, LocalityClass::Remote, 5.0)
+        .rule(OpMatch::AnyAtomic, StateClass::SharedLike, Level::L1, LocalityClass::Local, 3.0)
+        .rule(OpMatch::AnyAtomic, StateClass::SharedLike, Level::L2, LocalityClass::Local, 1.4)
+        .rule(OpMatch::AnyAtomic, StateClass::SharedLike, Level::L3, LocalityClass::Local, -4.0)
+        .rule(OpMatch::AnyAtomic, StateClass::SharedLike, Level::L1, LocalityClass::Remote, -15.0)
+        .rule(OpMatch::AnyAtomic, StateClass::SharedLike, Level::L2, LocalityClass::Remote, -14.0)
+        .rule(OpMatch::AnyAtomic, StateClass::SharedLike, Level::L3, LocalityClass::Remote, -12.0)
+        // §5.1.1: on Haswell L1, CAS is marginally faster than FAA/SWP.
+        .rule(OpMatch::Only(OpKind::Cas), StateClass::ExclusiveLike, Level::L1, LocalityClass::Local, -0.5);
+
+    MachineConfig {
+        name: "Haswell",
+        cpu_model: "Core i7-4770",
+        topology: Topology::new(4, 1, 4, 1),
+        l1: CacheGeom { size: 32 * 1024, ways: 8, write_policy: WritePolicy::WriteBack },
+        l2: CacheGeom { size: 256 * 1024, ways: 8, write_policy: WritePolicy::WriteBack },
+        l3: Some(CacheGeom { size: 8 << 20, ways: 16, write_policy: WritePolicy::WriteBack }),
+        l3_policy: L3Policy::InclusiveCoreValid,
+        protocol: ProtocolKind::Mesif,
+        // Table 2, Haswell column.
+        timing: Timing {
+            r_l1: 1.17,
+            r_l2: 3.5,
+            r_l3: 10.3,
+            hop: f64::NAN, // single socket — no interconnect
+            mem: 65.0,
+            e_cas: 4.7,
+            e_faa: 5.6,
+            e_swp: 5.6,
+            write_issue: 0.5,
+        },
+        overheads,
+        write_buffer: WriteBufferCfg { entries: 42, merging: true, fastlock: false },
+        mechanisms: Mechanisms::ALL_OFF, // §3.3: everything disabled
+        ht_assist: None,
+        muw: false,
+        contended_write_combining: true, // §5.4
+        cas128_penalty: (0.0, 0.0),      // §5.3: identical on Intel
+        unaligned: UnalignedCfg { bus_lock_ns: 480.0 }, // §5.7: CAS up to ≈750ns
+        frequency_mhz: 3400,
+        interconnect: "-",
+        memory: "8GB",
+    }
+}

@@ -1,0 +1,67 @@
+//! Intel Ivy Bridge testbed: 2× Xeon E5-2697v2 (ETH Euler cluster), 24 cores
+//! over two sockets connected with QPI.
+//!
+//! Private L1/L2, 30 MB shared inclusive L3 per socket with core-valid bits,
+//! MESIF. The deep-memory-hierarchy / NUMA testbed.
+
+use crate::atomics::OpKind;
+use crate::sim::config::*;
+use crate::sim::mechanisms::Mechanisms;
+use crate::sim::protocol::ProtocolKind;
+use crate::sim::timing::{Level, LocalityClass, OpMatch, OverheadTable, StateClass, Timing};
+use crate::sim::topology::Topology;
+use crate::sim::writebuffer::WriteBufferCfg;
+
+pub fn ivybridge() -> MachineConfig {
+    let overheads = OverheadTable::new()
+        // Same qualitative residuals as Haswell (both MESIF + inclusive L3).
+        .rule(OpMatch::AnyAtomic, StateClass::ExclusiveLike, Level::L2, LocalityClass::Local, 3.6)
+        .rule(OpMatch::AnyAtomic, StateClass::ExclusiveLike, Level::L3, LocalityClass::Local, 3.2)
+        .rule(OpMatch::AnyAtomic, StateClass::ExclusiveLike, Level::L1, LocalityClass::Remote, 3.0)
+        .rule(OpMatch::AnyAtomic, StateClass::ExclusiveLike, Level::L2, LocalityClass::Remote, 4.5)
+        .rule(OpMatch::AnyAtomic, StateClass::ExclusiveLike, Level::L3, LocalityClass::Remote, 4.5)
+        .rule(OpMatch::AnyAtomic, StateClass::SharedLike, Level::L1, LocalityClass::Local, 2.5)
+        .rule(OpMatch::AnyAtomic, StateClass::SharedLike, Level::L2, LocalityClass::Local, 1.2)
+        .rule(OpMatch::AnyAtomic, StateClass::SharedLike, Level::L3, LocalityClass::Local, -3.5)
+        .rule(OpMatch::AnyAtomic, StateClass::SharedLike, Level::L1, LocalityClass::Remote, -13.0)
+        .rule(OpMatch::AnyAtomic, StateClass::SharedLike, Level::L2, LocalityClass::Remote, -12.0)
+        .rule(OpMatch::AnyAtomic, StateClass::SharedLike, Level::L3, LocalityClass::Remote, -10.0)
+        // §5.1.1: the Ivy Bridge L1 detects that a (failing) CAS will not
+        // modify the line and serves it 2–3 ns faster than FAA/SWP in E/M.
+        .rule(OpMatch::Only(OpKind::Cas), StateClass::ExclusiveLike, Level::L1, LocalityClass::Local, -2.5);
+
+    MachineConfig {
+        name: "Ivy Bridge",
+        cpu_model: "Xeon E5-2697v2",
+        // 24 cores: two 12-core sockets (each socket is one die/L3 domain).
+        topology: Topology::new(24, 1, 12, 1),
+        l1: CacheGeom { size: 32 * 1024, ways: 8, write_policy: WritePolicy::WriteBack },
+        l2: CacheGeom { size: 256 * 1024, ways: 8, write_policy: WritePolicy::WriteBack },
+        l3: Some(CacheGeom { size: 30 << 20, ways: 20, write_policy: WritePolicy::WriteBack }),
+        l3_policy: L3Policy::InclusiveCoreValid,
+        protocol: ProtocolKind::Mesif,
+        // Table 2, Ivy Bridge column.
+        timing: Timing {
+            r_l1: 1.8,
+            r_l2: 3.7,
+            r_l3: 14.5,
+            hop: 66.0, // QPI
+            mem: 80.0,
+            e_cas: 4.8,
+            e_faa: 5.9,
+            e_swp: 5.9,
+            write_issue: 0.6,
+        },
+        overheads,
+        write_buffer: WriteBufferCfg { entries: 36, merging: true, fastlock: false },
+        mechanisms: Mechanisms::ALL_OFF,
+        ht_assist: None,
+        muw: false,
+        contended_write_combining: true, // §5.4: ~100 GB/s contended writes
+        cas128_penalty: (0.0, 0.0),
+        unaligned: UnalignedCfg { bus_lock_ns: 520.0 },
+        frequency_mhz: 2700,
+        interconnect: "2x QPI (8.0 GT/s)",
+        memory: "64GB",
+    }
+}

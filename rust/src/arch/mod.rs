@@ -1,0 +1,87 @@
+//! The four evaluated architectures (§2.2, Table 1) encoded as
+//! [`MachineConfig`]s, with timing parameters from Table 2 and O-residuals
+//! from Table 3 (Haswell) / §5 (the other testbeds).
+
+mod bulldozer;
+mod haswell;
+mod ivybridge;
+mod xeonphi;
+
+pub use bulldozer::{bulldozer, bulldozer_with_extensions};
+pub use haswell::haswell;
+pub use ivybridge::ivybridge;
+pub use xeonphi::xeonphi;
+
+use crate::sim::config::MachineConfig;
+
+/// All four paper testbeds.
+pub fn all() -> Vec<MachineConfig> {
+    vec![haswell(), ivybridge(), bulldozer(), xeonphi()]
+}
+
+/// Look up a testbed by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<MachineConfig> {
+    match name.to_ascii_lowercase().as_str() {
+        "haswell" => Some(haswell()),
+        "ivybridge" | "ivy" | "ivy-bridge" => Some(ivybridge()),
+        "bulldozer" | "amd" => Some(bulldozer()),
+        "xeonphi" | "phi" | "mic" | "xeon-phi" => Some(xeonphi()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::protocol::ProtocolKind;
+
+    #[test]
+    fn four_testbeds() {
+        assert_eq!(all().len(), 4);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("haswell").unwrap().name, "Haswell");
+        assert_eq!(by_name("IVY").unwrap().name, "Ivy Bridge");
+        assert_eq!(by_name("amd").unwrap().name, "Bulldozer");
+        assert_eq!(by_name("mic").unwrap().name, "Xeon Phi");
+        assert!(by_name("alpha").is_none());
+    }
+
+    #[test]
+    fn protocols_match_table1() {
+        assert_eq!(haswell().protocol, ProtocolKind::Mesif);
+        assert_eq!(ivybridge().protocol, ProtocolKind::Mesif);
+        assert_eq!(bulldozer().protocol, ProtocolKind::Moesi);
+        assert_eq!(xeonphi().protocol, ProtocolKind::MesiGols);
+    }
+
+    #[test]
+    fn core_counts_match_table1() {
+        assert_eq!(haswell().topology.n_cores, 4);
+        assert_eq!(ivybridge().topology.n_cores, 24);
+        assert_eq!(bulldozer().topology.n_cores, 32);
+        assert_eq!(xeonphi().topology.n_cores, 61);
+    }
+
+    #[test]
+    fn phi_has_no_l3() {
+        assert!(!xeonphi().has_l3());
+        assert!(haswell().has_l3());
+    }
+
+    #[test]
+    fn table2_medians_encoded() {
+        let h = haswell().timing;
+        assert_eq!(h.r_l1, 1.17);
+        assert_eq!(h.r_l2, 3.5);
+        assert_eq!(h.r_l3, 10.3);
+        assert_eq!(h.mem, 65.0);
+        assert_eq!(h.e_cas, 4.7);
+        let p = xeonphi().timing;
+        assert_eq!(p.hop, 161.2);
+        assert_eq!(p.e_cas, 12.4);
+        assert_eq!(p.e_faa, 2.4);
+    }
+}

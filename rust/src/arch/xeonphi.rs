@@ -1,0 +1,85 @@
+//! Intel Xeon Phi (MIC) testbed: Xeon Phi 7120, 61 cores on a ring.
+//!
+//! Private L1 (32 KB) and inclusive L2 (512 KB); no L3. MESI extended with
+//! the GOLS directory states (Globally Owned, Locally Shared) to emulate
+//! dirty sharing. Remote accesses pay the ring hop + distributed tag
+//! directory lookup — the dominant H = 161.2 ns of Table 2. Uniquely among
+//! the testbeds, CAS is measurably slower than FAA here (E(CAS) = 12.4 vs
+//! E(FAA) = 2.4 ns, §5.1.3).
+
+use crate::atomics::OpKind;
+use crate::sim::config::*;
+use crate::sim::mechanisms::Mechanisms;
+use crate::sim::protocol::ProtocolKind;
+use crate::sim::timing::{Level, LocalityClass, OpMatch, OverheadTable, Timing};
+use crate::sim::topology::Topology;
+use crate::sim::writebuffer::WriteBufferCfg;
+
+pub fn xeonphi() -> MachineConfig {
+    let overheads = OverheadTable::new()
+        // §5.1.3: FAA is ≈2 ns over read locally, ≈5 ns remotely; CAS adds
+        // ≈10/15 ns on top (already mostly in E(CAS)); encode the remote
+        // directory-check surcharges.
+        .rule_any(OpMatch::AnyAtomic, None, Some(Level::L1), Some(LocalityClass::Remote), 3.0)
+        .rule_any(OpMatch::Only(OpKind::Cas), None, Some(Level::L1), Some(LocalityClass::Remote), 5.0)
+        .rule_any(OpMatch::Only(OpKind::Cas), None, Some(Level::L2), Some(LocalityClass::Remote), 5.0);
+
+    MachineConfig {
+        name: "Xeon Phi",
+        cpu_model: "Xeon Phi 7120",
+        // 61 cores, private L2, one ring domain (no L3, single "die").
+        topology: Topology::new(61, 1, 61, 1),
+        l1: CacheGeom { size: 32 * 1024, ways: 8, write_policy: WritePolicy::WriteBack },
+        // L2 is inclusive of L1 on Phi (Table 1).
+        l2: CacheGeom { size: 512 * 1024, ways: 8, write_policy: WritePolicy::WriteBack },
+        l3: None,
+        l3_policy: L3Policy::NonInclusive, // no L3; field unused
+        protocol: ProtocolKind::MesiGols,
+        // Table 2, Xeon Phi column.
+        timing: Timing {
+            r_l1: 2.4,
+            r_l2: 19.4,
+            r_l3: f64::NAN,
+            hop: 161.2, // ring + distributed tag-directory lookup
+            mem: 340.0,
+            e_cas: 12.4,
+            e_faa: 2.4,
+            e_swp: 3.1,
+            write_issue: 1.6, // in-order cores: costlier store issue
+        },
+        overheads,
+        write_buffer: WriteBufferCfg { entries: 16, merging: true, fastlock: false },
+        mechanisms: Mechanisms::ALL_OFF,
+        ht_assist: None,
+        muw: false,
+        contended_write_combining: false, // §5.4: bandwidth collapses
+        cas128_penalty: (0.0, 0.0),
+        unaligned: UnalignedCfg { bus_lock_ns: 900.0 },
+        frequency_mhz: 1238,
+        interconnect: "ring bus",
+        memory: "8GB",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_l3() {
+        assert!(xeonphi().l3.is_none());
+        assert!(xeonphi().timing.r_l3.is_nan());
+    }
+
+    #[test]
+    fn cas_slower_than_faa() {
+        let t = xeonphi().timing;
+        assert!(t.e_cas > t.e_faa, "§5.1.3: CAS slower than FAA on Phi");
+    }
+
+    #[test]
+    fn ring_hop_dominates() {
+        let t = xeonphi().timing;
+        assert!(t.hop > 8.0 * t.r_l2);
+    }
+}

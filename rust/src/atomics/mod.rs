@@ -1,0 +1,184 @@
+//! The atomic operations under evaluation (§2.3 of the paper) and their
+//! semantics: Compare-and-Swap, Fetch-and-Add, Swap, plus plain read/write
+//! baselines.
+//!
+//! Each operation is a read-modify-write over one memory operand; the
+//! remaining operands live in registers (the paper's benchmarking strategy).
+//! CAS additionally distinguishes success/failure and a two-fetched-operand
+//! variant (§5.5), and all operations come in 64- and 128-bit widths (§5.3).
+
+/// Operand width in bits (§5.3: 64 vs 128-bit CAS flavors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Width {
+    W64,
+    W128,
+}
+
+impl Width {
+    pub fn bytes(self) -> u64 {
+        match self {
+            Width::W64 => 8,
+            Width::W128 => 16,
+        }
+    }
+}
+
+/// The kind of memory operation, irrespective of operands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Read,
+    Write,
+    Cas,
+    Faa,
+    Swp,
+}
+
+impl OpKind {
+    /// Is this a locked read-modify-write (drains write buffers, forbids ILP)?
+    pub fn is_atomic(self) -> bool {
+        matches!(self, OpKind::Cas | OpKind::Faa | OpKind::Swp)
+    }
+
+    /// The x86 assembly mnemonic (Table 1).
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            OpKind::Read => "Mov (load)",
+            OpKind::Write => "Mov (store)",
+            OpKind::Cas => "Cmpxchg",
+            OpKind::Faa => "Xadd",
+            OpKind::Swp => "Xchg",
+        }
+    }
+
+    /// Herlihy consensus number (§2.3). `None` encodes ∞ (CAS).
+    pub fn consensus_number(self) -> Option<u32> {
+        match self {
+            OpKind::Read | OpKind::Write => Some(1),
+            OpKind::Faa | OpKind::Swp => Some(2),
+            OpKind::Cas => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::Read => "read",
+            OpKind::Write => "write",
+            OpKind::Cas => "CAS",
+            OpKind::Faa => "FAA",
+            OpKind::Swp => "SWP",
+        }
+    }
+
+    pub const ALL_ATOMICS: [OpKind; 3] = [OpKind::Cas, OpKind::Faa, OpKind::Swp];
+}
+
+/// A fully-specified operation as issued by a benchmark or workload.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Op {
+    Read,
+    Write {
+        value: u64,
+    },
+    /// `Cas { expected, new }`: writes `new` iff `*mem == expected`.
+    /// `fetched_operands` distinguishes the §5.5 variant where the comparand
+    /// is itself fetched from the memory subsystem (2) from the register
+    /// variant (1).
+    Cas {
+        expected: u64,
+        new: u64,
+        fetched_operands: u8,
+    },
+    /// Fetch-and-Add: `*mem += delta`, returns old value.
+    Faa {
+        delta: u64,
+    },
+    /// Swap: exchanges `*mem` and the register.
+    Swp {
+        value: u64,
+    },
+}
+
+impl Op {
+    pub fn kind(self) -> OpKind {
+        match self {
+            Op::Read => OpKind::Read,
+            Op::Write { .. } => OpKind::Write,
+            Op::Cas { .. } => OpKind::Cas,
+            Op::Faa { .. } => OpKind::Faa,
+            Op::Swp { .. } => OpKind::Swp,
+        }
+    }
+
+    /// Apply the operation to a memory word, returning
+    /// `(new_memory_value, value_returned_to_register, modified)`.
+    pub fn apply(self, mem: u64) -> (u64, u64, bool) {
+        match self {
+            Op::Read => (mem, mem, false),
+            Op::Write { value } => (value, 0, true),
+            Op::Cas { expected, new, .. } => {
+                if mem == expected {
+                    (new, mem, true)
+                } else {
+                    (mem, mem, false)
+                }
+            }
+            Op::Faa { delta } => (mem.wrapping_add(delta), mem, true),
+            Op::Swp { value } => (value, mem, true),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn consensus_numbers_match_paper() {
+        assert_eq!(OpKind::Cas.consensus_number(), None); // ∞
+        assert_eq!(OpKind::Faa.consensus_number(), Some(2));
+        assert_eq!(OpKind::Swp.consensus_number(), Some(2));
+        assert_eq!(OpKind::Read.consensus_number(), Some(1));
+    }
+
+    #[test]
+    fn atomicity_classification() {
+        assert!(OpKind::Cas.is_atomic());
+        assert!(OpKind::Faa.is_atomic());
+        assert!(OpKind::Swp.is_atomic());
+        assert!(!OpKind::Read.is_atomic());
+        assert!(!OpKind::Write.is_atomic());
+    }
+
+    #[test]
+    fn cas_success_semantics() {
+        let op = Op::Cas { expected: 5, new: 9, fetched_operands: 1 };
+        assert_eq!(op.apply(5), (9, 5, true));
+    }
+
+    #[test]
+    fn cas_failure_semantics() {
+        let op = Op::Cas { expected: 5, new: 9, fetched_operands: 1 };
+        assert_eq!(op.apply(7), (7, 7, false));
+    }
+
+    #[test]
+    fn faa_semantics() {
+        let op = Op::Faa { delta: 3 };
+        assert_eq!(op.apply(10), (13, 10, true));
+        // wrapping
+        let op = Op::Faa { delta: 2 };
+        assert_eq!(op.apply(u64::MAX), (1, u64::MAX, true));
+    }
+
+    #[test]
+    fn swp_semantics() {
+        let op = Op::Swp { value: 42 };
+        assert_eq!(op.apply(7), (42, 7, true));
+    }
+
+    #[test]
+    fn widths() {
+        assert_eq!(Width::W64.bytes(), 8);
+        assert_eq!(Width::W128.bytes(), 16);
+    }
+}

@@ -1,0 +1,168 @@
+//! Bandwidth benchmark (§3, §5.2): all memory cells of the buffer are
+//! accessed sequentially; bandwidth = bytes / elapsed virtual time of the
+//! requester. Atomics serialize (every op pays its full latency — the
+//! "no ILP" finding); plain writes stream through the store buffer, which
+//! is where their 5–30× advantage comes from.
+
+use crate::atomics::{OpKind, Width};
+use crate::bench::placement::{choose_cast, prepare, FillPattern, PrepLocality, PrepState};
+
+use crate::bench::{op_for, Point, Series};
+use crate::sim::engine::Machine;
+use crate::sim::MachineConfig;
+
+/// One bandwidth sweep specification.
+#[derive(Debug, Clone)]
+pub struct BandwidthBench {
+    pub op: OpKind,
+    pub state: PrepState,
+    pub locality: PrepLocality,
+    pub cas_succeeds: bool,
+    pub width: Width,
+}
+
+impl BandwidthBench {
+    pub fn new(op: OpKind, state: PrepState, locality: PrepLocality) -> BandwidthBench {
+        BandwidthBench {
+            op,
+            state,
+            locality,
+            cas_succeeds: false,
+            width: Width::W64,
+        }
+    }
+
+    pub fn series_name(&self) -> String {
+        format!(
+            "{} {} {}",
+            self.op.label(),
+            self.state.label(),
+            self.locality.label()
+        )
+    }
+
+    /// Bandwidth in GB/s for one buffer size.
+    pub fn run_once(&self, cfg: &MachineConfig, buffer_bytes: usize) -> Option<f64> {
+        let cast = choose_cast(&cfg.topology, self.locality)?;
+        let mut m = Machine::new(cfg.clone());
+        let n_lines = (buffer_bytes / 64).max(1);
+        let fill = if self.op == OpKind::Cas && !self.cas_succeeds {
+            // §3.2: increasing byte values ensure every CAS fails
+            FillPattern::Increasing
+        } else {
+            FillPattern::Zero
+        };
+        let addrs = prepare(&mut m, 0x4000_0000, n_lines, self.state, cast, fill);
+
+        let op = op_for(self.op, self.cas_succeeds);
+        let step = self.width.bytes();
+        let per_line = (64 / step) as usize;
+        let t0 = m.clock_of(cast.requester);
+        let mut bytes = 0u64;
+        for &base in &addrs {
+            for k in 0..per_line as u64 {
+                m.access(cast.requester, op, base + k * step, self.width);
+                bytes += step;
+            }
+        }
+        let elapsed = m.clock_of(cast.requester) - t0;
+        Some(bytes as f64 / elapsed) // bytes per ns == GB/s
+    }
+
+    pub fn sweep(&self, cfg: &MachineConfig, sizes: &[usize]) -> Option<Series> {
+        let mut points = Vec::with_capacity(sizes.len());
+        for &s in sizes {
+            points.push(Point { buffer_bytes: s, value: self.run_once(cfg, s)? });
+        }
+        Some(Series { name: self.series_name(), points })
+    }
+}
+
+/// §6.2.3 workload: an interleaved stream of buffered writes and FAAs to
+/// *disjoint* lines. With the classic lock prefix every atomic drains the
+/// store buffer (stalling on the writes' drains); FastLock only waits for
+/// overlapping lines — none here — so the stream pipelines.
+pub fn mixed_stream_bandwidth(cfg: &MachineConfig, buffer_bytes: usize) -> f64 {
+    use crate::atomics::Op;
+    let mut m = Machine::new(cfg.clone());
+    let cast = choose_cast(&cfg.topology, PrepLocality::Local).unwrap();
+    let n_lines = (buffer_bytes / 64).max(2);
+    let addrs = prepare(&mut m, 0x4000_0000, n_lines, PrepState::M, cast, FillPattern::Zero);
+    let half = addrs.len() / 2;
+    let t0 = m.clock_of(cast.requester);
+    let mut bytes = 0u64;
+    for i in 0..half {
+        m.access64(cast.requester, Op::Write { value: i as u64 }, addrs[i]);
+        m.access64(cast.requester, Op::Faa { delta: 1 }, addrs[half + i]);
+        bytes += 16;
+    }
+    bytes as f64 / (m.clock_of(cast.requester) - t0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    const KB4: usize = 4 << 10;
+    const KB64: usize = 64 << 10;
+    const MB1: usize = 1 << 20;
+
+    fn bw(cfg: &MachineConfig, op: OpKind, st: PrepState, loc: PrepLocality, sz: usize) -> f64 {
+        BandwidthBench::new(op, st, loc).run_once(cfg, sz).unwrap()
+    }
+
+    #[test]
+    fn writes_dominate_atomics_5_to_30x() {
+        // §5.2: "the bandwidth of atomics is ≈5-30x lower than that of
+        // writes because the latter utilize ILP".
+        let cfg = arch::haswell();
+        let w = bw(&cfg, OpKind::Write, PrepState::M, PrepLocality::Local, KB4);
+        let f = bw(&cfg, OpKind::Faa, PrepState::M, PrepLocality::Local, KB4);
+        let ratio = w / f;
+        assert!((4.0..40.0).contains(&ratio), "ratio {ratio} (w={w}, faa={f})");
+    }
+
+    #[test]
+    fn cas_comparable_or_better_than_faa() {
+        // §5.2: Haswell bandwidth — CAS comparable to or slightly above FAA.
+        let cfg = arch::haswell();
+        let c = bw(&cfg, OpKind::Cas, PrepState::M, PrepLocality::Local, KB4);
+        let f = bw(&cfg, OpKind::Faa, PrepState::M, PrepLocality::Local, KB4);
+        assert!(c >= f * 0.95, "CAS {c} vs FAA {f}");
+    }
+
+    #[test]
+    fn bandwidth_decreases_down_the_hierarchy_mildly() {
+        // §5.2: higher-level caches give more bandwidth, but the differences
+        // are small (only the first access per line is affected).
+        let cfg = arch::haswell();
+        let l1 = bw(&cfg, OpKind::Faa, PrepState::M, PrepLocality::Local, KB4);
+        let l2 = bw(&cfg, OpKind::Faa, PrepState::M, PrepLocality::Local, KB64);
+        let l3 = bw(&cfg, OpKind::Faa, PrepState::M, PrepLocality::Local, MB1);
+        assert!(l1 >= l2 && l2 >= l3, "{l1} {l2} {l3}");
+        assert!(l1 - l3 < 0.5 * l1, "differences stay modest: {l1} vs {l3}");
+    }
+
+    #[test]
+    fn e_lines_slower_than_m_lines_at_l3() {
+        // §5.2: bandwidth (to L3) for E lines lower than for M lines due to
+        // silent eviction of the former.
+        let cfg = arch::haswell();
+        let e = bw(&cfg, OpKind::Faa, PrepState::E, PrepLocality::OnChip, MB1);
+        let m = bw(&cfg, OpKind::Faa, PrepState::M, PrepLocality::OnChip, MB1);
+        assert!(m > e, "M {m} must beat E {e}");
+    }
+
+    #[test]
+    fn atomics_have_no_ilp_even_without_dependencies() {
+        // FAA ops to different lines carry no data dependencies, yet the
+        // bandwidth equals the serialized prediction of Eq. 10.
+        let cfg = arch::haswell();
+        let f = bw(&cfg, OpKind::Faa, PrepState::M, PrepLocality::Local, KB4);
+        // Eq. 10 with L1-resident M lines: N=8, L=r_l1+e, hit=r_l1+e
+        let per_op = cfg.timing.r_l1 + cfg.timing.e_faa;
+        let serial = 8.0 / per_op;
+        assert!((f - serial).abs() < 0.35 * serial, "measured {f}, serial {serial}");
+    }
+}

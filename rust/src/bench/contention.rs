@@ -1,0 +1,51 @@
+//! Contention benchmark wrapper (Fig. 8a–c, §5.4): thread-count sweeps of
+//! same-line atomics/writes through the discrete-event engine.
+
+use crate::atomics::OpKind;
+use crate::sim::event::{run_contention, ContentionResult};
+use crate::sim::MachineConfig;
+
+/// Per-thread operation count used by the figure sweeps (large enough that
+/// the warm-up transient is negligible).
+pub const OPS_PER_THREAD: usize = 2000;
+
+/// Sweep thread counts 1..=max for one operation.
+pub fn thread_sweep(cfg: &MachineConfig, op: OpKind, max_threads: usize) -> Vec<ContentionResult> {
+    let max = max_threads.min(cfg.topology.n_cores);
+    (1..=max)
+        .map(|t| run_contention(cfg, t, op, OPS_PER_THREAD))
+        .collect()
+}
+
+/// The thread counts the paper plots (powers of two up to the core count).
+pub fn paper_thread_counts(cfg: &MachineConfig) -> Vec<usize> {
+    let mut v = vec![1, 2, 4, 8, 16, 32, 61];
+    v.retain(|&t| t <= cfg.topology.n_cores);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    #[test]
+    fn sweep_lengths() {
+        let cfg = arch::haswell();
+        let r = thread_sweep(&cfg, OpKind::Faa, 8);
+        assert_eq!(r.len(), 4, "clamped to 4 cores");
+    }
+
+    #[test]
+    fn paper_counts_clamped() {
+        assert_eq!(paper_thread_counts(&arch::haswell()), vec![1, 2, 4]);
+        assert_eq!(paper_thread_counts(&arch::xeonphi()), vec![1, 2, 4, 8, 16, 32, 61]);
+    }
+
+    #[test]
+    fn contended_atomics_below_uncontended() {
+        let cfg = arch::ivybridge();
+        let sweep = thread_sweep(&cfg, OpKind::Cas, 12);
+        assert!(sweep[0].bandwidth_gbs > sweep[7].bandwidth_gbs);
+    }
+}

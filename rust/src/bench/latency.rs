@@ -1,0 +1,246 @@
+//! Latency benchmark (§3): pointer-chasing over a prepared buffer.
+//!
+//! The requester visits every line of the buffer exactly once in a
+//! pseudo-random order with a minimum stride (§3.3: sparser access patterns
+//! stand in for disabled prefetchers on the testbeds where they could not be
+//! turned off). Each visit issues one operation; the mean per-op latency is
+//! the reported value — the paper's "average latency of an atomic".
+
+use crate::atomics::{OpKind, Width};
+use crate::bench::placement::{
+    choose_cast_with_sharer, prepare, FillPattern, PrepLocality, PrepState, SharerPlacement,
+};
+use crate::bench::{op_for, Point, Series};
+use crate::sim::engine::Machine;
+use crate::sim::MachineConfig;
+use crate::util::rng::Rng;
+
+/// One latency sweep specification.
+#[derive(Debug, Clone)]
+pub struct LatencyBench {
+    pub op: OpKind,
+    pub state: PrepState,
+    pub locality: PrepLocality,
+    pub cas_succeeds: bool,
+    pub width: Width,
+    pub seed: u64,
+    /// Where the extra S/O sharer lives (default: the farthest core).
+    pub sharer: SharerPlacement,
+}
+
+impl LatencyBench {
+    pub fn new(op: OpKind, state: PrepState, locality: PrepLocality) -> LatencyBench {
+        LatencyBench {
+            op,
+            state,
+            locality,
+            cas_succeeds: false,
+            width: Width::W64,
+            seed: 0xA70,
+            sharer: SharerPlacement::Farthest,
+        }
+    }
+
+    pub fn series_name(&self) -> String {
+        format!(
+            "{} {} {}",
+            self.op.label(),
+            self.state.label(),
+            self.locality.label()
+        )
+    }
+
+    /// Measure the mean latency for one buffer size. Returns `None` when the
+    /// locality does not exist on the architecture.
+    pub fn run_once(&self, cfg: &MachineConfig, buffer_bytes: usize) -> Option<f64> {
+        let cast = choose_cast_with_sharer(&cfg.topology, self.locality, self.sharer)?;
+        let mut m = Machine::new(cfg.clone());
+        let n_lines = (buffer_bytes / 64).max(1);
+        let fill = if self.op == OpKind::Cas && !self.cas_succeeds {
+            FillPattern::Increasing
+        } else {
+            FillPattern::Zero
+        };
+        let addrs = prepare(&mut m, 0x4000_0000, n_lines, self.state, cast, fill);
+
+        // Pointer chase: pseudo-random permutation, one visit per line.
+        let mut order: Vec<usize> = (0..addrs.len()).collect();
+        let mut rng = Rng::new(self.seed ^ buffer_bytes as u64);
+        rng.shuffle(&mut order);
+
+        let op = op_for(self.op, self.cas_succeeds);
+        let mut total = 0.0;
+        for &i in &order {
+            let a = m.access(cast.requester, op, addrs[i], self.width);
+            total += a.latency;
+        }
+        Some(total / addrs.len() as f64)
+    }
+
+    /// Sweep buffer sizes, producing one figure series.
+    pub fn sweep(&self, cfg: &MachineConfig, sizes: &[usize]) -> Option<Series> {
+        let mut points = Vec::with_capacity(sizes.len());
+        for &s in sizes {
+            points.push(Point { buffer_bytes: s, value: self.run_once(cfg, s)? });
+        }
+        Some(Series { name: self.series_name(), points })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    const KB4: usize = 4 << 10;
+    const KB64: usize = 64 << 10;
+    const MB1: usize = 1 << 20;
+    const MB32: usize = 32 << 20;
+
+    fn lat(cfg: &MachineConfig, op: OpKind, st: PrepState, loc: PrepLocality, sz: usize) -> f64 {
+        LatencyBench::new(op, st, loc).run_once(cfg, sz).unwrap()
+    }
+
+    #[test]
+    fn haswell_local_l1_read_near_table2() {
+        let cfg = arch::haswell();
+        let r = lat(&cfg, OpKind::Read, PrepState::M, PrepLocality::Local, KB4);
+        assert!((1.0..2.5).contains(&r), "local L1 read ≈1.17ns, got {r}");
+    }
+
+    #[test]
+    fn latency_grows_with_buffer_size() {
+        let cfg = arch::haswell();
+        let l1 = lat(&cfg, OpKind::Faa, PrepState::M, PrepLocality::Local, KB4);
+        let l2 = lat(&cfg, OpKind::Faa, PrepState::M, PrepLocality::Local, KB64);
+        let l3 = lat(&cfg, OpKind::Faa, PrepState::M, PrepLocality::Local, MB1);
+        let ram = lat(&cfg, OpKind::Faa, PrepState::M, PrepLocality::Local, MB32);
+        assert!(l1 < l2 && l2 < l3 && l3 < ram, "{l1} {l2} {l3} {ram}");
+        assert!(ram > 60.0, "RAM-resident should exceed M=65: {ram}");
+    }
+
+    #[test]
+    fn atomics_slower_than_reads_by_5_to_10ns_on_haswell() {
+        // §5.1.1's headline for E/M states.
+        let cfg = arch::haswell();
+        for st in [PrepState::E, PrepState::M] {
+            let r = lat(&cfg, OpKind::Read, st, PrepLocality::Local, KB4);
+            let c = lat(&cfg, OpKind::Cas, st, PrepLocality::Local, KB4);
+            let diff = c - r;
+            assert!((2.0..14.0).contains(&diff), "{st:?}: read {r}, cas {c}");
+        }
+    }
+
+    #[test]
+    fn cas_faa_swp_comparable() {
+        // The paper's key claim: consensus number does not buy latency.
+        let cfg = arch::haswell();
+        let c = lat(&cfg, OpKind::Cas, PrepState::M, PrepLocality::OnChip, KB64);
+        let f = lat(&cfg, OpKind::Faa, PrepState::M, PrepLocality::OnChip, KB64);
+        let s = lat(&cfg, OpKind::Swp, PrepState::M, PrepLocality::OnChip, KB64);
+        assert!((c - f).abs() < 3.0, "CAS {c} vs FAA {f}");
+        assert!((s - f).abs() < 1.0, "SWP {s} vs FAA {f}");
+    }
+
+    #[test]
+    fn on_chip_e_state_flat_across_levels() {
+        // §5.1.1: E-state on-chip latency identical for L1/L2/L3-resident
+        // data (silent eviction keeps core-valid bits conservative).
+        let cfg = arch::haswell();
+        let small = lat(&cfg, OpKind::Cas, PrepState::E, PrepLocality::OnChip, KB4);
+        let med = lat(&cfg, OpKind::Cas, PrepState::E, PrepLocality::OnChip, KB64);
+        let big = lat(&cfg, OpKind::Cas, PrepState::E, PrepLocality::OnChip, MB1);
+        assert!((small - big).abs() < 0.15 * small, "{small} vs {big}");
+        assert!((small - med).abs() < 0.15 * small, "{small} vs {med}");
+    }
+
+    #[test]
+    fn on_chip_m_state_cheaper_in_l3() {
+        // §5.1.1: M lines written back precisely → L3 hit without snoop,
+        // cheaper than the E case at L3-resident sizes.
+        let cfg = arch::haswell();
+        let e = lat(&cfg, OpKind::Cas, PrepState::E, PrepLocality::OnChip, MB1);
+        let m = lat(&cfg, OpKind::Cas, PrepState::M, PrepLocality::OnChip, MB1);
+        assert!(m < e, "M-in-L3 {m} must beat E-in-L3 {e}");
+    }
+
+    #[test]
+    fn ivy_other_socket_pays_hop() {
+        let cfg = arch::ivybridge();
+        let on = lat(&cfg, OpKind::Cas, PrepState::E, PrepLocality::OnChip, KB64);
+        let off = lat(&cfg, OpKind::Cas, PrepState::E, PrepLocality::OtherSocket, KB64);
+        let gap = off - on;
+        assert!((40.0..90.0).contains(&gap), "≈50ns QPI gap (§5.1.1), got {gap}");
+    }
+
+    #[test]
+    fn ivy_cas_faster_than_faa_in_local_l1() {
+        // §5.1.1: Ivy Bridge L1 optimization for (failing) CAS, ≈2-3ns.
+        let cfg = arch::ivybridge();
+        let c = lat(&cfg, OpKind::Cas, PrepState::E, PrepLocality::Local, KB4);
+        let f = lat(&cfg, OpKind::Faa, PrepState::E, PrepLocality::Local, KB4);
+        assert!(f - c > 1.5, "CAS {c} should undercut FAA {f}");
+    }
+
+    #[test]
+    fn bulldozer_local_atomic_surcharge() {
+        // §5.1.2: ≈20ns atomic-over-read locally.
+        let cfg = arch::bulldozer();
+        let r = lat(&cfg, OpKind::Read, PrepState::M, PrepLocality::Local, KB64);
+        let c = lat(&cfg, OpKind::Cas, PrepState::M, PrepLocality::Local, KB64);
+        assert!((c - r) > 15.0, "read {r}, CAS {c}");
+    }
+
+    #[test]
+    fn bulldozer_shared_state_dominated_by_hop() {
+        // §5.1.2: S/O atomics pay the remote invalidation broadcast (+~62ns)
+        // even when data is nearby.
+        let cfg = arch::bulldozer();
+        let e = lat(&cfg, OpKind::Cas, PrepState::E, PrepLocality::SharedL2, KB64);
+        let s = lat(&cfg, OpKind::Cas, PrepState::S, PrepLocality::SharedL2, KB64);
+        assert!(s - e > 40.0, "E {e} vs S {s}");
+    }
+
+    #[test]
+    fn phi_remote_dominated_by_ring_hop() {
+        let cfg = arch::xeonphi();
+        let local = lat(&cfg, OpKind::Cas, PrepState::E, PrepLocality::Local, KB4);
+        let remote = lat(&cfg, OpKind::Cas, PrepState::E, PrepLocality::OnChip, KB4);
+        assert!(remote - local > 100.0, "local {local}, remote {remote}");
+    }
+
+    #[test]
+    fn phi_cas_slower_than_faa() {
+        let cfg = arch::xeonphi();
+        let c = lat(&cfg, OpKind::Cas, PrepState::E, PrepLocality::Local, KB4);
+        let f = lat(&cfg, OpKind::Faa, PrepState::E, PrepLocality::Local, KB4);
+        assert!(c - f > 5.0, "§5.1.3: CAS {c} vs FAA {f}");
+    }
+
+    #[test]
+    fn phi_s_state_atomic_overhead_large() {
+        // §5.1.3: ≈250ns S-state overhead for local L1 atomics.
+        let cfg = arch::xeonphi();
+        let r = lat(&cfg, OpKind::Read, PrepState::S, PrepLocality::Local, KB4);
+        let c = lat(&cfg, OpKind::Cas, PrepState::S, PrepLocality::Local, KB4);
+        assert!(c - r > 120.0, "read {r}, CAS {c}");
+    }
+
+    #[test]
+    fn sweep_produces_series() {
+        let cfg = arch::haswell();
+        let s = LatencyBench::new(OpKind::Faa, PrepState::M, PrepLocality::Local)
+            .sweep(&cfg, &[KB4, KB64])
+            .unwrap();
+        assert_eq!(s.points.len(), 2);
+        assert!(s.name.contains("FAA"));
+    }
+
+    #[test]
+    fn unavailable_locality_yields_none() {
+        let cfg = arch::haswell();
+        assert!(LatencyBench::new(OpKind::Faa, PrepState::M, PrepLocality::OtherSocket)
+            .run_once(&cfg, KB4)
+            .is_none());
+    }
+}

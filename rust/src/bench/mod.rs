@@ -1,0 +1,107 @@
+//! The paper's benchmarking methodology (§2.1, §3) on the simulator
+//! substrate.
+//!
+//! Every benchmark runs the four phases of §2.1 — *preparation* (allocate a
+//! buffer, place it in the selected caches/coherency state), *synchronization*
+//! (trivial here: the simulator's virtual clocks start aligned), *measurement*
+//! (pointer-chase for latency, sequential sweep for bandwidth), and *result
+//! collection* (`max(t_end) − min(t_start)` over participating cores).
+
+pub mod bandwidth;
+pub mod contention;
+pub mod latency;
+pub mod mechanisms;
+pub mod operand;
+pub mod placement;
+pub mod unaligned;
+
+pub use bandwidth::BandwidthBench;
+pub use latency::LatencyBench;
+pub use placement::{PrepLocality, PrepState};
+
+use crate::atomics::{Op, OpKind};
+
+/// Construct the concrete operation a benchmark issues for an `OpKind`.
+///
+/// CAS defaults to the *unsuccessful* variant — the paper's headline latency
+/// benchmark (§3.2): the buffer holds increasing values so `expected` never
+/// matches. Successful CAS uses a zero-filled buffer and `expected = 0`.
+pub fn op_for(kind: OpKind, cas_succeeds: bool) -> Op {
+    match kind {
+        OpKind::Read => Op::Read,
+        OpKind::Write => Op::Write { value: 1 },
+        OpKind::Cas => {
+            if cas_succeeds {
+                Op::Cas { expected: 0, new: 0, fetched_operands: 1 }
+            } else {
+                Op::Cas { expected: u64::MAX, new: 1, fetched_operands: 1 }
+            }
+        }
+        OpKind::Faa => Op::Faa { delta: 1 },
+        OpKind::Swp => Op::Swp { value: 1 },
+    }
+}
+
+/// The buffer-size sweep used by the figures: 4 KB … 64 MB, powers of two.
+pub fn size_sweep() -> Vec<usize> {
+    (12..=26).map(|p| 1usize << p).collect()
+}
+
+/// A shorter sweep for tests and smoke runs.
+pub fn size_sweep_small() -> Vec<usize> {
+    (12..=20).map(|p| 1usize << p).collect()
+}
+
+/// A single measured point of a sweep.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub buffer_bytes: usize,
+    pub value: f64,
+}
+
+/// A named series of measured points (one line in a paper figure).
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<Point>,
+}
+
+impl Series {
+    pub fn values(&self) -> Vec<f64> {
+        self.points.iter().map(|p| p.value).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unsuccessful_cas_never_matches_prepared_buffer() {
+        // placement fills buffers with small increasing values; u64::MAX
+        // can never appear, so the CAS always fails.
+        match op_for(OpKind::Cas, false) {
+            Op::Cas { expected, .. } => assert_eq!(expected, u64::MAX),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn successful_cas_matches_zero_fill() {
+        match op_for(OpKind::Cas, true) {
+            Op::Cas { expected, new, .. } => {
+                assert_eq!(expected, 0);
+                assert_eq!(new, 0, "re-arming: buffer stays zero for the next CAS");
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn sweep_covers_4kb_to_64mb() {
+        let s = size_sweep();
+        assert_eq!(*s.first().unwrap(), 4096);
+        assert_eq!(*s.last().unwrap(), 64 << 20);
+        assert_eq!(s.len(), 15);
+    }
+}

@@ -1,0 +1,144 @@
+//! Operand-size (§5.3, Fig. 7) and two-fetched-operand CAS (§5.5, Fig. 8d)
+//! benchmarks.
+
+use crate::atomics::{Op, OpKind, Width};
+use crate::bench::latency::LatencyBench;
+use crate::bench::placement::{choose_cast, prepare, FillPattern, PrepLocality, PrepState};
+use crate::bench::{Point, Series};
+use crate::sim::engine::Machine;
+use crate::sim::MachineConfig;
+use crate::util::rng::Rng;
+
+/// Fig. 7: CAS with 64- vs 128-bit operands.
+pub fn width_comparison(
+    cfg: &MachineConfig,
+    state: PrepState,
+    locality: PrepLocality,
+    sizes: &[usize],
+) -> Option<(Series, Series)> {
+    let mut b64 = LatencyBench::new(OpKind::Cas, state, locality);
+    b64.width = Width::W64;
+    let mut b128 = b64.clone();
+    b128.width = Width::W128;
+    let mut s64 = b64.sweep(cfg, sizes)?;
+    let mut s128 = b128.sweep(cfg, sizes)?;
+    s64.name = format!("CAS 64bit {} {}", state.label(), locality.label());
+    s128.name = format!("CAS 128bit {} {}", state.label(), locality.label());
+    Some((s64, s128))
+}
+
+/// Fig. 8d / §5.5: CAS whose comparand is itself fetched from a second
+/// buffer. The second fetch pipelines with the first (§5.5 measures only
+/// +2–4 ns locally, +15–30 ns remotely); on Bulldozer the MuW state makes
+/// M-line targets immune.
+pub fn two_operand_cas(
+    cfg: &MachineConfig,
+    state: PrepState,
+    locality: PrepLocality,
+    sizes: &[usize],
+) -> Option<Series> {
+    let cast = choose_cast(&cfg.topology, locality)?;
+    let mut points = Vec::new();
+    for &size in sizes {
+        let mut m = Machine::new(cfg.clone());
+        let n_lines = (size / 64).max(1);
+        // target buffer, prepared in `state` at the owner
+        let addrs = prepare(&mut m, 0x4000_0000, n_lines, state, cast, FillPattern::Increasing);
+        // comparand buffer, local to the requester (E state)
+        let cmp_cast = crate::bench::placement::Cast {
+            requester: cast.requester,
+            owner: cast.requester,
+            sharer: cast.sharer,
+        };
+        let cmps = prepare(&mut m, 0x8000_0000, n_lines, PrepState::E, cmp_cast, FillPattern::Zero);
+
+        let mut order: Vec<usize> = (0..addrs.len()).collect();
+        Rng::new(0x0CA5 ^ size as u64).shuffle(&mut order);
+
+        let mut total = 0.0;
+        for &i in &order {
+            // fetch the comparand (second operand) — pipelined at 20%,
+            // or free for MuW-protected dirty targets (§5.5)
+            let target_dirty = state == PrepState::M || state == PrepState::O;
+            let pipeline = if m.cfg.muw && target_dirty { 0.0 } else { 0.2 };
+            let cmp_cost = m.access64(cast.requester, Op::Read, cmps[i]).latency * pipeline;
+            if m.cfg.muw && target_dirty {
+                m.stats.muw_migrations += 1;
+            }
+            let a = m.access64(
+                cast.requester,
+                Op::Cas { expected: u64::MAX, new: 1, fetched_operands: 2 },
+                addrs[i],
+            );
+            total += a.latency + cmp_cost;
+        }
+        points.push(Point { buffer_bytes: size, value: total / addrs.len() as f64 });
+    }
+    Some(Series {
+        name: format!("CAS 2-operand {} {}", state.label(), locality.label()),
+        points,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    const KB64: usize = 64 << 10;
+    const MB4: usize = 4 << 20;
+
+    #[test]
+    fn bulldozer_128bit_penalty_local() {
+        // §5.3: ≈20ns for local caches on Bulldozer.
+        let cfg = arch::bulldozer();
+        let (s64, s128) =
+            width_comparison(&cfg, PrepState::M, PrepLocality::Local, &[KB64]).unwrap();
+        let gap = s128.points[0].value - s64.points[0].value;
+        assert!((14.0..28.0).contains(&gap), "gap {gap}");
+    }
+
+    #[test]
+    fn bulldozer_128bit_penalty_smaller_remote() {
+        // §5.3: ≈5ns across sockets.
+        let cfg = arch::bulldozer();
+        let (s64, s128) =
+            width_comparison(&cfg, PrepState::M, PrepLocality::OtherSocket, &[KB64]).unwrap();
+        let gap = s128.points[0].value - s64.points[0].value;
+        assert!((2.0..10.0).contains(&gap), "gap {gap}");
+    }
+
+    #[test]
+    fn intel_width_free() {
+        // §5.3: identical latency on the Intel systems.
+        let cfg = arch::haswell();
+        let (s64, s128) =
+            width_comparison(&cfg, PrepState::M, PrepLocality::Local, &[KB64]).unwrap();
+        let gap = (s128.points[0].value - s64.points[0].value).abs();
+        assert!(gap < 0.5, "gap {gap}");
+    }
+
+    #[test]
+    fn two_operand_cas_marginal_increase_e_state() {
+        // §5.5: +2–4ns local, +15–30ns remote on the E state.
+        let cfg = arch::bulldozer();
+        let one = LatencyBench::new(OpKind::Cas, PrepState::E, PrepLocality::OnChip)
+            .run_once(&cfg, KB64)
+            .unwrap();
+        let two = two_operand_cas(&cfg, PrepState::E, PrepLocality::OnChip, &[KB64]).unwrap();
+        let gap = two.points[0].value - one;
+        assert!((0.5..35.0).contains(&gap), "gap {gap}");
+    }
+
+    #[test]
+    fn muw_protects_m_state() {
+        // §5.5: latency of M lines unaffected thanks to MuW.
+        let cfg = arch::bulldozer();
+        let one = LatencyBench::new(OpKind::Cas, PrepState::M, PrepLocality::OnChip)
+            .run_once(&cfg, MB4)
+            .unwrap();
+        let two = two_operand_cas(&cfg, PrepState::M, PrepLocality::OnChip, &[MB4]).unwrap();
+        let gap = (two.points[0].value - one).abs();
+        assert!(gap < 0.1 * one, "M-state gap should vanish: {gap} (base {one})");
+    }
+}

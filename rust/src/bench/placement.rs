@@ -1,0 +1,357 @@
+//! Benchmark preparation phase (§2.1/§3.1): place a buffer's cache lines in
+//! a selected coherency state, owned by a core at a selected distance from
+//! the requester.
+//!
+//! The *cache level* is not selected directly — exactly as on real hardware,
+//! it falls out of the buffer size versus cache capacities, which is what
+//! produces the level transitions along the x-axis of every figure.
+
+use crate::atomics::Op;
+use crate::sim::engine::Machine;
+use crate::sim::topology::{CoreId, Distance, Topology};
+
+/// Target coherency state of the prepared lines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrepState {
+    /// Owner reads each line once: Exclusive.
+    E,
+    /// Owner writes each line: Modified.
+    M,
+    /// Owner reads, a second sharer reads: Shared (clean).
+    S,
+    /// Owner writes, a second sharer reads: Owned (dirty-shared; on MESIF
+    /// this degenerates to S after the write-back, which is the protocol's
+    /// own behaviour and exactly what the paper's Intel testbeds do).
+    O,
+}
+
+impl PrepState {
+    pub fn label(self) -> &'static str {
+        match self {
+            PrepState::E => "E",
+            PrepState::M => "M",
+            PrepState::S => "S",
+            PrepState::O => "O",
+        }
+    }
+
+    pub fn to_model(self) -> crate::model::ModelState {
+        match self {
+            PrepState::E => crate::model::ModelState::E,
+            PrepState::M => crate::model::ModelState::M,
+            PrepState::S => crate::model::ModelState::S,
+            PrepState::O => crate::model::ModelState::O,
+        }
+    }
+}
+
+/// Who owns the prepared data relative to the requesting core (the figure
+/// columns: local / on chip / shared L2 / shared L3 / other socket).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrepLocality {
+    /// The requester prepares its own buffer.
+    Local,
+    /// A different core on the same die.
+    OnChip,
+    /// The requester's L2-module mate (Bulldozer).
+    SharedL2,
+    /// A core on a different die of the same socket (Bulldozer "shared L3"
+    /// column refers to the same-die case; this is the cross-die one).
+    OtherDie,
+    /// A core on the other socket.
+    OtherSocket,
+}
+
+impl PrepLocality {
+    pub fn label(self) -> &'static str {
+        match self {
+            PrepLocality::Local => "local",
+            PrepLocality::OnChip => "on chip",
+            PrepLocality::SharedL2 => "shared L2",
+            PrepLocality::OtherDie => "shared L3 (other die)",
+            PrepLocality::OtherSocket => "other socket",
+        }
+    }
+
+    /// Localities available on a topology.
+    pub fn available(topo: &Topology) -> Vec<PrepLocality> {
+        let mut v = vec![PrepLocality::Local];
+        if topo.cores_per_l2 > 1 {
+            v.push(PrepLocality::SharedL2);
+        }
+        if topo.cores_per_die > topo.cores_per_l2 {
+            v.push(PrepLocality::OnChip);
+        }
+        if topo.dies_per_socket > 1 {
+            v.push(PrepLocality::OtherDie);
+        }
+        if topo.n_sockets() > 1 {
+            v.push(PrepLocality::OtherSocket);
+        }
+        v
+    }
+
+    pub fn to_distance(self) -> Distance {
+        match self {
+            PrepLocality::Local => Distance::Local,
+            PrepLocality::SharedL2 => Distance::SharedL2,
+            PrepLocality::OnChip => Distance::SameDie,
+            PrepLocality::OtherDie => Distance::SameSocket,
+            PrepLocality::OtherSocket => Distance::OtherSocket,
+        }
+    }
+}
+
+/// Core roles for one benchmark run.
+#[derive(Debug, Clone, Copy)]
+pub struct Cast {
+    /// The measuring core.
+    pub requester: CoreId,
+    /// The core that prepares (owns) the buffer.
+    pub owner: CoreId,
+    /// An additional sharer used to reach the S/O states.
+    pub sharer: CoreId,
+}
+
+/// Where the extra S/O-state sharer lives relative to the requester.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SharerPlacement {
+    /// The farthest core (default): invalidations have a definite remote
+    /// target, like the paper's multi-socket preparations.
+    Farthest,
+    /// A core on the requester's die — the §6.2 scenario where Bulldozer's
+    /// broadcast is provably unnecessary.
+    SameDie,
+}
+
+/// Pick cores realizing `locality` on `topo` with a farthest sharer.
+pub fn choose_cast(topo: &Topology, locality: PrepLocality) -> Option<Cast> {
+    choose_cast_with_sharer(topo, locality, SharerPlacement::Farthest)
+}
+
+/// Pick cores realizing `locality` on `topo` and a sharer per `placement`.
+pub fn choose_cast_with_sharer(
+    topo: &Topology,
+    locality: PrepLocality,
+    placement: SharerPlacement,
+) -> Option<Cast> {
+    let requester: CoreId = 0;
+    let owner = match locality {
+        PrepLocality::Local => requester,
+        PrepLocality::SharedL2 => {
+            if topo.cores_per_l2 < 2 {
+                return None;
+            }
+            1 // module mate of core 0
+        }
+        PrepLocality::OnChip => {
+            // same die, different L2 module
+            let c = topo.cores_per_l2; // first core of the second module
+            if c >= topo.cores_per_die {
+                return None;
+            }
+            c
+        }
+        PrepLocality::OtherDie => {
+            if topo.dies_per_socket < 2 {
+                return None;
+            }
+            topo.cores_per_die // first core of die 1 (same socket)
+        }
+        PrepLocality::OtherSocket => {
+            let first_other = topo.cores_per_die * topo.dies_per_socket;
+            if first_other >= topo.n_cores {
+                return None;
+            }
+            first_other
+        }
+    };
+    let sharer = match placement {
+        SharerPlacement::Farthest => {
+            // last core — typically on the farthest die
+            let mut s = topo.n_cores - 1;
+            if s == requester || s == owner {
+                s = topo.n_cores.checked_sub(2)?;
+            }
+            s
+        }
+        SharerPlacement::SameDie => {
+            // a core on the requester's die distinct from both roles
+            topo.cores_of_die(topo.die_of(requester))
+                .find(|&c| c != requester && c != owner)?
+        }
+    };
+    if sharer == requester || sharer == owner {
+        return None;
+    }
+    Some(Cast { requester, owner, sharer })
+}
+
+/// Fill values for the prepared buffer (§3.2):
+/// * unsuccessful-CAS benchmarks need increasing values (never matching),
+/// * successful-CAS and all other benchmarks use zeros.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FillPattern {
+    Zero,
+    Increasing,
+}
+
+/// Prepare `n_lines` lines starting at `base` in `state` for `cast`.
+/// Returns the per-line addresses in preparation order.
+pub fn prepare(
+    m: &mut Machine,
+    base: u64,
+    n_lines: usize,
+    state: PrepState,
+    cast: Cast,
+    fill: FillPattern,
+) -> Vec<u64> {
+    let addrs: Vec<u64> = (0..n_lines as u64).map(|i| base + i * 64).collect();
+
+    // Fill phase: write the data values (as the owner), which also dirties
+    // the lines (M). The TLB warm-up of §2.1 has no simulator equivalent.
+    for (i, &a) in addrs.iter().enumerate() {
+        let v = match fill {
+            FillPattern::Zero => 0,
+            FillPattern::Increasing => i as u64 + 1,
+        };
+        m.access64(cast.owner, Op::Write { value: v }, a);
+    }
+
+    match state {
+        PrepState::M => { /* already Modified at the owner */ }
+        PrepState::E => {
+            // Writing made them M; a fresh exclusive read needs the dirty
+            // data flushed first. Re-reading by the owner keeps M, so we
+            // emulate the benchmark's fresh-buffer read: flush, then read.
+            m.flush_private(cast.owner);
+            for &a in &addrs {
+                m.access64(cast.owner, Op::Read, a);
+            }
+        }
+        PrepState::S => {
+            m.flush_private(cast.owner);
+            for &a in &addrs {
+                m.access64(cast.owner, Op::Read, a);
+            }
+            for &a in &addrs {
+                m.access64(cast.sharer, Op::Read, a);
+            }
+        }
+        PrepState::O => {
+            // Owner writes (already M), sharer reads: MOESI/GOLS → O at the
+            // owner; MESIF → write-back + S/F (protocol-faithful).
+            for &a in &addrs {
+                m.access64(cast.sharer, Op::Read, a);
+            }
+        }
+    }
+
+    // Quiesce: let every store buffer drain (the paper's synchronization
+    // phase waits for all threads to finish preparation), then reset the
+    // measurement stats.
+    for c in 0..m.cfg.topology.n_cores {
+        m.advance_clock(c, 10_000_000.0);
+    }
+    m.stats = Default::default();
+    addrs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+    use crate::sim::coherence::GlobalClass;
+    use crate::sim::line_of;
+
+    #[test]
+    fn localities_per_arch() {
+        use PrepLocality::*;
+        let h = arch::haswell().topology;
+        assert_eq!(PrepLocality::available(&h), vec![Local, OnChip]);
+        let i = arch::ivybridge().topology;
+        assert_eq!(PrepLocality::available(&i), vec![Local, OnChip, OtherSocket]);
+        let b = arch::bulldozer().topology;
+        assert_eq!(
+            PrepLocality::available(&b),
+            vec![Local, SharedL2, OnChip, OtherDie, OtherSocket]
+        );
+        let p = arch::xeonphi().topology;
+        assert_eq!(PrepLocality::available(&p), vec![Local, OnChip]);
+    }
+
+    #[test]
+    fn cast_distances_match_locality() {
+        let topo = arch::bulldozer().topology;
+        for loc in PrepLocality::available(&topo) {
+            let cast = choose_cast(&topo, loc).unwrap();
+            assert_eq!(
+                topo.distance(cast.requester, cast.owner),
+                loc.to_distance(),
+                "locality {loc:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn unavailable_locality_returns_none() {
+        let topo = arch::haswell().topology;
+        assert!(choose_cast(&topo, PrepLocality::OtherSocket).is_none());
+        assert!(choose_cast(&topo, PrepLocality::SharedL2).is_none());
+    }
+
+    #[test]
+    fn prepare_m_leaves_modified_at_owner() {
+        let mut m = crate::sim::Machine::new(arch::haswell());
+        let cast = choose_cast(&m.cfg.topology, PrepLocality::OnChip).unwrap();
+        let addrs = prepare(&mut m, 0x10000, 8, PrepState::M, cast, FillPattern::Zero);
+        for &a in &addrs {
+            let rec = m.coherence.get(line_of(a)).unwrap();
+            assert_eq!(rec.class, GlobalClass::Modified);
+            assert_eq!(rec.owner, Some(cast.owner));
+        }
+    }
+
+    #[test]
+    fn prepare_e_leaves_exclusive() {
+        let mut m = crate::sim::Machine::new(arch::haswell());
+        let cast = choose_cast(&m.cfg.topology, PrepLocality::OnChip).unwrap();
+        let addrs = prepare(&mut m, 0x10000, 8, PrepState::E, cast, FillPattern::Increasing);
+        for &a in &addrs {
+            let rec = m.coherence.get(line_of(a)).unwrap();
+            assert_eq!(rec.class, GlobalClass::Exclusive, "addr {a:#x}");
+        }
+        // values survive the state dance
+        assert_eq!(m.mem.read(addrs[3]), 4);
+    }
+
+    #[test]
+    fn prepare_s_has_two_sharers() {
+        let mut m = crate::sim::Machine::new(arch::ivybridge());
+        let cast = choose_cast(&m.cfg.topology, PrepLocality::OnChip).unwrap();
+        let addrs = prepare(&mut m, 0x10000, 4, PrepState::S, cast, FillPattern::Zero);
+        for &a in &addrs {
+            let rec = m.coherence.get(line_of(a)).unwrap();
+            assert_eq!(rec.class, GlobalClass::Shared);
+            assert!(rec.n_sharers() >= 2, "sharers: {:b}", rec.sharers);
+        }
+    }
+
+    #[test]
+    fn prepare_o_keeps_dirty_on_moesi() {
+        let mut m = crate::sim::Machine::new(arch::bulldozer());
+        let cast = choose_cast(&m.cfg.topology, PrepLocality::OnChip).unwrap();
+        let addrs = prepare(&mut m, 0x10000, 4, PrepState::O, cast, FillPattern::Zero);
+        let rec = m.coherence.get(line_of(addrs[0])).unwrap();
+        assert_eq!(rec.class, GlobalClass::Owned);
+        assert!(rec.dirty);
+    }
+
+    #[test]
+    fn stats_reset_after_prepare() {
+        let mut m = crate::sim::Machine::new(arch::haswell());
+        let cast = choose_cast(&m.cfg.topology, PrepLocality::Local).unwrap();
+        prepare(&mut m, 0x10000, 8, PrepState::M, cast, FillPattern::Zero);
+        assert_eq!(m.stats.accesses, 0, "measurement must start clean");
+    }
+}

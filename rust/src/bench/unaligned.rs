@@ -1,0 +1,98 @@
+//! Unaligned-operation benchmark (§5.7, Fig. 10a / Fig. 14): operands that
+//! span two consecutive cache lines. Reads lose ≤20%; atomics lock the bus
+//! and reach ≈750 ns.
+
+use crate::atomics::{OpKind, Width};
+use crate::bench::latency::LatencyBench;
+use crate::bench::placement::{choose_cast, prepare, FillPattern, PrepLocality, PrepState};
+use crate::bench::{op_for, Point, Series};
+use crate::sim::engine::Machine;
+use crate::sim::MachineConfig;
+use crate::util::rng::Rng;
+
+/// Mean latency of line-spanning operations over a prepared buffer.
+pub fn unaligned_latency(
+    cfg: &MachineConfig,
+    op: OpKind,
+    state: PrepState,
+    locality: PrepLocality,
+    buffer_bytes: usize,
+) -> Option<f64> {
+    let cast = choose_cast(&cfg.topology, locality)?;
+    let mut m = Machine::new(cfg.clone());
+    // prepare one extra line so the last straddle has a second line
+    let n_lines = (buffer_bytes / 64).max(2) + 1;
+    let addrs = prepare(&mut m, 0x4000_0000, n_lines, state, cast, FillPattern::Increasing);
+
+    let mut order: Vec<usize> = (0..addrs.len() - 1).collect();
+    Rng::new(0x0A11 ^ buffer_bytes as u64).shuffle(&mut order);
+
+    let opv = op_for(op, false);
+    let mut total = 0.0;
+    for &i in &order {
+        // offset 60 in the line: an 8-byte operand spans lines i and i+1
+        let a = m.access(cast.requester, opv, addrs[i] + 60, Width::W64);
+        total += a.latency;
+    }
+    Some(total / order.len() as f64)
+}
+
+/// Sweep for the figure: aligned vs unaligned for one op.
+pub fn sweep(
+    cfg: &MachineConfig,
+    op: OpKind,
+    state: PrepState,
+    locality: PrepLocality,
+    sizes: &[usize],
+) -> Option<(Series, Series)> {
+    let aligned = LatencyBench::new(op, state, locality).sweep(cfg, sizes)?;
+    let mut pts = Vec::new();
+    for &s in sizes {
+        pts.push(Point {
+            buffer_bytes: s,
+            value: unaligned_latency(cfg, op, state, locality, s)?,
+        });
+    }
+    let mut aligned = aligned;
+    aligned.name = format!("{} aligned {}", op.label(), locality.label());
+    Some((
+        aligned,
+        Series {
+            name: format!("{} unaligned {}", op.label(), locality.label()),
+            points: pts,
+        },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    const KB16: usize = 16 << 10;
+
+    #[test]
+    fn unaligned_cas_dwarfs_aligned() {
+        let cfg = arch::haswell();
+        let (a, u) = sweep(&cfg, OpKind::Cas, PrepState::M, PrepLocality::Local, &[KB16]).unwrap();
+        let ratio = u.points[0].value / a.points[0].value;
+        assert!(ratio > 10.0, "bus lock must dominate: {ratio}x");
+        // §5.7: CAS reaches up to ≈750ns — same order of magnitude here.
+        assert!((200.0..900.0).contains(&u.points[0].value), "{}", u.points[0].value);
+    }
+
+    #[test]
+    fn unaligned_read_within_20_percent() {
+        let cfg = arch::haswell();
+        let (a, u) = sweep(&cfg, OpKind::Read, PrepState::M, PrepLocality::Local, &[KB16]).unwrap();
+        let loss = u.points[0].value / a.points[0].value;
+        assert!(loss < 1.35, "§5.7: reads lose ≤20%: got {loss}x");
+    }
+
+    #[test]
+    fn unaligned_faa_also_locks() {
+        let cfg = arch::haswell();
+        let (a, u) = sweep(&cfg, OpKind::Faa, PrepState::M, PrepLocality::Local, &[KB16]).unwrap();
+        assert!(u.points[0].value > 5.0 * a.points[0].value);
+    }
+}

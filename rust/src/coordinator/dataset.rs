@@ -1,0 +1,158 @@
+//! Dataset collection for model fitting and validation: run the latency
+//! benchmarks over (op × state × locality × size), featurize each point, and
+//! pair it with the measured value.
+
+use crate::atomics::OpKind;
+use crate::bench::latency::LatencyBench;
+use crate::bench::placement::{choose_cast, PrepLocality, PrepState};
+use crate::model::features::{featurize_sized, FEATURE_DIM};
+use crate::model::query::Query;
+use crate::sim::timing::Level;
+use crate::sim::MachineConfig;
+
+/// One (query, features, measurement) triple.
+#[derive(Debug, Clone)]
+pub struct DataPoint {
+    pub query: Query,
+    pub features: [f64; FEATURE_DIM],
+    pub measured_ns: f64,
+    pub buffer_bytes: usize,
+    pub series: String,
+}
+
+/// Infer which level a buffer of `size` bytes is served from, the same way
+/// the analytical model reasons about capacities. Remote shared states on
+/// Intel are level-insensitive (the snoop dominates), but the mapping is
+/// still needed for the O-residual lookup.
+pub fn infer_level(cfg: &MachineConfig, size: usize) -> Level {
+    // a pointer-chased buffer only fits a level if it is strictly smaller
+    // than the capacity (tags + the chased buffer itself)
+    if size <= cfg.l1.size {
+        Level::L1
+    } else if size <= cfg.l2.size {
+        Level::L2
+    } else if let Some(l3) = cfg.effective_l3_bytes() {
+        if size <= l3 {
+            Level::L3
+        } else {
+            Level::Memory
+        }
+    } else {
+        Level::Memory
+    }
+}
+
+/// The states exercised per architecture: O only exists on the
+/// dirty-sharing protocols (MOESI/GOLS).
+pub fn states_for(cfg: &MachineConfig) -> Vec<PrepState> {
+    let mut v = vec![PrepState::E, PrepState::M, PrepState::S];
+    if cfg.protocol.has_owned() {
+        v.push(PrepState::O);
+    }
+    v
+}
+
+/// Collect the full latency dataset for one architecture.
+pub fn collect_latency_dataset(cfg: &MachineConfig, sizes: &[usize]) -> Vec<DataPoint> {
+    let mut out = Vec::new();
+    let ops = [OpKind::Read, OpKind::Cas, OpKind::Faa, OpKind::Swp];
+    for op in ops {
+        for state in states_for(cfg) {
+            for locality in PrepLocality::available(&cfg.topology) {
+                let bench = LatencyBench::new(op, state, locality);
+                let Some(series) = bench.sweep(cfg, sizes) else { continue };
+                // the S/O-state invalidation target is the *actual* extra
+                // sharer the preparation placed (the farthest core), not
+                // the data location — Eq. 8 takes the max over sharers
+                let cast = choose_cast(&cfg.topology, locality);
+                let sharer_distance = cast
+                    .map(|c| cfg.topology.distance(c.requester, c.sharer));
+                for p in &series.points {
+                    let level = infer_level(cfg, p.buffer_bytes);
+                    let mut query = Query::new(
+                        op,
+                        state.to_model(),
+                        level,
+                        locality.to_distance(),
+                    );
+                    if let (true, Some(d)) = (state.to_model().is_shared(), sharer_distance)
+                    {
+                        query = query.with_invalidate(d);
+                    }
+                    // blended featurization: the measured mean mixes the
+                    // levels a buffer of this size actually spans
+                    let (features, dominant) = featurize_sized(cfg, &query, p.buffer_bytes);
+                    query.loc.level = dominant;
+                    out.push(DataPoint {
+                        query,
+                        features,
+                        measured_ns: p.value,
+                        buffer_bytes: p.buffer_bytes,
+                        series: series.name.clone(),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The reduced size grid used for fitting (one size per level plus RAM).
+pub fn fit_sizes(cfg: &MachineConfig) -> Vec<usize> {
+    let mut v = vec![cfg.l1.size / 2, cfg.l2.size / 2];
+    if let Some(l3) = cfg.effective_l3_bytes() {
+        v.push(l3 / 2);
+        v.push(l3 * 4);
+    } else {
+        v.push(cfg.l2.size * 8);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    #[test]
+    fn level_inference_haswell() {
+        let cfg = arch::haswell();
+        assert_eq!(infer_level(&cfg, 16 << 10), Level::L1);
+        assert_eq!(infer_level(&cfg, 128 << 10), Level::L2);
+        assert_eq!(infer_level(&cfg, 4 << 20), Level::L3);
+        assert_eq!(infer_level(&cfg, 64 << 20), Level::Memory);
+    }
+
+    #[test]
+    fn level_inference_respects_ht_assist() {
+        let cfg = arch::bulldozer();
+        // 7.5MB: within the nominal 8MB L3 but beyond the 7MB effective
+        assert_eq!(infer_level(&cfg, 7 << 20), Level::L3);
+        assert_eq!(infer_level(&cfg, (7 << 20) + (1 << 19)), Level::Memory);
+    }
+
+    #[test]
+    fn phi_has_no_l3_level() {
+        let cfg = arch::xeonphi();
+        assert_eq!(infer_level(&cfg, 1 << 20), Level::Memory);
+        assert_eq!(infer_level(&cfg, 256 << 10), Level::L2);
+    }
+
+    #[test]
+    fn o_state_only_on_owned_protocols() {
+        assert_eq!(states_for(&arch::haswell()).len(), 3);
+        assert_eq!(states_for(&arch::bulldozer()).len(), 4);
+        assert_eq!(states_for(&arch::xeonphi()).len(), 4);
+    }
+
+    #[test]
+    fn dataset_has_all_combinations() {
+        let cfg = arch::haswell();
+        let sizes = [16 << 10, 4 << 20];
+        let ds = collect_latency_dataset(&cfg, &sizes);
+        // 4 ops x 3 states x 2 localities x 2 sizes
+        assert_eq!(ds.len(), 4 * 3 * 2 * 2);
+        assert!(ds.iter().all(|d| d.measured_ns > 0.0));
+        assert!(ds.iter().all(|d| d.features.iter().any(|&f| f != 0.0)));
+    }
+}

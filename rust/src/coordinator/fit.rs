@@ -1,0 +1,129 @@
+//! The Table 2 fit loop: gradient descent on the masked MSE through the AOT
+//! `fit_step` executable, driven entirely from Rust.
+//!
+//! The dataset rows are scaled to unit-ish magnitude before fitting (the
+//! parameters span 1–340 ns) and the fitted θ is compared against the
+//! Table 2 seeds in the report layer.
+
+use crate::coordinator::dataset::DataPoint;
+use crate::model::params::{Theta, THETA_DIM};
+use crate::runtime::{Batch, Runtime};
+use anyhow::Result;
+
+/// Fit outcome for one architecture.
+#[derive(Debug, Clone)]
+pub struct FitReport {
+    pub arch: String,
+    pub theta: Theta,
+    pub seed_theta: Theta,
+    pub final_loss: f32,
+    pub iterations: usize,
+    pub n_points: usize,
+}
+
+/// Gradient-descent hyperparameters. The loss landscape is quadratic;
+/// plain GD with a modest step converges in a few thousand iterations.
+#[derive(Debug, Clone, Copy)]
+pub struct FitCfg {
+    pub lr: f32,
+    pub max_iters: usize,
+    /// Stop when the relative loss improvement over a 100-iter window
+    /// drops below this.
+    pub tol: f32,
+}
+
+impl Default for FitCfg {
+    fn default() -> Self {
+        FitCfg { lr: 5e-4, max_iters: 2000, tol: 1e-5 }
+    }
+}
+
+/// Fit θ from a latency dataset via the PJRT `fit_step` executable.
+/// `init` seeds the descent (Table 2 values give fast convergence; zeros
+/// demonstrate recovery from scratch — both are exercised in tests).
+pub fn fit_theta(
+    rt: &Runtime,
+    arch: &str,
+    dataset: &[DataPoint],
+    init: Theta,
+    cfg: FitCfg,
+) -> Result<FitReport> {
+    let rows: Vec<([f64; THETA_DIM], f64)> = dataset
+        .iter()
+        .map(|d| (d.features, d.measured_ns))
+        .collect();
+    let batches = Batch::pack(&rows);
+
+    let mut theta: [f32; THETA_DIM] =
+        std::array::from_fn(|i| init.to_vec()[i] as f32);
+    let mut last_window_loss = f32::MAX;
+    let mut loss = f32::MAX;
+    let mut iters = 0;
+    'outer: for epoch in 0..cfg.max_iters {
+        for b in &batches {
+            let (t, l) = rt.fit_step(b, &theta, cfg.lr)?;
+            theta = t;
+            loss = l;
+        }
+        iters = epoch + 1;
+        if epoch % 100 == 99 {
+            if last_window_loss.is_finite()
+                && (last_window_loss - loss).abs() / last_window_loss.max(1e-9) < cfg.tol
+            {
+                break 'outer;
+            }
+            last_window_loss = loss;
+        }
+    }
+
+    Ok(FitReport {
+        arch: arch.to_string(),
+        theta: Theta::from_vec(&theta.map(|x| x as f64)),
+        seed_theta: init,
+        final_loss: loss,
+        iterations: iters,
+        n_points: dataset.len(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+    use crate::coordinator::dataset::{collect_latency_dataset, fit_sizes};
+    use std::path::Path;
+
+    fn artifacts_available() -> bool {
+        Path::new(&Runtime::default_dir()).join("fit_step.hlo.txt").exists()
+    }
+
+    #[test]
+    fn fit_recovers_haswell_parameters_within_tolerance() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let cfg = arch::haswell();
+        let rt = Runtime::load(Runtime::default_dir()).unwrap();
+        // keep the unit test light: two sizes, a short descent
+        let _ = fit_sizes(&cfg);
+        let ds = collect_latency_dataset(&cfg, &[16 << 10, 2 << 20]);
+        let seed = Theta::from_config(&cfg);
+        let short = FitCfg { lr: 5e-4, max_iters: 400, tol: 1e-6 };
+        let report = fit_theta(&rt, cfg.name, &ds, seed, short).unwrap();
+        // The measurement includes O residuals the 8-parameter model cannot
+        // express, so the fit recovers Table 2 only approximately — exactly
+        // like the paper's median-based calibration. The execute latencies
+        // absorb a few ns of the mean atomic residual; memory stays close.
+        let got = report.theta;
+        assert!(
+            (got.e_cas - seed.e_cas).abs() < 5.0,
+            "E(CAS): fitted {} vs seed {}",
+            got.e_cas,
+            seed.e_cas
+        );
+        assert!(got.to_vec().iter().all(|&x| x >= 0.0), "projection keeps θ ≥ 0");
+        assert!(report.final_loss.is_finite());
+        assert!(report.n_points == ds.len());
+    }
+}

@@ -1,0 +1,46 @@
+//! Coordinator: orchestrates benchmark sweeps across architectures and
+//! drives the PJRT fit loop that recovers the Table 2 model parameters from
+//! simulator measurements.
+//!
+//! The coordinator is the L3 "leader": it scatters independent sweeps over
+//! worker threads (one per architecture), gathers the datasets, featurizes
+//! them (rust/src/model/features.rs), and iterates the AOT `fit_step`
+//! executable until convergence — Python never runs here.
+
+pub mod dataset;
+pub mod fit;
+
+pub use dataset::{collect_latency_dataset, infer_level, DataPoint};
+pub use fit::{fit_theta, FitReport};
+
+use crate::sim::MachineConfig;
+use std::thread;
+
+/// Run `job` for every architecture on its own OS thread and collect the
+/// results in input order.
+pub fn scatter<T, F>(configs: Vec<MachineConfig>, job: F) -> Vec<T>
+where
+    T: Send + 'static,
+    F: Fn(MachineConfig) -> T + Send + Sync + Clone + 'static,
+{
+    let handles: Vec<thread::JoinHandle<T>> = configs
+        .into_iter()
+        .map(|cfg| {
+            let job = job.clone();
+            thread::spawn(move || job(cfg))
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    #[test]
+    fn scatter_preserves_order() {
+        let names = scatter(arch::all(), |cfg| cfg.name.to_string());
+        assert_eq!(names, vec!["Haswell", "Ivy Bridge", "Bulldozer", "Xeon Phi"]);
+    }
+}

@@ -1,0 +1,80 @@
+//! Compressed-sparse-row adjacency built from an edge list (undirected:
+//! both directions inserted, self-loops dropped, as Graph500's kernel 1).
+
+#[derive(Debug, Clone)]
+pub struct Csr {
+    pub offsets: Vec<usize>,
+    pub neighbors: Vec<u32>,
+    pub n: usize,
+}
+
+impl Csr {
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Csr {
+        let mut deg = vec![0usize; n];
+        for &(u, v) in edges {
+            if u != v {
+                deg[u as usize] += 1;
+                deg[v as usize] += 1;
+            }
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let mut neighbors = vec![0u32; offsets[n]];
+        let mut cursor = offsets.clone();
+        for &(u, v) in edges {
+            if u != v {
+                neighbors[cursor[u as usize]] = v;
+                cursor[u as usize] += 1;
+                neighbors[cursor[v as usize]] = u;
+                cursor[v as usize] += 1;
+            }
+        }
+        Csr { offsets, neighbors, n }
+    }
+
+    pub fn neighbors_of(&self, v: u32) -> &[u32] {
+        &self.neighbors[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    pub fn degree(&self, v: u32) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    pub fn n_directed_edges(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// A vertex with non-zero degree (the BFS root must be connected).
+    pub fn first_non_isolated(&self) -> Option<u32> {
+        (0..self.n as u32).find(|&v| self.degree(v) > 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_undirected() {
+        let csr = Csr::from_edges(4, &[(0, 1), (1, 2)]);
+        assert_eq!(csr.neighbors_of(1), &[0, 2]);
+        assert_eq!(csr.neighbors_of(0), &[1]);
+        assert_eq!(csr.degree(3), 0);
+        assert_eq!(csr.n_directed_edges(), 4);
+    }
+
+    #[test]
+    fn drops_self_loops() {
+        let csr = Csr::from_edges(3, &[(1, 1), (0, 2)]);
+        assert_eq!(csr.degree(1), 0);
+        assert_eq!(csr.n_directed_edges(), 2);
+    }
+
+    #[test]
+    fn first_non_isolated_skips_empty() {
+        let csr = Csr::from_edges(4, &[(2, 3)]);
+        assert_eq!(csr.first_non_isolated(), Some(2));
+    }
+}

@@ -1,0 +1,77 @@
+//! Kronecker (R-MAT) graph generator, after the Graph500 specification and
+//! Leskovec et al. [20]: scale-free graphs with parameters
+//! (A, B, C, D) = (0.57, 0.19, 0.19, 0.05), edge factor 16.
+
+use crate::util::rng::Rng;
+
+pub const EDGE_FACTOR: usize = 16;
+const A: f64 = 0.57;
+const B: f64 = 0.19;
+const C: f64 = 0.19;
+
+/// Generate the edge list of a scale-`scale` Kronecker graph
+/// (2^scale vertices, `EDGE_FACTOR * 2^scale` edges), vertex labels
+/// permuted to destroy generator locality (as Graph500 requires).
+pub fn kronecker_edges(scale: u32, seed: u64) -> Vec<(u32, u32)> {
+    let n = 1usize << scale;
+    let m = n * EDGE_FACTOR;
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(m);
+    for _ in 0..m {
+        let (mut u, mut v) = (0u32, 0u32);
+        for _ in 0..scale {
+            let r = rng.next_f64();
+            let (du, dv) = if r < A {
+                (0, 0)
+            } else if r < A + B {
+                (0, 1)
+            } else if r < A + B + C {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        edges.push((u, v));
+    }
+    // label permutation
+    let perm = rng.permutation(n);
+    for (u, v) in &mut edges {
+        *u = perm[*u as usize] as u32;
+        *v = perm[*v as usize] as u32;
+    }
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_count_and_range() {
+        let e = kronecker_edges(8, 1);
+        assert_eq!(e.len(), 256 * EDGE_FACTOR);
+        assert!(e.iter().all(|&(u, v)| u < 256 && v < 256));
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(kronecker_edges(6, 7), kronecker_edges(6, 7));
+        assert_ne!(kronecker_edges(6, 7), kronecker_edges(6, 8));
+    }
+
+    #[test]
+    fn heavy_tailed_degrees() {
+        // R-MAT graphs are skewed: the max degree far exceeds the mean.
+        let e = kronecker_edges(10, 3);
+        let mut deg = vec![0u32; 1 << 10];
+        for &(u, v) in &e {
+            deg[u as usize] += 1;
+            deg[v as usize] += 1;
+        }
+        let mean = 2.0 * e.len() as f64 / 1024.0;
+        let max = *deg.iter().max().unwrap() as f64;
+        assert!(max > 4.0 * mean, "max {max}, mean {mean}");
+    }
+}

@@ -1,0 +1,16 @@
+//! Graph500-style BFS case study (§6.1, Fig. 10b).
+//!
+//! * [`kronecker`] — the Kronecker (R-MAT) generator of the Graph500
+//!   benchmark, modeling heavy-tailed real-world graphs.
+//! * [`csr`] — compressed sparse row adjacency.
+//! * [`bfs`] — level-synchronous parallel BFS whose `bfs_tree` updates go
+//!   through the *simulated* atomics, comparing the CAS and SWP claim
+//!   protocols (and a sequential reference for correctness).
+
+pub mod bfs;
+pub mod csr;
+pub mod kronecker;
+
+pub use bfs::{parallel_bfs, sequential_bfs, BfsMode, BfsResult};
+pub use csr::Csr;
+pub use kronecker::kronecker_edges;

@@ -1,0 +1,163 @@
+//! In-tree micro-benchmark harness (criterion is not vendored in this
+//! offline image). Provides warm-up, repeated timed runs, and a
+//! criterion-style report: mean ± stddev, median, min/max, throughput.
+//!
+//! Used by the `rust/benches/*.rs` targets (built with `harness = false`).
+
+use crate::util::stats::Summary;
+use std::time::Instant;
+
+/// Configuration of a timing run.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchCfg {
+    pub warmup_iters: u32,
+    pub sample_iters: u32,
+}
+
+impl Default for BenchCfg {
+    fn default() -> Self {
+        // fast deterministic workloads: modest samples suffice
+        BenchCfg { warmup_iters: 2, sample_iters: 10 }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub summary: Summary,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        let s = &self.summary;
+        let mut out = format!(
+            "{:<44} {:>10.3} ms ±{:>8.3}  (median {:.3}, min {:.3}, max {:.3})",
+            self.name,
+            s.mean / 1e6,
+            s.stddev / 1e6,
+            s.median / 1e6,
+            s.min / 1e6,
+            s.max / 1e6,
+        );
+        if let Some(items) = self.items {
+            let per_sec = items as f64 / (s.mean / 1e9);
+            out.push_str(&format!("  [{:.2} Melem/s]", per_sec / 1e6));
+        }
+        out
+    }
+}
+
+/// A group of benchmarks sharing a config, printed criterion-style.
+pub struct Bencher {
+    cfg: BenchCfg,
+    pub results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new() -> Bencher {
+        let cfg = match std::env::var("BENCH_FAST") {
+            Ok(_) => BenchCfg { warmup_iters: 1, sample_iters: 3 },
+            Err(_) => BenchCfg::default(),
+        };
+        Bencher { cfg, results: Vec::new() }
+    }
+
+    pub fn with_cfg(cfg: BenchCfg) -> Bencher {
+        Bencher { cfg, results: Vec::new() }
+    }
+
+    /// Time `f` (called once per iteration); returns ns samples.
+    pub fn bench(&mut self, name: impl Into<String>, mut f: impl FnMut()) -> &BenchResult {
+        for _ in 0..self.cfg.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.cfg.sample_iters as usize);
+        for _ in 0..self.cfg.sample_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let result = BenchResult {
+            name: name.into(),
+            summary: Summary::of(&samples),
+            items: None,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Like [`bench`] but reports `items`/iteration throughput.
+    pub fn bench_throughput(
+        &mut self,
+        name: impl Into<String>,
+        items: u64,
+        mut f: impl FnMut(),
+    ) -> &BenchResult {
+        for _ in 0..self.cfg.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.cfg.sample_iters as usize);
+        for _ in 0..self.cfg.sample_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        let result = BenchResult {
+            name: name.into(),
+            summary: Summary::of(&samples),
+            items: Some(items),
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Header line for a bench group.
+    pub fn group(&self, title: &str) {
+        println!("\n=== {title} ===");
+    }
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher::new()
+    }
+}
+
+/// Prevent the optimizer from eliding a value (std::hint::black_box wrapper,
+/// kept for API parity with criterion).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let mut b = Bencher::with_cfg(BenchCfg { warmup_iters: 1, sample_iters: 4 });
+        let mut n = 0u64;
+        b.bench("count", || {
+            n = black_box(n + 1);
+        });
+        assert_eq!(b.results.len(), 1);
+        assert_eq!(b.results[0].summary.n, 4);
+        assert_eq!(n, 5); // 1 warmup + 4 samples
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bencher::with_cfg(BenchCfg { warmup_iters: 0, sample_iters: 2 });
+        let r = b.bench_throughput("t", 1000, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.items, Some(1000));
+        assert!(r.report().contains("Melem/s"));
+    }
+}

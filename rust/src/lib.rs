@@ -1,0 +1,40 @@
+//! # atomics-repro
+//!
+//! A full-system reproduction of **"Evaluating the Cost of Atomic Operations
+//! on Modern Architectures"** (Schweizer, Besta, Hoefler — PACT'15 / CS.DC
+//! 2020 extended version).
+//!
+//! The paper benchmarks CAS / FAA / SWP against reads and writes on four x86
+//! testbeds and validates an analytical latency/bandwidth model. None of
+//! that 2013–2015 hardware is available here, so the measurement substrate
+//! is a cache-coherence **simulator** ([`sim`]) configured per testbed
+//! ([`arch`]) — see `DESIGN.md` for the substitution argument. On top of it:
+//!
+//! * [`bench`] — the paper's benchmarking methodology (§2.1, §3): latency
+//!   pointer-chasing, bandwidth sweeps, contention, operand width,
+//!   unaligned operands, and mechanism ablations.
+//! * [`model`] — the analytical performance model (Eq. 1–11) plus NRMSE
+//!   validation (Eq. 12) and the featurization consumed by the JAX/Pallas
+//!   layer.
+//! * [`graph`] — Graph500-style Kronecker graphs and the parallel BFS case
+//!   study (§6.1, Fig. 10b) running on simulated atomics.
+//! * [`runtime`] — PJRT loader for the AOT-compiled JAX artifacts
+//!   (prediction, NRMSE, gradient fit step); Python never runs at
+//!   benchmark time.
+//! * [`coordinator`] — sweep orchestration across architectures and the
+//!   model-fitting loop (Table 2) driving the PJRT executables.
+//! * [`report`] — regenerates every table and figure of the paper.
+//! * [`harness`] — in-tree micro-benchmark harness (criterion is not
+//!   vendored in this offline environment).
+
+pub mod arch;
+pub mod atomics;
+pub mod bench;
+pub mod coordinator;
+pub mod graph;
+pub mod harness;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,348 @@
+//! `repro` — the leader binary: regenerates every table and figure of
+//! "Evaluating the Cost of Atomic Operations on Modern Architectures" on the
+//! simulator substrate, runs the model fit through PJRT, and drives the
+//! auxiliary workloads (BFS case study, ablations).
+//!
+//! Usage:
+//!   repro table <1|2|3>            regenerate a paper table
+//!   repro figure <2..15|8d|10a|10b> regenerate a paper figure
+//!   repro all                       everything, in paper order
+//!   repro validate                  model-vs-simulator NRMSE per series
+//!   repro fit [--arch NAME]         Table 2 fit via the PJRT fit_step
+//!   repro bfs [--scale N] [--threads N] [--arch NAME]
+//!   repro ablation                  §6.2 hardware-extension ablations
+//!   repro latency --arch A --op OP --state S --locality L [--size BYTES]
+//!   repro info                      testbed summaries
+//!
+//! Global flags: --fast (reduced sweeps), --artifacts DIR, --results DIR.
+
+use atomics_repro::atomics::OpKind;
+use atomics_repro::bench::latency::LatencyBench;
+use atomics_repro::bench::placement::{PrepLocality, PrepState};
+use atomics_repro::coordinator::dataset::{collect_latency_dataset, fit_sizes};
+use atomics_repro::coordinator::fit::{fit_theta, FitCfg};
+use atomics_repro::graph::{kronecker_edges, parallel_bfs, BfsMode, Csr};
+use atomics_repro::graph::bfs::validate_tree;
+use atomics_repro::model::params::Theta;
+use atomics_repro::report::{figures, tables};
+use atomics_repro::runtime::Runtime;
+use atomics_repro::util::cli::Args;
+use atomics_repro::{arch, graph};
+
+fn main() {
+    let args = Args::from_env();
+    if args.flag("fast") {
+        std::env::set_var("FAST", "1");
+    }
+    if let Some(d) = args.opt("artifacts") {
+        std::env::set_var("ARTIFACTS_DIR", d);
+    }
+    if let Some(d) = args.opt("results") {
+        std::env::set_var("RESULTS_DIR", d);
+    }
+
+    let code = match args.subcommand.as_deref() {
+        Some("table") => cmd_table(&args),
+        Some("figure") => cmd_figure(&args),
+        Some("all") => cmd_all(),
+        Some("validate") => cmd_validate(),
+        Some("fit") => cmd_fit(&args),
+        Some("bfs") => cmd_bfs(&args),
+        Some("ablation") => cmd_ablation(),
+        Some("latency") => cmd_latency(&args),
+        Some("info") => cmd_info(),
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'");
+            usage();
+            2
+        }
+        None => {
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!("repro — reproduction driver for 'Evaluating the Cost of Atomic Operations'");
+    eprintln!(
+        "subcommands: table <n> | figure <id> | all | validate | fit | bfs | ablation | latency | info"
+    );
+    eprintln!("see README.md for details");
+}
+
+fn cmd_table(args: &Args) -> i32 {
+    match args.positionals.first().map(|s| s.as_str()) {
+        Some("1") => println!("{}", tables::table1().render()),
+        Some("2") => {
+            let rt = Runtime::load(Runtime::default_dir()).ok();
+            if rt.is_none() {
+                eprintln!(
+                    "(artifacts not found — printing paper values only; run `make artifacts`)"
+                );
+            }
+            println!("{}", tables::table2(rt.as_ref()).render());
+        }
+        Some("3") => println!("{}", tables::table3().render()),
+        other => {
+            eprintln!("usage: repro table <1|2|3> (got {other:?})");
+            return 2;
+        }
+    }
+    0
+}
+
+fn cmd_figure(args: &Args) -> i32 {
+    let Some(id) = args.positionals.first() else {
+        eprintln!("usage: repro figure <2..15|8d|10a|10b>");
+        return 2;
+    };
+    match figures::figure(id) {
+        Ok(text) => {
+            println!("{text}");
+            0
+        }
+        Err(e) => {
+            eprintln!("{e}");
+            2
+        }
+    }
+}
+
+fn cmd_all() -> i32 {
+    println!("{}", tables::table1().render());
+    let rt = Runtime::load(Runtime::default_dir()).ok();
+    println!("{}", tables::table2(rt.as_ref()).render());
+    println!("{}", tables::table3().render());
+    for id in figures::ALL_FIGURES {
+        println!("──────────────────────────────────────────────────");
+        match figures::figure(id) {
+            Ok(text) => println!("{text}"),
+            Err(e) => eprintln!("figure {id}: {e}"),
+        }
+    }
+    0
+}
+
+fn cmd_validate() -> i32 {
+    // NRMSE per (arch, state, locality) series — the §5 validation protocol.
+    use atomics_repro::coordinator::scatter;
+    let results = scatter(arch::all(), |cfg| {
+        let sizes = atomics_repro::report::sweep_sizes();
+        let ds = collect_latency_dataset(&cfg, &sizes);
+        let theta = Theta::from_config(&cfg);
+        let mut groups: std::collections::BTreeMap<String, (Vec<f64>, Vec<f64>)> =
+            Default::default();
+        for d in &ds {
+            let e = groups.entry(d.series.clone()).or_default();
+            e.0.push(atomics_repro::model::features::dot(&d.features, &theta.to_vec()));
+            e.1.push(d.measured_ns);
+        }
+        (cfg.name, groups)
+    });
+    let mut worst = 0.0f64;
+    for (name, groups) in results {
+        println!("== {name} ==");
+        for (series, (pred, obs)) in groups {
+            let v = atomics_repro::model::nrmse::Validation::of(&series, &pred, &obs);
+            worst = worst.max(v.nrmse);
+            println!(
+                "  {:<28} NRMSE {:>6.1}% {}",
+                series,
+                v.nrmse * 100.0,
+                if v.exceeds_threshold() { "(>10%)" } else { "" }
+            );
+        }
+    }
+    println!("\nworst series NRMSE: {:.1}%", worst * 100.0);
+    0
+}
+
+fn cmd_fit(args: &Args) -> i32 {
+    let rt = match Runtime::load(Runtime::default_dir()) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("cannot load artifacts ({e}); run `make artifacts` first");
+            return 1;
+        }
+    };
+    let configs = match args.opt("arch") {
+        Some(name) => match arch::by_name(name) {
+            Some(c) => vec![c],
+            None => {
+                eprintln!("unknown arch '{name}'");
+                return 2;
+            }
+        },
+        None => arch::all(),
+    };
+    for cfg in configs {
+        let ds = collect_latency_dataset(&cfg, &fit_sizes(&cfg));
+        let seed = Theta::from_config(&cfg);
+        match fit_theta(&rt, cfg.name, &ds, seed, FitCfg::default()) {
+            Ok(r) => {
+                println!(
+                    "{}: {} points, {} iters, final loss {:.3}",
+                    r.arch, r.n_points, r.iterations, r.final_loss
+                );
+                for (i, name) in Theta::NAMES.iter().enumerate() {
+                    println!(
+                        "  {:<8} paper {:>7.2}  fitted {:>7.2}",
+                        name,
+                        r.seed_theta.to_vec()[i],
+                        r.theta.to_vec()[i]
+                    );
+                }
+            }
+            Err(e) => eprintln!("{}: fit failed: {e}", cfg.name),
+        }
+    }
+    0
+}
+
+fn cmd_bfs(args: &Args) -> i32 {
+    let scale: u32 = args.opt_parse("scale", 14);
+    let threads: usize = args.opt_parse("threads", 4);
+    let arch_name = args.opt("arch").unwrap_or("haswell");
+    let Some(cfg) = arch::by_name(arch_name) else {
+        eprintln!("unknown arch '{arch_name}'");
+        return 2;
+    };
+    println!(
+        "BFS on scale-{scale} Kronecker graph ({} vertices, {} edges), {threads} threads, {}",
+        1u64 << scale,
+        (1u64 << scale) * graph::kronecker::EDGE_FACTOR as u64,
+        cfg.name
+    );
+    let csr = Csr::from_edges(1 << scale, &kronecker_edges(scale, 0xBF5));
+    let root = csr.first_non_isolated().unwrap();
+    for mode in [BfsMode::Cas, BfsMode::Swp] {
+        let mut m = atomics_repro::sim::Machine::new(cfg.clone());
+        let r = parallel_bfs(&mut m, &csr, root, threads, mode);
+        if let Err(e) = validate_tree(&csr, root, &r.parent) {
+            eprintln!("{}: INVALID TREE: {e}", mode.label());
+            return 1;
+        }
+        println!(
+            "  {:<4} {:>8.1} MTEPS  ({} edges, {:.2} ms virtual, {} wasted claims)",
+            mode.label(),
+            r.mteps,
+            r.edges_scanned,
+            r.elapsed_ns / 1e6,
+            r.wasted_claims
+        );
+    }
+    0
+}
+
+fn cmd_ablation() -> i32 {
+    // §6.2: quantify the proposed hardware fixes on the S/O-state
+    // remote-invalidation workload that motivates them.
+    let sizes = atomics_repro::report::sweep_sizes();
+    let variants = [
+        ("MOESI (baseline)", arch::bulldozer()),
+        ("MOESI+OL/SL (§6.2.1)", arch::bulldozer_with_extensions(true, false, false)),
+        ("MOESI+HTA tracking (§6.2.2)", arch::bulldozer_with_extensions(false, true, false)),
+        ("both (§6.2.1+§6.2.2)", arch::bulldozer_with_extensions(true, true, false)),
+    ];
+    println!("§6.2 ablation — S-state CAS latency [ns], sharers die-local (the motivating case)");
+    for (name, cfg) in &variants {
+        let mut bench = LatencyBench::new(OpKind::Cas, PrepState::S, PrepLocality::SharedL2);
+        bench.sharer = atomics_repro::bench::placement::SharerPlacement::SameDie;
+        if let Some(series) = bench.sweep(cfg, &sizes) {
+            let mean: f64 =
+                series.points.iter().map(|p| p.value).sum::<f64>() / series.points.len() as f64;
+            println!("  {:<28} mean {:>7.1} ns", name, mean);
+        }
+    }
+    // §6.2.3 FastLock: interleaved writes + independent atomics
+    println!("\n§6.2.3 FastLock — mixed write/FAA stream bandwidth [GB/s]");
+    for (name, cfg) in [
+        ("lock (baseline)", arch::bulldozer()),
+        ("FastLock", arch::bulldozer_with_extensions(false, false, true)),
+    ] {
+        let mean: f64 = sizes
+            .iter()
+            .map(|&s| atomics_repro::bench::bandwidth::mixed_stream_bandwidth(&cfg, s))
+            .sum::<f64>()
+            / sizes.len() as f64;
+        println!("  {:<28} mean {:>7.2} GB/s", name, mean);
+    }
+    0
+}
+
+fn cmd_latency(args: &Args) -> i32 {
+    let arch_name = args.opt("arch").unwrap_or("haswell");
+    let Some(cfg) = arch::by_name(arch_name) else {
+        eprintln!("unknown arch '{arch_name}'");
+        return 2;
+    };
+    let op = match args.opt("op").unwrap_or("cas") {
+        "cas" => OpKind::Cas,
+        "faa" => OpKind::Faa,
+        "swp" => OpKind::Swp,
+        "read" => OpKind::Read,
+        other => {
+            eprintln!("unknown op '{other}'");
+            return 2;
+        }
+    };
+    let state = match args.opt("state").unwrap_or("M") {
+        "E" | "e" => PrepState::E,
+        "M" | "m" => PrepState::M,
+        "S" | "s" => PrepState::S,
+        "O" | "o" => PrepState::O,
+        other => {
+            eprintln!("unknown state '{other}'");
+            return 2;
+        }
+    };
+    let locality = match args.opt("locality").unwrap_or("local") {
+        "local" => PrepLocality::Local,
+        "onchip" | "on-chip" => PrepLocality::OnChip,
+        "sharedl2" => PrepLocality::SharedL2,
+        "otherdie" => PrepLocality::OtherDie,
+        "othersocket" | "socket" => PrepLocality::OtherSocket,
+        other => {
+            eprintln!("unknown locality '{other}'");
+            return 2;
+        }
+    };
+    let size: usize = args.opt_parse("size", 64 << 10);
+    match LatencyBench::new(op, state, locality).run_once(&cfg, size) {
+        Some(ns) => {
+            println!(
+                "{} {} {} {} buffer={}: {ns:.2} ns",
+                cfg.name,
+                op.label(),
+                state.label(),
+                locality.label(),
+                atomics_repro::report::human_size(size)
+            );
+            0
+        }
+        None => {
+            eprintln!("locality '{}' unavailable on {}", locality.label(), cfg.name);
+            1
+        }
+    }
+}
+
+fn cmd_info() -> i32 {
+    for cfg in arch::all() {
+        println!(
+            "{:<11} {:<16} {:>2} cores, {} socket(s), {}, L3 {}",
+            cfg.name,
+            cfg.cpu_model,
+            cfg.topology.n_cores,
+            cfg.topology.n_sockets(),
+            cfg.protocol.name(),
+            match cfg.l3 {
+                Some(g) => format!("{}MB", g.size >> 20),
+                None => "none".into(),
+            }
+        );
+    }
+    0
+}

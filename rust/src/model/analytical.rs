@@ -1,0 +1,158 @@
+//! Direct evaluation of the analytical model, Eq. 1–11.
+//!
+//! Latency goes through the featurization (`L = f · θ`) so the Rust path
+//! and the AOT JAX path are the same function by construction; bandwidth
+//! applies Eq. 9–11 on top.
+
+use crate::atomics::{OpKind, Width};
+use crate::model::features::{dot, featurize};
+use crate::model::params::Theta;
+use crate::model::query::Query;
+use crate::sim::cache::LINE_SIZE;
+use crate::sim::config::{MachineConfig, WritePolicy};
+
+/// Eq. 1: L(A, S) = R_O(S) + E(A) + O. The O residual is taken from the
+/// architecture's overhead table (Table 3) when `with_overheads`.
+pub fn latency(cfg: &MachineConfig, q: &Query, theta: &Theta, with_overheads: bool) -> f64 {
+    let base = dot(&featurize(cfg, q), &theta.to_vec());
+    if !with_overheads {
+        return base;
+    }
+    use crate::sim::timing::{LocalityClass, StateClass};
+    use crate::sim::protocol::CohState;
+    let state = match q.state {
+        crate::model::query::ModelState::E => CohState::E,
+        crate::model::query::ModelState::M => CohState::M,
+        crate::model::query::ModelState::S => CohState::S,
+        crate::model::query::ModelState::O => CohState::O,
+    };
+    base + cfg.overheads.lookup(
+        q.op,
+        StateClass::of(state),
+        q.loc.level,
+        LocalityClass::of(q.loc.distance),
+    )
+}
+
+/// Eq. 9: every atomic touches a distinct line — B = C_size / L.
+pub fn bandwidth_distinct_lines(cfg: &MachineConfig, q: &Query, theta: &Theta) -> f64 {
+    let l = latency(cfg, q, theta, true);
+    LINE_SIZE as f64 / l // bytes per ns == GB/s
+}
+
+/// Eq. 10 (Intel) / Eq. 11 (AMD write-through L1): sequential sweep where a
+/// line is hit N = C_size/O_size times; only the first access pays L, the
+/// rest pay the local hit + execute.
+pub fn bandwidth(cfg: &MachineConfig, q: &Query, theta: &Theta, operand: Width) -> f64 {
+    let l = latency(cfg, q, theta, true);
+    let n = (LINE_SIZE / operand.bytes()) as f64;
+    let hit = match cfg.l1.write_policy {
+        WritePolicy::WriteBack => theta.r_l1,
+        WritePolicy::WriteThrough => theta.r_l2, // Eq. 11
+    };
+    let e = theta.exec(q.op);
+    n * operand.bytes() as f64 / (l + (n - 1.0) * (hit + e))
+}
+
+/// Predicted latency with Table-2 seed parameters — convenience used by the
+/// figure reports.
+pub fn predict_latency(cfg: &MachineConfig, q: &Query) -> f64 {
+    latency(cfg, q, &Theta::from_config(cfg), true)
+}
+
+/// Predicted Eq.-10 bandwidth with Table-2 seed parameters.
+pub fn predict_bandwidth(cfg: &MachineConfig, q: &Query, operand: Width) -> f64 {
+    bandwidth(cfg, q, &Theta::from_config(cfg), operand)
+}
+
+/// The consensus-number comparison the paper highlights: predicted latency
+/// difference between CAS (CN = ∞) and FAA (CN = 2) for the same query —
+/// only E(A) differs (§5.1.4's "comparable latency" claim).
+pub fn consensus_latency_gap(cfg: &MachineConfig, q: &Query) -> f64 {
+    let theta = Theta::from_config(cfg);
+    let mut qc = *q;
+    qc.op = OpKind::Cas;
+    let mut qf = *q;
+    qf.op = OpKind::Faa;
+    latency(cfg, &qc, &theta, false) - latency(cfg, &qf, &theta, false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+    use crate::model::query::ModelState;
+    use crate::sim::timing::Level;
+    use crate::sim::topology::Distance;
+
+    #[test]
+    fn eq9_distinct_lines() {
+        let cfg = arch::haswell();
+        let q = Query::new(OpKind::Faa, ModelState::M, Level::L1, Distance::Local);
+        let theta = Theta::from_config(&cfg);
+        let b = bandwidth_distinct_lines(&cfg, &q, &theta);
+        let l = latency(&cfg, &q, &theta, true);
+        assert!((b - 64.0 / l).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eq10_below_eq9() {
+        // Eq. 9 moves a whole line per op at cost L; Eq. 10 spends 8 ops
+        // (first at L, the rest at the hit+execute cost) on the same line,
+        // so the sequential-sweep bandwidth is necessarily lower — the
+        // execute stage, not the fetch, bounds atomics bandwidth.
+        let cfg = arch::haswell();
+        let q = Query::new(OpKind::Faa, ModelState::M, Level::L3, Distance::Local);
+        let theta = Theta::from_config(&cfg);
+        let seq = bandwidth(&cfg, &q, &theta, Width::W64);
+        let distinct = bandwidth_distinct_lines(&cfg, &q, &theta);
+        assert!(seq < distinct, "{seq} vs {distinct}");
+        // but the deeper the level, the closer they get (L dominates)
+        let qm = Query::new(OpKind::Faa, ModelState::M, Level::Memory, Distance::Local);
+        let ratio_l3 = seq / distinct;
+        let ratio_mem = bandwidth(&cfg, &qm, &theta, Width::W64)
+            / bandwidth_distinct_lines(&cfg, &qm, &theta);
+        assert!(ratio_mem > ratio_l3, "{ratio_mem} vs {ratio_l3}");
+    }
+
+    #[test]
+    fn eq11_amd_uses_l2_hit() {
+        let amd = arch::bulldozer();
+        let q = Query::new(OpKind::Faa, ModelState::M, Level::L2, Distance::Local);
+        let theta = Theta::from_config(&amd);
+        let b = bandwidth(&amd, &q, &theta, Width::W64);
+        // hand: L = 8.8 + 25 (+O: local L2 exclusive-like atomic = 8) = 41.8
+        let l = latency(&amd, &q, &theta, true);
+        let expect = 8.0 * 8.0 / (l + 7.0 * (8.8 + 25.0));
+        assert!((b - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn consensus_gap_is_just_exec_difference() {
+        let cfg = arch::haswell();
+        let q = Query::new(OpKind::Cas, ModelState::E, Level::L2, Distance::SameDie);
+        let gap = consensus_latency_gap(&cfg, &q);
+        assert!((gap - (4.7 - 5.6)).abs() < 1e-9, "{gap}");
+    }
+
+    #[test]
+    fn overheads_shift_latency() {
+        let cfg = arch::haswell();
+        let q = Query::new(OpKind::Faa, ModelState::E, Level::L2, Distance::Local);
+        let theta = Theta::from_config(&cfg);
+        let without = latency(&cfg, &q, &theta, false);
+        let with = latency(&cfg, &q, &theta, true);
+        assert!((with - without - 3.8).abs() < 1e-9, "Table 3 L2/local/E = 3.8");
+    }
+
+    #[test]
+    fn operand_size_halves_hits() {
+        let cfg = arch::haswell();
+        let q = Query::new(OpKind::Faa, ModelState::M, Level::L1, Distance::Local);
+        let theta = Theta::from_config(&cfg);
+        let b64 = bandwidth(&cfg, &q, &theta, Width::W64);
+        let b128 = bandwidth(&cfg, &q, &theta, Width::W128);
+        // fewer, larger operands per line: higher bytes/ns per op ⇒ ≥
+        assert!(b128 > b64, "{b128} vs {b64}");
+    }
+}

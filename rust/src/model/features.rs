@@ -1,0 +1,375 @@
+//! Featurization: the analytical latency model (Eq. 1–8) is linear in the
+//! parameter vector θ once the query (state, location, sharer geometry) is
+//! fixed, so every query maps to a coefficient vector `f` with
+//! `L(query) = f · θ`. The JAX/Pallas layer evaluates and fits exactly this
+//! linear form in batch; the Rust analytical module (Eq. 1–11) and this
+//! featurization must always agree — a property the tests pin down.
+
+use crate::atomics::OpKind;
+use crate::model::params::THETA_DIM;
+use crate::model::query::{ModelState, Query};
+use crate::sim::config::{L3Policy, MachineConfig, WritePolicy};
+use crate::sim::timing::Level;
+use crate::sim::topology::Distance;
+
+pub const FEATURE_DIM: usize = THETA_DIM;
+
+// θ indices.
+const R_L1: usize = 0;
+const R_L2: usize = 1;
+const R_L3: usize = 2;
+const HOP: usize = 3;
+const MEM: usize = 4;
+const E_CAS: usize = 5;
+const E_FAA: usize = 6;
+const E_SWP: usize = 7;
+
+/// Coefficients of a plain read R(E/M) of a line at `loc` (Eq. 3–6).
+fn read_features(cfg: &MachineConfig, level: Level, distance: Distance, f: &mut [f64]) {
+    let has_l3 = cfg.has_l3();
+    match distance {
+        Distance::Local => match level {
+            Level::L1 => f[R_L1] += 1.0,
+            Level::L2 => f[R_L2] += 1.0,
+            Level::L3 => f[R_L3] += 1.0,
+            Level::Memory => {
+                // last-level miss probe + memory
+                if has_l3 {
+                    f[R_L3] += 1.0
+                } else {
+                    f[R_L2] += 1.0
+                }
+                f[MEM] += 1.0;
+            }
+        },
+        Distance::SharedL2 => {
+            // Eq. 5: R_{L2,l} + (R_{L2,l} - R_{L1,l})
+            f[R_L2] += 2.0;
+            f[R_L1] -= 1.0;
+        }
+        Distance::SameDie => {
+            if level == Level::Memory {
+                if has_l3 {
+                    f[R_L3] += 1.0
+                } else {
+                    f[R_L2] += 1.0
+                }
+                f[MEM] += 1.0;
+            } else if has_l3 {
+                // Eq. 4: R_{L3,l} + (R_{L3,l} - R_{L1,l})
+                f[R_L3] += 2.0;
+                f[R_L1] -= 1.0;
+            } else {
+                // Eq. 6 (Phi): R_{L2,l} + (R_{L2,l} - R_{L1,l}) + H
+                f[R_L2] += 2.0;
+                f[R_L1] -= 1.0;
+                f[HOP] += 1.0;
+            }
+        }
+        Distance::SameSocket | Distance::OtherSocket => {
+            // §4.1.3: same-die expression + one hop
+            if level == Level::Memory {
+                if has_l3 {
+                    f[R_L3] += 1.0
+                } else {
+                    f[R_L2] += 1.0
+                }
+                f[MEM] += 1.0;
+                f[HOP] += 1.0;
+            } else if has_l3 {
+                f[R_L3] += 2.0;
+                f[R_L1] -= 1.0;
+                f[HOP] += 1.0;
+            } else {
+                f[R_L2] += 2.0;
+                f[R_L1] -= 1.0;
+                f[HOP] += 2.0;
+            }
+        }
+    }
+}
+
+/// Coefficients of one invalidation R_i(E) at distance `d` (Eq. 8 treats an
+/// invalidation like reaching the sharer's E line).
+fn invalidate_features(cfg: &MachineConfig, d: Distance, f: &mut [f64]) {
+    match d {
+        Distance::Local => {}
+        Distance::SharedL2 => {
+            f[R_L2] += 2.0;
+            f[R_L1] -= 1.0;
+        }
+        Distance::SameDie => {
+            if cfg.has_l3() {
+                f[R_L3] += 2.0;
+                f[R_L1] -= 1.0;
+            } else {
+                f[R_L2] += 2.0;
+                f[R_L1] -= 1.0;
+                f[HOP] += 1.0;
+            }
+        }
+        Distance::SameSocket | Distance::OtherSocket => {
+            if cfg.has_l3() {
+                f[R_L3] += 2.0;
+                f[R_L1] -= 1.0;
+            } else {
+                f[R_L2] += 2.0;
+                f[R_L1] -= 1.0;
+                f[HOP] += 1.0;
+            }
+            f[HOP] += 1.0;
+        }
+    }
+}
+
+/// Full latency feature vector for `q` on `cfg`: `L(q) = featurize(q) · θ`.
+pub fn featurize(cfg: &MachineConfig, q: &Query) -> [f64; FEATURE_DIM] {
+    let mut f = [0.0; FEATURE_DIM];
+
+    // E/M: R_O = R (Eq. 2). AMD write-through L1 promotes local-L1 RMW
+    // to the L2 (Eq. 11's substitution).
+    let mut level = q.loc.level;
+    if q.op != OpKind::Read
+        && cfg.l1.write_policy == WritePolicy::WriteThrough
+        && level == Level::L1
+        && q.loc.distance == Distance::Local
+    {
+        level = Level::L2;
+    }
+
+    match q.state {
+        ModelState::E | ModelState::M => {
+            // §5.1.1: M lines evicted from private caches are written back
+            // *precisely* (core-valid bits cleared), so an M line resident
+            // in a remote L3 is a direct L3 hit — no snoop of the previous
+            // owner. E lines are evicted silently and always pay the snoop.
+            if q.state == ModelState::M
+                && level == Level::L3
+                && q.loc.distance != Distance::Local
+                && cfg.has_l3()
+            {
+                f[R_L3] += 1.0;
+                f[HOP] += q.loc.distance.hops() as f64;
+            } else {
+                read_features(cfg, level, q.loc.distance, &mut f);
+            }
+            // §4.1.3: Intel writes dirty remote lines back to memory on
+            // off-die reads (MOESI's O state avoids this on AMD).
+            if q.state == ModelState::M
+                && q.loc.distance.hops() > 0
+                && !cfg.protocol.has_owned()
+            {
+                f[MEM] += 1.0;
+            }
+        }
+        ModelState::S | ModelState::O => {
+            // Eq. 8: R(E) of the line + max_i R_i(E) of the sharers.
+            // Refinement over the paper's E-read approximation: clean
+            // shared data needs no snoop, so an *inclusive* L3 (Intel)
+            // answers shared-line requests at every buffer size; Bulldozer's
+            // non-inclusive L3 only answers once the line was victimized
+            // into it, and Phi sources shared lines cache-to-cache over the
+            // ring (Eq. 6) or from memory.
+            let inclusive =
+                cfg.has_l3() && matches!(cfg.l3_policy, L3Policy::InclusiveCoreValid);
+            let local_private = q.loc.distance == Distance::Local
+                && matches!(level, Level::L1 | Level::L2);
+            if local_private {
+                read_features(cfg, level, Distance::Local, &mut f);
+            } else if level == Level::Memory {
+                if cfg.has_l3() {
+                    f[R_L3] += 1.0
+                } else {
+                    f[R_L2] += 1.0
+                }
+                f[MEM] += 1.0;
+                f[HOP] += q.loc.distance.hops() as f64;
+            } else if inclusive || level == Level::L3 {
+                f[R_L3] += 1.0;
+                f[HOP] += q.loc.distance.hops() as f64;
+            } else {
+                // non-inclusive/L3-less, line still in a sharer's private
+                // cache: cache-to-cache supply
+                read_features(cfg, level, q.loc.distance, &mut f);
+            }
+            if q.op != OpKind::Read {
+                let d = q.invalidate_distance.unwrap_or(q.loc.distance);
+                invalidate_features(cfg, d, &mut f);
+            }
+        }
+    }
+
+    // E(A) (Eq. 1).
+    match q.op {
+        OpKind::Cas => f[E_CAS] += 1.0,
+        OpKind::Faa => f[E_FAA] += 1.0,
+        OpKind::Swp => f[E_SWP] += 1.0,
+        _ => {}
+    }
+    f
+}
+
+/// Dot product helper.
+pub fn dot(f: &[f64; FEATURE_DIM], theta: &[f64; THETA_DIM]) -> f64 {
+    f.iter().zip(theta).map(|(a, b)| a * b).sum()
+}
+
+/// Resident-fraction weights of a pointer-chased buffer of `size` bytes
+/// over the owner's hierarchy levels: a buffer larger than a level spills
+/// its tail to the next one, so the *measured* mean latency blends levels.
+/// Returns (level, weight) pairs with weights summing to 1.
+pub fn level_weights(cfg: &MachineConfig, size: usize) -> Vec<(Level, f64)> {
+    // A random-order chase over a buffer larger than a level keeps far less
+    // than C/B of it resident: every miss fill displaces a resident line,
+    // so the survival fraction decays super-linearly. (C/B)^2.2 matches the
+    // simulator's measured transition curves within a few percent across
+    // all four hierarchies.
+    const P: f64 = 2.2;
+    let b = size.max(1) as f64;
+    let frac = |c: f64| -> f64 {
+        if b <= c {
+            1.0
+        } else {
+            (c / b).powf(P)
+        }
+    };
+    let h1 = frac(cfg.l1.size as f64);
+    let h2 = frac(cfg.l2.size as f64).max(h1);
+    let h3 = cfg
+        .effective_l3_bytes()
+        .map(|c3| frac(c3 as f64).max(h2));
+    let mut out = vec![(Level::L1, h1)];
+    out.push((Level::L2, h2 - h1));
+    match h3 {
+        Some(h3) => {
+            out.push((Level::L3, h3 - h2));
+            out.push((Level::Memory, 1.0 - h3));
+        }
+        None => out.push((Level::Memory, 1.0 - h2)),
+    }
+    out.retain(|(_, w)| *w > 0.0);
+    out
+}
+
+/// Blended feature vector for a buffer of `size` bytes: the weighted mix of
+/// the per-level feature vectors (still linear in θ). `q.loc.level` is
+/// ignored; the dominant level is returned for residual-table lookups.
+pub fn featurize_sized(
+    cfg: &MachineConfig,
+    q: &Query,
+    size: usize,
+) -> ([f64; FEATURE_DIM], Level) {
+    let weights = level_weights(cfg, size);
+    let mut f = [0.0; FEATURE_DIM];
+    let mut dominant = (Level::L1, 0.0);
+    for (level, w) in weights {
+        let mut ql = *q;
+        ql.loc.level = level;
+        let fl = featurize(cfg, &ql);
+        for i in 0..FEATURE_DIM {
+            f[i] += w * fl[i];
+        }
+        if w > dominant.1 {
+            dominant = (level, w);
+        }
+    }
+    (f, dominant.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+    use crate::model::params::Theta;
+
+    #[test]
+    fn local_l1_read_is_r_l1() {
+        let cfg = arch::haswell();
+        let q = Query::new(OpKind::Read, ModelState::E, Level::L1, Distance::Local);
+        let f = featurize(&cfg, &q);
+        let l = dot(&f, &Theta::from_config(&cfg).to_vec());
+        assert!((l - 1.17).abs() < 1e-9, "{l}");
+    }
+
+    #[test]
+    fn local_l1_cas_adds_exec() {
+        let cfg = arch::haswell();
+        let q = Query::new(OpKind::Cas, ModelState::M, Level::L1, Distance::Local);
+        let l = dot(&featurize(&cfg, &q), &Theta::from_config(&cfg).to_vec());
+        assert!((l - (1.17 + 4.7)).abs() < 1e-9, "{l}");
+    }
+
+    #[test]
+    fn eq4_on_chip_transfer() {
+        let cfg = arch::haswell();
+        let q = Query::new(OpKind::Read, ModelState::E, Level::L2, Distance::SameDie);
+        let l = dot(&featurize(&cfg, &q), &Theta::from_config(&cfg).to_vec());
+        // 2*10.3 - 1.17
+        assert!((l - 19.43).abs() < 1e-9, "{l}");
+    }
+
+    #[test]
+    fn eq6_phi_remote() {
+        let cfg = arch::xeonphi();
+        let q = Query::new(OpKind::Read, ModelState::E, Level::L2, Distance::SameDie);
+        let l = dot(&featurize(&cfg, &q), &Theta::from_config(&cfg).to_vec());
+        // 2*19.4 - 2.4 + 161.2
+        assert!((l - (38.8 - 2.4 + 161.2)).abs() < 1e-9, "{l}");
+    }
+
+    #[test]
+    fn amd_write_through_promotes_local_l1_atomics() {
+        let cfg = arch::bulldozer();
+        let read = Query::new(OpKind::Read, ModelState::M, Level::L1, Distance::Local);
+        let faa = Query::new(OpKind::Faa, ModelState::M, Level::L1, Distance::Local);
+        let theta = Theta::from_config(&cfg).to_vec();
+        let lr = dot(&featurize(&cfg, &read), &theta);
+        let lf = dot(&featurize(&cfg, &faa), &theta);
+        assert!((lr - 5.2).abs() < 1e-9);
+        // atomic hits L2 (8.8) + E(FAA)=25
+        assert!((lf - 33.8).abs() < 1e-9, "{lf}");
+    }
+
+    #[test]
+    fn intel_remote_m_pays_writeback_but_skips_snoop() {
+        let cfg = arch::ivybridge();
+        let theta = Theta::from_config(&cfg).to_vec();
+        let e = Query::new(OpKind::Read, ModelState::E, Level::L3, Distance::OtherSocket);
+        let m = Query::new(OpKind::Read, ModelState::M, Level::L3, Distance::OtherSocket);
+        // E: snoop path 2*R_L3 - R_L1 + H; M: direct L3 + H + M writeback
+        let le = dot(&featurize(&cfg, &e), &theta);
+        let lm = dot(&featurize(&cfg, &m), &theta);
+        assert!((le - (2.0 * 14.5 - 1.8 + 66.0)).abs() < 1e-9, "{le}");
+        assert!((lm - (14.5 + 66.0 + 80.0)).abs() < 1e-9, "{lm}");
+    }
+
+    #[test]
+    fn m_in_private_cache_still_snoops() {
+        // the precise write-back only applies when the line has left the
+        // owner's private caches (level == L3)
+        let cfg = arch::ivybridge();
+        let theta = Theta::from_config(&cfg).to_vec();
+        let m_l2 = Query::new(OpKind::Read, ModelState::M, Level::L2, Distance::SameDie);
+        let l = dot(&featurize(&cfg, &m_l2), &theta);
+        assert!((l - (2.0 * 14.5 - 1.8)).abs() < 1e-9, "{l}");
+    }
+
+    #[test]
+    fn shared_rmw_adds_invalidation_but_read_does_not() {
+        let cfg = arch::haswell();
+        let theta = Theta::from_config(&cfg).to_vec();
+        let rd = Query::new(OpKind::Read, ModelState::S, Level::L3, Distance::SameDie);
+        let at = Query::new(OpKind::Faa, ModelState::S, Level::L3, Distance::SameDie);
+        let lrd = dot(&featurize(&cfg, &rd), &theta);
+        let lat = dot(&featurize(&cfg, &at), &theta);
+        assert!(lat > lrd + 10.0, "invalidation term missing: {lat} vs {lrd}");
+    }
+
+    #[test]
+    fn memory_access_has_probe_plus_mem() {
+        let cfg = arch::haswell();
+        let q = Query::new(OpKind::Read, ModelState::E, Level::Memory, Distance::Local);
+        let l = dot(&featurize(&cfg, &q), &Theta::from_config(&cfg).to_vec());
+        assert!((l - 75.3).abs() < 1e-9, "{l}");
+    }
+}

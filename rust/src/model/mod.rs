@@ -1,0 +1,21 @@
+//! The paper's analytical performance model (§4).
+//!
+//! * [`query`] — the model's input space: (operation, coherency state, line
+//!   location, locality, sharer geometry).
+//! * [`analytical`] — Eq. 1–11 evaluated directly in Rust.
+//! * [`features`] — the same model expressed as a linear feature vector over
+//!   the parameter vector θ (Table 2), consumed by the JAX/Pallas layer for
+//!   batched prediction and gradient-based fitting.
+//! * [`params`] — the θ parameter vector: packing/unpacking + Table 2 seeds.
+//! * [`nrmse`] — Eq. 12 validation helpers.
+
+pub mod analytical;
+pub mod features;
+pub mod nrmse;
+pub mod params;
+pub mod query;
+
+pub use analytical::{bandwidth, latency};
+pub use features::{featurize, FEATURE_DIM};
+pub use params::Theta;
+pub use query::{LineLoc, ModelState, Query};

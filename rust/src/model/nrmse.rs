@@ -1,0 +1,48 @@
+//! Model validation via NRMSE (Eq. 12), with the paper's 10% reporting
+//! threshold (§5: "we discuss each case where the differences between the
+//! model and the data exceed 10% of the normalized root mean square error").
+
+pub use crate::util::stats::nrmse;
+
+/// The paper's significance threshold.
+pub const THRESHOLD: f64 = 0.10;
+
+/// A named validation result for one benchmark series.
+#[derive(Debug, Clone)]
+pub struct Validation {
+    pub series: String,
+    pub nrmse: f64,
+    pub n: usize,
+}
+
+impl Validation {
+    pub fn of(series: impl Into<String>, predicted: &[f64], observed: &[f64]) -> Validation {
+        Validation {
+            series: series.into(),
+            nrmse: nrmse(predicted, observed),
+            n: observed.len(),
+        }
+    }
+
+    /// Does this series need discussion per the paper's criterion?
+    pub fn exceeds_threshold(&self) -> bool {
+        self.nrmse > THRESHOLD
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn within_threshold() {
+        let v = Validation::of("s", &[10.0, 20.0], &[10.5, 19.5]);
+        assert!(!v.exceeds_threshold());
+    }
+
+    #[test]
+    fn exceeds_threshold() {
+        let v = Validation::of("s", &[10.0, 20.0], &[15.0, 28.0]);
+        assert!(v.exceeds_threshold());
+    }
+}

@@ -1,0 +1,106 @@
+//! The θ parameter vector of the analytical model — the quantities of
+//! Table 2 — with packing/unpacking for the JAX/Pallas fitting path.
+
+use crate::atomics::OpKind;
+use crate::sim::config::MachineConfig;
+
+/// Dimension of θ: `[r_l1, r_l2, r_l3, hop, mem, e_cas, e_faa, e_swp]`.
+pub const THETA_DIM: usize = 8;
+
+/// Named view of the model parameters (all ns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Theta {
+    pub r_l1: f64,
+    pub r_l2: f64,
+    pub r_l3: f64,
+    pub hop: f64,
+    pub mem: f64,
+    pub e_cas: f64,
+    pub e_faa: f64,
+    pub e_swp: f64,
+}
+
+impl Theta {
+    /// Seed θ from an architecture's configured timing (Table 2 values).
+    /// Missing parameters (no L3, no interconnect) become 0 — their feature
+    /// coefficients are also 0 for such architectures, so the fit is
+    /// unaffected.
+    pub fn from_config(cfg: &MachineConfig) -> Theta {
+        let t = cfg.timing;
+        let z = |x: f64| if x.is_nan() { 0.0 } else { x };
+        Theta {
+            r_l1: t.r_l1,
+            r_l2: t.r_l2,
+            r_l3: z(t.r_l3),
+            hop: z(t.hop),
+            mem: t.mem,
+            e_cas: t.e_cas,
+            e_faa: t.e_faa,
+            e_swp: t.e_swp,
+        }
+    }
+
+    pub fn to_vec(&self) -> [f64; THETA_DIM] {
+        [
+            self.r_l1, self.r_l2, self.r_l3, self.hop, self.mem, self.e_cas, self.e_faa,
+            self.e_swp,
+        ]
+    }
+
+    pub fn from_vec(v: &[f64]) -> Theta {
+        assert_eq!(v.len(), THETA_DIM);
+        Theta {
+            r_l1: v[0],
+            r_l2: v[1],
+            r_l3: v[2],
+            hop: v[3],
+            mem: v[4],
+            e_cas: v[5],
+            e_faa: v[6],
+            e_swp: v[7],
+        }
+    }
+
+    pub fn exec(&self, op: OpKind) -> f64 {
+        match op {
+            OpKind::Cas => self.e_cas,
+            OpKind::Faa => self.e_faa,
+            OpKind::Swp => self.e_swp,
+            _ => 0.0,
+        }
+    }
+
+    /// Parameter names, aligned with `to_vec` — used by Table 2 reporting.
+    pub const NAMES: [&'static str; THETA_DIM] = [
+        "R_L1,l", "R_L2,l", "R_L3,l", "H", "M", "E(CAS)", "E(FAA)", "E(SWP)",
+    ];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    #[test]
+    fn roundtrip() {
+        let t = Theta::from_config(&arch::haswell());
+        let v = t.to_vec();
+        assert_eq!(Theta::from_vec(&v), t);
+    }
+
+    #[test]
+    fn nan_becomes_zero() {
+        let t = Theta::from_config(&arch::xeonphi());
+        assert_eq!(t.r_l3, 0.0);
+        let h = Theta::from_config(&arch::haswell());
+        assert_eq!(h.hop, 0.0);
+    }
+
+    #[test]
+    fn exec_by_op() {
+        let t = Theta::from_config(&arch::xeonphi());
+        assert_eq!(t.exec(OpKind::Cas), 12.4);
+        assert_eq!(t.exec(OpKind::Faa), 2.4);
+        assert_eq!(t.exec(OpKind::Read), 0.0);
+    }
+}

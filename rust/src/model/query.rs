@@ -1,0 +1,95 @@
+//! Model input space: one `Query` describes a single benchmark point the
+//! model predicts (Eq. 1): which operation, in which coherency state the
+//! line is, where the line physically lives, and how far the furthest
+//! sharer is (for the max-invalidation term of Eq. 7/8).
+
+use crate::atomics::OpKind;
+use crate::sim::timing::Level;
+use crate::sim::topology::Distance;
+
+/// Coherency state of the accessed line, as prepared by the benchmark
+/// (the S ∈ {E, M, S, O} of Eq. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelState {
+    E,
+    M,
+    S,
+    O,
+}
+
+impl ModelState {
+    pub fn label(self) -> &'static str {
+        match self {
+            ModelState::E => "E",
+            ModelState::M => "M",
+            ModelState::S => "S",
+            ModelState::O => "O",
+        }
+    }
+
+    pub fn is_shared(self) -> bool {
+        matches!(self, ModelState::S | ModelState::O)
+    }
+
+    pub fn is_dirty(self) -> bool {
+        matches!(self, ModelState::M | ModelState::O)
+    }
+}
+
+/// Where the line physically lives relative to the requester.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LineLoc {
+    /// Cache level holding the line (or Memory).
+    pub level: Level,
+    /// Distance to the holder (Local / SharedL2 / SameDie / sockets).
+    pub distance: Distance,
+}
+
+/// One model evaluation point.
+#[derive(Debug, Clone, Copy)]
+pub struct Query {
+    pub op: OpKind,
+    pub state: ModelState,
+    pub loc: LineLoc,
+    /// Distance to the furthest sharer that must be invalidated
+    /// (None when the state is E/M — no invalidations, Eq. 2).
+    pub invalidate_distance: Option<Distance>,
+}
+
+impl Query {
+    pub fn new(op: OpKind, state: ModelState, level: Level, distance: Distance) -> Query {
+        let invalidate_distance = if state.is_shared() {
+            // default: the sharer is wherever the line is
+            Some(distance)
+        } else {
+            None
+        };
+        Query { op, state, loc: LineLoc { level, distance }, invalidate_distance }
+    }
+
+    pub fn with_invalidate(mut self, d: Distance) -> Query {
+        self.invalidate_distance = Some(d);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_states_get_default_invalidation() {
+        let q = Query::new(OpKind::Cas, ModelState::S, Level::L2, Distance::SameDie);
+        assert_eq!(q.invalidate_distance, Some(Distance::SameDie));
+        let q = Query::new(OpKind::Cas, ModelState::E, Level::L2, Distance::SameDie);
+        assert_eq!(q.invalidate_distance, None);
+    }
+
+    #[test]
+    fn state_properties() {
+        assert!(ModelState::S.is_shared());
+        assert!(ModelState::O.is_shared() && ModelState::O.is_dirty());
+        assert!(ModelState::M.is_dirty() && !ModelState::M.is_shared());
+        assert!(!ModelState::E.is_dirty());
+    }
+}

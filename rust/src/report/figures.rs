@@ -1,0 +1,536 @@
+//! Regeneration of every figure in the paper (2–15). Each function returns
+//! the rendered text (and writes `results/*.csv`); `figure(id)` dispatches.
+
+use crate::arch;
+use crate::atomics::OpKind;
+use crate::bench::contention::{paper_thread_counts, OPS_PER_THREAD};
+use crate::bench::latency::LatencyBench;
+use crate::bench::operand::{two_operand_cas, width_comparison};
+use crate::bench::placement::{PrepLocality, PrepState};
+use crate::bench::{bandwidth::BandwidthBench, Series};
+use crate::graph::{kronecker_edges, parallel_bfs, BfsMode, Csr};
+use crate::model::analytical::predict_latency;
+use crate::model::nrmse::Validation;
+use crate::model::query::Query;
+use crate::report::{render_series, sweep_sizes, write_series_csv};
+use crate::sim::event::run_contention;
+use crate::sim::MachineConfig;
+use crate::util::table::Table;
+use anyhow::{bail, Result};
+
+const LAT_OPS: [OpKind; 4] = [OpKind::Cas, OpKind::Faa, OpKind::Swp, OpKind::Read];
+
+/// A latency panel: all ops for one (state, locality), plus the model NRMSE.
+fn latency_panel(
+    cfg: &MachineConfig,
+    state: PrepState,
+    locality: PrepLocality,
+    ops: &[OpKind],
+) -> Option<(Vec<Series>, Validation)> {
+    let sizes = sweep_sizes();
+    let mut series = Vec::new();
+    for &op in ops {
+        series.push(LatencyBench::new(op, state, locality).sweep(cfg, &sizes)?);
+    }
+    // model validation on the atomic series (the model predicts atomics+reads)
+    let mut predicted = Vec::new();
+    let mut observed = Vec::new();
+    for s in &series {
+        let op = ops[series.iter().position(|x| std::ptr::eq(x, s)).unwrap()];
+        for p in &s.points {
+            let level = crate::coordinator::infer_level(cfg, p.buffer_bytes);
+            let q = Query::new(op, state.to_model(), level, locality.to_distance());
+            predicted.push(predict_latency(cfg, &q));
+            observed.push(p.value);
+        }
+    }
+    let v = Validation::of(
+        format!("{} {} {}", cfg.name, state.label(), locality.label()),
+        &predicted,
+        &observed,
+    );
+    Some((series, v))
+}
+
+fn panels_to_text(
+    figure: &str,
+    cfg: &MachineConfig,
+    panels: &[(PrepState, PrepLocality)],
+    ops: &[OpKind],
+) -> String {
+    let mut out = String::new();
+    let mut all = Vec::new();
+    for &(state, locality) in panels {
+        match latency_panel(cfg, state, locality, ops) {
+            Some((series, v)) => {
+                let title = format!(
+                    "{figure} — {} latency [ns], {} state, {}",
+                    cfg.name,
+                    state.label(),
+                    locality.label()
+                );
+                out.push_str(&render_series(&title, &series).render());
+                out.push_str(&format!(
+                    "model NRMSE = {:.1}%{}\n\n",
+                    v.nrmse * 100.0,
+                    if v.exceeds_threshold() { "  (>10% — discussed)" } else { "" }
+                ));
+                for s in series {
+                    all.push(s);
+                }
+            }
+            None => {
+                out.push_str(&format!(
+                    "({} state {} locality unavailable on {})\n",
+                    state.label(),
+                    locality.label(),
+                    cfg.name
+                ));
+            }
+        }
+    }
+    write_series_csv(&figure.to_lowercase().replace(' ', "_"), &all);
+    out
+}
+
+/// Fig. 2: latency of CAS/FAA/SWP/read on Haswell (local + on chip, E/M/S).
+pub fn figure2() -> String {
+    let cfg = arch::haswell();
+    panels_to_text(
+        "Figure 2",
+        &cfg,
+        &[
+            (PrepState::E, PrepLocality::OnChip),
+            (PrepState::M, PrepLocality::OnChip),
+            (PrepState::S, PrepLocality::OnChip),
+            (PrepState::E, PrepLocality::Local),
+            (PrepState::M, PrepLocality::Local),
+            (PrepState::S, PrepLocality::Local),
+        ],
+        &LAT_OPS,
+    )
+}
+
+/// Fig. 3: CAS latency (E state) on Ivy Bridge incl. the other socket,
+/// and the FAA/SWP comparison.
+pub fn figure3() -> String {
+    let cfg = arch::ivybridge();
+    panels_to_text(
+        "Figure 3",
+        &cfg,
+        &[
+            (PrepState::E, PrepLocality::Local),
+            (PrepState::E, PrepLocality::OnChip),
+            (PrepState::E, PrepLocality::OtherSocket),
+            (PrepState::M, PrepLocality::OtherSocket),
+        ],
+        &LAT_OPS,
+    )
+}
+
+/// Fig. 4: latency on Bulldozer (local / shared L2 / on chip / other socket).
+pub fn figure4() -> String {
+    let cfg = arch::bulldozer();
+    panels_to_text(
+        "Figure 4",
+        &cfg,
+        &[
+            (PrepState::M, PrepLocality::Local),
+            (PrepState::E, PrepLocality::Local),
+            (PrepState::E, PrepLocality::SharedL2),
+            (PrepState::E, PrepLocality::OnChip),
+            (PrepState::E, PrepLocality::OtherSocket),
+        ],
+        &LAT_OPS,
+    )
+}
+
+/// Fig. 5: bandwidth of CAS/FAA/writes on Haswell (M state).
+pub fn figure5() -> String {
+    bandwidth_figure("Figure 5", &arch::haswell(), &[PrepState::M], &[OpKind::Cas, OpKind::Faa, OpKind::Write])
+}
+
+fn bandwidth_figure(
+    figure: &str,
+    cfg: &MachineConfig,
+    states: &[PrepState],
+    ops: &[OpKind],
+) -> String {
+    let sizes = sweep_sizes();
+    let mut out = String::new();
+    for &state in states {
+        for locality in [PrepLocality::Local, PrepLocality::OnChip] {
+            let mut series = Vec::new();
+            for &op in ops {
+                if let Some(s) = BandwidthBench::new(op, state, locality).sweep(cfg, &sizes) {
+                    series.push(s);
+                }
+            }
+            if series.is_empty() {
+                continue;
+            }
+            let title = format!(
+                "{figure} — {} bandwidth [GB/s], {} state, {}",
+                cfg.name,
+                state.label(),
+                locality.label()
+            );
+            out.push_str(&render_series(&title, &series).render());
+            out.push('\n');
+            write_series_csv(
+                &format!(
+                    "{}_{}_{}",
+                    figure.to_lowercase().replace(' ', "_"),
+                    state.label(),
+                    locality.label().replace(' ', "_")
+                ),
+                &series,
+            );
+        }
+    }
+    out
+}
+
+/// Fig. 6: CAS latency on Xeon Phi (local + on chip, E/M/S).
+pub fn figure6() -> String {
+    let cfg = arch::xeonphi();
+    panels_to_text(
+        "Figure 6",
+        &cfg,
+        &[
+            (PrepState::E, PrepLocality::Local),
+            (PrepState::M, PrepLocality::Local),
+            (PrepState::S, PrepLocality::Local),
+            (PrepState::E, PrepLocality::OnChip),
+            (PrepState::M, PrepLocality::OnChip),
+            (PrepState::S, PrepLocality::OnChip),
+        ],
+        &[OpKind::Cas],
+    )
+}
+
+/// Fig. 7: CAS with 64- vs 128-bit operands (Bulldozer, M state).
+pub fn figure7() -> String {
+    let cfg = arch::bulldozer();
+    let sizes = sweep_sizes();
+    let mut out = String::new();
+    for locality in [PrepLocality::Local, PrepLocality::SharedL2, PrepLocality::OnChip, PrepLocality::OtherSocket]
+    {
+        if let Some((s64, s128)) = width_comparison(&cfg, PrepState::M, locality, &sizes) {
+            let title = format!("Figure 7 — Bulldozer CAS operand width [ns], {}", locality.label());
+            out.push_str(&render_series(&title, &[s64.clone(), s128.clone()]).render());
+            out.push('\n');
+            write_series_csv(
+                &format!("figure7_{}", locality.label().replace(' ', "_")),
+                &[s64, s128],
+            );
+        }
+    }
+    out
+}
+
+/// Fig. 8a–c: contended bandwidth on Ivy Bridge / Bulldozer / Xeon Phi.
+pub fn figure8() -> String {
+    let mut out = String::new();
+    for cfg in [arch::ivybridge(), arch::bulldozer(), arch::xeonphi()] {
+        let counts = paper_thread_counts(&cfg);
+        let mut t = Table::new(
+            format!("Figure 8 — {} contended bandwidth [GB/s] vs threads", cfg.name),
+            &["threads", "CAS", "FAA", "write"],
+        );
+        let mut csv = crate::util::csv::Csv::new(&["threads", "cas_gbs", "faa_gbs", "write_gbs"]);
+        for &n in &counts {
+            let cas = run_contention(&cfg, n, OpKind::Cas, OPS_PER_THREAD).bandwidth_gbs;
+            let faa = run_contention(&cfg, n, OpKind::Faa, OPS_PER_THREAD).bandwidth_gbs;
+            let wr = run_contention(&cfg, n, OpKind::Write, OPS_PER_THREAD).bandwidth_gbs;
+            t.row(&[
+                n.to_string(),
+                format!("{cas:.3}"),
+                format!("{faa:.3}"),
+                format!("{wr:.3}"),
+            ]);
+            csv.row(&[n.to_string(), cas.to_string(), faa.to_string(), wr.to_string()]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+        let _ = csv.write(format!(
+            "{}/figure8_{}.csv",
+            crate::report::results_dir(),
+            cfg.name.to_lowercase().replace(' ', "_")
+        ));
+    }
+    out
+}
+
+/// Fig. 8d: CAS fetching two operands (Bulldozer, E state).
+pub fn figure8d() -> String {
+    let cfg = arch::bulldozer();
+    let sizes = sweep_sizes();
+    let mut out = String::new();
+    for (state, label) in [(PrepState::E, "E"), (PrepState::M, "M")] {
+        let mut series = Vec::new();
+        if let Some(s) = two_operand_cas(&cfg, state, PrepLocality::OnChip, &sizes) {
+            series.push(s);
+        }
+        let mut one = LatencyBench::new(OpKind::Cas, state, PrepLocality::OnChip);
+        one.cas_succeeds = false;
+        if let Some(s) = one.sweep(&cfg, &sizes) {
+            let mut s = s;
+            s.name = format!("CAS 1-operand {} on chip", label);
+            series.push(s);
+        }
+        out.push_str(
+            &render_series(
+                &format!("Figure 8d — Bulldozer 2-operand CAS [ns], {label} state"),
+                &series,
+            )
+            .render(),
+        );
+        out.push('\n');
+        write_series_csv(&format!("figure8d_{label}"), &series);
+    }
+    out
+}
+
+/// Fig. 9: prefetchers and frequency mechanisms vs FAA bandwidth (Haswell).
+pub fn figure9() -> String {
+    let cfg = arch::haswell();
+    let sizes = sweep_sizes();
+    let series = crate::bench::mechanisms::figure9(&cfg, &sizes);
+    write_series_csv("figure9", &series);
+    render_series("Figure 9 — Haswell FAA bandwidth [GB/s] under mechanisms (M state, local)", &series)
+        .render()
+}
+
+/// Fig. 10a: unaligned CAS latency (Haswell, M state).
+pub fn figure10a() -> String {
+    let cfg = arch::haswell();
+    let sizes = sweep_sizes();
+    let mut out = String::new();
+    for locality in [PrepLocality::Local, PrepLocality::OnChip] {
+        if let Some((a, u)) =
+            crate::bench::unaligned::sweep(&cfg, OpKind::Cas, PrepState::M, locality, &sizes)
+        {
+            out.push_str(
+                &render_series(
+                    &format!("Figure 10a — Haswell unaligned CAS [ns], {}", locality.label()),
+                    &[a.clone(), u.clone()],
+                )
+                .render(),
+            );
+            out.push('\n');
+            write_series_csv(
+                &format!("figure10a_{}", locality.label().replace(' ', "_")),
+                &[a, u],
+            );
+        }
+    }
+    out
+}
+
+/// Fig. 10b: BFS CAS vs SWP (MTEPS) over Kronecker scales.
+pub fn figure10b() -> String {
+    let scales: Vec<u32> = if crate::report::fast_mode() {
+        vec![10, 12]
+    } else {
+        vec![10, 12, 14, 16]
+    };
+    let mut t = Table::new(
+        "Figure 10b — BFS on Kronecker graphs, 4 threads (Haswell): MTEPS by claim protocol",
+        &["scale", "vertices", "edges", "CAS MTEPS", "SWP MTEPS", "SWP/CAS"],
+    );
+    let mut csv = crate::util::csv::Csv::new(&["scale", "cas_mteps", "swp_mteps"]);
+    for &scale in &scales {
+        let csr = Csr::from_edges(1 << scale, &kronecker_edges(scale, 0xBF5 + scale as u64));
+        let root = csr.first_non_isolated().unwrap();
+        let mut mc = crate::sim::Machine::new(arch::haswell());
+        let c = parallel_bfs(&mut mc, &csr, root, 4, BfsMode::Cas);
+        let mut ms = crate::sim::Machine::new(arch::haswell());
+        let s = parallel_bfs(&mut ms, &csr, root, 4, BfsMode::Swp);
+        t.row(&[
+            scale.to_string(),
+            (1u64 << scale).to_string(),
+            c.edges_scanned.to_string(),
+            format!("{:.1}", c.mteps),
+            format!("{:.1}", s.mteps),
+            format!("{:.3}", s.mteps / c.mteps),
+        ]);
+        csv.row(&[scale.to_string(), c.mteps.to_string(), s.mteps.to_string()]);
+    }
+    let _ = csv.write(format!("{}/figure10b.csv", crate::report::results_dir()));
+    t.render()
+}
+
+/// Fig. 11 (appendix): CAS/FAA/read on Xeon Phi, full state grid.
+pub fn figure11() -> String {
+    let cfg = arch::xeonphi();
+    panels_to_text(
+        "Figure 11",
+        &cfg,
+        &[
+            (PrepState::E, PrepLocality::Local),
+            (PrepState::M, PrepLocality::Local),
+            (PrepState::S, PrepLocality::Local),
+            (PrepState::O, PrepLocality::Local),
+            (PrepState::E, PrepLocality::OnChip),
+            (PrepState::M, PrepLocality::OnChip),
+            (PrepState::S, PrepLocality::OnChip),
+            (PrepState::O, PrepLocality::OnChip),
+        ],
+        &[OpKind::Cas, OpKind::Faa, OpKind::Read],
+    )
+}
+
+/// Fig. 12 (appendix): Ivy Bridge full grid.
+pub fn figure12() -> String {
+    let cfg = arch::ivybridge();
+    panels_to_text(
+        "Figure 12",
+        &cfg,
+        &[
+            (PrepState::E, PrepLocality::Local),
+            (PrepState::M, PrepLocality::Local),
+            (PrepState::S, PrepLocality::Local),
+            (PrepState::E, PrepLocality::OnChip),
+            (PrepState::M, PrepLocality::OnChip),
+            (PrepState::S, PrepLocality::OnChip),
+            (PrepState::E, PrepLocality::OtherSocket),
+            (PrepState::M, PrepLocality::OtherSocket),
+            (PrepState::S, PrepLocality::OtherSocket),
+        ],
+        &LAT_OPS,
+    )
+}
+
+/// Fig. 13 (appendix): Bulldozer full grid incl. the O state.
+pub fn figure13() -> String {
+    let cfg = arch::bulldozer();
+    panels_to_text(
+        "Figure 13",
+        &cfg,
+        &[
+            (PrepState::E, PrepLocality::Local),
+            (PrepState::M, PrepLocality::Local),
+            (PrepState::S, PrepLocality::Local),
+            (PrepState::O, PrepLocality::Local),
+            (PrepState::E, PrepLocality::SharedL2),
+            (PrepState::M, PrepLocality::SharedL2),
+            (PrepState::S, PrepLocality::SharedL2),
+            (PrepState::O, PrepLocality::SharedL2),
+            (PrepState::E, PrepLocality::OnChip),
+            (PrepState::O, PrepLocality::OnChip),
+            (PrepState::E, PrepLocality::OtherSocket),
+            (PrepState::O, PrepLocality::OtherSocket),
+        ],
+        &LAT_OPS,
+    )
+}
+
+/// Fig. 14 (appendix): unaligned CAS/FAA/read on Haswell.
+pub fn figure14() -> String {
+    let cfg = arch::haswell();
+    let sizes = sweep_sizes();
+    let mut out = String::new();
+    for op in [OpKind::Cas, OpKind::Faa, OpKind::Read] {
+        for locality in [PrepLocality::Local, PrepLocality::OnChip] {
+            if let Some((a, u)) =
+                crate::bench::unaligned::sweep(&cfg, op, PrepState::M, locality, &sizes)
+            {
+                out.push_str(
+                    &render_series(
+                        &format!(
+                            "Figure 14 — Haswell unaligned {} [ns], {}",
+                            op.label(),
+                            locality.label()
+                        ),
+                        &[a.clone(), u.clone()],
+                    )
+                    .render(),
+                );
+                out.push('\n');
+                write_series_csv(
+                    &format!("figure14_{}_{}", op.label(), locality.label().replace(' ', "_")),
+                    &[a, u],
+                );
+            }
+        }
+    }
+    out
+}
+
+/// Fig. 15 (appendix): bandwidth of CAS/FAA/SWP/writes on Haswell, E/M/S.
+pub fn figure15() -> String {
+    bandwidth_figure(
+        "Figure 15",
+        &arch::haswell(),
+        &[PrepState::E, PrepState::M, PrepState::S],
+        &[OpKind::Cas, OpKind::Faa, OpKind::Swp, OpKind::Write],
+    )
+}
+
+/// Dispatch by figure id.
+pub fn figure(id: &str) -> Result<String> {
+    Ok(match id {
+        "2" => figure2(),
+        "3" => figure3(),
+        "4" => figure4(),
+        "5" => figure5(),
+        "6" => figure6(),
+        "7" => figure7(),
+        "8" => figure8(),
+        "8d" => figure8d(),
+        "9" => figure9(),
+        "10a" => figure10a(),
+        "10b" => figure10b(),
+        "11" => figure11(),
+        "12" => figure12(),
+        "13" => figure13(),
+        "14" => figure14(),
+        "15" => figure15(),
+        other => bail!("unknown figure '{other}' (valid: 2-9, 8d, 10a, 10b, 11-15)"),
+    })
+}
+
+/// All figure ids in paper order.
+pub const ALL_FIGURES: [&str; 16] = [
+    "2", "3", "4", "5", "6", "7", "8", "8d", "9", "10a", "10b", "11", "12", "13", "14", "15",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() {
+        std::env::set_var("FAST", "1");
+    }
+
+    #[test]
+    fn figure2_contains_all_ops() {
+        fast();
+        let s = figure2();
+        for op in ["CAS", "FAA", "SWP", "read"] {
+            assert!(s.contains(op), "{op} missing");
+        }
+        assert!(s.contains("NRMSE"));
+    }
+
+    #[test]
+    fn figure8_shows_thread_sweep() {
+        let s = figure8();
+        assert!(s.contains("Ivy Bridge"));
+        assert!(s.contains("Bulldozer"));
+        assert!(s.contains("Xeon Phi"));
+    }
+
+    #[test]
+    fn figure10b_swp_wins() {
+        fast();
+        let s = figure10b();
+        assert!(s.contains("SWP/CAS"));
+    }
+
+    #[test]
+    fn unknown_figure_errors() {
+        assert!(figure("99").is_err());
+    }
+}

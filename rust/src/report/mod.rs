@@ -1,0 +1,120 @@
+//! Regeneration of every table and figure in the paper (see DESIGN.md §5
+//! for the experiment index). Each entry prints a paper-shaped ASCII table
+//! and writes the raw series to `results/*.csv`.
+
+pub mod figures;
+pub mod tables;
+
+use crate::bench::Series;
+use crate::util::csv::Csv;
+use crate::util::table::Table;
+
+/// Where CSV outputs go, honoring `RESULTS_DIR`.
+pub fn results_dir() -> String {
+    std::env::var("RESULTS_DIR").unwrap_or_else(|_| "results".to_string())
+}
+
+/// Render a set of sweep series as a figure table: one row per buffer size,
+/// one column per series — the shape the paper's plots encode.
+pub fn render_series(title: &str, series: &[Series]) -> Table {
+    let mut header: Vec<&str> = vec!["buffer"];
+    let names: Vec<String> = series.iter().map(|s| s.name.clone()).collect();
+    for n in &names {
+        header.push(n);
+    }
+    let mut t = Table::new(title, &header);
+    if series.is_empty() {
+        return t;
+    }
+    for (i, p) in series[0].points.iter().enumerate() {
+        let mut row = vec![human_size(p.buffer_bytes)];
+        for s in series {
+            row.push(format!("{:.2}", s.points[i].value));
+        }
+        t.row(&row);
+    }
+    t
+}
+
+/// Write series to `results/<name>.csv`.
+pub fn write_series_csv(name: &str, series: &[Series]) {
+    if series.is_empty() {
+        return;
+    }
+    let mut header: Vec<&str> = vec!["buffer_bytes"];
+    let names: Vec<String> = series.iter().map(|s| s.name.clone()).collect();
+    for n in &names {
+        header.push(n);
+    }
+    let mut csv = Csv::new(&header);
+    for (i, p) in series[0].points.iter().enumerate() {
+        let mut row = vec![p.buffer_bytes.to_string()];
+        for s in series {
+            row.push(format!("{}", s.points[i].value));
+        }
+        csv.row(&row);
+    }
+    let path = format!("{}/{}.csv", results_dir(), name);
+    if let Err(e) = csv.write(&path) {
+        eprintln!("warning: could not write {path}: {e}");
+    }
+}
+
+/// Human-readable buffer size.
+pub fn human_size(bytes: usize) -> String {
+    if bytes >= (1 << 20) {
+        format!("{}MB", bytes >> 20)
+    } else if bytes >= (1 << 10) {
+        format!("{}KB", bytes >> 10)
+    } else {
+        format!("{bytes}B")
+    }
+}
+
+/// Whether to use the reduced sweep (set `FAST=1` for smoke runs; unit
+/// tests always run reduced).
+pub fn fast_mode() -> bool {
+    cfg!(test) || std::env::var("FAST").is_ok()
+}
+
+/// The sweep used by figure regeneration.
+pub fn sweep_sizes() -> Vec<usize> {
+    if fast_mode() {
+        crate::bench::size_sweep_small()
+    } else {
+        crate::bench::size_sweep()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench::Point;
+
+    fn mk(name: &str, v: &[f64]) -> Series {
+        Series {
+            name: name.into(),
+            points: v
+                .iter()
+                .enumerate()
+                .map(|(i, &x)| Point { buffer_bytes: 4096 << i, value: x })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn renders_rows_per_size() {
+        let t = render_series("fig", &[mk("a", &[1.0, 2.0]), mk("b", &[3.0, 4.0])]);
+        let s = t.render();
+        assert!(s.contains("4KB"));
+        assert!(s.contains("8KB"));
+        assert!(s.contains("3.00"));
+    }
+
+    #[test]
+    fn human_sizes() {
+        assert_eq!(human_size(4096), "4KB");
+        assert_eq!(human_size(1 << 20), "1MB");
+        assert_eq!(human_size(64), "64B");
+    }
+}

@@ -1,0 +1,240 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text) and
+//! executes them from the Rust coordinator. Python never runs here — the
+//! artifacts are produced once by `make artifacts` and this module is the
+//! only bridge.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. All executables are compiled once at load
+//! and reused across the fit loop / figure sweeps.
+
+use crate::model::params::THETA_DIM;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Static batch size the artifacts were exported with
+/// (python/compile/model.py::BATCH_ROWS).
+pub const BATCH_ROWS: usize = 512;
+
+/// The three loaded executables.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    predict: xla::PjRtLoadedExecutable,
+    fit_step: xla::PjRtLoadedExecutable,
+    nrmse: xla::PjRtLoadedExecutable,
+}
+
+/// A batch of model queries padded to `BATCH_ROWS`: features + mask.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub features: Vec<f32>, // BATCH_ROWS * THETA_DIM, row-major
+    pub targets: Vec<f32>,  // BATCH_ROWS
+    pub mask: Vec<f32>,     // BATCH_ROWS (1.0 valid / 0.0 padding)
+    pub n_valid: usize,
+}
+
+impl Batch {
+    /// Pack (feature row, target) pairs, padding with zero-weight rows.
+    pub fn pack(rows: &[([f64; THETA_DIM], f64)]) -> Vec<Batch> {
+        let mut batches = Vec::new();
+        for chunk in rows.chunks(BATCH_ROWS) {
+            let mut features = vec![0f32; BATCH_ROWS * THETA_DIM];
+            let mut targets = vec![0f32; BATCH_ROWS];
+            let mut mask = vec![0f32; BATCH_ROWS];
+            for (i, (f, y)) in chunk.iter().enumerate() {
+                for (j, &v) in f.iter().enumerate() {
+                    features[i * THETA_DIM + j] = v as f32;
+                }
+                targets[i] = *y as f32;
+                mask[i] = 1.0;
+            }
+            batches.push(Batch { features, targets, mask, n_valid: chunk.len() });
+        }
+        batches
+    }
+}
+
+fn load_exe(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(
+        path.to_str().context("non-utf8 artifact path")?,
+    )
+    .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {}", path.display()))
+}
+
+impl Runtime {
+    /// Load and compile all artifacts from `dir` (default: ./artifacts).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let predict = load_exe(&client, &dir.join("predict.hlo.txt"))?;
+        let fit_step = load_exe(&client, &dir.join("fit_step.hlo.txt"))?;
+        let nrmse = load_exe(&client, &dir.join("nrmse.hlo.txt"))?;
+        Ok(Runtime { client, predict, fit_step, nrmse })
+    }
+
+    /// Default artifact directory, honoring `ARTIFACTS_DIR`.
+    pub fn default_dir() -> String {
+        std::env::var("ARTIFACTS_DIR").unwrap_or_else(|_| "artifacts".to_string())
+    }
+
+    fn features_literal(features: &[f32]) -> Result<xla::Literal> {
+        anyhow::ensure!(features.len() == BATCH_ROWS * THETA_DIM, "bad feature len");
+        Ok(xla::Literal::vec1(features).reshape(&[BATCH_ROWS as i64, THETA_DIM as i64])?)
+    }
+
+    /// Batched latency prediction: `F @ θ` through the Pallas-kernel HLO.
+    pub fn predict(&self, features: &[f32], theta: &[f32; THETA_DIM]) -> Result<Vec<f32>> {
+        let f = Self::features_literal(features)?;
+        let t = xla::Literal::vec1(theta.as_slice());
+        let result = self.predict.execute::<xla::Literal>(&[f, t])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// One gradient step: returns (θ', loss).
+    pub fn fit_step(
+        &self,
+        batch: &Batch,
+        theta: &[f32; THETA_DIM],
+        lr: f32,
+    ) -> Result<([f32; THETA_DIM], f32)> {
+        let f = Self::features_literal(&batch.features)?;
+        let y = xla::Literal::vec1(&batch.targets);
+        let w = xla::Literal::vec1(&batch.mask);
+        let t = xla::Literal::vec1(theta.as_slice());
+        let lr = xla::Literal::scalar(lr);
+        let result = self
+            .fit_step
+            .execute::<xla::Literal>(&[f, y, w, t, lr])?[0][0]
+            .to_literal_sync()?;
+        let (theta_new, loss) = result.to_tuple2()?;
+        let tv = theta_new.to_vec::<f32>()?;
+        let mut out = [0f32; THETA_DIM];
+        out.copy_from_slice(&tv);
+        Ok((out, loss.to_vec::<f32>()?[0]))
+    }
+
+    /// Eq. 12 on a masked batch.
+    pub fn nrmse(&self, pred: &[f32], obs: &[f32], mask: &[f32]) -> Result<f32> {
+        anyhow::ensure!(pred.len() == BATCH_ROWS && obs.len() == BATCH_ROWS);
+        let p = xla::Literal::vec1(pred);
+        let o = xla::Literal::vec1(obs);
+        let w = xla::Literal::vec1(mask);
+        let result = self.nrmse.execute::<xla::Literal>(&[p, o, w])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Path::new(&Runtime::default_dir()).join("predict.hlo.txt").exists()
+    }
+
+    #[test]
+    fn batch_packing_pads_and_masks() {
+        let rows: Vec<([f64; THETA_DIM], f64)> =
+            (0..3).map(|i| ([i as f64; THETA_DIM], i as f64)).collect();
+        let batches = Batch::pack(&rows);
+        assert_eq!(batches.len(), 1);
+        let b = &batches[0];
+        assert_eq!(b.n_valid, 3);
+        assert_eq!(b.mask[..3], [1.0, 1.0, 1.0]);
+        assert_eq!(b.mask[3], 0.0);
+        assert_eq!(b.features[THETA_DIM], 1.0);
+    }
+
+    #[test]
+    fn batch_packing_splits_large_inputs() {
+        let rows: Vec<([f64; THETA_DIM], f64)> =
+            (0..BATCH_ROWS + 10).map(|_| ([0.0; THETA_DIM], 0.0)).collect();
+        let batches = Batch::pack(&rows);
+        assert_eq!(batches.len(), 2);
+        assert_eq!(batches[1].n_valid, 10);
+    }
+
+    // The PJRT round-trip tests need `make artifacts` to have run; they are
+    // skipped (not failed) otherwise so `cargo test` works pre-artifact.
+    #[test]
+    fn pjrt_predict_roundtrip() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(Runtime::default_dir()).unwrap();
+        let mut features = vec![0f32; BATCH_ROWS * THETA_DIM];
+        // row 0: local-L1 CAS on Haswell -> r_l1 + e_cas
+        features[0] = 1.0; // r_l1 coeff
+        features[5] = 1.0; // e_cas coeff
+        let theta = [1.17f32, 3.5, 10.3, 0.0, 65.0, 4.7, 5.6, 5.6];
+        let out = rt.predict(&features, &theta).unwrap();
+        assert!((out[0] - 5.87).abs() < 1e-4, "{}", out[0]);
+        assert_eq!(out.len(), BATCH_ROWS);
+        assert!(out[1..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pjrt_fit_recovers_theta() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(Runtime::default_dir()).unwrap();
+        // synthetic linear data from a known theta
+        let theta_true = [1.0f64, 4.0, 10.0, 60.0, 70.0, 5.0, 6.0, 6.0];
+        let mut rng = crate::util::rng::Rng::new(3);
+        let rows: Vec<([f64; THETA_DIM], f64)> = (0..300)
+            .map(|_| {
+                let f: [f64; THETA_DIM] = std::array::from_fn(|_| rng.next_f64() * 2.0);
+                let y = f.iter().zip(&theta_true).map(|(a, b)| a * b).sum();
+                (f, y)
+            })
+            .collect();
+        let batch = &Batch::pack(&rows)[0];
+        let mut theta = [0.5f32; THETA_DIM];
+        let mut last_loss = f32::MAX;
+        for _ in 0..1500 {
+            let (t, loss) = rt.fit_step(batch, &theta, 0.02).unwrap();
+            theta = t;
+            last_loss = loss;
+        }
+        assert!(last_loss < 1.0, "final loss {last_loss}");
+        for (got, want) in theta.iter().zip(&theta_true) {
+            assert!(
+                (f64::from(*got) - want).abs() < 0.2 * want.max(1.0),
+                "theta {got} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn pjrt_nrmse_matches_rust() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(Runtime::default_dir()).unwrap();
+        let mut pred = vec![0f32; BATCH_ROWS];
+        let mut obs = vec![0f32; BATCH_ROWS];
+        let mut mask = vec![0f32; BATCH_ROWS];
+        pred[0] = 3.0;
+        pred[1] = 3.0;
+        obs[0] = 2.0;
+        obs[1] = 2.0;
+        mask[0] = 1.0;
+        mask[1] = 1.0;
+        let v = rt.nrmse(&pred, &obs, &mask).unwrap();
+        let rust = crate::util::stats::nrmse(&[3.0, 3.0], &[2.0, 2.0]);
+        assert!((f64::from(v) - rust).abs() < 1e-6, "{v} vs {rust}");
+    }
+}

@@ -1,0 +1,283 @@
+//! Set-associative tag arrays with LRU replacement.
+//!
+//! Tag arrays model *capacity and placement* only; the coherence truth for a
+//! line lives in [`crate::sim::coherence`]. This split mirrors how the
+//! benchmarks behave: a tag can linger after an invalidation (stale), and a
+//! sharer bit can linger after a silent eviction (conservative, like Intel's
+//! core-valid bits).
+
+pub const LINE_SIZE: u64 = 64;
+
+/// Line address (byte address >> 6).
+pub type Line = u64;
+
+#[inline]
+pub fn line_of(addr: u64) -> Line {
+    addr >> 6
+}
+
+/// One way of a set: tag + LRU stamp + dirty bit.
+#[derive(Debug, Clone, Copy)]
+struct Way {
+    tag: u64,
+    stamp: u64,
+    dirty: bool,
+    valid: bool,
+}
+
+/// A set-associative cache tag array.
+#[derive(Debug, Clone)]
+pub struct TagArray {
+    sets: Vec<Vec<Way>>,
+    n_sets: usize,
+    ways: usize,
+    clock: u64,
+    /// Number of ways reserved (unusable) per set — models the HT Assist
+    /// probe filter stealing L3 capacity on Bulldozer (§5.1.2).
+    reserved_ways: usize,
+}
+
+/// Result of inserting a line.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Insert {
+    /// Line already present (refreshed LRU).
+    Hit,
+    /// Inserted into a free way.
+    Filled,
+    /// Inserted, evicting `victim` (with its dirty bit).
+    Evicted { victim: Line, dirty: bool },
+}
+
+impl TagArray {
+    /// `size` bytes total, `ways` associativity, 64 B lines. Set counts that
+    /// are not powers of two (e.g. Ivy Bridge's 30 MB / 20-way L3) index by
+    /// modulo instead of masking.
+    pub fn new(size: usize, ways: usize) -> TagArray {
+        let n_lines = size / LINE_SIZE as usize;
+        let n_sets = (n_lines / ways).max(1);
+        TagArray {
+            sets: vec![Vec::with_capacity(ways); n_sets],
+            n_sets,
+            ways,
+            clock: 0,
+            reserved_ways: 0,
+        }
+    }
+
+    /// Reserve `n` ways per set (HT Assist capacity steal). Existing
+    /// occupants beyond the new capacity are evicted lazily on insert.
+    pub fn reserve_ways(&mut self, n: usize) {
+        assert!(n < self.ways);
+        self.reserved_ways = n;
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.n_sets * (self.ways - self.reserved_ways) * LINE_SIZE as usize
+    }
+
+    #[inline]
+    fn set_index(&self, line: Line) -> usize {
+        if self.n_sets.is_power_of_two() {
+            (line as usize) & (self.n_sets - 1)
+        } else {
+            (line as usize) % self.n_sets
+        }
+    }
+
+    /// Is `line` resident?
+    #[inline]
+    pub fn contains(&self, line: Line) -> bool {
+        let set = &self.sets[self.set_index(line)];
+        set.iter().any(|w| w.valid && w.tag == line)
+    }
+
+    /// Touch `line` (LRU refresh), returning whether it was a hit.
+    pub fn touch(&mut self, line: Line) -> bool {
+        self.clock += 1;
+        let clock = self.clock;
+        let idx = self.set_index(line);
+        for w in &mut self.sets[idx] {
+            if w.valid && w.tag == line {
+                w.stamp = clock;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Mark a resident line dirty (no-op if absent).
+    pub fn mark_dirty(&mut self, line: Line) {
+        let idx = self.set_index(line);
+        for w in &mut self.sets[idx] {
+            if w.valid && w.tag == line {
+                w.dirty = true;
+                return;
+            }
+        }
+    }
+
+    pub fn is_dirty(&self, line: Line) -> bool {
+        let set = &self.sets[self.set_index(line)];
+        set.iter().any(|w| w.valid && w.tag == line && w.dirty)
+    }
+
+    /// Insert `line`, evicting the LRU way if the set is full.
+    pub fn insert(&mut self, line: Line, dirty: bool) -> Insert {
+        self.clock += 1;
+        let clock = self.clock;
+        let usable = self.ways - self.reserved_ways;
+        let idx = self.set_index(line);
+        let set = &mut self.sets[idx];
+        // hit?
+        for w in set.iter_mut() {
+            if w.valid && w.tag == line {
+                w.stamp = clock;
+                w.dirty |= dirty;
+                return Insert::Hit;
+            }
+        }
+        // free way (also handles shrunk capacity after reserve_ways)
+        if set.len() < usable {
+            set.push(Way { tag: line, stamp: clock, dirty, valid: true });
+            return Insert::Filled;
+        }
+        // evict LRU among the usable ways; if over capacity (reserve_ways
+        // shrank us), evict the overflow entry instead.
+        let (victim_idx, _) = set
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, w)| if w.valid { w.stamp } else { 0 })
+            .expect("non-empty set");
+        let victim = set[victim_idx];
+        set[victim_idx] = Way { tag: line, stamp: clock, dirty, valid: true };
+        set.truncate(usable.max(victim_idx + 1).min(set.len()));
+        if victim.valid {
+            Insert::Evicted { victim: victim.tag, dirty: victim.dirty }
+        } else {
+            Insert::Filled
+        }
+    }
+
+    /// Remove `line` (invalidation / back-invalidation), returning whether it
+    /// was present and dirty.
+    pub fn remove(&mut self, line: Line) -> Option<bool> {
+        let idx = self.set_index(line);
+        let set = &mut self.sets[idx];
+        if let Some(pos) = set.iter().position(|w| w.valid && w.tag == line) {
+            let dirty = set[pos].dirty;
+            set.swap_remove(pos);
+            Some(dirty)
+        } else {
+            None
+        }
+    }
+
+    /// Number of resident lines (for tests / stats).
+    pub fn len(&self) -> usize {
+        self.sets.iter().map(|s| s.iter().filter(|w| w.valid).count()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Iterate over resident lines (tests / invariant checks).
+    pub fn lines(&self) -> impl Iterator<Item = Line> + '_ {
+        self.sets
+            .iter()
+            .flat_map(|s| s.iter().filter(|w| w.valid).map(|w| w.tag))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_after_insert() {
+        let mut c = TagArray::new(32 * 1024, 8);
+        assert_eq!(c.insert(100, false), Insert::Filled);
+        assert!(c.contains(100));
+        assert_eq!(c.insert(100, false), Insert::Hit);
+    }
+
+    #[test]
+    fn lru_eviction_order() {
+        // 1 set of 2 ways: 2 lines * 64B.
+        let mut c = TagArray::new(128, 2);
+        assert_eq!(c.n_sets, 1);
+        c.insert(1, false);
+        c.insert(2, false);
+        c.touch(1); // 2 is now LRU
+        match c.insert(3, false) {
+            Insert::Evicted { victim, .. } => assert_eq!(victim, 2),
+            other => panic!("expected eviction, got {other:?}"),
+        }
+        assert!(c.contains(1) && c.contains(3) && !c.contains(2));
+    }
+
+    #[test]
+    fn dirty_eviction_reported() {
+        let mut c = TagArray::new(128, 2);
+        c.insert(1, true);
+        c.insert(2, false);
+        match c.insert(3, false) {
+            Insert::Evicted { victim, dirty } => {
+                assert_eq!(victim, 1);
+                assert!(dirty);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn capacity_bounded() {
+        let mut c = TagArray::new(4096, 4); // 64 lines
+        for l in 0..1000 {
+            c.insert(l, false);
+        }
+        assert_eq!(c.len(), 64);
+    }
+
+    #[test]
+    fn set_mapping_conflicts() {
+        let mut c = TagArray::new(4096, 4); // 16 sets
+        // lines congruent mod 16 collide in one set of 4 ways
+        for i in 0..5 {
+            c.insert(i * 16, false);
+        }
+        let present = (0..5).filter(|i| c.contains(i * 16)).count();
+        assert_eq!(present, 4);
+    }
+
+    #[test]
+    fn remove_returns_dirty() {
+        let mut c = TagArray::new(128, 2);
+        c.insert(7, false);
+        c.mark_dirty(7);
+        assert_eq!(c.remove(7), Some(true));
+        assert_eq!(c.remove(7), None);
+    }
+
+    #[test]
+    fn reserve_ways_shrinks_capacity() {
+        let mut c = TagArray::new(4096, 4);
+        c.reserve_ways(2);
+        assert_eq!(c.capacity_bytes(), 2048);
+        for l in 0..1000 {
+            c.insert(l, false);
+        }
+        assert!(c.len() <= 32, "len {} exceeds reserved capacity", c.len());
+    }
+
+    #[test]
+    fn lines_iterates_all() {
+        let mut c = TagArray::new(1024, 4);
+        for l in [3, 19, 35] {
+            c.insert(l, false);
+        }
+        let mut got: Vec<_> = c.lines().collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![3, 19, 35]);
+    }
+}

@@ -1,0 +1,262 @@
+//! Global per-line coherence records: the directory truth of the simulator.
+//!
+//! One [`LineRecord`] per cache line tracks the conservative sharer set, the
+//! owning core (for M/O/E/F states), per-die L3 presence, and the NUMA home
+//! die. The sharer mask is deliberately *conservative*: silent evictions of
+//! clean lines do not clear bits, which is exactly the semantics of the
+//! core-valid bits in Intel's inclusive L3 (§2.2) — and the source of the
+//! paper's observation that E-state lines in L3 still pay a snoop while
+//! M-state lines (written back precisely) do not (§5.1.1).
+
+use super::protocol::CohState;
+use super::topology::CoreId;
+use crate::util::fxhash::FastMap;
+
+/// Global classification of a line (what the "directory" knows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GlobalClass {
+    /// No cache holds the line.
+    Uncached,
+    /// Exactly one core may hold it, clean (E).
+    Exclusive,
+    /// Exactly one core may hold it, dirty (M).
+    Modified,
+    /// Multiple cores may hold it, clean (S, optionally one F).
+    Shared,
+    /// Multiple cores may hold it, dirty (MOESI O / GOLS); `owner` is dirty.
+    Owned,
+}
+
+/// Per-line record.
+#[derive(Debug, Clone, Copy)]
+pub struct LineRecord {
+    pub class: GlobalClass,
+    /// Conservative mask of cores whose private hierarchy may hold the line.
+    pub sharers: u64,
+    /// M/O/E/F holder (data supplier), if any.
+    pub owner: Option<CoreId>,
+    /// Per-die L3 presence bitmask (bit d = die d's L3 slice holds the line).
+    pub in_l3: u64,
+    /// Is the copy in L3 / the owner dirty w.r.t. memory?
+    pub dirty: bool,
+    /// NUMA home die (first-touch allocation), for memory-access latency.
+    pub home_die: u8,
+    /// §6.2.1 OL/SL: all sharers are proven to be on `local_die`.
+    pub die_local: bool,
+}
+
+impl LineRecord {
+    pub fn uncached(home_die: u8) -> LineRecord {
+        LineRecord {
+            class: GlobalClass::Uncached,
+            sharers: 0,
+            owner: None,
+            in_l3: 0,
+            dirty: false,
+            home_die,
+            die_local: false,
+        }
+    }
+
+    #[inline]
+    pub fn holds(&self, core: CoreId) -> bool {
+        self.sharers & (1 << core) != 0
+    }
+
+    #[inline]
+    pub fn add_sharer(&mut self, core: CoreId) {
+        self.sharers |= 1 << core;
+    }
+
+    #[inline]
+    pub fn clear_sharer(&mut self, core: CoreId) {
+        self.sharers &= !(1 << core);
+    }
+
+    /// Sharers other than `core`.
+    #[inline]
+    pub fn other_sharers(&self, core: CoreId) -> u64 {
+        self.sharers & !(1 << core)
+    }
+
+    pub fn n_sharers(&self) -> u32 {
+        self.sharers.count_ones()
+    }
+
+    /// The coherence state of the copy held by `core`, derived from the
+    /// global record.
+    pub fn state_at(&self, core: CoreId, forward_holder: bool) -> CohState {
+        if !self.holds(core) {
+            return CohState::I;
+        }
+        match self.class {
+            GlobalClass::Uncached => CohState::I,
+            GlobalClass::Exclusive => {
+                if self.owner == Some(core) {
+                    CohState::E
+                } else {
+                    CohState::I
+                }
+            }
+            GlobalClass::Modified => {
+                if self.owner == Some(core) {
+                    CohState::M
+                } else {
+                    CohState::I
+                }
+            }
+            GlobalClass::Shared => {
+                if forward_holder && self.owner == Some(core) {
+                    CohState::F
+                } else if self.die_local {
+                    CohState::Sl
+                } else {
+                    CohState::S
+                }
+            }
+            GlobalClass::Owned => {
+                if self.owner == Some(core) {
+                    if self.die_local {
+                        CohState::Ol
+                    } else {
+                        CohState::O
+                    }
+                } else if self.die_local {
+                    CohState::Sl
+                } else {
+                    CohState::S
+                }
+            }
+        }
+    }
+}
+
+/// The map of all line records. Absent lines are implicitly `Uncached` with
+/// a first-touch home die assigned on creation.
+#[derive(Debug, Default, Clone)]
+pub struct CoherenceMap {
+    records: FastMap<u64, LineRecord>,
+}
+
+impl CoherenceMap {
+    pub fn new() -> CoherenceMap {
+        CoherenceMap { records: FastMap::default() }
+    }
+
+    /// Fetch the record for `line`, creating an uncached record homed at
+    /// `home_die` on first touch (first-touch NUMA policy, §3.1).
+    pub fn get_or_create(&mut self, line: u64, home_die: u8) -> &mut LineRecord {
+        self.records
+            .entry(line)
+            .or_insert_with(|| LineRecord::uncached(home_die))
+    }
+
+    pub fn get(&self, line: u64) -> Option<&LineRecord> {
+        self.records.get(&line)
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&u64, &LineRecord)> {
+        self.records.iter()
+    }
+
+    /// Drop records to keep memory bounded across long sweeps (records for
+    /// lines that are uncached and clean carry no information).
+    pub fn compact(&mut self) {
+        self.records
+            .retain(|_, r| r.class != GlobalClass::Uncached || r.dirty || r.in_l3 != 0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_touch_home() {
+        let mut m = CoherenceMap::new();
+        let r = m.get_or_create(10, 3);
+        assert_eq!(r.home_die, 3);
+        // second touch with a different die does not rehome
+        let r = m.get_or_create(10, 1);
+        assert_eq!(r.home_die, 3);
+    }
+
+    #[test]
+    fn sharer_mask_ops() {
+        let mut r = LineRecord::uncached(0);
+        r.add_sharer(3);
+        r.add_sharer(7);
+        assert!(r.holds(3) && r.holds(7) && !r.holds(1));
+        assert_eq!(r.n_sharers(), 2);
+        assert_eq!(r.other_sharers(3), 1 << 7);
+        r.clear_sharer(3);
+        assert!(!r.holds(3));
+    }
+
+    #[test]
+    fn state_derivation_exclusive() {
+        let mut r = LineRecord::uncached(0);
+        r.class = GlobalClass::Exclusive;
+        r.owner = Some(2);
+        r.add_sharer(2);
+        assert_eq!(r.state_at(2, false), CohState::E);
+        assert_eq!(r.state_at(1, false), CohState::I);
+    }
+
+    #[test]
+    fn state_derivation_owned() {
+        let mut r = LineRecord::uncached(0);
+        r.class = GlobalClass::Owned;
+        r.owner = Some(0);
+        r.add_sharer(0);
+        r.add_sharer(1);
+        assert_eq!(r.state_at(0, false), CohState::O);
+        assert_eq!(r.state_at(1, false), CohState::S);
+    }
+
+    #[test]
+    fn state_derivation_forward() {
+        let mut r = LineRecord::uncached(0);
+        r.class = GlobalClass::Shared;
+        r.owner = Some(4);
+        r.add_sharer(4);
+        r.add_sharer(5);
+        assert_eq!(r.state_at(4, true), CohState::F);
+        assert_eq!(r.state_at(5, true), CohState::S);
+        // MESI-style: no forward holder designation
+        assert_eq!(r.state_at(4, false), CohState::S);
+    }
+
+    #[test]
+    fn die_local_states() {
+        let mut r = LineRecord::uncached(0);
+        r.class = GlobalClass::Owned;
+        r.owner = Some(0);
+        r.add_sharer(0);
+        r.add_sharer(1);
+        r.die_local = true;
+        assert_eq!(r.state_at(0, false), CohState::Ol);
+        assert_eq!(r.state_at(1, false), CohState::Sl);
+    }
+
+    #[test]
+    fn compact_drops_dead_records() {
+        let mut m = CoherenceMap::new();
+        m.get_or_create(1, 0); // stays Uncached/clean
+        let r = m.get_or_create(2, 0);
+        r.class = GlobalClass::Modified;
+        r.owner = Some(0);
+        r.add_sharer(0);
+        m.compact();
+        assert!(m.get(1).is_none());
+        assert!(m.get(2).is_some());
+    }
+}

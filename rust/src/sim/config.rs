@@ -1,0 +1,167 @@
+//! Full machine configuration: everything Table 1 records about a testbed,
+//! plus the timing parameters (Table 2) and overhead residuals (Table 3).
+
+use crate::sim::mechanisms::Mechanisms;
+use crate::sim::protocol::ProtocolKind;
+use crate::sim::timing::{OverheadTable, Timing};
+use crate::sim::topology::Topology;
+use crate::sim::writebuffer::WriteBufferCfg;
+
+/// Write policy of a cache level.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WritePolicy {
+    WriteBack,
+    /// Bulldozer's L1 is write-through (Table 1): stores and atomics always
+    /// proceed to the L2, which is why Eq. (11) replaces R_{L1,l} with
+    /// R_{L2,l} on AMD.
+    WriteThrough,
+}
+
+/// L3 inclusion policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum L3Policy {
+    /// Intel: inclusive with core-valid bits — the L3 can prove a line is
+    /// not in any private cache.
+    InclusiveCoreValid,
+    /// Bulldozer: non-inclusive, no presence tracking — shared-line writes
+    /// must broadcast invalidations to remote dies (§5.1.2).
+    NonInclusive,
+}
+
+/// One cache level's geometry.
+#[derive(Debug, Clone, Copy)]
+pub struct CacheGeom {
+    pub size: usize,
+    pub ways: usize,
+    pub write_policy: WritePolicy,
+}
+
+/// HT Assist (AMD probe filter): steals L3 ways and filters remote probes
+/// (§5.1.2 — the reason Bulldozer L3 latency grows with footprint).
+#[derive(Debug, Clone, Copy)]
+pub struct HtAssistCfg {
+    /// Ways per L3 set dedicated to the probe filter (1 MB of each 8 MB L3
+    /// ⇒ 2 of 16 ways).
+    pub reserved_ways: usize,
+    /// §6.2.2 extension: track recently-shared S/O lines to suppress
+    /// unnecessary remote invalidations.
+    pub track_shared: bool,
+    /// Capacity (lines) of the §6.2.2 S/O tracking region.
+    pub shared_capacity: usize,
+}
+
+/// Unaligned-operation penalties (§5.7): an atomic spanning two lines locks
+/// the bus; reads just split into two accesses.
+#[derive(Debug, Clone, Copy)]
+pub struct UnalignedCfg {
+    /// Flat bus-lock penalty for a line-spanning atomic, in ns. The paper
+    /// measures CAS up to ≈750 ns on Haswell.
+    pub bus_lock_ns: f64,
+}
+
+/// The complete machine description the engine executes against.
+#[derive(Debug, Clone)]
+pub struct MachineConfig {
+    pub name: &'static str,
+    pub cpu_model: &'static str,
+    pub topology: Topology,
+    pub l1: CacheGeom,
+    pub l2: CacheGeom,
+    pub l3: Option<CacheGeom>,
+    pub l3_policy: L3Policy,
+    pub protocol: ProtocolKind,
+    pub timing: Timing,
+    pub overheads: OverheadTable,
+    pub write_buffer: WriteBufferCfg,
+    pub mechanisms: Mechanisms,
+    pub ht_assist: Option<HtAssistCfg>,
+    /// AMD MuW fast-migration state (§5.5): M-line CAS migration without
+    /// further invalidation actions.
+    pub muw: bool,
+    /// Intel same-line store combining under contention (§5.4: "annihilating
+    /// the need for the actual execution of all the writes").
+    pub contended_write_combining: bool,
+    /// Extra latency for 128-bit atomics: (local/shared-die ns, remote ns).
+    /// Zero on Intel; ≈(20, 5) on Bulldozer (§5.3).
+    pub cas128_penalty: (f64, f64),
+    pub unaligned: UnalignedCfg,
+    /// Core frequency in MHz (Table 1) — reporting only; latencies are ns.
+    pub frequency_mhz: u32,
+    /// Interconnect label for Table 1.
+    pub interconnect: &'static str,
+    /// Main memory size label for Table 1.
+    pub memory: &'static str,
+}
+
+impl MachineConfig {
+    /// Effective L3 bytes per die after the HT Assist reservation.
+    pub fn effective_l3_bytes(&self) -> Option<usize> {
+        self.l3.map(|g| {
+            let reserved = self.ht_assist.map_or(0, |h| h.reserved_ways);
+            g.size * (g.ways - reserved) / g.ways
+        })
+    }
+
+    pub fn has_l3(&self) -> bool {
+        self.l3.is_some()
+    }
+
+    /// Cores sharing one L2 (1 = private).
+    pub fn l2_shared_by(&self) -> usize {
+        self.topology.cores_per_l2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::timing::Timing;
+
+    fn minimal() -> MachineConfig {
+        MachineConfig {
+            name: "test",
+            cpu_model: "test",
+            topology: Topology::new(4, 1, 4, 1),
+            l1: CacheGeom { size: 32 * 1024, ways: 8, write_policy: WritePolicy::WriteBack },
+            l2: CacheGeom { size: 256 * 1024, ways: 8, write_policy: WritePolicy::WriteBack },
+            l3: Some(CacheGeom { size: 8 << 20, ways: 16, write_policy: WritePolicy::WriteBack }),
+            l3_policy: L3Policy::InclusiveCoreValid,
+            protocol: ProtocolKind::Mesif,
+            timing: Timing {
+                r_l1: 1.0, r_l2: 3.0, r_l3: 10.0, hop: f64::NAN, mem: 65.0,
+                e_cas: 4.7, e_faa: 5.6, e_swp: 5.6, write_issue: 0.5,
+            },
+            overheads: OverheadTable::new(),
+            write_buffer: WriteBufferCfg::default(),
+            mechanisms: Mechanisms::ALL_OFF,
+            ht_assist: None,
+            muw: false,
+            contended_write_combining: true,
+            cas128_penalty: (0.0, 0.0),
+            unaligned: UnalignedCfg { bus_lock_ns: 300.0 },
+            frequency_mhz: 3400,
+            interconnect: "-",
+            memory: "8GB",
+        }
+    }
+
+    #[test]
+    fn effective_l3_without_ht_assist() {
+        let c = minimal();
+        assert_eq!(c.effective_l3_bytes(), Some(8 << 20));
+    }
+
+    #[test]
+    fn effective_l3_with_ht_assist() {
+        let mut c = minimal();
+        c.ht_assist = Some(HtAssistCfg { reserved_ways: 2, track_shared: false, shared_capacity: 0 });
+        c.l3 = Some(CacheGeom { size: 8 << 20, ways: 16, write_policy: WritePolicy::WriteBack });
+        assert_eq!(c.effective_l3_bytes(), Some(7 << 20));
+    }
+
+    #[test]
+    fn l2_sharing() {
+        let c = minimal();
+        assert_eq!(c.l2_shared_by(), 1);
+    }
+}

@@ -1,0 +1,1167 @@
+//! The access engine: executes reads, writes, and atomics against the
+//! simulated machine, returning per-access latency in nanoseconds and
+//! mutating cache/coherence/data state.
+//!
+//! Latency is composed from the mechanisms the paper identifies (§4, §5):
+//! an atomic is a read-for-ownership followed by execute-and-write (Eq. 1);
+//! R_O depends on the coherence state and location of the line (Eq. 2–8);
+//! invalidations run in parallel (max, Eq. 7); off-die transfers add the hop
+//! latency H (§4.1.3); plain writes retire into the store buffer while
+//! atomics drain it (§5.2.1); unaligned atomics lock the bus (§5.7);
+//! Bulldozer broadcasts invalidations for shared lines because its
+//! non-inclusive L3 cannot track sharers (§5.1.2); AMD's MuW state
+//! accelerates dirty-line migration for two-operand CAS (§5.5).
+
+use crate::atomics::{Op, OpKind, Width};
+use crate::sim::cache::{line_of, Insert, TagArray, LINE_SIZE};
+use crate::sim::coherence::{CoherenceMap, GlobalClass, LineRecord};
+use crate::sim::config::{L3Policy, MachineConfig, WritePolicy};
+use crate::sim::mechanisms::{buddy_line, StreamDetector};
+use crate::sim::memstore::MemStore;
+use crate::sim::protocol::{CohState, ProtocolKind};
+use crate::sim::stats::Stats;
+use crate::sim::timing::{Level, LocalityClass, StateClass};
+use crate::sim::topology::{CoreId, Distance};
+use crate::sim::writebuffer::WriteBuffer;
+use crate::util::rng::splitmix64;
+use crate::util::fxhash::FastSet;
+
+/// Result of one operation.
+#[derive(Debug, Clone, Copy)]
+pub struct Access {
+    /// Visible latency for the issuing core, ns.
+    pub latency: f64,
+    /// Which level served the (first) line.
+    pub level: Level,
+    /// Distance class to the data source.
+    pub distance: Distance,
+    /// Value returned to the register (old memory value for RMW).
+    pub value: u64,
+    /// Did the operation modify memory (e.g. CAS success)?
+    pub modified: bool,
+    /// Coherence state of the line *before* the access, at its holder.
+    pub prior_state: CohState,
+}
+
+/// The simulated machine.
+pub struct Machine {
+    pub cfg: MachineConfig,
+    l1: Vec<TagArray>,
+    l2: Vec<TagArray>,
+    l3: Vec<TagArray>,
+    pub coherence: CoherenceMap,
+    pub mem: MemStore,
+    wb: Vec<WriteBuffer>,
+    /// Per-core virtual clock (ns) — drives write-buffer drain modeling.
+    clock: Vec<f64>,
+    stream: StreamDetector,
+    prefetched: FastSet<u64>,
+    /// §6.2.2 HT Assist S/O tracker: lines proven die-local (per die).
+    ht_shared_tracker: Vec<FastSet<u64>>,
+    pub stats: Stats,
+    jitter_seed: u64,
+}
+
+impl Machine {
+    pub fn new(cfg: MachineConfig) -> Machine {
+        let topo = cfg.topology;
+        let l1 = (0..topo.n_cores)
+            .map(|_| TagArray::new(cfg.l1.size, cfg.l1.ways))
+            .collect();
+        let l2 = (0..topo.n_l2_modules())
+            .map(|_| TagArray::new(cfg.l2.size, cfg.l2.ways))
+            .collect();
+        let l3 = match cfg.l3 {
+            Some(geom) => (0..topo.n_dies())
+                .map(|_| {
+                    let mut t = TagArray::new(geom.size, geom.ways);
+                    if let Some(ht) = cfg.ht_assist {
+                        t.reserve_ways(ht.reserved_ways);
+                    }
+                    t
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+        let wb = (0..topo.n_cores)
+            .map(|_| WriteBuffer::new(cfg.write_buffer))
+            .collect();
+        Machine {
+            l1,
+            l2,
+            l3,
+            coherence: CoherenceMap::new(),
+            mem: MemStore::new(),
+            wb,
+            clock: vec![0.0; topo.n_cores],
+            stream: StreamDetector::new(),
+            prefetched: FastSet::default(),
+            ht_shared_tracker: vec![FastSet::default(); topo.n_dies()],
+            stats: Stats::default(),
+            jitter_seed: 0x5EED,
+            cfg,
+        }
+    }
+
+    /// Reset caches/coherence/clock but keep the configuration — used
+    /// between benchmark repetitions.
+    pub fn reset(&mut self) {
+        let cfg = self.cfg.clone();
+        *self = Machine::new(cfg);
+    }
+
+    pub fn clock_of(&self, core: CoreId) -> f64 {
+        self.clock[core]
+    }
+
+    pub fn advance_clock(&mut self, core: CoreId, ns: f64) {
+        self.clock[core] += ns;
+    }
+
+    // ----- public operations ------------------------------------------------
+
+    /// Execute `op` at byte address `addr` with operand `width` from `core`.
+    pub fn access(&mut self, core: CoreId, op: Op, addr: u64, width: Width) -> Access {
+        self.stats.accesses += 1;
+        let kind = op.kind();
+        let offset = addr % LINE_SIZE;
+        let unaligned = offset + width.bytes() > LINE_SIZE;
+        let now = self.clock[core];
+
+        // Atomics drain the store buffer (§5.2.1); writes are buffered below.
+        let mut latency = 0.0;
+        if kind.is_atomic() {
+            let stall = self.wb[core].drain_for_atomic(now, line_of(addr));
+            if stall > 0.0 {
+                self.stats.write_buffer_drains += 1;
+            }
+            latency += stall;
+        }
+
+        let line = line_of(addr);
+        let walk = self.access_line(core, kind, line);
+        let mut level = walk.level;
+        let mut distance = walk.distance;
+        let prior_state = walk.prior_state;
+        let mut cost = walk.cost;
+
+        if unaligned {
+            // The operand spans two lines: fetch the second line too.
+            let walk2 = self.access_line(core, kind, line + 1);
+            if kind.is_atomic() {
+                // Bus lock (§5.7): the CPU locks the interconnect while both
+                // lines are held; cost is both fetches plus the flat penalty.
+                self.stats.bus_locks += 1;
+                cost += walk2.cost + self.cfg.unaligned.bus_lock_ns;
+            } else {
+                // Reads split into two accesses; the second mostly pipelines
+                // (≤20% observed loss, §5.7).
+                cost += 0.2 * walk2.cost;
+            }
+            level = level.max(walk2.level);
+            distance = distance.max(walk2.distance);
+        }
+
+        // 128-bit operands (§5.3): free on Intel, penalized on Bulldozer.
+        if width == Width::W128 && kind.is_atomic() {
+            let (local_pen, remote_pen) = self.cfg.cas128_penalty;
+            cost += match distance {
+                Distance::Local | Distance::SharedL2 | Distance::SameDie => local_pen,
+                _ => remote_pen,
+            };
+        }
+
+        // Execute stage E(A) (Eq. 1) and the O residual.
+        cost += self.cfg.timing.exec(kind);
+        cost += self.cfg.overheads.lookup(
+            kind,
+            StateClass::of(prior_state),
+            level,
+            LocalityClass::of(distance),
+        );
+
+        // Frequency mechanisms (§5.6) scale core-side latency and add jitter.
+        let uplift = self.cfg.mechanisms.frequency_uplift();
+        if uplift != 1.0 && level != Level::Memory {
+            cost /= uplift;
+        }
+        let amp = self.cfg.mechanisms.jitter_amplitude();
+        if amp > 0.0 {
+            let mut s = self.jitter_seed ^ self.stats.accesses;
+            let r = (splitmix64(&mut s) >> 11) as f64 / (1u64 << 53) as f64;
+            cost *= 1.0 + amp * (2.0 * r - 1.0);
+        }
+
+        // Data semantics.
+        let old = self.mem.read(addr & !7);
+        let (new, returned, modified) = op.apply(old);
+        if modified {
+            self.mem.write(addr & !7, new);
+        }
+
+        // Plain writes retire into the store buffer: visible latency is the
+        // issue cost (plus any full-buffer stall); the drain pays `cost`.
+        if kind == OpKind::Write {
+            let stall = self.wb[core].push_write(now, line, cost);
+            latency += self.cfg.timing.write_issue + stall;
+        } else {
+            latency += cost;
+        }
+
+        self.clock[core] += latency;
+        Access {
+            latency,
+            level,
+            distance,
+            value: returned,
+            modified,
+            prior_state,
+        }
+    }
+
+    /// Convenience: an aligned 64-bit access.
+    pub fn access64(&mut self, core: CoreId, op: Op, addr: u64) -> Access {
+        self.access(core, op, addr, Width::W64)
+    }
+
+    // ----- line-granular walk ----------------------------------------------
+
+    fn ivy_local_hit_level(&self, core: CoreId, line: u64) -> Option<Level> {
+        let module = self.cfg.topology.l2_module_of(core);
+        if self.l1[core].contains(line) {
+            Some(Level::L1)
+        } else if self.l2[module].contains(line) {
+            Some(Level::L2)
+        } else {
+            None
+        }
+    }
+
+    fn access_line(&mut self, core: CoreId, kind: OpKind, line: u64) -> LineWalk {
+        let topo = self.cfg.topology;
+        let my_die = topo.die_of(core);
+        let rec = *self.coherence.get_or_create(line, my_die as u8);
+        let needs_ownership = kind != OpKind::Read;
+        let forward = self.cfg.protocol.has_forward();
+
+        let my_state = rec.state_at(core, forward);
+        let prior_state = rec
+            .owner
+            .map(|o| rec.state_at(o, forward))
+            .filter(|s| *s != CohState::I)
+            .unwrap_or(my_state);
+        // For overhead/report classification use the holder's state; if the
+        // line is shared by others while I hold S, that's SharedLike.
+        let class_state = match rec.class {
+            GlobalClass::Shared => CohState::S,
+            GlobalClass::Owned => CohState::O,
+            GlobalClass::Modified => CohState::M,
+            GlobalClass::Exclusive => CohState::E,
+            GlobalClass::Uncached => CohState::I,
+        };
+
+        // 1. Local hit?
+        let local_level = if rec.holds(core) {
+            self.ivy_local_hit_level(core, line)
+        } else {
+            // lazily drop stale tags left behind by invalidations
+            self.l1[core].remove(line);
+            self.l2[topo.l2_module_of(core)].remove(line);
+            None
+        };
+
+        let t = self.cfg.timing;
+        let others = rec.other_sharers(core);
+
+        // Fast path (perf §Perf-2): a local hit that requires no coherence
+        // transition — a read of our own line, or an RMW on a line we
+        // already hold in M with no other sharers. Skips the transition and
+        // fill machinery entirely; this is the inner loop of every pointer
+        // chase and bandwidth sweep.
+        if let Some(lvl) = local_level {
+            let no_transition = if needs_ownership {
+                rec.class == GlobalClass::Modified
+                    && rec.owner == Some(core)
+                    && others == 0
+            } else {
+                others == 0
+                    || matches!(rec.class, GlobalClass::Shared | GlobalClass::Owned)
+            };
+            if no_transition && lvl == Level::L1 {
+                self.stats.record_hit(Level::L1);
+                self.l1[core].touch(line);
+                if self.prefetched.remove(&line) {
+                    self.stats.prefetch_hits += 1;
+                }
+                let c = if needs_ownership
+                    && self.cfg.l1.write_policy == WritePolicy::WriteThrough
+                {
+                    t.r_l2
+                } else {
+                    t.r_l1
+                };
+                return LineWalk {
+                    cost: c,
+                    level: Level::L1,
+                    distance: Distance::Local,
+                    prior_state: class_state.max_dirty(prior_state),
+                };
+            }
+        }
+
+        let (mut cost, level, distance, supplier_core) = if let Some(lvl) = local_level {
+            let c = match lvl {
+                Level::L1 => {
+                    // Bulldozer's write-through L1: stores/atomics proceed to
+                    // the L2 (Eq. 11 replaces R_L1 with R_L2 on AMD).
+                    if needs_ownership
+                        && self.cfg.l1.write_policy == WritePolicy::WriteThrough
+                    {
+                        t.r_l2
+                    } else {
+                        t.r_l1
+                    }
+                }
+                Level::L2 => t.r_l2,
+                _ => unreachable!(),
+            };
+            self.stats.record_hit(lvl);
+            (c, lvl, Distance::Local, None)
+        } else {
+            self.find_data(core, line, &rec)
+        };
+
+        // 2. Ownership: invalidate the other sharers (Eq. 7/8 — parallel,
+        //    max). Only shared states pay this; for E/M the single copy is
+        //    invalidated by the RFO transfer itself (Eq. 2).
+        let _ = others;
+        if needs_ownership && matches!(class_state, CohState::S | CohState::O | CohState::F) {
+            cost += self.invalidation_cost(core, line, &rec, class_state);
+        }
+
+        // 3. Cross-socket dirty share on MESI(F): write-back to memory
+        //    (§4.1.3: Intel adds M for off-die accesses of modified lines).
+        if rec.class == GlobalClass::Modified
+            && rec.owner.is_some()
+            && rec.owner != Some(core)
+        {
+            let owner = rec.owner.unwrap();
+            let d = topo.distance(core, owner);
+            let wb_needed = self
+                .cfg
+                .protocol
+                .on_remote_read(CohState::M, d.hops() == 0)
+                .writeback;
+            if wb_needed && d.hops() > 0 {
+                cost += t.mem;
+                self.stats.writebacks += 1;
+            }
+        }
+
+        // 4. State transition + fills.
+        self.apply_transition(core, kind, line, rec, supplier_core);
+
+        // 5. Prefetchers (§5.6).
+        if level != Level::L1 {
+            self.run_prefetchers(core, line, level);
+        } else if self.prefetched.remove(&line) {
+            self.stats.prefetch_hits += 1;
+        }
+
+        LineWalk { cost, level, distance, prior_state: class_state.max_dirty(prior_state) }
+    }
+
+    /// Locate the data for a miss and price the transfer.
+    fn find_data(
+        &mut self,
+        core: CoreId,
+        line: u64,
+        rec: &LineRecord,
+    ) -> (f64, Level, Distance, Option<CoreId>) {
+        let topo = self.cfg.topology;
+        let t = self.cfg.timing;
+        let my_die = topo.die_of(core);
+
+        // Clean shared lines resident in an L3 are served by that L3 slice
+        // directly (the inclusive L3 is the designated responder for its
+        // die) — preferring the local die, then remote dies over the fabric.
+        if rec.class == GlobalClass::Shared && !self.l3.is_empty() {
+            let mut dies: Vec<usize> = vec![my_die];
+            dies.extend((0..self.l3.len()).filter(|&d| d != my_die));
+            for die in dies {
+                if rec.in_l3 & (1 << die) != 0 && self.l3[die].contains(line) {
+                    let d = if die == my_die {
+                        Distance::SameDie
+                    } else {
+                        topo.distance_to_die(core, die)
+                    };
+                    self.stats.record_hit(Level::L3);
+                    self.stats.hops += d.hops() as u64;
+                    return (t.r_l3 + t.hop_cost(d.hops()), Level::L3, d, None);
+                }
+            }
+        }
+
+        // A private cache that can supply (M/O/E/F holder)?
+        if let Some(owner) = rec.owner {
+            let forward = self.cfg.protocol.has_forward();
+            if owner != core && rec.holds(owner) && rec.state_at(owner, forward).can_supply() {
+                let d = topo.distance(core, owner);
+                self.stats.cache_to_cache += 1;
+                self.stats.hops += d.hops() as u64;
+                let base = match d {
+                    Distance::SharedL2 => t.shared_l2_transfer(),
+                    Distance::SameDie => t.same_die_transfer(),
+                    Distance::SameSocket | Distance::OtherSocket => {
+                        // remote die: transfer via the owner's L3/hop
+                        t.same_die_transfer() + t.hop
+                    }
+                    Distance::Local => unreachable!("local handled above"),
+                };
+                return (base, self.supplier_level(owner, line), d, Some(owner));
+            }
+        }
+
+        // An L3 slice that holds the line? Prefer the local die.
+        if !self.l3.is_empty() {
+            let die_has = |die: usize| rec.in_l3 & (1 << die) != 0 && self.l3[die].contains(line);
+            if die_has(my_die) {
+                // Intel CVB / §5.1.1: if other cores' bits are set, the L3
+                // must snoop them even when the data is right here (silent
+                // eviction keeps bits conservative). M lines written back
+                // precisely avoid the snoop — that emerges because their
+                // sharer bits were cleared on eviction.
+                let on_die_others = rec.other_sharers(core) & topo.die_mask(my_die);
+                let snoop = match self.cfg.l3_policy {
+                    L3Policy::InclusiveCoreValid => on_die_others != 0,
+                    // Bulldozer has no CVBs: a hit in the non-inclusive L3
+                    // still probes the on-die cores via HT Assist (filtered).
+                    L3Policy::NonInclusive => {
+                        if rec.other_sharers(core) != 0 {
+                            true
+                        } else {
+                            self.stats.ht_assist_filtered += 1;
+                            false
+                        }
+                    }
+                };
+                self.stats.record_hit(Level::L3);
+                let cost = if snoop { t.same_die_transfer() } else { t.r_l3 };
+                return (cost, Level::L3, Distance::SameDie, None);
+            }
+            for die in 0..self.l3.len() {
+                if die != my_die && die_has(die) {
+                    let d = topo.distance_to_die(core, die);
+                    self.stats.hops += d.hops() as u64;
+                    self.stats.record_hit(Level::L3);
+                    let mut cost = t.r_l3 + t.hop_cost(d.hops());
+                    // MESI(F) cannot dirty-share: serving a dirty L3 line
+                    // across the interconnect forces a memory write-back
+                    // (§4.1.3 / §5.1.1 "the data has to be written to
+                    // memory incurring M"). MOESI's O state avoids it.
+                    if rec.dirty && !self.cfg.protocol.has_owned() && d.hops() > 0 {
+                        cost += t.mem;
+                        self.stats.writebacks += 1;
+                        let home = rec.home_die;
+                        let r = self.coherence.get_or_create(line, home);
+                        r.dirty = false;
+                    }
+                    return (cost, Level::L3, d, None);
+                }
+            }
+        }
+
+        // Clean shared lines still resident in another sharer's private
+        // caches (no L3 copy — Bulldozer's non-inclusive L3, Phi's L3-less
+        // design): the coherence fabric sources them cache-to-cache from
+        // the nearest *actually resident* sharer.
+        if matches!(rec.class, GlobalClass::Shared | GlobalClass::Owned) {
+            let mut best: Option<(Distance, CoreId)> = None;
+            let mut sharers = rec.other_sharers(core);
+            while sharers != 0 {
+                let c = sharers.trailing_zeros() as usize;
+                sharers &= sharers - 1;
+                let module = topo.l2_module_of(c);
+                if self.l1[c].contains(line) || self.l2[module].contains(line) {
+                    let d = topo.distance(core, c);
+                    if best.map_or(true, |(bd, _)| d < bd) {
+                        best = Some((d, c));
+                    }
+                }
+            }
+            if let Some((d, c)) = best {
+                self.stats.cache_to_cache += 1;
+                self.stats.hops += d.hops() as u64;
+                let cost = match d {
+                    Distance::SharedL2 => t.shared_l2_transfer(),
+                    Distance::SameDie => t.same_die_transfer(),
+                    _ => t.same_die_transfer() + t.hop,
+                };
+                return (cost, self.supplier_level(c, line), d, Some(c));
+            }
+        }
+
+        // Plain shared copies with no resident supplier fall through to
+        // memory.
+        let home_die = rec.home_die as usize;
+        let d = topo.distance_to_die(core, home_die);
+        self.stats.record_hit(Level::Memory);
+        self.stats.hops += d.hops() as u64;
+        let cost = t.r_l3_or_l2() + t.mem + t.hop_cost(d.hops());
+        (cost, Level::Memory, d, None)
+    }
+
+    fn supplier_level(&self, owner: CoreId, line: u64) -> Level {
+        let module = self.cfg.topology.l2_module_of(owner);
+        if self.l1[owner].contains(line) {
+            Level::L1
+        } else if self.l2[module].contains(line) {
+            Level::L2
+        } else {
+            Level::L3
+        }
+    }
+
+    /// Price the parallel invalidations for a read-for-ownership on a
+    /// shared line (Eq. 7/8), including Bulldozer's unconditional remote
+    /// broadcast (§5.1.2) and its §6.2 fixes.
+    fn invalidation_cost(
+        &mut self,
+        core: CoreId,
+        line: u64,
+        rec: &LineRecord,
+        class_state: CohState,
+    ) -> f64 {
+        let topo = self.cfg.topology;
+        let t = self.cfg.timing;
+        let my_die = topo.die_of(core);
+        let mut max_inv: f64 = 0.0;
+
+        let mut targets = rec.other_sharers(core);
+        while targets != 0 {
+            let target = targets.trailing_zeros() as usize;
+            targets &= targets - 1;
+            let d = topo.distance(core, target);
+            let inv = match d {
+                Distance::Local => 0.0,
+                Distance::SharedL2 => t.shared_l2_transfer() - t.r_l1,
+                Distance::SameDie => t.same_die_transfer() - t.r_l1,
+                Distance::SameSocket | Distance::OtherSocket => {
+                    t.same_die_transfer() - t.r_l1 + t.hop
+                }
+            };
+            self.stats.invalidations_sent += 1;
+            self.stats.hops += d.hops() as u64;
+            max_inv = max_inv.max(inv);
+        }
+
+        // Bulldozer: no sharer tracking — S/O writes broadcast to remote
+        // dies even when every sharer is local (§5.1.2). The §6.2.2 HT Assist
+        // extension suppresses the broadcast for tracked die-local lines;
+        // the §6.2.1 OL/SL states suppress it by construction (die_local).
+        if self
+            .cfg
+            .protocol
+            .write_requires_remote_broadcast(if rec.die_local {
+                CohState::Sl
+            } else {
+                class_state
+            })
+            && topo.n_dies() > 1
+        {
+            let tracked_local = self
+                .cfg
+                .ht_assist
+                .map_or(false, |h| h.track_shared)
+                && self.ht_shared_tracker[my_die].contains(&line);
+            if !tracked_local {
+                self.stats.remote_invalidation_broadcasts += 1;
+                self.stats.hops += 1;
+                max_inv = max_inv.max(t.same_die_transfer() - t.r_l1 + t.hop);
+            } else {
+                self.stats.ht_assist_filtered += 1;
+            }
+        }
+        max_inv
+    }
+
+    /// Apply the protocol transition for this access and maintain tag arrays.
+    fn apply_transition(
+        &mut self,
+        core: CoreId,
+        kind: OpKind,
+        line: u64,
+        old: LineRecord,
+        supplier: Option<CoreId>,
+    ) {
+        let topo = self.cfg.topology;
+        let my_die = topo.die_of(core);
+        let protocol = self.cfg.protocol;
+        let needs_ownership = kind != OpKind::Read;
+        let same_die_supplier =
+            supplier.map_or(true, |s| topo.die_of(s) == my_die);
+
+        let rec = self.coherence.get_or_create(line, my_die as u8);
+
+        if needs_ownership {
+            // RFO: requester becomes the sole (dirty) holder.
+            rec.sharers = 1 << core;
+            rec.owner = Some(core);
+            // Failed CAS does not modify the line, but the RFO was issued
+            // anyway (§5.1.4): clean data ends Exclusive, dirty data must
+            // stay Modified at the new holder.
+            let dirtied = kind != OpKind::Cas || true; // actual dirtiness resolved below
+            let was_dirty = old.dirty || old.class == GlobalClass::Modified || old.class == GlobalClass::Owned;
+            let _ = dirtied;
+            rec.class = if kind == OpKind::Cas && !was_dirty {
+                // success/failure is data-dependent; the engine marks CAS
+                // conservative-clean here and `access` dirties memory via
+                // MemStore. Timing-wise E vs M at the requester is identical.
+                GlobalClass::Exclusive
+            } else {
+                GlobalClass::Modified
+            };
+            rec.dirty = rec.class == GlobalClass::Modified;
+            rec.die_local = false;
+            rec.in_l3 &= !0; // L3 copies stale only if non-inclusive; Intel updates in place
+            if matches!(self.cfg.l3_policy, L3Policy::NonInclusive) {
+                rec.in_l3 = 0;
+            }
+        } else {
+            // Read: join the sharers with the protocol-granted state.
+            let holder_state = old
+                .owner
+                .filter(|o| *o != core && old.holds(*o))
+                .map(|o| old.state_at(o, protocol.has_forward()))
+                .unwrap_or(CohState::I);
+            let outcome = protocol.on_remote_read(holder_state, same_die_supplier);
+            rec.add_sharer(core);
+            match (old.class, outcome.writeback) {
+                (GlobalClass::Uncached, _) if old.sharers == 0 => {
+                    rec.class = GlobalClass::Exclusive;
+                    rec.owner = Some(core);
+                    rec.dirty = old.dirty; // dirty L3-only data stays dirty
+                }
+                (GlobalClass::Exclusive | GlobalClass::Shared, _) => {
+                    rec.class = GlobalClass::Shared;
+                    if protocol.has_forward() || old.class == GlobalClass::Exclusive {
+                        rec.owner = Some(core); // F passes to the newest reader
+                    }
+                    if !protocol.has_forward() && old.class == GlobalClass::Shared {
+                        rec.owner = old.owner;
+                    }
+                    rec.dirty = old.dirty;
+                }
+                (GlobalClass::Modified | GlobalClass::Owned, true) => {
+                    // MESI/MESIF dirty share: write back, both clean now.
+                    self.stats.writebacks += 1;
+                    rec.class = GlobalClass::Shared;
+                    rec.owner = Some(core); // MESIF grants F to the requester
+                    rec.dirty = false;
+                }
+                (GlobalClass::Modified | GlobalClass::Owned, false) => {
+                    // MOESI/GOLS dirty share: previous holder keeps dirty data.
+                    rec.class = GlobalClass::Owned;
+                    rec.owner = old.owner;
+                    rec.dirty = true;
+                }
+                (GlobalClass::Uncached, _) => {
+                    rec.class = GlobalClass::Shared;
+                    rec.dirty = old.dirty;
+                }
+            }
+            // §6.2.1 OL/SL: on-die sharing is provably die-local.
+            if protocol == ProtocolKind::MoesiOlSl {
+                let mask = topo.die_mask(my_die);
+                rec.die_local = rec.sharers & !mask == 0
+                    && matches!(outcome.requester, CohState::Sl | CohState::Ol)
+                    || (old.die_local && rec.sharers & !mask == 0);
+            }
+        }
+
+        // §6.2.2 HT Assist S/O tracking: record die-local shared lines.
+        if let Some(ht) = self.cfg.ht_assist {
+            if ht.track_shared
+                && matches!(rec.class, GlobalClass::Shared | GlobalClass::Owned)
+            {
+                let mask = topo.die_mask(my_die);
+                let tracker = &mut self.ht_shared_tracker[my_die];
+                if rec.sharers & !mask == 0 {
+                    if tracker.len() >= ht.shared_capacity {
+                        // bounded structure: drop arbitrary entry (round-robin
+                        // eviction approximation)
+                        if let Some(&evict) = tracker.iter().next() {
+                            tracker.remove(&evict);
+                        }
+                    }
+                    tracker.insert(line);
+                } else {
+                    tracker.remove(&line);
+                }
+            }
+        }
+
+        // Fills + evictions.
+        let dirty = needs_ownership;
+        self.fill_private(core, line, dirty);
+        if matches!(self.cfg.l3_policy, L3Policy::InclusiveCoreValid) && !self.l3.is_empty() {
+            self.fill_l3(my_die, line, false);
+            let rec = self.coherence.get_or_create(line, my_die as u8);
+            rec.in_l3 |= 1 << my_die;
+        }
+    }
+
+    /// Insert into the private L1 (and handle the eviction chain).
+    fn fill_private(&mut self, core: CoreId, line: u64, dirty: bool) {
+        let module = self.cfg.topology.l2_module_of(core);
+        // Write-through L1: the L2 always holds the current data too.
+        if self.cfg.l1.write_policy == WritePolicy::WriteThrough {
+            match self.l2[module].insert(line, dirty) {
+                Insert::Evicted { victim, dirty } => self.evict_from_l2(core, victim, dirty),
+                _ => {}
+            }
+            match self.l1[core].insert(line, false) {
+                Insert::Evicted { .. } => {} // clean by construction
+                _ => {}
+            }
+            return;
+        }
+        match self.l1[core].insert(line, dirty) {
+            Insert::Evicted { victim, dirty } => {
+                // victim moves to L2
+                match self.l2[module].insert(victim, dirty) {
+                    Insert::Evicted { victim: v2, dirty: d2 } => {
+                        self.evict_from_l2(core, v2, d2)
+                    }
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Handle an eviction out of the private hierarchy.
+    fn evict_from_l2(&mut self, core: CoreId, victim: u64, dirty: bool) {
+        let topo = self.cfg.topology;
+        let die = topo.die_of(core);
+        if dirty {
+            // Dirty write-back: precise — clears the core's sharer bit
+            // ("M cache lines are written back when evicted, updating the
+            // core valid bits", §5.1.1).
+            self.stats.writebacks += 1;
+            if let Some(rec) = self.coherence.get(victim).copied() {
+                let rec_mut = self.coherence.get_or_create(victim, rec.home_die);
+                rec_mut.clear_sharer(core);
+                if rec_mut.sharers == 0 {
+                    rec_mut.class = GlobalClass::Uncached;
+                    rec_mut.owner = None;
+                }
+                rec_mut.dirty = true;
+            }
+            if !self.l3.is_empty() {
+                self.fill_l3(die, victim, true);
+                let home = self.coherence.get(victim).map(|r| r.home_die).unwrap_or(0);
+                let rec = self.coherence.get_or_create(victim, home);
+                rec.in_l3 |= 1 << die;
+            }
+        } else {
+            // Clean (silent) eviction: the sharer bit stays set — the
+            // conservative CVB semantics behind the paper's E-state snoops.
+            if matches!(self.cfg.l3_policy, L3Policy::NonInclusive) && !self.l3.is_empty() {
+                // Bulldozer's L3 acts as a victim cache for clean lines too.
+                self.fill_l3(die, victim, false);
+                let home = self.coherence.get(victim).map(|r| r.home_die).unwrap_or(0);
+                let rec = self.coherence.get_or_create(victim, home);
+                rec.in_l3 |= 1 << die;
+            }
+        }
+    }
+
+    fn fill_l3(&mut self, die: usize, line: u64, dirty: bool) {
+        match self.l3[die].insert(line, dirty) {
+            Insert::Evicted { victim, dirty } => {
+                if dirty {
+                    self.stats.writebacks += 1;
+                }
+                let home = self.coherence.get(victim).map(|r| r.home_die).unwrap_or(0);
+                let rec = self.coherence.get_or_create(victim, home);
+                rec.in_l3 &= !(1 << die);
+                // an L3 dirty eviction writes the data back to memory: the
+                // record is clean unless a private cache still owns it dirty
+                if dirty
+                    && rec.in_l3 == 0
+                    && !matches!(rec.class, GlobalClass::Modified | GlobalClass::Owned)
+                {
+                    rec.dirty = false;
+                }
+                if matches!(self.cfg.l3_policy, L3Policy::InclusiveCoreValid) {
+                    // Inclusive L3 eviction back-invalidates the private
+                    // copies of this die's cores.
+                    let mask = self.cfg.topology.die_mask(die);
+                    if rec.sharers & mask != 0 {
+                        self.stats.back_invalidations += 1;
+                        rec.sharers &= !mask;
+                        if rec.sharers == 0 && rec.owner.map_or(false, |o| mask & (1 << o) != 0)
+                        {
+                            rec.class = GlobalClass::Uncached;
+                            rec.owner = None;
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn run_prefetchers(&mut self, core: CoreId, line: u64, level: Level) {
+        let m = self.cfg.mechanisms;
+        if m.adjacent_line {
+            let buddy = buddy_line(line);
+            self.stats.prefetches_issued += 1;
+            self.prefetched.insert(buddy);
+            self.prefetch_fill(core, buddy);
+        }
+        if m.hw_prefetcher && matches!(level, Level::L3 | Level::Memory) {
+            for pf in self.stream.observe_miss(core, line) {
+                self.stats.prefetches_issued += 1;
+                self.prefetched.insert(pf);
+                self.prefetch_fill(core, pf);
+            }
+        }
+    }
+
+    /// Fill a prefetched line into the private hierarchy (and the inclusive
+    /// L3, which must contain everything the private caches do).
+    fn prefetch_fill(&mut self, core: CoreId, line: u64) {
+        self.fill_private(core, line, false);
+        let die = self.cfg.topology.die_of(core);
+        let rec = self.coherence.get_or_create(line, die as u8);
+        if rec.sharers == 0 {
+            rec.add_sharer(core);
+            rec.class = GlobalClass::Exclusive;
+            rec.owner = Some(core);
+        }
+        if matches!(self.cfg.l3_policy, L3Policy::InclusiveCoreValid) && !self.l3.is_empty() {
+            self.fill_l3(die, line, false);
+            let rec = self.coherence.get_or_create(line, die as u8);
+            rec.in_l3 |= 1 << die;
+        }
+    }
+
+    /// Check the global coherence invariants over every line record — used
+    /// by the property-based tests. Returns the first violation found.
+    ///
+    /// Invariants (DESIGN.md §6):
+    ///  1. Exclusive/Modified ⇒ exactly one (owner) sharer bit, owner set.
+    ///  2. Owned ⇒ owner set, dirty, and the owner is a sharer.
+    ///  3. Shared ⇒ not dirty unless the dirty data lives in some L3.
+    ///  4. Inclusive L3 (Intel): sharers on die d ⇒ the die-d L3 holds the
+    ///     line (core-valid-bit containment).
+    ///  5. Sharer bits only for existing cores.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let topo = self.cfg.topology;
+        let all_cores_mask: u64 = if topo.n_cores == 64 {
+            u64::MAX
+        } else {
+            (1u64 << topo.n_cores) - 1
+        };
+        for (&line, rec) in self.coherence.iter() {
+            let err = |msg: String| Err(format!("line {line:#x}: {msg} ({rec:?})"));
+            if rec.sharers & !all_cores_mask != 0 {
+                return err("sharer bit for a non-existent core".into());
+            }
+            match rec.class {
+                GlobalClass::Exclusive | GlobalClass::Modified => {
+                    let Some(owner) = rec.owner else {
+                        return err("E/M without an owner".into());
+                    };
+                    if rec.sharers != (1 << owner) {
+                        return err(format!(
+                            "E/M must have exactly the owner as sharer (owner {owner})"
+                        ));
+                    }
+                }
+                GlobalClass::Owned => {
+                    let Some(owner) = rec.owner else {
+                        return err("Owned without an owner".into());
+                    };
+                    if !rec.holds(owner) {
+                        return err("Owned owner lost its sharer bit".into());
+                    }
+                    if !rec.dirty {
+                        return err("Owned must be dirty".into());
+                    }
+                }
+                GlobalClass::Shared => {
+                    if rec.dirty && rec.in_l3 == 0 {
+                        return err("Shared+dirty data must live in some L3".into());
+                    }
+                }
+                GlobalClass::Uncached => {
+                    if rec.sharers != 0 {
+                        return err("Uncached with sharer bits".into());
+                    }
+                }
+            }
+            if matches!(self.cfg.l3_policy, L3Policy::InclusiveCoreValid)
+                && !self.l3.is_empty()
+            {
+                for die in 0..topo.n_dies() {
+                    if rec.sharers & topo.die_mask(die) != 0
+                        && !self.l3[die].contains(line)
+                    {
+                        return err(format!(
+                            "inclusive L3 of die {die} lost a line its cores share"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Flush a core's private caches (testing / placement helper): clean
+    /// lines silently, dirty lines written back.
+    pub fn flush_private(&mut self, core: CoreId) {
+        let module = self.cfg.topology.l2_module_of(core);
+        let l1_lines: Vec<u64> = self.l1[core].lines().collect();
+        for line in l1_lines {
+            let dirty = self.l1[core].remove(line).unwrap_or(false);
+            if dirty {
+                self.evict_from_l2(core, line, true);
+            }
+        }
+        let l2_lines: Vec<u64> = self.l2[module].lines().collect();
+        for line in l2_lines {
+            let dirty = self.l2[module].remove(line).unwrap_or(false);
+            self.evict_from_l2(core, line, dirty);
+        }
+    }
+}
+
+/// Internal result of a line walk.
+struct LineWalk {
+    cost: f64,
+    level: Level,
+    distance: Distance,
+    prior_state: CohState,
+}
+
+trait MaxDirty {
+    fn max_dirty(self, other: CohState) -> CohState;
+}
+
+impl MaxDirty for CohState {
+    /// Prefer the more informative (dirty) state for reporting.
+    fn max_dirty(self, other: CohState) -> CohState {
+        if other.is_dirty() && !self.is_dirty() {
+            other
+        } else {
+            self
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    fn haswell() -> Machine {
+        Machine::new(arch::haswell())
+    }
+
+    #[test]
+    fn local_l1_read_hit_costs_r_l1() {
+        let mut m = haswell();
+        m.access64(0, Op::Read, 0x1000);
+        let a = m.access64(0, Op::Read, 0x1000);
+        assert_eq!(a.level, Level::L1);
+        assert!((a.latency - m.cfg.timing.r_l1).abs() < 1e-9, "{}", a.latency);
+    }
+
+    #[test]
+    fn atomic_slower_than_read_by_exec() {
+        let mut m = haswell();
+        m.access64(0, Op::Faa { delta: 0 }, 0x1000);
+        let r = m.access64(0, Op::Read, 0x1000).latency;
+        let f = m.access64(0, Op::Faa { delta: 0 }, 0x1000).latency;
+        assert!(f > r, "atomic {f} must exceed read {r}");
+        assert!((f - r - m.cfg.timing.e_faa).abs() < 4.0);
+    }
+
+    #[test]
+    fn cold_miss_goes_to_memory() {
+        let mut m = haswell();
+        let a = m.access64(0, Op::Read, 0x10_0000);
+        assert_eq!(a.level, Level::Memory);
+        assert!(a.latency > m.cfg.timing.mem);
+    }
+
+    #[test]
+    fn remote_dirty_line_snooped_from_owner() {
+        let mut m = haswell();
+        // core 1 writes (M state), core 0 then FAAs.
+        m.access64(1, Op::Faa { delta: 1 }, 0x2000);
+        let a = m.access64(0, Op::Faa { delta: 1 }, 0x2000);
+        assert_eq!(a.distance, Distance::SameDie);
+        assert!(a.latency > m.cfg.timing.r_l3, "cache-to-cache: {}", a.latency);
+        assert!(m.stats.cache_to_cache >= 1);
+    }
+
+    #[test]
+    fn shared_line_rmw_invalidates() {
+        let mut m = haswell();
+        m.access64(1, Op::Read, 0x3000);
+        m.access64(2, Op::Read, 0x3000);
+        let before = m.stats.invalidations_sent;
+        m.access64(0, Op::Faa { delta: 1 }, 0x3000);
+        assert!(m.stats.invalidations_sent > before);
+        // afterwards core 0 is the only holder
+        let rec = m.coherence.get(line_of(0x3000)).unwrap();
+        assert_eq!(rec.sharers, 1 << 0);
+        assert_eq!(rec.class, GlobalClass::Modified);
+    }
+
+    #[test]
+    fn cas_data_semantics_through_engine() {
+        let mut m = haswell();
+        m.access64(0, Op::Write { value: 5 }, 0x4000);
+        let fail = m.access64(0, Op::Cas { expected: 9, new: 1, fetched_operands: 1 }, 0x4000);
+        assert!(!fail.modified);
+        assert_eq!(fail.value, 5);
+        let ok = m.access64(0, Op::Cas { expected: 5, new: 1, fetched_operands: 1 }, 0x4000);
+        assert!(ok.modified);
+        assert_eq!(m.mem.read(0x4000), 1);
+    }
+
+    #[test]
+    fn writes_are_buffered_cheap() {
+        let mut m = haswell();
+        let w = m.access64(0, Op::Write { value: 1 }, 0x5000).latency;
+        let f = m.access64(0, Op::Faa { delta: 1 }, 0x6000).latency;
+        assert!(w < f, "buffered write {w} should be far cheaper than atomic {f}");
+    }
+
+    #[test]
+    fn atomic_drains_write_buffer() {
+        let mut m = haswell();
+        // salvo of writes to distinct lines fills drain queue
+        for i in 0..16u64 {
+            m.access64(0, Op::Write { value: i }, 0x9000 + i * 64);
+        }
+        let drains_before = m.stats.write_buffer_drains;
+        m.access64(0, Op::Faa { delta: 1 }, 0x20_0000);
+        assert!(m.stats.write_buffer_drains > drains_before);
+    }
+
+    #[test]
+    fn unaligned_atomic_locks_bus() {
+        let mut m = haswell();
+        let aligned = m.access64(0, Op::Faa { delta: 1 }, 0x7000).latency;
+        let unaligned = m
+            .access(0, Op::Faa { delta: 1 }, 0x7000 + 60, Width::W64)
+            .latency;
+        assert!(m.stats.bus_locks >= 1);
+        assert!(
+            unaligned > aligned + m.cfg.unaligned.bus_lock_ns * 0.9,
+            "unaligned {unaligned} vs aligned {aligned}"
+        );
+    }
+
+    #[test]
+    fn unaligned_read_mild_penalty() {
+        let mut m = haswell();
+        m.access64(0, Op::Read, 0x8000);
+        m.access64(0, Op::Read, 0x8040);
+        let aligned = m.access64(0, Op::Read, 0x8000).latency;
+        let unaligned = m.access(0, Op::Read, 0x8000 + 60, Width::W64).latency;
+        assert!(unaligned < aligned * 1.5, "reads must not bus-lock: {unaligned}");
+    }
+
+    #[test]
+    fn mesif_dirty_share_cleans_line() {
+        let mut m = haswell();
+        m.access64(1, Op::Faa { delta: 1 }, 0xA000); // M at core 1
+        m.access64(0, Op::Read, 0xA000); // share
+        let rec = m.coherence.get(line_of(0xA000)).unwrap();
+        assert_eq!(rec.class, GlobalClass::Shared);
+        assert!(!rec.dirty, "MESIF dirty share must write back");
+    }
+
+    #[test]
+    fn moesi_dirty_share_keeps_owner() {
+        let mut m = Machine::new(arch::bulldozer());
+        m.access64(2, Op::Faa { delta: 1 }, 0xA000); // M at core 2
+        m.access64(4, Op::Read, 0xA000); // different module, same die
+        let rec = m.coherence.get(line_of(0xA000)).unwrap();
+        assert_eq!(rec.class, GlobalClass::Owned);
+        assert!(rec.dirty, "MOESI keeps the line dirty-shared");
+        assert_eq!(rec.owner, Some(2));
+    }
+
+    #[test]
+    fn bulldozer_shared_write_broadcasts_remote() {
+        let mut m = Machine::new(arch::bulldozer());
+        // two cores on die 0 share the line
+        m.access64(0, Op::Read, 0xB000);
+        m.access64(2, Op::Read, 0xB000);
+        let before = m.stats.remote_invalidation_broadcasts;
+        m.access64(0, Op::Faa { delta: 1 }, 0xB000);
+        assert_eq!(
+            m.stats.remote_invalidation_broadcasts,
+            before + 1,
+            "MOESI without sharer tracking must broadcast (§5.1.2)"
+        );
+    }
+
+    #[test]
+    fn intel_shared_write_does_not_broadcast() {
+        let mut m = haswell();
+        m.access64(0, Op::Read, 0xB000);
+        m.access64(2, Op::Read, 0xB000);
+        m.access64(0, Op::Faa { delta: 1 }, 0xB000);
+        assert_eq!(m.stats.remote_invalidation_broadcasts, 0);
+    }
+
+    #[test]
+    fn clock_advances() {
+        let mut m = haswell();
+        assert_eq!(m.clock_of(0), 0.0);
+        m.access64(0, Op::Faa { delta: 1 }, 0xC000);
+        assert!(m.clock_of(0) > 0.0);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut m = haswell();
+        m.access64(0, Op::Faa { delta: 1 }, 0xC000);
+        m.reset();
+        assert_eq!(m.stats.accesses, 0);
+        assert_eq!(m.clock_of(0), 0.0);
+        assert!(m.coherence.is_empty());
+    }
+
+    #[test]
+    fn adjacent_line_prefetch_hits() {
+        let mut m = haswell();
+        m.cfg.mechanisms.adjacent_line = true;
+        m.access64(0, Op::Read, 0xD000); // miss; buddy 0xD040 prefetched
+        let a = m.access64(0, Op::Read, 0xD040);
+        assert_eq!(a.level, Level::L1, "buddy must be resident");
+        assert!(m.stats.prefetches_issued >= 1);
+    }
+
+    #[test]
+    fn capacity_eviction_reaches_memory_again() {
+        let mut m = haswell();
+        // stream 2x the L2 capacity in lines, then revisit the start:
+        // it must have been evicted to L3 (inclusive) — not memory.
+        let lines = (2 * m.cfg.l2.size / 64) as u64;
+        for i in 0..lines {
+            m.access64(0, Op::Read, i * 64);
+        }
+        let a = m.access64(0, Op::Read, 0);
+        assert_eq!(a.level, Level::L3, "evicted lines live in inclusive L3");
+    }
+}

@@ -1,0 +1,292 @@
+//! Discrete-event contention engine (Fig. 8a–c, §5.4).
+//!
+//! N threads hammer the *same* cache line with atomics or stores. Atomics
+//! strictly serialize on line ownership: each operation must first migrate
+//! the line from the previous owner, at the engine-style transfer cost for
+//! that distance. Plain stores on the Intel parts are absorbed by the store
+//! buffers — the architecture "detects that issued operations access the
+//! same cache line in an arbitrary order, annihilating the need for the
+//! actual execution of all the writes" (§5.4) — so they scale with thread
+//! count instead of collapsing.
+//!
+//! Grant policy: FIFO by request time, except on Bulldozer where HT Assist
+//! arbitration prefers same-die requesters; this batching is what makes the
+//! measured curve *rise* again past 8 threads (§5.4).
+
+use crate::atomics::OpKind;
+use crate::sim::config::MachineConfig;
+use crate::sim::topology::{CoreId, Distance};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Result of a contention run.
+#[derive(Debug, Clone, Copy)]
+pub struct ContentionResult {
+    pub threads: usize,
+    /// Aggregate bandwidth over all threads, GB/s (8-byte operands).
+    pub bandwidth_gbs: f64,
+    /// Mean per-op latency, ns.
+    pub mean_latency_ns: f64,
+}
+
+#[derive(Debug, PartialEq)]
+struct Request {
+    time: f64,
+    thread: usize,
+}
+
+impl Eq for Request {}
+
+impl Ord for Request {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by time (BinaryHeap is a max-heap)
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.thread.cmp(&self.thread))
+    }
+}
+
+impl PartialOrd for Request {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Transfer cost of migrating line ownership from `from` to `to`.
+fn transfer_cost(cfg: &MachineConfig, from: CoreId, to: CoreId) -> f64 {
+    let t = cfg.timing;
+    if from == to {
+        // already the owner: a local dirty hit
+        return t.r_l1.max(1.0);
+    }
+    match cfg.topology.distance(to, from) {
+        Distance::Local => t.r_l1,
+        Distance::SharedL2 => t.shared_l2_transfer(),
+        Distance::SameDie => t.same_die_transfer(),
+        Distance::SameSocket | Distance::OtherSocket => t.same_die_transfer() + t.hop,
+    }
+}
+
+/// Ring saturation on Xeon Phi: with `n` active requesters the effective
+/// per-transfer cost grows because every migration crosses the shared ring
+/// and the tag directories serialize (§5.4: converges to ≈0.7 GB/s for
+/// atomics). A mild linear term reproduces the measured collapse.
+fn ring_penalty(cfg: &MachineConfig, n: usize) -> f64 {
+    if cfg.name == "Xeon Phi" && n > 1 {
+        0.35 * cfg.timing.hop * (n.min(16) as f64 - 1.0) / 15.0
+    } else {
+        0.0
+    }
+}
+
+/// Run the contention benchmark: `threads` cores issue `ops_per_thread`
+/// operations of `kind` to one shared line. Thread i runs on core i
+/// (dense placement, as the paper pins threads).
+pub fn run_contention(
+    cfg: &MachineConfig,
+    threads: usize,
+    kind: OpKind,
+    ops_per_thread: usize,
+) -> ContentionResult {
+    assert!(threads >= 1 && threads <= cfg.topology.n_cores);
+    let op_bytes = 8.0;
+
+    // Contended plain stores with write combining: each thread retires into
+    // its own store buffer at the issue cost; the line ping-pong is absorbed
+    // (§5.4). Aggregate bandwidth ≈ threads * 8B / issue-cost, matching the
+    // near-linear ~100 GB/s scaling on Ivy Bridge.
+    if kind == OpKind::Write && cfg.contended_write_combining {
+        let per_op = cfg.timing.write_issue;
+        let total_ops = (threads * ops_per_thread) as f64;
+        let span = ops_per_thread as f64 * per_op; // threads run in parallel
+        return ContentionResult {
+            threads,
+            bandwidth_gbs: total_ops * op_bytes / span,
+            mean_latency_ns: per_op,
+        };
+    }
+
+    // Everything else serializes on the line. Event loop over request times.
+    //
+    // Two different durations matter:
+    //  * the requester's *latency* — transfer + execute (what the thread
+    //    waits before it can issue its next op), and
+    //  * the line's *occupancy* — how long the cache controller is busy
+    //    before it can grant the next requester. With deep request queues
+    //    the fabric pipelines the hand-offs (the next RFO is in flight while
+    //    the previous result returns), so occupancy shrinks as offered load
+    //    grows — this is what makes Bulldozer's (and Ivy Bridge's) contended
+    //    bandwidth *rise again* beyond 8 threads (§5.4). The Phi ring has no
+    //    such slack: its directory hops serialize, hence the collapse.
+    let exec = match kind {
+        OpKind::Write => cfg.timing.write_issue.max(1.0),
+        k => cfg.timing.exec(k).max(1.0),
+    };
+    let pipeline_factor = if cfg.name == "Xeon Phi" {
+        // The ring pipelines deeply (in-flight transfers overlap), but the
+        // serialized directory lookups bound the gain; these factors land
+        // the convergence at the paper's ≈0.7 GB/s (atomics) and ≈3 GB/s
+        // (writes) plateaus (§5.4).
+        if threads == 1 {
+            0.0
+        } else if kind == OpKind::Write {
+            0.99
+        } else {
+            0.945
+        }
+    } else {
+        0.6 * ((threads as f64 - 1.0) / 16.0).min(1.0)
+    };
+    let mut heap: BinaryHeap<Request> = (0..threads)
+        .map(|t| Request { time: 0.0, thread: t })
+        .collect();
+    let mut remaining = vec![ops_per_thread; threads];
+    let mut owner: CoreId = 0;
+    let mut line_free_at: f64 = 0.0;
+    let mut total_latency = 0.0;
+    let mut done_ops = 0usize;
+    let mut finish = 0.0f64;
+    // Bulldozer's HT Assist arbitration prefers same-die requesters but
+    // bounds the batch to keep remote dies from starving.
+    let prefer_local = cfg.name.starts_with("Bulldozer");
+    let mut local_batch = 0u32;
+    const MAX_LOCAL_BATCH: u32 = 4;
+
+    while let Some(req) = heap.pop() {
+        let req = if prefer_local && !heap.is_empty() && local_batch < MAX_LOCAL_BATCH {
+            let owner_die = cfg.topology.die_of(owner);
+            if cfg.topology.die_of(req.thread) != owner_die {
+                // Serve a pending same-die request first, if one is ready.
+                let mut stash = Vec::new();
+                let mut chosen = req;
+                while let Some(r2) = heap.pop() {
+                    if cfg.topology.die_of(r2.thread) == owner_die
+                        && r2.time <= line_free_at
+                    {
+                        stash.push(chosen);
+                        chosen = r2;
+                        break;
+                    }
+                    stash.push(r2);
+                }
+                for s in stash {
+                    heap.push(s);
+                }
+                chosen
+            } else {
+                req
+            }
+        } else {
+            req
+        };
+
+        let t = req.thread;
+        if prefer_local {
+            if cfg.topology.die_of(t) == cfg.topology.die_of(owner) {
+                local_batch += 1;
+            } else {
+                local_batch = 0;
+            }
+        }
+        let start = req.time.max(line_free_at);
+        let full = transfer_cost(cfg, owner, t) + exec + ring_penalty(cfg, threads);
+        let end = start + full;
+        owner = t;
+        // The line frees earlier than the requester finishes once hand-offs
+        // pipeline; a lone thread (queue empty) cannot overlap anything.
+        let occupancy = if heap.is_empty() {
+            full
+        } else {
+            full * (1.0 - pipeline_factor)
+        };
+        line_free_at = start + occupancy;
+        total_latency += end - req.time;
+        done_ops += 1;
+        finish = finish.max(end);
+        remaining[t] -= 1;
+        if remaining[t] > 0 {
+            heap.push(Request { time: end, thread: t });
+        }
+    }
+
+    ContentionResult {
+        threads,
+        bandwidth_gbs: done_ops as f64 * op_bytes / finish,
+        mean_latency_ns: total_latency / done_ops as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    #[test]
+    fn single_thread_has_peak_atomic_bandwidth() {
+        let cfg = arch::ivybridge();
+        let one = run_contention(&cfg, 1, OpKind::Faa, 2000);
+        let eight = run_contention(&cfg, 8, OpKind::Faa, 2000);
+        assert!(
+            one.bandwidth_gbs > eight.bandwidth_gbs,
+            "contention must reduce atomic bandwidth: {} vs {}",
+            one.bandwidth_gbs,
+            eight.bandwidth_gbs
+        );
+    }
+
+    #[test]
+    fn intel_contended_writes_scale() {
+        let cfg = arch::ivybridge();
+        let w1 = run_contention(&cfg, 1, OpKind::Write, 2000);
+        let w8 = run_contention(&cfg, 8, OpKind::Write, 2000);
+        assert!(
+            w8.bandwidth_gbs > 4.0 * w1.bandwidth_gbs,
+            "write combining must scale: {} vs {}",
+            w8.bandwidth_gbs,
+            w1.bandwidth_gbs
+        );
+        // §5.4: ≈100 GB/s with eight cores
+        assert!(w8.bandwidth_gbs > 50.0, "got {}", w8.bandwidth_gbs);
+    }
+
+    #[test]
+    fn phi_converges_low() {
+        let cfg = arch::xeonphi();
+        let r16 = run_contention(&cfg, 16, OpKind::Faa, 500);
+        let r32 = run_contention(&cfg, 32, OpKind::Faa, 500);
+        // converged: adding threads doesn't change much
+        let ratio = r32.bandwidth_gbs / r16.bandwidth_gbs;
+        assert!((0.5..2.0).contains(&ratio), "ratio {ratio}");
+        // ≈0.73 GB/s for FAA (§5.4) — allow generous tolerance
+        assert!(r32.bandwidth_gbs < 2.0, "got {}", r32.bandwidth_gbs);
+    }
+
+    #[test]
+    fn phi_writes_beat_atomics_but_collapse_too() {
+        let cfg = arch::xeonphi();
+        let w = run_contention(&cfg, 32, OpKind::Write, 500);
+        let f = run_contention(&cfg, 32, OpKind::Faa, 500);
+        assert!(w.bandwidth_gbs > f.bandwidth_gbs);
+        assert!(w.bandwidth_gbs < 20.0, "no write combining on Phi: {}", w.bandwidth_gbs);
+    }
+
+    #[test]
+    fn bulldozer_non_monotonic() {
+        let cfg = arch::bulldozer();
+        let b1 = run_contention(&cfg, 1, OpKind::Faa, 1000).bandwidth_gbs;
+        let b8 = run_contention(&cfg, 8, OpKind::Faa, 1000).bandwidth_gbs;
+        let b32 = run_contention(&cfg, 32, OpKind::Faa, 1000).bandwidth_gbs;
+        assert!(b1 > b8, "dip until 8 threads: {b1} vs {b8}");
+        assert!(b32 > b8, "recovers past 8 threads: {b32} vs {b8}");
+    }
+
+    #[test]
+    fn all_ops_complete() {
+        let cfg = arch::haswell();
+        let r = run_contention(&cfg, 4, OpKind::Cas, 100);
+        assert!(r.bandwidth_gbs > 0.0);
+        assert!(r.mean_latency_ns > 0.0);
+    }
+}

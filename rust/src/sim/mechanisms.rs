@@ -1,0 +1,173 @@
+//! Hardware mechanisms that perturb the benchmarks (§3.3, §5.6): stream and
+//! adjacent-line prefetchers, and the clock-frequency modifiers (Turbo Boost,
+//! EIST, C-states). The paper disables all of them for the main results and
+//! re-enables them selectively for Figure 9; the simulator does the same.
+
+use crate::sim::cache::Line;
+use crate::util::fxhash::FastMap;
+
+/// Which mechanisms are enabled (all off reproduces the paper's baseline).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Mechanisms {
+    /// Intel "Hardware Prefetcher": streams lines after repeated sequential
+    /// misses (prefetches into L2/L3, hiding L3/memory latency).
+    pub hw_prefetcher: bool,
+    /// "Adjacent Cache Line Prefetch": every miss also fetches the 128-byte
+    /// buddy line.
+    pub adjacent_line: bool,
+    /// Turbo Boost: opportunistic clock uplift.
+    pub turbo_boost: bool,
+    /// Enhanced Intel SpeedStep: DVFS — adds jitter, mild uplift when warm.
+    pub eist: bool,
+    /// C-states: deep idle exits add wakeup latency to the first accesses.
+    pub c_states: bool,
+}
+
+impl Mechanisms {
+    pub const ALL_OFF: Mechanisms = Mechanisms {
+        hw_prefetcher: false,
+        adjacent_line: false,
+        turbo_boost: false,
+        eist: false,
+        c_states: false,
+    };
+
+    /// Frequency multiplier applied to core-side latencies (cache + execute,
+    /// not DRAM): >1 means faster. Matches Fig. 9's ≈0.15 GB/s uplift scale.
+    pub fn frequency_uplift(&self) -> f64 {
+        let mut f = 1.0;
+        if self.turbo_boost {
+            f *= 1.09; // 3.4 -> ~3.7 GHz single-core turbo on the i7-4770
+        }
+        if self.eist {
+            f *= 1.01;
+        }
+        f
+    }
+
+    /// Jitter amplitude (fraction of latency) the frequency mechanisms
+    /// introduce ("irregularities in the results", §5.6).
+    pub fn jitter_amplitude(&self) -> f64 {
+        let mut j = 0.0;
+        if self.turbo_boost {
+            j += 0.02;
+        }
+        if self.eist {
+            j += 0.02;
+        }
+        if self.c_states {
+            j += 0.03;
+        }
+        j
+    }
+}
+
+/// Stream-prefetcher state per core: detects ascending line runs within a
+/// 4 KiB page and prefetches ahead.
+#[derive(Debug, Clone, Default)]
+pub struct StreamDetector {
+    last_line: FastMap<usize, Line>,
+    run_len: FastMap<usize, u32>,
+}
+
+/// Number of lines the stream prefetcher runs ahead once triggered.
+pub const STREAM_DEPTH: u64 = 4;
+/// Sequential misses needed to trigger streaming.
+pub const STREAM_TRIGGER: u32 = 2;
+
+impl StreamDetector {
+    pub fn new() -> StreamDetector {
+        StreamDetector::default()
+    }
+
+    /// Observe a demand miss of `line` by `core`; returns the lines to
+    /// prefetch (empty until the stream is established).
+    pub fn observe_miss(&mut self, core: usize, line: Line) -> Vec<Line> {
+        let prev = self.last_line.insert(core, line);
+        let same_page = |a: Line, b: Line| (a >> 6) == (b >> 6); // 4KiB = 64 lines
+        let run = self.run_len.entry(core).or_insert(0);
+        if prev == Some(line.wrapping_sub(1)) && same_page(line, line.wrapping_sub(1)) {
+            *run += 1;
+        } else {
+            *run = 0;
+        }
+        if *run >= STREAM_TRIGGER {
+            (1..=STREAM_DEPTH)
+                .map(|d| line + d)
+                .filter(|&l| same_page(l, line))
+                .collect()
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+/// The 128-byte buddy of a line (adjacent-line prefetch target).
+#[inline]
+pub fn buddy_line(line: Line) -> Line {
+    line ^ 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_off_is_neutral() {
+        let m = Mechanisms::ALL_OFF;
+        assert_eq!(m.frequency_uplift(), 1.0);
+        assert_eq!(m.jitter_amplitude(), 0.0);
+    }
+
+    #[test]
+    fn turbo_uplifts() {
+        let m = Mechanisms { turbo_boost: true, ..Mechanisms::ALL_OFF };
+        assert!(m.frequency_uplift() > 1.05);
+    }
+
+    #[test]
+    fn buddy_pairs() {
+        assert_eq!(buddy_line(0), 1);
+        assert_eq!(buddy_line(1), 0);
+        assert_eq!(buddy_line(6), 7);
+    }
+
+    #[test]
+    fn stream_triggers_after_sequential_run() {
+        let mut s = StreamDetector::new();
+        assert!(s.observe_miss(0, 100).is_empty());
+        assert!(s.observe_miss(0, 101).is_empty());
+        let pf = s.observe_miss(0, 102);
+        assert_eq!(pf, vec![103, 104, 105, 106]);
+    }
+
+    #[test]
+    fn stream_resets_on_random_access() {
+        let mut s = StreamDetector::new();
+        s.observe_miss(0, 100);
+        s.observe_miss(0, 101);
+        assert!(s.observe_miss(0, 500).is_empty());
+        assert!(s.observe_miss(0, 501).is_empty());
+    }
+
+    #[test]
+    fn stream_respects_page_boundary() {
+        let mut s = StreamDetector::new();
+        // line 62, 63 are at the end of the first 4KiB page (64 lines/page)
+        s.observe_miss(0, 61);
+        s.observe_miss(0, 62);
+        let pf = s.observe_miss(0, 63);
+        assert!(pf.is_empty(), "must not prefetch across the page: {pf:?}");
+    }
+
+    #[test]
+    fn per_core_independent_streams() {
+        let mut s = StreamDetector::new();
+        s.observe_miss(0, 100);
+        s.observe_miss(1, 200);
+        s.observe_miss(0, 101);
+        s.observe_miss(1, 201);
+        assert!(!s.observe_miss(0, 102).is_empty());
+        assert!(!s.observe_miss(1, 202).is_empty());
+    }
+}

@@ -1,0 +1,97 @@
+//! Backing data store: actual 64-bit word values of simulated memory.
+//!
+//! CAS success/failure and the BFS case study (§6.1) depend on real data,
+//! not just timing, so the simulator carries a sparse page-granular store.
+//! Pages are 4 KiB (512 words), allocated on first write.
+
+use crate::util::fxhash::FastMap;
+
+const PAGE_WORDS: usize = 512;
+const PAGE_SHIFT: u64 = 12;
+
+/// Sparse word-addressable memory. Addresses are byte addresses; word
+/// accesses must be 8-byte aligned (the unaligned benchmarks model timing
+/// only and never need misaligned data).
+#[derive(Debug, Default, Clone)]
+pub struct MemStore {
+    pages: FastMap<u64, Box<[u64; PAGE_WORDS]>>,
+}
+
+impl MemStore {
+    pub fn new() -> MemStore {
+        MemStore { pages: FastMap::default() }
+    }
+
+    #[inline]
+    fn split(addr: u64) -> (u64, usize) {
+        debug_assert_eq!(addr % 8, 0, "word access must be 8-byte aligned");
+        (addr >> PAGE_SHIFT, ((addr >> 3) as usize) % PAGE_WORDS)
+    }
+
+    /// Read the word at `addr` (unallocated memory reads as zero).
+    #[inline]
+    pub fn read(&self, addr: u64) -> u64 {
+        let (page, idx) = Self::split(addr);
+        self.pages.get(&page).map_or(0, |p| p[idx])
+    }
+
+    /// Write the word at `addr`.
+    #[inline]
+    pub fn write(&mut self, addr: u64, value: u64) {
+        let (page, idx) = Self::split(addr);
+        self.pages
+            .entry(page)
+            .or_insert_with(|| Box::new([0u64; PAGE_WORDS]))[idx] = value;
+    }
+
+    /// Number of allocated pages (memory footprint diagnostics).
+    pub fn pages(&self) -> usize {
+        self.pages.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_before_write() {
+        let m = MemStore::new();
+        assert_eq!(m.read(0x1000), 0);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut m = MemStore::new();
+        m.write(0x2008, 42);
+        assert_eq!(m.read(0x2008), 42);
+        assert_eq!(m.read(0x2000), 0);
+    }
+
+    #[test]
+    fn pages_are_sparse() {
+        let mut m = MemStore::new();
+        m.write(0, 1);
+        m.write(1 << 30, 2);
+        assert_eq!(m.pages(), 2);
+        assert_eq!(m.read(0), 1);
+        assert_eq!(m.read(1 << 30), 2);
+    }
+
+    #[test]
+    fn page_boundaries() {
+        let mut m = MemStore::new();
+        m.write(4096 - 8, 7); // last word of page 0
+        m.write(4096, 9); // first word of page 1
+        assert_eq!(m.read(4096 - 8), 7);
+        assert_eq!(m.read(4096), 9);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn misaligned_panics_in_debug() {
+        let m = MemStore::new();
+        m.read(3);
+    }
+}

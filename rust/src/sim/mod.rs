@@ -1,0 +1,28 @@
+//! The cache-coherence simulator substrate.
+//!
+//! The paper's testbeds are four physical x86 machines; this module is the
+//! synthetic equivalent (see DESIGN.md §2): a machine model with
+//! set-associative caches, explicit coherence protocols (MESIF, MOESI,
+//! MESI-GOLS and the §6.2.1 OL/SL extension), interconnect hop costs, store
+//! buffers, prefetchers, and an access engine that prices every read, write
+//! and atomic from the same microarchitectural mechanisms the paper uses to
+//! explain its measurements.
+
+pub mod cache;
+pub mod coherence;
+pub mod config;
+pub mod engine;
+pub mod event;
+pub mod mechanisms;
+pub mod memstore;
+pub mod protocol;
+pub mod stats;
+pub mod timing;
+pub mod topology;
+pub mod writebuffer;
+
+pub use cache::{line_of, Line, LINE_SIZE};
+pub use config::MachineConfig;
+pub use engine::{Access, Machine};
+pub use timing::Level;
+pub use topology::{CoreId, Distance, Topology};

@@ -1,0 +1,97 @@
+//! Cache-coherence protocols (§2.2): MESI, MESIF (Intel Haswell/Ivy Bridge),
+//! MOESI (AMD Bulldozer), MESI-GOLS (Xeon Phi), plus the paper's proposed
+//! §6.2.1 extension MOESI+OL/SL.
+//!
+//! The simulator keeps one global record per cache line (see
+//! [`crate::sim::coherence`]); the protocol decides the *transitions*:
+//! what state a reader obtains, what happens to the previous holder, whether
+//! a dirty line must be written back to memory on a share, and who supplies
+//! the data.
+
+pub mod transitions;
+
+pub use transitions::{ProtocolKind, ReadOutcome, Supplier};
+
+/// Per-cache-line coherence state as seen by one cache.
+///
+/// `F` (Forward) is MESIF's designated responder; `O` (Owned) is MOESI's
+/// dirty-shared owner (also used to model Xeon Phi's GOLS "globally owned
+/// locally shared"); `Ol`/`Sl` are the §6.2.1 Owned-Local / Shared-Local
+/// extension states that confine invalidation traffic to one die.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CohState {
+    M,
+    O,
+    E,
+    S,
+    F,
+    I,
+    /// Owned-Local (§6.2.1): dirty line shared only within one die.
+    Ol,
+    /// Shared-Local (§6.2.1): clean line shared only within one die.
+    Sl,
+}
+
+impl CohState {
+    pub fn label(self) -> &'static str {
+        match self {
+            CohState::M => "M",
+            CohState::O => "O",
+            CohState::E => "E",
+            CohState::S => "S",
+            CohState::F => "F",
+            CohState::I => "I",
+            CohState::Ol => "OL",
+            CohState::Sl => "SL",
+        }
+    }
+
+    /// Does this state carry data that differs from memory?
+    pub fn is_dirty(self) -> bool {
+        matches!(self, CohState::M | CohState::O | CohState::Ol)
+    }
+
+    /// May this cache respond to a read request for the line?
+    pub fn can_supply(self) -> bool {
+        matches!(
+            self,
+            CohState::M | CohState::O | CohState::E | CohState::F | CohState::Ol
+        )
+    }
+
+    /// Is a write possible without any coherence action?
+    pub fn writable(self) -> bool {
+        matches!(self, CohState::M | CohState::E)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dirty_states() {
+        assert!(CohState::M.is_dirty());
+        assert!(CohState::O.is_dirty());
+        assert!(CohState::Ol.is_dirty());
+        assert!(!CohState::E.is_dirty());
+        assert!(!CohState::S.is_dirty());
+        assert!(!CohState::F.is_dirty());
+    }
+
+    #[test]
+    fn suppliers() {
+        assert!(CohState::F.can_supply());
+        assert!(CohState::O.can_supply());
+        assert!(!CohState::S.can_supply());
+        assert!(!CohState::I.can_supply());
+    }
+
+    #[test]
+    fn writable_without_coherence_action() {
+        assert!(CohState::M.writable());
+        assert!(CohState::E.writable());
+        assert!(!CohState::S.writable());
+        assert!(!CohState::O.writable());
+    }
+}

@@ -1,0 +1,239 @@
+//! Protocol transition policies.
+//!
+//! Each protocol answers the same four questions the access engine asks:
+//!
+//! 1. What state does a reader obtain when it fills a line that has other
+//!    sharers / a dirty holder?
+//! 2. What happens to the previous holder's state on a remote read?
+//! 3. Does sharing a dirty line force a write-back to memory (MESI/MESIF: yes;
+//!    MOESI/GOLS: no — the O/GOLS state keeps it dirty-shared)?
+//! 4. On a write/RFO to a shared line, must invalidations be broadcast beyond
+//!    the local die even when all sharers are local (Bulldozer: yes, because
+//!    its non-inclusive L3 has no core-valid bits — §5.1.2; the §6.2.1 OL/SL
+//!    extension: no)?
+
+use super::CohState;
+
+/// Who supplies the data for a read miss.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Supplier {
+    /// A cache holding the line in a supplying state (M/O/E/F).
+    Cache,
+    /// The shared L3 slice of some die.
+    L3,
+    /// Main memory.
+    Memory,
+}
+
+/// Outcome of a remote read observed by the current holder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ReadOutcome {
+    /// New state of the previous holder.
+    pub holder_new: CohState,
+    /// State granted to the requester.
+    pub requester: CohState,
+    /// Whether the transition forces a write-back to memory
+    /// (MESI/MESIF dirty share).
+    pub writeback: bool,
+}
+
+/// The four protocols of Table 1 plus the §6.2.1 extension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ProtocolKind {
+    Mesi,
+    /// MESIF (Haswell, Ivy Bridge): adds the Forward state so exactly one
+    /// sharer responds to requests, avoiding redundant transfers.
+    Mesif,
+    /// MOESI (Bulldozer): the Owned state allows dirty sharing without
+    /// write-backs.
+    Moesi,
+    /// MESI-GOLS (Xeon Phi): directory-based; the Shared state is extended
+    /// with "Globally Owned, Locally Shared" to emulate Owned.
+    MesiGols,
+    /// §6.2.1 proposal: MOESI plus Owned-Local / Shared-Local states that
+    /// track die-locality and suppress remote invalidations.
+    MoesiOlSl,
+}
+
+impl ProtocolKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProtocolKind::Mesi => "MESI",
+            ProtocolKind::Mesif => "MESIF",
+            ProtocolKind::Moesi => "MOESI",
+            ProtocolKind::MesiGols => "MESI-GOLS",
+            ProtocolKind::MoesiOlSl => "MOESI+OL/SL",
+        }
+    }
+
+    /// Does the protocol support dirty sharing (an Owned-like state)?
+    pub fn has_owned(self) -> bool {
+        matches!(
+            self,
+            ProtocolKind::Moesi | ProtocolKind::MesiGols | ProtocolKind::MoesiOlSl
+        )
+    }
+
+    /// Does the protocol designate a Forward responder among clean sharers?
+    pub fn has_forward(self) -> bool {
+        matches!(self, ProtocolKind::Mesif)
+    }
+
+    /// State transition when a line held in `holder` state is read by a
+    /// remote core. `same_die` is the relative position of the reader — the
+    /// OL/SL extension grants local states for on-die sharing.
+    pub fn on_remote_read(self, holder: CohState, same_die: bool) -> ReadOutcome {
+        use CohState::*;
+        let out = |holder_new, requester, writeback| ReadOutcome {
+            holder_new,
+            requester,
+            writeback,
+        };
+        match (self, holder) {
+            // --- dirty holder ---
+            (ProtocolKind::Mesi, M) => out(S, S, true),
+            (ProtocolKind::Mesif, M) => out(S, F, true),
+            (ProtocolKind::Moesi, M) => out(O, S, false),
+            (ProtocolKind::MesiGols, M) => out(O, S, false), // GOLS dirty share
+            (ProtocolKind::MoesiOlSl, M) if same_die => out(Ol, Sl, false),
+            (ProtocolKind::MoesiOlSl, M) => out(O, S, false),
+            // --- owned holder (already dirty-shared) ---
+            (_, O) => out(O, S, false),
+            (ProtocolKind::MoesiOlSl, Ol) if same_die => out(Ol, Sl, false),
+            (_, Ol) => out(O, S, false), // remote read degrades OL -> O
+            // --- clean exclusive holder ---
+            (ProtocolKind::Mesif, E) => out(S, F, false),
+            (ProtocolKind::MoesiOlSl, E) if same_die => out(Sl, Sl, false),
+            (_, E) => out(S, S, false),
+            // --- forward holder hands off F ---
+            (ProtocolKind::Mesif, F) => out(S, F, false),
+            (_, F) => out(S, S, false),
+            // --- plain sharers: supply from L3/memory, no transition ---
+            (ProtocolKind::MoesiOlSl, Sl) if same_die => out(Sl, Sl, false),
+            (_, Sl) => out(S, S, false),
+            (_, S) => out(S, S, false),
+            (_, I) => out(I, self.fill_state_exclusive(), false),
+        }
+    }
+
+    /// The state a reader obtains when no other cache holds the line.
+    pub fn fill_state_exclusive(self) -> CohState {
+        CohState::E
+    }
+
+    /// On a write/RFO to a line shared in state `line_state`, must the
+    /// invalidation be broadcast to remote dies even when every sharer is
+    /// on the writer's die?
+    ///
+    /// Bulldozer (MOESI) must: its L3 is non-inclusive and has no core-valid
+    /// bits, so it cannot prove remote dies hold no copy (§5.1.2). Intel's
+    /// inclusive L3 + core-valid bits and Phi's GOLS directory both track
+    /// sharers, and the OL/SL states prove die-locality by construction.
+    pub fn write_requires_remote_broadcast(self, line_state: CohState) -> bool {
+        match self {
+            ProtocolKind::Moesi => matches!(
+                line_state,
+                CohState::S | CohState::O | CohState::F
+            ),
+            ProtocolKind::MoesiOlSl => matches!(line_state, CohState::S | CohState::O),
+            _ => false,
+        }
+    }
+
+    /// Which component supplies data for a miss on a line whose global state
+    /// is `state`, given that the line is (`in_l3`) present in some L3.
+    pub fn supplier(self, state: CohState, in_l3: bool) -> Supplier {
+        if state.can_supply() {
+            Supplier::Cache
+        } else if in_l3 {
+            Supplier::L3
+        } else {
+            Supplier::Memory
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use CohState::*;
+
+    #[test]
+    fn mesif_dirty_share_writes_back() {
+        let o = ProtocolKind::Mesif.on_remote_read(M, true);
+        assert_eq!(o.holder_new, S);
+        assert_eq!(o.requester, F);
+        assert!(o.writeback, "MESIF cannot dirty-share");
+    }
+
+    #[test]
+    fn moesi_dirty_share_keeps_dirty() {
+        let o = ProtocolKind::Moesi.on_remote_read(M, false);
+        assert_eq!(o.holder_new, O);
+        assert_eq!(o.requester, S);
+        assert!(!o.writeback, "the O state prevents write-backs (§2.2)");
+    }
+
+    #[test]
+    fn gols_emulates_owned() {
+        let o = ProtocolKind::MesiGols.on_remote_read(M, true);
+        assert_eq!(o.holder_new, O);
+        assert!(!o.writeback);
+    }
+
+    #[test]
+    fn mesif_forward_passes_to_latest_reader() {
+        let o = ProtocolKind::Mesif.on_remote_read(F, true);
+        assert_eq!(o.holder_new, S);
+        assert_eq!(o.requester, F);
+    }
+
+    #[test]
+    fn mesi_no_forward() {
+        let o = ProtocolKind::Mesi.on_remote_read(E, true);
+        assert_eq!(o.requester, S);
+    }
+
+    #[test]
+    fn olsl_local_read_stays_local() {
+        let o = ProtocolKind::MoesiOlSl.on_remote_read(M, true);
+        assert_eq!(o.holder_new, Ol);
+        assert_eq!(o.requester, Sl);
+        assert!(!o.writeback);
+    }
+
+    #[test]
+    fn olsl_remote_read_degrades() {
+        let o = ProtocolKind::MoesiOlSl.on_remote_read(Ol, false);
+        assert_eq!(o.holder_new, O);
+        assert_eq!(o.requester, S);
+    }
+
+    #[test]
+    fn bulldozer_broadcasts_on_shared_writes() {
+        assert!(ProtocolKind::Moesi.write_requires_remote_broadcast(S));
+        assert!(ProtocolKind::Moesi.write_requires_remote_broadcast(O));
+        assert!(!ProtocolKind::Moesi.write_requires_remote_broadcast(M));
+    }
+
+    #[test]
+    fn olsl_suppresses_remote_broadcast_for_local_states() {
+        assert!(!ProtocolKind::MoesiOlSl.write_requires_remote_broadcast(Sl));
+        assert!(!ProtocolKind::MoesiOlSl.write_requires_remote_broadcast(Ol));
+        assert!(ProtocolKind::MoesiOlSl.write_requires_remote_broadcast(S));
+    }
+
+    #[test]
+    fn intel_tracks_sharers_no_broadcast() {
+        assert!(!ProtocolKind::Mesif.write_requires_remote_broadcast(S));
+        assert!(!ProtocolKind::MesiGols.write_requires_remote_broadcast(S));
+    }
+
+    #[test]
+    fn supplier_selection() {
+        assert_eq!(ProtocolKind::Mesif.supplier(M, true), Supplier::Cache);
+        assert_eq!(ProtocolKind::Mesif.supplier(S, true), Supplier::L3);
+        assert_eq!(ProtocolKind::Mesif.supplier(S, false), Supplier::Memory);
+        assert_eq!(ProtocolKind::Mesif.supplier(I, false), Supplier::Memory);
+    }
+}

@@ -1,0 +1,98 @@
+//! Event counters collected by the access engine — used by tests (to assert
+//! mechanisms fired), by the report layer (hit-rate diagnostics), and by the
+//! performance harness.
+
+use crate::sim::timing::Level;
+
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct Stats {
+    pub accesses: u64,
+    pub l1_hits: u64,
+    pub l2_hits: u64,
+    pub l3_hits: u64,
+    pub memory_accesses: u64,
+    pub cache_to_cache: u64,
+    pub invalidations_sent: u64,
+    pub remote_invalidation_broadcasts: u64,
+    pub writebacks: u64,
+    pub hops: u64,
+    pub write_buffer_drains: u64,
+    pub prefetches_issued: u64,
+    pub prefetch_hits: u64,
+    pub bus_locks: u64,
+    pub ht_assist_filtered: u64,
+    pub back_invalidations: u64,
+    pub muw_migrations: u64,
+}
+
+impl Stats {
+    pub fn record_hit(&mut self, level: Level) {
+        match level {
+            Level::L1 => self.l1_hits += 1,
+            Level::L2 => self.l2_hits += 1,
+            Level::L3 => self.l3_hits += 1,
+            Level::Memory => self.memory_accesses += 1,
+        }
+    }
+
+    pub fn hit_rate_l1(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.l1_hits as f64 / self.accesses as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &Stats) {
+        self.accesses += other.accesses;
+        self.l1_hits += other.l1_hits;
+        self.l2_hits += other.l2_hits;
+        self.l3_hits += other.l3_hits;
+        self.memory_accesses += other.memory_accesses;
+        self.cache_to_cache += other.cache_to_cache;
+        self.invalidations_sent += other.invalidations_sent;
+        self.remote_invalidation_broadcasts += other.remote_invalidation_broadcasts;
+        self.writebacks += other.writebacks;
+        self.hops += other.hops;
+        self.write_buffer_drains += other.write_buffer_drains;
+        self.prefetches_issued += other.prefetches_issued;
+        self.prefetch_hits += other.prefetch_hits;
+        self.bus_locks += other.bus_locks;
+        self.ht_assist_filtered += other.ht_assist_filtered;
+        self.back_invalidations += other.back_invalidations;
+        self.muw_migrations += other.muw_migrations;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_rate() {
+        let mut s = Stats::default();
+        s.accesses = 4;
+        s.record_hit(Level::L1);
+        s.record_hit(Level::L1);
+        s.record_hit(Level::L3);
+        s.record_hit(Level::Memory);
+        assert_eq!(s.l1_hits, 2);
+        assert_eq!(s.l3_hits, 1);
+        assert_eq!(s.memory_accesses, 1);
+        assert!((s.hit_rate_l1() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = Stats { accesses: 1, hops: 2, ..Default::default() };
+        let b = Stats { accesses: 3, hops: 4, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.accesses, 4);
+        assert_eq!(a.hops, 6);
+    }
+
+    #[test]
+    fn zero_rate_on_empty() {
+        assert_eq!(Stats::default().hit_rate_l1(), 0.0);
+    }
+}

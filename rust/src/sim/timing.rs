@@ -1,0 +1,376 @@
+//! Timing parameters (Table 2 of the paper) and the O-residual overhead
+//! table (Table 3).
+//!
+//! All values are nanoseconds. `Timing` carries the latency primitives the
+//! access engine composes; `OverheadTable` carries the per-(operation-class,
+//! state, level, locality) residuals the paper denotes O in Eq. (1) —
+//! proprietary effects the clean composition cannot explain.
+
+use crate::atomics::OpKind;
+use crate::sim::protocol::CohState;
+use crate::sim::topology::Distance;
+
+/// Which cache level (or memory) served an access.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    L1,
+    L2,
+    L3,
+    Memory,
+}
+
+impl Level {
+    pub fn label(self) -> &'static str {
+        match self {
+            Level::L1 => "L1",
+            Level::L2 => "L2",
+            Level::L3 => "L3",
+            Level::Memory => "RAM",
+        }
+    }
+}
+
+/// Table 2: the model parameters of one architecture, in nanoseconds.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    /// Local read latency from L1 / L2 / L3 (R_{L1,l}, R_{L2,l}, R_{L3,l}).
+    pub r_l1: f64,
+    pub r_l2: f64,
+    /// NaN when the architecture has no L3 (Xeon Phi).
+    pub r_l3: f64,
+    /// One cache-to-cache interconnect hop H (QPI / HT / Phi ring+directory).
+    pub hop: f64,
+    /// Main-memory access M (beyond the last-level miss).
+    pub mem: f64,
+    /// Execute latencies E(A): lock line + execute + write result (Eq. 1).
+    pub e_cas: f64,
+    pub e_faa: f64,
+    pub e_swp: f64,
+    /// Store-buffer issue cost of a plain write (the visible latency of a
+    /// buffered store; drains happen asynchronously).
+    pub write_issue: f64,
+}
+
+impl Timing {
+    /// E(A) for an operation kind; reads/writes execute for free (Eq. 1
+    /// models atomics; the read baseline is R alone).
+    pub fn exec(&self, op: OpKind) -> f64 {
+        match op {
+            OpKind::Cas => self.e_cas,
+            OpKind::Faa => self.e_faa,
+            OpKind::Swp => self.e_swp,
+            OpKind::Read => 0.0,
+            OpKind::Write => 0.0,
+        }
+    }
+
+    /// Local read latency of a level.
+    pub fn read_local(&self, level: Level) -> f64 {
+        match level {
+            Level::L1 => self.r_l1,
+            Level::L2 => self.r_l2,
+            Level::L3 => self.r_l3,
+            Level::Memory => self.r_l3_or_l2() + self.mem,
+        }
+    }
+
+    /// The last-level probe latency before going to memory.
+    pub fn r_l3_or_l2(&self) -> f64 {
+        if self.r_l3.is_nan() {
+            self.r_l2
+        } else {
+            self.r_l3
+        }
+    }
+
+    pub fn has_l3(&self) -> bool {
+        !self.r_l3.is_nan()
+    }
+
+    /// Cache-to-cache transfer from another core on the same die
+    /// (Eq. 4: R_{L3,l} + (R_{L3,l} - R_{L1,l}) for private-L2 + shared-L3
+    /// designs; Eq. 6 adds a hop on Phi where there is no L3).
+    pub fn same_die_transfer(&self) -> f64 {
+        if self.has_l3() {
+            self.r_l3 + (self.r_l3 - self.r_l1)
+        } else {
+            // Xeon Phi: R_{L2,l} + (R_{L2,l} - R_{L1,l}) + H (Eq. 6)
+            self.r_l2 + (self.r_l2 - self.r_l1) + self.hop
+        }
+    }
+
+    /// Cache-to-cache transfer from a module mate sharing the L2 (Eq. 5).
+    pub fn shared_l2_transfer(&self) -> f64 {
+        self.r_l2 + (self.r_l2 - self.r_l1)
+    }
+
+    /// Interconnect cost of `hops` die-crossings — 0 for on-die (also when
+    /// the architecture has no interconnect, where `hop` is NaN).
+    pub fn hop_cost(&self, hops: u32) -> f64 {
+        if hops == 0 || self.hop.is_nan() {
+            0.0
+        } else {
+            self.hop * hops as f64
+        }
+    }
+}
+
+/// Operation matcher for the overhead table. The paper reports O for atomics
+/// as a group (Table 3), but some effects are op-specific — e.g. Ivy Bridge's
+/// L1 detects that a failing CAS will not modify the line and serves it
+/// 2–3 ns faster than FAA/SWP (§5.1.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpMatch {
+    Read,
+    Write,
+    AnyAtomic,
+    Only(OpKind),
+}
+
+impl OpMatch {
+    pub fn matches(self, k: OpKind) -> bool {
+        match self {
+            OpMatch::Read => k == OpKind::Read,
+            OpMatch::Write => k == OpKind::Write,
+            OpMatch::AnyAtomic => k.is_atomic(),
+            OpMatch::Only(o) => k == o,
+        }
+    }
+}
+
+/// Coherency-state class used for overhead lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StateClass {
+    /// E or M: single holder, no invalidations.
+    ExclusiveLike,
+    /// S, O, F: shared, invalidations needed for ownership.
+    SharedLike,
+}
+
+impl StateClass {
+    pub fn of(state: CohState) -> StateClass {
+        match state {
+            CohState::E | CohState::M | CohState::I => StateClass::ExclusiveLike,
+            _ => StateClass::SharedLike,
+        }
+    }
+}
+
+/// Locality class for overhead lookup (Table 3 columns: Local / Remote).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LocalityClass {
+    Local,
+    Remote,
+}
+
+impl LocalityClass {
+    pub fn of(d: Distance) -> LocalityClass {
+        match d {
+            Distance::Local => LocalityClass::Local,
+            _ => LocalityClass::Remote,
+        }
+    }
+}
+
+/// One overhead rule: the O residual applied when all fields match.
+/// `level: None` matches any level; `locality: None` matches any locality.
+#[derive(Debug, Clone, Copy)]
+pub struct OverheadRule {
+    pub op: OpMatch,
+    pub state: Option<StateClass>,
+    pub level: Option<Level>,
+    pub locality: Option<LocalityClass>,
+    pub ns: f64,
+}
+
+/// Table 3-style residual table. Lookup is linear over a handful of rules —
+/// configured per architecture in `arch/`.
+#[derive(Debug, Clone, Default)]
+pub struct OverheadTable {
+    rules: Vec<OverheadRule>,
+}
+
+impl OverheadTable {
+    pub fn new() -> OverheadTable {
+        OverheadTable { rules: Vec::new() }
+    }
+
+    /// Add a fully-specified rule (Table 3 cell).
+    pub fn rule(
+        mut self,
+        op: OpMatch,
+        state: StateClass,
+        level: Level,
+        locality: LocalityClass,
+        ns: f64,
+    ) -> Self {
+        self.rules.push(OverheadRule {
+            op,
+            state: Some(state),
+            level: Some(level),
+            locality: Some(locality),
+            ns,
+        });
+        self
+    }
+
+    /// Add a wildcard rule matching any level/locality/state field left `None`.
+    pub fn rule_any(
+        mut self,
+        op: OpMatch,
+        state: Option<StateClass>,
+        level: Option<Level>,
+        locality: Option<LocalityClass>,
+        ns: f64,
+    ) -> Self {
+        self.rules.push(OverheadRule { op, state, level, locality, ns });
+        self
+    }
+
+    /// Sum of all matching residuals.
+    pub fn lookup(
+        &self,
+        op: OpKind,
+        state: StateClass,
+        level: Level,
+        locality: LocalityClass,
+    ) -> f64 {
+        self.rules
+            .iter()
+            .filter(|r| {
+                r.op.matches(op)
+                    && r.state.map_or(true, |s| s == state)
+                    && r.level.map_or(true, |l| l == level)
+                    && r.locality.map_or(true, |l| l == locality)
+            })
+            .map(|r| r.ns)
+            .sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    pub fn rules(&self) -> &[OverheadRule] {
+        &self.rules
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t() -> Timing {
+        // Haswell column of Table 2.
+        Timing {
+            r_l1: 1.17,
+            r_l2: 3.5,
+            r_l3: 10.3,
+            hop: f64::NAN,
+            mem: 65.0,
+            e_cas: 4.7,
+            e_faa: 5.6,
+            e_swp: 5.6,
+            write_issue: 0.5,
+        }
+    }
+
+    #[test]
+    fn exec_latencies() {
+        let t = t();
+        assert_eq!(t.exec(OpKind::Cas), 4.7);
+        assert_eq!(t.exec(OpKind::Faa), 5.6);
+        assert_eq!(t.exec(OpKind::Read), 0.0);
+    }
+
+    #[test]
+    fn same_die_transfer_eq4() {
+        let t = t();
+        // R_L3 + (R_L3 - R_L1) = 10.3 + 9.13
+        assert!((t.same_die_transfer() - 19.43).abs() < 1e-9);
+    }
+
+    #[test]
+    fn phi_transfer_eq6() {
+        let mut t = t();
+        t.r_l3 = f64::NAN;
+        t.r_l1 = 2.4;
+        t.r_l2 = 19.4;
+        t.hop = 161.2;
+        // R_L2 + (R_L2 - R_L1) + H
+        assert!((t.same_die_transfer() - (19.4 + 17.0 + 161.2)).abs() < 1e-9);
+        assert!(!t.has_l3());
+        assert_eq!(t.r_l3_or_l2(), 19.4);
+    }
+
+    #[test]
+    fn overhead_lookup_sums_matches() {
+        let table = OverheadTable::new()
+            .rule(OpMatch::AnyAtomic, StateClass::ExclusiveLike, Level::L2, LocalityClass::Local, 3.8)
+            .rule(OpMatch::AnyAtomic, StateClass::SharedLike, Level::L3, LocalityClass::Remote, -12.0);
+        assert_eq!(
+            table.lookup(OpKind::Cas, StateClass::ExclusiveLike, Level::L2, LocalityClass::Local),
+            3.8
+        );
+        assert_eq!(
+            table.lookup(OpKind::Faa, StateClass::SharedLike, Level::L3, LocalityClass::Remote),
+            -12.0
+        );
+        assert_eq!(
+            table.lookup(OpKind::Read, StateClass::ExclusiveLike, Level::L2, LocalityClass::Local),
+            0.0
+        );
+    }
+
+    #[test]
+    fn op_specific_rule() {
+        // Ivy Bridge: failing CAS 2.5ns faster than other atomics in local L1.
+        let table = OverheadTable::new().rule(
+            OpMatch::Only(OpKind::Cas),
+            StateClass::ExclusiveLike,
+            Level::L1,
+            LocalityClass::Local,
+            -2.5,
+        );
+        assert_eq!(
+            table.lookup(OpKind::Cas, StateClass::ExclusiveLike, Level::L1, LocalityClass::Local),
+            -2.5
+        );
+        assert_eq!(
+            table.lookup(OpKind::Faa, StateClass::ExclusiveLike, Level::L1, LocalityClass::Local),
+            0.0
+        );
+    }
+
+    #[test]
+    fn wildcard_rule_matches_everything_unset() {
+        let table =
+            OverheadTable::new().rule_any(OpMatch::AnyAtomic, None, None, None, 20.0);
+        assert_eq!(
+            table.lookup(OpKind::Swp, StateClass::SharedLike, Level::Memory, LocalityClass::Remote),
+            20.0
+        );
+        assert_eq!(
+            table.lookup(OpKind::Read, StateClass::SharedLike, Level::Memory, LocalityClass::Remote),
+            0.0
+        );
+    }
+
+    #[test]
+    fn classes() {
+        assert!(OpMatch::AnyAtomic.matches(OpKind::Cas));
+        assert!(!OpMatch::AnyAtomic.matches(OpKind::Read));
+        assert!(OpMatch::Only(OpKind::Faa).matches(OpKind::Faa));
+        assert!(!OpMatch::Only(OpKind::Faa).matches(OpKind::Swp));
+        assert_eq!(StateClass::of(CohState::O), StateClass::SharedLike);
+        assert_eq!(StateClass::of(CohState::M), StateClass::ExclusiveLike);
+        assert_eq!(LocalityClass::of(Distance::SameDie), LocalityClass::Remote);
+        assert_eq!(LocalityClass::of(Distance::Local), LocalityClass::Local);
+    }
+
+    #[test]
+    fn memory_level_latency() {
+        let t = t();
+        assert!((t.read_local(Level::Memory) - 75.3).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,221 @@
+//! Core / L2-module / die / socket topology (§2.2, Figure 1).
+//!
+//! Cores are numbered densely; consecutive cores share L2 modules (Bulldozer
+//! pairs), groups of modules form dies (the L3 + coherence domain), dies form
+//! sockets. Latency composition depends on the *distance class* between the
+//! requesting core and the core (or die) holding the data.
+
+/// A core identifier. Up to 64 cores (sharer sets are u64 bitmasks).
+pub type CoreId = usize;
+/// A die identifier (the L3/coherence-directory domain).
+pub type DieId = usize;
+
+pub const MAX_CORES: usize = 64;
+
+/// Distance class between requester and data holder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Distance {
+    /// Same core: data in the requester's own private caches.
+    Local,
+    /// Different core sharing the requester's L2 (Bulldozer modules).
+    SharedL2,
+    /// Different core on the same die (shares L3 / on-die interconnect).
+    SameDie,
+    /// Different die on the same socket (HyperTransport on Bulldozer).
+    SameSocket,
+    /// Different socket (QPI / HT across sockets).
+    OtherSocket,
+}
+
+impl Distance {
+    /// Number of inter-die interconnect hops this distance implies.
+    pub fn hops(self) -> u32 {
+        match self {
+            Distance::Local | Distance::SharedL2 | Distance::SameDie => 0,
+            Distance::SameSocket | Distance::OtherSocket => 1,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Distance::Local => "local",
+            Distance::SharedL2 => "shared L2",
+            Distance::SameDie => "on chip",
+            Distance::SameSocket => "shared L3 domain (other die)",
+            Distance::OtherSocket => "other socket",
+        }
+    }
+}
+
+/// Physical layout of cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub n_cores: usize,
+    /// Cores per L2 cache (1 = private L2; 2 on Bulldozer modules).
+    pub cores_per_l2: usize,
+    /// Cores per die (the L3 domain; on Xeon Phi the whole ring is one die).
+    pub cores_per_die: usize,
+    pub dies_per_socket: usize,
+}
+
+impl Topology {
+    pub fn new(
+        n_cores: usize,
+        cores_per_l2: usize,
+        cores_per_die: usize,
+        dies_per_socket: usize,
+    ) -> Topology {
+        assert!(n_cores <= MAX_CORES, "at most {MAX_CORES} cores supported");
+        assert!(cores_per_l2 >= 1 && cores_per_die >= cores_per_l2);
+        assert_eq!(
+            cores_per_die % cores_per_l2,
+            0,
+            "L2 modules must tile the die"
+        );
+        Topology {
+            n_cores,
+            cores_per_l2,
+            cores_per_die,
+            dies_per_socket,
+        }
+    }
+
+    pub fn n_dies(&self) -> usize {
+        self.n_cores.div_ceil(self.cores_per_die)
+    }
+
+    pub fn n_sockets(&self) -> usize {
+        self.n_dies().div_ceil(self.dies_per_socket)
+    }
+
+    pub fn n_l2_modules(&self) -> usize {
+        self.n_cores.div_ceil(self.cores_per_l2)
+    }
+
+    pub fn l2_module_of(&self, core: CoreId) -> usize {
+        core / self.cores_per_l2
+    }
+
+    pub fn die_of(&self, core: CoreId) -> DieId {
+        core / self.cores_per_die
+    }
+
+    pub fn socket_of(&self, core: CoreId) -> usize {
+        self.die_of(core) / self.dies_per_socket
+    }
+
+    /// Distance class from `from` to the holder core `to`.
+    pub fn distance(&self, from: CoreId, to: CoreId) -> Distance {
+        if from == to {
+            Distance::Local
+        } else if self.l2_module_of(from) == self.l2_module_of(to) {
+            Distance::SharedL2
+        } else if self.die_of(from) == self.die_of(to) {
+            Distance::SameDie
+        } else if self.socket_of(from) == self.socket_of(to) {
+            Distance::SameSocket
+        } else {
+            Distance::OtherSocket
+        }
+    }
+
+    /// Distance class from a core to a *die* (e.g. a die-local L3 slice or
+    /// the NUMA memory attached to that die).
+    pub fn distance_to_die(&self, from: CoreId, die: DieId) -> Distance {
+        if self.die_of(from) == die {
+            Distance::SameDie
+        } else if self.socket_of(from) == die / self.dies_per_socket {
+            Distance::SameSocket
+        } else {
+            Distance::OtherSocket
+        }
+    }
+
+    /// All cores on a die.
+    pub fn cores_of_die(&self, die: DieId) -> std::ops::Range<CoreId> {
+        let start = die * self.cores_per_die;
+        start..(start + self.cores_per_die).min(self.n_cores)
+    }
+
+    /// A 64-bit mask with the bits of all cores on `die` set.
+    pub fn die_mask(&self, die: DieId) -> u64 {
+        let mut m = 0u64;
+        for c in self.cores_of_die(die) {
+            m |= 1 << c;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Bulldozer: 32 cores, 2/L2 module, 8/die, 2 dies/socket (Fig. 1b).
+    fn bulldozer() -> Topology {
+        Topology::new(32, 2, 8, 2)
+    }
+
+    #[test]
+    fn bulldozer_counts() {
+        let t = bulldozer();
+        assert_eq!(t.n_dies(), 4);
+        assert_eq!(t.n_sockets(), 2);
+        assert_eq!(t.n_l2_modules(), 16);
+    }
+
+    #[test]
+    fn bulldozer_distances() {
+        let t = bulldozer();
+        assert_eq!(t.distance(0, 0), Distance::Local);
+        assert_eq!(t.distance(0, 1), Distance::SharedL2);
+        assert_eq!(t.distance(0, 2), Distance::SameDie);
+        assert_eq!(t.distance(0, 9), Distance::SameSocket);
+        assert_eq!(t.distance(0, 17), Distance::OtherSocket);
+    }
+
+    #[test]
+    fn haswell_single_die() {
+        let t = Topology::new(4, 1, 4, 1);
+        assert_eq!(t.n_dies(), 1);
+        assert_eq!(t.distance(0, 3), Distance::SameDie);
+    }
+
+    #[test]
+    fn ivy_two_sockets() {
+        let t = Topology::new(24, 1, 12, 1);
+        assert_eq!(t.n_sockets(), 2);
+        assert_eq!(t.distance(0, 11), Distance::SameDie);
+        assert_eq!(t.distance(0, 12), Distance::OtherSocket);
+    }
+
+    #[test]
+    fn xeon_phi_uneven() {
+        let t = Topology::new(61, 1, 61, 1);
+        assert_eq!(t.n_dies(), 1);
+        assert_eq!(t.distance(0, 60), Distance::SameDie);
+    }
+
+    #[test]
+    fn hops() {
+        assert_eq!(Distance::Local.hops(), 0);
+        assert_eq!(Distance::SameDie.hops(), 0);
+        assert_eq!(Distance::SameSocket.hops(), 1);
+        assert_eq!(Distance::OtherSocket.hops(), 1);
+    }
+
+    #[test]
+    fn die_mask_covers_die() {
+        let t = bulldozer();
+        assert_eq!(t.die_mask(0), 0xFF);
+        assert_eq!(t.die_mask(1), 0xFF00);
+    }
+
+    #[test]
+    fn distance_to_die() {
+        let t = bulldozer();
+        assert_eq!(t.distance_to_die(0, 0), Distance::SameDie);
+        assert_eq!(t.distance_to_die(0, 1), Distance::SameSocket);
+        assert_eq!(t.distance_to_die(0, 2), Distance::OtherSocket);
+    }
+}

@@ -1,0 +1,197 @@
+//! Store (write) buffer model — the mechanism behind the paper's headline
+//! bandwidth finding (§5.2.1): plain writes retire into the store buffer and
+//! merge, so their visible cost is the issue cost and the drains overlap;
+//! atomics *drain* the buffer and execute synchronously, so every atomic pays
+//! the full memory-system latency and no ILP is possible.
+//!
+//! The model tracks buffer occupancy in virtual time: writes enqueue entries
+//! (merging same-line neighbours), the memory system drains one entry per
+//! `drain_latency`, and an atomic stalls until the buffer is empty. The §6.2.3
+//! FastLock extension relaxes that: a FastLock-prefixed atomic only drains
+//! entries that overlap its own cache line, letting independent atomics
+//! pipeline.
+
+use std::collections::VecDeque;
+
+/// Configuration of the store buffer.
+#[derive(Debug, Clone, Copy)]
+pub struct WriteBufferCfg {
+    /// Number of entries (e.g. 42 store-buffer entries on Haswell).
+    pub entries: usize,
+    /// Can consecutive same-line stores merge into one entry?
+    pub merging: bool,
+    /// §6.2.3 FastLock: atomics only drain overlapping lines.
+    pub fastlock: bool,
+}
+
+impl Default for WriteBufferCfg {
+    fn default() -> Self {
+        WriteBufferCfg { entries: 42, merging: true, fastlock: false }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    line: u64,
+    /// Virtual time at which the drain of this entry completes.
+    drain_done: f64,
+}
+
+/// The store buffer of one core, in virtual time.
+#[derive(Debug, Clone)]
+pub struct WriteBuffer {
+    cfg: WriteBufferCfg,
+    queue: VecDeque<Entry>,
+    /// When the entry currently draining (front) finishes.
+    last_drain_done: f64,
+}
+
+impl WriteBuffer {
+    pub fn new(cfg: WriteBufferCfg) -> WriteBuffer {
+        WriteBuffer { cfg, queue: VecDeque::new(), last_drain_done: 0.0 }
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Advance virtual time: retire all entries whose drain completed.
+    fn retire(&mut self, now: f64) {
+        while let Some(front) = self.queue.front() {
+            if front.drain_done <= now {
+                self.queue.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Issue a buffered write of `line` at virtual time `now`; the underlying
+    /// memory-system latency of the drain is `drain_latency`. Returns the
+    /// *visible* stall time for the issuing core (0 unless the buffer is
+    /// full).
+    pub fn push_write(&mut self, now: f64, line: u64, drain_latency: f64) -> f64 {
+        self.retire(now);
+        // merge with the most recent entry for the same line
+        if self.cfg.merging {
+            if let Some(back) = self.queue.back() {
+                if back.line == line {
+                    return 0.0; // absorbed into the pending entry
+                }
+            }
+        }
+        let mut stall = 0.0;
+        if self.queue.len() >= self.cfg.entries {
+            // stall until the front entry drains
+            let front_done = self.queue.front().unwrap().drain_done;
+            stall = (front_done - now).max(0.0);
+            self.retire(now + stall);
+        }
+        let start = self.last_drain_done.max(now + stall);
+        let done = start + drain_latency;
+        self.last_drain_done = done;
+        self.queue.push_back(Entry { line, drain_done: done });
+        stall
+    }
+
+    /// An atomic at virtual time `now` touching `line`: returns the stall
+    /// until the required drains complete. Full drain normally; only
+    /// overlapping lines under FastLock (§6.2.3).
+    pub fn drain_for_atomic(&mut self, now: f64, line: u64) -> f64 {
+        self.retire(now);
+        let stall = if self.cfg.fastlock {
+            self.queue
+                .iter()
+                .filter(|e| e.line == line)
+                .map(|e| (e.drain_done - now).max(0.0))
+                .fold(0.0, f64::max)
+        } else {
+            self.queue
+                .back()
+                .map(|e| (e.drain_done - now).max(0.0))
+                .unwrap_or(0.0)
+        };
+        if self.cfg.fastlock {
+            self.queue.retain(|e| e.line != line);
+        } else {
+            self.queue.clear();
+            self.last_drain_done = self.last_drain_done.max(now + stall);
+        }
+        stall
+    }
+
+    pub fn cfg(&self) -> WriteBufferCfg {
+        self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn wb(entries: usize, merging: bool, fastlock: bool) -> WriteBuffer {
+        WriteBuffer::new(WriteBufferCfg { entries, merging, fastlock })
+    }
+
+    #[test]
+    fn writes_do_not_stall_until_full() {
+        let mut b = wb(4, false, false);
+        for i in 0..4 {
+            assert_eq!(b.push_write(0.0, i, 100.0), 0.0);
+        }
+        // 5th write at t=0 must wait for the first drain (t=100)
+        let stall = b.push_write(0.0, 99, 100.0);
+        assert!(stall > 0.0, "expected stall, got {stall}");
+    }
+
+    #[test]
+    fn merging_absorbs_same_line() {
+        let mut b = wb(2, true, false);
+        assert_eq!(b.push_write(0.0, 7, 100.0), 0.0);
+        assert_eq!(b.push_write(1.0, 7, 100.0), 0.0);
+        assert_eq!(b.occupancy(), 1, "same-line stores must merge");
+    }
+
+    #[test]
+    fn no_merging_fills_buffer() {
+        let mut b = wb(8, false, false);
+        b.push_write(0.0, 7, 10.0);
+        b.push_write(0.0, 7, 10.0);
+        assert_eq!(b.occupancy(), 2);
+    }
+
+    #[test]
+    fn atomic_drains_everything() {
+        let mut b = wb(8, true, false);
+        b.push_write(0.0, 1, 100.0);
+        b.push_write(0.0, 2, 100.0);
+        let stall = b.drain_for_atomic(0.0, 3);
+        // two queued drains, serialized: 200ns from t=0
+        assert!((stall - 200.0).abs() < 1e-9, "stall {stall}");
+        assert_eq!(b.occupancy(), 0);
+    }
+
+    #[test]
+    fn fastlock_only_drains_overlapping() {
+        let mut b = wb(8, true, true);
+        b.push_write(0.0, 1, 100.0);
+        b.push_write(0.0, 2, 100.0);
+        // atomic on line 3: no overlap, no stall — ILP enabled
+        assert_eq!(b.drain_for_atomic(0.0, 3), 0.0);
+        assert_eq!(b.occupancy(), 2);
+        // atomic on line 2 waits for line 2's drain only (finishes at 200)
+        let stall = b.drain_for_atomic(0.0, 2);
+        assert!((stall - 200.0).abs() < 1e-9, "stall {stall}");
+        assert_eq!(b.occupancy(), 1);
+    }
+
+    #[test]
+    fn retire_frees_capacity_over_time() {
+        let mut b = wb(2, false, false);
+        b.push_write(0.0, 1, 10.0);
+        b.push_write(0.0, 2, 10.0);
+        // at t=25 both drains (10, 20) completed
+        assert_eq!(b.push_write(25.0, 3, 10.0), 0.0);
+        assert_eq!(b.occupancy(), 1);
+    }
+}

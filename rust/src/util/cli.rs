@@ -1,0 +1,98 @@
+//! Minimal CLI argument parsing (clap is not vendored in this offline image).
+//!
+//! Supports `repro <subcommand> [positional...] [--flag] [--key value]`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, positionals, and `--key [value]` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positionals: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positionals.push(arg);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn opt_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        self.opt(name)
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse_from(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("figure 2 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("figure"));
+        assert_eq!(a.positionals, vec!["2", "extra"]);
+    }
+
+    #[test]
+    fn options_and_flags() {
+        let a = parse("bench --arch haswell --verbose --scale=20");
+        assert_eq!(a.opt("arch"), Some("haswell"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.opt_parse("scale", 0u32), 20);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("x --a --b");
+        assert!(a.flag("a") && a.flag("b"));
+    }
+
+    #[test]
+    fn default_when_missing() {
+        let a = parse("x");
+        assert_eq!(a.opt_parse("threads", 4usize), 4);
+    }
+}

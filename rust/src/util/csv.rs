@@ -1,0 +1,94 @@
+//! CSV emission for figure data series.
+//!
+//! Every regenerated figure also writes its raw series to
+//! `results/<figure>.csv` so the plots can be recreated externally.
+
+use std::io::Write;
+use std::path::Path;
+
+/// A CSV writer that quotes only when necessary.
+#[derive(Debug, Default)]
+pub struct Csv {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Csv {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&escape_row(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&escape_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to `path`, creating parent directories.
+    pub fn write(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+fn escape_cell(cell: &str) -> String {
+    if cell.contains([',', '"', '\n']) {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+fn escape_row(cells: &[String]) -> String {
+    cells.iter().map(|c| escape_cell(c)).collect::<Vec<_>>().join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_roundtrip() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into(), "2".into()]);
+        assert_eq!(c.to_string(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn quoting() {
+        let mut c = Csv::new(&["a"]);
+        c.row(&["x,y".into()]);
+        c.row(&["he said \"hi\"".into()]);
+        let s = c.to_string();
+        assert!(s.contains("\"x,y\""));
+        assert!(s.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("atomics_repro_csv_test");
+        let path = dir.join("t.csv");
+        let mut c = Csv::new(&["a"]);
+        c.row(&["1".into()]);
+        c.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a\n1\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,14 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline with only the `xla` and `anyhow`
+//! crates vendored, so the pieces one would normally pull from crates.io
+//! (a PRNG, summary statistics, a property-testing helper, table/CSV
+//! formatting, CLI parsing) are implemented here.
+
+pub mod cli;
+pub mod fxhash;
+pub mod csv;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;

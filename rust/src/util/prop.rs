@@ -1,0 +1,73 @@
+//! Minimal in-tree property-based testing.
+//!
+//! `proptest` is not vendored in this offline environment, so this module
+//! provides the small subset the test-suite needs: seeded case generation,
+//! a configurable number of cases, and panics that report the failing seed
+//! so a case can be replayed deterministically.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property, overridable via `PROP_CASES`.
+pub fn default_cases() -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` against `cases` RNGs derived from `seed`. Each case gets an
+/// independent deterministic generator; a failure names the case seed.
+pub fn for_all_with(seed: u64, cases: usize, mut prop: impl FnMut(&mut Rng)) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng);
+        }));
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed at case {case} (seed {case_seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Run a property with the default number of cases.
+pub fn for_all(seed: u64, prop: impl FnMut(&mut Rng)) {
+    for_all_with(seed, default_cases(), prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_for_true_property() {
+        for_all(1, |rng| {
+            let x = rng.below(100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let result = std::panic::catch_unwind(|| {
+            for_all_with(2, 32, |rng| {
+                assert!(rng.below(10) < 5, "too big");
+            });
+        });
+        let err = result.expect_err("property should fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("property failed at case"), "got: {msg}");
+    }
+
+    #[test]
+    fn case_count_is_respected() {
+        let mut n = 0;
+        for_all_with(3, 17, |_| n += 1);
+        assert_eq!(n, 17);
+    }
+}

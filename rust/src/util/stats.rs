@@ -1,0 +1,122 @@
+//! Summary statistics used by the benchmark result-collection phase
+//! (§2.1 of the paper) and by the in-tree bench harness.
+
+/// Summary of a sample of f64 observations.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub median: f64,
+    pub min: f64,
+    pub max: f64,
+    pub stddev: f64,
+    pub p05: f64,
+    pub p95: f64,
+}
+
+impl Summary {
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "Summary::of on empty sample");
+        let n = samples.len();
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = sorted.iter().sum::<f64>() / n as f64;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        Summary {
+            n,
+            mean,
+            median: percentile_sorted(&sorted, 0.5),
+            min: sorted[0],
+            max: sorted[n - 1],
+            stddev: var.sqrt(),
+            p05: percentile_sorted(&sorted, 0.05),
+            p95: percentile_sorted(&sorted, 0.95),
+        }
+    }
+}
+
+/// Linear-interpolated percentile of an already-sorted sample.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    assert!((0.0..=1.0).contains(&q));
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Median of an unsorted slice.
+pub fn median(samples: &[f64]) -> f64 {
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&sorted, 0.5)
+}
+
+/// Normalized root mean square error (Eq. 12 of the paper):
+/// `NRMSE = (1/x̄) * sqrt( (1/n) Σ (x̂ᵢ - xᵢ)² )`.
+/// `predicted` are model values x̂, `observed` are data points x.
+pub fn nrmse(predicted: &[f64], observed: &[f64]) -> f64 {
+    assert_eq!(predicted.len(), observed.len());
+    assert!(!observed.is_empty());
+    let n = observed.len() as f64;
+    let mean_obs = observed.iter().sum::<f64>() / n;
+    let mse = predicted
+        .iter()
+        .zip(observed)
+        .map(|(p, o)| (p - o) * (p - o))
+        .sum::<f64>()
+        / n;
+    mse.sqrt() / mean_obs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.median - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert!((s.stddev - 2f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_even() {
+        assert!((median(&[1.0, 2.0, 3.0, 4.0]) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_endpoints() {
+        let sorted = [1.0, 2.0, 3.0];
+        assert_eq!(percentile_sorted(&sorted, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&sorted, 1.0), 3.0);
+    }
+
+    #[test]
+    fn nrmse_zero_for_perfect_prediction() {
+        let x = [3.0, 4.0, 5.0];
+        assert_eq!(nrmse(&x, &x), 0.0);
+    }
+
+    #[test]
+    fn nrmse_matches_hand_computation() {
+        // predictions off by +1 everywhere over mean-2 data: sqrt(1)/2 = 0.5
+        let pred = [3.0, 3.0];
+        let obs = [2.0, 2.0];
+        assert!((nrmse(&pred, &obs) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nrmse_length_mismatch_panics() {
+        nrmse(&[1.0], &[1.0, 2.0]);
+    }
+}

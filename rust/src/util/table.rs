@@ -1,0 +1,136 @@
+//! ASCII table rendering for figure/table regeneration output.
+//!
+//! Every paper table and figure is re-emitted as an aligned text table (plus
+//! CSV via [`crate::util::csv`]), matching the rows/series the paper reports.
+
+/// A simple column-aligned text table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    /// Render with per-column alignment (numbers right, text left).
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let numeric: Vec<bool> = (0..ncols)
+            .map(|i| {
+                !self.rows.is_empty()
+                    && self.rows.iter().all(|r| {
+                        let c = r[i].trim();
+                        c.is_empty() || c.parse::<f64>().is_ok() || c == "-"
+                    })
+            })
+            .collect();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        let fmt_row = |cells: &[String], out: &mut String| {
+            let parts: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    if numeric[i] {
+                        format!("{:>width$}", c, width = widths[i])
+                    } else {
+                        format!("{:<width$}", c, width = widths[i])
+                    }
+                })
+                .collect();
+            out.push_str("| ");
+            out.push_str(&parts.join(" | "));
+            out.push_str(" |\n");
+        };
+        fmt_row(&self.header, &mut out);
+        out.push_str("|");
+        for w in &widths {
+            out.push_str(&format!("{}-|", "-".repeat(w + 2 - 1)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        out
+    }
+}
+
+/// Format an f64 with `prec` decimals, using "-" for NaN (absent cells).
+pub fn num(x: f64, prec: usize) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{x:.prec$}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = Table::new("demo", &["name", "ns"]);
+        t.row_strs(&["L1", "1.17"]);
+        t.row_strs(&["L2", "3.50"]);
+        let s = t.render();
+        assert!(s.contains("## demo"));
+        assert!(s.contains("| L1"));
+        assert!(s.contains("1.17"));
+    }
+
+    #[test]
+    fn numeric_columns_right_aligned() {
+        let mut t = Table::new("", &["v"]);
+        t.row_strs(&["1.0"]);
+        t.row_strs(&["100.0"]);
+        let s = t.render();
+        assert!(s.contains("|   1.0 |"), "got:\n{s}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_row_panics() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row_strs(&["only one"]);
+    }
+
+    #[test]
+    fn num_formats() {
+        assert_eq!(num(1.234, 2), "1.23");
+        assert_eq!(num(f64::NAN, 2), "-");
+    }
+}

@@ -1,0 +1,172 @@
+//! Property-based tests over the coherence engine: random operation
+//! sequences on random cores/addresses must preserve the global invariants
+//! (DESIGN.md §6) on every architecture and protocol variant.
+
+use atomics_repro::arch;
+use atomics_repro::atomics::{Op, Width};
+use atomics_repro::sim::Machine;
+use atomics_repro::util::prop::{for_all_with, default_cases};
+use atomics_repro::util::rng::Rng;
+
+fn random_op(rng: &mut Rng) -> Op {
+    match rng.below(6) {
+        0 => Op::Read,
+        1 => Op::Write { value: rng.next_u64() % 100 },
+        2 => Op::Cas { expected: rng.next_u64() % 4, new: rng.next_u64() % 100, fetched_operands: 1 },
+        3 => Op::Faa { delta: rng.next_u64() % 10 },
+        4 => Op::Swp { value: rng.next_u64() % 100 },
+        _ => Op::Read,
+    }
+}
+
+/// Run `ops` random operations, checking the invariants periodically.
+fn random_workout(m: &mut Machine, rng: &mut Rng, ops: usize, lines: u64) {
+    let n_cores = m.cfg.topology.n_cores as u64;
+    for i in 0..ops {
+        let core = rng.below(n_cores) as usize;
+        let addr = 0x10_0000 + rng.below(lines) * 64 + rng.below(8) * 8;
+        let op = random_op(rng);
+        let a = m.access(core, op, addr, Width::W64);
+        assert!(a.latency > 0.0, "latency must be positive ({op:?})");
+        assert!(a.latency < 1e5, "latency absurd: {} ({op:?})", a.latency);
+        if i % 64 == 0 {
+            if let Err(e) = m.check_invariants() {
+                panic!("invariant violated after {i} ops: {e}");
+            }
+        }
+    }
+    m.check_invariants().unwrap();
+}
+
+#[test]
+fn invariants_hold_on_haswell() {
+    for_all_with(0xA1, default_cases(), |rng| {
+        let mut m = Machine::new(arch::haswell());
+        random_workout(&mut m, rng, 300, 64);
+    });
+}
+
+#[test]
+fn invariants_hold_on_ivybridge() {
+    for_all_with(0xA2, default_cases(), |rng| {
+        let mut m = Machine::new(arch::ivybridge());
+        random_workout(&mut m, rng, 300, 64);
+    });
+}
+
+#[test]
+fn invariants_hold_on_bulldozer() {
+    for_all_with(0xA3, default_cases(), |rng| {
+        let mut m = Machine::new(arch::bulldozer());
+        random_workout(&mut m, rng, 300, 64);
+    });
+}
+
+#[test]
+fn invariants_hold_on_xeonphi() {
+    for_all_with(0xA4, default_cases(), |rng| {
+        let mut m = Machine::new(arch::xeonphi());
+        random_workout(&mut m, rng, 300, 64);
+    });
+}
+
+#[test]
+fn invariants_hold_with_extensions() {
+    for_all_with(0xA5, default_cases(), |rng| {
+        let mut m = Machine::new(arch::bulldozer_with_extensions(true, true, true));
+        random_workout(&mut m, rng, 300, 64);
+    });
+}
+
+#[test]
+fn invariants_hold_with_prefetchers() {
+    for_all_with(0xA6, default_cases(), |rng| {
+        let mut cfg = arch::haswell();
+        cfg.mechanisms.hw_prefetcher = true;
+        cfg.mechanisms.adjacent_line = true;
+        let mut m = Machine::new(cfg);
+        random_workout(&mut m, rng, 300, 64);
+    });
+}
+
+/// Data semantics: the memory store must agree with a host-side shadow
+/// model under arbitrary interleavings.
+#[test]
+fn data_values_match_shadow_model() {
+    for_all_with(0xB1, default_cases(), |rng| {
+        let mut m = Machine::new(arch::haswell());
+        let mut shadow = std::collections::HashMap::<u64, u64>::new();
+        for _ in 0..200 {
+            let core = rng.below(4) as usize;
+            let addr = 0x20_0000 + rng.below(16) * 8;
+            let op = random_op(rng);
+            let before = *shadow.get(&addr).unwrap_or(&0);
+            let (after, returned, modified) = op.apply(before);
+            let a = m.access64(core, op, addr);
+            assert_eq!(a.value, returned, "returned value for {op:?} at {addr:#x}");
+            assert_eq!(a.modified, modified);
+            shadow.insert(addr, after);
+        }
+        for (&addr, &v) in &shadow {
+            assert_eq!(m.mem.read(addr), v, "divergence at {addr:#x}");
+        }
+    });
+}
+
+/// Determinism: identical seeds and op sequences give identical latencies.
+#[test]
+fn engine_is_deterministic() {
+    for_all_with(0xC1, 16, |rng| {
+        let seed = rng.next_u64();
+        let run = |seed: u64| -> Vec<u64> {
+            let mut rng = Rng::new(seed);
+            let mut m = Machine::new(arch::bulldozer());
+            (0..200)
+                .map(|_| {
+                    let core = rng.below(32) as usize;
+                    let addr = 0x400_000 + rng.below(32) * 64;
+                    m.access64(core, random_op(&mut rng), addr).latency.to_bits()
+                })
+                .collect()
+        };
+        assert_eq!(run(seed), run(seed));
+    });
+}
+
+/// Monotonic virtual clocks.
+#[test]
+fn clocks_never_regress() {
+    for_all_with(0xD1, 16, |rng| {
+        let mut m = Machine::new(arch::xeonphi());
+        let mut last = vec![0.0f64; 61];
+        for _ in 0..200 {
+            let core = rng.below(61) as usize;
+            let addr = 0x80_0000 + rng.below(32) * 64;
+            m.access64(core, random_op(rng), addr);
+            let now = m.clock_of(core);
+            assert!(now >= last[core], "clock regressed on core {core}");
+            last[core] = now;
+        }
+    });
+}
+
+/// BFS trees from random Kronecker graphs are always valid, under both
+/// claim protocols and any thread count.
+#[test]
+fn bfs_always_produces_valid_trees() {
+    use atomics_repro::graph::bfs::validate_tree;
+    use atomics_repro::graph::{kronecker_edges, parallel_bfs, BfsMode, Csr};
+    for_all_with(0xE1, 12, |rng| {
+        let scale = 6 + rng.below(3) as u32;
+        let seed = rng.next_u64();
+        let threads = 1 + rng.below(4) as usize;
+        let csr = Csr::from_edges(1 << scale, &kronecker_edges(scale, seed));
+        let Some(root) = csr.first_non_isolated() else { return };
+        for mode in [BfsMode::Cas, BfsMode::Swp] {
+            let mut m = Machine::new(arch::haswell());
+            let r = parallel_bfs(&mut m, &csr, root, threads, mode);
+            validate_tree(&csr, root, &r.parent)
+                .unwrap_or_else(|e| panic!("{mode:?} scale {scale} seed {seed:#x}: {e}"));
+        }
+    });
+}

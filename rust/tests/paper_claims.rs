@@ -1,0 +1,175 @@
+//! Integration tests over the whole stack: the paper's qualitative claims
+//! must hold end-to-end (simulator → benchmarks → model), on every testbed
+//! where the paper states them.
+
+use atomics_repro::arch;
+use atomics_repro::atomics::OpKind;
+use atomics_repro::bench::bandwidth::BandwidthBench;
+use atomics_repro::bench::latency::LatencyBench;
+use atomics_repro::bench::placement::{PrepLocality, PrepState};
+use atomics_repro::coordinator::dataset::collect_latency_dataset;
+use atomics_repro::model::features::dot;
+use atomics_repro::model::params::Theta;
+use atomics_repro::util::stats::nrmse;
+
+const KB16: usize = 16 << 10;
+const KB64: usize = 64 << 10;
+
+fn lat(cfg: &atomics_repro::sim::MachineConfig, op: OpKind, st: PrepState, loc: PrepLocality, sz: usize) -> f64 {
+    LatencyBench::new(op, st, loc).run_once(cfg, sz).unwrap()
+}
+
+/// §5.1.4 headline: "the latency of CAS, FAA, and SWP is in most cases
+/// identical" — consensus numbers buy nothing.
+#[test]
+fn consensus_number_does_not_change_latency_class() {
+    for cfg in arch::all() {
+        for st in [PrepState::E, PrepState::M] {
+            let c = lat(&cfg, OpKind::Cas, st, PrepLocality::OnChip, KB64);
+            let f = lat(&cfg, OpKind::Faa, st, PrepLocality::OnChip, KB64);
+            let s = lat(&cfg, OpKind::Swp, st, PrepLocality::OnChip, KB64);
+            let spread = (c - f).abs().max((s - f).abs());
+            let base = f.max(1.0);
+            assert!(
+                spread / base < 0.25,
+                "{}: CAS {c:.1} FAA {f:.1} SWP {s:.1} (state {st:?})",
+                cfg.name
+            );
+        }
+    }
+}
+
+/// §5.2: atomics bandwidth is 5–30× below plain writes on every testbed.
+#[test]
+fn atomics_bandwidth_5_to_30x_below_writes() {
+    for cfg in arch::all() {
+        let w = BandwidthBench::new(OpKind::Write, PrepState::M, PrepLocality::Local)
+            .run_once(&cfg, KB16)
+            .unwrap();
+        let f = BandwidthBench::new(OpKind::Faa, PrepState::M, PrepLocality::Local)
+            .run_once(&cfg, KB16)
+            .unwrap();
+        let ratio = w / f;
+        assert!(
+            (3.0..60.0).contains(&ratio),
+            "{}: write {w:.2} GB/s vs FAA {f:.2} GB/s (x{ratio:.1})",
+            cfg.name
+        );
+    }
+}
+
+/// §5.1.1: atomics are ≈5–10 ns slower than reads on Intel E/M states.
+#[test]
+fn intel_atomic_read_gap() {
+    for cfg in [arch::haswell(), arch::ivybridge()] {
+        let r = lat(&cfg, OpKind::Read, PrepState::M, PrepLocality::Local, KB16);
+        let a = lat(&cfg, OpKind::Swp, PrepState::M, PrepLocality::Local, KB16);
+        let gap = a - r;
+        assert!((2.0..14.0).contains(&gap), "{}: gap {gap:.1}", cfg.name);
+    }
+}
+
+/// §5.1.2: Bulldozer S/O atomics pay the remote invalidation broadcast even
+/// with die-local sharers; Intel does not.
+#[test]
+fn bulldozer_pays_remote_broadcast_intel_does_not() {
+    let amd = arch::bulldozer();
+    let s = lat(&amd, OpKind::Cas, PrepState::S, PrepLocality::SharedL2, KB64);
+    let e = lat(&amd, OpKind::Cas, PrepState::E, PrepLocality::SharedL2, KB64);
+    assert!(s - e > 40.0, "AMD broadcast: E {e:.1} vs S {s:.1}");
+
+    let intel = arch::haswell();
+    let s = lat(&intel, OpKind::Cas, PrepState::S, PrepLocality::OnChip, KB64);
+    let e = lat(&intel, OpKind::Cas, PrepState::E, PrepLocality::OnChip, KB64);
+    assert!(
+        (s - e).abs() < 25.0,
+        "Intel tracks sharers: E {e:.1} vs S {s:.1}"
+    );
+}
+
+/// §6.2.1/§6.2.2: with *die-local* sharers (the scenario that motivates the
+/// proposals) both fixes eliminate the broadcast penalty; the shipping
+/// MOESI still broadcasts because it cannot prove locality.
+#[test]
+fn proposed_extensions_remove_broadcast_penalty() {
+    use atomics_repro::bench::placement::SharerPlacement;
+    let measure = |cfg: &atomics_repro::sim::MachineConfig| {
+        let mut b = LatencyBench::new(OpKind::Cas, PrepState::S, PrepLocality::SharedL2);
+        b.sharer = SharerPlacement::SameDie;
+        b.run_once(cfg, KB64).unwrap()
+    };
+    let b = measure(&arch::bulldozer());
+    let o = measure(&arch::bulldozer_with_extensions(true, false, false));
+    let h = measure(&arch::bulldozer_with_extensions(false, true, false));
+    assert!(b - o > 30.0, "OL/SL: {b:.1} -> {o:.1}");
+    assert!(b - h > 30.0, "HTA tracking: {b:.1} -> {h:.1}");
+}
+
+/// §6.2.3: FastLock restores write-buffer overlap for independent atomics.
+#[test]
+fn fastlock_improves_independent_atomic_bandwidth() {
+    let base = arch::bulldozer();
+    let fl = arch::bulldozer_with_extensions(false, false, true);
+    let b = BandwidthBench::new(OpKind::Faa, PrepState::M, PrepLocality::Local)
+        .run_once(&base, KB16)
+        .unwrap();
+    let f = BandwidthBench::new(OpKind::Faa, PrepState::M, PrepLocality::Local)
+        .run_once(&fl, KB16)
+        .unwrap();
+    assert!(f >= b, "FastLock {f:.2} vs lock {b:.2} GB/s");
+}
+
+/// §5: the model tracks the simulator within NRMSE thresholds per series on
+/// the E/M states (the paper's own validation discusses the S-state and
+/// HT-Assist deviations).
+#[test]
+fn model_nrmse_on_exclusive_states() {
+    for cfg in [arch::haswell(), arch::ivybridge()] {
+        let ds = collect_latency_dataset(&cfg, &[16 << 10, 128 << 10, 2 << 20]);
+        let theta = Theta::from_config(&cfg);
+        let em: Vec<&_> = ds
+            .iter()
+            .filter(|d| {
+                matches!(
+                    d.query.state,
+                    atomics_repro::model::ModelState::E | atomics_repro::model::ModelState::M
+                )
+            })
+            .collect();
+        let pred: Vec<f64> = em.iter().map(|d| dot(&d.features, &theta.to_vec())).collect();
+        let obs: Vec<f64> = em.iter().map(|d| d.measured_ns).collect();
+        let v = nrmse(&pred, &obs);
+        assert!(v < 0.30, "{}: E/M NRMSE {:.1}%", cfg.name, v * 100.0);
+    }
+}
+
+/// Fig. 7: 128-bit CAS penalty exists on Bulldozer, not on Intel.
+#[test]
+fn operand_width_penalty_amd_only() {
+    use atomics_repro::bench::operand::width_comparison;
+    let (s64, s128) =
+        width_comparison(&arch::bulldozer(), PrepState::M, PrepLocality::Local, &[KB64]).unwrap();
+    assert!(s128.points[0].value - s64.points[0].value > 10.0);
+    let (s64, s128) =
+        width_comparison(&arch::haswell(), PrepState::M, PrepLocality::Local, &[KB64]).unwrap();
+    assert!((s128.points[0].value - s64.points[0].value).abs() < 1.0);
+}
+
+/// §5.7: unaligned atomics lock the bus on every testbed.
+#[test]
+fn unaligned_atomics_bus_lock_everywhere() {
+    for cfg in arch::all() {
+        let a = LatencyBench::new(OpKind::Cas, PrepState::M, PrepLocality::Local)
+            .run_once(&cfg, KB16)
+            .unwrap();
+        let u = atomics_repro::bench::unaligned::unaligned_latency(
+            &cfg,
+            OpKind::Cas,
+            PrepState::M,
+            PrepLocality::Local,
+            KB16,
+        )
+        .unwrap();
+        assert!(u > a + 0.8 * cfg.unaligned.bus_lock_ns, "{}: {a:.0} vs {u:.0}", cfg.name);
+    }
+}

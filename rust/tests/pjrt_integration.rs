@@ -1,0 +1,113 @@
+//! Cross-layer integration: the Rust analytical model, the Pallas-kernel
+//! HLO (via PJRT), and the AOT NRMSE executable must agree numerically.
+//! These tests skip gracefully when `make artifacts` has not run.
+
+use atomics_repro::arch;
+use atomics_repro::atomics::OpKind;
+use atomics_repro::coordinator::dataset::collect_latency_dataset;
+use atomics_repro::model::features::{dot, featurize};
+use atomics_repro::model::params::{Theta, THETA_DIM};
+use atomics_repro::model::query::{ModelState, Query};
+use atomics_repro::runtime::{Batch, Runtime, BATCH_ROWS};
+use atomics_repro::sim::timing::Level;
+use atomics_repro::sim::topology::Distance;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !std::path::Path::new(&dir).join("predict.hlo.txt").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(dir).expect("artifacts load"))
+}
+
+/// The AOT predict executable and the Rust featurization agree on every
+/// (op, state, level, distance) combination of every architecture.
+#[test]
+fn pjrt_predict_agrees_with_rust_model() {
+    let Some(rt) = runtime() else { return };
+    for cfg in arch::all() {
+        let theta = Theta::from_config(&cfg);
+        let theta32: [f32; THETA_DIM] = std::array::from_fn(|i| theta.to_vec()[i] as f32);
+        let mut queries = Vec::new();
+        for op in [OpKind::Read, OpKind::Cas, OpKind::Faa, OpKind::Swp] {
+            for state in [ModelState::E, ModelState::M, ModelState::S] {
+                for level in [Level::L1, Level::L2, Level::L3, Level::Memory] {
+                    for dist in [Distance::Local, Distance::SameDie, Distance::OtherSocket] {
+                        queries.push(Query::new(op, state, level, dist));
+                    }
+                }
+            }
+        }
+        let mut features = vec![0f32; BATCH_ROWS * THETA_DIM];
+        for (i, q) in queries.iter().enumerate() {
+            let f = featurize(&cfg, q);
+            for j in 0..THETA_DIM {
+                features[i * THETA_DIM + j] = f[j] as f32;
+            }
+        }
+        let out = rt.predict(&features, &theta32).unwrap();
+        for (i, q) in queries.iter().enumerate() {
+            let rust = dot(&featurize(&cfg, q), &theta.to_vec());
+            let pjrt = f64::from(out[i]);
+            assert!(
+                (rust - pjrt).abs() < 1e-3 * rust.abs().max(1.0),
+                "{} {:?}: rust {rust} vs pjrt {pjrt}",
+                cfg.name,
+                q
+            );
+        }
+    }
+}
+
+/// End-to-end Table-2 style flow on a small dataset: measure → featurize →
+/// fit via PJRT → the fitted model predicts the measurements better than a
+/// zero model and with NRMSE comparable to the seeded analytical model.
+#[test]
+fn fit_improves_over_uninformed_start() {
+    use atomics_repro::coordinator::fit::{fit_theta, FitCfg};
+    let Some(rt) = runtime() else { return };
+    let cfg = arch::haswell();
+    let ds = collect_latency_dataset(&cfg, &[16 << 10, 1 << 20]);
+    let rows: Vec<([f64; THETA_DIM], f64)> =
+        ds.iter().map(|d| (d.features, d.measured_ns)).collect();
+    let zero = Theta::from_vec(&[0.0; THETA_DIM]);
+    let report = fit_theta(
+        &rt,
+        cfg.name,
+        &ds,
+        zero,
+        FitCfg { lr: 1e-3, max_iters: 600, tol: 1e-7 },
+    )
+    .unwrap();
+    // NRMSE of the fitted theta via the AOT executable
+    let theta32: [f32; THETA_DIM] = std::array::from_fn(|i| report.theta.to_vec()[i] as f32);
+    let batch = &Batch::pack(&rows)[0];
+    let pred = rt.predict(&batch.features, &theta32).unwrap();
+    let v = rt.nrmse(&pred, &batch.targets, &batch.mask).unwrap();
+    assert!(v < 0.5, "fitted-from-zero NRMSE {v}");
+}
+
+/// The NRMSE executable and the Rust Eq. 12 implementation agree on real
+/// benchmark data.
+#[test]
+fn nrmse_paths_agree_on_benchmark_data() {
+    let Some(rt) = runtime() else { return };
+    let cfg = arch::ivybridge();
+    let ds = collect_latency_dataset(&cfg, &[64 << 10]);
+    let theta = Theta::from_config(&cfg);
+    let rows: Vec<([f64; THETA_DIM], f64)> =
+        ds.iter().map(|d| (d.features, d.measured_ns)).collect();
+    let batch = &Batch::pack(&rows)[0];
+    let theta32: [f32; THETA_DIM] = std::array::from_fn(|i| theta.to_vec()[i] as f32);
+    let pred = rt.predict(&batch.features, &theta32).unwrap();
+    let pjrt = rt.nrmse(&pred, &batch.targets, &batch.mask).unwrap();
+    let rust = atomics_repro::util::stats::nrmse(
+        &pred[..batch.n_valid].iter().map(|&x| f64::from(x)).collect::<Vec<_>>(),
+        &batch.targets[..batch.n_valid].iter().map(|&x| f64::from(x)).collect::<Vec<_>>(),
+    );
+    assert!(
+        (f64::from(pjrt) - rust).abs() < 1e-4,
+        "pjrt {pjrt} vs rust {rust}"
+    );
+}
