@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# CI gate for the atomics-repro workspace: format, build, test, smoke-sweep.
+# Run from the repository root. Fails fast on the first broken step.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "== cargo fmt --check =="
+if cargo fmt --version >/dev/null 2>&1; then
+    cargo fmt --all -- --check
+else
+    echo "(rustfmt not installed — skipping format check)"
+fi
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== smoke: repro sweep --threads 2 (reduced grid) =="
+./target/release/repro sweep --threads 2 --fast --family latency --arch haswell
+
+echo "CI OK"

@@ -1,0 +1,72 @@
+//! End-to-end sweep-executor benchmark: times the full figure-style latency
+//! grid single-threaded vs. with all cores, prints the speedup, and writes
+//! `BENCH_sweep.json` so future PRs can track sweep throughput. Uses the
+//! in-tree harness (criterion is not vendored offline). `BENCH_FAST=1`
+//! reduces samples.
+
+use atomics_repro::arch;
+use atomics_repro::harness::{black_box, Bencher};
+use atomics_repro::sweep::{default_threads, SweepExecutor, SweepPlan};
+use std::io::Write;
+use std::time::Instant;
+
+fn main() {
+    // The reduced sweep keeps the bench minutes-scale; shapes identical.
+    std::env::set_var("FAST", "1");
+    let sizes = atomics_repro::report::sweep_sizes();
+    let plan = SweepPlan::latency(arch::all(), sizes);
+    let jobs = plan.expand();
+    let n_points: usize = jobs.iter().map(|j| j.xs.len()).sum();
+    let threads = default_threads();
+
+    let mut b = Bencher::new();
+    b.group(&format!(
+        "sweep executor end-to-end ({} series, {n_points} points)",
+        jobs.len()
+    ));
+
+    let t0 = Instant::now();
+    let single_out = SweepExecutor::new(1).run(&jobs);
+    let single_ms = t0.elapsed().as_secs_f64() * 1e3;
+    black_box(&single_out);
+
+    let t0 = Instant::now();
+    let parallel_out = SweepExecutor::new(threads).run(&jobs);
+    let parallel_ms = t0.elapsed().as_secs_f64() * 1e3;
+    black_box(&parallel_out);
+
+    // sanity: identical results regardless of thread count
+    for (s, p) in single_out.iter().zip(&parallel_out) {
+        for ((xa, va), (xb, vb)) in s.points.iter().zip(&p.points) {
+            assert_eq!(xa, xb);
+            assert_eq!(va.map(f64::to_bits), vb.map(f64::to_bits), "{}", s.name);
+        }
+    }
+
+    let speedup = single_ms / parallel_ms.max(1e-9);
+    println!("  threads=1        {single_ms:>10.1} ms");
+    println!("  threads={threads:<8} {parallel_ms:>10.1} ms   ({speedup:.2}x speedup)");
+
+    // repeated timed samples of the parallel path for variance
+    b.bench_throughput("sweep_parallel_grid", n_points as u64, || {
+        black_box(SweepExecutor::new(threads).run(&jobs));
+    });
+
+    let json = format!(
+        "{{\"bench\":\"sweep\",\"series\":{},\"points\":{},\"threads\":{},\
+         \"single_ms\":{:.1},\"parallel_ms\":{:.1},\"speedup\":{:.3},\
+         \"points_per_sec_parallel\":{:.1}}}\n",
+        jobs.len(),
+        n_points,
+        threads,
+        single_ms,
+        parallel_ms,
+        speedup,
+        n_points as f64 / (parallel_ms / 1e3).max(1e-9)
+    );
+    match std::fs::File::create("BENCH_sweep.json").and_then(|mut f| f.write_all(json.as_bytes()))
+    {
+        Ok(()) => println!("\nwrote BENCH_sweep.json"),
+        Err(e) => eprintln!("\nwarning: could not write BENCH_sweep.json: {e}"),
+    }
+}

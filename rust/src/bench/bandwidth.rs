@@ -41,10 +41,10 @@ impl BandwidthBench {
         )
     }
 
-    /// Bandwidth in GB/s for one buffer size.
-    pub fn run_once(&self, cfg: &MachineConfig, buffer_bytes: usize) -> Option<f64> {
-        let cast = choose_cast(&cfg.topology, self.locality)?;
-        let mut m = Machine::new(cfg.clone());
+    /// Bandwidth in GB/s for one buffer size on a fresh (new or reset)
+    /// machine. This is the [`crate::sweep::Workload`] entry point.
+    pub fn run_on(&self, m: &mut Machine, buffer_bytes: usize) -> Option<f64> {
+        let cast = choose_cast(&m.cfg.topology, self.locality)?;
         let n_lines = (buffer_bytes / 64).max(1);
         let fill = if self.op == OpKind::Cas && !self.cas_succeeds {
             // §3.2: increasing byte values ensure every CAS fails
@@ -52,21 +52,19 @@ impl BandwidthBench {
         } else {
             FillPattern::Zero
         };
-        let addrs = prepare(&mut m, 0x4000_0000, n_lines, self.state, cast, fill);
+        let addrs = prepare(m, 0x4000_0000, n_lines, self.state, cast, fill);
 
         let op = op_for(self.op, self.cas_succeeds);
-        let step = self.width.bytes();
-        let per_line = (64 / step) as usize;
         let t0 = m.clock_of(cast.requester);
-        let mut bytes = 0u64;
-        for &base in &addrs {
-            for k in 0..per_line as u64 {
-                m.access(cast.requester, op, base + k * step, self.width);
-                bytes += step;
-            }
-        }
+        let bytes = m.access_sweep(cast.requester, op, &addrs, self.width);
         let elapsed = m.clock_of(cast.requester) - t0;
         Some(bytes as f64 / elapsed) // bytes per ns == GB/s
+    }
+
+    /// Bandwidth in GB/s for one buffer size on a dedicated machine.
+    pub fn run_once(&self, cfg: &MachineConfig, buffer_bytes: usize) -> Option<f64> {
+        let mut m = Machine::new(cfg.clone());
+        self.run_on(&mut m, buffer_bytes)
     }
 
     pub fn sweep(&self, cfg: &MachineConfig, sizes: &[usize]) -> Option<Series> {

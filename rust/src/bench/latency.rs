@@ -50,18 +50,18 @@ impl LatencyBench {
         )
     }
 
-    /// Measure the mean latency for one buffer size. Returns `None` when the
-    /// locality does not exist on the architecture.
-    pub fn run_once(&self, cfg: &MachineConfig, buffer_bytes: usize) -> Option<f64> {
-        let cast = choose_cast_with_sharer(&cfg.topology, self.locality, self.sharer)?;
-        let mut m = Machine::new(cfg.clone());
+    /// Measure the mean latency for one buffer size on a fresh (new or
+    /// reset) machine. Returns `None` when the locality does not exist on
+    /// the architecture. This is the [`crate::sweep::Workload`] entry point.
+    pub fn run_on(&self, m: &mut Machine, buffer_bytes: usize) -> Option<f64> {
+        let cast = choose_cast_with_sharer(&m.cfg.topology, self.locality, self.sharer)?;
         let n_lines = (buffer_bytes / 64).max(1);
         let fill = if self.op == OpKind::Cas && !self.cas_succeeds {
             FillPattern::Increasing
         } else {
             FillPattern::Zero
         };
-        let addrs = prepare(&mut m, 0x4000_0000, n_lines, self.state, cast, fill);
+        let addrs = prepare(m, 0x4000_0000, n_lines, self.state, cast, fill);
 
         // Pointer chase: pseudo-random permutation, one visit per line.
         let mut order: Vec<usize> = (0..addrs.len()).collect();
@@ -69,12 +69,15 @@ impl LatencyBench {
         rng.shuffle(&mut order);
 
         let op = op_for(self.op, self.cas_succeeds);
-        let mut total = 0.0;
-        for &i in &order {
-            let a = m.access(cast.requester, op, addrs[i], self.width);
-            total += a.latency;
-        }
+        let total = m.access_chain(cast.requester, op, &addrs, &order, self.width);
         Some(total / addrs.len() as f64)
+    }
+
+    /// Measure the mean latency for one buffer size on a dedicated machine.
+    /// Returns `None` when the locality does not exist on the architecture.
+    pub fn run_once(&self, cfg: &MachineConfig, buffer_bytes: usize) -> Option<f64> {
+        let mut m = Machine::new(cfg.clone());
+        self.run_on(&mut m, buffer_bytes)
     }
 
     /// Sweep buffer sizes, producing one figure series.

@@ -27,52 +27,66 @@ pub fn width_comparison(
     Some((s64, s128))
 }
 
-/// Fig. 8d / §5.5: CAS whose comparand is itself fetched from a second
-/// buffer. The second fetch pipelines with the first (§5.5 measures only
-/// +2–4 ns locally, +15–30 ns remotely); on Bulldozer the MuW state makes
-/// M-line targets immune.
+/// Fig. 8d / §5.5, one point on a fresh (new or reset) machine: CAS whose
+/// comparand is itself fetched from a second buffer. The second fetch
+/// pipelines with the first (§5.5 measures only +2–4 ns locally, +15–30 ns
+/// remotely); on Bulldozer the MuW state makes M-line targets immune.
+/// This is the [`crate::sweep::Workload`] entry point.
+pub fn two_operand_cas_on(
+    m: &mut Machine,
+    state: PrepState,
+    locality: PrepLocality,
+    size: usize,
+) -> Option<f64> {
+    let cast = choose_cast(&m.cfg.topology, locality)?;
+    let n_lines = (size / 64).max(1);
+    // target buffer, prepared in `state` at the owner
+    let addrs = prepare(m, 0x4000_0000, n_lines, state, cast, FillPattern::Increasing);
+    // comparand buffer, local to the requester (E state)
+    let cmp_cast = crate::bench::placement::Cast {
+        requester: cast.requester,
+        owner: cast.requester,
+        sharer: cast.sharer,
+    };
+    let cmps = prepare(m, 0x8000_0000, n_lines, PrepState::E, cmp_cast, FillPattern::Zero);
+
+    let mut order: Vec<usize> = (0..addrs.len()).collect();
+    Rng::new(0x0CA5 ^ size as u64).shuffle(&mut order);
+
+    let mut total = 0.0;
+    for &i in &order {
+        // fetch the comparand (second operand) — pipelined at 20%,
+        // or free for MuW-protected dirty targets (§5.5)
+        let target_dirty = state == PrepState::M || state == PrepState::O;
+        let pipeline = if m.cfg.muw && target_dirty { 0.0 } else { 0.2 };
+        let cmp_cost = m.access64(cast.requester, Op::Read, cmps[i]).latency * pipeline;
+        if m.cfg.muw && target_dirty {
+            m.stats.muw_migrations += 1;
+        }
+        let a = m.access64(
+            cast.requester,
+            Op::Cas { expected: u64::MAX, new: 1, fetched_operands: 2 },
+            addrs[i],
+        );
+        total += a.latency + cmp_cost;
+    }
+    Some(total / addrs.len() as f64)
+}
+
+/// Fig. 8d / §5.5: the two-fetched-operand CAS sweep.
 pub fn two_operand_cas(
     cfg: &MachineConfig,
     state: PrepState,
     locality: PrepLocality,
     sizes: &[usize],
 ) -> Option<Series> {
-    let cast = choose_cast(&cfg.topology, locality)?;
     let mut points = Vec::new();
     for &size in sizes {
         let mut m = Machine::new(cfg.clone());
-        let n_lines = (size / 64).max(1);
-        // target buffer, prepared in `state` at the owner
-        let addrs = prepare(&mut m, 0x4000_0000, n_lines, state, cast, FillPattern::Increasing);
-        // comparand buffer, local to the requester (E state)
-        let cmp_cast = crate::bench::placement::Cast {
-            requester: cast.requester,
-            owner: cast.requester,
-            sharer: cast.sharer,
-        };
-        let cmps = prepare(&mut m, 0x8000_0000, n_lines, PrepState::E, cmp_cast, FillPattern::Zero);
-
-        let mut order: Vec<usize> = (0..addrs.len()).collect();
-        Rng::new(0x0CA5 ^ size as u64).shuffle(&mut order);
-
-        let mut total = 0.0;
-        for &i in &order {
-            // fetch the comparand (second operand) — pipelined at 20%,
-            // or free for MuW-protected dirty targets (§5.5)
-            let target_dirty = state == PrepState::M || state == PrepState::O;
-            let pipeline = if m.cfg.muw && target_dirty { 0.0 } else { 0.2 };
-            let cmp_cost = m.access64(cast.requester, Op::Read, cmps[i]).latency * pipeline;
-            if m.cfg.muw && target_dirty {
-                m.stats.muw_migrations += 1;
-            }
-            let a = m.access64(
-                cast.requester,
-                Op::Cas { expected: u64::MAX, new: 1, fetched_operands: 2 },
-                addrs[i],
-            );
-            total += a.latency + cmp_cost;
-        }
-        points.push(Point { buffer_bytes: size, value: total / addrs.len() as f64 });
+        points.push(Point {
+            buffer_bytes: size,
+            value: two_operand_cas_on(&mut m, state, locality, size)?,
+        });
     }
     Some(Series {
         name: format!("CAS 2-operand {} {}", state.label(), locality.label()),

@@ -10,6 +10,30 @@ use crate::sim::engine::Machine;
 use crate::sim::MachineConfig;
 use crate::util::rng::Rng;
 
+/// Mean latency of line-spanning operations over a prepared buffer, on a
+/// fresh (new or reset) machine — the [`crate::sweep::Workload`] entry point.
+pub fn unaligned_latency_on(
+    m: &mut Machine,
+    op: OpKind,
+    state: PrepState,
+    locality: PrepLocality,
+    buffer_bytes: usize,
+) -> Option<f64> {
+    let cast = choose_cast(&m.cfg.topology, locality)?;
+    // prepare one extra line so the last straddle has a second line
+    let n_lines = (buffer_bytes / 64).max(2) + 1;
+    let addrs = prepare(m, 0x4000_0000, n_lines, state, cast, FillPattern::Increasing);
+
+    let mut order: Vec<usize> = (0..addrs.len() - 1).collect();
+    Rng::new(0x0A11 ^ buffer_bytes as u64).shuffle(&mut order);
+
+    // offset 60 in each line: an 8-byte operand spans lines i and i+1
+    let straddled: Vec<u64> = addrs[..addrs.len() - 1].iter().map(|a| a + 60).collect();
+    let opv = op_for(op, false);
+    let total = m.access_chain(cast.requester, opv, &straddled, &order, Width::W64);
+    Some(total / order.len() as f64)
+}
+
 /// Mean latency of line-spanning operations over a prepared buffer.
 pub fn unaligned_latency(
     cfg: &MachineConfig,
@@ -18,23 +42,8 @@ pub fn unaligned_latency(
     locality: PrepLocality,
     buffer_bytes: usize,
 ) -> Option<f64> {
-    let cast = choose_cast(&cfg.topology, locality)?;
     let mut m = Machine::new(cfg.clone());
-    // prepare one extra line so the last straddle has a second line
-    let n_lines = (buffer_bytes / 64).max(2) + 1;
-    let addrs = prepare(&mut m, 0x4000_0000, n_lines, state, cast, FillPattern::Increasing);
-
-    let mut order: Vec<usize> = (0..addrs.len() - 1).collect();
-    Rng::new(0x0A11 ^ buffer_bytes as u64).shuffle(&mut order);
-
-    let opv = op_for(op, false);
-    let mut total = 0.0;
-    for &i in &order {
-        // offset 60 in the line: an 8-byte operand spans lines i and i+1
-        let a = m.access(cast.requester, opv, addrs[i] + 60, Width::W64);
-        total += a.latency;
-    }
-    Some(total / order.len() as f64)
+    unaligned_latency_on(&mut m, op, state, locality, buffer_bytes)
 }
 
 /// Sweep for the figure: aligned vs unaligned for one op.

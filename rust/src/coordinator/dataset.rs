@@ -9,6 +9,8 @@ use crate::model::features::{featurize_sized, FEATURE_DIM};
 use crate::model::query::Query;
 use crate::sim::timing::Level;
 use crate::sim::MachineConfig;
+use crate::sweep::{SweepExecutor, SweepJob};
+use std::sync::Arc;
 
 /// One (query, features, measurement) triple.
 #[derive(Debug, Clone)]
@@ -53,45 +55,74 @@ pub fn states_for(cfg: &MachineConfig) -> Vec<PrepState> {
 }
 
 /// Collect the full latency dataset for one architecture.
+///
+/// The (op × state × locality × size) grid runs through the parallel
+/// [`SweepExecutor`]; outcomes come back in grid order, so the dataset rows
+/// are identical — values and ordering — to the historical serial loops
+/// (pinned by `tests/sweep_equivalence.rs`).
 pub fn collect_latency_dataset(cfg: &MachineConfig, sizes: &[usize]) -> Vec<DataPoint> {
-    let mut out = Vec::new();
     let ops = [OpKind::Read, OpKind::Cas, OpKind::Faa, OpKind::Swp];
+
+    // Expand the grid into jobs plus the descriptors featurization needs.
+    let mut jobs = Vec::new();
+    let mut specs = Vec::new();
     for op in ops {
         for state in states_for(cfg) {
             for locality in PrepLocality::available(&cfg.topology) {
                 let bench = LatencyBench::new(op, state, locality);
-                let Some(series) = bench.sweep(cfg, sizes) else { continue };
-                // the S/O-state invalidation target is the *actual* extra
-                // sharer the preparation placed (the farthest core), not
-                // the data location — Eq. 8 takes the max over sharers
-                let cast = choose_cast(&cfg.topology, locality);
-                let sharer_distance = cast
-                    .map(|c| cfg.topology.distance(c.requester, c.sharer));
-                for p in &series.points {
-                    let level = infer_level(cfg, p.buffer_bytes);
-                    let mut query = Query::new(
-                        op,
-                        state.to_model(),
-                        level,
-                        locality.to_distance(),
-                    );
-                    if let (true, Some(d)) = (state.to_model().is_shared(), sharer_distance)
-                    {
-                        query = query.with_invalidate(d);
-                    }
-                    // blended featurization: the measured mean mixes the
-                    // levels a buffer of this size actually spans
-                    let (features, dominant) = featurize_sized(cfg, &query, p.buffer_bytes);
-                    query.loc.level = dominant;
-                    out.push(DataPoint {
-                        query,
-                        features,
-                        measured_ns: p.value,
-                        buffer_bytes: p.buffer_bytes,
-                        series: series.name.clone(),
-                    });
-                }
+                jobs.push(SweepJob::sized(cfg, Arc::new(bench), sizes));
+                specs.push((op, state, locality));
             }
+        }
+    }
+
+    let outcomes = SweepExecutor::with_default_threads().run(&jobs);
+
+    // A panicked measurement must not silently thin the fit/validation
+    // dataset: the executor drains the whole campaign first (so every
+    // failure is listed), then we abort loudly — the pre-executor
+    // behavior, with the failing work items named.
+    let failed: Vec<String> = outcomes.iter().flat_map(|o| o.failures.clone()).collect();
+    if !failed.is_empty() {
+        panic!(
+            "latency dataset collection failed for {}: {}",
+            cfg.name,
+            failed.join("; ")
+        );
+    }
+
+    let mut out = Vec::new();
+    for ((op, state, locality), outcome) in specs.into_iter().zip(outcomes) {
+        let Some(series) = outcome.series() else { continue };
+        // the S/O-state invalidation target is the *actual* extra
+        // sharer the preparation placed (the farthest core), not
+        // the data location — Eq. 8 takes the max over sharers
+        let cast = choose_cast(&cfg.topology, locality);
+        let sharer_distance = cast
+            .map(|c| cfg.topology.distance(c.requester, c.sharer));
+        for p in &series.points {
+            let level = infer_level(cfg, p.buffer_bytes);
+            let mut query = Query::new(
+                op,
+                state.to_model(),
+                level,
+                locality.to_distance(),
+            );
+            if let (true, Some(d)) = (state.to_model().is_shared(), sharer_distance)
+            {
+                query = query.with_invalidate(d);
+            }
+            // blended featurization: the measured mean mixes the
+            // levels a buffer of this size actually spans
+            let (features, dominant) = featurize_sized(cfg, &query, p.buffer_bytes);
+            query.loc.level = dominant;
+            out.push(DataPoint {
+                query,
+                features,
+                measured_ns: p.value,
+                buffer_bytes: p.buffer_bytes,
+                series: series.name.clone(),
+            });
         }
     }
     out

@@ -2,10 +2,11 @@
 //! drives the PJRT fit loop that recovers the Table 2 model parameters from
 //! simulator measurements.
 //!
-//! The coordinator is the L3 "leader": it scatters independent sweeps over
-//! worker threads (one per architecture), gathers the datasets, featurizes
-//! them (rust/src/model/features.rs), and iterates the AOT `fit_step`
-//! executable until convergence — Python never runs here.
+//! The coordinator is the L3 "leader": it runs the measurement campaign
+//! through the [`crate::sweep`] executor (point-granular parallelism over
+//! every core, not one thread per architecture), gathers the datasets,
+//! featurizes them (rust/src/model/features.rs), and iterates the AOT
+//! `fit_step` executable until convergence — Python never runs here.
 
 pub mod dataset;
 pub mod fit;
@@ -16,21 +17,52 @@ pub use fit::{fit_theta, FitReport};
 use crate::sim::MachineConfig;
 use std::thread;
 
+/// Run `job` for every architecture on its own OS thread, collecting
+/// per-architecture results (or the panic message of a failed worker) in
+/// input order. A panicking worker does not abort the run: the remaining
+/// architectures are still drained.
+pub fn try_scatter<T, F>(configs: Vec<MachineConfig>, job: F) -> Vec<Result<T, String>>
+where
+    T: Send + 'static,
+    F: Fn(MachineConfig) -> T + Send + Sync + Clone + 'static,
+{
+    let handles: Vec<(&'static str, thread::JoinHandle<T>)> = configs
+        .into_iter()
+        .map(|cfg| {
+            let job = job.clone();
+            let name = cfg.name;
+            (name, thread::spawn(move || job(cfg)))
+        })
+        .collect();
+    handles
+        .into_iter()
+        .map(|(name, h)| {
+            h.join().map_err(|e| {
+                let msg = crate::sweep::executor::panic_message(e.as_ref());
+                format!("worker for {name} panicked: {msg}")
+            })
+        })
+        .collect()
+}
+
 /// Run `job` for every architecture on its own OS thread and collect the
-/// results in input order.
+/// results in input order. If any worker panics, every other architecture
+/// is still drained first, then this panics naming each failed
+/// architecture and its panic message (instead of an anonymous abort).
 pub fn scatter<T, F>(configs: Vec<MachineConfig>, job: F) -> Vec<T>
 where
     T: Send + 'static,
     F: Fn(MachineConfig) -> T + Send + Sync + Clone + 'static,
 {
-    let handles: Vec<thread::JoinHandle<T>> = configs
-        .into_iter()
-        .map(|cfg| {
-            let job = job.clone();
-            thread::spawn(move || job(cfg))
-        })
+    let results = try_scatter(configs, job);
+    let errors: Vec<String> = results
+        .iter()
+        .filter_map(|r| r.as_ref().err().cloned())
         .collect();
-    handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    if !errors.is_empty() {
+        panic!("scatter failed: {}", errors.join("; "));
+    }
+    results.into_iter().map(|r| r.expect("checked above")).collect()
 }
 
 #[cfg(test)]
@@ -42,5 +74,34 @@ mod tests {
     fn scatter_preserves_order() {
         let names = scatter(arch::all(), |cfg| cfg.name.to_string());
         assert_eq!(names, vec!["Haswell", "Ivy Bridge", "Bulldozer", "Xeon Phi"]);
+    }
+
+    #[test]
+    fn try_scatter_names_the_failing_architecture_and_drains_the_rest() {
+        let results = try_scatter(arch::all(), |cfg| {
+            if cfg.name == "Bulldozer" {
+                panic!("injected failure");
+            }
+            cfg.name.to_string()
+        });
+        assert_eq!(results.len(), 4);
+        assert_eq!(results[0].as_deref(), Ok("Haswell"));
+        assert_eq!(results[1].as_deref(), Ok("Ivy Bridge"));
+        let err = results[2].as_ref().unwrap_err();
+        assert!(err.contains("Bulldozer"), "{err}");
+        assert!(err.contains("injected failure"), "{err}");
+        assert_eq!(results[3].as_deref(), Ok("Xeon Phi"));
+    }
+
+    #[test]
+    fn scatter_panic_message_names_architecture() {
+        let caught = std::panic::catch_unwind(|| {
+            scatter(arch::all(), |cfg| {
+                assert!(cfg.name != "Xeon Phi", "phi worker exploded");
+            })
+        });
+        let err = caught.unwrap_err();
+        let msg = err.downcast_ref::<String>().expect("string panic");
+        assert!(msg.contains("Xeon Phi"), "{msg}");
     }
 }

@@ -21,8 +21,13 @@
 //! * [`runtime`] — PJRT loader for the AOT-compiled JAX artifacts
 //!   (prediction, NRMSE, gradient fit step); Python never runs at
 //!   benchmark time.
-//! * [`coordinator`] — sweep orchestration across architectures and the
-//!   model-fitting loop (Table 2) driving the PJRT executables.
+//! * [`sweep`] — the scenario layer: the [`sweep::Workload`] trait every
+//!   bench family implements, [`sweep::SweepPlan`] grids, and the parallel
+//!   [`sweep::SweepExecutor`] (per-worker machine pools, deterministic
+//!   input-ordered results, panic isolation) that every figure, dataset,
+//!   and the `repro sweep` subcommand run through.
+//! * [`coordinator`] — dataset collection + the model-fitting loop
+//!   (Table 2) driving the PJRT executables.
 //! * [`report`] — regenerates every table and figure of the paper.
 //! * [`harness`] — in-tree micro-benchmark harness (criterion is not
 //!   vendored in this offline environment).
@@ -37,4 +42,5 @@ pub mod model;
 pub mod report;
 pub mod runtime;
 pub mod sim;
+pub mod sweep;
 pub mod util;

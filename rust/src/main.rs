@@ -7,6 +7,9 @@
 //!   repro table <1|2|3>            regenerate a paper table
 //!   repro figure <2..15|8d|10a|10b> regenerate a paper figure
 //!   repro all                       everything, in paper order
+//!   repro sweep [--threads N] [--json] [--arch NAME] [--family F]
+//!                                   run the full measurement grid through
+//!                                   the parallel sweep executor
 //!   repro validate                  model-vs-simulator NRMSE per series
 //!   repro fit [--arch NAME]         Table 2 fit via the PJRT fit_step
 //!   repro bfs [--scale N] [--threads N] [--arch NAME]
@@ -26,7 +29,9 @@ use atomics_repro::graph::bfs::validate_tree;
 use atomics_repro::model::params::Theta;
 use atomics_repro::report::{figures, tables};
 use atomics_repro::runtime::Runtime;
+use atomics_repro::sweep::{ContentionWorkload, SweepExecutor, SweepJob, SweepPlan};
 use atomics_repro::util::cli::Args;
+use atomics_repro::util::table::Table;
 use atomics_repro::{arch, graph};
 
 fn main() {
@@ -45,6 +50,7 @@ fn main() {
         Some("table") => cmd_table(&args),
         Some("figure") => cmd_figure(&args),
         Some("all") => cmd_all(),
+        Some("sweep") => cmd_sweep(&args),
         Some("validate") => cmd_validate(),
         Some("fit") => cmd_fit(&args),
         Some("bfs") => cmd_bfs(&args),
@@ -67,7 +73,7 @@ fn main() {
 fn usage() {
     eprintln!("repro — reproduction driver for 'Evaluating the Cost of Atomic Operations'");
     eprintln!(
-        "subcommands: table <n> | figure <id> | all | validate | fit | bfs | ablation | latency | info"
+        "subcommands: table <n> | figure <id> | all | sweep | validate | fit | bfs | ablation | latency | info"
     );
     eprintln!("see README.md for details");
 }
@@ -125,22 +131,139 @@ fn cmd_all() -> i32 {
     0
 }
 
-fn cmd_validate() -> i32 {
-    // NRMSE per (arch, state, locality) series — the §5 validation protocol.
-    use atomics_repro::coordinator::scatter;
-    let results = scatter(arch::all(), |cfg| {
-        let sizes = atomics_repro::report::sweep_sizes();
-        let ds = collect_latency_dataset(&cfg, &sizes);
-        let theta = Theta::from_config(&cfg);
-        let mut groups: std::collections::BTreeMap<String, (Vec<f64>, Vec<f64>)> =
-            Default::default();
-        for d in &ds {
-            let e = groups.entry(d.series.clone()).or_default();
-            e.0.push(atomics_repro::model::features::dot(&d.features, &theta.to_vec()));
-            e.1.push(d.measured_ns);
+fn cmd_sweep(args: &Args) -> i32 {
+    let threads: usize = args.opt_parse("threads", atomics_repro::sweep::default_threads());
+    let json = args.flag("json");
+    let family = args.opt("family").unwrap_or("all");
+    let configs = match args.opt("arch") {
+        Some(name) => match arch::by_name(name) {
+            Some(c) => vec![c],
+            None => {
+                eprintln!("unknown arch '{name}'");
+                return 2;
+            }
+        },
+        None => arch::all(),
+    };
+    let sizes = atomics_repro::report::sweep_sizes();
+
+    let mut jobs: Vec<SweepJob> = Vec::new();
+    if family == "latency" || family == "all" {
+        jobs.extend(SweepPlan::latency(configs.clone(), sizes.clone()).expand());
+    }
+    if family == "bandwidth" || family == "all" {
+        jobs.extend(SweepPlan::bandwidth(configs.clone(), sizes.clone()).expand());
+    }
+    if family == "contention" || family == "all" {
+        for cfg in &configs {
+            let xs: Vec<u64> = atomics_repro::bench::contention::paper_thread_counts(cfg)
+                .into_iter()
+                .map(|n| n as u64)
+                .collect();
+            for op in [OpKind::Cas, OpKind::Faa, OpKind::Write] {
+                jobs.push(SweepJob::new(
+                    cfg,
+                    std::sync::Arc::new(ContentionWorkload::new(op)),
+                    xs.iter().copied(),
+                ));
+            }
         }
-        (cfg.name, groups)
-    });
+    }
+    if !["latency", "bandwidth", "contention", "all"].contains(&family) {
+        eprintln!("unknown family '{family}' (latency | bandwidth | contention | all)");
+        return 2;
+    }
+    if jobs.is_empty() {
+        eprintln!("nothing to sweep");
+        return 2;
+    }
+
+    let n_points: usize = jobs.iter().map(|j| j.xs.len()).sum();
+    let executor = SweepExecutor::new(threads);
+    let t0 = std::time::Instant::now();
+    let outcomes = executor.run(&jobs);
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    let mut failures = 0usize;
+    if json {
+        // one JSON object per series, hand-rolled (no serde offline)
+        for o in &outcomes {
+            let points: Vec<String> = o
+                .points
+                .iter()
+                .map(|(x, v)| match v {
+                    Some(v) => format!("[{x},{v}]"),
+                    None => format!("[{x},null]"),
+                })
+                .collect();
+            println!(
+                "{{\"arch\":\"{}\",\"series\":\"{}\",\"axis\":\"{}\",\"points\":[{}]}}",
+                o.arch,
+                o.name.replace('"', "\\\""),
+                o.axis,
+                points.join(",")
+            );
+            failures += o.failures.len();
+        }
+    } else {
+        let mut t = Table::new(
+            format!("sweep — {n_points} points, {} series, {threads} thread(s), {elapsed:.2}s", outcomes.len()),
+            &["arch", "series", "axis", "points", "mean"],
+        );
+        for o in &outcomes {
+            let vals: Vec<f64> = o.points.iter().filter_map(|(_, v)| *v).collect();
+            let mean = if vals.is_empty() {
+                f64::NAN
+            } else {
+                vals.iter().sum::<f64>() / vals.len() as f64
+            };
+            t.row(&[
+                o.arch.clone(),
+                o.name.clone(),
+                o.axis.to_string(),
+                format!("{}/{}", vals.len(), o.points.len()),
+                if mean.is_nan() { "-".into() } else { format!("{mean:.2}") },
+            ]);
+            failures += o.failures.len();
+        }
+        println!("{}", t.render());
+        eprintln!(
+            "{n_points} points in {elapsed:.2}s on {threads} thread(s) ({:.0} points/s)",
+            n_points as f64 / elapsed.max(1e-9)
+        );
+    }
+    for o in &outcomes {
+        for f in &o.failures {
+            eprintln!("FAILED: {f}");
+        }
+    }
+    if failures > 0 {
+        1
+    } else {
+        0
+    }
+}
+
+fn cmd_validate() -> i32 {
+    // NRMSE per (arch, state, locality) series — the §5 validation
+    // protocol. Parallelism happens inside collect_latency_dataset (the
+    // sweep executor), so architectures are walked serially here.
+    let results: Vec<_> = arch::all()
+        .into_iter()
+        .map(|cfg| {
+            let sizes = atomics_repro::report::sweep_sizes();
+            let ds = collect_latency_dataset(&cfg, &sizes);
+            let theta = Theta::from_config(&cfg);
+            let mut groups: std::collections::BTreeMap<String, (Vec<f64>, Vec<f64>)> =
+                Default::default();
+            for d in &ds {
+                let e = groups.entry(d.series.clone()).or_default();
+                e.0.push(atomics_repro::model::features::dot(&d.features, &theta.to_vec()));
+                e.1.push(d.measured_ns);
+            }
+            (cfg.name, groups)
+        })
+        .collect();
     let mut worst = 0.0f64;
     for (name, groups) in results {
         println!("== {name} ==");

@@ -1,93 +1,120 @@
 //! Regeneration of every figure in the paper (2–15). Each function returns
 //! the rendered text (and writes `results/*.csv`); `figure(id)` dispatches.
+//!
+//! Every sweep family runs through the [`crate::sweep`] subsystem: figures
+//! build [`SweepJob`]s and hand them to the shared [`SweepExecutor`], which
+//! parallelizes point-granular work items over all cores (thread count via
+//! `SWEEP_THREADS`) while returning series in deterministic input order.
 
 use crate::arch;
-use crate::atomics::OpKind;
-use crate::bench::contention::{paper_thread_counts, OPS_PER_THREAD};
+use crate::atomics::{OpKind, Width};
+use crate::bench::bandwidth::BandwidthBench;
+use crate::bench::contention::paper_thread_counts;
 use crate::bench::latency::LatencyBench;
-use crate::bench::operand::{two_operand_cas, width_comparison};
 use crate::bench::placement::{PrepLocality, PrepState};
-use crate::bench::{bandwidth::BandwidthBench, Series};
+use crate::bench::Series;
 use crate::graph::{kronecker_edges, parallel_bfs, BfsMode, Csr};
 use crate::model::analytical::predict_latency;
 use crate::model::nrmse::Validation;
 use crate::model::query::Query;
 use crate::report::{render_series, sweep_sizes, write_series_csv};
-use crate::sim::event::run_contention;
 use crate::sim::MachineConfig;
+use crate::sweep::{
+    ContentionWorkload, MechanismVariant, SweepExecutor, SweepJob, TwoOperandCas, UnalignedChase,
+};
 use crate::util::table::Table;
 use anyhow::{bail, Result};
+use std::sync::Arc;
 
 const LAT_OPS: [OpKind; 4] = [OpKind::Cas, OpKind::Faa, OpKind::Swp, OpKind::Read];
 
-/// A latency panel: all ops for one (state, locality), plus the model NRMSE.
-fn latency_panel(
-    cfg: &MachineConfig,
-    state: PrepState,
-    locality: PrepLocality,
-    ops: &[OpKind],
-) -> Option<(Vec<Series>, Validation)> {
-    let sizes = sweep_sizes();
-    let mut series = Vec::new();
-    for &op in ops {
-        series.push(LatencyBench::new(op, state, locality).sweep(cfg, &sizes)?);
-    }
-    // model validation on the atomic series (the model predicts atomics+reads)
-    let mut predicted = Vec::new();
-    let mut observed = Vec::new();
-    for s in &series {
-        let op = ops[series.iter().position(|x| std::ptr::eq(x, s)).unwrap()];
-        for p in &s.points {
-            let level = crate::coordinator::infer_level(cfg, p.buffer_bytes);
-            let q = Query::new(op, state.to_model(), level, locality.to_distance());
-            predicted.push(predict_latency(cfg, &q));
-            observed.push(p.value);
-        }
-    }
-    let v = Validation::of(
-        format!("{} {} {}", cfg.name, state.label(), locality.label()),
-        &predicted,
-        &observed,
-    );
-    Some((series, v))
+fn executor() -> SweepExecutor {
+    SweepExecutor::with_default_threads()
 }
 
+/// Run jobs and return their series views, appending a visible report for
+/// every panicked work item to `out` (and stderr). A panicked series then
+/// shows up as missing *with* its failure line — it is never conflated
+/// with an architecturally unavailable combination.
+fn run_series_reporting(jobs: &[SweepJob], out: &mut String) -> Vec<Option<Series>> {
+    let outcomes = executor().run(jobs);
+    for o in &outcomes {
+        for f in &o.failures {
+            out.push_str(&format!("!! sweep failure: {f}\n"));
+            eprintln!("sweep failure: {f}");
+        }
+    }
+    outcomes.iter().map(|o| o.series()).collect()
+}
+
+/// Render a group of latency panels — all `ops` for each (state, locality)
+/// pair — with the model NRMSE per panel. The whole figure's grid is
+/// submitted to the executor as one batch so every point sweeps in
+/// parallel.
 fn panels_to_text(
     figure: &str,
     cfg: &MachineConfig,
     panels: &[(PrepState, PrepLocality)],
     ops: &[OpKind],
 ) -> String {
-    let mut out = String::new();
-    let mut all = Vec::new();
+    let sizes = sweep_sizes();
+    let mut jobs = Vec::new();
     for &(state, locality) in panels {
-        match latency_panel(cfg, state, locality, ops) {
-            Some((series, v)) => {
-                let title = format!(
-                    "{figure} — {} latency [ns], {} state, {}",
-                    cfg.name,
-                    state.label(),
-                    locality.label()
-                );
-                out.push_str(&render_series(&title, &series).render());
-                out.push_str(&format!(
-                    "model NRMSE = {:.1}%{}\n\n",
-                    v.nrmse * 100.0,
-                    if v.exceeds_threshold() { "  (>10% — discussed)" } else { "" }
-                ));
-                for s in series {
-                    all.push(s);
-                }
-            }
-            None => {
-                out.push_str(&format!(
-                    "({} state {} locality unavailable on {})\n",
-                    state.label(),
-                    locality.label(),
-                    cfg.name
-                ));
+        for &op in ops {
+            jobs.push(SweepJob::sized(
+                cfg,
+                Arc::new(LatencyBench::new(op, state, locality)),
+                &sizes,
+            ));
+        }
+    }
+    let mut out = String::new();
+    let results = run_series_reporting(&jobs, &mut out);
+
+    let mut all = Vec::new();
+    for (pi, &(state, locality)) in panels.iter().enumerate() {
+        let panel = &results[pi * ops.len()..(pi + 1) * ops.len()];
+        if panel.iter().any(|s| s.is_none()) {
+            out.push_str(&format!(
+                "({} state {} locality unavailable on {})\n",
+                state.label(),
+                locality.label(),
+                cfg.name
+            ));
+            continue;
+        }
+        let series: Vec<Series> = panel.iter().map(|s| s.clone().unwrap()).collect();
+
+        // model validation on every series (the model predicts atomics+reads)
+        let mut predicted = Vec::new();
+        let mut observed = Vec::new();
+        for (s, &op) in series.iter().zip(ops) {
+            for p in &s.points {
+                let level = crate::coordinator::infer_level(cfg, p.buffer_bytes);
+                let q = Query::new(op, state.to_model(), level, locality.to_distance());
+                predicted.push(predict_latency(cfg, &q));
+                observed.push(p.value);
             }
         }
+        let v = Validation::of(
+            format!("{} {} {}", cfg.name, state.label(), locality.label()),
+            &predicted,
+            &observed,
+        );
+
+        let title = format!(
+            "{figure} — {} latency [ns], {} state, {}",
+            cfg.name,
+            state.label(),
+            locality.label()
+        );
+        out.push_str(&render_series(&title, &series).render());
+        out.push_str(&format!(
+            "model NRMSE = {:.1}%{}\n\n",
+            v.nrmse * 100.0,
+            if v.exceeds_threshold() { "  (>10% — discussed)" } else { "" }
+        ));
+        all.extend(series);
     }
     write_series_csv(&figure.to_lowercase().replace(' ', "_"), &all);
     out
@@ -147,7 +174,12 @@ pub fn figure4() -> String {
 
 /// Fig. 5: bandwidth of CAS/FAA/writes on Haswell (M state).
 pub fn figure5() -> String {
-    bandwidth_figure("Figure 5", &arch::haswell(), &[PrepState::M], &[OpKind::Cas, OpKind::Faa, OpKind::Write])
+    bandwidth_figure(
+        "Figure 5",
+        &arch::haswell(),
+        &[PrepState::M],
+        &[OpKind::Cas, OpKind::Faa, OpKind::Write],
+    )
 }
 
 fn bandwidth_figure(
@@ -157,36 +189,48 @@ fn bandwidth_figure(
     ops: &[OpKind],
 ) -> String {
     let sizes = sweep_sizes();
-    let mut out = String::new();
+    let mut combos = Vec::new();
+    let mut jobs = Vec::new();
     for &state in states {
         for locality in [PrepLocality::Local, PrepLocality::OnChip] {
-            let mut series = Vec::new();
+            combos.push((state, locality));
             for &op in ops {
-                if let Some(s) = BandwidthBench::new(op, state, locality).sweep(cfg, &sizes) {
-                    series.push(s);
-                }
+                jobs.push(SweepJob::sized(
+                    cfg,
+                    Arc::new(BandwidthBench::new(op, state, locality)),
+                    &sizes,
+                ));
             }
-            if series.is_empty() {
-                continue;
-            }
-            let title = format!(
-                "{figure} — {} bandwidth [GB/s], {} state, {}",
-                cfg.name,
-                state.label(),
-                locality.label()
-            );
-            out.push_str(&render_series(&title, &series).render());
-            out.push('\n');
-            write_series_csv(
-                &format!(
-                    "{}_{}_{}",
-                    figure.to_lowercase().replace(' ', "_"),
-                    state.label(),
-                    locality.label().replace(' ', "_")
-                ),
-                &series,
-            );
         }
+    }
+    let mut out = String::new();
+    let results = run_series_reporting(&jobs, &mut out);
+
+    for (ci, &(state, locality)) in combos.iter().enumerate() {
+        let series: Vec<Series> = results[ci * ops.len()..(ci + 1) * ops.len()]
+            .iter()
+            .filter_map(|s| s.clone())
+            .collect();
+        if series.is_empty() {
+            continue;
+        }
+        let title = format!(
+            "{figure} — {} bandwidth [GB/s], {} state, {}",
+            cfg.name,
+            state.label(),
+            locality.label()
+        );
+        out.push_str(&render_series(&title, &series).render());
+        out.push('\n');
+        write_series_csv(
+            &format!(
+                "{}_{}_{}",
+                figure.to_lowercase().replace(' ', "_"),
+                state.label(),
+                locality.label().replace(' ', "_")
+            ),
+            &series,
+        );
     }
     out
 }
@@ -213,18 +257,39 @@ pub fn figure6() -> String {
 pub fn figure7() -> String {
     let cfg = arch::bulldozer();
     let sizes = sweep_sizes();
+    let localities = [
+        PrepLocality::Local,
+        PrepLocality::SharedL2,
+        PrepLocality::OnChip,
+        PrepLocality::OtherSocket,
+    ];
+    let mut jobs = Vec::new();
+    for &locality in &localities {
+        let b64 = LatencyBench::new(OpKind::Cas, PrepState::M, locality);
+        let mut b128 = b64.clone();
+        b128.width = Width::W128;
+        jobs.push(SweepJob::sized(&cfg, Arc::new(b64), &sizes));
+        jobs.push(SweepJob::sized(&cfg, Arc::new(b128), &sizes));
+    }
     let mut out = String::new();
-    for locality in [PrepLocality::Local, PrepLocality::SharedL2, PrepLocality::OnChip, PrepLocality::OtherSocket]
-    {
-        if let Some((s64, s128)) = width_comparison(&cfg, PrepState::M, locality, &sizes) {
-            let title = format!("Figure 7 — Bulldozer CAS operand width [ns], {}", locality.label());
-            out.push_str(&render_series(&title, &[s64.clone(), s128.clone()]).render());
-            out.push('\n');
-            write_series_csv(
-                &format!("figure7_{}", locality.label().replace(' ', "_")),
-                &[s64, s128],
-            );
-        }
+    let results = run_series_reporting(&jobs, &mut out);
+
+    for (i, &locality) in localities.iter().enumerate() {
+        let (Some(s64), Some(s128)) = (results[2 * i].clone(), results[2 * i + 1].clone())
+        else {
+            continue;
+        };
+        let mut s64 = s64;
+        let mut s128 = s128;
+        s64.name = format!("CAS 64bit {} {}", PrepState::M.label(), locality.label());
+        s128.name = format!("CAS 128bit {} {}", PrepState::M.label(), locality.label());
+        let title = format!("Figure 7 — Bulldozer CAS operand width [ns], {}", locality.label());
+        out.push_str(&render_series(&title, &[s64.clone(), s128.clone()]).render());
+        out.push('\n');
+        write_series_csv(
+            &format!("figure7_{}", locality.label().replace(' ', "_")),
+            &[s64, s128],
+        );
     }
     out
 }
@@ -234,15 +299,30 @@ pub fn figure8() -> String {
     let mut out = String::new();
     for cfg in [arch::ivybridge(), arch::bulldozer(), arch::xeonphi()] {
         let counts = paper_thread_counts(&cfg);
+        let xs: Vec<u64> = counts.iter().map(|&n| n as u64).collect();
+        let jobs: Vec<SweepJob> = [OpKind::Cas, OpKind::Faa, OpKind::Write]
+            .into_iter()
+            .map(|op| {
+                SweepJob::new(&cfg, Arc::new(ContentionWorkload::new(op)), xs.iter().copied())
+            })
+            .collect();
+        let results = executor().run(&jobs);
+        for o in &results {
+            for f in &o.failures {
+                out.push_str(&format!("!! sweep failure: {f}\n"));
+                eprintln!("sweep failure: {f}");
+            }
+        }
+
         let mut t = Table::new(
             format!("Figure 8 — {} contended bandwidth [GB/s] vs threads", cfg.name),
             &["threads", "CAS", "FAA", "write"],
         );
         let mut csv = crate::util::csv::Csv::new(&["threads", "cas_gbs", "faa_gbs", "write_gbs"]);
-        for &n in &counts {
-            let cas = run_contention(&cfg, n, OpKind::Cas, OPS_PER_THREAD).bandwidth_gbs;
-            let faa = run_contention(&cfg, n, OpKind::Faa, OPS_PER_THREAD).bandwidth_gbs;
-            let wr = run_contention(&cfg, n, OpKind::Write, OPS_PER_THREAD).bandwidth_gbs;
+        for (i, &n) in counts.iter().enumerate() {
+            let cas = results[0].points[i].1.unwrap_or(f64::NAN);
+            let faa = results[1].points[i].1.unwrap_or(f64::NAN);
+            let wr = results[2].points[i].1.unwrap_or(f64::NAN);
             t.row(&[
                 n.to_string(),
                 format!("{cas:.3}"),
@@ -266,18 +346,29 @@ pub fn figure8() -> String {
 pub fn figure8d() -> String {
     let cfg = arch::bulldozer();
     let sizes = sweep_sizes();
-    let mut out = String::new();
-    for (state, label) in [(PrepState::E, "E"), (PrepState::M, "M")] {
-        let mut series = Vec::new();
-        if let Some(s) = two_operand_cas(&cfg, state, PrepLocality::OnChip, &sizes) {
-            series.push(s);
-        }
+    let states = [(PrepState::E, "E"), (PrepState::M, "M")];
+    let mut jobs = Vec::new();
+    for &(state, _) in &states {
+        jobs.push(SweepJob::sized(
+            &cfg,
+            Arc::new(TwoOperandCas { state, locality: PrepLocality::OnChip }),
+            &sizes,
+        ));
         let mut one = LatencyBench::new(OpKind::Cas, state, PrepLocality::OnChip);
         one.cas_succeeds = false;
-        if let Some(s) = one.sweep(&cfg, &sizes) {
-            let mut s = s;
-            s.name = format!("CAS 1-operand {} on chip", label);
-            series.push(s);
+        jobs.push(SweepJob::sized(&cfg, Arc::new(one), &sizes));
+    }
+    let mut out = String::new();
+    let results = run_series_reporting(&jobs, &mut out);
+
+    for (i, &(_, label)) in states.iter().enumerate() {
+        let mut series = Vec::new();
+        if let Some(two) = results[2 * i].clone() {
+            series.push(two);
+        }
+        if let Some(mut one) = results[2 * i + 1].clone() {
+            one.name = format!("CAS 1-operand {} on chip", label);
+            series.push(one);
         }
         out.push_str(
             &render_series(
@@ -296,34 +387,88 @@ pub fn figure8d() -> String {
 pub fn figure9() -> String {
     let cfg = arch::haswell();
     let sizes = sweep_sizes();
-    let series = crate::bench::mechanisms::figure9(&cfg, &sizes);
+    let mut jobs = Vec::new();
+    for (name, mech) in crate::bench::mechanisms::figure9_variants() {
+        let mut variant = cfg.clone();
+        variant.mechanisms = mech;
+        let workload = MechanismVariant::new(
+            name,
+            BandwidthBench::new(OpKind::Faa, PrepState::M, PrepLocality::Local),
+        );
+        jobs.push(
+            SweepJob::sized(&variant, Arc::new(workload), &sizes)
+                .with_pool_key(format!("{}+{name}", cfg.name)),
+        );
+    }
+    let mut out = String::new();
+    let series: Vec<Series> = run_series_reporting(&jobs, &mut out)
+        .into_iter()
+        .flatten()
+        .collect();
     write_series_csv("figure9", &series);
-    render_series("Figure 9 — Haswell FAA bandwidth [GB/s] under mechanisms (M state, local)", &series)
-        .render()
+    out.push_str(
+        &render_series(
+            "Figure 9 — Haswell FAA bandwidth [GB/s] under mechanisms (M state, local)",
+            &series,
+        )
+        .render(),
+    );
+    out
 }
 
 /// Fig. 10a: unaligned CAS latency (Haswell, M state).
 pub fn figure10a() -> String {
-    let cfg = arch::haswell();
+    unaligned_figure("Figure 10a", &arch::haswell(), &[OpKind::Cas])
+}
+
+fn unaligned_figure(figure: &str, cfg: &MachineConfig, ops: &[OpKind]) -> String {
     let sizes = sweep_sizes();
-    let mut out = String::new();
-    for locality in [PrepLocality::Local, PrepLocality::OnChip] {
-        if let Some((a, u)) =
-            crate::bench::unaligned::sweep(&cfg, OpKind::Cas, PrepState::M, locality, &sizes)
-        {
-            out.push_str(
-                &render_series(
-                    &format!("Figure 10a — Haswell unaligned CAS [ns], {}", locality.label()),
-                    &[a.clone(), u.clone()],
-                )
-                .render(),
-            );
-            out.push('\n');
-            write_series_csv(
-                &format!("figure10a_{}", locality.label().replace(' ', "_")),
-                &[a, u],
-            );
+    let localities = [PrepLocality::Local, PrepLocality::OnChip];
+    let mut combos = Vec::new();
+    let mut jobs = Vec::new();
+    for &op in ops {
+        for &locality in &localities {
+            combos.push((op, locality));
+            jobs.push(SweepJob::sized(
+                cfg,
+                Arc::new(LatencyBench::new(op, PrepState::M, locality)),
+                &sizes,
+            ));
+            jobs.push(SweepJob::sized(
+                cfg,
+                Arc::new(UnalignedChase { op, state: PrepState::M, locality }),
+                &sizes,
+            ));
         }
+    }
+    let mut out = String::new();
+    let results = run_series_reporting(&jobs, &mut out);
+
+    for (i, &(op, locality)) in combos.iter().enumerate() {
+        let (Some(aligned), Some(unaligned)) =
+            (results[2 * i].clone(), results[2 * i + 1].clone())
+        else {
+            continue;
+        };
+        let mut aligned = aligned;
+        aligned.name = format!("{} aligned {}", op.label(), locality.label());
+        let title = format!(
+            "{figure} — {} unaligned {} [ns], {}",
+            cfg.name,
+            op.label(),
+            locality.label()
+        );
+        out.push_str(&render_series(&title, &[aligned.clone(), unaligned.clone()]).render());
+        out.push('\n');
+        write_series_csv(
+            &format!(
+                "{}_{}_{}",
+                figure.to_lowercase().replace(' ', "_"),
+                op.label(),
+                locality.label().replace(' ', "_")
+            ),
+            &[aligned, unaligned],
+        );
     }
     out
 }
@@ -428,34 +573,11 @@ pub fn figure13() -> String {
 
 /// Fig. 14 (appendix): unaligned CAS/FAA/read on Haswell.
 pub fn figure14() -> String {
-    let cfg = arch::haswell();
-    let sizes = sweep_sizes();
-    let mut out = String::new();
-    for op in [OpKind::Cas, OpKind::Faa, OpKind::Read] {
-        for locality in [PrepLocality::Local, PrepLocality::OnChip] {
-            if let Some((a, u)) =
-                crate::bench::unaligned::sweep(&cfg, op, PrepState::M, locality, &sizes)
-            {
-                out.push_str(
-                    &render_series(
-                        &format!(
-                            "Figure 14 — Haswell unaligned {} [ns], {}",
-                            op.label(),
-                            locality.label()
-                        ),
-                        &[a.clone(), u.clone()],
-                    )
-                    .render(),
-                );
-                out.push('\n');
-                write_series_csv(
-                    &format!("figure14_{}_{}", op.label(), locality.label().replace(' ', "_")),
-                    &[a, u],
-                );
-            }
-        }
-    }
-    out
+    unaligned_figure(
+        "Figure 14",
+        &arch::haswell(),
+        &[OpKind::Cas, OpKind::Faa, OpKind::Read],
+    )
 }
 
 /// Fig. 15 (appendix): bandwidth of CAS/FAA/SWP/writes on Haswell, E/M/S.
@@ -527,6 +649,22 @@ mod tests {
         fast();
         let s = figure10b();
         assert!(s.contains("SWP/CAS"));
+    }
+
+    #[test]
+    fn figure7_width_series_renamed() {
+        fast();
+        let s = figure7();
+        assert!(s.contains("CAS 64bit"), "{s}");
+        assert!(s.contains("CAS 128bit"), "{s}");
+    }
+
+    #[test]
+    fn figure9_has_all_variants() {
+        fast();
+        let s = figure9();
+        assert!(s.contains("all off"));
+        assert!(s.contains("both prefetchers"));
     }
 
     #[test]

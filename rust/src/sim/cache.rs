@@ -172,6 +172,16 @@ impl TagArray {
         }
     }
 
+    /// Drop every resident line and rewind the LRU clock, keeping geometry
+    /// (including reserved ways) and set allocations — the in-place
+    /// equivalent of constructing a fresh array.
+    pub fn clear(&mut self) {
+        for set in &mut self.sets {
+            set.clear();
+        }
+        self.clock = 0;
+    }
+
     /// Number of resident lines (for tests / stats).
     pub fn len(&self) -> usize {
         self.sets.iter().map(|s| s.iter().filter(|w| w.valid).count()).sum()

@@ -167,6 +167,11 @@ impl CoherenceMap {
         self.records.iter()
     }
 
+    /// Drop every record (machine reset), keeping the map's allocation.
+    pub fn clear(&mut self) {
+        self.records.clear();
+    }
+
     /// Drop records to keep memory bounded across long sweeps (records for
     /// lines that are uncached and clean carry no information).
     pub fn compact(&mut self) {

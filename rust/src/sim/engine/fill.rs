@@ -1,0 +1,169 @@
+//! Tag-array maintenance: private-cache fills, the eviction chain (with its
+//! precise dirty write-backs vs silent clean evictions — the source of the
+//! paper's E-vs-M L3 asymmetry, §5.1.1), L3 fills/back-invalidations, and
+//! the prefetchers (§5.6).
+
+use super::Machine;
+use crate::sim::cache::Insert;
+use crate::sim::coherence::GlobalClass;
+use crate::sim::config::{L3Policy, WritePolicy};
+use crate::sim::mechanisms::buddy_line;
+use crate::sim::timing::Level;
+use crate::sim::topology::CoreId;
+
+impl Machine {
+    /// Insert into the private L1 (and handle the eviction chain).
+    pub(super) fn fill_private(&mut self, core: CoreId, line: u64, dirty: bool) {
+        let module = self.cfg.topology.l2_module_of(core);
+        // Write-through L1: the L2 always holds the current data too.
+        if self.cfg.l1.write_policy == WritePolicy::WriteThrough {
+            match self.l2[module].insert(line, dirty) {
+                Insert::Evicted { victim, dirty } => self.evict_from_l2(core, victim, dirty),
+                _ => {}
+            }
+            match self.l1[core].insert(line, false) {
+                Insert::Evicted { .. } => {} // clean by construction
+                _ => {}
+            }
+            return;
+        }
+        match self.l1[core].insert(line, dirty) {
+            Insert::Evicted { victim, dirty } => {
+                // victim moves to L2
+                match self.l2[module].insert(victim, dirty) {
+                    Insert::Evicted { victim: v2, dirty: d2 } => {
+                        self.evict_from_l2(core, v2, d2)
+                    }
+                    _ => {}
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Handle an eviction out of the private hierarchy.
+    pub(super) fn evict_from_l2(&mut self, core: CoreId, victim: u64, dirty: bool) {
+        let topo = self.cfg.topology;
+        let die = topo.die_of(core);
+        if dirty {
+            // Dirty write-back: precise — clears the core's sharer bit
+            // ("M cache lines are written back when evicted, updating the
+            // core valid bits", §5.1.1).
+            self.stats.writebacks += 1;
+            if let Some(rec) = self.coherence.get(victim).copied() {
+                let rec_mut = self.coherence.get_or_create(victim, rec.home_die);
+                rec_mut.clear_sharer(core);
+                if rec_mut.sharers == 0 {
+                    rec_mut.class = GlobalClass::Uncached;
+                    rec_mut.owner = None;
+                }
+                rec_mut.dirty = true;
+            }
+            if !self.l3.is_empty() {
+                self.fill_l3(die, victim, true);
+                let home = self.coherence.get(victim).map(|r| r.home_die).unwrap_or(0);
+                let rec = self.coherence.get_or_create(victim, home);
+                rec.in_l3 |= 1 << die;
+            }
+        } else {
+            // Clean (silent) eviction: the sharer bit stays set — the
+            // conservative CVB semantics behind the paper's E-state snoops.
+            if matches!(self.cfg.l3_policy, L3Policy::NonInclusive) && !self.l3.is_empty() {
+                // Bulldozer's L3 acts as a victim cache for clean lines too.
+                self.fill_l3(die, victim, false);
+                let home = self.coherence.get(victim).map(|r| r.home_die).unwrap_or(0);
+                let rec = self.coherence.get_or_create(victim, home);
+                rec.in_l3 |= 1 << die;
+            }
+        }
+    }
+
+    pub(super) fn fill_l3(&mut self, die: usize, line: u64, dirty: bool) {
+        match self.l3[die].insert(line, dirty) {
+            Insert::Evicted { victim, dirty } => {
+                if dirty {
+                    self.stats.writebacks += 1;
+                }
+                let home = self.coherence.get(victim).map(|r| r.home_die).unwrap_or(0);
+                let rec = self.coherence.get_or_create(victim, home);
+                rec.in_l3 &= !(1 << die);
+                // an L3 dirty eviction writes the data back to memory: the
+                // record is clean unless a private cache still owns it dirty
+                if dirty
+                    && rec.in_l3 == 0
+                    && !matches!(rec.class, GlobalClass::Modified | GlobalClass::Owned)
+                {
+                    rec.dirty = false;
+                }
+                if matches!(self.cfg.l3_policy, L3Policy::InclusiveCoreValid) {
+                    // Inclusive L3 eviction back-invalidates the private
+                    // copies of this die's cores.
+                    let mask = self.cfg.topology.die_mask(die);
+                    if rec.sharers & mask != 0 {
+                        self.stats.back_invalidations += 1;
+                        rec.sharers &= !mask;
+                        if rec.sharers == 0 && rec.owner.map_or(false, |o| mask & (1 << o) != 0)
+                        {
+                            rec.class = GlobalClass::Uncached;
+                            rec.owner = None;
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    pub(super) fn run_prefetchers(&mut self, core: CoreId, line: u64, level: Level) {
+        let m = self.cfg.mechanisms;
+        if m.adjacent_line {
+            let buddy = buddy_line(line);
+            self.stats.prefetches_issued += 1;
+            self.prefetched.insert(buddy);
+            self.prefetch_fill(core, buddy);
+        }
+        if m.hw_prefetcher && matches!(level, Level::L3 | Level::Memory) {
+            for pf in self.stream.observe_miss(core, line) {
+                self.stats.prefetches_issued += 1;
+                self.prefetched.insert(pf);
+                self.prefetch_fill(core, pf);
+            }
+        }
+    }
+
+    /// Fill a prefetched line into the private hierarchy (and the inclusive
+    /// L3, which must contain everything the private caches do).
+    pub(super) fn prefetch_fill(&mut self, core: CoreId, line: u64) {
+        self.fill_private(core, line, false);
+        let die = self.cfg.topology.die_of(core);
+        let rec = self.coherence.get_or_create(line, die as u8);
+        if rec.sharers == 0 {
+            rec.add_sharer(core);
+            rec.class = GlobalClass::Exclusive;
+            rec.owner = Some(core);
+        }
+        if matches!(self.cfg.l3_policy, L3Policy::InclusiveCoreValid) && !self.l3.is_empty() {
+            self.fill_l3(die, line, false);
+            let rec = self.coherence.get_or_create(line, die as u8);
+            rec.in_l3 |= 1 << die;
+        }
+    }
+
+    /// Flush a core's private caches (testing / placement helper): clean
+    /// lines silently, dirty lines written back.
+    pub fn flush_private(&mut self, core: CoreId) {
+        let module = self.cfg.topology.l2_module_of(core);
+        let l1_lines: Vec<u64> = self.l1[core].lines().collect();
+        for line in l1_lines {
+            let dirty = self.l1[core].remove(line).unwrap_or(false);
+            if dirty {
+                self.evict_from_l2(core, line, true);
+            }
+        }
+        let l2_lines: Vec<u64> = self.l2[module].lines().collect();
+        for line in l2_lines {
+            let dirty = self.l2[module].remove(line).unwrap_or(false);
+            self.evict_from_l2(core, line, dirty);
+        }
+    }
+}

@@ -1,0 +1,389 @@
+//! The access engine: executes reads, writes, and atomics against the
+//! simulated machine, returning per-access latency in nanoseconds and
+//! mutating cache/coherence/data state.
+//!
+//! Latency is composed from the mechanisms the paper identifies (§4, §5):
+//! an atomic is a read-for-ownership followed by execute-and-write (Eq. 1);
+//! R_O depends on the coherence state and location of the line (Eq. 2–8);
+//! invalidations run in parallel (max, Eq. 7); off-die transfers add the hop
+//! latency H (§4.1.3); plain writes retire into the store buffer while
+//! atomics drain it (§5.2.1); unaligned atomics lock the bus (§5.7);
+//! Bulldozer broadcasts invalidations for shared lines because its
+//! non-inclusive L3 cannot track sharers (§5.1.2); AMD's MuW state
+//! accelerates dirty-line migration for two-operand CAS (§5.5).
+//!
+//! The engine is split by concern (DESIGN.md §2):
+//! * [`read_write`] — the line walk: local-hit classification and locating
+//!   the data supplier for a miss (Eq. 2–6).
+//! * [`rmw`] — ownership acquisition: invalidation pricing (Eq. 7/8) and
+//!   the protocol state transition applied by every access.
+//! * [`fill`] — tag-array maintenance: fills, the eviction chain,
+//!   write-backs, and the prefetchers.
+
+mod fill;
+mod read_write;
+mod rmw;
+#[cfg(test)]
+mod tests;
+
+use crate::atomics::{Op, OpKind, Width};
+use crate::sim::cache::{line_of, TagArray, LINE_SIZE};
+use crate::sim::coherence::{CoherenceMap, GlobalClass};
+use crate::sim::config::{L3Policy, MachineConfig};
+use crate::sim::mechanisms::StreamDetector;
+use crate::sim::memstore::MemStore;
+use crate::sim::protocol::CohState;
+use crate::sim::stats::Stats;
+use crate::sim::timing::{Level, LocalityClass, StateClass};
+use crate::sim::topology::{CoreId, Distance};
+use crate::sim::writebuffer::WriteBuffer;
+use crate::util::fxhash::FastSet;
+use crate::util::rng::splitmix64;
+
+/// The jitter seed every fresh (or reset) machine starts from.
+const JITTER_SEED: u64 = 0x5EED;
+
+/// Result of one operation.
+#[derive(Debug, Clone, Copy)]
+pub struct Access {
+    /// Visible latency for the issuing core, ns.
+    pub latency: f64,
+    /// Which level served the (first) line.
+    pub level: Level,
+    /// Distance class to the data source.
+    pub distance: Distance,
+    /// Value returned to the register (old memory value for RMW).
+    pub value: u64,
+    /// Did the operation modify memory (e.g. CAS success)?
+    pub modified: bool,
+    /// Coherence state of the line *before* the access, at its holder.
+    pub prior_state: CohState,
+}
+
+/// The simulated machine.
+pub struct Machine {
+    pub cfg: MachineConfig,
+    l1: Vec<TagArray>,
+    l2: Vec<TagArray>,
+    l3: Vec<TagArray>,
+    pub coherence: CoherenceMap,
+    pub mem: MemStore,
+    wb: Vec<WriteBuffer>,
+    /// Per-core virtual clock (ns) — drives write-buffer drain modeling.
+    clock: Vec<f64>,
+    stream: StreamDetector,
+    prefetched: FastSet<u64>,
+    /// §6.2.2 HT Assist S/O tracker: lines proven die-local (per die).
+    ht_shared_tracker: Vec<FastSet<u64>>,
+    pub stats: Stats,
+    jitter_seed: u64,
+}
+
+/// Internal result of a line walk (filled in by [`read_write`]).
+pub(super) struct LineWalk {
+    pub(super) cost: f64,
+    pub(super) level: Level,
+    pub(super) distance: Distance,
+    pub(super) prior_state: CohState,
+}
+
+impl Machine {
+    pub fn new(cfg: MachineConfig) -> Machine {
+        let topo = cfg.topology;
+        let l1 = (0..topo.n_cores)
+            .map(|_| TagArray::new(cfg.l1.size, cfg.l1.ways))
+            .collect();
+        let l2 = (0..topo.n_l2_modules())
+            .map(|_| TagArray::new(cfg.l2.size, cfg.l2.ways))
+            .collect();
+        let l3 = match cfg.l3 {
+            Some(geom) => (0..topo.n_dies())
+                .map(|_| {
+                    let mut t = TagArray::new(geom.size, geom.ways);
+                    if let Some(ht) = cfg.ht_assist {
+                        t.reserve_ways(ht.reserved_ways);
+                    }
+                    t
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+        let wb = (0..topo.n_cores)
+            .map(|_| WriteBuffer::new(cfg.write_buffer))
+            .collect();
+        Machine {
+            l1,
+            l2,
+            l3,
+            coherence: CoherenceMap::new(),
+            mem: MemStore::new(),
+            wb,
+            clock: vec![0.0; topo.n_cores],
+            stream: StreamDetector::new(),
+            prefetched: FastSet::default(),
+            ht_shared_tracker: vec![FastSet::default(); topo.n_dies()],
+            stats: Stats::default(),
+            jitter_seed: JITTER_SEED,
+            cfg,
+        }
+    }
+
+    /// Reset caches/coherence/clock but keep the configuration — used
+    /// between benchmark repetitions and by the sweep executor's per-worker
+    /// machine pool. Resets *in place*, reusing every allocation: the
+    /// logical state afterwards is indistinguishable from a fresh
+    /// [`Machine::new`], which the equivalence tests pin down.
+    pub fn reset(&mut self) {
+        for t in &mut self.l1 {
+            t.clear();
+        }
+        for t in &mut self.l2 {
+            t.clear();
+        }
+        for t in &mut self.l3 {
+            t.clear();
+        }
+        self.coherence.clear();
+        self.mem.clear();
+        for w in &mut self.wb {
+            w.clear();
+        }
+        for c in &mut self.clock {
+            *c = 0.0;
+        }
+        self.stream.clear();
+        self.prefetched.clear();
+        for t in &mut self.ht_shared_tracker {
+            t.clear();
+        }
+        self.stats = Stats::default();
+        self.jitter_seed = JITTER_SEED;
+    }
+
+    pub fn clock_of(&self, core: CoreId) -> f64 {
+        self.clock[core]
+    }
+
+    pub fn advance_clock(&mut self, core: CoreId, ns: f64) {
+        self.clock[core] += ns;
+    }
+
+    // ----- public operations ------------------------------------------------
+
+    /// Execute `op` at byte address `addr` with operand `width` from `core`.
+    pub fn access(&mut self, core: CoreId, op: Op, addr: u64, width: Width) -> Access {
+        self.stats.accesses += 1;
+        let kind = op.kind();
+        let offset = addr % LINE_SIZE;
+        let unaligned = offset + width.bytes() > LINE_SIZE;
+        let now = self.clock[core];
+
+        // Atomics drain the store buffer (§5.2.1); writes are buffered below.
+        let mut latency = 0.0;
+        if kind.is_atomic() {
+            let stall = self.wb[core].drain_for_atomic(now, line_of(addr));
+            if stall > 0.0 {
+                self.stats.write_buffer_drains += 1;
+            }
+            latency += stall;
+        }
+
+        let line = line_of(addr);
+        let walk = self.access_line(core, kind, line);
+        let mut level = walk.level;
+        let mut distance = walk.distance;
+        let prior_state = walk.prior_state;
+        let mut cost = walk.cost;
+
+        if unaligned {
+            // The operand spans two lines: fetch the second line too.
+            let walk2 = self.access_line(core, kind, line + 1);
+            if kind.is_atomic() {
+                // Bus lock (§5.7): the CPU locks the interconnect while both
+                // lines are held; cost is both fetches plus the flat penalty.
+                self.stats.bus_locks += 1;
+                cost += walk2.cost + self.cfg.unaligned.bus_lock_ns;
+            } else {
+                // Reads split into two accesses; the second mostly pipelines
+                // (≤20% observed loss, §5.7).
+                cost += 0.2 * walk2.cost;
+            }
+            level = level.max(walk2.level);
+            distance = distance.max(walk2.distance);
+        }
+
+        // 128-bit operands (§5.3): free on Intel, penalized on Bulldozer.
+        if width == Width::W128 && kind.is_atomic() {
+            let (local_pen, remote_pen) = self.cfg.cas128_penalty;
+            cost += match distance {
+                Distance::Local | Distance::SharedL2 | Distance::SameDie => local_pen,
+                _ => remote_pen,
+            };
+        }
+
+        // Execute stage E(A) (Eq. 1) and the O residual.
+        cost += self.cfg.timing.exec(kind);
+        cost += self.cfg.overheads.lookup(
+            kind,
+            StateClass::of(prior_state),
+            level,
+            LocalityClass::of(distance),
+        );
+
+        // Frequency mechanisms (§5.6) scale core-side latency and add jitter.
+        let uplift = self.cfg.mechanisms.frequency_uplift();
+        if uplift != 1.0 && level != Level::Memory {
+            cost /= uplift;
+        }
+        let amp = self.cfg.mechanisms.jitter_amplitude();
+        if amp > 0.0 {
+            let mut s = self.jitter_seed ^ self.stats.accesses;
+            let r = (splitmix64(&mut s) >> 11) as f64 / (1u64 << 53) as f64;
+            cost *= 1.0 + amp * (2.0 * r - 1.0);
+        }
+
+        // Data semantics.
+        let old = self.mem.read(addr & !7);
+        let (new, returned, modified) = op.apply(old);
+        if modified {
+            self.mem.write(addr & !7, new);
+        }
+
+        // Plain writes retire into the store buffer: visible latency is the
+        // issue cost (plus any full-buffer stall); the drain pays `cost`.
+        if kind == OpKind::Write {
+            let stall = self.wb[core].push_write(now, line, cost);
+            latency += self.cfg.timing.write_issue + stall;
+        } else {
+            latency += cost;
+        }
+
+        self.clock[core] += latency;
+        Access {
+            latency,
+            level,
+            distance,
+            value: returned,
+            modified,
+            prior_state,
+        }
+    }
+
+    /// Convenience: an aligned 64-bit access.
+    pub fn access64(&mut self, core: CoreId, op: Op, addr: u64) -> Access {
+        self.access(core, op, addr, Width::W64)
+    }
+
+    // ----- batched operations (sweep inner loops) ---------------------------
+
+    /// Pointer-chase: issue `op` at `addrs[i]` for every `i` in `order`,
+    /// returning the summed visible latency. Semantically identical to
+    /// calling [`Machine::access`] in a loop — the batched entry point keeps
+    /// the chase inside the engine so the per-access dispatch (bounds
+    /// checks, stat lookups, call overhead) amortizes over the whole chain.
+    pub fn access_chain(
+        &mut self,
+        core: CoreId,
+        op: Op,
+        addrs: &[u64],
+        order: &[usize],
+        width: Width,
+    ) -> f64 {
+        let mut total = 0.0;
+        for &i in order {
+            total += self.access(core, op, addrs[i], width).latency;
+        }
+        total
+    }
+
+    /// Sequential bandwidth sweep: touch every `width`-byte operand of every
+    /// line in `addrs` in order, returning the bytes moved. Elapsed virtual
+    /// time is read off [`Machine::clock_of`] by the caller. Semantically
+    /// identical to the open-coded nested loop the bandwidth benches used.
+    pub fn access_sweep(&mut self, core: CoreId, op: Op, addrs: &[u64], width: Width) -> u64 {
+        let step = width.bytes();
+        let per_line = LINE_SIZE / step;
+        let mut bytes = 0u64;
+        for &base in addrs {
+            for k in 0..per_line {
+                self.access(core, op, base + k * step, width);
+                bytes += step;
+            }
+        }
+        bytes
+    }
+
+    // ----- invariants -------------------------------------------------------
+
+    /// Check the global coherence invariants over every line record — used
+    /// by the property-based tests. Returns the first violation found.
+    ///
+    /// Invariants (DESIGN.md §6):
+    ///  1. Exclusive/Modified ⇒ exactly one (owner) sharer bit, owner set.
+    ///  2. Owned ⇒ owner set, dirty, and the owner is a sharer.
+    ///  3. Shared ⇒ not dirty unless the dirty data lives in some L3.
+    ///  4. Inclusive L3 (Intel): sharers on die d ⇒ the die-d L3 holds the
+    ///     line (core-valid-bit containment).
+    ///  5. Sharer bits only for existing cores.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let topo = self.cfg.topology;
+        let all_cores_mask: u64 = if topo.n_cores == 64 {
+            u64::MAX
+        } else {
+            (1u64 << topo.n_cores) - 1
+        };
+        for (&line, rec) in self.coherence.iter() {
+            let err = |msg: String| Err(format!("line {line:#x}: {msg} ({rec:?})"));
+            if rec.sharers & !all_cores_mask != 0 {
+                return err("sharer bit for a non-existent core".into());
+            }
+            match rec.class {
+                GlobalClass::Exclusive | GlobalClass::Modified => {
+                    let Some(owner) = rec.owner else {
+                        return err("E/M without an owner".into());
+                    };
+                    if rec.sharers != (1 << owner) {
+                        return err(format!(
+                            "E/M must have exactly the owner as sharer (owner {owner})"
+                        ));
+                    }
+                }
+                GlobalClass::Owned => {
+                    let Some(owner) = rec.owner else {
+                        return err("Owned without an owner".into());
+                    };
+                    if !rec.holds(owner) {
+                        return err("Owned owner lost its sharer bit".into());
+                    }
+                    if !rec.dirty {
+                        return err("Owned must be dirty".into());
+                    }
+                }
+                GlobalClass::Shared => {
+                    if rec.dirty && rec.in_l3 == 0 {
+                        return err("Shared+dirty data must live in some L3".into());
+                    }
+                }
+                GlobalClass::Uncached => {
+                    if rec.sharers != 0 {
+                        return err("Uncached with sharer bits".into());
+                    }
+                }
+            }
+            if matches!(self.cfg.l3_policy, L3Policy::InclusiveCoreValid)
+                && !self.l3.is_empty()
+            {
+                for die in 0..topo.n_dies() {
+                    if rec.sharers & topo.die_mask(die) != 0
+                        && !self.l3[die].contains(line)
+                    {
+                        return err(format!(
+                            "inclusive L3 of die {die} lost a line its cores share"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,324 @@
+//! The line walk: classify local hits, locate the data supplier for a miss,
+//! and price the transfer (Eq. 2–6). Ownership acquisition and state
+//! transitions live in [`super::rmw`]; tag maintenance in [`super::fill`].
+
+use super::{LineWalk, Machine};
+use crate::atomics::OpKind;
+use crate::sim::coherence::{GlobalClass, LineRecord};
+use crate::sim::config::{L3Policy, WritePolicy};
+use crate::sim::protocol::CohState;
+use crate::sim::timing::Level;
+use crate::sim::topology::{CoreId, Distance};
+
+impl Machine {
+    pub(super) fn ivy_local_hit_level(&self, core: CoreId, line: u64) -> Option<Level> {
+        let module = self.cfg.topology.l2_module_of(core);
+        if self.l1[core].contains(line) {
+            Some(Level::L1)
+        } else if self.l2[module].contains(line) {
+            Some(Level::L2)
+        } else {
+            None
+        }
+    }
+
+    pub(super) fn access_line(&mut self, core: CoreId, kind: OpKind, line: u64) -> LineWalk {
+        let topo = self.cfg.topology;
+        let my_die = topo.die_of(core);
+        let rec = *self.coherence.get_or_create(line, my_die as u8);
+        let needs_ownership = kind != OpKind::Read;
+        let forward = self.cfg.protocol.has_forward();
+
+        let my_state = rec.state_at(core, forward);
+        let prior_state = rec
+            .owner
+            .map(|o| rec.state_at(o, forward))
+            .filter(|s| *s != CohState::I)
+            .unwrap_or(my_state);
+        // For overhead/report classification use the holder's state; if the
+        // line is shared by others while I hold S, that's SharedLike.
+        let class_state = match rec.class {
+            GlobalClass::Shared => CohState::S,
+            GlobalClass::Owned => CohState::O,
+            GlobalClass::Modified => CohState::M,
+            GlobalClass::Exclusive => CohState::E,
+            GlobalClass::Uncached => CohState::I,
+        };
+
+        // 1. Local hit?
+        let local_level = if rec.holds(core) {
+            self.ivy_local_hit_level(core, line)
+        } else {
+            // lazily drop stale tags left behind by invalidations
+            self.l1[core].remove(line);
+            self.l2[topo.l2_module_of(core)].remove(line);
+            None
+        };
+
+        let t = self.cfg.timing;
+        let others = rec.other_sharers(core);
+
+        // Fast path (perf §Perf-2): a local hit that requires no coherence
+        // transition — a read of our own line, or an RMW on a line we
+        // already hold in M with no other sharers. Skips the transition and
+        // fill machinery entirely; this is the inner loop of every pointer
+        // chase and bandwidth sweep.
+        if let Some(lvl) = local_level {
+            let no_transition = if needs_ownership {
+                rec.class == GlobalClass::Modified
+                    && rec.owner == Some(core)
+                    && others == 0
+            } else {
+                others == 0
+                    || matches!(rec.class, GlobalClass::Shared | GlobalClass::Owned)
+            };
+            if no_transition && lvl == Level::L1 {
+                self.stats.record_hit(Level::L1);
+                self.l1[core].touch(line);
+                if self.prefetched.remove(&line) {
+                    self.stats.prefetch_hits += 1;
+                }
+                let c = if needs_ownership
+                    && self.cfg.l1.write_policy == WritePolicy::WriteThrough
+                {
+                    t.r_l2
+                } else {
+                    t.r_l1
+                };
+                return LineWalk {
+                    cost: c,
+                    level: Level::L1,
+                    distance: Distance::Local,
+                    prior_state: class_state.max_dirty(prior_state),
+                };
+            }
+        }
+
+        let (mut cost, level, distance, supplier_core) = if let Some(lvl) = local_level {
+            let c = match lvl {
+                Level::L1 => {
+                    // Bulldozer's write-through L1: stores/atomics proceed to
+                    // the L2 (Eq. 11 replaces R_L1 with R_L2 on AMD).
+                    if needs_ownership
+                        && self.cfg.l1.write_policy == WritePolicy::WriteThrough
+                    {
+                        t.r_l2
+                    } else {
+                        t.r_l1
+                    }
+                }
+                Level::L2 => t.r_l2,
+                _ => unreachable!(),
+            };
+            self.stats.record_hit(lvl);
+            (c, lvl, Distance::Local, None)
+        } else {
+            self.find_data(core, line, &rec)
+        };
+
+        // 2. Ownership: invalidate the other sharers (Eq. 7/8 — parallel,
+        //    max). Only shared states pay this; for E/M the single copy is
+        //    invalidated by the RFO transfer itself (Eq. 2).
+        let _ = others;
+        if needs_ownership && matches!(class_state, CohState::S | CohState::O | CohState::F) {
+            cost += self.invalidation_cost(core, line, &rec, class_state);
+        }
+
+        // 3. Cross-socket dirty share on MESI(F): write-back to memory
+        //    (§4.1.3: Intel adds M for off-die accesses of modified lines).
+        if rec.class == GlobalClass::Modified
+            && rec.owner.is_some()
+            && rec.owner != Some(core)
+        {
+            let owner = rec.owner.unwrap();
+            let d = topo.distance(core, owner);
+            let wb_needed = self
+                .cfg
+                .protocol
+                .on_remote_read(CohState::M, d.hops() == 0)
+                .writeback;
+            if wb_needed && d.hops() > 0 {
+                cost += t.mem;
+                self.stats.writebacks += 1;
+            }
+        }
+
+        // 4. State transition + fills.
+        self.apply_transition(core, kind, line, rec, supplier_core);
+
+        // 5. Prefetchers (§5.6).
+        if level != Level::L1 {
+            self.run_prefetchers(core, line, level);
+        } else if self.prefetched.remove(&line) {
+            self.stats.prefetch_hits += 1;
+        }
+
+        LineWalk { cost, level, distance, prior_state: class_state.max_dirty(prior_state) }
+    }
+
+    /// Locate the data for a miss and price the transfer.
+    pub(super) fn find_data(
+        &mut self,
+        core: CoreId,
+        line: u64,
+        rec: &LineRecord,
+    ) -> (f64, Level, Distance, Option<CoreId>) {
+        let topo = self.cfg.topology;
+        let t = self.cfg.timing;
+        let my_die = topo.die_of(core);
+
+        // Clean shared lines resident in an L3 are served by that L3 slice
+        // directly (the inclusive L3 is the designated responder for its
+        // die) — preferring the local die, then remote dies over the fabric.
+        if rec.class == GlobalClass::Shared && !self.l3.is_empty() {
+            let mut dies: Vec<usize> = vec![my_die];
+            dies.extend((0..self.l3.len()).filter(|&d| d != my_die));
+            for die in dies {
+                if rec.in_l3 & (1 << die) != 0 && self.l3[die].contains(line) {
+                    let d = if die == my_die {
+                        Distance::SameDie
+                    } else {
+                        topo.distance_to_die(core, die)
+                    };
+                    self.stats.record_hit(Level::L3);
+                    self.stats.hops += d.hops() as u64;
+                    return (t.r_l3 + t.hop_cost(d.hops()), Level::L3, d, None);
+                }
+            }
+        }
+
+        // A private cache that can supply (M/O/E/F holder)?
+        if let Some(owner) = rec.owner {
+            let forward = self.cfg.protocol.has_forward();
+            if owner != core && rec.holds(owner) && rec.state_at(owner, forward).can_supply() {
+                let d = topo.distance(core, owner);
+                self.stats.cache_to_cache += 1;
+                self.stats.hops += d.hops() as u64;
+                let base = match d {
+                    Distance::SharedL2 => t.shared_l2_transfer(),
+                    Distance::SameDie => t.same_die_transfer(),
+                    Distance::SameSocket | Distance::OtherSocket => {
+                        // remote die: transfer via the owner's L3/hop
+                        t.same_die_transfer() + t.hop
+                    }
+                    Distance::Local => unreachable!("local handled above"),
+                };
+                return (base, self.supplier_level(owner, line), d, Some(owner));
+            }
+        }
+
+        // An L3 slice that holds the line? Prefer the local die.
+        if !self.l3.is_empty() {
+            let die_has = |die: usize| rec.in_l3 & (1 << die) != 0 && self.l3[die].contains(line);
+            if die_has(my_die) {
+                // Intel CVB / §5.1.1: if other cores' bits are set, the L3
+                // must snoop them even when the data is right here (silent
+                // eviction keeps bits conservative). M lines written back
+                // precisely avoid the snoop — that emerges because their
+                // sharer bits were cleared on eviction.
+                let on_die_others = rec.other_sharers(core) & topo.die_mask(my_die);
+                let snoop = match self.cfg.l3_policy {
+                    L3Policy::InclusiveCoreValid => on_die_others != 0,
+                    // Bulldozer has no CVBs: a hit in the non-inclusive L3
+                    // still probes the on-die cores via HT Assist (filtered).
+                    L3Policy::NonInclusive => {
+                        if rec.other_sharers(core) != 0 {
+                            true
+                        } else {
+                            self.stats.ht_assist_filtered += 1;
+                            false
+                        }
+                    }
+                };
+                self.stats.record_hit(Level::L3);
+                let cost = if snoop { t.same_die_transfer() } else { t.r_l3 };
+                return (cost, Level::L3, Distance::SameDie, None);
+            }
+            for die in 0..self.l3.len() {
+                if die != my_die && die_has(die) {
+                    let d = topo.distance_to_die(core, die);
+                    self.stats.hops += d.hops() as u64;
+                    self.stats.record_hit(Level::L3);
+                    let mut cost = t.r_l3 + t.hop_cost(d.hops());
+                    // MESI(F) cannot dirty-share: serving a dirty L3 line
+                    // across the interconnect forces a memory write-back
+                    // (§4.1.3 / §5.1.1 "the data has to be written to
+                    // memory incurring M"). MOESI's O state avoids it.
+                    if rec.dirty && !self.cfg.protocol.has_owned() && d.hops() > 0 {
+                        cost += t.mem;
+                        self.stats.writebacks += 1;
+                        let home = rec.home_die;
+                        let r = self.coherence.get_or_create(line, home);
+                        r.dirty = false;
+                    }
+                    return (cost, Level::L3, d, None);
+                }
+            }
+        }
+
+        // Clean shared lines still resident in another sharer's private
+        // caches (no L3 copy — Bulldozer's non-inclusive L3, Phi's L3-less
+        // design): the coherence fabric sources them cache-to-cache from
+        // the nearest *actually resident* sharer.
+        if matches!(rec.class, GlobalClass::Shared | GlobalClass::Owned) {
+            let mut best: Option<(Distance, CoreId)> = None;
+            let mut sharers = rec.other_sharers(core);
+            while sharers != 0 {
+                let c = sharers.trailing_zeros() as usize;
+                sharers &= sharers - 1;
+                let module = topo.l2_module_of(c);
+                if self.l1[c].contains(line) || self.l2[module].contains(line) {
+                    let d = topo.distance(core, c);
+                    if best.map_or(true, |(bd, _)| d < bd) {
+                        best = Some((d, c));
+                    }
+                }
+            }
+            if let Some((d, c)) = best {
+                self.stats.cache_to_cache += 1;
+                self.stats.hops += d.hops() as u64;
+                let cost = match d {
+                    Distance::SharedL2 => t.shared_l2_transfer(),
+                    Distance::SameDie => t.same_die_transfer(),
+                    _ => t.same_die_transfer() + t.hop,
+                };
+                return (cost, self.supplier_level(c, line), d, Some(c));
+            }
+        }
+
+        // Plain shared copies with no resident supplier fall through to
+        // memory.
+        let home_die = rec.home_die as usize;
+        let d = topo.distance_to_die(core, home_die);
+        self.stats.record_hit(Level::Memory);
+        self.stats.hops += d.hops() as u64;
+        let cost = t.r_l3_or_l2() + t.mem + t.hop_cost(d.hops());
+        (cost, Level::Memory, d, None)
+    }
+
+    pub(super) fn supplier_level(&self, owner: CoreId, line: u64) -> Level {
+        let module = self.cfg.topology.l2_module_of(owner);
+        if self.l1[owner].contains(line) {
+            Level::L1
+        } else if self.l2[module].contains(line) {
+            Level::L2
+        } else {
+            Level::L3
+        }
+    }
+}
+
+pub(super) trait MaxDirty {
+    fn max_dirty(self, other: CohState) -> CohState;
+}
+
+impl MaxDirty for CohState {
+    /// Prefer the more informative (dirty) state for reporting.
+    fn max_dirty(self, other: CohState) -> CohState {
+        if other.is_dirty() && !self.is_dirty() {
+            other
+        } else {
+            self
+        }
+    }
+}

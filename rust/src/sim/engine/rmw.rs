@@ -1,0 +1,203 @@
+//! Ownership acquisition: the parallel-invalidation pricing of Eq. 7/8
+//! (including Bulldozer's unconditional remote broadcast, §5.1.2) and the
+//! protocol state transition every access applies.
+
+use super::Machine;
+use crate::atomics::OpKind;
+use crate::sim::coherence::{GlobalClass, LineRecord};
+use crate::sim::config::L3Policy;
+use crate::sim::protocol::{CohState, ProtocolKind};
+use crate::sim::topology::{CoreId, Distance};
+
+impl Machine {
+    /// Price the parallel invalidations for a read-for-ownership on a
+    /// shared line (Eq. 7/8), including Bulldozer's unconditional remote
+    /// broadcast (§5.1.2) and its §6.2 fixes.
+    pub(super) fn invalidation_cost(
+        &mut self,
+        core: CoreId,
+        line: u64,
+        rec: &LineRecord,
+        class_state: CohState,
+    ) -> f64 {
+        let topo = self.cfg.topology;
+        let t = self.cfg.timing;
+        let my_die = topo.die_of(core);
+        let mut max_inv: f64 = 0.0;
+
+        let mut targets = rec.other_sharers(core);
+        while targets != 0 {
+            let target = targets.trailing_zeros() as usize;
+            targets &= targets - 1;
+            let d = topo.distance(core, target);
+            let inv = match d {
+                Distance::Local => 0.0,
+                Distance::SharedL2 => t.shared_l2_transfer() - t.r_l1,
+                Distance::SameDie => t.same_die_transfer() - t.r_l1,
+                Distance::SameSocket | Distance::OtherSocket => {
+                    t.same_die_transfer() - t.r_l1 + t.hop
+                }
+            };
+            self.stats.invalidations_sent += 1;
+            self.stats.hops += d.hops() as u64;
+            max_inv = max_inv.max(inv);
+        }
+
+        // Bulldozer: no sharer tracking — S/O writes broadcast to remote
+        // dies even when every sharer is local (§5.1.2). The §6.2.2 HT Assist
+        // extension suppresses the broadcast for tracked die-local lines;
+        // the §6.2.1 OL/SL states suppress it by construction (die_local).
+        if self
+            .cfg
+            .protocol
+            .write_requires_remote_broadcast(if rec.die_local {
+                CohState::Sl
+            } else {
+                class_state
+            })
+            && topo.n_dies() > 1
+        {
+            let tracked_local = self
+                .cfg
+                .ht_assist
+                .map_or(false, |h| h.track_shared)
+                && self.ht_shared_tracker[my_die].contains(&line);
+            if !tracked_local {
+                self.stats.remote_invalidation_broadcasts += 1;
+                self.stats.hops += 1;
+                max_inv = max_inv.max(t.same_die_transfer() - t.r_l1 + t.hop);
+            } else {
+                self.stats.ht_assist_filtered += 1;
+            }
+        }
+        max_inv
+    }
+
+    /// Apply the protocol transition for this access and maintain tag arrays.
+    pub(super) fn apply_transition(
+        &mut self,
+        core: CoreId,
+        kind: OpKind,
+        line: u64,
+        old: LineRecord,
+        supplier: Option<CoreId>,
+    ) {
+        let topo = self.cfg.topology;
+        let my_die = topo.die_of(core);
+        let protocol = self.cfg.protocol;
+        let needs_ownership = kind != OpKind::Read;
+        let same_die_supplier =
+            supplier.map_or(true, |s| topo.die_of(s) == my_die);
+
+        let rec = self.coherence.get_or_create(line, my_die as u8);
+
+        if needs_ownership {
+            // RFO: requester becomes the sole (dirty) holder.
+            rec.sharers = 1 << core;
+            rec.owner = Some(core);
+            // Failed CAS does not modify the line, but the RFO was issued
+            // anyway (§5.1.4): clean data ends Exclusive, dirty data must
+            // stay Modified at the new holder.
+            let was_dirty = old.dirty
+                || old.class == GlobalClass::Modified
+                || old.class == GlobalClass::Owned;
+            rec.class = if kind == OpKind::Cas && !was_dirty {
+                // success/failure is data-dependent; the engine marks CAS
+                // conservative-clean here and `access` dirties memory via
+                // MemStore. Timing-wise E vs M at the requester is identical.
+                GlobalClass::Exclusive
+            } else {
+                GlobalClass::Modified
+            };
+            rec.dirty = rec.class == GlobalClass::Modified;
+            rec.die_local = false;
+            rec.in_l3 &= !0; // L3 copies stale only if non-inclusive; Intel updates in place
+            if matches!(self.cfg.l3_policy, L3Policy::NonInclusive) {
+                rec.in_l3 = 0;
+            }
+        } else {
+            // Read: join the sharers with the protocol-granted state.
+            let holder_state = old
+                .owner
+                .filter(|o| *o != core && old.holds(*o))
+                .map(|o| old.state_at(o, protocol.has_forward()))
+                .unwrap_or(CohState::I);
+            let outcome = protocol.on_remote_read(holder_state, same_die_supplier);
+            rec.add_sharer(core);
+            match (old.class, outcome.writeback) {
+                (GlobalClass::Uncached, _) if old.sharers == 0 => {
+                    rec.class = GlobalClass::Exclusive;
+                    rec.owner = Some(core);
+                    rec.dirty = old.dirty; // dirty L3-only data stays dirty
+                }
+                (GlobalClass::Exclusive | GlobalClass::Shared, _) => {
+                    rec.class = GlobalClass::Shared;
+                    if protocol.has_forward() || old.class == GlobalClass::Exclusive {
+                        rec.owner = Some(core); // F passes to the newest reader
+                    }
+                    if !protocol.has_forward() && old.class == GlobalClass::Shared {
+                        rec.owner = old.owner;
+                    }
+                    rec.dirty = old.dirty;
+                }
+                (GlobalClass::Modified | GlobalClass::Owned, true) => {
+                    // MESI/MESIF dirty share: write back, both clean now.
+                    self.stats.writebacks += 1;
+                    rec.class = GlobalClass::Shared;
+                    rec.owner = Some(core); // MESIF grants F to the requester
+                    rec.dirty = false;
+                }
+                (GlobalClass::Modified | GlobalClass::Owned, false) => {
+                    // MOESI/GOLS dirty share: previous holder keeps dirty data.
+                    rec.class = GlobalClass::Owned;
+                    rec.owner = old.owner;
+                    rec.dirty = true;
+                }
+                (GlobalClass::Uncached, _) => {
+                    rec.class = GlobalClass::Shared;
+                    rec.dirty = old.dirty;
+                }
+            }
+            // §6.2.1 OL/SL: on-die sharing is provably die-local.
+            if protocol == ProtocolKind::MoesiOlSl {
+                let mask = topo.die_mask(my_die);
+                rec.die_local = rec.sharers & !mask == 0
+                    && matches!(outcome.requester, CohState::Sl | CohState::Ol)
+                    || (old.die_local && rec.sharers & !mask == 0);
+            }
+        }
+
+        // §6.2.2 HT Assist S/O tracking: record die-local shared lines.
+        if let Some(ht) = self.cfg.ht_assist {
+            if ht.track_shared
+                && matches!(rec.class, GlobalClass::Shared | GlobalClass::Owned)
+            {
+                let mask = topo.die_mask(my_die);
+                let tracker = &mut self.ht_shared_tracker[my_die];
+                if rec.sharers & !mask == 0 {
+                    if tracker.len() >= ht.shared_capacity {
+                        // bounded structure: evict the lowest tracked line —
+                        // deterministic regardless of the set's capacity
+                        // history, so reset-and-reuse machines and fresh
+                        // machines behave identically.
+                        if let Some(evict) = tracker.iter().min().copied() {
+                            tracker.remove(&evict);
+                        }
+                    }
+                    tracker.insert(line);
+                } else {
+                    tracker.remove(&line);
+                }
+            }
+        }
+
+        // Fills + evictions.
+        let dirty = needs_ownership;
+        self.fill_private(core, line, dirty);
+        if matches!(self.cfg.l3_policy, L3Policy::InclusiveCoreValid) && !self.l3.is_empty() {
+            self.fill_l3(my_die, line, false);
+            let rec = self.coherence.get_or_create(line, my_die as u8);
+            rec.in_l3 |= 1 << my_die;
+        }
+    }
+}

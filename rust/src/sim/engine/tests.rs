@@ -1,0 +1,270 @@
+use super::*;
+use crate::arch;
+
+fn haswell() -> Machine {
+    Machine::new(arch::haswell())
+}
+
+#[test]
+fn local_l1_read_hit_costs_r_l1() {
+    let mut m = haswell();
+    m.access64(0, Op::Read, 0x1000);
+    let a = m.access64(0, Op::Read, 0x1000);
+    assert_eq!(a.level, Level::L1);
+    assert!((a.latency - m.cfg.timing.r_l1).abs() < 1e-9, "{}", a.latency);
+}
+
+#[test]
+fn atomic_slower_than_read_by_exec() {
+    let mut m = haswell();
+    m.access64(0, Op::Faa { delta: 0 }, 0x1000);
+    let r = m.access64(0, Op::Read, 0x1000).latency;
+    let f = m.access64(0, Op::Faa { delta: 0 }, 0x1000).latency;
+    assert!(f > r, "atomic {f} must exceed read {r}");
+    assert!((f - r - m.cfg.timing.e_faa).abs() < 4.0);
+}
+
+#[test]
+fn cold_miss_goes_to_memory() {
+    let mut m = haswell();
+    let a = m.access64(0, Op::Read, 0x10_0000);
+    assert_eq!(a.level, Level::Memory);
+    assert!(a.latency > m.cfg.timing.mem);
+}
+
+#[test]
+fn remote_dirty_line_snooped_from_owner() {
+    let mut m = haswell();
+    // core 1 writes (M state), core 0 then FAAs.
+    m.access64(1, Op::Faa { delta: 1 }, 0x2000);
+    let a = m.access64(0, Op::Faa { delta: 1 }, 0x2000);
+    assert_eq!(a.distance, Distance::SameDie);
+    assert!(a.latency > m.cfg.timing.r_l3, "cache-to-cache: {}", a.latency);
+    assert!(m.stats.cache_to_cache >= 1);
+}
+
+#[test]
+fn shared_line_rmw_invalidates() {
+    let mut m = haswell();
+    m.access64(1, Op::Read, 0x3000);
+    m.access64(2, Op::Read, 0x3000);
+    let before = m.stats.invalidations_sent;
+    m.access64(0, Op::Faa { delta: 1 }, 0x3000);
+    assert!(m.stats.invalidations_sent > before);
+    // afterwards core 0 is the only holder
+    let rec = m.coherence.get(line_of(0x3000)).unwrap();
+    assert_eq!(rec.sharers, 1 << 0);
+    assert_eq!(rec.class, GlobalClass::Modified);
+}
+
+#[test]
+fn cas_data_semantics_through_engine() {
+    let mut m = haswell();
+    m.access64(0, Op::Write { value: 5 }, 0x4000);
+    let fail = m.access64(0, Op::Cas { expected: 9, new: 1, fetched_operands: 1 }, 0x4000);
+    assert!(!fail.modified);
+    assert_eq!(fail.value, 5);
+    let ok = m.access64(0, Op::Cas { expected: 5, new: 1, fetched_operands: 1 }, 0x4000);
+    assert!(ok.modified);
+    assert_eq!(m.mem.read(0x4000), 1);
+}
+
+#[test]
+fn writes_are_buffered_cheap() {
+    let mut m = haswell();
+    let w = m.access64(0, Op::Write { value: 1 }, 0x5000).latency;
+    let f = m.access64(0, Op::Faa { delta: 1 }, 0x6000).latency;
+    assert!(w < f, "buffered write {w} should be far cheaper than atomic {f}");
+}
+
+#[test]
+fn atomic_drains_write_buffer() {
+    let mut m = haswell();
+    // salvo of writes to distinct lines fills drain queue
+    for i in 0..16u64 {
+        m.access64(0, Op::Write { value: i }, 0x9000 + i * 64);
+    }
+    let drains_before = m.stats.write_buffer_drains;
+    m.access64(0, Op::Faa { delta: 1 }, 0x20_0000);
+    assert!(m.stats.write_buffer_drains > drains_before);
+}
+
+#[test]
+fn unaligned_atomic_locks_bus() {
+    let mut m = haswell();
+    let aligned = m.access64(0, Op::Faa { delta: 1 }, 0x7000).latency;
+    let unaligned = m
+        .access(0, Op::Faa { delta: 1 }, 0x7000 + 60, Width::W64)
+        .latency;
+    assert!(m.stats.bus_locks >= 1);
+    assert!(
+        unaligned > aligned + m.cfg.unaligned.bus_lock_ns * 0.9,
+        "unaligned {unaligned} vs aligned {aligned}"
+    );
+}
+
+#[test]
+fn unaligned_read_mild_penalty() {
+    let mut m = haswell();
+    m.access64(0, Op::Read, 0x8000);
+    m.access64(0, Op::Read, 0x8040);
+    let aligned = m.access64(0, Op::Read, 0x8000).latency;
+    let unaligned = m.access(0, Op::Read, 0x8000 + 60, Width::W64).latency;
+    assert!(unaligned < aligned * 1.5, "reads must not bus-lock: {unaligned}");
+}
+
+#[test]
+fn mesif_dirty_share_cleans_line() {
+    let mut m = haswell();
+    m.access64(1, Op::Faa { delta: 1 }, 0xA000); // M at core 1
+    m.access64(0, Op::Read, 0xA000); // share
+    let rec = m.coherence.get(line_of(0xA000)).unwrap();
+    assert_eq!(rec.class, GlobalClass::Shared);
+    assert!(!rec.dirty, "MESIF dirty share must write back");
+}
+
+#[test]
+fn moesi_dirty_share_keeps_owner() {
+    let mut m = Machine::new(arch::bulldozer());
+    m.access64(2, Op::Faa { delta: 1 }, 0xA000); // M at core 2
+    m.access64(4, Op::Read, 0xA000); // different module, same die
+    let rec = m.coherence.get(line_of(0xA000)).unwrap();
+    assert_eq!(rec.class, GlobalClass::Owned);
+    assert!(rec.dirty, "MOESI keeps the line dirty-shared");
+    assert_eq!(rec.owner, Some(2));
+}
+
+#[test]
+fn bulldozer_shared_write_broadcasts_remote() {
+    let mut m = Machine::new(arch::bulldozer());
+    // two cores on die 0 share the line
+    m.access64(0, Op::Read, 0xB000);
+    m.access64(2, Op::Read, 0xB000);
+    let before = m.stats.remote_invalidation_broadcasts;
+    m.access64(0, Op::Faa { delta: 1 }, 0xB000);
+    assert_eq!(
+        m.stats.remote_invalidation_broadcasts,
+        before + 1,
+        "MOESI without sharer tracking must broadcast (§5.1.2)"
+    );
+}
+
+#[test]
+fn intel_shared_write_does_not_broadcast() {
+    let mut m = haswell();
+    m.access64(0, Op::Read, 0xB000);
+    m.access64(2, Op::Read, 0xB000);
+    m.access64(0, Op::Faa { delta: 1 }, 0xB000);
+    assert_eq!(m.stats.remote_invalidation_broadcasts, 0);
+}
+
+#[test]
+fn clock_advances() {
+    let mut m = haswell();
+    assert_eq!(m.clock_of(0), 0.0);
+    m.access64(0, Op::Faa { delta: 1 }, 0xC000);
+    assert!(m.clock_of(0) > 0.0);
+}
+
+#[test]
+fn reset_clears_state() {
+    let mut m = haswell();
+    m.access64(0, Op::Faa { delta: 1 }, 0xC000);
+    m.reset();
+    assert_eq!(m.stats.accesses, 0);
+    assert_eq!(m.clock_of(0), 0.0);
+    assert!(m.coherence.is_empty());
+}
+
+#[test]
+fn adjacent_line_prefetch_hits() {
+    let mut m = haswell();
+    m.cfg.mechanisms.adjacent_line = true;
+    m.access64(0, Op::Read, 0xD000); // miss; buddy 0xD040 prefetched
+    let a = m.access64(0, Op::Read, 0xD040);
+    assert_eq!(a.level, Level::L1, "buddy must be resident");
+    assert!(m.stats.prefetches_issued >= 1);
+}
+
+#[test]
+fn capacity_eviction_reaches_memory_again() {
+    let mut m = haswell();
+    // stream 2x the L2 capacity in lines, then revisit the start:
+    // it must have been evicted to L3 (inclusive) — not memory.
+    let lines = (2 * m.cfg.l2.size / 64) as u64;
+    for i in 0..lines {
+        m.access64(0, Op::Read, i * 64);
+    }
+    let a = m.access64(0, Op::Read, 0);
+    assert_eq!(a.level, Level::L3, "evicted lines live in inclusive L3");
+}
+
+// ----- reset-and-reuse / batched-API equivalence ----------------------------
+
+/// A mixed workload touching most engine paths, recording latency bit
+/// patterns for exact comparison.
+fn workout(m: &mut Machine) -> Vec<u64> {
+    let mut out = Vec::new();
+    for i in 0..200u64 {
+        let core = (i % m.cfg.topology.n_cores as u64) as usize;
+        let addr = 0x4000_0000 + (i % 64) * 64;
+        let op = match i % 5 {
+            0 => Op::Read,
+            1 => Op::Write { value: i },
+            2 => Op::Faa { delta: 1 },
+            3 => Op::Cas { expected: 0, new: i, fetched_operands: 1 },
+            _ => Op::Swp { value: i },
+        };
+        out.push(m.access64(core, op, addr).latency.to_bits());
+    }
+    out
+}
+
+#[test]
+fn reset_machine_is_bit_identical_to_fresh_machine() {
+    for cfg in arch::all() {
+        let mut fresh = Machine::new(cfg.clone());
+        let expected = workout(&mut fresh);
+        // run garbage through a machine, reset, re-run: identical
+        let mut reused = Machine::new(cfg.clone());
+        for i in 0..500u64 {
+            reused.access64(0, Op::Faa { delta: i }, 0x100 + i * 64);
+        }
+        reused.reset();
+        let got = workout(&mut reused);
+        assert_eq!(expected, got, "{}: reset must restore a fresh machine", cfg.name);
+    }
+}
+
+#[test]
+fn access_chain_matches_open_coded_loop() {
+    let addrs: Vec<u64> = (0..32u64).map(|i| 0x4000_0000 + i * 64).collect();
+    let order: Vec<usize> = (0..32).rev().collect();
+    let mut a = haswell();
+    let mut total = 0.0;
+    for &i in &order {
+        total += a.access(0, Op::Faa { delta: 1 }, addrs[i], Width::W64).latency;
+    }
+    let mut b = haswell();
+    let batched = b.access_chain(0, Op::Faa { delta: 1 }, &addrs, &order, Width::W64);
+    assert_eq!(total.to_bits(), batched.to_bits());
+    assert_eq!(a.stats, b.stats);
+}
+
+#[test]
+fn access_sweep_matches_open_coded_loop() {
+    let addrs: Vec<u64> = (0..16u64).map(|i| 0x4000_0000 + i * 64).collect();
+    let mut a = haswell();
+    let mut bytes = 0u64;
+    for &base in &addrs {
+        for k in 0..8u64 {
+            a.access(0, Op::Write { value: 1 }, base + k * 8, Width::W64);
+            bytes += 8;
+        }
+    }
+    let mut b = haswell();
+    let got = b.access_sweep(0, Op::Write { value: 1 }, &addrs, Width::W64);
+    assert_eq!(bytes, got);
+    assert_eq!(a.clock_of(0).to_bits(), b.clock_of(0).to_bits());
+    assert_eq!(a.stats, b.stats);
+}

@@ -80,6 +80,12 @@ impl StreamDetector {
         StreamDetector::default()
     }
 
+    /// Forget all per-core run state (machine reset).
+    pub fn clear(&mut self) {
+        self.last_line.clear();
+        self.run_len.clear();
+    }
+
     /// Observe a demand miss of `line` by `core`; returns the lines to
     /// prefetch (empty until the stream is established).
     pub fn observe_miss(&mut self, core: usize, line: Line) -> Vec<Line> {

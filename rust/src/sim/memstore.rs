@@ -44,6 +44,11 @@ impl MemStore {
             .or_insert_with(|| Box::new([0u64; PAGE_WORDS]))[idx] = value;
     }
 
+    /// Drop all pages (machine reset): memory reads as zero again.
+    pub fn clear(&mut self) {
+        self.pages.clear();
+    }
+
     /// Number of allocated pages (memory footprint diagnostics).
     pub fn pages(&self) -> usize {
         self.pages.len()

@@ -123,6 +123,12 @@ impl WriteBuffer {
     pub fn cfg(&self) -> WriteBufferCfg {
         self.cfg
     }
+
+    /// Empty the buffer and rewind drain bookkeeping (machine reset).
+    pub fn clear(&mut self) {
+        self.queue.clear();
+        self.last_drain_done = 0.0;
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,275 @@
+//! The parallel sweep executor.
+//!
+//! Work distribution: every (job, point) pair is one independent work item.
+//! Workers steal the next item off a shared atomic cursor — a worker that
+//! draws cheap points simply steals more, so the pool self-balances without
+//! per-worker queues. Results stream back over an mpsc channel keyed by
+//! (job, point) and are assembled in *input* order, so the output is
+//! deterministic for any thread count.
+//!
+//! Machines: each worker keeps a pool of one [`Machine`] per architecture
+//! (`SweepJob::pool_key`) and resets it between points instead of paying a
+//! full `Machine::new` allocation per point — `Machine::reset` is
+//! bit-identical to a fresh machine (pinned by the engine and the
+//! `sweep_equivalence` golden tests).
+//!
+//! Failure isolation: a panic inside one measurement is caught, reported
+//! with the (series, architecture, coordinate) that failed, and the rest of
+//! the sweep keeps draining — one bad point cannot abort a campaign.
+
+use crate::bench::{Point, Series};
+use crate::sim::engine::Machine;
+use crate::sweep::plan::SweepJob;
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// The result of one [`SweepJob`]: every requested point, in input order.
+#[derive(Debug, Clone)]
+pub struct SweepOutcome {
+    /// Architecture name the series ran on.
+    pub arch: String,
+    /// Series name from the workload.
+    pub name: String,
+    /// Meaning of the x coordinate ("buffer_bytes" / "threads").
+    pub axis: &'static str,
+    /// `(x, value)` per requested coordinate; `None` = unrealizable on this
+    /// architecture, or the measurement panicked (see `failures`).
+    pub points: Vec<(u64, Option<f64>)>,
+    /// Human-readable descriptions of panicked work items.
+    pub failures: Vec<String>,
+}
+
+impl SweepOutcome {
+    /// The figure-series view: `Some` only when every point measured.
+    pub fn series(&self) -> Option<Series> {
+        let mut pts = Vec::with_capacity(self.points.len());
+        for &(x, v) in &self.points {
+            pts.push(Point { buffer_bytes: x as usize, value: v? });
+        }
+        Some(Series { name: self.name.clone(), points: pts })
+    }
+}
+
+/// A fixed-width thread pool executing sweep jobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepExecutor {
+    threads: usize,
+}
+
+impl SweepExecutor {
+    pub fn new(threads: usize) -> SweepExecutor {
+        SweepExecutor { threads: threads.max(1) }
+    }
+
+    /// An executor sized by `SWEEP_THREADS` / the available cores.
+    pub fn with_default_threads() -> SweepExecutor {
+        SweepExecutor::new(crate::sweep::default_threads())
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run every point of every job, returning outcomes in job input order.
+    pub fn run(&self, jobs: &[SweepJob]) -> Vec<SweepOutcome> {
+        // Flatten to (job, point) work items.
+        let items: Vec<(usize, usize)> = jobs
+            .iter()
+            .enumerate()
+            .flat_map(|(j, job)| (0..job.xs.len()).map(move |p| (j, p)))
+            .collect();
+
+        let mut values: Vec<Vec<Option<f64>>> =
+            jobs.iter().map(|j| vec![None; j.xs.len()]).collect();
+        let mut failures: Vec<Vec<String>> = vec![Vec::new(); jobs.len()];
+
+        if !items.is_empty() {
+            let cursor = AtomicUsize::new(0);
+            let workers = self.threads.min(items.len());
+            std::thread::scope(|s| {
+                let (tx, rx) = mpsc::channel::<(usize, usize, Result<Option<f64>, String>)>();
+                for _ in 0..workers {
+                    let tx = tx.clone();
+                    let cursor = &cursor;
+                    let items = &items;
+                    s.spawn(move || {
+                        let mut pool: HashMap<String, Machine> = HashMap::new();
+                        loop {
+                            let i = cursor.fetch_add(1, Ordering::Relaxed);
+                            if i >= items.len() {
+                                break;
+                            }
+                            let (j, p) = items[i];
+                            let job = &jobs[j];
+                            if let Some(m) = pool.get_mut(&job.pool_key) {
+                                // workloads that only read m.cfg (the
+                                // contention event engine) skip the
+                                // per-point reset
+                                if job.workload.needs_machine() {
+                                    m.reset();
+                                }
+                            } else {
+                                pool.insert(job.pool_key.clone(), Machine::new(job.cfg.clone()));
+                            }
+                            let m = pool.get_mut(&job.pool_key).expect("machine just pooled");
+                            let x = job.xs[p];
+                            let result = catch_unwind(AssertUnwindSafe(|| {
+                                job.workload.measure(m, x)
+                            }));
+                            let out = match result {
+                                Ok(v) => Ok(v),
+                                Err(e) => {
+                                    // a panicking measurement may leave the
+                                    // pooled machine inconsistent: discard it
+                                    pool.remove(&job.pool_key);
+                                    Err(panic_message(e.as_ref()))
+                                }
+                            };
+                            if tx.send((j, p, out)).is_err() {
+                                break;
+                            }
+                        }
+                    });
+                }
+                drop(tx);
+                for (j, p, r) in rx {
+                    match r {
+                        Ok(v) => values[j][p] = v,
+                        Err(msg) => {
+                            let job = &jobs[j];
+                            failures[j].push(format!(
+                                "{} [{} {}={}] panicked: {}",
+                                job.workload.series_name(),
+                                job.cfg.name,
+                                job.workload.axis(),
+                                job.xs[p],
+                                msg
+                            ));
+                        }
+                    }
+                }
+            });
+        }
+
+        jobs.iter()
+            .zip(values)
+            .zip(failures)
+            .map(|((job, vals), fails)| SweepOutcome {
+                arch: job.cfg.name.to_string(),
+                name: job.workload.series_name(),
+                axis: job.workload.axis(),
+                points: job.xs.iter().copied().zip(vals).collect(),
+                failures: fails,
+            })
+            .collect()
+    }
+
+    /// Convenience: run jobs and return only the series view, in job order.
+    pub fn run_series(&self, jobs: &[SweepJob]) -> Vec<Option<Series>> {
+        self.run(jobs).iter().map(|o| o.series()).collect()
+    }
+}
+
+impl Default for SweepExecutor {
+    fn default() -> Self {
+        SweepExecutor::with_default_threads()
+    }
+}
+
+/// Best-effort rendering of a caught panic payload (shared with
+/// [`crate::coordinator::try_scatter`]).
+pub(crate) fn panic_message(e: &(dyn std::any::Any + Send)) -> String {
+    e.downcast_ref::<String>()
+        .cloned()
+        .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "<non-string panic>".to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+    use crate::atomics::OpKind;
+    use crate::bench::latency::LatencyBench;
+    use crate::bench::placement::{PrepLocality, PrepState};
+    use crate::sweep::workload::Workload;
+    use std::sync::Arc;
+
+    #[test]
+    fn outcomes_preserve_job_order() {
+        let cfg = arch::haswell();
+        let jobs: Vec<SweepJob> = [OpKind::Read, OpKind::Cas, OpKind::Faa]
+            .into_iter()
+            .map(|op| {
+                SweepJob::sized(
+                    &cfg,
+                    Arc::new(LatencyBench::new(op, PrepState::M, PrepLocality::Local)),
+                    &[4096, 8192],
+                )
+            })
+            .collect();
+        let out = SweepExecutor::new(3).run(&jobs);
+        assert_eq!(out.len(), 3);
+        assert!(out[0].name.starts_with("read"));
+        assert!(out[1].name.starts_with("CAS"));
+        assert!(out[2].name.starts_with("FAA"));
+        for o in &out {
+            assert_eq!(o.points.len(), 2);
+            assert!(o.points.iter().all(|(_, v)| v.is_some()), "{:?}", o);
+            assert!(o.failures.is_empty());
+        }
+    }
+
+    #[test]
+    fn unavailable_series_yields_none_points() {
+        let cfg = arch::haswell();
+        let jobs = vec![SweepJob::sized(
+            &cfg,
+            Arc::new(LatencyBench::new(OpKind::Cas, PrepState::E, PrepLocality::OtherSocket)),
+            &[4096],
+        )];
+        let out = SweepExecutor::new(2).run(&jobs);
+        assert!(out[0].series().is_none());
+        assert!(out[0].failures.is_empty(), "unavailable is not a failure");
+    }
+
+    struct Exploder;
+
+    impl Workload for Exploder {
+        fn series_name(&self) -> String {
+            "exploder".into()
+        }
+
+        fn measure(&self, _m: &mut Machine, x: u64) -> Option<f64> {
+            panic!("boom at {x}");
+        }
+    }
+
+    #[test]
+    fn panicking_item_reported_and_rest_drained() {
+        let cfg = arch::haswell();
+        let jobs = vec![
+            SweepJob::sized(&cfg, Arc::new(Exploder), &[4096, 8192]),
+            SweepJob::sized(
+                &cfg,
+                Arc::new(LatencyBench::new(OpKind::Faa, PrepState::M, PrepLocality::Local)),
+                &[4096, 8192],
+            ),
+        ];
+        let out = SweepExecutor::new(2).run(&jobs);
+        assert_eq!(out[0].failures.len(), 2);
+        assert!(out[0].failures[0].contains("exploder"));
+        assert!(out[0].failures[0].contains("Haswell"));
+        assert!(out[0].failures[0].contains("boom"));
+        // the healthy job still completed every point
+        assert!(out[1].series().is_some());
+        assert!(out[1].failures.is_empty());
+    }
+
+    #[test]
+    fn empty_job_list_is_fine() {
+        assert!(SweepExecutor::new(2).run(&[]).is_empty());
+    }
+}

@@ -1,0 +1,50 @@
+//! The sweep subsystem: one declarative scenario layer and one parallel
+//! executor for the paper's cartesian measurement campaign
+//! ({architecture} × {op} × {coherence state} × {locality} × {buffer size},
+//! §2.1/§3) — and for every future scenario (DESIGN.md §3).
+//!
+//! * [`Workload`] — the trait every bench family implements: name one
+//!   series, measure one sweep point on a fresh machine. All six families
+//!   (latency, bandwidth, contention, operand, unaligned, mechanism
+//!   ablation) go through it.
+//! * [`SweepPlan`] — expands a declarative grid into [`SweepJob`]s,
+//!   filtering states/localities the architecture cannot realize.
+//! * [`SweepExecutor`] — a self-balancing thread pool (std::thread +
+//!   channels, no external deps): workers steal the next work item from a
+//!   shared queue, keep a per-architecture [`Machine`](crate::sim::Machine)
+//!   pool (reset-and-reuse instead of per-point allocation), isolate
+//!   panics to the failing item, and return results in deterministic input
+//!   order regardless of thread count.
+
+pub mod executor;
+pub mod plan;
+pub mod workload;
+
+pub use executor::{SweepExecutor, SweepOutcome};
+pub use plan::{SweepJob, SweepKind, SweepPlan};
+pub use workload::{
+    ContentionWorkload, MechanismVariant, TwoOperandCas, UnalignedChase, Workload,
+};
+
+/// Worker-thread count: `SWEEP_THREADS` if set, else every available core.
+pub fn default_threads() -> usize {
+    std::env::var("SWEEP_THREADS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,174 @@
+//! Declarative sweep grids. A [`SweepPlan`] names the axes of a campaign;
+//! [`SweepPlan::expand`] turns it into concrete [`SweepJob`]s, dropping the
+//! combinations an architecture cannot realize (the O state on MESIF parts,
+//! cross-socket localities on single-socket parts) — the same filtering the
+//! hand-rolled loops used to repeat per call site.
+
+use crate::atomics::OpKind;
+use crate::bench::bandwidth::BandwidthBench;
+use crate::bench::latency::LatencyBench;
+use crate::bench::placement::{PrepLocality, PrepState};
+use crate::sim::MachineConfig;
+use crate::sweep::workload::Workload;
+use std::sync::Arc;
+
+/// One unit of schedulable work: a workload swept over `xs` on `cfg`.
+/// Each (job, x) pair is an independent work item for the executor.
+#[derive(Clone)]
+pub struct SweepJob {
+    pub cfg: MachineConfig,
+    /// Key of the executor's per-worker machine pool. Jobs that share a key
+    /// share (reset) machines, so two configurations may only share a key
+    /// if they are identical.
+    pub pool_key: String,
+    pub workload: Arc<dyn Workload>,
+    /// Sweep coordinates, in presentation order.
+    pub xs: Vec<u64>,
+}
+
+impl SweepJob {
+    pub fn new(
+        cfg: &MachineConfig,
+        workload: Arc<dyn Workload>,
+        xs: impl IntoIterator<Item = u64>,
+    ) -> SweepJob {
+        SweepJob {
+            cfg: cfg.clone(),
+            pool_key: cfg.name.to_string(),
+            workload,
+            xs: xs.into_iter().collect(),
+        }
+    }
+
+    /// A job over a buffer-size axis.
+    pub fn sized(cfg: &MachineConfig, workload: Arc<dyn Workload>, sizes: &[usize]) -> SweepJob {
+        SweepJob::new(cfg, workload, sizes.iter().map(|&s| s as u64))
+    }
+
+    /// Override the machine-pool key — required when `cfg` is a variant of
+    /// a named architecture (e.g. a mechanism-ablation configuration).
+    pub fn with_pool_key(mut self, key: impl Into<String>) -> SweepJob {
+        self.pool_key = key.into();
+        self
+    }
+}
+
+/// Which bench family a [`SweepPlan`] expands to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SweepKind {
+    Latency,
+    Bandwidth,
+}
+
+/// A declarative cartesian sweep grid.
+#[derive(Clone)]
+pub struct SweepPlan {
+    pub kind: SweepKind,
+    pub arches: Vec<MachineConfig>,
+    pub ops: Vec<OpKind>,
+    pub states: Vec<PrepState>,
+    /// `None` = every locality the architecture offers.
+    pub localities: Option<Vec<PrepLocality>>,
+    pub sizes: Vec<usize>,
+}
+
+impl SweepPlan {
+    /// The paper's full latency campaign over the given architectures.
+    pub fn latency(arches: Vec<MachineConfig>, sizes: Vec<usize>) -> SweepPlan {
+        SweepPlan {
+            kind: SweepKind::Latency,
+            arches,
+            ops: vec![OpKind::Read, OpKind::Cas, OpKind::Faa, OpKind::Swp],
+            states: vec![PrepState::E, PrepState::M, PrepState::S, PrepState::O],
+            localities: None,
+            sizes,
+        }
+    }
+
+    /// The paper's bandwidth campaign over the given architectures.
+    pub fn bandwidth(arches: Vec<MachineConfig>, sizes: Vec<usize>) -> SweepPlan {
+        SweepPlan {
+            kind: SweepKind::Bandwidth,
+            arches,
+            ops: vec![OpKind::Read, OpKind::Write, OpKind::Cas, OpKind::Faa, OpKind::Swp],
+            states: vec![PrepState::E, PrepState::M, PrepState::S],
+            localities: Some(vec![PrepLocality::Local, PrepLocality::OnChip]),
+            sizes,
+        }
+    }
+
+    /// Expand the grid into jobs, one per realizable
+    /// (arch, op, state, locality) series.
+    pub fn expand(&self) -> Vec<SweepJob> {
+        let mut jobs = Vec::new();
+        for cfg in &self.arches {
+            let available = PrepLocality::available(&cfg.topology);
+            for &op in &self.ops {
+                for &state in &self.states {
+                    // O only exists on dirty-sharing protocols (MOESI/GOLS).
+                    if state == PrepState::O && !cfg.protocol.has_owned() {
+                        continue;
+                    }
+                    let localities: Vec<PrepLocality> = match &self.localities {
+                        Some(l) => l.iter().copied().filter(|x| available.contains(x)).collect(),
+                        None => available.clone(),
+                    };
+                    for locality in localities {
+                        let workload: Arc<dyn Workload> = match self.kind {
+                            SweepKind::Latency => {
+                                Arc::new(LatencyBench::new(op, state, locality))
+                            }
+                            SweepKind::Bandwidth => {
+                                Arc::new(BandwidthBench::new(op, state, locality))
+                            }
+                        };
+                        jobs.push(SweepJob::sized(cfg, workload, &self.sizes));
+                    }
+                }
+            }
+        }
+        jobs
+    }
+
+    /// Total number of work items (points) the plan expands to.
+    pub fn n_points(&self) -> usize {
+        self.expand().iter().map(|j| j.xs.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    #[test]
+    fn expand_filters_o_state_on_mesif() {
+        let plan = SweepPlan::latency(vec![arch::haswell()], vec![4096]);
+        let jobs = plan.expand();
+        // 4 ops x 3 states (no O) x 2 localities (local, on chip)
+        assert_eq!(jobs.len(), 4 * 3 * 2);
+        assert!(jobs.iter().all(|j| j.pool_key == "Haswell"));
+    }
+
+    #[test]
+    fn expand_keeps_o_state_on_moesi() {
+        let plan = SweepPlan::latency(vec![arch::bulldozer()], vec![4096]);
+        // 4 ops x 4 states x 5 localities
+        assert_eq!(plan.expand().len(), 4 * 4 * 5);
+    }
+
+    #[test]
+    fn explicit_localities_filtered_by_availability() {
+        let mut plan = SweepPlan::latency(vec![arch::haswell()], vec![4096]);
+        plan.localities = Some(vec![PrepLocality::Local, PrepLocality::OtherSocket]);
+        let jobs = plan.expand();
+        // OtherSocket impossible on single-socket Haswell
+        assert_eq!(jobs.len(), 4 * 3);
+    }
+
+    #[test]
+    fn n_points_counts_sizes() {
+        let plan = SweepPlan::latency(vec![arch::haswell()], vec![4096, 8192]);
+        assert_eq!(plan.n_points(), 4 * 3 * 2 * 2);
+    }
+}

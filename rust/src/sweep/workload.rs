@@ -1,0 +1,193 @@
+//! The [`Workload`] trait and its implementations for all six bench
+//! families. A workload describes *one series* of a sweep; the executor
+//! supplies a fresh [`Machine`] per point, so `measure` never allocates a
+//! machine itself — adding a new scenario is a ~20-line impl, not a new
+//! module.
+
+use crate::atomics::OpKind;
+use crate::bench::bandwidth::BandwidthBench;
+use crate::bench::contention::OPS_PER_THREAD;
+use crate::bench::latency::LatencyBench;
+use crate::bench::operand::two_operand_cas_on;
+use crate::bench::placement::{PrepLocality, PrepState};
+use crate::bench::unaligned::unaligned_latency_on;
+use crate::sim::engine::Machine;
+use crate::sim::event::run_contention;
+
+/// One sweep series: a name plus a point-measurement function.
+///
+/// `x` is the sweep coordinate — buffer bytes for the size sweeps, thread
+/// count for contention. The machine handed to `measure` is always in the
+/// fresh post-[`Machine::new`]/[`Machine::reset`] state; `None` means the
+/// point is not realizable on the machine's architecture (e.g. a
+/// cross-socket locality on a single-socket part).
+pub trait Workload: Send + Sync {
+    /// Series name, as it appears in figure legends and CSV headers.
+    fn series_name(&self) -> String;
+
+    /// What the sweep coordinate means ("buffer_bytes" or "threads").
+    fn axis(&self) -> &'static str {
+        "buffer_bytes"
+    }
+
+    /// Whether `measure` mutates (and therefore needs a freshly reset)
+    /// machine. Workloads that only read `m.cfg` — the contention event
+    /// engine — return `false`, letting the executor skip the per-point
+    /// reset; such workloads must not rely on the machine's cache state.
+    fn needs_machine(&self) -> bool {
+        true
+    }
+
+    /// Measure one point at coordinate `x`.
+    fn measure(&self, m: &mut Machine, x: u64) -> Option<f64>;
+}
+
+/// Latency pointer-chase (§3, Figures 2–4, 6, 11–13).
+impl Workload for LatencyBench {
+    fn series_name(&self) -> String {
+        LatencyBench::series_name(self)
+    }
+
+    fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
+        self.run_on(m, x as usize)
+    }
+}
+
+/// Sequential bandwidth sweep (§5.2, Figures 5, 15).
+impl Workload for BandwidthBench {
+    fn series_name(&self) -> String {
+        BandwidthBench::series_name(self)
+    }
+
+    fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
+        self.run_on(m, x as usize)
+    }
+}
+
+/// Same-line contention (§5.4, Fig. 8a–c): `x` is the thread count.
+#[derive(Debug, Clone, Copy)]
+pub struct ContentionWorkload {
+    pub op: OpKind,
+    pub ops_per_thread: usize,
+}
+
+impl ContentionWorkload {
+    pub fn new(op: OpKind) -> ContentionWorkload {
+        ContentionWorkload { op, ops_per_thread: OPS_PER_THREAD }
+    }
+}
+
+impl Workload for ContentionWorkload {
+    fn series_name(&self) -> String {
+        format!("{} contended", self.op.label())
+    }
+
+    fn axis(&self) -> &'static str {
+        "threads"
+    }
+
+    fn needs_machine(&self) -> bool {
+        false // run_contention reads only m.cfg; it simulates internally
+    }
+
+    fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
+        let threads = x as usize;
+        if threads < 1 || threads > m.cfg.topology.n_cores {
+            return None;
+        }
+        Some(run_contention(&m.cfg, threads, self.op, self.ops_per_thread).bandwidth_gbs)
+    }
+}
+
+/// Two-fetched-operand CAS (§5.5, Fig. 8d).
+#[derive(Debug, Clone, Copy)]
+pub struct TwoOperandCas {
+    pub state: PrepState,
+    pub locality: PrepLocality,
+}
+
+impl Workload for TwoOperandCas {
+    fn series_name(&self) -> String {
+        format!("CAS 2-operand {} {}", self.state.label(), self.locality.label())
+    }
+
+    fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
+        two_operand_cas_on(m, self.state, self.locality, x as usize)
+    }
+}
+
+/// Line-spanning operands (§5.7, Figures 10a, 14).
+#[derive(Debug, Clone, Copy)]
+pub struct UnalignedChase {
+    pub op: OpKind,
+    pub state: PrepState,
+    pub locality: PrepLocality,
+}
+
+impl Workload for UnalignedChase {
+    fn series_name(&self) -> String {
+        format!("{} unaligned {}", self.op.label(), self.locality.label())
+    }
+
+    fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
+        unaligned_latency_on(m, self.op, self.state, self.locality, x as usize)
+    }
+}
+
+/// A mechanism-ablation variant (§5.6, Fig. 9): an inner bandwidth bench
+/// under a relabeled series. The *variant configuration* (prefetchers /
+/// frequency mechanisms toggled) travels in the [`super::SweepJob`]'s
+/// `cfg`, so the same workload measures any variant.
+#[derive(Debug, Clone)]
+pub struct MechanismVariant {
+    pub label: String,
+    pub bench: BandwidthBench,
+}
+
+impl MechanismVariant {
+    pub fn new(label: impl Into<String>, bench: BandwidthBench) -> MechanismVariant {
+        MechanismVariant { label: label.into(), bench }
+    }
+}
+
+impl Workload for MechanismVariant {
+    fn series_name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
+        self.bench.run_on(m, x as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    #[test]
+    fn latency_workload_matches_run_once() {
+        let cfg = arch::haswell();
+        let bench = LatencyBench::new(OpKind::Faa, PrepState::M, PrepLocality::Local);
+        let direct = bench.run_once(&cfg, 16 << 10).unwrap();
+        let mut m = Machine::new(cfg);
+        let via_trait = Workload::measure(&bench, &mut m, 16 << 10).unwrap();
+        assert_eq!(direct.to_bits(), via_trait.to_bits());
+    }
+
+    #[test]
+    fn contention_workload_rejects_impossible_thread_counts() {
+        let mut m = Machine::new(arch::haswell()); // 4 cores
+        let w = ContentionWorkload::new(OpKind::Faa);
+        assert!(w.measure(&mut m, 4).is_some());
+        assert!(w.measure(&mut m, 5).is_none());
+        assert!(w.measure(&mut m, 0).is_none());
+    }
+
+    #[test]
+    fn unavailable_locality_measures_none() {
+        let mut m = Machine::new(arch::haswell());
+        let w = LatencyBench::new(OpKind::Cas, PrepState::E, PrepLocality::OtherSocket);
+        assert!(Workload::measure(&w, &mut m, 4096).is_none());
+    }
+}

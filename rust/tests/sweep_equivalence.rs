@@ -1,0 +1,119 @@
+//! Golden equivalence tests for the sweep subsystem: the parallel
+//! `Workload`-based executor must reproduce *byte-identical* `Series`
+//! values to the historical per-module serial loops (which allocate a fresh
+//! `Machine` per point), and its results must not depend on the thread
+//! count. These tests are the contract that lets every figure and dataset
+//! run through the executor without changing a single reported number.
+
+use atomics_repro::arch;
+use atomics_repro::atomics::OpKind;
+use atomics_repro::bench::bandwidth::BandwidthBench;
+use atomics_repro::bench::latency::LatencyBench;
+use atomics_repro::bench::placement::{PrepLocality, PrepState};
+use atomics_repro::coordinator::dataset::collect_latency_dataset;
+use atomics_repro::sweep::{SweepExecutor, SweepJob, SweepPlan};
+use std::sync::Arc;
+
+const SIZES: [usize; 3] = [4 << 10, 64 << 10, 1 << 20];
+
+fn assert_series_bits_equal(
+    golden: &atomics_repro::bench::Series,
+    got: &atomics_repro::bench::Series,
+    context: &str,
+) {
+    assert_eq!(golden.points.len(), got.points.len(), "{context}: point count");
+    for (a, b) in golden.points.iter().zip(&got.points) {
+        assert_eq!(a.buffer_bytes, b.buffer_bytes, "{context}: x coordinate");
+        assert_eq!(
+            a.value.to_bits(),
+            b.value.to_bits(),
+            "{context} at {} bytes: serial {} vs executor {}",
+            a.buffer_bytes,
+            a.value,
+            b.value
+        );
+    }
+}
+
+/// The executor (reset-and-reuse machines, parallel workers) reproduces the
+/// serial per-point-fresh-machine latency sweep bit-for-bit on all four
+/// architectures.
+#[test]
+fn latency_sweep_identical_to_serial_loops_on_all_arches() {
+    for cfg in arch::all() {
+        let bench = LatencyBench::new(OpKind::Faa, PrepState::M, PrepLocality::Local);
+        let golden = bench.sweep(&cfg, &SIZES).expect("local always available");
+        let jobs = vec![SweepJob::sized(&cfg, Arc::new(bench), &SIZES)];
+        let out = SweepExecutor::new(4).run(&jobs);
+        let series = out[0].series().expect("local always available");
+        assert_series_bits_equal(&golden, &series, cfg.name);
+    }
+}
+
+/// Same for a bandwidth sweep (store-buffer paths, clock-delta measurement).
+#[test]
+fn bandwidth_sweep_identical_to_serial_loops_on_all_arches() {
+    for cfg in arch::all() {
+        let bench = BandwidthBench::new(OpKind::Cas, PrepState::M, PrepLocality::Local);
+        let golden = bench.sweep(&cfg, &SIZES).expect("local always available");
+        let jobs = vec![SweepJob::sized(&cfg, Arc::new(bench), &SIZES)];
+        let out = SweepExecutor::new(4).run(&jobs);
+        let series = out[0].series().expect("local always available");
+        assert_series_bits_equal(&golden, &series, cfg.name);
+    }
+}
+
+/// A shared-state sweep exercises the invalidation machinery and the
+/// multi-core preparation phase; it must survive the round trip too.
+#[test]
+fn shared_state_latency_sweep_identical() {
+    let cfg = arch::bulldozer();
+    let bench = LatencyBench::new(OpKind::Cas, PrepState::S, PrepLocality::SharedL2);
+    let golden = bench.sweep(&cfg, &SIZES).expect("shared L2 exists on Bulldozer");
+    let out = SweepExecutor::new(8)
+        .run(&[SweepJob::sized(&cfg, Arc::new(bench), &SIZES)]);
+    assert_series_bits_equal(&golden, &out[0].series().unwrap(), "Bulldozer S/SharedL2");
+}
+
+/// Determinism across thread counts: a full latency grid produces the same
+/// bits with 1 worker and with 8 workers.
+#[test]
+fn thread_count_does_not_change_results() {
+    let plan = SweepPlan::latency(vec![arch::haswell(), arch::xeonphi()], vec![4 << 10, 256 << 10]);
+    let jobs = plan.expand();
+    let single = SweepExecutor::new(1).run(&jobs);
+    let parallel = SweepExecutor::new(8).run(&jobs);
+    assert_eq!(single.len(), parallel.len());
+    for (a, b) in single.iter().zip(&parallel) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.points.len(), b.points.len());
+        for ((xa, va), (xb, vb)) in a.points.iter().zip(&b.points) {
+            assert_eq!(xa, xb);
+            assert_eq!(
+                va.map(f64::to_bits),
+                vb.map(f64::to_bits),
+                "{} [{}] at x={}",
+                a.name,
+                a.arch,
+                xa
+            );
+        }
+    }
+}
+
+/// The executor-backed dataset collection produces the same rows, in the
+/// same order, as two consecutive invocations of itself (guarding against
+/// any pool-state leakage between runs).
+#[test]
+fn dataset_collection_is_reproducible() {
+    let cfg = arch::haswell();
+    let sizes = [16 << 10, 2 << 20];
+    let a = collect_latency_dataset(&cfg, &sizes);
+    let b = collect_latency_dataset(&cfg, &sizes);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.series, y.series);
+        assert_eq!(x.buffer_bytes, y.buffer_bytes);
+        assert_eq!(x.measured_ns.to_bits(), y.measured_ns.to_bits());
+    }
+}
