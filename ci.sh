@@ -11,13 +11,23 @@ else
     echo "(rustfmt not installed — skipping format check)"
 fi
 
-echo "== cargo build --release =="
+echo "== cargo build --release (incl. examples) =="
 cargo build --release
+cargo build --release --examples
 
-echo "== cargo test -q =="
-cargo test -q
+echo "== cargo test -q (unit + integration) =="
+cargo test -q --lib --bins --tests
+
+echo "== cargo doc --no-deps (warnings denied) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p atomics-repro --quiet
+
+echo "== doc-tests =="
+cargo test -q --doc -p atomics-repro
 
 echo "== smoke: repro sweep --threads 2 (reduced grid) =="
 ./target/release/repro sweep --threads 2 --fast --family latency --arch haswell
+
+echo "== smoke: repro contend (machine-accurate Fig. 8 path) =="
+./target/release/repro contend --arch haswell --op cas --threads 2 --ops 200 --stats
 
 echo "CI OK"

@@ -1,13 +1,22 @@
-//! Quickstart: measure the latency of CAS vs a plain read on the simulated
-//! Haswell testbed, across the memory hierarchy — the paper's Figure 2 in
-//! five lines of API.
+//! Quickstart: the paper's two headline comparisons in a dozen lines of
+//! the post-sweep-refactor API —
+//!
+//! 1. latency of CAS vs a plain read across the memory hierarchy on the
+//!    simulated Haswell testbed (Fig. 2), via `LatencyBench::run_once`
+//!    (the same entry point the `sweep::Workload` trait and the parallel
+//!    `SweepExecutor` drive for the full figure grids), and
+//! 2. contended same-line FAA (Fig. 8) through the machine-accurate
+//!    multi-core scheduler `sim::multicore`, which also says *why*
+//!    bandwidth collapses (line ping-pong, arbitration stalls).
 //!
 //! Run: `cargo run --release --example quickstart`
 
 use atomics_repro::arch;
 use atomics_repro::atomics::OpKind;
+use atomics_repro::bench::contention::{run_model, ContentionModel};
 use atomics_repro::bench::latency::LatencyBench;
 use atomics_repro::bench::placement::{PrepLocality, PrepState};
+use atomics_repro::sim::Machine;
 
 fn main() {
     let cfg = arch::haswell();
@@ -29,4 +38,19 @@ fn main() {
         );
     }
     println!("\nThe gap is E(CAS) ≈ {:.1} ns at every level — the paper's Eq. 1.", cfg.timing.e_cas);
+
+    println!("\nContended FAA on one line (machine-accurate engine, §5.4)\n");
+    println!("{:>7} {:>8} {:>9} {:>12}", "threads", "GB/s", "hops/op", "stall ns/op");
+    let mut m = Machine::new(cfg);
+    for threads in [1usize, 2, 4] {
+        let p = run_model(&mut m, ContentionModel::MachineAccurate, threads, OpKind::Faa, 2000);
+        println!(
+            "{:>7} {:>8.3} {:>9.3} {:>12.1}",
+            threads,
+            p.bandwidth_gbs,
+            p.total_line_hops() as f64 / p.total_ops() as f64,
+            p.mean_stall_ns()
+        );
+    }
+    println!("\nBandwidth falls as the line ping-pongs — `repro contend --stats` for more.");
 }

@@ -1,13 +1,17 @@
 //! End-to-end sweep-executor benchmark: times the full figure-style latency
-//! grid single-threaded vs. with all cores, prints the speedup, and writes
-//! `BENCH_sweep.json` so future PRs can track sweep throughput. Uses the
-//! in-tree harness (criterion is not vendored offline). `BENCH_FAST=1`
-//! reduces samples.
+//! grid single-threaded vs. with all cores, plus the machine-accurate
+//! contention grid (Fig. 8), prints the speedups, and writes
+//! `BENCH_sweep.json` so future PRs can track sweep and contend throughput.
+//! Uses the in-tree harness (criterion is not vendored offline).
+//! `BENCH_FAST=1` reduces samples.
 
 use atomics_repro::arch;
+use atomics_repro::atomics::OpKind;
+use atomics_repro::bench::contention::paper_thread_counts;
 use atomics_repro::harness::{black_box, Bencher};
-use atomics_repro::sweep::{default_threads, SweepExecutor, SweepPlan};
+use atomics_repro::sweep::{default_threads, ContentionWorkload, SweepExecutor, SweepJob, SweepPlan};
 use std::io::Write;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
@@ -52,17 +56,43 @@ fn main() {
         black_box(SweepExecutor::new(threads).run(&jobs));
     });
 
+    // Machine-accurate contention grid (Fig. 8): every architecture, the
+    // three plotted ops, the paper's thread counts.
+    let contend_jobs: Vec<SweepJob> = arch::all()
+        .into_iter()
+        .flat_map(|cfg| {
+            let xs: Vec<u64> =
+                paper_thread_counts(&cfg).into_iter().map(|n| n as u64).collect();
+            [OpKind::Cas, OpKind::Faa, OpKind::Write].map(move |op| {
+                SweepJob::new(&cfg, Arc::new(ContentionWorkload::new(op)), xs.iter().copied())
+            })
+        })
+        .collect();
+    let contend_points: usize = contend_jobs.iter().map(|j| j.xs.len()).sum();
+    let t0 = Instant::now();
+    let contend_out = SweepExecutor::new(threads).run(&contend_jobs);
+    let contend_ms = t0.elapsed().as_secs_f64() * 1e3;
+    black_box(&contend_out);
+    println!(
+        "  contend grid     {contend_ms:>10.1} ms   ({contend_points} points, {:.0} points/s)",
+        contend_points as f64 / (contend_ms / 1e3).max(1e-9)
+    );
+
     let json = format!(
         "{{\"bench\":\"sweep\",\"series\":{},\"points\":{},\"threads\":{},\
          \"single_ms\":{:.1},\"parallel_ms\":{:.1},\"speedup\":{:.3},\
-         \"points_per_sec_parallel\":{:.1}}}\n",
+         \"points_per_sec_parallel\":{:.1},\
+         \"contend_points\":{},\"contend_ms\":{:.1},\"contend_points_per_sec\":{:.1}}}\n",
         jobs.len(),
         n_points,
         threads,
         single_ms,
         parallel_ms,
         speedup,
-        n_points as f64 / (parallel_ms / 1e3).max(1e-9)
+        n_points as f64 / (parallel_ms / 1e3).max(1e-9),
+        contend_points,
+        contend_ms,
+        contend_points as f64 / (contend_ms / 1e3).max(1e-9)
     );
     match std::fs::File::create("BENCH_sweep.json").and_then(|mut f| f.write_all(json.as_bytes()))
     {

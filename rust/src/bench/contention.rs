@@ -1,26 +1,171 @@
 //! Contention benchmark wrapper (Fig. 8a–c, §5.4): thread-count sweeps of
-//! same-line atomics/writes through the discrete-event engine.
+//! same-line atomics/writes.
+//!
+//! Two engines implement the benchmark, selectable via [`ContentionModel`]:
+//!
+//! * [`ContentionModel::MachineAccurate`] (the default) — the multi-core
+//!   scheduler in [`crate::sim::multicore`]: N per-core instruction streams
+//!   interleaved over one shared [`Machine`], every operation priced by the
+//!   real cache/coherence/write-buffer engine, with per-thread
+//!   [`ContentionStats`] (line hops, invalidations, stalls, CAS failures).
+//! * [`ContentionModel::Analytic`] — the closed-form event model in
+//!   [`crate::sim::event`], kept for cross-validation: the two must agree
+//!   in shape (monotone bandwidth decline for atomics, write-combining
+//!   scaling on the Intel parts), which the `contention_engine` integration
+//!   tests pin on all four architectures.
 
 use crate::atomics::OpKind;
-use crate::sim::event::{run_contention, ContentionResult};
-use crate::sim::MachineConfig;
+use crate::sim::event::run_contention as run_analytic;
+pub use crate::sim::event::ContentionResult;
+use crate::sim::multicore::{agg, run_contention as run_machine, ContentionStats};
+use crate::sim::{Machine, MachineConfig};
 
 /// Per-thread operation count used by the figure sweeps (large enough that
 /// the warm-up transient is negligible).
 pub const OPS_PER_THREAD: usize = 2000;
 
-/// Sweep thread counts 1..=max for one operation.
-pub fn thread_sweep(cfg: &MachineConfig, op: OpKind, max_threads: usize) -> Vec<ContentionResult> {
+/// Which contention engine to run (§5.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContentionModel {
+    /// Multi-core schedule over the real engine, with per-thread stats.
+    MachineAccurate,
+    /// The closed-form analytic event model (cross-validation baseline).
+    Analytic,
+}
+
+impl ContentionModel {
+    pub fn label(self) -> &'static str {
+        match self {
+            ContentionModel::MachineAccurate => "machine",
+            ContentionModel::Analytic => "analytic",
+        }
+    }
+
+    /// Parse a `--model` CLI value.
+    pub fn parse(s: &str) -> Option<ContentionModel> {
+        match s {
+            "machine" | "machine-accurate" => Some(ContentionModel::MachineAccurate),
+            "analytic" | "event" => Some(ContentionModel::Analytic),
+            _ => None,
+        }
+    }
+}
+
+/// One measured contention point, from either model.
+#[derive(Debug, Clone)]
+pub struct ContentionPoint {
+    pub threads: usize,
+    pub op: OpKind,
+    pub model: ContentionModel,
+    /// Aggregate bandwidth over all threads, GB/s (8-byte operands).
+    pub bandwidth_gbs: f64,
+    /// Mean visible per-op latency, ns.
+    pub mean_latency_ns: f64,
+    /// Virtual time from first issue to last completion, ns.
+    pub elapsed_ns: f64,
+    /// Per-thread coherence stats — empty for the analytic model, which
+    /// cannot attribute costs to threads.
+    pub per_thread: Vec<ContentionStats>,
+}
+
+impl ContentionPoint {
+    pub fn total_ops(&self) -> u64 {
+        agg::total_ops(&self.per_thread)
+    }
+
+    pub fn total_line_hops(&self) -> u64 {
+        agg::total_line_hops(&self.per_thread)
+    }
+
+    pub fn total_invalidations(&self) -> u64 {
+        agg::total_invalidations(&self.per_thread)
+    }
+
+    pub fn mean_stall_ns(&self) -> f64 {
+        agg::mean_stall_ns(&self.per_thread)
+    }
+
+    pub fn cas_failure_rate(&self) -> f64 {
+        agg::cas_failure_rate(&self.per_thread)
+    }
+}
+
+/// Run one contention point through the selected model. The machine is
+/// reset by the machine-accurate engine (fresh-machine semantics); the
+/// analytic engine reads only `m.cfg`.
+///
+/// Panics on `(Analytic, Read)`: the analytic engine has no shared-read
+/// path (it would serialize reads on line ownership, contradicting the
+/// machine model's replicate-and-scale reads) — reads are machine-model
+/// only.
+pub fn run_model(
+    m: &mut Machine,
+    model: ContentionModel,
+    threads: usize,
+    op: OpKind,
+    ops_per_thread: usize,
+) -> ContentionPoint {
+    assert!(
+        !(model == ContentionModel::Analytic && op == OpKind::Read),
+        "the analytic contention model has no shared-read path; use the machine model for reads"
+    );
+    match model {
+        ContentionModel::MachineAccurate => {
+            let r = run_machine(m, threads, op, ops_per_thread);
+            ContentionPoint {
+                threads,
+                op,
+                model,
+                bandwidth_gbs: r.bandwidth_gbs,
+                mean_latency_ns: r.mean_latency_ns,
+                elapsed_ns: r.elapsed_ns,
+                per_thread: r.per_thread,
+            }
+        }
+        ContentionModel::Analytic => {
+            let r = run_analytic(&m.cfg, threads, op, ops_per_thread);
+            // the analytic engine reports bandwidth over the whole run,
+            // so its elapsed time is total bytes / bandwidth by definition
+            let total_bytes = (threads * ops_per_thread) as f64 * 8.0;
+            ContentionPoint {
+                threads,
+                op,
+                model,
+                bandwidth_gbs: r.bandwidth_gbs,
+                mean_latency_ns: r.mean_latency_ns,
+                elapsed_ns: total_bytes / r.bandwidth_gbs.max(f64::MIN_POSITIVE),
+                per_thread: Vec::new(),
+            }
+        }
+    }
+}
+
+/// Sweep thread counts 1..=max (clamped to the core count) for one
+/// operation through the selected model. Deterministic across repeated
+/// runs: both engines are driven purely by virtual time.
+pub fn thread_sweep(
+    cfg: &MachineConfig,
+    op: OpKind,
+    max_threads: usize,
+    model: ContentionModel,
+) -> Vec<ContentionPoint> {
     let max = max_threads.min(cfg.topology.n_cores);
+    let mut m = Machine::new(cfg.clone());
     (1..=max)
-        .map(|t| run_contention(cfg, t, op, OPS_PER_THREAD))
+        .map(|t| run_model(&mut m, model, t, op, OPS_PER_THREAD))
         .collect()
 }
 
-/// The thread counts the paper plots (powers of two up to the core count).
+/// The thread counts the paper plots, derived from the machine's topology:
+/// every power of two below the core count, plus the full core count
+/// (which lands on 61 for the Xeon Phi and 32 for Bulldozer — Fig. 8's
+/// x-axes — without hardcoding either).
 pub fn paper_thread_counts(cfg: &MachineConfig) -> Vec<usize> {
-    let mut v = vec![1, 2, 4, 8, 16, 32, 61];
-    v.retain(|&t| t <= cfg.topology.n_cores);
+    let n = cfg.topology.n_cores;
+    let mut v: Vec<usize> = std::iter::successors(Some(1usize), |&t| t.checked_mul(2))
+        .take_while(|&t| t < n)
+        .collect();
+    v.push(n);
     v
 }
 
@@ -30,22 +175,59 @@ mod tests {
     use crate::arch;
 
     #[test]
-    fn sweep_lengths() {
+    fn sweep_lengths_clamped_to_cores() {
         let cfg = arch::haswell();
-        let r = thread_sweep(&cfg, OpKind::Faa, 8);
-        assert_eq!(r.len(), 4, "clamped to 4 cores");
+        for model in [ContentionModel::MachineAccurate, ContentionModel::Analytic] {
+            let r = thread_sweep(&cfg, OpKind::Faa, 8, model);
+            assert_eq!(r.len(), 4, "clamped to 4 cores ({})", model.label());
+        }
     }
 
     #[test]
-    fn paper_counts_clamped() {
+    fn paper_counts_derived_from_topology() {
         assert_eq!(paper_thread_counts(&arch::haswell()), vec![1, 2, 4]);
-        assert_eq!(paper_thread_counts(&arch::xeonphi()), vec![1, 2, 4, 8, 16, 32, 61]);
+        assert_eq!(paper_thread_counts(&arch::ivybridge()), vec![1, 2, 4, 8, 16, 24]);
+        assert_eq!(paper_thread_counts(&arch::bulldozer()), vec![1, 2, 4, 8, 16, 32]);
+        assert_eq!(
+            paper_thread_counts(&arch::xeonphi()),
+            vec![1, 2, 4, 8, 16, 32, 61]
+        );
     }
 
     #[test]
-    fn contended_atomics_below_uncontended() {
+    fn contended_atomics_below_uncontended_in_both_models() {
         let cfg = arch::ivybridge();
-        let sweep = thread_sweep(&cfg, OpKind::Cas, 12);
-        assert!(sweep[0].bandwidth_gbs > sweep[7].bandwidth_gbs);
+        for model in [ContentionModel::MachineAccurate, ContentionModel::Analytic] {
+            let sweep = thread_sweep(&cfg, OpKind::Cas, 8, model);
+            assert!(
+                sweep[0].bandwidth_gbs > sweep[7].bandwidth_gbs,
+                "{}: {} vs {}",
+                model.label(),
+                sweep[0].bandwidth_gbs,
+                sweep[7].bandwidth_gbs
+            );
+        }
+    }
+
+    #[test]
+    fn machine_model_carries_stats_analytic_does_not() {
+        let cfg = arch::haswell();
+        let mut m = Machine::new(cfg);
+        let mc = run_model(&mut m, ContentionModel::MachineAccurate, 4, OpKind::Faa, 200);
+        assert_eq!(mc.per_thread.len(), 4);
+        assert!(mc.total_line_hops() > 0);
+        let an = run_model(&mut m, ContentionModel::Analytic, 4, OpKind::Faa, 200);
+        assert!(an.per_thread.is_empty());
+        assert!(an.bandwidth_gbs > 0.0);
+    }
+
+    #[test]
+    fn model_parse_round_trip() {
+        assert_eq!(
+            ContentionModel::parse("machine"),
+            Some(ContentionModel::MachineAccurate)
+        );
+        assert_eq!(ContentionModel::parse("analytic"), Some(ContentionModel::Analytic));
+        assert_eq!(ContentionModel::parse("nope"), None);
     }
 }

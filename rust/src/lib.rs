@@ -8,7 +8,12 @@
 //! testbeds and validates an analytical latency/bandwidth model. None of
 //! that 2013–2015 hardware is available here, so the measurement substrate
 //! is a cache-coherence **simulator** ([`sim`]) configured per testbed
-//! ([`arch`]) — see `DESIGN.md` for the substitution argument. On top of it:
+//! ([`arch`]) — see `DESIGN.md` for the substitution argument. Contended
+//! workloads (Fig. 8) run through the machine-accurate multi-core scheduler
+//! in [`sim::multicore`], which interleaves per-core instruction streams
+//! over one shared machine and reports per-thread coherence stats; the
+//! closed-form model in [`sim::event`] stays available as the
+//! cross-validation baseline. On top of it:
 //!
 //! * [`bench`] — the paper's benchmarking methodology (§2.1, §3): latency
 //!   pointer-chasing, bandwidth sweeps, contention, operand width,
@@ -31,6 +36,43 @@
 //! * [`report`] — regenerates every table and figure of the paper.
 //! * [`harness`] — in-tree micro-benchmark harness (criterion is not
 //!   vendored in this offline environment).
+//!
+//! # Examples
+//!
+//! Measure one point of the paper's headline comparison — CAS vs a plain
+//! read on the simulated Haswell testbed:
+//!
+//! ```
+//! use atomics_repro::arch;
+//! use atomics_repro::atomics::OpKind;
+//! use atomics_repro::bench::latency::LatencyBench;
+//! use atomics_repro::bench::placement::{PrepLocality, PrepState};
+//!
+//! let cfg = arch::haswell();
+//! let read = LatencyBench::new(OpKind::Read, PrepState::M, PrepLocality::Local)
+//!     .run_once(&cfg, 16 << 10)
+//!     .unwrap();
+//! let cas = LatencyBench::new(OpKind::Cas, PrepState::M, PrepLocality::Local)
+//!     .run_once(&cfg, 16 << 10)
+//!     .unwrap();
+//! // §5.1.1: the atomic pays roughly E(CAS) over the read at every level
+//! assert!(cas > read);
+//! ```
+//!
+//! Run a contended thread sweep through the machine-accurate multi-core
+//! engine and inspect why bandwidth collapses:
+//!
+//! ```
+//! use atomics_repro::arch;
+//! use atomics_repro::atomics::OpKind;
+//! use atomics_repro::bench::contention::{thread_sweep, ContentionModel};
+//!
+//! let sweep = thread_sweep(&arch::haswell(), OpKind::Cas, 4,
+//!                          ContentionModel::MachineAccurate);
+//! assert!(sweep[0].bandwidth_gbs > sweep[3].bandwidth_gbs);
+//! assert!(sweep[3].total_line_hops() > 0, "the line ping-pongs");
+//! assert!(sweep[3].cas_failure_rate() > 0.0, "rivals make CAS fail");
+//! ```
 
 pub mod arch;
 pub mod atomics;

@@ -10,6 +10,11 @@
 //!   repro sweep [--threads N] [--json] [--arch NAME] [--family F]
 //!                                   run the full measurement grid through
 //!                                   the parallel sweep executor
+//!   repro contend --arch NAME [--op OP] [--threads N] [--ops N]
+//!                 [--model machine|analytic] [--stats]
+//!                                   contended same-line benchmark (Fig. 8)
+//!                                   through the machine-accurate multi-core
+//!                                   scheduler, with per-thread stats
 //!   repro validate                  model-vs-simulator NRMSE per series
 //!   repro fit [--arch NAME]         Table 2 fit via the PJRT fit_step
 //!   repro bfs [--scale N] [--threads N] [--arch NAME]
@@ -51,6 +56,7 @@ fn main() {
         Some("figure") => cmd_figure(&args),
         Some("all") => cmd_all(),
         Some("sweep") => cmd_sweep(&args),
+        Some("contend") => cmd_contend(&args),
         Some("validate") => cmd_validate(),
         Some("fit") => cmd_fit(&args),
         Some("bfs") => cmd_bfs(&args),
@@ -73,7 +79,7 @@ fn main() {
 fn usage() {
     eprintln!("repro — reproduction driver for 'Evaluating the Cost of Atomic Operations'");
     eprintln!(
-        "subcommands: table <n> | figure <id> | all | sweep | validate | fit | bfs | ablation | latency | info"
+        "subcommands: table <n> | figure <id> | all | sweep | contend | validate | fit | bfs | ablation | latency | info"
     );
     eprintln!("see README.md for details");
 }
@@ -244,6 +250,131 @@ fn cmd_sweep(args: &Args) -> i32 {
     }
 }
 
+/// Parse an `--op` CLI value (shared by `contend` and `latency`).
+fn parse_op(s: &str) -> Option<OpKind> {
+    match s {
+        "cas" => Some(OpKind::Cas),
+        "faa" => Some(OpKind::Faa),
+        "swp" => Some(OpKind::Swp),
+        "read" => Some(OpKind::Read),
+        "write" => Some(OpKind::Write),
+        _ => None,
+    }
+}
+
+fn cmd_contend(args: &Args) -> i32 {
+    use atomics_repro::bench::contention::{
+        paper_thread_counts, run_model, ContentionModel, OPS_PER_THREAD,
+    };
+
+    let arch_name = args.opt("arch").unwrap_or("ivybridge");
+    let Some(cfg) = arch::by_name(arch_name) else {
+        eprintln!("unknown arch '{arch_name}'");
+        return 2;
+    };
+    let op_name = args.opt("op").unwrap_or("faa");
+    let Some(op) = parse_op(op_name) else {
+        eprintln!("unknown op '{op_name}' (cas | faa | swp | read | write)");
+        return 2;
+    };
+    let Some(model) = ContentionModel::parse(args.opt("model").unwrap_or("machine")) else {
+        eprintln!("unknown model '{}' (machine | analytic)", args.opt("model").unwrap_or(""));
+        return 2;
+    };
+    if args.flag("stats") && model == ContentionModel::Analytic {
+        eprintln!("--stats requires --model machine (the analytic model has no per-thread stats)");
+        return 2;
+    }
+    if op == OpKind::Read && model == ContentionModel::Analytic {
+        eprintln!("--op read is machine-model only (the analytic engine has no shared-read path)");
+        return 2;
+    }
+    let ops_per_thread: usize = args.opt_parse("ops", OPS_PER_THREAD).max(1);
+    let counts: Vec<usize> = match args.opt("threads") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if (1..=cfg.topology.n_cores).contains(&n) => vec![n],
+            Ok(n) => {
+                eprintln!("--threads {n} outside 1..={} on {}", cfg.topology.n_cores, cfg.name);
+                return 2;
+            }
+            Err(_) => {
+                eprintln!("--threads wants a number");
+                return 2;
+            }
+        },
+        None => paper_thread_counts(&cfg),
+    };
+
+    let mut m = atomics_repro::sim::Machine::new(cfg.clone());
+    let mut t = Table::new(
+        format!(
+            "contend — {} {} ({} model, {} ops/thread)",
+            cfg.name,
+            op.label(),
+            model.label(),
+            ops_per_thread
+        ),
+        &["threads", "GB/s", "mean ns", "hops/op", "inv/op", "stall ns/op", "CAS fail %"],
+    );
+    let mut last = None;
+    for &n in &counts {
+        let p = run_model(&mut m, model, n, op, ops_per_thread);
+        if p.per_thread.is_empty() {
+            // analytic model: bandwidth + latency only
+            t.row(&[
+                n.to_string(),
+                format!("{:.3}", p.bandwidth_gbs),
+                format!("{:.1}", p.mean_latency_ns),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]);
+        } else {
+            let ops_total = p.total_ops().max(1) as f64;
+            t.row(&[
+                n.to_string(),
+                format!("{:.3}", p.bandwidth_gbs),
+                format!("{:.1}", p.mean_latency_ns),
+                format!("{:.3}", p.total_line_hops() as f64 / ops_total),
+                format!("{:.3}", p.total_invalidations() as f64 / ops_total),
+                format!("{:.1}", p.mean_stall_ns()),
+                format!("{:.1}", p.cas_failure_rate() * 100.0),
+            ]);
+        }
+        last = Some(p);
+    }
+    println!("{}", t.render());
+
+    if args.flag("stats") {
+        // counts is never empty and the analytic model was rejected above
+        let p = last.expect("at least one contention point ran");
+        let elapsed = p.elapsed_ns;
+        let mut d = Table::new(
+            format!("per-thread stats at {} threads", p.threads),
+            &["thread", "ops", "hops", "inv", "CAS fails", "stall ns", "mean ns", "Mops/s"],
+        );
+        const MAX_ROWS: usize = 16;
+        for s in p.per_thread.iter().take(MAX_ROWS) {
+            d.row(&[
+                s.core.to_string(),
+                s.ops.to_string(),
+                s.line_hops.to_string(),
+                s.invalidations.to_string(),
+                s.cas_failures.to_string(),
+                format!("{:.0}", s.stall_ns),
+                format!("{:.1}", s.mean_latency_ns()),
+                format!("{:.3}", s.achieved_ops_per_sec(elapsed) / 1e6),
+            ]);
+        }
+        println!("{}", d.render());
+        if p.per_thread.len() > MAX_ROWS {
+            println!("({} more threads elided)", p.per_thread.len() - MAX_ROWS);
+        }
+    }
+    0
+}
+
 fn cmd_validate() -> i32 {
     // NRMSE per (arch, state, locality) series — the §5 validation
     // protocol. Parallelism happens inside collect_latency_dataset (the
@@ -401,15 +532,13 @@ fn cmd_latency(args: &Args) -> i32 {
         eprintln!("unknown arch '{arch_name}'");
         return 2;
     };
-    let op = match args.opt("op").unwrap_or("cas") {
-        "cas" => OpKind::Cas,
-        "faa" => OpKind::Faa,
-        "swp" => OpKind::Swp,
-        "read" => OpKind::Read,
-        other => {
-            eprintln!("unknown op '{other}'");
+    let op_name = args.opt("op").unwrap_or("cas");
+    let op = match parse_op(op_name) {
+        Some(OpKind::Write) | None => {
+            eprintln!("unknown op '{op_name}' (cas | faa | swp | read)");
             return 2;
         }
+        Some(op) => op,
     };
     let state = match args.opt("state").unwrap_or("M") {
         "E" | "e" => PrepState::E,

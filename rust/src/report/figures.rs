@@ -295,18 +295,84 @@ pub fn figure7() -> String {
 }
 
 /// Fig. 8a–c: contended bandwidth on Ivy Bridge / Bulldozer / Xeon Phi.
+///
+/// The curves run through the machine-accurate multi-core scheduler
+/// ([`crate::sim::multicore`]) by default, with the closed-form analytic
+/// model alongside for cross-validation, plus a per-thread-count coherence
+/// stats table (line hops, invalidations, arbitration stalls, CAS failure
+/// rate) that the analytic model cannot produce.
 pub fn figure8() -> String {
+    use crate::bench::contention::{run_model, ContentionModel, ContentionPoint, OPS_PER_THREAD};
+
+    let ops = [OpKind::Cas, OpKind::Faa, OpKind::Write];
     let mut out = String::new();
     for cfg in [arch::ivybridge(), arch::bulldozer(), arch::xeonphi()] {
         let counts = paper_thread_counts(&cfg);
         let xs: Vec<u64> = counts.iter().map(|&n| n as u64).collect();
-        let jobs: Vec<SweepJob> = [OpKind::Cas, OpKind::Faa, OpKind::Write]
+
+        // The machine-accurate CAS series runs once, directly — it both
+        // fills the table's CAS column and supplies the per-thread stats
+        // (the Workload interface only returns the bandwidth scalar).
+        // Panic isolation matches the executor's: a failing point reports
+        // and the rest of the figure drains.
+        let cas_points: Vec<Option<ContentionPoint>> = {
+            let mut m = crate::sim::Machine::new(cfg.clone());
+            counts
+                .iter()
+                .map(|&n| {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        run_model(
+                            &mut m,
+                            ContentionModel::MachineAccurate,
+                            n,
+                            OpKind::Cas,
+                            OPS_PER_THREAD,
+                        )
+                    }));
+                    match r {
+                        Ok(p) => Some(p),
+                        Err(e) => {
+                            let msg = crate::sweep::executor::panic_message(e.as_ref());
+                            let line = format!(
+                                "!! sweep failure: CAS contended [{} threads={n}] panicked: {msg}\n",
+                                cfg.name
+                            );
+                            out.push_str(&line);
+                            eprint!("{line}");
+                            // a panicking run may leave the machine
+                            // inconsistent: replace it
+                            m = crate::sim::Machine::new(cfg.clone());
+                            None
+                        }
+                    }
+                })
+                .collect()
+        };
+
+        // Everything else goes through the executor: the remaining
+        // machine-accurate series, then the analytic baselines.
+        let mut jobs: Vec<SweepJob> = [OpKind::Faa, OpKind::Write]
             .into_iter()
             .map(|op| {
                 SweepJob::new(&cfg, Arc::new(ContentionWorkload::new(op)), xs.iter().copied())
             })
             .collect();
+        jobs.extend(ops.into_iter().map(|op| {
+            SweepJob::new(&cfg, Arc::new(ContentionWorkload::analytic(op)), xs.iter().copied())
+        }));
         let results = executor().run(&jobs);
+        // the column mapping below is positional — pin it to the series
+        // names so a reordering of the jobs list cannot mislabel columns
+        debug_assert_eq!(
+            results.iter().map(|o| o.name.as_str()).collect::<Vec<_>>(),
+            [
+                "FAA contended",
+                "write contended",
+                "CAS contended (analytic)",
+                "FAA contended (analytic)",
+                "write contended (analytic)"
+            ]
+        );
         for o in &results {
             for f in &o.failures {
                 out.push_str(&format!("!! sweep failure: {f}\n"));
@@ -315,29 +381,93 @@ pub fn figure8() -> String {
         }
 
         let mut t = Table::new(
-            format!("Figure 8 — {} contended bandwidth [GB/s] vs threads", cfg.name),
-            &["threads", "CAS", "FAA", "write"],
+            format!(
+                "Figure 8 — {} contended bandwidth [GB/s] vs threads (machine-accurate | analytic)",
+                cfg.name
+            ),
+            &["threads", "CAS", "FAA", "write", "CAS ana", "FAA ana", "write ana"],
         );
-        let mut csv = crate::util::csv::Csv::new(&["threads", "cas_gbs", "faa_gbs", "write_gbs"]);
+        let mut csv = crate::util::csv::Csv::new(&[
+            "threads",
+            "cas_gbs",
+            "faa_gbs",
+            "write_gbs",
+            "cas_analytic_gbs",
+            "faa_analytic_gbs",
+            "write_analytic_gbs",
+        ]);
         for (i, &n) in counts.iter().enumerate() {
-            let cas = results[0].points[i].1.unwrap_or(f64::NAN);
-            let faa = results[1].points[i].1.unwrap_or(f64::NAN);
-            let wr = results[2].points[i].1.unwrap_or(f64::NAN);
+            // columns: CAS (direct run above), then the 5 executor series
+            // (machine FAA/write, analytic CAS/FAA/write)
+            let mut v = vec![cas_points[i].as_ref().map_or(f64::NAN, |p| p.bandwidth_gbs)];
+            v.extend((0..5).map(|j| results[j].points[i].1.unwrap_or(f64::NAN)));
             t.row(&[
                 n.to_string(),
-                format!("{cas:.3}"),
-                format!("{faa:.3}"),
-                format!("{wr:.3}"),
+                format!("{:.3}", v[0]),
+                format!("{:.3}", v[1]),
+                format!("{:.3}", v[2]),
+                format!("{:.3}", v[3]),
+                format!("{:.3}", v[4]),
+                format!("{:.3}", v[5]),
             ]);
-            csv.row(&[n.to_string(), cas.to_string(), faa.to_string(), wr.to_string()]);
+            csv.row(&[
+                n.to_string(),
+                v[0].to_string(),
+                v[1].to_string(),
+                v[2].to_string(),
+                v[3].to_string(),
+                v[4].to_string(),
+                v[5].to_string(),
+            ]);
         }
         out.push_str(&t.render());
         out.push('\n');
-        let _ = csv.write(format!(
-            "{}/figure8_{}.csv",
-            crate::report::results_dir(),
-            cfg.name.to_lowercase().replace(' ', "_")
-        ));
+        let slug = cfg.name.to_lowercase().replace(' ', "_");
+        let _ = csv.write(format!("{}/figure8_{}.csv", crate::report::results_dir(), slug));
+
+        // Per-thread-count coherence stats (CAS — the op with failure
+        // semantics): what the machine-accurate engine adds over a number.
+        let mut st = Table::new(
+            format!("Figure 8 — {} per-thread coherence stats (CAS, machine-accurate)", cfg.name),
+            &["threads", "hops/op", "inv/op", "stall ns/op", "CAS fail %", "Mops/s"],
+        );
+        let mut stats_csv = crate::util::csv::Csv::new(&[
+            "threads",
+            "hops_per_op",
+            "inv_per_op",
+            "stall_ns_per_op",
+            "cas_fail_rate",
+            "mops_per_sec",
+        ]);
+        for (p, &n) in cas_points.iter().zip(&counts) {
+            let Some(p) = p else { continue };
+            let ops_total = p.total_ops().max(1) as f64;
+            let hops = p.total_line_hops() as f64 / ops_total;
+            let inv = p.total_invalidations() as f64 / ops_total;
+            let stall = p.mean_stall_ns();
+            let fail = p.cas_failure_rate();
+            let mops = p.bandwidth_gbs / 8.0 * 1e3; // 8B ops → Mops/s
+            st.row(&[
+                n.to_string(),
+                format!("{hops:.3}"),
+                format!("{inv:.3}"),
+                format!("{stall:.1}"),
+                format!("{:.1}", fail * 100.0),
+                format!("{mops:.2}"),
+            ]);
+            stats_csv.row(&[
+                n.to_string(),
+                hops.to_string(),
+                inv.to_string(),
+                stall.to_string(),
+                fail.to_string(),
+                mops.to_string(),
+            ]);
+        }
+        out.push_str(&st.render());
+        out.push('\n');
+        let _ = stats_csv
+            .write(format!("{}/figure8_{}_stats.csv", crate::report::results_dir(), slug));
     }
     out
 }
@@ -642,6 +772,11 @@ mod tests {
         assert!(s.contains("Ivy Bridge"));
         assert!(s.contains("Bulldozer"));
         assert!(s.contains("Xeon Phi"));
+        // machine-accurate + analytic cross-validation columns
+        assert!(s.contains("machine-accurate | analytic"), "{s}");
+        // per-thread coherence stats table
+        assert!(s.contains("CAS fail %"), "{s}");
+        assert!(s.contains("stall ns/op"), "{s}");
     }
 
     #[test]

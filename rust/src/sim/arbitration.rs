@@ -1,0 +1,120 @@
+//! Line-arbitration primitives shared by the two contention engines —
+//! the analytic model in [`crate::sim::event`] and the machine-accurate
+//! scheduler in [`crate::sim::multicore`]. The cross-validation contract
+//! requires the two to agree in shape, so the grant ordering (min-heap by
+//! request time, thread id tie-break) and the HT Assist same-die
+//! preference live here exactly once.
+
+use crate::sim::config::MachineConfig;
+use crate::sim::topology::Topology;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// Does this machine's line arbitration prefer same-die requesters?
+/// True for parts with an HT Assist probe filter spanning several dies
+/// (Bulldozer and its §6.2 ablation variants). Both engines key off this
+/// one predicate so the cross-validated pair cannot drift.
+pub(crate) fn prefers_same_die(cfg: &MachineConfig) -> bool {
+    cfg.ht_assist.is_some() && cfg.topology.n_dies() > 1
+}
+
+/// Bound on consecutive same-die grants under HT Assist arbitration —
+/// keeps remote dies from starving (§5.4).
+pub(crate) const MAX_LOCAL_BATCH: u32 = 4;
+
+/// A pending line request (min-heap by time, then thread id — the
+/// deterministic grant order).
+#[derive(Debug, PartialEq)]
+pub(crate) struct Request {
+    pub(crate) time: f64,
+    pub(crate) thread: usize,
+}
+
+impl Eq for Request {}
+
+impl Ord for Request {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by time (BinaryHeap is a max-heap)
+        other
+            .time
+            .partial_cmp(&self.time)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.thread.cmp(&self.thread))
+    }
+}
+
+impl PartialOrd for Request {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// HT Assist same-die preference: if `req` comes from a different die
+/// than the current `owner`, serve a *ready* (`time <= line_free_at`)
+/// same-die requester first, if one is queued. Batch bounding via
+/// [`MAX_LOCAL_BATCH`] is the caller's job.
+pub(crate) fn prefer_same_die(
+    heap: &mut BinaryHeap<Request>,
+    req: Request,
+    topo: &Topology,
+    owner: usize,
+    line_free_at: f64,
+) -> Request {
+    let owner_die = topo.die_of(owner);
+    if topo.die_of(req.thread) == owner_die {
+        return req;
+    }
+    let mut stash = Vec::new();
+    let mut chosen = req;
+    while let Some(r2) = heap.pop() {
+        if topo.die_of(r2.thread) == owner_die && r2.time <= line_free_at {
+            stash.push(chosen);
+            chosen = r2;
+            break;
+        }
+        stash.push(r2);
+    }
+    for s in stash {
+        heap.push(s);
+    }
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn heap_of(reqs: &[(f64, usize)]) -> BinaryHeap<Request> {
+        reqs.iter().map(|&(time, thread)| Request { time, thread }).collect()
+    }
+
+    #[test]
+    fn min_heap_orders_by_time_then_thread() {
+        let mut h = heap_of(&[(2.0, 0), (1.0, 2), (1.0, 1)]);
+        assert_eq!(h.pop().unwrap(), Request { time: 1.0, thread: 1 });
+        assert_eq!(h.pop().unwrap(), Request { time: 1.0, thread: 2 });
+        assert_eq!(h.pop().unwrap(), Request { time: 2.0, thread: 0 });
+    }
+
+    #[test]
+    fn same_die_request_served_before_earlier_remote_one() {
+        // Bulldozer-like: 8 cores per die.
+        let topo = Topology::new(32, 2, 8, 2);
+        let mut h = heap_of(&[(0.5, 3)]); // same die as owner 0, ready
+        let remote = Request { time: 0.0, thread: 9 }; // die 1
+        let chosen = prefer_same_die(&mut h, remote, &topo, 0, 1.0);
+        assert_eq!(chosen.thread, 3);
+        // the displaced remote request went back on the heap
+        assert_eq!(h.pop().unwrap().thread, 9);
+    }
+
+    #[test]
+    fn not_ready_same_die_request_is_left_queued() {
+        let topo = Topology::new(32, 2, 8, 2);
+        let mut h = heap_of(&[(5.0, 3)]); // same die but not ready by t=1
+        let remote = Request { time: 0.0, thread: 9 };
+        let chosen = prefer_same_die(&mut h, remote, &topo, 0, 1.0);
+        assert_eq!(chosen.thread, 9);
+        assert_eq!(h.len(), 1);
+    }
+}

@@ -13,12 +13,26 @@
 //! accelerates dirty-line migration for two-operand CAS (§5.5).
 //!
 //! The engine is split by concern (DESIGN.md §2):
-//! * [`read_write`] — the line walk: local-hit classification and locating
+//! * `read_write` — the line walk: local-hit classification and locating
 //!   the data supplier for a miss (Eq. 2–6).
-//! * [`rmw`] — ownership acquisition: invalidation pricing (Eq. 7/8) and
+//! * `rmw` — ownership acquisition: invalidation pricing (Eq. 7/8) and
 //!   the protocol state transition applied by every access.
-//! * [`fill`] — tag-array maintenance: fills, the eviction chain,
+//! * `fill` — tag-array maintenance: fills, the eviction chain,
 //!   write-backs, and the prefetchers.
+//!
+//! ## Invariants
+//!
+//! * **Determinism.** An access sequence is priced identically on every
+//!   run: the only pseudo-randomness (frequency jitter, §5.6) is seeded
+//!   from a fixed constant and the access counter, and all containers
+//!   iterate in deterministic order.
+//! * **Bit-identical reset.** [`Machine::reset`] reuses every allocation
+//!   but leaves the machine logically indistinguishable from a fresh
+//!   [`Machine::new`] — the sweep executor's pooled machines depend on it,
+//!   and the `sweep_equivalence` golden tests pin it.
+//! * **Coherence soundness.** [`Machine::check_invariants`] verifies the
+//!   global protocol invariants (single dirty owner, inclusive-L3
+//!   containment, sharer-mask hygiene) after any workload.
 
 mod fill;
 mod read_write;

@@ -1,4 +1,10 @@
-//! Discrete-event contention engine (Fig. 8a–c, §5.4).
+//! Closed-form *analytic* contention engine (Fig. 8a–c, §5.4) — the
+//! cross-validation baseline for the machine-accurate multi-core scheduler
+//! in [`crate::sim::multicore`], which executes the same benchmark through
+//! the real cache/coherence engine and reports per-thread stats. Fig. 8 and
+//! `repro contend` default to the machine-accurate path; this model remains
+//! selectable via `--model analytic`, and the two must agree in shape
+//! (pinned by the `contention_engine` integration tests).
 //!
 //! N threads hammer the *same* cache line with atomics or stores. Atomics
 //! strictly serialize on line ownership: each operation must first migrate
@@ -14,9 +20,9 @@
 //! measured curve *rise* again past 8 threads (§5.4).
 
 use crate::atomics::OpKind;
+use crate::sim::arbitration::{prefer_same_die, prefers_same_die, Request, MAX_LOCAL_BATCH};
 use crate::sim::config::MachineConfig;
 use crate::sim::topology::{CoreId, Distance};
-use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 /// Result of a contention run.
@@ -27,31 +33,6 @@ pub struct ContentionResult {
     pub bandwidth_gbs: f64,
     /// Mean per-op latency, ns.
     pub mean_latency_ns: f64,
-}
-
-#[derive(Debug, PartialEq)]
-struct Request {
-    time: f64,
-    thread: usize,
-}
-
-impl Eq for Request {}
-
-impl Ord for Request {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap by time (BinaryHeap is a max-heap)
-        other
-            .time
-            .partial_cmp(&self.time)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.thread.cmp(&self.thread))
-    }
-}
-
-impl PartialOrd for Request {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
 }
 
 /// Transfer cost of migrating line ownership from `from` to `to`.
@@ -150,34 +131,13 @@ pub fn run_contention(
     let mut finish = 0.0f64;
     // Bulldozer's HT Assist arbitration prefers same-die requesters but
     // bounds the batch to keep remote dies from starving.
-    let prefer_local = cfg.name.starts_with("Bulldozer");
+    let prefer_local = prefers_same_die(cfg);
     let mut local_batch = 0u32;
-    const MAX_LOCAL_BATCH: u32 = 4;
 
     while let Some(req) = heap.pop() {
         let req = if prefer_local && !heap.is_empty() && local_batch < MAX_LOCAL_BATCH {
-            let owner_die = cfg.topology.die_of(owner);
-            if cfg.topology.die_of(req.thread) != owner_die {
-                // Serve a pending same-die request first, if one is ready.
-                let mut stash = Vec::new();
-                let mut chosen = req;
-                while let Some(r2) = heap.pop() {
-                    if cfg.topology.die_of(r2.thread) == owner_die
-                        && r2.time <= line_free_at
-                    {
-                        stash.push(chosen);
-                        chosen = r2;
-                        break;
-                    }
-                    stash.push(r2);
-                }
-                for s in stash {
-                    heap.push(s);
-                }
-                chosen
-            } else {
-                req
-            }
+            // Serve a pending same-die request first, if one is ready.
+            prefer_same_die(&mut heap, req, &cfg.topology, owner, line_free_at)
         } else {
             req
         };

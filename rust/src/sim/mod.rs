@@ -8,6 +8,7 @@
 //! and atomic from the same microarchitectural mechanisms the paper uses to
 //! explain its measurements.
 
+pub(crate) mod arbitration;
 pub mod cache;
 pub mod coherence;
 pub mod config;
@@ -15,6 +16,7 @@ pub mod engine;
 pub mod event;
 pub mod mechanisms;
 pub mod memstore;
+pub mod multicore;
 pub mod protocol;
 pub mod stats;
 pub mod timing;
@@ -24,5 +26,6 @@ pub mod writebuffer;
 pub use cache::{line_of, Line, LINE_SIZE};
 pub use config::MachineConfig;
 pub use engine::{Access, Machine};
+pub use multicore::{ContentionStats, MulticoreResult};
 pub use timing::Level;
 pub use topology::{CoreId, Distance, Topology};

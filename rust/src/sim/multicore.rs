@@ -1,0 +1,580 @@
+//! Machine-accurate multi-core contention scheduler (Fig. 8a–c, §5.4).
+//!
+//! [`crate::sim::event`] prices contention with a closed-form analytic
+//! model: it can report a bandwidth number but not *why*. This module
+//! instead interleaves N per-core instruction streams over one shared
+//! [`Machine`] — every operation executes through the real cache /
+//! coherence / write-buffer engine, so the cost of a contended atomic is
+//! whatever the protocol machinery says it is (cache-to-cache transfer at
+//! the real [`Distance`], Bulldozer's write-through L1 and broadcast rules,
+//! MuW migration, store-buffer behaviour), and the run can report *per
+//! thread* how often the line ping-ponged, how long the thread stalled on
+//! arbitration, and how many CAS attempts failed.
+//!
+//! ## Scheduling model
+//!
+//! Every thread `t` runs pinned on core `t` (dense placement, as the paper
+//! pins threads) and issues `ops_per_thread` operations against one shared
+//! cache line. Atomics — and plain stores on architectures without
+//! contended write combining — strictly serialize on line ownership: a
+//! discrete-event loop grants the line to the earliest requester
+//! (FIFO by request time; on parts with an HT Assist probe filter the
+//! arbitration prefers same-die requesters in bounded batches, the §5.4
+//! mechanism behind Bulldozer's curve rising again past 8 threads). The
+//! granted operation executes through [`Machine::access`]; its latency is
+//! the engine's, not a formula's. The line stays busy for the execute phase
+//! plus the un-overlappable part of the ownership transfer
+//! ([`HANDOFF_OVERLAP`]): with other requesters queued, the next
+//! read-for-ownership is already in flight while the previous response
+//! returns, which is what keeps contended bandwidth at a plateau instead
+//! of degrading linearly in transfer cost.
+//!
+//! Plain stores on the Intel parts are absorbed by the store buffers
+//! (§5.4: the architecture "detects that issued operations access the same
+//! cache line in an arbitrary order, annihilating the need for the actual
+//! execution of all the writes"), and reads of a shared line replicate in
+//! every private cache — neither serializes, so both scale with thread
+//! count. CAS runs the realistic retry protocol: each thread compares
+//! against the freshest value it has observed, so the failure rate is an
+//! *emergent* property of the interleaving (it rises with thread count
+//! because rivals intervene between a thread's grants — the wasted-work
+//! effect Dice et al. analyze for contended CAS). Note the deterministic
+//! FIFO schedule makes this maximally unfair: the previous winner is the
+//! only thread whose comparand is current at its next grant, so one
+//! thread monopolizes the successes and the aggregate failure rate sits
+//! at (N−1)/N — the starvation pathology the per-thread stats are built
+//! to expose (real hardware adds the timing noise that occasionally
+//! rotates the winner; the simulator deliberately does not).
+//!
+//! ## Invariants
+//!
+//! * **Deterministic ordering.** Grants are ordered by (request time,
+//!   thread id); the engine is deterministic; no wall-clock or randomness
+//!   enters the schedule. Two runs on fresh (or [`Machine::reset`])
+//!   machines produce bit-identical results — pinned by the
+//!   `contention_engine` integration tests.
+//! * **Fresh-machine semantics.** [`run_contention`] resets the machine on
+//!   entry, so results never depend on what ran before (the sweep
+//!   executor's pooled machines and a brand-new [`Machine`] behave
+//!   identically).
+//! * **Engine-priced costs.** Every latency visible to a thread comes out
+//!   of [`Machine::access`]; the scheduler itself only adds arbitration
+//!   *waiting*, never invents transfer costs. (The line-occupancy model
+//!   reuses the per-architecture Table 2 primitives via
+//!   [`crate::sim::timing::Timing`].)
+//!
+//! # Examples
+//!
+//! ```
+//! use atomics_repro::atomics::OpKind;
+//! use atomics_repro::sim::multicore::run_contention;
+//! use atomics_repro::sim::Machine;
+//! use atomics_repro::arch;
+//!
+//! let mut m = Machine::new(arch::ivybridge());
+//! let solo = run_contention(&mut m, 1, OpKind::Faa, 200);
+//! let contended = run_contention(&mut m, 8, OpKind::Faa, 200);
+//! assert_eq!(contended.per_thread.len(), 8);
+//! // contention must cost bandwidth, and the stats must say why:
+//! assert!(solo.bandwidth_gbs > contended.bandwidth_gbs);
+//! assert!(contended.total_line_hops() > 0);
+//! ```
+
+use crate::atomics::{Op, OpKind};
+use crate::sim::arbitration::{prefer_same_die, prefers_same_die, Request, MAX_LOCAL_BATCH};
+use crate::sim::engine::Machine;
+use crate::sim::timing::Level;
+use crate::sim::topology::{CoreId, Distance};
+use std::collections::BinaryHeap;
+
+/// Base address of the shared contended line — clear of the latency/
+/// bandwidth benches' buffer ranges so pooled machines cannot alias.
+const SHARED_ADDR: u64 = 0x5000_0000;
+
+/// Fraction of a cache-to-cache transfer that overlaps with the next
+/// queued requester's in-flight read-for-ownership (§5.4: the fabric
+/// pipelines hand-offs once the request queues are deep). Applied only
+/// while other requests are pending; a lone thread overlaps nothing.
+pub const HANDOFF_OVERLAP: f64 = 0.5;
+
+/// Per-thread coherence statistics of one contention run.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ContentionStats {
+    /// Core the thread is pinned on (dense placement: thread i → core i).
+    pub core: CoreId,
+    /// Operations completed by this thread.
+    pub ops: u64,
+    /// Ownership migrations *into* this core: grants whose data was
+    /// supplied cache-to-cache by another core (the ping-pong count).
+    pub line_hops: u64,
+    /// Die-crossing interconnect hops this thread's operations caused
+    /// (delta of the engine's hop counter).
+    pub interconnect_hops: u64,
+    /// Invalidation messages (point-to-point + broadcast) this thread's
+    /// operations sent. Zero for a pure RMW ping-pong under MESI-style
+    /// protocols — the RFO response itself carries the invalidation.
+    pub invalidations: u64,
+    /// CAS attempts that failed because a rival modified the line between
+    /// this thread's grants.
+    pub cas_failures: u64,
+    /// Time spent waiting for line arbitration, ns.
+    pub stall_ns: f64,
+    /// Total visible latency (arbitration stall + engine latency), ns.
+    pub latency_ns: f64,
+    /// Virtual time at which the thread's last operation completed, ns.
+    pub finish_ns: f64,
+}
+
+impl ContentionStats {
+    /// Mean visible per-operation latency, ns.
+    pub fn mean_latency_ns(&self) -> f64 {
+        if self.ops == 0 {
+            0.0
+        } else {
+            self.latency_ns / self.ops as f64
+        }
+    }
+
+    /// Achieved operation rate over the whole run, ops/s.
+    pub fn achieved_ops_per_sec(&self, elapsed_ns: f64) -> f64 {
+        if elapsed_ns <= 0.0 {
+            0.0
+        } else {
+            self.ops as f64 / (elapsed_ns * 1e-9)
+        }
+    }
+}
+
+/// Result of one machine-accurate contention run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MulticoreResult {
+    pub threads: usize,
+    pub op: OpKind,
+    /// Aggregate bandwidth over all threads, GB/s (8-byte operands).
+    pub bandwidth_gbs: f64,
+    /// Mean visible per-op latency over all threads, ns.
+    pub mean_latency_ns: f64,
+    /// Virtual time from first issue to last completion, ns.
+    pub elapsed_ns: f64,
+    /// One entry per thread, indexed by thread id.
+    pub per_thread: Vec<ContentionStats>,
+}
+
+impl MulticoreResult {
+    pub fn total_ops(&self) -> u64 {
+        agg::total_ops(&self.per_thread)
+    }
+
+    pub fn total_line_hops(&self) -> u64 {
+        agg::total_line_hops(&self.per_thread)
+    }
+
+    pub fn total_interconnect_hops(&self) -> u64 {
+        agg::total_interconnect_hops(&self.per_thread)
+    }
+
+    pub fn total_invalidations(&self) -> u64 {
+        agg::total_invalidations(&self.per_thread)
+    }
+
+    pub fn total_stall_ns(&self) -> f64 {
+        agg::total_stall_ns(&self.per_thread)
+    }
+
+    /// Failed CAS attempts / all CAS attempts (0 for non-CAS runs).
+    pub fn cas_failure_rate(&self) -> f64 {
+        agg::cas_failure_rate(&self.per_thread)
+    }
+}
+
+/// Aggregations over a slice of per-thread stats — shared by
+/// [`MulticoreResult`] and the bench layer's
+/// [`ContentionPoint`](crate::bench::contention::ContentionPoint), so the
+/// two never drift.
+pub mod agg {
+    use super::ContentionStats;
+
+    pub fn total_ops(s: &[ContentionStats]) -> u64 {
+        s.iter().map(|t| t.ops).sum()
+    }
+
+    pub fn total_line_hops(s: &[ContentionStats]) -> u64 {
+        s.iter().map(|t| t.line_hops).sum()
+    }
+
+    pub fn total_interconnect_hops(s: &[ContentionStats]) -> u64 {
+        s.iter().map(|t| t.interconnect_hops).sum()
+    }
+
+    pub fn total_invalidations(s: &[ContentionStats]) -> u64 {
+        s.iter().map(|t| t.invalidations).sum()
+    }
+
+    pub fn total_stall_ns(s: &[ContentionStats]) -> f64 {
+        s.iter().map(|t| t.stall_ns).sum()
+    }
+
+    /// Mean arbitration stall per operation, ns.
+    pub fn mean_stall_ns(s: &[ContentionStats]) -> f64 {
+        let ops = total_ops(s);
+        if ops == 0 {
+            0.0
+        } else {
+            total_stall_ns(s) / ops as f64
+        }
+    }
+
+    /// Failed CAS attempts / all attempts (0 for non-CAS runs).
+    pub fn cas_failure_rate(s: &[ContentionStats]) -> f64 {
+        let ops = total_ops(s);
+        if ops == 0 {
+            0.0
+        } else {
+            s.iter().map(|t| t.cas_failures).sum::<u64>() as f64 / ops as f64
+        }
+    }
+}
+
+/// Estimated ownership-transfer time for a supply distance, from the
+/// architecture's Table 2 primitives — used only to price line *occupancy*
+/// (how long the controller is busy), never the requester's latency.
+fn transfer_ns(m: &Machine, d: Distance) -> f64 {
+    let t = m.cfg.timing;
+    match d {
+        Distance::Local => 0.0,
+        Distance::SharedL2 => t.shared_l2_transfer(),
+        Distance::SameDie => t.same_die_transfer(),
+        Distance::SameSocket | Distance::OtherSocket => t.same_die_transfer() + t.hop_cost(1),
+    }
+}
+
+/// The operation thread `t` issues next. CAS compares against the
+/// freshest value the thread has observed (`expected`), incrementing on
+/// success — the §5.4 benchmark's atomic-counter protocol.
+fn next_op(kind: OpKind, expected: u64) -> Op {
+    match kind {
+        OpKind::Read => Op::Read,
+        OpKind::Write => Op::Write { value: 1 },
+        OpKind::Cas => Op::Cas {
+            expected,
+            new: expected.wrapping_add(1),
+            fetched_operands: 1,
+        },
+        OpKind::Faa => Op::Faa { delta: 1 },
+        OpKind::Swp => Op::Swp { value: 1 },
+    }
+}
+
+/// Does this operation serialize on line ownership? Reads replicate the
+/// line; Intel contended stores are absorbed by write combining (§5.4).
+fn serializes(m: &Machine, kind: OpKind) -> bool {
+    match kind {
+        OpKind::Read => false,
+        OpKind::Write => !m.cfg.contended_write_combining,
+        _ => true,
+    }
+}
+
+/// Run the machine-accurate contention benchmark: `threads` cores issue
+/// `ops_per_thread` operations of `kind` against one shared line, through
+/// the full engine. Resets the machine on entry (fresh-machine semantics);
+/// the coherence invariants hold afterwards.
+pub fn run_contention(
+    m: &mut Machine,
+    threads: usize,
+    kind: OpKind,
+    ops_per_thread: usize,
+) -> MulticoreResult {
+    assert!(
+        threads >= 1 && threads <= m.cfg.topology.n_cores,
+        "thread count {threads} outside 1..={}",
+        m.cfg.topology.n_cores
+    );
+    assert!(ops_per_thread >= 1);
+    m.reset();
+
+    let mut per_thread: Vec<ContentionStats> = (0..threads)
+        .map(|t| ContentionStats { core: t, ..ContentionStats::default() })
+        .collect();
+
+    if !serializes(m, kind) {
+        return run_unserialized(m, threads, kind, ops_per_thread, per_thread);
+    }
+
+    let topo = m.cfg.topology;
+    let exec_ns = match kind {
+        OpKind::Write => m.cfg.timing.write_issue.max(1.0),
+        k => m.cfg.timing.exec(k).max(1.0),
+    };
+    // HT Assist arbitration (probe-filter parts spanning several dies)
+    // prefers same-die requesters in bounded batches.
+    let prefer_local = prefers_same_die(&m.cfg);
+
+    let mut heap: BinaryHeap<Request> = (0..threads)
+        .map(|t| Request { time: 0.0, thread: t })
+        .collect();
+    let mut remaining = vec![ops_per_thread; threads];
+    let mut expected = vec![0u64; threads];
+    let mut owner: CoreId = 0;
+    let mut line_free_at = 0.0f64;
+    let mut finish = 0.0f64;
+    let mut local_batch = 0u32;
+
+    while let Some(req) = heap.pop() {
+        // Same-die preference: serve a ready same-die requester first, if
+        // the head of the queue is remote and the batch bound allows.
+        let req = if prefer_local && !heap.is_empty() && local_batch < MAX_LOCAL_BATCH {
+            prefer_same_die(&mut heap, req, &topo, owner, line_free_at)
+        } else {
+            req
+        };
+
+        let t = req.thread;
+        if prefer_local {
+            if topo.die_of(t) == topo.die_of(owner) {
+                local_batch += 1;
+            } else {
+                local_batch = 0;
+            }
+        }
+
+        let start = req.time.max(line_free_at);
+        let stall = start - req.time;
+        // Bring the core's virtual clock to the grant time so the engine's
+        // write-buffer bookkeeping sees consistent time.
+        let lag = start - m.clock_of(t);
+        if lag > 0.0 {
+            m.advance_clock(t, lag);
+        }
+
+        let inv_before = m.stats.invalidations_sent + m.stats.remote_invalidation_broadcasts;
+        let hops_before = m.stats.hops;
+        let acc = m.access64(t, next_op(kind, expected[t]), SHARED_ADDR);
+        let end = start + acc.latency;
+
+        let st = &mut per_thread[t];
+        st.ops += 1;
+        st.stall_ns += stall;
+        st.latency_ns += stall + acc.latency;
+        st.finish_ns = end;
+        // A line hop = the data arrived cache-to-cache from another core
+        // (memory fills are cold misses, not ping-pong).
+        if acc.distance != Distance::Local && acc.level != Level::Memory {
+            st.line_hops += 1;
+        }
+        st.interconnect_hops += m.stats.hops - hops_before;
+        st.invalidations +=
+            m.stats.invalidations_sent + m.stats.remote_invalidation_broadcasts - inv_before;
+        if kind == OpKind::Cas {
+            if acc.modified {
+                // success: the thread knows the value it just installed
+                expected[t] = expected[t].wrapping_add(1);
+            } else {
+                // failure: adopt the value the RFO returned and retry
+                st.cas_failures += 1;
+                expected[t] = acc.value;
+            }
+        }
+
+        // Line occupancy: execute phase plus the un-overlappable part of
+        // the transfer. A lone requester (empty queue) overlaps nothing.
+        let occupancy = if heap.is_empty() {
+            acc.latency
+        } else {
+            exec_ns + transfer_ns(m, acc.distance) * (1.0 - HANDOFF_OVERLAP)
+        };
+        line_free_at = start + occupancy;
+        owner = t;
+        finish = finish.max(end);
+        remaining[t] -= 1;
+        if remaining[t] > 0 {
+            heap.push(Request { time: end, thread: t });
+        }
+    }
+
+    finalize(kind, threads, finish, per_thread)
+}
+
+/// The non-serializing path: reads replicate, combined stores retire into
+/// the issuing core's buffer — each thread streams back-to-back through
+/// the engine with no arbitration.
+fn run_unserialized(
+    m: &mut Machine,
+    threads: usize,
+    kind: OpKind,
+    ops_per_thread: usize,
+    mut per_thread: Vec<ContentionStats>,
+) -> MulticoreResult {
+    let mut finish = 0.0f64;
+    for t in 0..threads {
+        let inv_before = m.stats.invalidations_sent + m.stats.remote_invalidation_broadcasts;
+        let hops_before = m.stats.hops;
+        let mut latency = 0.0;
+        let mut hops = 0u64;
+        for _ in 0..ops_per_thread {
+            let acc = m.access64(t, next_op(kind, 0), SHARED_ADDR);
+            latency += acc.latency;
+            if acc.distance != Distance::Local && acc.level != Level::Memory {
+                hops += 1;
+            }
+        }
+        let st = &mut per_thread[t];
+        st.ops = ops_per_thread as u64;
+        st.line_hops = hops;
+        st.interconnect_hops = m.stats.hops - hops_before;
+        st.invalidations =
+            m.stats.invalidations_sent + m.stats.remote_invalidation_broadcasts - inv_before;
+        st.latency_ns = latency;
+        st.finish_ns = m.clock_of(t);
+        finish = finish.max(st.finish_ns);
+    }
+    finalize(kind, threads, finish, per_thread)
+}
+
+fn finalize(
+    kind: OpKind,
+    threads: usize,
+    finish: f64,
+    per_thread: Vec<ContentionStats>,
+) -> MulticoreResult {
+    let total_ops: u64 = per_thread.iter().map(|t| t.ops).sum();
+    let total_latency: f64 = per_thread.iter().map(|t| t.latency_ns).sum();
+    let op_bytes = 8.0;
+    MulticoreResult {
+        threads,
+        op: kind,
+        bandwidth_gbs: total_ops as f64 * op_bytes / finish.max(f64::MIN_POSITIVE),
+        mean_latency_ns: total_latency / total_ops.max(1) as f64,
+        elapsed_ns: finish,
+        per_thread,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    #[test]
+    fn contention_reduces_atomic_bandwidth() {
+        for cfg in arch::all() {
+            let mut m = Machine::new(cfg);
+            let n = m.cfg.topology.n_cores.min(8);
+            let one = run_contention(&mut m, 1, OpKind::Faa, 500);
+            let many = run_contention(&mut m, n, OpKind::Faa, 500);
+            assert!(
+                one.bandwidth_gbs > many.bandwidth_gbs,
+                "{}: 1-thread {} vs {n}-thread {}",
+                m.cfg.name,
+                one.bandwidth_gbs,
+                many.bandwidth_gbs
+            );
+        }
+    }
+
+    #[test]
+    fn intel_contended_writes_scale() {
+        let mut m = Machine::new(arch::ivybridge());
+        let w1 = run_contention(&mut m, 1, OpKind::Write, 500);
+        let w8 = run_contention(&mut m, 8, OpKind::Write, 500);
+        assert!(
+            w8.bandwidth_gbs > 4.0 * w1.bandwidth_gbs,
+            "write combining must scale: {} vs {}",
+            w8.bandwidth_gbs,
+            w1.bandwidth_gbs
+        );
+    }
+
+    #[test]
+    fn non_combining_writes_collapse() {
+        let mut m = Machine::new(arch::xeonphi());
+        let w1 = run_contention(&mut m, 1, OpKind::Write, 300);
+        let w16 = run_contention(&mut m, 16, OpKind::Write, 300);
+        assert!(
+            w16.bandwidth_gbs < w1.bandwidth_gbs,
+            "no write combining on Phi: {} vs {}",
+            w16.bandwidth_gbs,
+            w1.bandwidth_gbs
+        );
+    }
+
+    #[test]
+    fn line_ping_pongs_between_threads() {
+        let mut m = Machine::new(arch::haswell());
+        let r = run_contention(&mut m, 4, OpKind::Faa, 300);
+        // with FIFO arbitration nearly every grant migrates the line
+        let hops = r.total_line_hops();
+        let ops = r.total_ops();
+        assert!(
+            hops > ops / 2,
+            "expected heavy ping-pong: {hops} hops over {ops} ops"
+        );
+        for st in &r.per_thread {
+            assert!(st.line_hops > 0, "every thread must see migrations: {st:?}");
+            assert!(st.stall_ns > 0.0, "every thread must stall: {st:?}");
+        }
+    }
+
+    #[test]
+    fn single_thread_sees_no_ping_pong() {
+        let mut m = Machine::new(arch::haswell());
+        let r = run_contention(&mut m, 1, OpKind::Cas, 300);
+        assert_eq!(r.total_line_hops(), 0, "lone thread keeps the line local");
+        assert_eq!(r.per_thread[0].stall_ns, 0.0);
+        assert_eq!(r.cas_failure_rate(), 0.0, "no rival, no failed CAS");
+    }
+
+    #[test]
+    fn cas_failures_emerge_under_contention() {
+        let mut m = Machine::new(arch::ivybridge());
+        let r2 = run_contention(&mut m, 2, OpKind::Cas, 500);
+        let r8 = run_contention(&mut m, 8, OpKind::Cas, 500);
+        assert!(r2.cas_failure_rate() > 0.0, "rivals must induce failures");
+        assert!(
+            r8.cas_failure_rate() > r2.cas_failure_rate(),
+            "failure rate grows with threads: {} vs {}",
+            r8.cas_failure_rate(),
+            r2.cas_failure_rate()
+        );
+        assert_eq!(run_contention(&mut m, 1, OpKind::Cas, 500).cas_failure_rate(), 0.0);
+    }
+
+    #[test]
+    fn deterministic_across_repeated_runs() {
+        let mut m = Machine::new(arch::bulldozer());
+        let a = run_contention(&mut m, 16, OpKind::Cas, 200);
+        let b = run_contention(&mut m, 16, OpKind::Cas, 200);
+        assert_eq!(a.bandwidth_gbs.to_bits(), b.bandwidth_gbs.to_bits());
+        assert_eq!(a.per_thread, b.per_thread);
+    }
+
+    #[test]
+    fn invariants_hold_after_run() {
+        for cfg in arch::all() {
+            let mut m = Machine::new(cfg);
+            let n = m.cfg.topology.n_cores.min(8);
+            run_contention(&mut m, n, OpKind::Faa, 100);
+            m.check_invariants().unwrap();
+        }
+    }
+
+    #[test]
+    fn all_threads_complete_all_ops() {
+        let mut m = Machine::new(arch::bulldozer());
+        let r = run_contention(&mut m, 32, OpKind::Swp, 50);
+        assert_eq!(r.per_thread.len(), 32);
+        for st in &r.per_thread {
+            assert_eq!(st.ops, 50);
+            assert!(st.finish_ns > 0.0);
+        }
+        assert!(r.elapsed_ns >= r.per_thread.iter().fold(0.0, |a, t| t.finish_ns.max(a)));
+    }
+
+    #[test]
+    fn reads_scale() {
+        let mut m = Machine::new(arch::haswell());
+        let r1 = run_contention(&mut m, 1, OpKind::Read, 300);
+        let r4 = run_contention(&mut m, 4, OpKind::Read, 300);
+        assert!(r4.bandwidth_gbs > 2.0 * r1.bandwidth_gbs, "shared reads replicate");
+    }
+}

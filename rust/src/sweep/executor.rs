@@ -104,9 +104,10 @@ impl SweepExecutor {
                             let (j, p) = items[i];
                             let job = &jobs[j];
                             if let Some(m) = pool.get_mut(&job.pool_key) {
-                                // workloads that only read m.cfg (the
-                                // contention event engine) skip the
-                                // per-point reset
+                                // workloads that only read m.cfg or that
+                                // reset on entry themselves (both
+                                // contention engines) skip the per-point
+                                // reset
                                 if job.workload.needs_machine() {
                                     m.reset();
                                 }

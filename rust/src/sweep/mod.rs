@@ -15,6 +15,37 @@
 //!   pool (reset-and-reuse instead of per-point allocation), isolate
 //!   panics to the failing item, and return results in deterministic input
 //!   order regardless of thread count.
+//!
+//! ## Invariants
+//!
+//! * **Deterministic ordering.** Outcomes are assembled keyed by
+//!   (job, point) input index, so the result of a campaign is bit-identical
+//!   for any worker count — pinned by the `sweep_equivalence` golden tests.
+//! * **Bit-identical machine reuse.** Pooled machines are recycled with
+//!   [`Machine::reset`](crate::sim::Machine::reset), which is
+//!   indistinguishable from a fresh machine; a workload therefore never
+//!   observes which points ran before it on the same worker.
+//! * **Panic isolation.** A panicking measurement poisons only its own
+//!   point (reported in [`SweepOutcome::failures`]) and discards the
+//!   possibly-inconsistent pooled machine; the rest of the campaign drains.
+//!
+//! # Examples
+//!
+//! ```
+//! use atomics_repro::arch;
+//! use atomics_repro::atomics::OpKind;
+//! use atomics_repro::bench::latency::LatencyBench;
+//! use atomics_repro::bench::placement::{PrepLocality, PrepState};
+//! use atomics_repro::sweep::{SweepExecutor, SweepJob};
+//! use std::sync::Arc;
+//!
+//! let cfg = arch::haswell();
+//! let bench = LatencyBench::new(OpKind::Faa, PrepState::M, PrepLocality::Local);
+//! let jobs = vec![SweepJob::sized(&cfg, Arc::new(bench), &[4096, 8192])];
+//! let out = SweepExecutor::new(2).run(&jobs);
+//! assert_eq!(out[0].points.len(), 2);
+//! assert!(out[0].series().is_some(), "every point measured");
+//! ```
 
 pub mod executor;
 pub mod plan;

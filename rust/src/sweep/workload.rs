@@ -6,13 +6,12 @@
 
 use crate::atomics::OpKind;
 use crate::bench::bandwidth::BandwidthBench;
-use crate::bench::contention::OPS_PER_THREAD;
+use crate::bench::contention::{run_model, ContentionModel, OPS_PER_THREAD};
 use crate::bench::latency::LatencyBench;
 use crate::bench::operand::two_operand_cas_on;
 use crate::bench::placement::{PrepLocality, PrepState};
 use crate::bench::unaligned::unaligned_latency_on;
 use crate::sim::engine::Machine;
-use crate::sim::event::run_contention;
 
 /// One sweep series: a name plus a point-measurement function.
 ///
@@ -30,10 +29,12 @@ pub trait Workload: Send + Sync {
         "buffer_bytes"
     }
 
-    /// Whether `measure` mutates (and therefore needs a freshly reset)
-    /// machine. Workloads that only read `m.cfg` — the contention event
-    /// engine — return `false`, letting the executor skip the per-point
-    /// reset; such workloads must not rely on the machine's cache state.
+    /// Whether `measure` needs a freshly reset machine. Workloads that
+    /// only read `m.cfg` (the analytic contention model) or that reset
+    /// the machine themselves (the machine-accurate contention scheduler)
+    /// return `false`, letting the executor skip the per-point reset;
+    /// such workloads must not rely on the machine's incoming cache
+    /// state.
     fn needs_machine(&self) -> bool {
         true
     }
@@ -65,21 +66,38 @@ impl Workload for BandwidthBench {
 }
 
 /// Same-line contention (§5.4, Fig. 8a–c): `x` is the thread count.
+/// Defaults to the machine-accurate multi-core engine; the analytic event
+/// model stays available for cross-validation via
+/// [`ContentionWorkload::analytic`].
 #[derive(Debug, Clone, Copy)]
 pub struct ContentionWorkload {
     pub op: OpKind,
     pub ops_per_thread: usize,
+    pub model: ContentionModel,
 }
 
 impl ContentionWorkload {
+    /// The default (machine-accurate) contention workload.
     pub fn new(op: OpKind) -> ContentionWorkload {
-        ContentionWorkload { op, ops_per_thread: OPS_PER_THREAD }
+        ContentionWorkload {
+            op,
+            ops_per_thread: OPS_PER_THREAD,
+            model: ContentionModel::MachineAccurate,
+        }
+    }
+
+    /// The closed-form analytic variant (cross-validation baseline).
+    pub fn analytic(op: OpKind) -> ContentionWorkload {
+        ContentionWorkload { model: ContentionModel::Analytic, ..ContentionWorkload::new(op) }
     }
 }
 
 impl Workload for ContentionWorkload {
     fn series_name(&self) -> String {
-        format!("{} contended", self.op.label())
+        match self.model {
+            ContentionModel::MachineAccurate => format!("{} contended", self.op.label()),
+            ContentionModel::Analytic => format!("{} contended (analytic)", self.op.label()),
+        }
     }
 
     fn axis(&self) -> &'static str {
@@ -87,7 +105,13 @@ impl Workload for ContentionWorkload {
     }
 
     fn needs_machine(&self) -> bool {
-        false // run_contention reads only m.cfg; it simulates internally
+        // Neither model needs a pre-reset machine: the analytic model
+        // reads only m.cfg, and the machine-accurate scheduler resets on
+        // entry itself (fresh-machine semantics) — returning false here
+        // avoids a double reset per point. Workloads that *do* rely on
+        // clean state (all the benches) still reset before their own
+        // points, so the dirty machine this one leaves behind is safe.
+        false
     }
 
     fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
@@ -95,7 +119,7 @@ impl Workload for ContentionWorkload {
         if threads < 1 || threads > m.cfg.topology.n_cores {
             return None;
         }
-        Some(run_contention(&m.cfg, threads, self.op, self.ops_per_thread).bandwidth_gbs)
+        Some(run_model(m, self.model, threads, self.op, self.ops_per_thread).bandwidth_gbs)
     }
 }
 
@@ -178,10 +202,26 @@ mod tests {
     #[test]
     fn contention_workload_rejects_impossible_thread_counts() {
         let mut m = Machine::new(arch::haswell()); // 4 cores
-        let w = ContentionWorkload::new(OpKind::Faa);
-        assert!(w.measure(&mut m, 4).is_some());
-        assert!(w.measure(&mut m, 5).is_none());
-        assert!(w.measure(&mut m, 0).is_none());
+        for w in [
+            ContentionWorkload::new(OpKind::Faa),
+            ContentionWorkload::analytic(OpKind::Faa),
+        ] {
+            assert!(w.measure(&mut m, 4).is_some());
+            assert!(w.measure(&mut m, 5).is_none());
+            assert!(w.measure(&mut m, 0).is_none());
+        }
+    }
+
+    #[test]
+    fn contention_models_distinguished_in_series_names() {
+        let machine = ContentionWorkload::new(OpKind::Cas);
+        let analytic = ContentionWorkload::analytic(OpKind::Cas);
+        // neither needs a pre-reset: analytic only reads cfg, machine
+        // self-resets on entry (see needs_machine)
+        assert!(!machine.needs_machine());
+        assert!(!analytic.needs_machine());
+        assert_eq!(machine.series_name(), "CAS contended");
+        assert_eq!(analytic.series_name(), "CAS contended (analytic)");
     }
 
     #[test]
