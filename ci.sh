@@ -1,14 +1,35 @@
 #!/usr/bin/env bash
-# CI gate for the atomics-repro workspace: format, build, test, smoke-sweep.
+# CI gate for the atomics-repro workspace: format, lint, build, test, a
+# smoke matrix over every workload family, and a bench-regression gate.
 # Run from the repository root. Fails fast on the first broken step.
+#
+#   ./ci.sh                    full gate
+#   ./ci.sh --update-baseline  additionally rewrite BENCH_baseline.json
+#                              from this run (after an intentional perf
+#                              change)
 set -euo pipefail
 cd "$(dirname "$0")"
+
+GATE_ARGS=()
+for arg in "$@"; do
+    case "$arg" in
+        --update-baseline) GATE_ARGS+=("--update-baseline") ;;
+        *) echo "unknown ci.sh argument '$arg'" >&2; exit 2 ;;
+    esac
+done
 
 echo "== cargo fmt --check =="
 if cargo fmt --version >/dev/null 2>&1; then
     cargo fmt --all -- --check
 else
     echo "(rustfmt not installed — skipping format check)"
+fi
+
+echo "== cargo clippy --all-targets (warnings denied) =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "(clippy not installed — skipping lint check)"
 fi
 
 echo "== cargo build --release (incl. examples) =="
@@ -24,10 +45,31 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p atomics-repro --quiet
 echo "== doc-tests =="
 cargo test -q --doc -p atomics-repro
 
-echo "== smoke: repro sweep --threads 2 (reduced grid) =="
-./target/release/repro sweep --threads 2 --fast --family latency --arch haswell
+# Smoke matrix: every workload family in the registry gets a reduced run,
+# so no family can silently rot. The list is read from the binary itself
+# (`repro sweep --list` prints the same table the CLI parses against).
+for fam in $(./target/release/repro sweep --list); do
+    echo "== smoke: repro sweep --family $fam (reduced grid, haswell) =="
+    ./target/release/repro sweep --threads 2 --fast --family "$fam" --arch haswell
+done
 
 echo "== smoke: repro contend (machine-accurate Fig. 8 path) =="
 ./target/release/repro contend --arch haswell --op cas --threads 2 --ops 200 --stats
+
+echo "== smoke: repro locks (§6.1 lock/queue + false-sharing path) =="
+./target/release/repro locks --arch haswell --threads 2 --acq 50 --stats
+
+echo "== bench-regression gate (BENCH_sweep.json vs BENCH_baseline.json) =="
+BENCH_FAST=1 cargo bench --bench bench_sweep
+# cargo runs bench binaries with cwd = the package root, so the fresh
+# results usually land in rust/; tolerate either location.
+FRESH=BENCH_sweep.json
+[ -f rust/BENCH_sweep.json ] && FRESH=rust/BENCH_sweep.json
+if command -v python3 >/dev/null 2>&1; then
+    python3 scripts/bench_gate.py BENCH_baseline.json "$FRESH" \
+        --threshold=0.20 ${GATE_ARGS[@]+"${GATE_ARGS[@]}"}
+else
+    echo "(python3 not installed — skipping bench-regression gate)"
+fi
 
 echo "CI OK"

@@ -1,0 +1,113 @@
+//! FAA delta-sensitivity benchmark: operand width × delta magnitude.
+//!
+//! The paper's Eq. 1 prices an atomic as RFO + execute, independent of the
+//! *operand values*; the multi-word analyses (Big Atomics) warn that the
+//! operand *width* is what costs. This family pins both claims on the
+//! simulator: FAA latency is flat across delta magnitudes (1 … 2^62 —
+//! the adder does not care) while the 128-bit flavor pays the
+//! per-architecture wide-operand penalty (≈20 ns locally on Bulldozer,
+//! free on the Intel parts, §5.3).
+
+use crate::atomics::{Op, Width};
+use crate::bench::placement::{choose_cast, prepare, FillPattern, PrepLocality, PrepState};
+use crate::sim::engine::Machine;
+use crate::sim::MachineConfig;
+use crate::util::rng::Rng;
+
+/// The delta magnitudes the sweep family covers (powers of two spanning
+/// 62 bits, so the series name can state the exponent exactly).
+pub const DELTAS: [u64; 4] = [1, 1 << 8, 1 << 32, 1 << 62];
+
+/// One FAA delta-sensitivity sweep specification: a pointer chase of
+/// `FAA(delta)` at `width` over an M-state local buffer (the paper's
+/// baseline placement, isolating the operand effect from coherence).
+#[derive(Debug, Clone, Copy)]
+pub struct FaaDeltaBench {
+    pub width: Width,
+    pub delta: u64,
+}
+
+impl FaaDeltaBench {
+    pub fn new(width: Width, delta: u64) -> FaaDeltaBench {
+        FaaDeltaBench { width, delta }
+    }
+
+    pub fn series_name(&self) -> String {
+        format!(
+            "FAA {} delta=2^{}",
+            match self.width {
+                Width::W64 => "64bit",
+                Width::W128 => "128bit",
+            },
+            63 - self.delta.max(1).leading_zeros()
+        )
+    }
+
+    /// Mean latency for one buffer size on a fresh (new or reset) machine.
+    /// This is the [`crate::sweep::Workload`] entry point.
+    pub fn run_on(&self, m: &mut Machine, buffer_bytes: usize) -> Option<f64> {
+        let cast = choose_cast(&m.cfg.topology, PrepLocality::Local)?;
+        let n_lines = (buffer_bytes / 64).max(1);
+        let addrs =
+            prepare(m, 0x4000_0000, n_lines, PrepState::M, cast, FillPattern::Zero);
+
+        let mut order: Vec<usize> = (0..addrs.len()).collect();
+        Rng::new(0xFAADE17A ^ buffer_bytes as u64).shuffle(&mut order);
+
+        let op = Op::Faa { delta: self.delta };
+        let total = m.access_chain(cast.requester, op, &addrs, &order, self.width);
+        Some(total / addrs.len() as f64)
+    }
+
+    /// Mean latency for one buffer size on a dedicated machine.
+    pub fn run_once(&self, cfg: &MachineConfig, buffer_bytes: usize) -> Option<f64> {
+        let mut m = Machine::new(cfg.clone());
+        self.run_on(&mut m, buffer_bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    const KB64: usize = 64 << 10;
+
+    #[test]
+    fn delta_magnitude_is_latency_neutral() {
+        let cfg = arch::haswell();
+        let base = FaaDeltaBench::new(Width::W64, 1).run_once(&cfg, KB64).unwrap();
+        for delta in DELTAS {
+            let v = FaaDeltaBench::new(Width::W64, delta).run_once(&cfg, KB64).unwrap();
+            assert_eq!(
+                v.to_bits(),
+                base.to_bits(),
+                "delta {delta} must not change timing: {v} vs {base}"
+            );
+        }
+        // non-power-of-two deltas are equally free
+        let odd = FaaDeltaBench::new(Width::W64, 0xDEAD_BEEF).run_once(&cfg, KB64).unwrap();
+        assert_eq!(odd.to_bits(), base.to_bits());
+    }
+
+    #[test]
+    fn wide_faa_pays_on_bulldozer_not_on_intel() {
+        let narrow = FaaDeltaBench::new(Width::W64, 1);
+        let wide = FaaDeltaBench::new(Width::W128, 1);
+        let bd = arch::bulldozer();
+        let gap = wide.run_once(&bd, KB64).unwrap() - narrow.run_once(&bd, KB64).unwrap();
+        assert!((14.0..28.0).contains(&gap), "§5.3 local penalty ≈20ns, got {gap}");
+        let hw = arch::haswell();
+        let gap = wide.run_once(&hw, KB64).unwrap() - narrow.run_once(&hw, KB64).unwrap();
+        assert!(gap.abs() < 0.5, "width free on Intel, got {gap}");
+    }
+
+    #[test]
+    fn series_names_encode_width_and_delta() {
+        assert_eq!(FaaDeltaBench::new(Width::W64, 1).series_name(), "FAA 64bit delta=2^0");
+        assert_eq!(
+            FaaDeltaBench::new(Width::W128, 1 << 32).series_name(),
+            "FAA 128bit delta=2^32"
+        );
+    }
+}

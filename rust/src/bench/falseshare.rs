@@ -1,0 +1,153 @@
+//! False-sharing benchmark: 2–8+ threads striding *distinct words* that
+//! either share cache lines (packed layout) or live one-per-line (padded
+//! layout). There is no data race — every thread owns its word — yet the
+//! packed layout serializes on line ownership exactly like true sharing:
+//! the coherence protocol tracks lines, not words (the "Big Atomics"
+//! multi-word pitfall, and the §6.1 argument for padding shared
+//! structures). Priced end-to-end by the machine-accurate scheduler
+//! ([`crate::sim::multicore::run_program`]), so line hops and invalidation
+//! traffic *emerge* from the engine instead of being asserted.
+
+use crate::atomics::{Op, OpKind};
+use crate::sim::cache::LINE_SIZE;
+use crate::sim::multicore::{run_program, CoreProgram, MulticoreResult, Step};
+use crate::sim::{Access, Machine};
+
+/// Base of the false-sharing buffer — clear of the latency/bandwidth
+/// buffers (0x4000_0000), the contended line (0x5000_0000), and the lock
+/// arena (0x6000_0000).
+const FS_BASE: u64 = 0x7000_0000;
+
+/// Words per cache line (8-byte words).
+const WORDS_PER_LINE: u64 = LINE_SIZE / 8;
+
+/// Per-thread operation count used by the sweep family.
+pub const OPS_PER_THREAD: usize = 400;
+
+/// How the per-thread words are laid out.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// Eight words per line: threads t..t+7 falsely share one line.
+    Packed,
+    /// One word per line: every thread updates a private line.
+    Padded,
+}
+
+impl Layout {
+    pub fn label(self) -> &'static str {
+        match self {
+            Layout::Packed => "packed",
+            Layout::Padded => "padded",
+        }
+    }
+
+    /// The word thread `t` owns under this layout.
+    pub fn addr_of(self, t: usize) -> u64 {
+        let t = t as u64;
+        match self {
+            Layout::Packed => {
+                FS_BASE + (t / WORDS_PER_LINE) * LINE_SIZE + (t % WORDS_PER_LINE) * 8
+            }
+            Layout::Padded => FS_BASE + t * LINE_SIZE,
+        }
+    }
+}
+
+/// Each thread alternates a read of its own word with an FAA on it — the
+/// read keeps the thread a *sharer* of the line between updates (as a
+/// reader of its own counter would be), so packed-layout updates pay the
+/// real invalidation machinery, not just the RFO ping-pong.
+struct FsProgram {
+    addr: u64,
+    remaining: usize,
+}
+
+impl CoreProgram for FsProgram {
+    fn first(&mut self) -> Option<Step> {
+        (self.remaining > 0).then(|| Step::new(Op::Read, self.addr))
+    }
+
+    fn next(&mut self, prev: Step, _res: &Access) -> Option<Step> {
+        match prev.op {
+            Op::Read => Some(Step::counted(Op::Faa { delta: 1 }, self.addr)),
+            _ => {
+                self.remaining -= 1;
+                (self.remaining > 0).then(|| Step::new(Op::Read, self.addr))
+            }
+        }
+    }
+}
+
+/// Run the false-sharing scenario: `threads` cores, each updating its own
+/// word `ops_per_thread` times under `layout`. Returns `None` when the
+/// thread count cannot be pinned on the architecture.
+pub fn run_false_sharing(
+    m: &mut Machine,
+    layout: Layout,
+    threads: usize,
+    ops_per_thread: usize,
+) -> Option<MulticoreResult> {
+    if threads < 1 || threads > m.cfg.topology.n_cores || ops_per_thread < 1 {
+        return None;
+    }
+    let mut progs: Vec<FsProgram> = (0..threads)
+        .map(|t| FsProgram { addr: layout.addr_of(t), remaining: ops_per_thread })
+        .collect();
+    Some(run_program(m, &mut progs, OpKind::Faa))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    #[test]
+    fn packed_layout_shares_lines_padded_does_not() {
+        assert_eq!(Layout::Packed.addr_of(0) / LINE_SIZE, Layout::Packed.addr_of(7) / LINE_SIZE);
+        assert_ne!(Layout::Packed.addr_of(7) / LINE_SIZE, Layout::Packed.addr_of(8) / LINE_SIZE);
+        assert_ne!(Layout::Padded.addr_of(0) / LINE_SIZE, Layout::Padded.addr_of(1) / LINE_SIZE);
+    }
+
+    #[test]
+    fn false_sharing_costs_bandwidth() {
+        let mut m = Machine::new(arch::haswell());
+        let packed = run_false_sharing(&mut m, Layout::Packed, 4, 200).unwrap();
+        let padded = run_false_sharing(&mut m, Layout::Padded, 4, 200).unwrap();
+        assert!(
+            padded.bandwidth_gbs > packed.bandwidth_gbs,
+            "padding must win: {} vs {}",
+            padded.bandwidth_gbs,
+            packed.bandwidth_gbs
+        );
+    }
+
+    #[test]
+    fn packed_layout_generates_coherence_traffic() {
+        let mut m = Machine::new(arch::haswell());
+        let packed = run_false_sharing(&mut m, Layout::Packed, 4, 200).unwrap();
+        let padded = run_false_sharing(&mut m, Layout::Padded, 4, 200).unwrap();
+        assert!(packed.total_line_hops() > padded.total_line_hops());
+        assert!(
+            packed.total_invalidations() > padded.total_invalidations(),
+            "packed {} vs padded {} invalidations",
+            packed.total_invalidations(),
+            padded.total_invalidations()
+        );
+    }
+
+    #[test]
+    fn impossible_thread_counts_rejected() {
+        let mut m = Machine::new(arch::haswell()); // 4 cores
+        assert!(run_false_sharing(&mut m, Layout::Packed, 5, 10).is_none());
+        assert!(run_false_sharing(&mut m, Layout::Packed, 0, 10).is_none());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut m = Machine::new(arch::bulldozer());
+        let a = run_false_sharing(&mut m, Layout::Packed, 8, 100).unwrap();
+        let b = run_false_sharing(&mut m, Layout::Packed, 8, 100).unwrap();
+        assert_eq!(a.bandwidth_gbs.to_bits(), b.bandwidth_gbs.to_bits());
+        assert_eq!(a.per_thread, b.per_thread);
+    }
+}

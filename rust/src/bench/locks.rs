@@ -1,0 +1,629 @@
+//! Lock/queue microbenchmarks (§6.1): synchronization primitives *built
+//! from* the simulated CAS/FAA/SWP atomics and priced end-to-end by the
+//! machine-accurate multi-core scheduler
+//! ([`crate::sim::multicore::run_program`]) — the paper's closing claim is
+//! that its atomic-cost analysis "enables simpler and more effective
+//! parallel programming", so the cost model must predict real primitives:
+//!
+//! * **test-and-set spinlock** — acquire via `SWP(lock, 1)`, release via a
+//!   plain store; every failed attempt is a wasted serialized RMW (the
+//!   contention-management pathology Dice et al. analyze);
+//! * **ticket lock** — `FAA` takes a ticket, waiters spin on plain reads
+//!   of the owner word (reads replicate, so waiting is cheap) and exactly
+//!   one RMW per acquisition reaches the interconnect;
+//! * **MPSC queue** — producers reserve slots with a `CAS` retry loop on
+//!   the shared tail (failures are *emergent* from rival interleavings),
+//!   then publish into per-item slot lines a single consumer drains.
+//!
+//! Reported: acquisitions/sec (enqueues/sec for the queue), the
+//! failed-attempt ratio of the acquire primitive, spin-read counts, and
+//! the scheduler's per-thread [`ContentionStats`].
+
+use crate::atomics::{Op, OpKind};
+use crate::sim::multicore::{agg, run_program, ContentionStats, CoreProgram, Step};
+use crate::sim::{Access, Machine};
+
+/// The lock word: TAS lock state / ticket dispenser / queue tail — clear
+/// of the latency buffers (0x4000_0000) and the contended line
+/// (0x5000_0000).
+const LOCK_ADDR: u64 = 0x6000_0000;
+/// Ticket-lock owner word / queue head publish word (its own line).
+const OWNER_ADDR: u64 = 0x6000_0040;
+/// The lock-protected shared counter the critical section updates.
+const COUNTER_ADDR: u64 = 0x6000_0080;
+/// MPSC slot array: one cache line per item, so slot publishes contend
+/// only with the consumer's poll of that item.
+const SLOTS_BASE: u64 = 0x6100_0000;
+
+/// Per-thread acquisitions/enqueues used by the sweep family and CLI.
+pub const ACQ_PER_THREAD: usize = 100;
+
+/// Safety valve: a wait loop exceeding this many retries/spins indicates
+/// a scheduler bug (a lost release), not contention — fail loudly. Sized
+/// for the worst legitimate case (61 Xeon Phi threads spinning ~1 ns
+/// reads through a full serialized run).
+const MAX_SPIN: u64 = 1 << 22;
+
+/// Which synchronization primitive to benchmark.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockKind {
+    /// Test-and-set spinlock (SWP acquire, store release).
+    TasSpin,
+    /// Ticket lock (FAA ticket, read spin, store release).
+    Ticket,
+    /// Multi-producer single-consumer queue (CAS tail reservation).
+    Mpsc,
+}
+
+impl LockKind {
+    pub const ALL: [LockKind; 3] = [LockKind::TasSpin, LockKind::Ticket, LockKind::Mpsc];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            LockKind::TasSpin => "tas-spinlock",
+            LockKind::Ticket => "ticket-lock",
+            LockKind::Mpsc => "mpsc-queue",
+        }
+    }
+
+    /// Parse a `--kind` CLI value.
+    pub fn parse(s: &str) -> Option<LockKind> {
+        match s {
+            "tas" | "tas-spinlock" | "spinlock" => Some(LockKind::TasSpin),
+            "ticket" | "ticket-lock" => Some(LockKind::Ticket),
+            "mpsc" | "queue" | "mpsc-queue" => Some(LockKind::Mpsc),
+            _ => None,
+        }
+    }
+
+    /// The atomic primitive the acquire path is built on.
+    pub fn primitive(self) -> OpKind {
+        match self {
+            LockKind::TasSpin => OpKind::Swp,
+            LockKind::Ticket => OpKind::Faa,
+            LockKind::Mpsc => OpKind::Cas,
+        }
+    }
+
+    /// Smallest meaningful thread count (the queue needs a producer *and*
+    /// the consumer).
+    pub fn min_threads(self) -> usize {
+        match self {
+            LockKind::Mpsc => 2,
+            _ => 1,
+        }
+    }
+}
+
+/// One measured lock/queue point.
+#[derive(Debug, Clone)]
+pub struct LockResult {
+    pub kind: LockKind,
+    pub threads: usize,
+    /// Completed acquisitions (lock kinds) or enqueued items (queue).
+    pub acquisitions: u64,
+    /// Acquire-primitive attempts (SWP/FAA/CAS issues on the hot word).
+    pub attempts: u64,
+    /// Attempts that did not acquire/reserve (SWP saw the lock held, CAS
+    /// lost to a rival). Always 0 for the ticket lock — FAA cannot fail,
+    /// which is exactly its selling point.
+    pub failed_attempts: u64,
+    /// Plain-read spins while waiting (ticket waiters, consumer polls).
+    pub spin_reads: u64,
+    /// Virtual time from first issue to last completion, ns.
+    pub elapsed_ns: f64,
+    /// Acquisitions (enqueues) per second of virtual time.
+    pub acq_per_sec: f64,
+    /// Per-thread scheduler stats, indexed by thread id.
+    pub per_thread: Vec<ContentionStats>,
+}
+
+impl LockResult {
+    /// Failed attempts / all attempts of the acquire primitive.
+    pub fn fail_ratio(&self) -> f64 {
+        if self.attempts == 0 {
+            0.0
+        } else {
+            self.failed_attempts as f64 / self.attempts as f64
+        }
+    }
+
+    pub fn total_line_hops(&self) -> u64 {
+        agg::total_line_hops(&self.per_thread)
+    }
+
+    pub fn mean_stall_ns(&self) -> f64 {
+        agg::mean_stall_ns(&self.per_thread)
+    }
+}
+
+fn slot_addr(i: u64) -> u64 {
+    SLOTS_BASE + i * 64
+}
+
+fn swp_acquire() -> Step {
+    Step::new(Op::Swp { value: 1 }, LOCK_ADDR)
+}
+
+fn reserve(expected: u64) -> Step {
+    Step::new(
+        Op::Cas { expected, new: expected.wrapping_add(1), fetched_operands: 1 },
+        LOCK_ADDR,
+    )
+}
+
+// ---- per-thread programs ---------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum TasPhase {
+    Acquire,
+    CsRead,
+    CsWrite,
+    Release,
+}
+
+/// `SWP(lock,1)` until it returns 0, increment the protected counter,
+/// store 0 to release.
+struct TasProgram {
+    remaining: usize,
+    phase: TasPhase,
+    attempts: u64,
+    failures: u64,
+    acquired: u64,
+}
+
+impl TasProgram {
+    fn new(acquisitions: usize) -> TasProgram {
+        TasProgram {
+            remaining: acquisitions,
+            phase: TasPhase::Acquire,
+            attempts: 0,
+            failures: 0,
+            acquired: 0,
+        }
+    }
+}
+
+impl CoreProgram for TasProgram {
+    fn first(&mut self) -> Option<Step> {
+        (self.remaining > 0).then(swp_acquire)
+    }
+
+    fn next(&mut self, _prev: Step, res: &Access) -> Option<Step> {
+        match self.phase {
+            TasPhase::Acquire => {
+                self.attempts += 1;
+                if res.value == 0 {
+                    self.phase = TasPhase::CsRead;
+                    Some(Step::new(Op::Read, COUNTER_ADDR))
+                } else {
+                    self.failures += 1;
+                    assert!(self.failures < MAX_SPIN, "TAS acquire livelock");
+                    Some(swp_acquire())
+                }
+            }
+            TasPhase::CsRead => {
+                self.phase = TasPhase::CsWrite;
+                Some(Step::new(Op::Write { value: res.value.wrapping_add(1) }, COUNTER_ADDR))
+            }
+            TasPhase::CsWrite => {
+                self.phase = TasPhase::Release;
+                Some(Step::counted(Op::Write { value: 0 }, LOCK_ADDR))
+            }
+            TasPhase::Release => {
+                self.acquired += 1;
+                self.remaining -= 1;
+                self.phase = TasPhase::Acquire;
+                (self.remaining > 0).then(swp_acquire)
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum TicketPhase {
+    Take,
+    Spin,
+    CsRead,
+    CsWrite,
+    Release,
+}
+
+/// `FAA(next,1)` takes a ticket; spin-read the owner word until it shows
+/// the ticket; increment the counter; store `ticket+1` to pass the lock.
+struct TicketProgram {
+    remaining: usize,
+    phase: TicketPhase,
+    ticket: u64,
+    attempts: u64,
+    spins: u64,
+    acquired: u64,
+}
+
+impl TicketProgram {
+    fn new(acquisitions: usize) -> TicketProgram {
+        TicketProgram {
+            remaining: acquisitions,
+            phase: TicketPhase::Take,
+            ticket: 0,
+            attempts: 0,
+            spins: 0,
+            acquired: 0,
+        }
+    }
+}
+
+impl CoreProgram for TicketProgram {
+    fn first(&mut self) -> Option<Step> {
+        (self.remaining > 0).then(|| Step::new(Op::Faa { delta: 1 }, LOCK_ADDR))
+    }
+
+    fn next(&mut self, _prev: Step, res: &Access) -> Option<Step> {
+        match self.phase {
+            TicketPhase::Take => {
+                self.attempts += 1;
+                self.ticket = res.value;
+                self.phase = TicketPhase::Spin;
+                Some(Step::new(Op::Read, OWNER_ADDR))
+            }
+            TicketPhase::Spin => {
+                if res.value == self.ticket {
+                    self.phase = TicketPhase::CsRead;
+                    Some(Step::new(Op::Read, COUNTER_ADDR))
+                } else {
+                    self.spins += 1;
+                    assert!(self.spins < MAX_SPIN, "ticket spin livelock");
+                    Some(Step::new(Op::Read, OWNER_ADDR))
+                }
+            }
+            TicketPhase::CsRead => {
+                self.phase = TicketPhase::CsWrite;
+                Some(Step::new(Op::Write { value: res.value.wrapping_add(1) }, COUNTER_ADDR))
+            }
+            TicketPhase::CsWrite => {
+                self.phase = TicketPhase::Release;
+                Some(Step::counted(
+                    Op::Write { value: self.ticket.wrapping_add(1) },
+                    OWNER_ADDR,
+                ))
+            }
+            TicketPhase::Release => {
+                self.acquired += 1;
+                self.remaining -= 1;
+                self.phase = TicketPhase::Take;
+                (self.remaining > 0).then(|| Step::new(Op::Faa { delta: 1 }, LOCK_ADDR))
+            }
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+enum ProducerPhase {
+    ReadTail,
+    Reserve,
+    Fill,
+}
+
+/// Snapshot the tail, `CAS(tail, t, t+1)` to reserve slot `t` (adopting
+/// the returned value on failure — CAS reports the current tail for
+/// free), then publish the item into its slot line.
+struct ProducerProgram {
+    remaining: usize,
+    phase: ProducerPhase,
+    expected: u64,
+    slot: u64,
+    attempts: u64,
+    failures: u64,
+    enqueued: u64,
+}
+
+impl ProducerProgram {
+    fn new(items: usize) -> ProducerProgram {
+        ProducerProgram {
+            remaining: items,
+            phase: ProducerPhase::ReadTail,
+            expected: 0,
+            slot: 0,
+            attempts: 0,
+            failures: 0,
+            enqueued: 0,
+        }
+    }
+}
+
+impl CoreProgram for ProducerProgram {
+    fn first(&mut self) -> Option<Step> {
+        (self.remaining > 0).then(|| Step::new(Op::Read, LOCK_ADDR))
+    }
+
+    fn next(&mut self, _prev: Step, res: &Access) -> Option<Step> {
+        match self.phase {
+            ProducerPhase::ReadTail => {
+                self.expected = res.value;
+                self.phase = ProducerPhase::Reserve;
+                Some(reserve(self.expected))
+            }
+            ProducerPhase::Reserve => {
+                self.attempts += 1;
+                if res.modified {
+                    // reservation succeeded: the old tail is our slot
+                    self.slot = self.expected;
+                    self.phase = ProducerPhase::Fill;
+                    Some(Step::counted(
+                        Op::Write { value: self.slot.wrapping_add(1) },
+                        slot_addr(self.slot),
+                    ))
+                } else {
+                    self.failures += 1;
+                    assert!(self.failures < MAX_SPIN, "CAS reserve livelock");
+                    self.expected = res.value;
+                    Some(reserve(self.expected))
+                }
+            }
+            ProducerPhase::Fill => {
+                self.enqueued += 1;
+                self.remaining -= 1;
+                if self.remaining > 0 {
+                    // optimistic guess: the tail we installed is current
+                    self.expected = self.slot.wrapping_add(1);
+                    self.phase = ProducerPhase::Reserve;
+                    Some(reserve(self.expected))
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// Poll slot `i` until a producer publishes it, bump the head word, move
+/// to slot `i+1`.
+struct ConsumerProgram {
+    total: u64,
+    consumed: u64,
+    spins: u64,
+}
+
+impl ConsumerProgram {
+    fn new(total_items: u64) -> ConsumerProgram {
+        ConsumerProgram { total: total_items, consumed: 0, spins: 0 }
+    }
+}
+
+impl CoreProgram for ConsumerProgram {
+    fn first(&mut self) -> Option<Step> {
+        (self.total > 0).then(|| Step::new(Op::Read, slot_addr(0)))
+    }
+
+    fn next(&mut self, prev: Step, res: &Access) -> Option<Step> {
+        match prev.op {
+            Op::Read => {
+                if res.value != 0 {
+                    // item visible: publish the new head
+                    Some(Step::counted(
+                        Op::Write { value: self.consumed.wrapping_add(1) },
+                        OWNER_ADDR,
+                    ))
+                } else {
+                    self.spins += 1;
+                    assert!(self.spins < MAX_SPIN, "consumer poll livelock");
+                    Some(Step::new(Op::Read, slot_addr(self.consumed)))
+                }
+            }
+            _ => {
+                self.consumed += 1;
+                (self.consumed < self.total)
+                    .then(|| Step::new(Op::Read, slot_addr(self.consumed)))
+            }
+        }
+    }
+}
+
+/// The concrete program a thread runs — an enum (not a boxed trait
+/// object) so the bench layer can read the program-level counters back
+/// after the run.
+enum LockProgram {
+    Tas(TasProgram),
+    Ticket(TicketProgram),
+    Producer(ProducerProgram),
+    Consumer(ConsumerProgram),
+}
+
+impl CoreProgram for LockProgram {
+    fn first(&mut self) -> Option<Step> {
+        match self {
+            LockProgram::Tas(p) => p.first(),
+            LockProgram::Ticket(p) => p.first(),
+            LockProgram::Producer(p) => p.first(),
+            LockProgram::Consumer(p) => p.first(),
+        }
+    }
+
+    fn next(&mut self, prev: Step, res: &Access) -> Option<Step> {
+        match self {
+            LockProgram::Tas(p) => p.next(prev, res),
+            LockProgram::Ticket(p) => p.next(prev, res),
+            LockProgram::Producer(p) => p.next(prev, res),
+            LockProgram::Consumer(p) => p.next(prev, res),
+        }
+    }
+}
+
+/// Run one lock/queue point: `threads` cores, `work_per_thread`
+/// acquisitions each (items per producer for the queue; thread 0 is the
+/// consumer). Returns `None` when the thread count is not realizable for
+/// the kind on this machine.
+pub fn run_lock(
+    m: &mut Machine,
+    kind: LockKind,
+    threads: usize,
+    work_per_thread: usize,
+) -> Option<LockResult> {
+    if threads < kind.min_threads() || threads > m.cfg.topology.n_cores || work_per_thread < 1 {
+        return None;
+    }
+    let mut progs: Vec<LockProgram> = match kind {
+        LockKind::TasSpin => {
+            (0..threads).map(|_| LockProgram::Tas(TasProgram::new(work_per_thread))).collect()
+        }
+        LockKind::Ticket => (0..threads)
+            .map(|_| LockProgram::Ticket(TicketProgram::new(work_per_thread)))
+            .collect(),
+        LockKind::Mpsc => {
+            let total = ((threads - 1) * work_per_thread) as u64;
+            std::iter::once(LockProgram::Consumer(ConsumerProgram::new(total)))
+                .chain(
+                    (1..threads)
+                        .map(|_| LockProgram::Producer(ProducerProgram::new(work_per_thread))),
+                )
+                .collect()
+        }
+    };
+
+    let r = run_program(m, &mut progs, kind.primitive());
+
+    let mut acquisitions = 0u64;
+    let mut attempts = 0u64;
+    let mut failed_attempts = 0u64;
+    let mut spin_reads = 0u64;
+    for p in &progs {
+        match p {
+            LockProgram::Tas(p) => {
+                acquisitions += p.acquired;
+                attempts += p.attempts;
+                failed_attempts += p.failures;
+            }
+            LockProgram::Ticket(p) => {
+                acquisitions += p.acquired;
+                attempts += p.attempts;
+                spin_reads += p.spins;
+            }
+            LockProgram::Producer(p) => {
+                acquisitions += p.enqueued;
+                attempts += p.attempts;
+                failed_attempts += p.failures;
+            }
+            LockProgram::Consumer(p) => {
+                spin_reads += p.spins;
+            }
+        }
+    }
+    let elapsed_ns = r.elapsed_ns;
+    Some(LockResult {
+        kind,
+        threads,
+        acquisitions,
+        attempts,
+        failed_attempts,
+        spin_reads,
+        elapsed_ns,
+        acq_per_sec: acquisitions as f64 / (elapsed_ns * 1e-9).max(f64::MIN_POSITIVE),
+        per_thread: r.per_thread,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    #[test]
+    fn every_acquisition_completes() {
+        let mut m = Machine::new(arch::haswell());
+        for kind in LockKind::ALL {
+            let r = run_lock(&mut m, kind, 4, 50).unwrap();
+            let expect = match kind {
+                LockKind::Mpsc => 3 * 50, // producers only
+                _ => 4 * 50,
+            };
+            assert_eq!(r.acquisitions, expect, "{}", kind.label());
+            assert!(r.acq_per_sec > 0.0);
+        }
+    }
+
+    #[test]
+    fn ticket_lock_never_fails_an_attempt() {
+        let mut m = Machine::new(arch::ivybridge());
+        let r = run_lock(&mut m, LockKind::Ticket, 8, 50).unwrap();
+        assert_eq!(r.failed_attempts, 0, "FAA cannot lose");
+        assert_eq!(r.attempts, r.acquisitions);
+        assert!(r.spin_reads > 0, "waiters must spin");
+    }
+
+    #[test]
+    fn tas_fail_ratio_grows_with_contention() {
+        let mut m = Machine::new(arch::ivybridge());
+        let solo = run_lock(&mut m, LockKind::TasSpin, 1, 50).unwrap();
+        let r2 = run_lock(&mut m, LockKind::TasSpin, 2, 50).unwrap();
+        let r8 = run_lock(&mut m, LockKind::TasSpin, 8, 50).unwrap();
+        assert_eq!(solo.fail_ratio(), 0.0, "uncontended TAS never fails");
+        assert!(r2.fail_ratio() > 0.0);
+        assert!(
+            r8.fail_ratio() > r2.fail_ratio(),
+            "{} vs {}",
+            r8.fail_ratio(),
+            r2.fail_ratio()
+        );
+    }
+
+    #[test]
+    fn mpsc_cas_failures_are_emergent() {
+        let mut m = Machine::new(arch::ivybridge());
+        let r2 = run_lock(&mut m, LockKind::Mpsc, 2, 50).unwrap(); // 1 producer
+        let r8 = run_lock(&mut m, LockKind::Mpsc, 8, 50).unwrap(); // 7 producers
+        assert_eq!(r2.fail_ratio(), 0.0, "a lone producer never loses the tail");
+        assert!(r8.fail_ratio() > 0.0, "rival producers must collide");
+        // the scheduler's engine-priced CAS failures agree with the
+        // program-level counters
+        let engine_fails: u64 = r8.per_thread.iter().map(|s| s.cas_failures).sum();
+        assert_eq!(engine_fails, r8.failed_attempts);
+    }
+
+    #[test]
+    fn mpsc_needs_a_producer_and_a_consumer() {
+        let mut m = Machine::new(arch::haswell());
+        assert!(run_lock(&mut m, LockKind::Mpsc, 1, 10).is_none());
+        assert!(run_lock(&mut m, LockKind::Mpsc, 2, 10).is_some());
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut m = Machine::new(arch::bulldozer());
+        for kind in LockKind::ALL {
+            let a = run_lock(&mut m, kind, 8, 30).unwrap();
+            let b = run_lock(&mut m, kind, 8, 30).unwrap();
+            assert_eq!(a.acq_per_sec.to_bits(), b.acq_per_sec.to_bits(), "{}", kind.label());
+            assert_eq!(a.per_thread, b.per_thread);
+            assert_eq!(a.failed_attempts, b.failed_attempts);
+        }
+    }
+
+    #[test]
+    fn contention_costs_throughput_per_acquisition() {
+        // More threads fight over the same lock word: the *per-thread*
+        // acquisition rate must drop even if aggregate rate varies.
+        let mut m = Machine::new(arch::bulldozer());
+        for kind in [LockKind::TasSpin, LockKind::Ticket] {
+            let r1 = run_lock(&mut m, kind, 1, 50).unwrap();
+            let r8 = run_lock(&mut m, kind, 8, 50).unwrap();
+            assert!(
+                r8.acq_per_sec / 8.0 < r1.acq_per_sec,
+                "{}: {} vs {}",
+                kind.label(),
+                r8.acq_per_sec / 8.0,
+                r1.acq_per_sec
+            );
+        }
+    }
+
+    #[test]
+    fn parse_round_trip() {
+        assert_eq!(LockKind::parse("tas"), Some(LockKind::TasSpin));
+        assert_eq!(LockKind::parse("ticket"), Some(LockKind::Ticket));
+        assert_eq!(LockKind::parse("mpsc"), Some(LockKind::Mpsc));
+        assert_eq!(LockKind::parse("nope"), None);
+        for kind in LockKind::ALL {
+            assert_eq!(LockKind::parse(kind.label()), Some(kind));
+        }
+    }
+}

@@ -9,14 +9,19 @@
 
 pub mod bandwidth;
 pub mod contention;
+pub mod faa_delta;
+pub mod falseshare;
 pub mod latency;
+pub mod locks;
 pub mod mechanisms;
 pub mod operand;
 pub mod placement;
 pub mod unaligned;
 
 pub use bandwidth::BandwidthBench;
+pub use faa_delta::FaaDeltaBench;
 pub use latency::LatencyBench;
+pub use locks::{LockKind, LockResult};
 pub use placement::{PrepLocality, PrepState};
 
 use crate::atomics::{Op, OpKind};

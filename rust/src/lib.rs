@@ -17,7 +17,12 @@
 //!
 //! * [`bench`] — the paper's benchmarking methodology (§2.1, §3): latency
 //!   pointer-chasing, bandwidth sweeps, contention, operand width,
-//!   unaligned operands, and mechanism ablations.
+//!   unaligned operands, mechanism ablations, successful-CAS and FAA-delta
+//!   sensitivity sweeps, multi-line false-sharing scenarios
+//!   ([`bench::falseshare`]), and the §6.1 lock/queue case study
+//!   ([`bench::locks`]: TAS spinlock, ticket lock, MPSC queue built from
+//!   the simulated atomics and priced by the multi-core scheduler's
+//!   per-thread program hooks, [`sim::multicore::CoreProgram`]).
 //! * [`model`] — the analytical performance model (Eq. 1–11) plus NRMSE
 //!   validation (Eq. 12) and the featurization consumed by the JAX/Pallas
 //!   layer.
@@ -27,10 +32,11 @@
 //!   (prediction, NRMSE, gradient fit step); Python never runs at
 //!   benchmark time.
 //! * [`sweep`] — the scenario layer: the [`sweep::Workload`] trait every
-//!   bench family implements, [`sweep::SweepPlan`] grids, and the parallel
-//!   [`sweep::SweepExecutor`] (per-worker machine pools, deterministic
-//!   input-ordered results, panic isolation) that every figure, dataset,
-//!   and the `repro sweep` subcommand run through.
+//!   bench family implements, [`sweep::SweepPlan`] grids, the one-table
+//!   family registry ([`sweep::families`]) behind `repro sweep --family`,
+//!   and the parallel [`sweep::SweepExecutor`] (per-worker machine pools,
+//!   deterministic input-ordered results, panic isolation) that every
+//!   figure, dataset, and the `repro sweep` subcommand run through.
 //! * [`coordinator`] — dataset collection + the model-fitting loop
 //!   (Table 2) driving the PJRT executables.
 //! * [`report`] — regenerates every table and figure of the paper.

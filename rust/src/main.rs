@@ -5,16 +5,23 @@
 //!
 //! Usage:
 //!   repro table <1|2|3>            regenerate a paper table
-//!   repro figure <2..15|8d|10a|10b> regenerate a paper figure
+//!   repro figure <2..15|8d|10a|10b> regenerate a paper figure (plus the
+//!                                   beyond-paper panels cas-succ, faa-delta)
 //!   repro all                       everything, in paper order
-//!   repro sweep [--threads N] [--json] [--arch NAME] [--family F]
+//!   repro sweep [--threads N] [--json] [--arch NAME] [--family F] [--list]
 //!                                   run the full measurement grid through
-//!                                   the parallel sweep executor
+//!                                   the parallel sweep executor; --list
+//!                                   prints the family names (one per line)
 //!   repro contend --arch NAME [--op OP] [--threads N] [--ops N]
 //!                 [--model machine|analytic] [--stats]
 //!                                   contended same-line benchmark (Fig. 8)
 //!                                   through the machine-accurate multi-core
 //!                                   scheduler, with per-thread stats
+//!   repro locks [--arch NAME] [--kind tas|ticket|mpsc|all] [--threads N]
+//!               [--acq N] [--stats]  §6.1 lock/queue case study (TAS
+//!                                   spinlock, ticket lock, MPSC queue on
+//!                                   simulated atomics) + false-sharing
+//!                                   contrast, machine-accurate engine
 //!   repro validate                  model-vs-simulator NRMSE per series
 //!   repro fit [--arch NAME]         Table 2 fit via the PJRT fit_step
 //!   repro bfs [--scale N] [--threads N] [--arch NAME]
@@ -34,7 +41,7 @@ use atomics_repro::graph::bfs::validate_tree;
 use atomics_repro::model::params::Theta;
 use atomics_repro::report::{figures, tables};
 use atomics_repro::runtime::Runtime;
-use atomics_repro::sweep::{ContentionWorkload, SweepExecutor, SweepJob, SweepPlan};
+use atomics_repro::sweep::SweepExecutor;
 use atomics_repro::util::cli::Args;
 use atomics_repro::util::table::Table;
 use atomics_repro::{arch, graph};
@@ -57,6 +64,7 @@ fn main() {
         Some("all") => cmd_all(),
         Some("sweep") => cmd_sweep(&args),
         Some("contend") => cmd_contend(&args),
+        Some("locks") => cmd_locks(&args),
         Some("validate") => cmd_validate(),
         Some("fit") => cmd_fit(&args),
         Some("bfs") => cmd_bfs(&args),
@@ -79,7 +87,7 @@ fn main() {
 fn usage() {
     eprintln!("repro — reproduction driver for 'Evaluating the Cost of Atomic Operations'");
     eprintln!(
-        "subcommands: table <n> | figure <id> | all | sweep | contend | validate | fit | bfs | ablation | latency | info"
+        "subcommands: table <n> | figure <id> | all | sweep | contend | locks | validate | fit | bfs | ablation | latency | info"
     );
     eprintln!("see README.md for details");
 }
@@ -138,6 +146,13 @@ fn cmd_all() -> i32 {
 }
 
 fn cmd_sweep(args: &Args) -> i32 {
+    if args.flag("list") {
+        // one family per line — consumed by the ci.sh smoke matrix
+        for name in atomics_repro::sweep::family_names() {
+            println!("{name}");
+        }
+        return 0;
+    }
     let threads: usize = args.opt_parse("threads", atomics_repro::sweep::default_threads());
     let json = args.flag("json");
     let family = args.opt("family").unwrap_or("all");
@@ -153,32 +168,15 @@ fn cmd_sweep(args: &Args) -> i32 {
     };
     let sizes = atomics_repro::report::sweep_sizes();
 
-    let mut jobs: Vec<SweepJob> = Vec::new();
-    if family == "latency" || family == "all" {
-        jobs.extend(SweepPlan::latency(configs.clone(), sizes.clone()).expand());
-    }
-    if family == "bandwidth" || family == "all" {
-        jobs.extend(SweepPlan::bandwidth(configs.clone(), sizes.clone()).expand());
-    }
-    if family == "contention" || family == "all" {
-        for cfg in &configs {
-            let xs: Vec<u64> = atomics_repro::bench::contention::paper_thread_counts(cfg)
-                .into_iter()
-                .map(|n| n as u64)
-                .collect();
-            for op in [OpKind::Cas, OpKind::Faa, OpKind::Write] {
-                jobs.push(SweepJob::new(
-                    cfg,
-                    std::sync::Arc::new(ContentionWorkload::new(op)),
-                    xs.iter().copied(),
-                ));
-            }
-        }
-    }
-    if !["latency", "bandwidth", "contention", "all"].contains(&family) {
-        eprintln!("unknown family '{family}' (latency | bandwidth | contention | all)");
+    // Families come from the one registry in sweep::families — the error
+    // message below can therefore never drift from what actually runs.
+    let Some(jobs) = atomics_repro::sweep::jobs_for(family, &configs, &sizes) else {
+        eprintln!(
+            "unknown family '{family}' ({} | all)",
+            atomics_repro::sweep::family_names().join(" | ")
+        );
         return 2;
-    }
+    };
     if jobs.is_empty() {
         eprintln!("nothing to sweep");
         return 2;
@@ -371,6 +369,61 @@ fn cmd_contend(args: &Args) -> i32 {
         if p.per_thread.len() > MAX_ROWS {
             println!("({} more threads elided)", p.per_thread.len() - MAX_ROWS);
         }
+    }
+    0
+}
+
+fn cmd_locks(args: &Args) -> i32 {
+    use atomics_repro::bench::locks::{ACQ_PER_THREAD, LockKind};
+
+    let arch_name = args.opt("arch").unwrap_or("ivybridge");
+    let Some(cfg) = arch::by_name(arch_name) else {
+        eprintln!("unknown arch '{arch_name}'");
+        return 2;
+    };
+    let kind_opt = args.opt("kind");
+    let kinds: Vec<LockKind> = match kind_opt {
+        None | Some("all") => LockKind::ALL.to_vec(),
+        Some(s) => match LockKind::parse(s) {
+            Some(k) => vec![k],
+            None => {
+                eprintln!("unknown kind '{s}' (tas | ticket | mpsc | all)");
+                return 2;
+            }
+        },
+    };
+    let work: usize = args.opt_parse("acq", ACQ_PER_THREAD).max(1);
+    // With a single kind selected, its minimum applies (MPSC needs a
+    // producer and the consumer); with several, kinds below their minimum
+    // just skip the point.
+    let min_threads = kinds.iter().map(|k| k.min_threads()).min().unwrap_or(1);
+    let counts: Vec<usize> = match args.opt("threads") {
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if (min_threads..=cfg.topology.n_cores).contains(&n) => vec![n],
+            Ok(n) => {
+                eprintln!(
+                    "--threads {n} outside {min_threads}..={} on {} for {}",
+                    cfg.topology.n_cores,
+                    cfg.name,
+                    kinds.iter().map(|k| k.label()).collect::<Vec<_>>().join("+")
+                );
+                return 2;
+            }
+            Err(_) => {
+                eprintln!("--threads wants a number");
+                return 2;
+            }
+        },
+        None => atomics_repro::sweep::families::lock_thread_counts(&cfg),
+    };
+    print!(
+        "{}",
+        figures::locks_report(&cfg, &kinds, &counts, work, args.flag("stats"))
+    );
+    // The §6.1 story ends with the layout advice: show the false-sharing
+    // contrast unless the run is focused on a single kind.
+    if kind_opt.is_none() || args.flag("falseshare") {
+        println!("{}", figures::false_sharing_report(&cfg, work));
     }
     0
 }
@@ -596,5 +649,7 @@ fn cmd_info() -> i32 {
             }
         );
     }
+    println!();
+    println!("{}", tables::workload_families().render());
     0
 }

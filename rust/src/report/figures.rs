@@ -720,6 +720,285 @@ pub fn figure15() -> String {
     )
 }
 
+/// Successful vs failing CAS per coherence state (local placement): the
+/// §3.2 protocol's other half. Writes `results/cas_success_<arch>.csv`.
+pub fn cas_success_figure(cfg: &MachineConfig) -> String {
+    let sizes = sweep_sizes();
+    let mut jobs = Vec::new();
+    let mut states = Vec::new();
+    for state in [PrepState::E, PrepState::M, PrepState::S, PrepState::O] {
+        if state == PrepState::O && !cfg.protocol.has_owned() {
+            continue;
+        }
+        states.push(state);
+        jobs.push(SweepJob::sized(
+            cfg,
+            Arc::new(crate::sweep::SuccessfulCas { state, locality: PrepLocality::Local }),
+            &sizes,
+        ));
+        jobs.push(SweepJob::sized(
+            cfg,
+            Arc::new(LatencyBench::new(OpKind::Cas, state, PrepLocality::Local)),
+            &sizes,
+        ));
+    }
+    let mut out = String::new();
+    let results = run_series_reporting(&jobs, &mut out);
+    let mut all = Vec::new();
+    for (i, state) in states.iter().enumerate() {
+        let (Some(succ), Some(fail)) = (results[2 * i].clone(), results[2 * i + 1].clone())
+        else {
+            continue;
+        };
+        let mut fail = fail;
+        fail.name = format!("CAS-fail {} local", state.label());
+        out.push_str(
+            &render_series(
+                &format!(
+                    "cas-success — {} successful vs failing CAS [ns], {} state, local",
+                    cfg.name,
+                    state.label()
+                ),
+                &[succ.clone(), fail.clone()],
+            )
+            .render(),
+        );
+        out.push('\n');
+        all.push(succ);
+        all.push(fail);
+    }
+    let slug = cfg.name.to_lowercase().replace(' ', "_");
+    write_series_csv(&format!("cas_success_{slug}"), &all);
+    out
+}
+
+/// FAA delta-sensitivity panel: one series per (width, delta) — deltas
+/// land on identical curves, widths split on the AMD part. Writes
+/// `results/faa_delta_<arch>.csv`.
+pub fn faa_delta_figure(cfg: &MachineConfig) -> String {
+    use crate::bench::faa_delta::{DELTAS, FaaDeltaBench};
+
+    let sizes = sweep_sizes();
+    let mut jobs = Vec::new();
+    for width in [Width::W64, Width::W128] {
+        for delta in DELTAS {
+            jobs.push(SweepJob::sized(
+                cfg,
+                Arc::new(FaaDeltaBench::new(width, delta)),
+                &sizes,
+            ));
+        }
+    }
+    let mut out = String::new();
+    let series: Vec<Series> = run_series_reporting(&jobs, &mut out)
+        .into_iter()
+        .flatten()
+        .collect();
+    let slug = cfg.name.to_lowercase().replace(' ', "_");
+    write_series_csv(&format!("faa_delta_{slug}"), &series);
+    out.push_str(
+        &render_series(
+            &format!("faa-delta — {} FAA latency [ns] by width x delta (M state, local)", cfg.name),
+            &series,
+        )
+        .render(),
+    );
+    out
+}
+
+/// §6.1 lock/queue case study: run the lock family (TAS spinlock, ticket
+/// lock, MPSC queue — all built from the simulated atomics) over thread
+/// counts on the machine-accurate scheduler. Prints one table per kind
+/// (plus per-thread stats tables when `with_stats`) and writes
+/// `results/locks_<arch>.csv` and `results/locks_<arch>_stats.csv` — the
+/// latter carries every thread's [`crate::sim::ContentionStats`] for
+/// every (kind, thread count) point.
+pub fn locks_report(
+    cfg: &MachineConfig,
+    kinds: &[crate::bench::locks::LockKind],
+    counts: &[usize],
+    work_per_thread: usize,
+    with_stats: bool,
+) -> String {
+    use crate::bench::locks::run_lock;
+
+    let mut out = String::new();
+    let mut csv = crate::util::csv::Csv::new(&[
+        "kind",
+        "threads",
+        "acq_per_sec",
+        "fail_ratio",
+        "attempts",
+        "failed_attempts",
+        "spin_reads",
+        "line_hops",
+        "stall_ns_per_op",
+        "elapsed_ns",
+    ]);
+    let mut stats_csv = crate::util::csv::Csv::new(&[
+        "kind",
+        "threads",
+        "thread",
+        "ops",
+        "line_hops",
+        "interconnect_hops",
+        "invalidations",
+        "cas_failures",
+        "stall_ns",
+        "latency_ns",
+    ]);
+    let mut m = crate::sim::Machine::new(cfg.clone());
+    for &kind in kinds {
+        let mut t = Table::new(
+            format!(
+                "locks — {} {} ({} acquire, {} per thread)",
+                cfg.name,
+                kind.label(),
+                kind.primitive().label(),
+                work_per_thread
+            ),
+            &["threads", "Macq/s", "fail %", "spin reads", "hops/op", "stall ns/op"],
+        );
+        let mut last = None;
+        for &n in counts {
+            let Some(r) = run_lock(&mut m, kind, n, work_per_thread) else {
+                continue; // below the kind's minimum thread count
+            };
+            t.row(&[
+                n.to_string(),
+                format!("{:.3}", r.acq_per_sec / 1e6),
+                format!("{:.1}", r.fail_ratio() * 100.0),
+                r.spin_reads.to_string(),
+                format!(
+                    "{:.3}",
+                    r.total_line_hops() as f64
+                        / crate::sim::multicore::agg::total_ops(&r.per_thread).max(1) as f64
+                ),
+                format!("{:.1}", r.mean_stall_ns()),
+            ]);
+            csv.row(&[
+                kind.label().to_string(),
+                n.to_string(),
+                r.acq_per_sec.to_string(),
+                r.fail_ratio().to_string(),
+                r.attempts.to_string(),
+                r.failed_attempts.to_string(),
+                r.spin_reads.to_string(),
+                r.total_line_hops().to_string(),
+                r.mean_stall_ns().to_string(),
+                r.elapsed_ns.to_string(),
+            ]);
+            for st in &r.per_thread {
+                stats_csv.row(&[
+                    kind.label().to_string(),
+                    n.to_string(),
+                    st.core.to_string(),
+                    st.ops.to_string(),
+                    st.line_hops.to_string(),
+                    st.interconnect_hops.to_string(),
+                    st.invalidations.to_string(),
+                    st.cas_failures.to_string(),
+                    st.stall_ns.to_string(),
+                    st.latency_ns.to_string(),
+                ]);
+            }
+            last = Some(r);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+        if with_stats {
+            if let Some(r) = last {
+                let mut d = Table::new(
+                    format!("{} per-thread stats at {} threads", kind.label(), r.threads),
+                    &["thread", "ops", "hops", "inv", "CAS fails", "stall ns", "mean ns"],
+                );
+                const MAX_ROWS: usize = 16;
+                for st in r.per_thread.iter().take(MAX_ROWS) {
+                    d.row(&[
+                        st.core.to_string(),
+                        st.ops.to_string(),
+                        st.line_hops.to_string(),
+                        st.invalidations.to_string(),
+                        st.cas_failures.to_string(),
+                        format!("{:.0}", st.stall_ns),
+                        format!("{:.1}", st.mean_latency_ns()),
+                    ]);
+                }
+                out.push_str(&d.render());
+                if r.per_thread.len() > MAX_ROWS {
+                    out.push_str(&format!(
+                        "({} more threads elided)\n",
+                        r.per_thread.len() - MAX_ROWS
+                    ));
+                }
+                out.push('\n');
+            }
+        }
+    }
+    let slug = cfg.name.to_lowercase().replace(' ', "_");
+    let _ = csv.write(format!("{}/locks_{}.csv", crate::report::results_dir(), slug));
+    let _ = stats_csv
+        .write(format!("{}/locks_{}_stats.csv", crate::report::results_dir(), slug));
+    out
+}
+
+/// False-sharing contrast: the packed vs padded layouts side by side per
+/// thread count, with the coherence traffic that explains the gap.
+/// Writes `results/falseshare_<arch>.csv`.
+pub fn false_sharing_report(cfg: &MachineConfig, ops_per_thread: usize) -> String {
+    use crate::bench::falseshare::{run_false_sharing, Layout};
+
+    let counts = crate::sweep::families::false_sharing_counts(cfg);
+    let mut t = Table::new(
+        format!("false sharing — {} FAA on distinct words [GB/s]", cfg.name),
+        &["threads", "packed", "padded", "packed inv/op", "packed hops/op", "padded hops/op"],
+    );
+    let mut csv = crate::util::csv::Csv::new(&[
+        "threads",
+        "packed_gbs",
+        "padded_gbs",
+        "packed_inv_per_op",
+        "packed_hops_per_op",
+        "padded_hops_per_op",
+    ]);
+    let mut m = crate::sim::Machine::new(cfg.clone());
+    for n in counts {
+        let Some(packed) = run_false_sharing(&mut m, Layout::Packed, n, ops_per_thread) else {
+            continue;
+        };
+        let Some(padded) = run_false_sharing(&mut m, Layout::Padded, n, ops_per_thread) else {
+            continue;
+        };
+        let per_op = |v: u64, r: &crate::sim::MulticoreResult| v as f64 / r.total_ops().max(1) as f64;
+        let cells = [
+            packed.bandwidth_gbs,
+            padded.bandwidth_gbs,
+            per_op(packed.total_invalidations(), &packed),
+            per_op(packed.total_line_hops(), &packed),
+            per_op(padded.total_line_hops(), &padded),
+        ];
+        t.row(&[
+            n.to_string(),
+            format!("{:.3}", cells[0]),
+            format!("{:.3}", cells[1]),
+            format!("{:.3}", cells[2]),
+            format!("{:.3}", cells[3]),
+            format!("{:.3}", cells[4]),
+        ]);
+        csv.row(&[
+            n.to_string(),
+            cells[0].to_string(),
+            cells[1].to_string(),
+            cells[2].to_string(),
+            cells[3].to_string(),
+            cells[4].to_string(),
+        ]);
+    }
+    let slug = cfg.name.to_lowercase().replace(' ', "_");
+    let _ = csv.write(format!("{}/falseshare_{}.csv", crate::report::results_dir(), slug));
+    t.render()
+}
+
 /// Dispatch by figure id.
 pub fn figure(id: &str) -> Result<String> {
     Ok(match id {
@@ -739,7 +1018,12 @@ pub fn figure(id: &str) -> Result<String> {
         "13" => figure13(),
         "14" => figure14(),
         "15" => figure15(),
-        other => bail!("unknown figure '{other}' (valid: 2-9, 8d, 10a, 10b, 11-15)"),
+        // beyond-the-paper scenario panels (not in ALL_FIGURES):
+        "cas-succ" => cas_success_figure(&arch::haswell()),
+        "faa-delta" => faa_delta_figure(&arch::bulldozer()),
+        other => bail!(
+            "unknown figure '{other}' (valid: 2-9, 8d, 10a, 10b, 11-15, cas-succ, faa-delta)"
+        ),
     })
 }
 
@@ -805,5 +1089,40 @@ mod tests {
     #[test]
     fn unknown_figure_errors() {
         assert!(figure("99").is_err());
+    }
+
+    #[test]
+    fn cas_success_figure_contrasts_both_paths() {
+        fast();
+        let s = cas_success_figure(&arch::haswell());
+        assert!(s.contains("CAS-succ"), "{s}");
+        assert!(s.contains("CAS-fail"), "{s}");
+    }
+
+    #[test]
+    fn faa_delta_figure_covers_widths_and_deltas() {
+        fast();
+        let s = faa_delta_figure(&arch::bulldozer());
+        assert!(s.contains("FAA 64bit delta=2^0"), "{s}");
+        assert!(s.contains("FAA 128bit delta=2^62"), "{s}");
+    }
+
+    #[test]
+    fn locks_report_covers_all_kinds_and_stats() {
+        use crate::bench::locks::LockKind;
+        let s = locks_report(&arch::haswell(), &LockKind::ALL, &[1, 2, 4], 20, true);
+        for kind in LockKind::ALL {
+            assert!(s.contains(kind.label()), "{} missing:\n{s}", kind.label());
+        }
+        assert!(s.contains("fail %"));
+        assert!(s.contains("per-thread stats"));
+    }
+
+    #[test]
+    fn false_sharing_report_contrasts_layouts() {
+        let s = false_sharing_report(&arch::haswell(), 100);
+        assert!(s.contains("packed"));
+        assert!(s.contains("padded"));
+        assert!(s.contains("inv/op"));
     }
 }

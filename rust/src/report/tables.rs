@@ -149,6 +149,20 @@ pub fn table3() -> Table {
     t
 }
 
+/// Inventory of every sweep workload family — derived from the one
+/// registry in [`crate::sweep::families`], so it can never drift from
+/// what `repro sweep --family` actually accepts.
+pub fn workload_families() -> Table {
+    let mut t = Table::new(
+        "Workload families (repro sweep --family <name>, or all)",
+        &["family", "axis", "scenario"],
+    );
+    for f in crate::sweep::FAMILIES {
+        t.row(&[f.name.to_string(), f.axis.to_string(), f.about.to_string()]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,5 +193,13 @@ mod tests {
         let s = table3().render();
         assert!(s.contains("E/M state"));
         assert!(s.contains("S state"));
+    }
+
+    #[test]
+    fn family_inventory_lists_every_family() {
+        let s = workload_families().render();
+        for f in crate::sweep::FAMILIES {
+            assert!(s.contains(f.name), "{} missing", f.name);
+        }
     }
 }

@@ -46,6 +46,13 @@
 //! to expose (real hardware adds the timing noise that occasionally
 //! rotates the winner; the simulator deliberately does not).
 //!
+//! Beyond the fixed same-line hammer of [`run_contention`], the module
+//! exposes per-thread *program hooks*: [`CoreProgram`] describes an
+//! arbitrary deterministic instruction stream (spin loops, lock acquire/
+//! release protocols, queue enqueues) and [`run_program`] interleaves one
+//! program per core with per-line ownership arbitration — the substrate
+//! the lock/queue (§6.1) and false-sharing workload families run on.
+//!
 //! ## Invariants
 //!
 //! * **Deterministic ordering.** Grants are ordered by (request time,
@@ -82,10 +89,11 @@
 
 use crate::atomics::{Op, OpKind};
 use crate::sim::arbitration::{prefer_same_die, prefers_same_die, Request, MAX_LOCAL_BATCH};
-use crate::sim::engine::Machine;
+use crate::sim::cache::line_of;
+use crate::sim::engine::{Access, Machine};
 use crate::sim::timing::Level;
 use crate::sim::topology::{CoreId, Distance};
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, HashMap};
 
 /// Base address of the shared contended line — clear of the latency/
 /// bandwidth benches' buffer ranges so pooled machines cannot alias.
@@ -431,6 +439,206 @@ fn run_unserialized(
     finalize(kind, threads, finish, per_thread)
 }
 
+/// One step of a per-core [`CoreProgram`]: an operation against an address.
+///
+/// `counted` marks the step as retiring one unit of the thread's useful
+/// work (a lock acquisition, an enqueued item, a per-word update); spin
+/// reads and failed-attempt retries pass `false` so they never inflate
+/// [`ContentionStats::ops`], though their latency still accrues.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Step {
+    pub op: Op,
+    pub addr: u64,
+    pub counted: bool,
+}
+
+impl Step {
+    pub fn new(op: Op, addr: u64) -> Step {
+        Step { op, addr, counted: false }
+    }
+
+    pub fn counted(op: Op, addr: u64) -> Step {
+        Step { op, addr, counted: true }
+    }
+}
+
+/// A per-thread instruction stream driven by [`run_program`] — the hook the
+/// lock/queue and false-sharing families plug their loops into. The
+/// scheduler calls [`CoreProgram::first`] once, then feeds every completed
+/// step's [`Access`] back through [`CoreProgram::next`] until the program
+/// returns `None`. Programs must be deterministic: the next step may depend
+/// only on program state and the observed access results.
+pub trait CoreProgram {
+    /// The program's first step (`None` = the thread has no work).
+    fn first(&mut self) -> Option<Step>;
+
+    /// The step after `prev` completed with result `res` (`None` = done).
+    fn next(&mut self, prev: Step, res: &Access) -> Option<Step>;
+}
+
+/// Run one deterministic program per thread over a shared machine — the
+/// generalization of [`run_contention`] from "every thread hammers one
+/// line" to arbitrary multi-address loops (spinlocks, ticket locks, MPSC
+/// queues, false-sharing stride patterns).
+///
+/// Scheduling: thread `t` runs pinned on core `t`. Serializing operations
+/// (atomics, and plain stores on parts without contended write combining)
+/// arbitrate per cache line: a request finding its line busy is re-queued
+/// at the line's free time, so grants are FIFO by (ready time, issue
+/// sequence) — the sequence number is assigned when a step is first
+/// issued and survives re-queuing, so an older request (a lock holder's
+/// release) can never be starved forever by a stream of younger retries.
+/// Deterministic, and engine state mutates in non-decreasing virtual
+/// time. Non-serializing steps (reads, combined stores) execute at their
+/// request time. Line occupancy reuses [`run_contention`]'s model:
+/// execute phase plus the un-overlappable transfer share when another
+/// serializing request for the same line is pending, the raw latency
+/// otherwise.
+///
+/// Costs are engine-priced: every latency comes out of
+/// [`Machine::access64`]; CAS failures in the stats are the engine's
+/// (`modified == false`). Resets the machine on entry (fresh-machine
+/// semantics). `label` names the family's dominant primitive in the
+/// returned [`MulticoreResult::op`].
+pub fn run_program<P: CoreProgram>(
+    m: &mut Machine,
+    programs: &mut [P],
+    label: OpKind,
+) -> MulticoreResult {
+    let threads = programs.len();
+    assert!(
+        threads >= 1 && threads <= m.cfg.topology.n_cores,
+        "program count {threads} outside 1..={}",
+        m.cfg.topology.n_cores
+    );
+    m.reset();
+
+    let mut per_thread: Vec<ContentionStats> = (0..threads)
+        .map(|t| ContentionStats { core: t, ..ContentionStats::default() })
+        .collect();
+    /// A pending program request: min-heap by (ready time, issue seq).
+    #[derive(PartialEq)]
+    struct ProgRequest {
+        time: f64,
+        seq: u64,
+        thread: usize,
+    }
+    impl Eq for ProgRequest {}
+    impl Ord for ProgRequest {
+        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+            // min-heap (BinaryHeap is a max-heap): earliest time, then
+            // oldest issue sequence — FIFO fairness across re-queues.
+            other
+                .time
+                .partial_cmp(&self.time)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| other.seq.cmp(&self.seq))
+                .then_with(|| other.thread.cmp(&self.thread))
+        }
+    }
+    impl PartialOrd for ProgRequest {
+        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    let mut pending: Vec<Option<Step>> = vec![None; threads];
+    let mut queued_since = vec![0.0f64; threads];
+    let mut next_seq = 0u64;
+    let mut heap: BinaryHeap<ProgRequest> = BinaryHeap::new();
+    for (t, p) in programs.iter_mut().enumerate() {
+        if let Some(step) = p.first() {
+            pending[t] = Some(step);
+            heap.push(ProgRequest { time: 0.0, seq: next_seq, thread: t });
+            next_seq += 1;
+        }
+    }
+    // Per-line occupancy: line -> free_at. (Unlike run_contention, the
+    // program scheduler applies no HT-Assist same-die preference — grants
+    // are plain FIFO — so no owner needs tracking.)
+    let mut lines: HashMap<u64, f64> = HashMap::new();
+    let mut finish = 0.0f64;
+
+    while let Some(req) = heap.pop() {
+        let t = req.thread;
+        let step = pending[t].expect("queued thread has a pending step");
+        let line = line_of(step.addr);
+        let kind = step.op.kind();
+        let serial = serializes(m, kind);
+        if serial {
+            if let Some(&free_at) = lines.get(&line) {
+                if free_at > req.time {
+                    // Line busy: come back when it frees, keeping the
+                    // original issue sequence. Occupancy is strictly
+                    // positive, so this always makes progress.
+                    heap.push(ProgRequest { time: free_at, seq: req.seq, thread: t });
+                    continue;
+                }
+            }
+        }
+
+        let start = req.time;
+        let stall = start - queued_since[t];
+        let lag = start - m.clock_of(t);
+        if lag > 0.0 {
+            m.advance_clock(t, lag);
+        }
+
+        let inv_before = m.stats.invalidations_sent + m.stats.remote_invalidation_broadcasts;
+        let hops_before = m.stats.hops;
+        let acc = m.access64(t, step.op, step.addr);
+        let end = start + acc.latency;
+
+        let st = &mut per_thread[t];
+        if step.counted {
+            st.ops += 1;
+        }
+        st.stall_ns += stall;
+        st.latency_ns += stall + acc.latency;
+        st.finish_ns = end;
+        if acc.distance != Distance::Local && acc.level != Level::Memory {
+            st.line_hops += 1;
+        }
+        st.interconnect_hops += m.stats.hops - hops_before;
+        st.invalidations +=
+            m.stats.invalidations_sent + m.stats.remote_invalidation_broadcasts - inv_before;
+        if kind == OpKind::Cas && !acc.modified {
+            st.cas_failures += 1;
+        }
+
+        if serial {
+            let contended = pending.iter().enumerate().any(|(u, s)| {
+                u != t
+                    && matches!(s, Some(s2)
+                        if line_of(s2.addr) == line && serializes(m, s2.op.kind()))
+            });
+            let occupancy = if contended {
+                let exec_ns = match kind {
+                    OpKind::Write => m.cfg.timing.write_issue.max(1.0),
+                    k => m.cfg.timing.exec(k).max(1.0),
+                };
+                exec_ns + transfer_ns(m, acc.distance) * (1.0 - HANDOFF_OVERLAP)
+            } else {
+                acc.latency
+            };
+            lines.insert(line, start + occupancy.max(f64::MIN_POSITIVE));
+        }
+
+        finish = finish.max(end);
+        match programs[t].next(step, &acc) {
+            Some(next) => {
+                pending[t] = Some(next);
+                queued_since[t] = end;
+                heap.push(ProgRequest { time: end, seq: next_seq, thread: t });
+                next_seq += 1;
+            }
+            None => pending[t] = None,
+        }
+    }
+
+    finalize(label, threads, finish, per_thread)
+}
+
 fn finalize(
     kind: OpKind,
     threads: usize,
@@ -576,5 +784,82 @@ mod tests {
         let r1 = run_contention(&mut m, 1, OpKind::Read, 300);
         let r4 = run_contention(&mut m, 4, OpKind::Read, 300);
         assert!(r4.bandwidth_gbs > 2.0 * r1.bandwidth_gbs, "shared reads replicate");
+    }
+
+    /// A minimal program: FAA the shared line `n` times, counting each.
+    struct FaaLoop {
+        remaining: usize,
+    }
+
+    impl CoreProgram for FaaLoop {
+        fn first(&mut self) -> Option<Step> {
+            (self.remaining > 0).then(|| Step::counted(Op::Faa { delta: 1 }, SHARED_ADDR))
+        }
+
+        fn next(&mut self, prev: Step, _res: &Access) -> Option<Step> {
+            self.remaining -= 1;
+            (self.remaining > 0).then_some(prev)
+        }
+    }
+
+    #[test]
+    fn program_loop_matches_contention_shape() {
+        let mut m = Machine::new(arch::haswell());
+        let mut solo = vec![FaaLoop { remaining: 300 }];
+        let one = run_program(&mut m, &mut solo, OpKind::Faa);
+        let mut four: Vec<FaaLoop> = (0..4).map(|_| FaaLoop { remaining: 300 }).collect();
+        let many = run_program(&mut m, &mut four, OpKind::Faa);
+        assert_eq!(one.total_ops(), 300);
+        assert_eq!(many.total_ops(), 1200);
+        assert!(one.bandwidth_gbs > many.bandwidth_gbs, "contention must cost bandwidth");
+        assert!(many.total_line_hops() > 0, "the line must ping-pong");
+        for st in &many.per_thread {
+            assert_eq!(st.ops, 300, "every program completes its work");
+        }
+    }
+
+    #[test]
+    fn program_runs_are_deterministic() {
+        let mut m = Machine::new(arch::bulldozer());
+        let run = |m: &mut Machine| {
+            let mut progs: Vec<FaaLoop> = (0..8).map(|_| FaaLoop { remaining: 100 }).collect();
+            run_program(m, &mut progs, OpKind::Faa)
+        };
+        let a = run(&mut m);
+        let b = run(&mut m);
+        assert_eq!(a.bandwidth_gbs.to_bits(), b.bandwidth_gbs.to_bits());
+        assert_eq!(a.per_thread, b.per_thread);
+    }
+
+    #[test]
+    fn uncounted_steps_do_not_inflate_ops() {
+        struct ReadThenFaa {
+            phase: u8,
+        }
+        impl CoreProgram for ReadThenFaa {
+            fn first(&mut self) -> Option<Step> {
+                Some(Step::new(Op::Read, SHARED_ADDR))
+            }
+            fn next(&mut self, _prev: Step, _res: &Access) -> Option<Step> {
+                self.phase += 1;
+                (self.phase == 1).then(|| Step::counted(Op::Faa { delta: 1 }, SHARED_ADDR))
+            }
+        }
+        let mut m = Machine::new(arch::haswell());
+        let mut progs = vec![ReadThenFaa { phase: 0 }];
+        let r = run_program(&mut m, &mut progs, OpKind::Faa);
+        assert_eq!(r.total_ops(), 1, "only the counted step retires work");
+        assert!(r.per_thread[0].latency_ns > 0.0, "the read's latency still accrues");
+    }
+
+    #[test]
+    fn program_invariants_hold_after_run() {
+        for cfg in arch::all() {
+            let mut m = Machine::new(cfg);
+            let n = m.cfg.topology.n_cores.min(8);
+            let mut progs: Vec<FaaLoop> = (0..n).map(|_| FaaLoop { remaining: 50 }).collect();
+            run_program(&mut m, &mut progs, OpKind::Faa);
+            m.check_invariants().unwrap();
+        }
     }
 }

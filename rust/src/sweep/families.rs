@@ -1,0 +1,349 @@
+//! The workload-family registry: every scenario family the sweep layer can
+//! expand, in ONE table. The `repro sweep --family` parser, its error
+//! message, the `--list` output, the CI smoke matrix, and the family
+//! inventory table all derive from [`FAMILIES`], so a new family added
+//! here is automatically runnable, listed, and smoke-tested — it cannot
+//! silently rot.
+
+use crate::atomics::{OpKind, Width};
+use crate::bench::bandwidth::BandwidthBench;
+use crate::bench::contention::paper_thread_counts;
+use crate::bench::faa_delta::{DELTAS, FaaDeltaBench};
+use crate::bench::falseshare::Layout;
+use crate::bench::locks::LockKind;
+use crate::bench::mechanisms::figure9_variants;
+use crate::bench::placement::{PrepLocality, PrepState};
+use crate::sim::MachineConfig;
+use crate::sweep::plan::{SweepJob, SweepPlan};
+use crate::sweep::workload::{
+    ContentionWorkload, FalseSharingWorkload, LockWorkload, MechanismVariant, SuccessfulCas,
+    TwoOperandCas, UnalignedChase,
+};
+use std::sync::Arc;
+
+/// One workload family: a name (the `--family` value), its sweep axis,
+/// a one-line description, and the job builder.
+pub struct FamilySpec {
+    pub name: &'static str,
+    pub axis: &'static str,
+    pub about: &'static str,
+    build: fn(&[MachineConfig], &[usize]) -> Vec<SweepJob>,
+}
+
+impl FamilySpec {
+    /// Expand this family's grid over the given architectures and sizes
+    /// (size-axis families only; thread-axis families derive their own
+    /// coordinates from each machine's topology).
+    pub fn jobs(&self, configs: &[MachineConfig], sizes: &[usize]) -> Vec<SweepJob> {
+        (self.build)(configs, sizes)
+    }
+}
+
+/// Every family, in presentation order. THE single source of truth.
+pub const FAMILIES: &[FamilySpec] = &[
+    FamilySpec {
+        name: "latency",
+        axis: "buffer_bytes",
+        about: "pointer-chase latency grid, all ops x states x localities (§3, Fig. 2-4)",
+        build: build_latency,
+    },
+    FamilySpec {
+        name: "bandwidth",
+        axis: "buffer_bytes",
+        about: "sequential bandwidth grid (§5.2, Fig. 5/15)",
+        build: build_bandwidth,
+    },
+    FamilySpec {
+        name: "contention",
+        axis: "threads",
+        about: "same-line contended atomics, machine-accurate engine (§5.4, Fig. 8)",
+        build: build_contention,
+    },
+    FamilySpec {
+        name: "operand",
+        axis: "buffer_bytes",
+        about: "two-fetched-operand CAS (§5.5, Fig. 8d)",
+        build: build_operand,
+    },
+    FamilySpec {
+        name: "unaligned",
+        axis: "buffer_bytes",
+        about: "line-spanning operands, bus-locked atomics (§5.7, Fig. 10a/14)",
+        build: build_unaligned,
+    },
+    FamilySpec {
+        name: "mechanisms",
+        axis: "buffer_bytes",
+        about: "prefetcher/frequency mechanism ablations (§5.6, Fig. 9)",
+        build: build_mechanisms,
+    },
+    FamilySpec {
+        name: "cas-success",
+        axis: "buffer_bytes",
+        about: "expected-value-matched CAS vs the fail path, per state/locality (§3.2)",
+        build: build_cas_success,
+    },
+    FamilySpec {
+        name: "faa-delta",
+        axis: "buffer_bytes",
+        about: "FAA sensitivity: operand width x delta magnitude (§5.3)",
+        build: build_faa_delta,
+    },
+    FamilySpec {
+        name: "false-sharing",
+        axis: "threads",
+        about: "distinct words on packed vs padded lines, engine-priced (§6.1)",
+        build: build_false_sharing,
+    },
+    FamilySpec {
+        name: "locks",
+        axis: "threads",
+        about: "TAS spinlock / ticket lock / MPSC queue on simulated atomics (§6.1)",
+        build: build_locks,
+    },
+];
+
+/// The `--family` values, in table order (without the implicit `all`).
+pub fn family_names() -> Vec<&'static str> {
+    FAMILIES.iter().map(|f| f.name).collect()
+}
+
+/// Expand one family (or `all`) into jobs. `None` = unknown family name.
+pub fn jobs_for(
+    family: &str,
+    configs: &[MachineConfig],
+    sizes: &[usize],
+) -> Option<Vec<SweepJob>> {
+    if family == "all" {
+        return Some(
+            FAMILIES
+                .iter()
+                .flat_map(|f| f.jobs(configs, sizes))
+                .collect(),
+        );
+    }
+    FAMILIES
+        .iter()
+        .find(|f| f.name == family)
+        .map(|f| f.jobs(configs, sizes))
+}
+
+fn build_latency(configs: &[MachineConfig], sizes: &[usize]) -> Vec<SweepJob> {
+    SweepPlan::latency(configs.to_vec(), sizes.to_vec()).expand()
+}
+
+fn build_bandwidth(configs: &[MachineConfig], sizes: &[usize]) -> Vec<SweepJob> {
+    SweepPlan::bandwidth(configs.to_vec(), sizes.to_vec()).expand()
+}
+
+fn build_contention(configs: &[MachineConfig], _sizes: &[usize]) -> Vec<SweepJob> {
+    let mut jobs = Vec::new();
+    for cfg in configs {
+        let xs: Vec<u64> = paper_thread_counts(cfg).into_iter().map(|n| n as u64).collect();
+        for op in [OpKind::Cas, OpKind::Faa, OpKind::Write] {
+            jobs.push(SweepJob::new(
+                cfg,
+                Arc::new(ContentionWorkload::new(op)),
+                xs.iter().copied(),
+            ));
+        }
+    }
+    jobs
+}
+
+fn build_operand(configs: &[MachineConfig], sizes: &[usize]) -> Vec<SweepJob> {
+    let mut jobs = Vec::new();
+    for cfg in configs {
+        for state in [PrepState::E, PrepState::M] {
+            for locality in PrepLocality::available(&cfg.topology) {
+                jobs.push(SweepJob::sized(
+                    cfg,
+                    Arc::new(TwoOperandCas { state, locality }),
+                    sizes,
+                ));
+            }
+        }
+    }
+    jobs
+}
+
+fn build_unaligned(configs: &[MachineConfig], sizes: &[usize]) -> Vec<SweepJob> {
+    let mut jobs = Vec::new();
+    for cfg in configs {
+        let available = PrepLocality::available(&cfg.topology);
+        for op in [OpKind::Cas, OpKind::Faa, OpKind::Read] {
+            for locality in [PrepLocality::Local, PrepLocality::OnChip] {
+                if !available.contains(&locality) {
+                    continue;
+                }
+                jobs.push(SweepJob::sized(
+                    cfg,
+                    Arc::new(UnalignedChase { op, state: PrepState::M, locality }),
+                    sizes,
+                ));
+            }
+        }
+    }
+    jobs
+}
+
+fn build_mechanisms(configs: &[MachineConfig], sizes: &[usize]) -> Vec<SweepJob> {
+    let mut jobs = Vec::new();
+    for cfg in configs {
+        for (name, mech) in figure9_variants() {
+            let mut variant = cfg.clone();
+            variant.mechanisms = mech;
+            let workload = MechanismVariant::new(
+                name,
+                BandwidthBench::new(OpKind::Faa, PrepState::M, PrepLocality::Local),
+            );
+            jobs.push(
+                SweepJob::sized(&variant, Arc::new(workload), sizes)
+                    .with_pool_key(format!("{}+{name}", cfg.name)),
+            );
+        }
+    }
+    jobs
+}
+
+fn build_cas_success(configs: &[MachineConfig], sizes: &[usize]) -> Vec<SweepJob> {
+    let mut jobs = Vec::new();
+    for cfg in configs {
+        for state in [PrepState::E, PrepState::M, PrepState::S, PrepState::O] {
+            if state == PrepState::O && !cfg.protocol.has_owned() {
+                continue;
+            }
+            for locality in PrepLocality::available(&cfg.topology) {
+                jobs.push(SweepJob::sized(
+                    cfg,
+                    Arc::new(SuccessfulCas { state, locality }),
+                    sizes,
+                ));
+            }
+        }
+    }
+    jobs
+}
+
+fn build_faa_delta(configs: &[MachineConfig], sizes: &[usize]) -> Vec<SweepJob> {
+    let mut jobs = Vec::new();
+    for cfg in configs {
+        for width in [Width::W64, Width::W128] {
+            for delta in DELTAS {
+                jobs.push(SweepJob::sized(
+                    cfg,
+                    Arc::new(FaaDeltaBench::new(width, delta)),
+                    sizes,
+                ));
+            }
+        }
+    }
+    jobs
+}
+
+/// False-sharing thread counts: 2..=8 (the scenario needs rivals; beyond
+/// 8 threads the packed layout spills onto further lines anyway), clamped
+/// to the core count. Shared with the `repro locks` contrast table.
+pub fn false_sharing_counts(cfg: &MachineConfig) -> Vec<usize> {
+    (2..=cfg.topology.n_cores.min(8)).collect()
+}
+
+fn build_false_sharing(configs: &[MachineConfig], _sizes: &[usize]) -> Vec<SweepJob> {
+    let mut jobs = Vec::new();
+    for cfg in configs {
+        let xs: Vec<u64> = false_sharing_counts(cfg).into_iter().map(|n| n as u64).collect();
+        for layout in [Layout::Packed, Layout::Padded] {
+            jobs.push(SweepJob::new(
+                cfg,
+                Arc::new(FalseSharingWorkload::new(layout)),
+                xs.iter().copied(),
+            ));
+        }
+    }
+    jobs
+}
+
+/// Lock-family thread counts: the paper's power-of-two ladder capped at
+/// 32 threads (a 61-thread spin sweep on the Phi adds minutes of spin
+/// reads without changing the story; `repro locks --threads N` still
+/// reaches any count).
+pub fn lock_thread_counts(cfg: &MachineConfig) -> Vec<usize> {
+    paper_thread_counts(cfg).into_iter().filter(|&n| n <= 32).collect()
+}
+
+fn build_locks(configs: &[MachineConfig], _sizes: &[usize]) -> Vec<SweepJob> {
+    let mut jobs = Vec::new();
+    for cfg in configs {
+        let counts = lock_thread_counts(cfg);
+        for kind in LockKind::ALL {
+            let xs: Vec<u64> = counts
+                .iter()
+                .copied()
+                .filter(|&n| n >= kind.min_threads())
+                .map(|n| n as u64)
+                .collect();
+            jobs.push(SweepJob::new(cfg, Arc::new(LockWorkload::new(kind)), xs));
+        }
+    }
+    jobs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    const SIZES: [usize; 2] = [4 << 10, 64 << 10];
+
+    #[test]
+    fn every_family_expands_to_jobs() {
+        let configs = [arch::haswell()];
+        for f in FAMILIES {
+            let jobs = f.jobs(&configs, &SIZES);
+            assert!(!jobs.is_empty(), "family '{}' expanded to nothing", f.name);
+            for j in &jobs {
+                assert!(!j.xs.is_empty(), "family '{}' produced an empty job", f.name);
+                assert_eq!(j.workload.axis(), f.axis, "family '{}' axis mismatch", f.name);
+            }
+        }
+    }
+
+    #[test]
+    fn all_concatenates_every_family() {
+        let configs = [arch::haswell()];
+        let total: usize = FAMILIES.iter().map(|f| f.jobs(&configs, &SIZES).len()).sum();
+        assert_eq!(jobs_for("all", &configs, &SIZES).unwrap().len(), total);
+    }
+
+    #[test]
+    fn unknown_family_is_none() {
+        assert!(jobs_for("nope", &[arch::haswell()], &SIZES).is_none());
+    }
+
+    #[test]
+    fn family_names_match_table() {
+        let names = family_names();
+        assert_eq!(names.len(), FAMILIES.len());
+        assert!(names.contains(&"latency"));
+        assert!(names.contains(&"locks"));
+        assert!(names.contains(&"false-sharing"));
+        // names are CLI tokens: no spaces
+        assert!(names.iter().all(|n| !n.contains(' ')));
+    }
+
+    #[test]
+    fn mpsc_jobs_skip_single_thread() {
+        let jobs = jobs_for("locks", &[arch::haswell()], &SIZES).unwrap();
+        let mpsc = jobs
+            .iter()
+            .find(|j| j.workload.series_name().contains("mpsc"))
+            .expect("mpsc job present");
+        assert!(mpsc.xs.iter().all(|&x| x >= 2));
+    }
+
+    #[test]
+    fn lock_counts_capped_at_32() {
+        assert_eq!(lock_thread_counts(&arch::xeonphi()), vec![1, 2, 4, 8, 16, 32]);
+        assert_eq!(lock_thread_counts(&arch::haswell()), vec![1, 2, 4]);
+    }
+}

@@ -4,11 +4,15 @@
 //! §2.1/§3) — and for every future scenario (DESIGN.md §3).
 //!
 //! * [`Workload`] — the trait every bench family implements: name one
-//!   series, measure one sweep point on a fresh machine. All six families
+//!   series, measure one sweep point on a fresh machine. All ten families
 //!   (latency, bandwidth, contention, operand, unaligned, mechanism
-//!   ablation) go through it.
+//!   ablation, successful CAS, FAA delta, false sharing, locks/queues) go
+//!   through it.
 //! * [`SweepPlan`] — expands a declarative grid into [`SweepJob`]s,
 //!   filtering states/localities the architecture cannot realize.
+//! * [`families`] — the one-table registry of every family: the
+//!   `repro sweep --family` values, the CI smoke matrix, and the family
+//!   inventory table all derive from [`FAMILIES`].
 //! * [`SweepExecutor`] — a self-balancing thread pool (std::thread +
 //!   channels, no external deps): workers steal the next work item from a
 //!   shared queue, keep a per-architecture [`Machine`](crate::sim::Machine)
@@ -48,13 +52,16 @@
 //! ```
 
 pub mod executor;
+pub mod families;
 pub mod plan;
 pub mod workload;
 
 pub use executor::{SweepExecutor, SweepOutcome};
+pub use families::{family_names, jobs_for, FamilySpec, FAMILIES};
 pub use plan::{SweepJob, SweepKind, SweepPlan};
 pub use workload::{
-    ContentionWorkload, MechanismVariant, TwoOperandCas, UnalignedChase, Workload,
+    ContentionWorkload, FalseSharingWorkload, LockWorkload, MechanismVariant, SuccessfulCas,
+    TwoOperandCas, UnalignedChase, Workload,
 };
 
 /// Worker-thread count: `SWEEP_THREADS` if set, else every available core.

@@ -1,5 +1,5 @@
-//! The [`Workload`] trait and its implementations for all six bench
-//! families. A workload describes *one series* of a sweep; the executor
+//! The [`Workload`] trait and its implementations for every bench
+//! family. A workload describes *one series* of a sweep; the executor
 //! supplies a fresh [`Machine`] per point, so `measure` never allocates a
 //! machine itself — adding a new scenario is a ~20-line impl, not a new
 //! module.
@@ -7,7 +7,10 @@
 use crate::atomics::OpKind;
 use crate::bench::bandwidth::BandwidthBench;
 use crate::bench::contention::{run_model, ContentionModel, OPS_PER_THREAD};
+use crate::bench::faa_delta::FaaDeltaBench;
+use crate::bench::falseshare::{run_false_sharing, Layout};
 use crate::bench::latency::LatencyBench;
+use crate::bench::locks::{run_lock, LockKind};
 use crate::bench::operand::two_operand_cas_on;
 use crate::bench::placement::{PrepLocality, PrepState};
 use crate::bench::unaligned::unaligned_latency_on;
@@ -158,6 +161,116 @@ impl Workload for UnalignedChase {
     }
 }
 
+/// Successful (expected-value-matched) CAS latency sweep — the other half
+/// of §3.2's CAS protocol: the buffer is zero-filled and `expected = 0`,
+/// so every CAS succeeds and pays the full write path, unlike the
+/// headline fail-path benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct SuccessfulCas {
+    pub state: PrepState,
+    pub locality: PrepLocality,
+}
+
+impl SuccessfulCas {
+    fn bench(&self) -> LatencyBench {
+        let mut b = LatencyBench::new(OpKind::Cas, self.state, self.locality);
+        b.cas_succeeds = true;
+        b
+    }
+}
+
+impl Workload for SuccessfulCas {
+    fn series_name(&self) -> String {
+        format!("CAS-succ {} {}", self.state.label(), self.locality.label())
+    }
+
+    fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
+        self.bench().run_on(m, x as usize)
+    }
+}
+
+/// FAA delta-sensitivity (operand width × delta magnitude).
+impl Workload for FaaDeltaBench {
+    fn series_name(&self) -> String {
+        FaaDeltaBench::series_name(self)
+    }
+
+    fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
+        self.run_on(m, x as usize)
+    }
+}
+
+/// Multi-line false sharing: `x` is the thread count; the value is the
+/// aggregate per-word-update bandwidth in GB/s. Priced by the
+/// machine-accurate program scheduler, which resets the machine itself.
+#[derive(Debug, Clone, Copy)]
+pub struct FalseSharingWorkload {
+    pub layout: Layout,
+    pub ops_per_thread: usize,
+}
+
+impl FalseSharingWorkload {
+    pub fn new(layout: Layout) -> FalseSharingWorkload {
+        FalseSharingWorkload {
+            layout,
+            ops_per_thread: crate::bench::falseshare::OPS_PER_THREAD,
+        }
+    }
+}
+
+impl Workload for FalseSharingWorkload {
+    fn series_name(&self) -> String {
+        format!("false-sharing {}", self.layout.label())
+    }
+
+    fn axis(&self) -> &'static str {
+        "threads"
+    }
+
+    fn needs_machine(&self) -> bool {
+        false // run_program resets on entry
+    }
+
+    fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
+        run_false_sharing(m, self.layout, x as usize, self.ops_per_thread)
+            .map(|r| r.bandwidth_gbs)
+    }
+}
+
+/// Lock/queue microbenchmark (§6.1): `x` is the thread count; the value
+/// is millions of acquisitions (enqueues) per second of virtual time.
+/// Priced by the machine-accurate program scheduler.
+#[derive(Debug, Clone, Copy)]
+pub struct LockWorkload {
+    pub kind: LockKind,
+    pub work_per_thread: usize,
+}
+
+impl LockWorkload {
+    pub fn new(kind: LockKind) -> LockWorkload {
+        LockWorkload { kind, work_per_thread: crate::bench::locks::ACQ_PER_THREAD }
+    }
+}
+
+impl Workload for LockWorkload {
+    fn series_name(&self) -> String {
+        format!("{} Macq/s", self.kind.label())
+    }
+
+    fn axis(&self) -> &'static str {
+        "threads"
+    }
+
+    fn needs_machine(&self) -> bool {
+        false // run_program resets on entry
+    }
+
+    fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
+        run_lock(m, self.kind, x as usize, self.work_per_thread)
+            .map(|r| r.acq_per_sec / 1e6)
+    }
+}
+
 /// A mechanism-ablation variant (§5.6, Fig. 9): an inner bandwidth bench
 /// under a relabeled series. The *variant configuration* (prefetchers /
 /// frequency mechanisms toggled) travels in the [`super::SweepJob`]'s
@@ -229,5 +342,40 @@ mod tests {
         let mut m = Machine::new(arch::haswell());
         let w = LatencyBench::new(OpKind::Cas, PrepState::E, PrepLocality::OtherSocket);
         assert!(Workload::measure(&w, &mut m, 4096).is_none());
+    }
+
+    #[test]
+    fn successful_cas_measures_and_names() {
+        let mut m = Machine::new(arch::haswell());
+        let w = SuccessfulCas { state: PrepState::M, locality: PrepLocality::Local };
+        assert_eq!(w.series_name(), "CAS-succ M local");
+        assert!(w.measure(&mut m, 16 << 10).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn thread_axis_workloads_respect_core_limits() {
+        let mut m = Machine::new(arch::haswell()); // 4 cores
+        let fs = FalseSharingWorkload::new(Layout::Packed);
+        assert!(fs.measure(&mut m, 4).is_some());
+        assert!(fs.measure(&mut m, 5).is_none());
+        assert!(!fs.needs_machine());
+        assert_eq!(fs.axis(), "threads");
+        let lk = LockWorkload::new(LockKind::Mpsc);
+        assert!(lk.measure(&mut m, 1).is_none(), "MPSC needs a producer and a consumer");
+        assert!(lk.measure(&mut m, 2).is_some());
+        assert!(!lk.needs_machine());
+        assert_eq!(lk.axis(), "threads");
+    }
+
+    #[test]
+    fn lock_workload_names_distinguish_kinds() {
+        let names: Vec<String> = LockKind::ALL
+            .iter()
+            .map(|&k| LockWorkload::new(k).series_name())
+            .collect();
+        assert_eq!(
+            names,
+            vec!["tas-spinlock Macq/s", "ticket-lock Macq/s", "mpsc-queue Macq/s"]
+        );
     }
 }

@@ -1,0 +1,168 @@
+//! Integration tests for the scenario-diversity workload families
+//! (successful CAS, FAA delta, false sharing, locks/queues): executor
+//! determinism across worker counts, the paper-shaped inequalities each
+//! family must reproduce, and the family registry's CLI contract.
+
+use atomics_repro::arch;
+use atomics_repro::atomics::OpKind;
+use atomics_repro::bench::falseshare::{run_false_sharing, Layout};
+use atomics_repro::bench::latency::LatencyBench;
+use atomics_repro::bench::locks::{run_lock, LockKind};
+use atomics_repro::bench::placement::{PrepLocality, PrepState};
+use atomics_repro::sim::Machine;
+use atomics_repro::sweep::{jobs_for, SuccessfulCas, SweepExecutor, Workload};
+
+const SIZES: [usize; 2] = [16 << 10, 256 << 10];
+
+/// Every new family produces bit-identical results with 1 worker and with
+/// 4 workers (the acceptance bar every figure rests on).
+#[test]
+fn new_families_deterministic_across_executor_threads() {
+    // Haswell (4 cores) keeps the thread-axis families cheap in debug
+    // builds; larger-topology determinism is pinned by the unit tests in
+    // bench::locks / bench::falseshare (Bulldozer, 8 threads).
+    let configs = [arch::haswell()];
+    for family in ["cas-success", "faa-delta", "false-sharing", "locks"] {
+        let jobs = jobs_for(family, &configs, &SIZES).expect("known family");
+        assert!(!jobs.is_empty(), "{family} must expand");
+        let single = SweepExecutor::new(1).run(&jobs);
+        let parallel = SweepExecutor::new(4).run(&jobs);
+        assert_eq!(single.len(), parallel.len());
+        for (a, b) in single.iter().zip(&parallel) {
+            assert_eq!(a.name, b.name);
+            assert!(a.failures.is_empty(), "{family}/{}: {:?}", a.name, a.failures);
+            assert!(b.failures.is_empty(), "{family}/{}: {:?}", b.name, b.failures);
+            for ((xa, va), (xb, vb)) in a.points.iter().zip(&b.points) {
+                assert_eq!(xa, xb);
+                assert_eq!(
+                    va.map(f64::to_bits),
+                    vb.map(f64::to_bits),
+                    "{family}: {} [{}] at x={}",
+                    a.name,
+                    a.arch,
+                    xa
+                );
+            }
+        }
+    }
+}
+
+/// A successful CAS does strictly more work than a read (RFO + compare +
+/// write), so its latency must dominate the read baseline in every state.
+#[test]
+fn successful_cas_at_least_as_slow_as_read_per_state() {
+    for cfg in [arch::haswell(), arch::bulldozer()] {
+        for state in [PrepState::E, PrepState::M, PrepState::S] {
+            for locality in [PrepLocality::Local, PrepLocality::OnChip] {
+                let mut m = Machine::new(cfg.clone());
+                let read = LatencyBench::new(OpKind::Read, state, locality)
+                    .run_on(&mut m, 16 << 10)
+                    .unwrap();
+                m.reset();
+                let scas = SuccessfulCas { state, locality }
+                    .measure(&mut m, 16 << 10)
+                    .unwrap();
+                assert!(
+                    scas >= read,
+                    "{} {} {}: successful CAS {scas} vs read {read}",
+                    cfg.name,
+                    state.label(),
+                    locality.label()
+                );
+            }
+        }
+    }
+}
+
+/// The packed (falsely shared) layout must show more invalidation traffic
+/// and more line migrations than the padded layout, and lose bandwidth —
+/// with the coherence machinery, not an assertion, producing the numbers.
+#[test]
+fn false_sharing_shows_more_invalidations_than_padded() {
+    for cfg in [arch::haswell(), arch::bulldozer()] {
+        let mut m = Machine::new(cfg);
+        let n = m.cfg.topology.n_cores.min(8);
+        let packed = run_false_sharing(&mut m, Layout::Packed, n, 300).unwrap();
+        let padded = run_false_sharing(&mut m, Layout::Padded, n, 300).unwrap();
+        assert!(
+            packed.total_invalidations() > padded.total_invalidations(),
+            "{}: packed {} vs padded {} invalidations",
+            m.cfg.name,
+            packed.total_invalidations(),
+            padded.total_invalidations()
+        );
+        assert!(packed.total_line_hops() > padded.total_line_hops(), "{}", m.cfg.name);
+        assert!(packed.bandwidth_gbs < padded.bandwidth_gbs, "{}", m.cfg.name);
+    }
+}
+
+/// The CAS/SWP-based primitives waste more attempts as rivals multiply
+/// (the Dice et al. contention effect); FAA-based tickets never fail.
+#[test]
+fn lock_family_fail_ratio_grows_with_thread_count() {
+    let mut m = Machine::new(arch::ivybridge());
+    for kind in [LockKind::TasSpin, LockKind::Mpsc] {
+        let low = run_lock(&mut m, kind, 2, 40).unwrap();
+        let high = run_lock(&mut m, kind, 8, 40).unwrap();
+        assert!(
+            high.fail_ratio() > low.fail_ratio(),
+            "{}: {} vs {}",
+            kind.label(),
+            high.fail_ratio(),
+            low.fail_ratio()
+        );
+    }
+    let t2 = run_lock(&mut m, LockKind::Ticket, 2, 40).unwrap();
+    let t8 = run_lock(&mut m, LockKind::Ticket, 8, 40).unwrap();
+    assert_eq!(t2.fail_ratio(), 0.0);
+    assert_eq!(t8.fail_ratio(), 0.0);
+}
+
+/// The lock family is priced by the multi-core scheduler: per-thread
+/// ContentionStats must be populated and show real coherence traffic.
+#[test]
+fn lock_family_carries_per_thread_engine_stats() {
+    let mut m = Machine::new(arch::ivybridge());
+    for kind in LockKind::ALL {
+        let r = run_lock(&mut m, kind, 4, 40).unwrap();
+        assert_eq!(r.per_thread.len(), 4, "{}", kind.label());
+        assert!(
+            r.total_line_hops() > 0,
+            "{}: the hot word must migrate between cores",
+            kind.label()
+        );
+        assert!(
+            r.per_thread.iter().all(|s| s.latency_ns > 0.0),
+            "{}: every thread pays engine latency",
+            kind.label()
+        );
+    }
+}
+
+/// Direct lock runs and executor-pooled runs agree bit-for-bit (the
+/// fresh-machine-semantics contract of run_program).
+#[test]
+fn lock_results_identical_on_pooled_and_fresh_machines() {
+    let cfg = arch::haswell();
+    let jobs = jobs_for("locks", &[cfg.clone()], &SIZES).unwrap();
+    let out = SweepExecutor::new(2).run(&jobs);
+    let tas = out
+        .iter()
+        .find(|o| o.name.contains("tas-spinlock"))
+        .expect("tas series present");
+    for &(x, v) in &tas.points {
+        let mut m = Machine::new(cfg.clone());
+        let direct = run_lock(
+            &mut m,
+            LockKind::TasSpin,
+            x as usize,
+            atomics_repro::bench::locks::ACQ_PER_THREAD,
+        )
+        .unwrap();
+        assert_eq!(
+            v.map(f64::to_bits),
+            Some((direct.acq_per_sec / 1e6).to_bits()),
+            "threads={x}"
+        );
+    }
+}

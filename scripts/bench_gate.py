@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Bench regression gate for ci.sh.
+
+Compares a freshly generated BENCH_sweep.json against the committed
+BENCH_baseline.json and fails (exit 1) when any throughput entry regresses
+by more than the threshold (default 20%).
+
+Throughput entries are the keys containing "per_sec" — higher is better.
+Wall-clock keys (\*_ms) are machine-load noise and are reported but never
+gated on.
+
+Bootstrap: bench numbers are machine-dependent, so a fresh checkout (or a
+baseline still carrying "calibrated": false) cannot be gated against.  In
+that case the script rewrites the baseline from the fresh run, marks it
+calibrated, and exits 0 with a notice — commit the file to arm the gate
+on this machine.  `--update-baseline` forces the same rewrite (the escape
+hatch after an intentional slowdown).
+
+Usage: bench_gate.py BASELINE FRESH [--threshold 0.20] [--update-baseline]
+"""
+
+import json
+import sys
+
+
+def throughput_keys(d):
+    return sorted(
+        k for k, v in d.items() if "per_sec" in k and isinstance(v, (int, float))
+    )
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--")]
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    baseline_path, fresh_path = args
+    threshold = 0.20
+    for a in argv[1:]:
+        if a.startswith("--threshold="):
+            threshold = float(a.split("=", 1)[1])
+    update = "--update-baseline" in argv[1:]
+
+    try:
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench gate: cannot read fresh results {fresh_path}: {e}")
+        return 1
+
+    baseline = None
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except (OSError, ValueError):
+        pass
+
+    if update or baseline is None or not baseline.get("calibrated", False):
+        out = dict(fresh)
+        out["calibrated"] = True
+        with open(baseline_path, "w") as f:
+            json.dump(out, f, indent=1)
+            f.write("\n")
+        why = (
+            "--update-baseline"
+            if update
+            else "baseline missing or uncalibrated (first run on this machine)"
+        )
+        print(f"bench gate: wrote {baseline_path} from {fresh_path} ({why});")
+        print("bench gate: commit it to arm the regression gate. PASS (bootstrap)")
+        return 0
+
+    keys = throughput_keys(baseline)
+    if not keys:
+        print(f"bench gate: no throughput entries in {baseline_path}")
+        return 1
+    failures = []
+    for k in keys:
+        base = float(baseline[k])
+        new = float(fresh.get(k, 0.0))
+        ratio = new / base if base > 0 else float("inf")
+        status = "ok"
+        if new < base * (1.0 - threshold):
+            status = f"REGRESSION (<{1.0 - threshold:.0%} of baseline)"
+            failures.append(k)
+        print(f"  {k:<28} baseline {base:>12.1f}  fresh {new:>12.1f}  ({ratio:.2f}x) {status}")
+    if failures:
+        print(
+            f"bench gate: FAIL — {', '.join(failures)} regressed more than "
+            f"{threshold:.0%}; rerun, or ./ci.sh --update-baseline if intentional"
+        )
+        return 1
+    print("bench gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
