@@ -53,6 +53,9 @@ for fam in $(./target/release/repro sweep --list); do
     ./target/release/repro sweep --threads 2 --fast --family "$fam" --arch haswell
 done
 
+echo "== smoke: repro sweep --points 4 (deterministic budget thinning) =="
+./target/release/repro sweep --threads 2 --fast --points 4 --family latency --arch haswell
+
 echo "== smoke: repro contend (machine-accurate Fig. 8 path) =="
 ./target/release/repro contend --arch haswell --op cas --threads 2 --ops 200 --stats
 

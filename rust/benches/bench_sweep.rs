@@ -1,7 +1,10 @@
 //! End-to-end sweep-executor benchmark: times the full figure-style latency
-//! grid single-threaded vs. with all cores, plus the machine-accurate
-//! contention grid (Fig. 8), prints the speedups, and writes
-//! `BENCH_sweep.json` so future PRs can track sweep and contend throughput.
+//! grid single-threaded vs. with all cores, the machine-accurate
+//! contention grid (Fig. 8), and the §6.1 lock/queue grid (the multicore
+//! program scheduler's spin-fast-forward path, full topology-derived
+//! thread ladders including the Phi's 61-core point), prints the
+//! speedups, and writes `BENCH_sweep.json` so future PRs can track sweep,
+//! contend, and locks throughput (gated by `scripts/bench_gate.py`).
 //! Uses the in-tree harness (criterion is not vendored offline).
 //! `BENCH_FAST=1` reduces samples.
 
@@ -78,11 +81,29 @@ fn main() {
         contend_points as f64 / (contend_ms / 1e3).max(1e-9)
     );
 
+    // §6.1 lock/queue grid through the multicore program scheduler: the
+    // spin-fast-forward path. Run via the family registry so the bench
+    // measures exactly what `repro sweep --family locks` runs, full
+    // ladders included — before spin fast-forward this grid was
+    // minutes-scale (which is why it used to be capped at 32 threads).
+    let locks_jobs = atomics_repro::sweep::jobs_for("locks", &arch::all(), &[])
+        .expect("locks family registered");
+    let locks_points: usize = locks_jobs.iter().map(|j| j.xs.len()).sum();
+    let t0 = Instant::now();
+    let locks_out = SweepExecutor::new(threads).run(&locks_jobs);
+    let locks_ms = t0.elapsed().as_secs_f64() * 1e3;
+    black_box(&locks_out);
+    println!(
+        "  locks grid       {locks_ms:>10.1} ms   ({locks_points} points, {:.1} points/s)",
+        locks_points as f64 / (locks_ms / 1e3).max(1e-9)
+    );
+
     let json = format!(
         "{{\"bench\":\"sweep\",\"series\":{},\"points\":{},\"threads\":{},\
          \"single_ms\":{:.1},\"parallel_ms\":{:.1},\"speedup\":{:.3},\
          \"points_per_sec_parallel\":{:.1},\
-         \"contend_points\":{},\"contend_ms\":{:.1},\"contend_points_per_sec\":{:.1}}}\n",
+         \"contend_points\":{},\"contend_ms\":{:.1},\"contend_points_per_sec\":{:.1},\
+         \"locks_points\":{},\"locks_ms\":{:.1},\"locks_points_per_sec\":{:.3}}}\n",
         jobs.len(),
         n_points,
         threads,
@@ -92,7 +113,10 @@ fn main() {
         n_points as f64 / (parallel_ms / 1e3).max(1e-9),
         contend_points,
         contend_ms,
-        contend_points as f64 / (contend_ms / 1e3).max(1e-9)
+        contend_points as f64 / (contend_ms / 1e3).max(1e-9),
+        locks_points,
+        locks_ms,
+        locks_points as f64 / (locks_ms / 1e3).max(1e-9)
     );
     match std::fs::File::create("BENCH_sweep.json").and_then(|mut f| f.write_all(json.as_bytes()))
     {

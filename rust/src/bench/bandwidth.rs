@@ -5,7 +5,10 @@
 //! is where their 5–30× advantage comes from.
 
 use crate::atomics::{OpKind, Width};
-use crate::bench::placement::{choose_cast, prepare, FillPattern, PrepLocality, PrepState};
+use crate::bench::placement::{
+    choose_cast, prepare, FillPattern, PrepBuffers, PrepLocality, PrepSpec, PrepState,
+    SharerPlacement,
+};
 
 use crate::bench::{op_for, Point, Series};
 use crate::sim::engine::Machine;
@@ -41,24 +44,48 @@ impl BandwidthBench {
         )
     }
 
+    /// The cacheable preparation this bench performs — identical to the
+    /// latency bench's for matching parameters, so the sweep executor can
+    /// share one prepared machine across both families.
+    pub fn prep_spec(&self) -> PrepSpec {
+        PrepSpec {
+            base: 0x4000_0000,
+            state: self.state,
+            locality: self.locality,
+            sharer: SharerPlacement::Farthest,
+            fill: if self.op == OpKind::Cas && !self.cas_succeeds {
+                // §3.2: increasing byte values ensure every CAS fails
+                FillPattern::Increasing
+            } else {
+                FillPattern::Zero
+            },
+        }
+    }
+
     /// Bandwidth in GB/s for one buffer size on a fresh (new or reset)
     /// machine. This is the [`crate::sweep::Workload`] entry point.
     pub fn run_on(&self, m: &mut Machine, buffer_bytes: usize) -> Option<f64> {
-        let cast = choose_cast(&m.cfg.topology, self.locality)?;
-        let n_lines = (buffer_bytes / 64).max(1);
-        let fill = if self.op == OpKind::Cas && !self.cas_succeeds {
-            // §3.2: increasing byte values ensure every CAS fails
-            FillPattern::Increasing
-        } else {
-            FillPattern::Zero
-        };
-        let addrs = prepare(m, 0x4000_0000, n_lines, self.state, cast, fill);
+        let mut bufs = PrepBuffers::default();
+        self.prep_spec().prepare_into(m, buffer_bytes as u64, &mut bufs.addrs)?;
+        Some(self.measure_prepared(m, buffer_bytes, &mut bufs))
+    }
 
+    /// The measurement phase alone, on a machine already prepared per
+    /// [`BandwidthBench::prep_spec`] at this buffer size. Bit-identical to
+    /// the tail of [`BandwidthBench::run_on`].
+    pub fn measure_prepared(
+        &self,
+        m: &mut Machine,
+        _buffer_bytes: usize,
+        bufs: &mut PrepBuffers,
+    ) -> f64 {
+        let cast = choose_cast(&m.cfg.topology, self.locality)
+            .expect("measure_prepared requires a realizable locality");
         let op = op_for(self.op, self.cas_succeeds);
         let t0 = m.clock_of(cast.requester);
-        let bytes = m.access_sweep(cast.requester, op, &addrs, self.width);
+        let bytes = m.access_sweep(cast.requester, op, &bufs.addrs, self.width);
         let elapsed = m.clock_of(cast.requester) - t0;
-        Some(bytes as f64 / elapsed) // bytes per ns == GB/s
+        bytes as f64 / elapsed // bytes per ns == GB/s
     }
 
     /// Bandwidth in GB/s for one buffer size on a dedicated machine.

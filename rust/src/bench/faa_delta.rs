@@ -9,7 +9,9 @@
 //! free on the Intel parts, §5.3).
 
 use crate::atomics::{Op, Width};
-use crate::bench::placement::{choose_cast, prepare, FillPattern, PrepLocality, PrepState};
+use crate::bench::placement::{
+    choose_cast, FillPattern, PrepBuffers, PrepLocality, PrepSpec, PrepState, SharerPlacement,
+};
 use crate::sim::engine::Machine;
 use crate::sim::MachineConfig;
 use crate::util::rng::Rng;
@@ -43,20 +45,45 @@ impl FaaDeltaBench {
         )
     }
 
+    /// The cacheable preparation this bench performs — one spec for every
+    /// (width, delta) combination, so the whole family shares a single
+    /// prepared machine per buffer size in the sweep executor.
+    pub fn prep_spec(&self) -> PrepSpec {
+        PrepSpec {
+            base: 0x4000_0000,
+            state: PrepState::M,
+            locality: PrepLocality::Local,
+            sharer: SharerPlacement::Farthest,
+            fill: FillPattern::Zero,
+        }
+    }
+
     /// Mean latency for one buffer size on a fresh (new or reset) machine.
     /// This is the [`crate::sweep::Workload`] entry point.
     pub fn run_on(&self, m: &mut Machine, buffer_bytes: usize) -> Option<f64> {
-        let cast = choose_cast(&m.cfg.topology, PrepLocality::Local)?;
-        let n_lines = (buffer_bytes / 64).max(1);
-        let addrs =
-            prepare(m, 0x4000_0000, n_lines, PrepState::M, cast, FillPattern::Zero);
+        let mut bufs = PrepBuffers::default();
+        self.prep_spec().prepare_into(m, buffer_bytes as u64, &mut bufs.addrs)?;
+        Some(self.measure_prepared(m, buffer_bytes, &mut bufs))
+    }
 
-        let mut order: Vec<usize> = (0..addrs.len()).collect();
-        Rng::new(0xFAADE17A ^ buffer_bytes as u64).shuffle(&mut order);
+    /// The measurement phase alone, on a machine already prepared per
+    /// [`FaaDeltaBench::prep_spec`] at this buffer size.
+    pub fn measure_prepared(
+        &self,
+        m: &mut Machine,
+        buffer_bytes: usize,
+        bufs: &mut PrepBuffers,
+    ) -> f64 {
+        let n = bufs.addrs.len();
+        bufs.order.clear();
+        bufs.order.extend(0..n);
+        Rng::new(0xFAADE17A ^ buffer_bytes as u64).shuffle(&mut bufs.order);
 
+        let cast = choose_cast(&m.cfg.topology, PrepLocality::Local)
+            .expect("local locality always exists");
         let op = Op::Faa { delta: self.delta };
-        let total = m.access_chain(cast.requester, op, &addrs, &order, self.width);
-        Some(total / addrs.len() as f64)
+        let total = m.access_chain(cast.requester, op, &bufs.addrs, &bufs.order, self.width);
+        total / bufs.addrs.len() as f64
     }
 
     /// Mean latency for one buffer size on a dedicated machine.

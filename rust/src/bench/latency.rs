@@ -8,7 +8,8 @@
 
 use crate::atomics::{OpKind, Width};
 use crate::bench::placement::{
-    choose_cast_with_sharer, prepare, FillPattern, PrepLocality, PrepState, SharerPlacement,
+    choose_cast_with_sharer, FillPattern, PrepBuffers, PrepLocality, PrepSpec, PrepState,
+    SharerPlacement,
 };
 use crate::bench::{op_for, Point, Series};
 use crate::sim::engine::Machine;
@@ -50,27 +51,57 @@ impl LatencyBench {
         )
     }
 
+    /// The cacheable preparation this bench performs: two latency benches
+    /// with equal specs (e.g. read/FAA/SWP over the same state × locality)
+    /// leave bit-identical prepared machines, which the sweep executor's
+    /// prep cache exploits.
+    pub fn prep_spec(&self) -> PrepSpec {
+        PrepSpec {
+            base: 0x4000_0000,
+            state: self.state,
+            locality: self.locality,
+            sharer: self.sharer,
+            fill: if self.op == OpKind::Cas && !self.cas_succeeds {
+                FillPattern::Increasing
+            } else {
+                FillPattern::Zero
+            },
+        }
+    }
+
     /// Measure the mean latency for one buffer size on a fresh (new or
     /// reset) machine. Returns `None` when the locality does not exist on
     /// the architecture. This is the [`crate::sweep::Workload`] entry point.
     pub fn run_on(&self, m: &mut Machine, buffer_bytes: usize) -> Option<f64> {
-        let cast = choose_cast_with_sharer(&m.cfg.topology, self.locality, self.sharer)?;
-        let n_lines = (buffer_bytes / 64).max(1);
-        let fill = if self.op == OpKind::Cas && !self.cas_succeeds {
-            FillPattern::Increasing
-        } else {
-            FillPattern::Zero
-        };
-        let addrs = prepare(m, 0x4000_0000, n_lines, self.state, cast, fill);
+        let mut bufs = PrepBuffers::default();
+        self.prep_spec().prepare_into(m, buffer_bytes as u64, &mut bufs.addrs)?;
+        Some(self.measure_prepared(m, buffer_bytes, &mut bufs))
+    }
 
+    /// The measurement phase alone: a pointer chase over a machine already
+    /// prepared per [`LatencyBench::prep_spec`] at this buffer size, with
+    /// the prepared addresses in `bufs.addrs` (`bufs.order` is scratch).
+    /// Bit-identical to the tail of [`LatencyBench::run_on`].
+    pub fn measure_prepared(
+        &self,
+        m: &mut Machine,
+        buffer_bytes: usize,
+        bufs: &mut PrepBuffers,
+    ) -> f64 {
         // Pointer chase: pseudo-random permutation, one visit per line.
-        let mut order: Vec<usize> = (0..addrs.len()).collect();
+        let n = bufs.addrs.len();
+        bufs.order.clear();
+        bufs.order.extend(0..n);
         let mut rng = Rng::new(self.seed ^ buffer_bytes as u64);
-        rng.shuffle(&mut order);
+        rng.shuffle(&mut bufs.order);
 
+        // The requester is cast-determined; re-derive it (the locality was
+        // proven realizable by the preparation phase).
+        let cast = choose_cast_with_sharer(&m.cfg.topology, self.locality, self.sharer)
+            .expect("measure_prepared requires a realizable locality");
         let op = op_for(self.op, self.cas_succeeds);
-        let total = m.access_chain(cast.requester, op, &addrs, &order, self.width);
-        Some(total / addrs.len() as f64)
+        let total = m.access_chain(cast.requester, op, &bufs.addrs, &bufs.order, self.width);
+        total / bufs.addrs.len() as f64
     }
 
     /// Measure the mean latency for one buffer size on a dedicated machine.

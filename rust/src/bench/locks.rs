@@ -20,7 +20,9 @@
 //! the scheduler's per-thread [`ContentionStats`].
 
 use crate::atomics::{Op, OpKind};
-use crate::sim::multicore::{agg, run_program, ContentionStats, CoreProgram, Step};
+use crate::sim::multicore::{
+    agg, run_program, run_program_stepwise, ContentionStats, CoreProgram, MulticoreResult, Step,
+};
 use crate::sim::{Access, Machine};
 
 /// The lock word: TAS lock state / ticket dispenser / queue tail — clear
@@ -459,6 +461,30 @@ pub fn run_lock(
     threads: usize,
     work_per_thread: usize,
 ) -> Option<LockResult> {
+    run_lock_impl(m, kind, threads, work_per_thread, run_program)
+}
+
+/// [`run_lock`] through the stepwise reference scheduler
+/// ([`run_program_stepwise`]) — every spin poll pays a full engine walk.
+/// Bit-identical to [`run_lock`] by the scheduler's contract; exists so
+/// the golden equivalence tests can pin the spin fast path on the real
+/// §6.1 programs.
+pub fn run_lock_stepwise(
+    m: &mut Machine,
+    kind: LockKind,
+    threads: usize,
+    work_per_thread: usize,
+) -> Option<LockResult> {
+    run_lock_impl(m, kind, threads, work_per_thread, run_program_stepwise)
+}
+
+fn run_lock_impl(
+    m: &mut Machine,
+    kind: LockKind,
+    threads: usize,
+    work_per_thread: usize,
+    scheduler: fn(&mut Machine, &mut [LockProgram], OpKind) -> MulticoreResult,
+) -> Option<LockResult> {
     if threads < kind.min_threads() || threads > m.cfg.topology.n_cores || work_per_thread < 1 {
         return None;
     }
@@ -480,7 +506,7 @@ pub fn run_lock(
         }
     };
 
-    let r = run_program(m, &mut progs, kind.primitive());
+    let r = scheduler(m, &mut progs, kind.primitive());
 
     let mut acquisitions = 0u64;
     let mut attempts = 0u64;

@@ -114,7 +114,7 @@ pub struct Cast {
 }
 
 /// Where the extra S/O-state sharer lives relative to the requester.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum SharerPlacement {
     /// The farthest core (default): invalidations have a definite remote
     /// target, like the paper's multi-socket preparations.
@@ -190,10 +190,58 @@ pub fn choose_cast_with_sharer(
 /// Fill values for the prepared buffer (§3.2):
 /// * unsuccessful-CAS benchmarks need increasing values (never matching),
 /// * successful-CAS and all other benchmarks use zeros.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum FillPattern {
     Zero,
     Increasing,
+}
+
+/// Cacheable identity of one preparation phase. Two preparations with
+/// equal specs on machines of equal configuration leave the machines in
+/// bit-identical states (given the same buffer size), which is what lets
+/// the sweep executor's prep cache snapshot one prepared machine and
+/// reuse it for every workload sharing the spec — the golden
+/// `sweep_equivalence` tests pin the equivalence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PrepSpec {
+    /// First byte of the prepared buffer.
+    pub base: u64,
+    pub state: PrepState,
+    pub locality: PrepLocality,
+    pub sharer: SharerPlacement,
+    pub fill: FillPattern,
+}
+
+impl PrepSpec {
+    /// Lines a buffer of `buffer_bytes` occupies (the x→lines convention
+    /// every size-axis bench shares).
+    pub fn n_lines(buffer_bytes: u64) -> usize {
+        (buffer_bytes as usize / 64).max(1)
+    }
+
+    /// Run the preparation phase for a buffer of `buffer_bytes` on a fresh
+    /// (new or reset) machine, writing the line addresses into `addrs`.
+    /// Returns the cast, or `None` when the locality does not exist on the
+    /// machine's architecture (nothing is mutated in that case).
+    pub fn prepare_into(
+        &self,
+        m: &mut Machine,
+        buffer_bytes: u64,
+        addrs: &mut Vec<u64>,
+    ) -> Option<Cast> {
+        let cast = choose_cast_with_sharer(&m.cfg.topology, self.locality, self.sharer)?;
+        prepare_into(m, self.base, Self::n_lines(buffer_bytes), self.state, cast, self.fill, addrs);
+        Some(cast)
+    }
+}
+
+/// Reusable scratch owned by the executor's prep cache: the prepared line
+/// addresses and the pointer-chase permutation, recycled across points so
+/// the hot sweep loop allocates nothing.
+#[derive(Debug, Default, Clone)]
+pub struct PrepBuffers {
+    pub addrs: Vec<u64>,
+    pub order: Vec<usize>,
 }
 
 /// Prepare `n_lines` lines starting at `base` in `state` for `cast`.
@@ -206,7 +254,23 @@ pub fn prepare(
     cast: Cast,
     fill: FillPattern,
 ) -> Vec<u64> {
-    let addrs: Vec<u64> = (0..n_lines as u64).map(|i| base + i * 64).collect();
+    let mut addrs = Vec::new();
+    prepare_into(m, base, n_lines, state, cast, fill, &mut addrs);
+    addrs
+}
+
+/// [`prepare`] into a caller-owned buffer (allocation-free when reused).
+pub fn prepare_into(
+    m: &mut Machine,
+    base: u64,
+    n_lines: usize,
+    state: PrepState,
+    cast: Cast,
+    fill: FillPattern,
+    addrs: &mut Vec<u64>,
+) {
+    addrs.clear();
+    addrs.extend((0..n_lines as u64).map(|i| base + i * 64));
 
     // Fill phase: write the data values (as the owner), which also dirties
     // the lines (M). The TLB warm-up of §2.1 has no simulator equivalent.
@@ -225,23 +289,23 @@ pub fn prepare(
             // data flushed first. Re-reading by the owner keeps M, so we
             // emulate the benchmark's fresh-buffer read: flush, then read.
             m.flush_private(cast.owner);
-            for &a in &addrs {
+            for &a in addrs.iter() {
                 m.access64(cast.owner, Op::Read, a);
             }
         }
         PrepState::S => {
             m.flush_private(cast.owner);
-            for &a in &addrs {
+            for &a in addrs.iter() {
                 m.access64(cast.owner, Op::Read, a);
             }
-            for &a in &addrs {
+            for &a in addrs.iter() {
                 m.access64(cast.sharer, Op::Read, a);
             }
         }
         PrepState::O => {
             // Owner writes (already M), sharer reads: MOESI/GOLS → O at the
             // owner; MESIF → write-back + S/F (protocol-faithful).
-            for &a in &addrs {
+            for &a in addrs.iter() {
                 m.access64(cast.sharer, Op::Read, a);
             }
         }
@@ -254,7 +318,6 @@ pub fn prepare(
         m.advance_clock(c, 10_000_000.0);
     }
     m.stats = Default::default();
-    addrs
 }
 
 #[cfg(test)]

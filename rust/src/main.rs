@@ -8,10 +8,14 @@
 //!   repro figure <2..15|8d|10a|10b> regenerate a paper figure (plus the
 //!                                   beyond-paper panels cas-succ, faa-delta)
 //!   repro all                       everything, in paper order
-//!   repro sweep [--threads N] [--json] [--arch NAME] [--family F] [--list]
+//!   repro sweep [--threads N] [--json] [--arch NAME] [--family F]
+//!               [--points N] [--list]
 //!                                   run the full measurement grid through
-//!                                   the parallel sweep executor; --list
-//!                                   prints the family names (one per line)
+//!                                   the parallel sweep executor; --points
+//!                                   deterministically thins the grid to a
+//!                                   point budget (incremental runs);
+//!                                   --list prints the family names (one
+//!                                   per line)
 //!   repro contend --arch NAME [--op OP] [--threads N] [--ops N]
 //!                 [--model machine|analytic] [--stats]
 //!                                   contended same-line benchmark (Fig. 8)
@@ -170,13 +174,22 @@ fn cmd_sweep(args: &Args) -> i32 {
 
     // Families come from the one registry in sweep::families — the error
     // message below can therefore never drift from what actually runs.
-    let Some(jobs) = atomics_repro::sweep::jobs_for(family, &configs, &sizes) else {
+    let Some(mut jobs) = atomics_repro::sweep::jobs_for(family, &configs, &sizes) else {
         eprintln!(
             "unknown family '{family}' ({} | all)",
             atomics_repro::sweep::family_names().join(" | ")
         );
         return 2;
     };
+    if let Some(s) = args.opt("points") {
+        match s.parse::<usize>() {
+            Ok(budget) => atomics_repro::sweep::thin_points(&mut jobs, budget),
+            Err(_) => {
+                eprintln!("--points wants a number");
+                return 2;
+            }
+        }
+    }
     if jobs.is_empty() {
         eprintln!("nothing to sweep");
         return 2;

@@ -53,6 +53,7 @@ use crate::sim::topology::{CoreId, Distance};
 use crate::sim::writebuffer::WriteBuffer;
 use crate::util::fxhash::FastSet;
 use crate::util::rng::splitmix64;
+use std::sync::Arc;
 
 /// The jitter seed every fresh (or reset) machine starts from.
 const JITTER_SEED: u64 = 0x5EED;
@@ -74,9 +75,41 @@ pub struct Access {
     pub prior_state: CohState,
 }
 
+/// Memoized pricing of a repeated local-L1 read hit (a spin poll): created
+/// from the [`Access`] of an earlier poll and replayed through
+/// [`Machine::try_replay_read_hit`] by the multicore scheduler's spin fast
+/// path. Besides the architecture constants, the hit cost depends only on
+/// the [`StateClass`] of the reported prior state, which the replay
+/// re-verifies against the live coherence record on every use.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReadMemo {
+    /// State class the memoized cost was priced under.
+    pub state_class: StateClass,
+    /// Visible latency of the memoized hit, ns.
+    pub latency: f64,
+}
+
+impl ReadMemo {
+    /// Memoize `acc` if it was a local-L1 read hit (`None` otherwise). The
+    /// caller must additionally ensure the op was an aligned 64-bit
+    /// [`Op::Read`] and that [`Machine::spin_fast_path_ok`] holds.
+    pub fn of_read_hit(acc: &Access) -> Option<ReadMemo> {
+        (acc.level == Level::L1 && acc.distance == Distance::Local && !acc.modified).then(|| {
+            ReadMemo {
+                state_class: StateClass::of(acc.prior_state),
+                latency: acc.latency,
+            }
+        })
+    }
+}
+
 /// The simulated machine.
+///
+/// The configuration is held behind an [`Arc`] so that pooled machines,
+/// prep-cache snapshots, and sweep jobs share one allocation instead of
+/// deep-cloning the (overhead-table-carrying) config per machine.
 pub struct Machine {
-    pub cfg: MachineConfig,
+    pub cfg: Arc<MachineConfig>,
     l1: Vec<TagArray>,
     l2: Vec<TagArray>,
     l3: Vec<TagArray>,
@@ -101,8 +134,64 @@ pub(super) struct LineWalk {
     pub(super) prior_state: CohState,
 }
 
+impl Clone for Machine {
+    fn clone(&self) -> Machine {
+        Machine {
+            cfg: Arc::clone(&self.cfg),
+            l1: self.l1.clone(),
+            l2: self.l2.clone(),
+            l3: self.l3.clone(),
+            coherence: self.coherence.clone(),
+            mem: self.mem.clone(),
+            wb: self.wb.clone(),
+            clock: self.clock.clone(),
+            stream: self.stream.clone(),
+            prefetched: self.prefetched.clone(),
+            ht_shared_tracker: self.ht_shared_tracker.clone(),
+            stats: self.stats.clone(),
+            jitter_seed: self.jitter_seed,
+        }
+    }
+
+    /// Allocation-reusing restore — the sweep executor's prep cache restores
+    /// a pooled machine to a snapshot between points, so this path must not
+    /// reallocate the tag arrays and maps it overwrites. The exhaustive
+    /// destructuring makes the compiler reject a forgotten field.
+    fn clone_from(&mut self, source: &Machine) {
+        let Machine {
+            cfg,
+            l1,
+            l2,
+            l3,
+            coherence,
+            mem,
+            wb,
+            clock,
+            stream,
+            prefetched,
+            ht_shared_tracker,
+            stats,
+            jitter_seed,
+        } = source;
+        self.cfg = Arc::clone(cfg);
+        self.l1.clone_from(l1);
+        self.l2.clone_from(l2);
+        self.l3.clone_from(l3);
+        self.coherence.clone_from(coherence);
+        self.mem.clone_from(mem);
+        self.wb.clone_from(wb);
+        self.clock.clone_from(clock);
+        self.stream.clone_from(stream);
+        self.prefetched.clone_from(prefetched);
+        self.ht_shared_tracker.clone_from(ht_shared_tracker);
+        self.stats.clone_from(stats);
+        self.jitter_seed = *jitter_seed;
+    }
+}
+
 impl Machine {
-    pub fn new(cfg: MachineConfig) -> Machine {
+    pub fn new(cfg: impl Into<Arc<MachineConfig>>) -> Machine {
+        let cfg = cfg.into();
         let topo = cfg.topology;
         let l1 = (0..topo.n_cores)
             .map(|_| TagArray::new(cfg.l1.size, cfg.l1.ways))
@@ -286,6 +375,80 @@ impl Machine {
     /// Convenience: an aligned 64-bit access.
     pub fn access64(&mut self, core: CoreId, op: Op, addr: u64) -> Access {
         self.access(core, op, addr, Width::W64)
+    }
+
+    // ----- memoized spin polls (multicore fast path) ------------------------
+
+    /// May [`Machine::try_replay_read_hit`] be used on this machine at all?
+    ///
+    /// The replay replica assumes every repeat poll prices identically and
+    /// touches no prefetch state; frequency jitter (cost depends on the
+    /// global access counter) and the prefetchers (misses elsewhere can
+    /// seed `prefetched` with the polled line) both break that, so the
+    /// multicore scheduler falls back to full engine accesses whenever a
+    /// Figure-9-style mechanism variant is enabled. All four baseline
+    /// architectures run with every mechanism off
+    /// ([`crate::sim::mechanisms::Mechanisms`]), where this is true.
+    pub fn spin_fast_path_ok(&self) -> bool {
+        let m = self.cfg.mechanisms;
+        m.jitter_amplitude() == 0.0 && !m.hw_prefetcher && !m.adjacent_line
+    }
+
+    /// Replay a repeated aligned 64-bit read that previously hit the local
+    /// L1 — the inner loop of every spin-wait (`memo` comes from that
+    /// earlier [`Access`]). When the current machine state no longer
+    /// guarantees the engine would take its L1-hit fast path at the
+    /// memoized cost, this returns `None` *without mutating anything* and
+    /// the caller falls back to [`Machine::access64`]; on `Some`, the
+    /// machine state and the returned [`Access`] are bit-identical to what
+    /// `access64` would have produced — pinned by the `spin_replay` unit
+    /// tests and the multicore stepwise-equivalence golden tests.
+    ///
+    /// Why this is sound: an aligned read that hits the issuing core's L1
+    /// takes the engine's no-transition fast path (a read of a held line
+    /// never transitions: E/M imply sole ownership, S/O are explicitly
+    /// allowed), whose cost is `r_l1` plus the overhead-table residual —
+    /// a function of only the [`StateClass`] of the reported prior state.
+    /// The replay re-derives that state from the live coherence record and
+    /// bails out on any mismatch, so concurrent fills, invalidations, and
+    /// evictions by other cores can change the outcome only by forcing the
+    /// fallback, never by yielding a stale result.
+    pub fn try_replay_read_hit(&mut self, core: CoreId, addr: u64, memo: &ReadMemo) -> Option<Access> {
+        let line = line_of(addr);
+        let rec = *self.coherence.get(line)?;
+        if !rec.holds(core) {
+            return None;
+        }
+        // The engine's no-transition condition and state classification,
+        // shared verbatim with access_line (read_write.rs) so the replay
+        // verifier cannot drift from the real walk.
+        if !read_write::read_needs_no_transition(&rec, core) {
+            return None;
+        }
+        let (_, prior_state) = self.line_report_states(core, &rec);
+        if StateClass::of(prior_state) != memo.state_class {
+            return None;
+        }
+        // Non-mutating presence check: `touch` would stamp the LRU clock
+        // even on a miss, violating the refusal contract.
+        if !self.l1[core].contains(line) {
+            return None;
+        }
+        // Commit: exactly the bookkeeping of the engine's L1-hit fast path
+        // for an aligned read with the prefetchers off.
+        self.l1[core].touch(line);
+        self.stats.accesses += 1;
+        self.stats.record_hit(Level::L1);
+        let value = self.mem.read(addr & !7);
+        self.clock[core] += memo.latency;
+        Some(Access {
+            latency: memo.latency,
+            level: Level::L1,
+            distance: Distance::Local,
+            value,
+            modified: false,
+            prior_state,
+        })
     }
 
     // ----- batched operations (sweep inner loops) ---------------------------

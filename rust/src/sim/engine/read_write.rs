@@ -10,7 +10,41 @@ use crate::sim::protocol::CohState;
 use crate::sim::timing::Level;
 use crate::sim::topology::{CoreId, Distance};
 
+/// The engine's read no-transition predicate: a read of a held line never
+/// transitions — E/M imply sole ownership, S/O replicate freely. Shared by
+/// [`Machine::access_line`]'s fast path and the spin-replay verifier
+/// ([`Machine::try_replay_read_hit`]) so the two can never drift.
+pub(super) fn read_needs_no_transition(rec: &LineRecord, core: CoreId) -> bool {
+    rec.other_sharers(core) == 0
+        || matches!(rec.class, GlobalClass::Shared | GlobalClass::Owned)
+}
+
 impl Machine {
+    /// Classification of a line for reporting and overhead lookup:
+    /// (class-level state, reported prior state), the latter being the
+    /// holder-class state upgraded to the dirtier per-core owner state
+    /// (`max_dirty`). Shared by [`Machine::access_line`] and the
+    /// spin-replay verifier so the two can never drift.
+    pub(super) fn line_report_states(&self, core: CoreId, rec: &LineRecord) -> (CohState, CohState) {
+        let forward = self.cfg.protocol.has_forward();
+        let my_state = rec.state_at(core, forward);
+        let prior = rec
+            .owner
+            .map(|o| rec.state_at(o, forward))
+            .filter(|s| *s != CohState::I)
+            .unwrap_or(my_state);
+        // For overhead/report classification use the holder's state; if the
+        // line is shared by others while I hold S, that's SharedLike.
+        let class_state = match rec.class {
+            GlobalClass::Shared => CohState::S,
+            GlobalClass::Owned => CohState::O,
+            GlobalClass::Modified => CohState::M,
+            GlobalClass::Exclusive => CohState::E,
+            GlobalClass::Uncached => CohState::I,
+        };
+        (class_state, class_state.max_dirty(prior))
+    }
+
     pub(super) fn ivy_local_hit_level(&self, core: CoreId, line: u64) -> Option<Level> {
         let module = self.cfg.topology.l2_module_of(core);
         if self.l1[core].contains(line) {
@@ -27,23 +61,7 @@ impl Machine {
         let my_die = topo.die_of(core);
         let rec = *self.coherence.get_or_create(line, my_die as u8);
         let needs_ownership = kind != OpKind::Read;
-        let forward = self.cfg.protocol.has_forward();
-
-        let my_state = rec.state_at(core, forward);
-        let prior_state = rec
-            .owner
-            .map(|o| rec.state_at(o, forward))
-            .filter(|s| *s != CohState::I)
-            .unwrap_or(my_state);
-        // For overhead/report classification use the holder's state; if the
-        // line is shared by others while I hold S, that's SharedLike.
-        let class_state = match rec.class {
-            GlobalClass::Shared => CohState::S,
-            GlobalClass::Owned => CohState::O,
-            GlobalClass::Modified => CohState::M,
-            GlobalClass::Exclusive => CohState::E,
-            GlobalClass::Uncached => CohState::I,
-        };
+        let (class_state, reported_state) = self.line_report_states(core, &rec);
 
         // 1. Local hit?
         let local_level = if rec.holds(core) {
@@ -69,8 +87,7 @@ impl Machine {
                     && rec.owner == Some(core)
                     && others == 0
             } else {
-                others == 0
-                    || matches!(rec.class, GlobalClass::Shared | GlobalClass::Owned)
+                read_needs_no_transition(&rec, core)
             };
             if no_transition && lvl == Level::L1 {
                 self.stats.record_hit(Level::L1);
@@ -89,7 +106,7 @@ impl Machine {
                     cost: c,
                     level: Level::L1,
                     distance: Distance::Local,
-                    prior_state: class_state.max_dirty(prior_state),
+                    prior_state: reported_state,
                 };
             }
         }
@@ -153,7 +170,7 @@ impl Machine {
             self.stats.prefetch_hits += 1;
         }
 
-        LineWalk { cost, level, distance, prior_state: class_state.max_dirty(prior_state) }
+        LineWalk { cost, level, distance, prior_state: reported_state }
     }
 
     /// Locate the data for a miss and price the transfer.

@@ -268,3 +268,75 @@ fn access_sweep_matches_open_coded_loop() {
     assert_eq!(a.clock_of(0).to_bits(), b.clock_of(0).to_bits());
     assert_eq!(a.stats, b.stats);
 }
+
+/// The spin-replay fast path must be indistinguishable from issuing the
+/// read through `access64` — stats, clocks, and the returned `Access` all
+/// bit-identical — across every baseline architecture and every coherence
+/// class a spin-wait can observe.
+#[test]
+fn spin_replay_matches_access64() {
+    for cfg in arch::all() {
+        // Three scenarios: sole reader (E), shared clean (S), and
+        // dirty-shared after a remote write (S with write-back / O on
+        // MOESI parts).
+        let scenarios: [&[(CoreId, Op)]; 3] = [
+            &[(0, Op::Read)],
+            &[(1, Op::Read), (0, Op::Read)],
+            &[(1, Op::Write { value: 7 }), (2, Op::Read), (0, Op::Read)],
+        ];
+        for (si, prep_ops) in scenarios.iter().enumerate() {
+            let addr = 0x9000_0000;
+            let mut a = Machine::new(cfg.clone());
+            let mut b = Machine::new(cfg.clone());
+            assert!(a.spin_fast_path_ok(), "{}: baseline mechanisms off", cfg.name);
+            for &(core, op) in *prep_ops {
+                a.access64(core, op, addr);
+                b.access64(core, op, addr);
+            }
+            // Establish the memo from a real hit on machine b.
+            let first_a = a.access64(0, Op::Read, addr);
+            let first_b = b.access64(0, Op::Read, addr);
+            assert_eq!(first_a.latency.to_bits(), first_b.latency.to_bits());
+            let memo = ReadMemo::of_read_hit(&first_b)
+                .unwrap_or_else(|| panic!("{} scenario {si}: hit expected", cfg.name));
+            for i in 0..200 {
+                let via_engine = a.access64(0, Op::Read, addr);
+                let via_replay = b
+                    .try_replay_read_hit(0, addr, &memo)
+                    .unwrap_or_else(|| panic!("{} scenario {si} poll {i}: replay refused", cfg.name));
+                assert_eq!(via_engine.latency.to_bits(), via_replay.latency.to_bits());
+                assert_eq!(via_engine.value, via_replay.value);
+                assert_eq!(via_engine.level, via_replay.level);
+                assert_eq!(via_engine.distance, via_replay.distance);
+                assert_eq!(via_engine.modified, via_replay.modified);
+                assert_eq!(via_engine.prior_state, via_replay.prior_state);
+            }
+            assert_eq!(a.stats, b.stats, "{} scenario {si}", cfg.name);
+            assert_eq!(a.clock_of(0).to_bits(), b.clock_of(0).to_bits());
+            // Both machines must keep pricing identically afterwards.
+            let after_a = a.access64(0, Op::Faa { delta: 1 }, addr);
+            let after_b = b.access64(0, Op::Faa { delta: 1 }, addr);
+            assert_eq!(after_a.latency.to_bits(), after_b.latency.to_bits());
+        }
+    }
+}
+
+/// A replay attempt against state the memo no longer matches must refuse
+/// without mutating anything.
+#[test]
+fn spin_replay_refuses_stale_state() {
+    let mut m = haswell();
+    let addr = 0x9000_0000;
+    m.access64(0, Op::Read, addr);
+    let hit = m.access64(0, Op::Read, addr);
+    let memo = ReadMemo::of_read_hit(&hit).unwrap();
+    // A rival RMW takes the line away: the replay must bail out.
+    m.access64(1, Op::Faa { delta: 1 }, addr);
+    let stats_before = m.stats.clone();
+    let clock_before = m.clock_of(0);
+    assert!(m.try_replay_read_hit(0, addr, &memo).is_none());
+    assert_eq!(m.stats, stats_before, "refused replay must not mutate stats");
+    assert_eq!(m.clock_of(0).to_bits(), clock_before.to_bits());
+    // An unknown line refuses too.
+    assert!(m.try_replay_read_hit(0, 0x9F00_0000, &memo).is_none());
+}

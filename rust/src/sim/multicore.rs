@@ -90,10 +90,10 @@
 use crate::atomics::{Op, OpKind};
 use crate::sim::arbitration::{prefer_same_die, prefers_same_die, Request, MAX_LOCAL_BATCH};
 use crate::sim::cache::line_of;
-use crate::sim::engine::{Access, Machine};
+use crate::sim::engine::{Access, Machine, ReadMemo};
 use crate::sim::timing::Level;
 use crate::sim::topology::{CoreId, Distance};
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::BinaryHeap;
 
 /// Base address of the shared contended line — clear of the latency/
 /// bandwidth benches' buffer ranges so pooled machines cannot alias.
@@ -495,6 +495,19 @@ pub trait CoreProgram {
 /// serializing request for the same line is pending, the raw latency
 /// otherwise.
 ///
+/// Performance: the event loop runs on flat structures sized once per run
+/// (an indexed per-thread min-heap and an open-addressed line table — no
+/// per-step allocation or string/SipHash hashing), and *spin fast-forward*
+/// replays repeated read polls (a ticket-lock waiter, an MPSC consumer)
+/// through the engine's verified L1-hit replica
+/// ([`Machine::try_replay_read_hit`]) instead of a full engine walk.
+/// Every poll remains an event — its latency, stall accounting, program
+/// callback, and issue sequence are unchanged — so the grant order and
+/// every reported number are bit-identical to [`run_program_stepwise`],
+/// the retained reference scheduler (golden tests enforce the
+/// equivalence; this is what lifted the lock-family ladder past 32
+/// threads to full Phi scale).
+///
 /// Costs are engine-priced: every latency comes out of
 /// [`Machine::access64`]; CAS failures in the stats are the engine's
 /// (`modified == false`). Resets the machine on entry (fresh-machine
@@ -505,6 +518,201 @@ pub fn run_program<P: CoreProgram>(
     programs: &mut [P],
     label: OpKind,
 ) -> MulticoreResult {
+    run_program_impl(m, programs, label, true)
+}
+
+/// The reference scheduler: identical event processing to [`run_program`]
+/// with the spin fast path disabled, so every poll executes through the
+/// full engine. Kept public so the golden equivalence tests (and anyone
+/// auditing the fast path) can pin `run_program` against it — the two are
+/// bit-identical by contract.
+pub fn run_program_stepwise<P: CoreProgram>(
+    m: &mut Machine,
+    programs: &mut [P],
+    label: OpKind,
+) -> MulticoreResult {
+    run_program_impl(m, programs, label, false)
+}
+
+/// Flat indexed min-heap of pending per-thread requests ordered by
+/// (ready time, issue seq) — at most one entry per thread, so every
+/// vector is sized once at run start and the hot loop allocates nothing.
+/// Issue sequences are unique, making the order total: the pop sequence is
+/// identical to the historical `BinaryHeap<ProgRequest>`'s.
+struct ReadyQueue {
+    heap: Vec<u32>,
+    pos: Vec<u32>,
+    time: Vec<f64>,
+    seq: Vec<u64>,
+}
+
+const ABSENT: u32 = u32::MAX;
+
+impl ReadyQueue {
+    fn new(threads: usize) -> ReadyQueue {
+        ReadyQueue {
+            heap: Vec::with_capacity(threads),
+            pos: vec![ABSENT; threads],
+            time: vec![0.0; threads],
+            seq: vec![0; threads],
+        }
+    }
+
+    #[inline]
+    fn before(&self, a: u32, b: u32) -> bool {
+        let (ta, tb) = (self.time[a as usize], self.time[b as usize]);
+        match ta.partial_cmp(&tb) {
+            Some(std::cmp::Ordering::Less) => true,
+            Some(std::cmp::Ordering::Greater) => false,
+            _ => self.seq[a as usize] < self.seq[b as usize],
+        }
+    }
+
+    fn push(&mut self, t: usize, time: f64, seq: u64) {
+        debug_assert_eq!(self.pos[t], ABSENT, "one pending request per thread");
+        self.time[t] = time;
+        self.seq[t] = seq;
+        self.pos[t] = self.heap.len() as u32;
+        self.heap.push(t as u32);
+        self.sift_up(self.heap.len() - 1);
+    }
+
+    fn pop(&mut self) -> Option<(usize, f64, u64)> {
+        let first = *self.heap.first()?;
+        let last = self.heap.pop().expect("checked non-empty");
+        self.pos[first as usize] = ABSENT;
+        if !self.heap.is_empty() {
+            self.heap[0] = last;
+            self.pos[last as usize] = 0;
+            self.sift_down(0);
+        }
+        let t = first as usize;
+        Some((t, self.time[t], self.seq[t]))
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if !self.before(self.heap[i], self.heap[parent]) {
+                break;
+            }
+            self.swap(i, parent);
+            i = parent;
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let mut best = i;
+            for child in [2 * i + 1, 2 * i + 2] {
+                if child < self.heap.len() && self.before(self.heap[child], self.heap[best]) {
+                    best = child;
+                }
+            }
+            if best == i {
+                break;
+            }
+            self.swap(i, best);
+            i = best;
+        }
+    }
+
+    fn swap(&mut self, a: usize, b: usize) {
+        self.heap.swap(a, b);
+        self.pos[self.heap[a] as usize] = a as u32;
+        self.pos[self.heap[b] as usize] = b as u32;
+    }
+}
+
+/// Flat open-addressed map from cache line to its next free time —
+/// replaces the std `HashMap<u64, f64>` of the historical scheduler.
+/// Slots are stable between growths; [`LineTable::slot_of`] reports a
+/// growth so the caller can re-resolve its cached slots (growth only
+/// happens when a program touches more distinct serialized lines than the
+/// current capacity, e.g. large MPSC slot arrays on non-combining parts).
+struct LineTable {
+    keys: Vec<u64>,
+    free_at: Vec<f64>,
+    len: usize,
+}
+
+const EMPTY_LINE: u64 = u64::MAX;
+
+impl LineTable {
+    fn new(capacity_hint: usize) -> LineTable {
+        let cap = capacity_hint.next_power_of_two().max(64);
+        LineTable { keys: vec![EMPTY_LINE; cap], free_at: vec![0.0; cap], len: 0 }
+    }
+
+    #[inline]
+    fn hash(line: u64) -> usize {
+        let h = line.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        ((h >> 32) ^ h) as usize
+    }
+
+    /// Slot of `line`, inserting a free entry on first touch. The second
+    /// field reports that the table grew: previously cached slots are then
+    /// stale and must be re-resolved.
+    fn slot_of(&mut self, line: u64) -> (usize, bool) {
+        debug_assert_ne!(line, EMPTY_LINE);
+        let mut grew = false;
+        if self.len * 2 >= self.keys.len() {
+            self.grow();
+            grew = true;
+        }
+        (self.probe_insert(line), grew)
+    }
+
+    fn probe_insert(&mut self, line: u64) -> usize {
+        let mask = self.keys.len() - 1;
+        let mut i = Self::hash(line) & mask;
+        loop {
+            if self.keys[i] == line {
+                return i;
+            }
+            if self.keys[i] == EMPTY_LINE {
+                self.keys[i] = line;
+                self.free_at[i] = 0.0;
+                self.len += 1;
+                return i;
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    fn grow(&mut self) {
+        let new_cap = self.keys.len() * 2;
+        let old_keys = std::mem::replace(&mut self.keys, vec![EMPTY_LINE; new_cap]);
+        let old_free = std::mem::replace(&mut self.free_at, vec![0.0; new_cap]);
+        self.len = 0;
+        for (k, f) in old_keys.into_iter().zip(old_free) {
+            if k != EMPTY_LINE {
+                let slot = self.probe_insert(k);
+                self.free_at[slot] = f;
+            }
+        }
+    }
+}
+
+/// Re-resolve every cached serial slot after a [`LineTable`] growth.
+fn refresh_serial_slots(lines: &mut LineTable, pending: &[Option<Step>], serial_slot: &mut [u32]) {
+    for (t, s) in pending.iter().enumerate() {
+        if serial_slot[t] != ABSENT {
+            if let Some(step) = s {
+                let (slot, grew) = lines.slot_of(line_of(step.addr));
+                debug_assert!(!grew, "a refresh never inserts");
+                serial_slot[t] = slot as u32;
+            }
+        }
+    }
+}
+
+fn run_program_impl<P: CoreProgram>(
+    m: &mut Machine,
+    programs: &mut [P],
+    label: OpKind,
+    fast: bool,
+) -> MulticoreResult {
     let threads = programs.len();
     assert!(
         threads >= 1 && threads <= m.cfg.topology.n_cores,
@@ -512,81 +720,90 @@ pub fn run_program<P: CoreProgram>(
         m.cfg.topology.n_cores
     );
     m.reset();
+    // The spin fast path requires uniform repeat pricing (no frequency
+    // jitter, no prefetchers); otherwise every poll takes the full engine
+    // walk and the run degenerates to the stepwise scheduler.
+    let spin_ok = fast && m.spin_fast_path_ok();
 
     let mut per_thread: Vec<ContentionStats> = (0..threads)
         .map(|t| ContentionStats { core: t, ..ContentionStats::default() })
         .collect();
-    /// A pending program request: min-heap by (ready time, issue seq).
-    #[derive(PartialEq)]
-    struct ProgRequest {
-        time: f64,
-        seq: u64,
-        thread: usize,
-    }
-    impl Eq for ProgRequest {}
-    impl Ord for ProgRequest {
-        fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-            // min-heap (BinaryHeap is a max-heap): earliest time, then
-            // oldest issue sequence — FIFO fairness across re-queues.
-            other
-                .time
-                .partial_cmp(&self.time)
-                .unwrap_or(std::cmp::Ordering::Equal)
-                .then_with(|| other.seq.cmp(&self.seq))
-                .then_with(|| other.thread.cmp(&self.thread))
-        }
-    }
-    impl PartialOrd for ProgRequest {
-        fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-            Some(self.cmp(other))
-        }
-    }
-
     let mut pending: Vec<Option<Step>> = vec![None; threads];
     let mut queued_since = vec![0.0f64; threads];
+    // Memoized spin poll per thread: (the repeated step, its pricing).
+    // Validity is re-verified against the live machine on every replay, so
+    // a stale memo can only cost a fallback, never a wrong result.
+    let mut memo: Vec<Option<(Step, ReadMemo)>> = vec![None; threads];
+    // Cached LineTable slot of the pending step's line for serializing
+    // steps (ABSENT otherwise) — the hot loop does zero hashing per event.
+    let mut serial_slot: Vec<u32> = vec![ABSENT; threads];
     let mut next_seq = 0u64;
-    let mut heap: BinaryHeap<ProgRequest> = BinaryHeap::new();
+    let mut ready = ReadyQueue::new(threads);
+    let mut lines = LineTable::new(64);
     for (t, p) in programs.iter_mut().enumerate() {
         if let Some(step) = p.first() {
             pending[t] = Some(step);
-            heap.push(ProgRequest { time: 0.0, seq: next_seq, thread: t });
+            if serializes(m, step.op.kind()) {
+                let (slot, grew) = lines.slot_of(line_of(step.addr));
+                if grew {
+                    refresh_serial_slots(&mut lines, &pending, &mut serial_slot);
+                }
+                serial_slot[t] = slot as u32;
+            }
+            ready.push(t, 0.0, next_seq);
             next_seq += 1;
         }
     }
-    // Per-line occupancy: line -> free_at. (Unlike run_contention, the
-    // program scheduler applies no HT-Assist same-die preference — grants
-    // are plain FIFO — so no owner needs tracking.)
-    let mut lines: HashMap<u64, f64> = HashMap::new();
     let mut finish = 0.0f64;
 
-    while let Some(req) = heap.pop() {
-        let t = req.thread;
+    while let Some((t, rtime, seq)) = ready.pop() {
         let step = pending[t].expect("queued thread has a pending step");
         let line = line_of(step.addr);
         let kind = step.op.kind();
-        let serial = serializes(m, kind);
+        let serial = serial_slot[t] != ABSENT;
         if serial {
-            if let Some(&free_at) = lines.get(&line) {
-                if free_at > req.time {
-                    // Line busy: come back when it frees, keeping the
-                    // original issue sequence. Occupancy is strictly
-                    // positive, so this always makes progress.
-                    heap.push(ProgRequest { time: free_at, seq: req.seq, thread: t });
-                    continue;
-                }
+            let free_at = lines.free_at[serial_slot[t] as usize];
+            if free_at > rtime {
+                // Line busy: come back when it frees, keeping the
+                // original issue sequence. Occupancy is strictly
+                // positive, so this always makes progress.
+                ready.push(t, free_at, seq);
+                continue;
             }
         }
 
-        let start = req.time;
+        let start = rtime;
         let stall = start - queued_since[t];
-        let lag = start - m.clock_of(t);
-        if lag > 0.0 {
-            m.advance_clock(t, lag);
-        }
 
-        let inv_before = m.stats.invalidations_sent + m.stats.remote_invalidation_broadcasts;
-        let hops_before = m.stats.hops;
-        let acc = m.access64(t, step.op, step.addr);
+        // Spin fast path: a repeat of the memoized poll replays through
+        // the engine's verified L1-hit replica instead of the full walk.
+        // (For a repeat poll the core's clock already sits exactly at
+        // `start`, so the stepwise lag adjustment is a no-op there.)
+        let replay = if spin_ok {
+            match &memo[t] {
+                Some((mstep, rm)) if *mstep == step => m.try_replay_read_hit(t, step.addr, rm),
+                _ => None,
+            }
+        } else {
+            None
+        };
+        let replayed = replay.is_some();
+        let (acc, d_hops, d_inv) = match replay {
+            Some(acc) => (acc, 0, 0),
+            None => {
+                let lag = start - m.clock_of(t);
+                if lag > 0.0 {
+                    m.advance_clock(t, lag);
+                }
+                let inv_before =
+                    m.stats.invalidations_sent + m.stats.remote_invalidation_broadcasts;
+                let hops_before = m.stats.hops;
+                let acc = m.access64(t, step.op, step.addr);
+                let d_inv = m.stats.invalidations_sent + m.stats.remote_invalidation_broadcasts
+                    - inv_before;
+                (acc, m.stats.hops - hops_before, d_inv)
+            }
+        };
         let end = start + acc.latency;
 
         let st = &mut per_thread[t];
@@ -599,9 +816,8 @@ pub fn run_program<P: CoreProgram>(
         if acc.distance != Distance::Local && acc.level != Level::Memory {
             st.line_hops += 1;
         }
-        st.interconnect_hops += m.stats.hops - hops_before;
-        st.invalidations +=
-            m.stats.invalidations_sent + m.stats.remote_invalidation_broadcasts - inv_before;
+        st.interconnect_hops += d_hops;
+        st.invalidations += d_inv;
         if kind == OpKind::Cas && !acc.modified {
             st.cas_failures += 1;
         }
@@ -621,18 +837,41 @@ pub fn run_program<P: CoreProgram>(
             } else {
                 acc.latency
             };
-            lines.insert(line, start + occupancy.max(f64::MIN_POSITIVE));
+            lines.free_at[serial_slot[t] as usize] = start + occupancy.max(f64::MIN_POSITIVE);
         }
 
         finish = finish.max(end);
         match programs[t].next(step, &acc) {
             Some(next) => {
+                if spin_ok
+                    && !replayed
+                    && next == step
+                    && kind == OpKind::Read
+                    && !serial
+                    && (step.addr & 63) <= 56
+                {
+                    // A spin established (or re-established after an
+                    // invalidation): memoize the hit pricing. A miss
+                    // yields None and the next poll re-tries the engine.
+                    memo[t] = ReadMemo::of_read_hit(&acc).map(|rm| (step, rm));
+                }
                 pending[t] = Some(next);
+                serial_slot[t] = ABSENT;
+                if serializes(m, next.op.kind()) {
+                    let (slot, grew) = lines.slot_of(line_of(next.addr));
+                    if grew {
+                        refresh_serial_slots(&mut lines, &pending, &mut serial_slot);
+                    }
+                    serial_slot[t] = slot as u32;
+                }
                 queued_since[t] = end;
-                heap.push(ProgRequest { time: end, seq: next_seq, thread: t });
+                ready.push(t, end, next_seq);
                 next_seq += 1;
             }
-            None => pending[t] = None,
+            None => {
+                pending[t] = None;
+                serial_slot[t] = ABSENT;
+            }
         }
     }
 
@@ -860,6 +1099,104 @@ mod tests {
             let mut progs: Vec<FaaLoop> = (0..n).map(|_| FaaLoop { remaining: 50 }).collect();
             run_program(&mut m, &mut progs, OpKind::Faa);
             m.check_invariants().unwrap();
+        }
+    }
+
+    /// A read-spin-heavy program shaped like a ticket-lock waiter: FAA a
+    /// turn counter, then poll a flag word until the holder's release
+    /// write makes it match, then release. Exercises the spin fast path's
+    /// establish / replay / invalidate cycle.
+    enum SpinPhase {
+        Take,
+        Spin,
+        Release,
+    }
+
+    struct SpinTurn {
+        flag: u64,
+        turn: u64,
+        remaining: usize,
+        phase: SpinPhase,
+    }
+
+    impl CoreProgram for SpinTurn {
+        fn first(&mut self) -> Option<Step> {
+            (self.remaining > 0).then(|| Step::new(Op::Faa { delta: 1 }, SHARED_ADDR))
+        }
+
+        fn next(&mut self, _prev: Step, res: &Access) -> Option<Step> {
+            match self.phase {
+                SpinPhase::Take => {
+                    self.turn = res.value;
+                    self.phase = SpinPhase::Spin;
+                    Some(Step::new(Op::Read, self.flag))
+                }
+                SpinPhase::Spin => {
+                    if res.value == self.turn {
+                        self.phase = SpinPhase::Release;
+                        Some(Step::counted(
+                            Op::Write { value: self.turn.wrapping_add(1) },
+                            self.flag,
+                        ))
+                    } else {
+                        Some(Step::new(Op::Read, self.flag))
+                    }
+                }
+                SpinPhase::Release => {
+                    self.remaining -= 1;
+                    self.phase = SpinPhase::Take;
+                    (self.remaining > 0).then(|| Step::new(Op::Faa { delta: 1 }, SHARED_ADDR))
+                }
+            }
+        }
+    }
+
+    /// The spin fast path must be bit-identical to the stepwise reference
+    /// scheduler — per-thread stats, elapsed time, and bandwidth all equal
+    /// to the bit — on every architecture (write-combining and not).
+    #[test]
+    fn fast_path_bit_identical_to_stepwise() {
+        for cfg in arch::all() {
+            let n = cfg.topology.n_cores.min(6);
+            let build = || -> Vec<SpinTurn> {
+                (0..n)
+                    .map(|_| SpinTurn {
+                        flag: SHARED_ADDR + 64,
+                        turn: 0,
+                        remaining: 20,
+                        phase: SpinPhase::Take,
+                    })
+                    .collect()
+            };
+            let mut m = Machine::new(cfg.clone());
+            let fast = run_program(&mut m, &mut build(), OpKind::Faa);
+            let slow = run_program_stepwise(&mut m, &mut build(), OpKind::Faa);
+            assert_eq!(
+                fast.bandwidth_gbs.to_bits(),
+                slow.bandwidth_gbs.to_bits(),
+                "{}: fast {} vs stepwise {}",
+                cfg.name,
+                fast.bandwidth_gbs,
+                slow.bandwidth_gbs
+            );
+            assert_eq!(fast.elapsed_ns.to_bits(), slow.elapsed_ns.to_bits(), "{}", cfg.name);
+            assert_eq!(fast.per_thread, slow.per_thread, "{}", cfg.name);
+        }
+    }
+
+    /// The FAA hammer (no read spins) must also agree — the flat scheduler
+    /// structures alone must not perturb anything.
+    #[test]
+    fn fast_path_matches_stepwise_without_spins() {
+        for cfg in [arch::haswell(), arch::bulldozer()] {
+            let n = cfg.topology.n_cores.min(8);
+            let mut m = Machine::new(cfg);
+            let mut a: Vec<FaaLoop> = (0..n).map(|_| FaaLoop { remaining: 100 }).collect();
+            let fast = run_program(&mut m, &mut a, OpKind::Faa);
+            let mut b: Vec<FaaLoop> = (0..n).map(|_| FaaLoop { remaining: 100 }).collect();
+            let slow = run_program_stepwise(&mut m, &mut b, OpKind::Faa);
+            assert_eq!(fast.bandwidth_gbs.to_bits(), slow.bandwidth_gbs.to_bits());
+            assert_eq!(fast.per_thread, slow.per_thread);
         }
     }
 }

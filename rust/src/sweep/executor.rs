@@ -1,22 +1,42 @@
 //! The parallel sweep executor.
 //!
-//! Work distribution: every (job, point) pair is one independent work item.
-//! Workers steal the next item off a shared atomic cursor — a worker that
-//! draws cheap points simply steals more, so the pool self-balances without
-//! per-worker queues. Results stream back over an mpsc channel keyed by
-//! (job, point) and are assembled in *input* order, so the output is
-//! deterministic for any thread count.
+//! Work distribution: work items are grouped into *chunks* with
+//! (machine pool, preparation spec, size) affinity — every item of a
+//! chunk runs on one worker, so all items after the chunk's first share
+//! the worker's prep cache. Items whose workload declares no preparation
+//! spec stay singleton chunks, and workers steal the next chunk off a shared
+//! atomic cursor — a worker that draws cheap chunks simply steals more, so
+//! the pool self-balances without per-worker queues. Results stream back
+//! over an mpsc channel keyed by (job, point) and are assembled in *input*
+//! order, so the output is deterministic for any thread count (and, since
+//! every point is measured from a state bit-identical to a fresh machine,
+//! for any chunk assignment).
 //!
-//! Machines: each worker keeps a pool of one [`Machine`] per architecture
-//! (`SweepJob::pool_key`) and resets it between points instead of paying a
-//! full `Machine::new` allocation per point — `Machine::reset` is
-//! bit-identical to a fresh machine (pinned by the engine and the
-//! `sweep_equivalence` golden tests).
+//! Machines: each worker keeps one [`Machine`] per pool id
+//! ([`SweepJob::pool_key`], interned to a dense index at run start — no
+//! string hashing or cloning in the hot loop) and resets it between points
+//! instead of paying a full `Machine::new` allocation per point —
+//! [`Machine::reset`] is bit-identical to a fresh machine (pinned by the
+//! engine and the `sweep_equivalence` golden tests).
+//!
+//! Prep reuse: workloads exposing [`Workload::prep`] split into a
+//! preparation phase and a measurement phase. The worker snapshots the
+//! machine right after the preparation of a (pool, spec, size) point and
+//! restores the snapshot (an allocation-reusing `clone_from`) for every
+//! following point with the same key — e.g. the read, FAA, and SWP latency
+//! series over one state × locality share a single preparation per size
+//! instead of three. Restoring the snapshot is bit-identical to
+//! re-preparing a fresh machine, so the fast path cannot change a single
+//! reported number (the `sweep_equivalence` golden tests enforce this for
+//! every registered family).
 //!
 //! Failure isolation: a panic inside one measurement is caught, reported
 //! with the (series, architecture, coordinate) that failed, and the rest of
-//! the sweep keeps draining — one bad point cannot abort a campaign.
+//! the sweep keeps draining — one bad point cannot abort a campaign. The
+//! panicking worker discards its pooled machine and snapshot, which the
+//! measurement may have left inconsistent.
 
+use crate::bench::placement::{PrepBuffers, PrepSpec};
 use crate::bench::{Point, Series};
 use crate::sim::engine::Machine;
 use crate::sweep::plan::SweepJob;
@@ -74,62 +94,69 @@ impl SweepExecutor {
 
     /// Run every point of every job, returning outcomes in job input order.
     pub fn run(&self, jobs: &[SweepJob]) -> Vec<SweepOutcome> {
-        // Flatten to (job, point) work items.
-        let items: Vec<(usize, usize)> = jobs
+        // Intern pool keys to dense indices once — the hot loop then
+        // indexes a Vec instead of cloning and hashing a string per point.
+        let mut interner: HashMap<&str, u32> = HashMap::new();
+        let pool_ids: Vec<u32> = jobs
             .iter()
-            .enumerate()
-            .flat_map(|(j, job)| (0..job.xs.len()).map(move |p| (j, p)))
+            .map(|job| {
+                let next = interner.len() as u32;
+                *interner.entry(&*job.pool_key).or_insert(next)
+            })
             .collect();
+        let n_pools = interner.len();
+        drop(interner);
+
+        let chunks = build_chunks(jobs, &pool_ids);
 
         let mut values: Vec<Vec<Option<f64>>> =
             jobs.iter().map(|j| vec![None; j.xs.len()]).collect();
         let mut failures: Vec<Vec<String>> = vec![Vec::new(); jobs.len()];
 
-        if !items.is_empty() {
+        if !chunks.is_empty() {
             let cursor = AtomicUsize::new(0);
-            let workers = self.threads.min(items.len());
+            let workers = self.threads.min(chunks.len());
             std::thread::scope(|s| {
                 let (tx, rx) = mpsc::channel::<(usize, usize, Result<Option<f64>, String>)>();
                 for _ in 0..workers {
                     let tx = tx.clone();
                     let cursor = &cursor;
-                    let items = &items;
+                    let chunks = &chunks;
+                    let pool_ids = &pool_ids;
                     s.spawn(move || {
-                        let mut pool: HashMap<String, Machine> = HashMap::new();
-                        loop {
-                            let i = cursor.fetch_add(1, Ordering::Relaxed);
-                            if i >= items.len() {
+                        let mut machines: Vec<Option<Machine>> =
+                            (0..n_pools).map(|_| None).collect();
+                        let mut cache = PrepCache::default();
+                        'steal: loop {
+                            let c = cursor.fetch_add(1, Ordering::Relaxed);
+                            if c >= chunks.len() {
                                 break;
                             }
-                            let (j, p) = items[i];
-                            let job = &jobs[j];
-                            if let Some(m) = pool.get_mut(&job.pool_key) {
-                                // workloads that only read m.cfg or that
-                                // reset on entry themselves (both
-                                // contention engines) skip the per-point
-                                // reset
-                                if job.workload.needs_machine() {
-                                    m.reset();
+                            for (i, &(j, p)) in chunks[c].iter().enumerate() {
+                                let job = &jobs[j];
+                                let pool = pool_ids[j] as usize;
+                                let x = job.xs[p];
+                                // Snapshots only pay off when a same-key
+                                // item follows in this chunk.
+                                let will_reuse = i + 1 < chunks[c].len();
+                                let result = catch_unwind(AssertUnwindSafe(|| {
+                                    run_item(job, pool, x, &mut machines, &mut cache, will_reuse)
+                                }));
+                                let out = match result {
+                                    Ok(v) => Ok(v),
+                                    Err(e) => {
+                                        // a panicking measurement may leave
+                                        // the pooled machine (and, mid-copy,
+                                        // the snapshot) inconsistent:
+                                        // discard both
+                                        machines[pool] = None;
+                                        cache = PrepCache::default();
+                                        Err(panic_message(e.as_ref()))
+                                    }
+                                };
+                                if tx.send((j, p, out)).is_err() {
+                                    break 'steal;
                                 }
-                            } else {
-                                pool.insert(job.pool_key.clone(), Machine::new(job.cfg.clone()));
-                            }
-                            let m = pool.get_mut(&job.pool_key).expect("machine just pooled");
-                            let x = job.xs[p];
-                            let result = catch_unwind(AssertUnwindSafe(|| {
-                                job.workload.measure(m, x)
-                            }));
-                            let out = match result {
-                                Ok(v) => Ok(v),
-                                Err(e) => {
-                                    // a panicking measurement may leave the
-                                    // pooled machine inconsistent: discard it
-                                    pool.remove(&job.pool_key);
-                                    Err(panic_message(e.as_ref()))
-                                }
-                            };
-                            if tx.send((j, p, out)).is_err() {
-                                break;
                             }
                         }
                     });
@@ -177,6 +204,118 @@ impl Default for SweepExecutor {
     fn default() -> Self {
         SweepExecutor::with_default_threads()
     }
+}
+
+/// Per-worker prep cache: the machine snapshot taken right after the
+/// preparation phase of the most recent (pool, spec, size) point, plus the
+/// prepared addresses and permutation scratch. One entry suffices because
+/// chunks order items so same-key points are consecutive.
+#[derive(Default)]
+struct PrepCache {
+    key: Option<(u32, PrepSpec, u64)>,
+    snapshot: Option<Machine>,
+    bufs: PrepBuffers,
+}
+
+/// Group (job, point) work items into steal-able chunks. Items sharing a
+/// (pool, prep spec, size) form one chunk ordered by (job, point) — a
+/// chunk's first item prepares, every following item restores the
+/// snapshot. One chunk per *size* (not per spec) keeps the stealing
+/// granularity fine: a new size always misses the cache anyway, so
+/// splitting sizes across workers loses no reuse while a single-spec
+/// family (e.g. faa-delta) still spreads over every worker. Items without
+/// a prep spec stay singleton chunks (fully self-balancing, as before).
+/// Chunks are ordered deterministically: grouped chunks first, largest
+/// first (the heaviest prep pipelines start earliest, which helps
+/// balance; ties keep first-encounter order — stable sort), then the
+/// singletons in input order.
+fn build_chunks(jobs: &[SweepJob], pool_ids: &[u32]) -> Vec<Vec<(usize, usize)>> {
+    let mut grouped: Vec<Vec<(usize, usize)>> = Vec::new();
+    let mut group_of: HashMap<(u32, PrepSpec, u64), usize> = HashMap::new();
+    let mut singles: Vec<Vec<(usize, usize)>> = Vec::new();
+    for (j, job) in jobs.iter().enumerate() {
+        match job.workload.prep() {
+            Some(spec) => {
+                for (p, &x) in job.xs.iter().enumerate() {
+                    let slot = *group_of
+                        .entry((pool_ids[j], spec, x))
+                        .or_insert_with(|| {
+                            grouped.push(Vec::new());
+                            grouped.len() - 1
+                        });
+                    grouped[slot].push((j, p));
+                }
+            }
+            None => singles.extend((0..job.xs.len()).map(|p| vec![(j, p)])),
+        }
+    }
+    grouped.sort_by_key(|c| std::cmp::Reverse(c.len()));
+    grouped.extend(singles);
+    grouped
+}
+
+/// Execute one work item on the worker's pooled machine, going through the
+/// prep cache when the workload supports it (`will_reuse` = a same-key
+/// item follows in this chunk, so a snapshot is worth taking). Every path
+/// hands the measurement a machine state bit-identical to fresh-machine
+/// semantics.
+fn run_item(
+    job: &SweepJob,
+    pool: usize,
+    x: u64,
+    machines: &mut [Option<Machine>],
+    cache: &mut PrepCache,
+    will_reuse: bool,
+) -> Option<f64> {
+    if let Some(spec) = job.workload.prep() {
+        let key = (pool as u32, spec, x);
+        if cache.key == Some(key) {
+            let snap = cache.snapshot.as_ref().expect("cache key implies snapshot");
+            // Fast path: restore the prepared snapshot in place instead of
+            // re-running the preparation phase.
+            match &mut machines[pool] {
+                Some(m) => m.clone_from(snap),
+                slot @ None => *slot = Some(snap.clone()),
+            }
+            let m = machines[pool].as_mut().expect("restored above");
+            return job.workload.measure_prepared(m, x, &mut cache.bufs);
+        }
+        // Miss: fresh reset + prepare; snapshot only when items with the
+        // same key follow (a singleton chunk would clone for nothing).
+        cache.key = None;
+        let m = ensure_machine(machines, pool, job);
+        m.reset();
+        spec.prepare_into(m, x, &mut cache.bufs.addrs)?;
+        if will_reuse {
+            match &mut cache.snapshot {
+                Some(s) => s.clone_from(m),
+                s @ None => *s = Some(m.clone()),
+            }
+            cache.key = Some(key);
+        }
+        return job.workload.measure_prepared(m, x, &mut cache.bufs);
+    }
+    let m = ensure_machine(machines, pool, job);
+    // workloads that only read m.cfg or that reset on entry themselves
+    // (both contention engines, the program scheduler) skip the per-point
+    // reset
+    if job.workload.needs_machine() {
+        m.reset();
+    }
+    job.workload.measure(m, x)
+}
+
+fn ensure_machine<'a>(
+    machines: &'a mut [Option<Machine>],
+    pool: usize,
+    job: &SweepJob,
+) -> &'a mut Machine {
+    if machines[pool].is_none() {
+        // job.cfg is an Arc: building a pooled machine shares the config
+        // instead of deep-cloning it.
+        machines[pool] = Some(Machine::new(job.cfg.clone()));
+    }
+    machines[pool].as_mut().expect("just ensured")
 }
 
 /// Best-effort rendering of a caught panic payload (shared with

@@ -14,11 +14,16 @@
 //!   `repro sweep --family` values, the CI smoke matrix, and the family
 //!   inventory table all derive from [`FAMILIES`].
 //! * [`SweepExecutor`] — a self-balancing thread pool (std::thread +
-//!   channels, no external deps): workers steal the next work item from a
-//!   shared queue, keep a per-architecture [`Machine`](crate::sim::Machine)
-//!   pool (reset-and-reuse instead of per-point allocation), isolate
-//!   panics to the failing item, and return results in deterministic input
-//!   order regardless of thread count.
+//!   channels, no external deps): workers steal (pool, prep-spec, size)-
+//!   affine chunks from a shared queue, keep a per-architecture
+//!   [`Machine`](crate::sim::Machine) pool (reset-and-reuse instead of
+//!   per-point allocation) plus a prepared-machine snapshot cache
+//!   ([`Workload::prep`] — same-spec points pay one `prepare()` per
+//!   size), isolate panics to the failing item, and return results in
+//!   deterministic input order regardless of thread count.
+//! * [`thin_points`] — the `--points N` budget: deterministic grid
+//!   thinning for incremental runs (kept points bit-identical to the
+//!   full run's).
 //!
 //! ## Invariants
 //!
@@ -27,8 +32,11 @@
 //!   for any worker count — pinned by the `sweep_equivalence` golden tests.
 //! * **Bit-identical machine reuse.** Pooled machines are recycled with
 //!   [`Machine::reset`](crate::sim::Machine::reset), which is
-//!   indistinguishable from a fresh machine; a workload therefore never
-//!   observes which points ran before it on the same worker.
+//!   indistinguishable from a fresh machine, and prep-cache snapshots are
+//!   taken only right after reset + prepare — so a workload never
+//!   observes which points ran before it on the same worker, and the
+//!   prep fast path cannot change a reported number (golden tests pin
+//!   every family against fresh-machine runs).
 //! * **Panic isolation.** A panicking measurement poisons only its own
 //!   point (reported in [`SweepOutcome::failures`]) and discards the
 //!   possibly-inconsistent pooled machine; the rest of the campaign drains.
@@ -64,6 +72,79 @@ pub use workload::{
     TwoOperandCas, UnalignedChase, Workload,
 };
 
+/// Deterministically thin a set of jobs to at most `budget` points in
+/// total — the `repro sweep --points N` incremental-run mode. Every job
+/// keeps at least one point while the budget allows (whole jobs are
+/// dropped from the tail otherwise); the remaining budget is dealt
+/// round-robin, one point per job per pass, larger jobs served first —
+/// so shares equalize until the small jobs saturate, after which the
+/// surplus flows to the large ones. A job keeping ≥2 points gets evenly
+/// spaced coordinates including both endpoints, so a thinned sweep still
+/// spans every cache-level transition; a job squeezed to 1 point keeps
+/// its middle coordinate.
+/// The kept points are measured exactly as in the full sweep (same
+/// workloads, same machine semantics), so their values are bit-identical
+/// to the full run's.
+pub fn thin_points(jobs: &mut Vec<SweepJob>, budget: usize) {
+    let total: usize = jobs.iter().map(|j| j.xs.len()).sum();
+    if total <= budget {
+        return;
+    }
+    if budget == 0 {
+        jobs.clear();
+        return;
+    }
+    if budget < jobs.len() {
+        // Not even one point per job: keep the first `budget` jobs at one
+        // point each (their middle coordinate), drop the rest.
+        jobs.truncate(budget);
+        for job in jobs.iter_mut() {
+            let mid = job.xs[job.xs.len() / 2];
+            job.xs = vec![mid];
+        }
+        return;
+    }
+    // One point per job, then round-robin the remaining budget over the
+    // jobs, largest first (ties by input order) — deterministic, and never
+    // exceeds the budget.
+    let mut keep = vec![1usize; jobs.len()];
+    let mut used = jobs.len();
+    let mut order: Vec<usize> = (0..jobs.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(jobs[i].xs.len()));
+    'fill: loop {
+        let mut progressed = false;
+        for &i in &order {
+            if used == budget {
+                break 'fill;
+            }
+            if keep[i] < jobs[i].xs.len() {
+                keep[i] += 1;
+                used += 1;
+                progressed = true;
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    for (job, &k) in jobs.iter_mut().zip(&keep) {
+        let n = job.xs.len();
+        if k >= n {
+            continue;
+        }
+        let picked: Vec<u64> = if k == 1 {
+            vec![job.xs[n / 2]]
+        } else {
+            // evenly spaced indices including both endpoints, deduplicated
+            let mut idx: Vec<usize> =
+                (0..k).map(|i| i * (n - 1) / (k - 1)).collect();
+            idx.dedup();
+            idx.into_iter().map(|i| job.xs[i]).collect()
+        };
+        job.xs = picked;
+    }
+}
+
 /// Worker-thread count: `SWEEP_THREADS` if set, else every available core.
 pub fn default_threads() -> usize {
     std::env::var("SWEEP_THREADS")
@@ -80,9 +161,69 @@ pub fn default_threads() -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::arch;
+    use crate::atomics::OpKind;
+    use crate::bench::latency::LatencyBench;
+    use crate::bench::placement::{PrepLocality, PrepState};
+    use std::sync::Arc;
 
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    fn job(xs: &[u64]) -> SweepJob {
+        SweepJob::new(
+            &arch::haswell(),
+            Arc::new(LatencyBench::new(OpKind::Faa, PrepState::M, PrepLocality::Local)),
+            xs.iter().copied(),
+        )
+    }
+
+    #[test]
+    fn thin_points_is_a_noop_within_budget() {
+        let mut jobs = vec![job(&[1, 2, 3])];
+        thin_points(&mut jobs, 3);
+        assert_eq!(jobs[0].xs, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn thin_points_keeps_endpoints_and_budget() {
+        let mut jobs = vec![job(&[10, 20, 30, 40, 50, 60, 70, 80]), job(&[1, 2, 3, 4])];
+        thin_points(&mut jobs, 6);
+        let total: usize = jobs.iter().map(|j| j.xs.len()).sum();
+        assert_eq!(total, 6);
+        // the big job keeps both endpoints
+        assert_eq!(jobs[0].xs.first(), Some(&10));
+        assert_eq!(jobs[0].xs.last(), Some(&80));
+        // every job keeps at least one point
+        assert!(jobs.iter().all(|j| !j.xs.is_empty()));
+    }
+
+    #[test]
+    fn thin_points_is_deterministic() {
+        let build = || vec![job(&[10, 20, 30, 40, 50]), job(&[1, 2, 3]), job(&[7])];
+        let mut a = build();
+        let mut b = build();
+        thin_points(&mut a, 5);
+        thin_points(&mut b, 5);
+        let xs = |jobs: &[SweepJob]| jobs.iter().map(|j| j.xs.clone()).collect::<Vec<_>>();
+        assert_eq!(xs(&a), xs(&b));
+    }
+
+    #[test]
+    fn thin_points_below_job_count_drops_tail_jobs() {
+        let mut jobs = vec![job(&[1, 2, 3]), job(&[4, 5]), job(&[6])];
+        thin_points(&mut jobs, 2);
+        assert_eq!(jobs.len(), 2);
+        assert!(jobs.iter().all(|j| j.xs.len() == 1));
+        assert_eq!(jobs[0].xs, vec![2], "middle coordinate kept");
+    }
+
+    #[test]
+    fn thin_points_zero_budget_clears() {
+        let mut jobs = vec![job(&[1, 2, 3])];
+        thin_points(&mut jobs, 0);
+        assert!(jobs.is_empty());
     }
 }

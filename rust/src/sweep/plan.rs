@@ -14,13 +14,19 @@ use std::sync::Arc;
 
 /// One unit of schedulable work: a workload swept over `xs` on `cfg`.
 /// Each (job, x) pair is an independent work item for the executor.
+///
+/// The config travels behind an [`Arc`] (shared with every pooled machine
+/// built from it) and the pool key is an interned `Arc<str>`: cloning a
+/// job, keying a machine pool, and spawning a machine are all
+/// allocation-free.
 #[derive(Clone)]
 pub struct SweepJob {
-    pub cfg: MachineConfig,
+    pub cfg: Arc<MachineConfig>,
     /// Key of the executor's per-worker machine pool. Jobs that share a key
     /// share (reset) machines, so two configurations may only share a key
-    /// if they are identical.
-    pub pool_key: String,
+    /// if they are identical. The executor interns keys to dense indices at
+    /// run start, so the hot loop never hashes or clones this.
+    pub pool_key: Arc<str>,
     pub workload: Arc<dyn Workload>,
     /// Sweep coordinates, in presentation order.
     pub xs: Vec<u64>,
@@ -33,8 +39,8 @@ impl SweepJob {
         xs: impl IntoIterator<Item = u64>,
     ) -> SweepJob {
         SweepJob {
-            cfg: cfg.clone(),
-            pool_key: cfg.name.to_string(),
+            cfg: Arc::new(cfg.clone()),
+            pool_key: Arc::from(cfg.name),
             workload,
             xs: xs.into_iter().collect(),
         }
@@ -47,7 +53,7 @@ impl SweepJob {
 
     /// Override the machine-pool key — required when `cfg` is a variant of
     /// a named architecture (e.g. a mechanism-ablation configuration).
-    pub fn with_pool_key(mut self, key: impl Into<String>) -> SweepJob {
+    pub fn with_pool_key(mut self, key: impl Into<Arc<str>>) -> SweepJob {
         self.pool_key = key.into();
         self
     }
@@ -147,7 +153,7 @@ mod tests {
         let jobs = plan.expand();
         // 4 ops x 3 states (no O) x 2 localities (local, on chip)
         assert_eq!(jobs.len(), 4 * 3 * 2);
-        assert!(jobs.iter().all(|j| j.pool_key == "Haswell"));
+        assert!(jobs.iter().all(|j| &*j.pool_key == "Haswell"));
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::bench::falseshare::{run_false_sharing, Layout};
 use crate::bench::latency::LatencyBench;
 use crate::bench::locks::{run_lock, LockKind};
 use crate::bench::operand::two_operand_cas_on;
-use crate::bench::placement::{PrepLocality, PrepState};
+use crate::bench::placement::{PrepBuffers, PrepLocality, PrepSpec, PrepState};
 use crate::bench::unaligned::unaligned_latency_on;
 use crate::sim::engine::Machine;
 
@@ -44,6 +44,33 @@ pub trait Workload: Send + Sync {
 
     /// Measure one point at coordinate `x`.
     fn measure(&self, m: &mut Machine, x: u64) -> Option<f64>;
+
+    /// The cacheable preparation phase `measure` runs before its
+    /// measurement, if the workload splits cleanly into prepare + measure.
+    /// Workloads returning `Some` promise that
+    /// `spec.prepare_into` + [`Workload::measure_prepared`] is bit-identical
+    /// to [`Workload::measure`] on a fresh machine — the executor's prep
+    /// cache snapshots a machine after `prepare_into` and replays the
+    /// snapshot for every same-`(spec, x)` point, skipping the repeated
+    /// preparation (pinned by the `sweep_equivalence` golden tests).
+    fn prep(&self) -> Option<PrepSpec> {
+        None
+    }
+
+    /// The measurement phase alone, on a machine already prepared per
+    /// [`Workload::prep`] at coordinate `x`, with the prepared line
+    /// addresses in `bufs.addrs` (`bufs.order` is reusable scratch).
+    /// Only called when [`Workload::prep`] returns `Some`; such
+    /// implementations should override it with their split measurement
+    /// phase. The default is a safety net for a forgotten override: it
+    /// resets and re-measures from scratch — bit-identical to the fresh
+    /// path (reset ≡ fresh), merely forfeiting the prep-cache saving
+    /// instead of corrupting a number.
+    fn measure_prepared(&self, m: &mut Machine, x: u64, bufs: &mut PrepBuffers) -> Option<f64> {
+        let _ = &bufs;
+        m.reset();
+        self.measure(m, x)
+    }
 }
 
 /// Latency pointer-chase (§3, Figures 2–4, 6, 11–13).
@@ -55,6 +82,14 @@ impl Workload for LatencyBench {
     fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
         self.run_on(m, x as usize)
     }
+
+    fn prep(&self) -> Option<PrepSpec> {
+        Some(self.prep_spec())
+    }
+
+    fn measure_prepared(&self, m: &mut Machine, x: u64, bufs: &mut PrepBuffers) -> Option<f64> {
+        Some(LatencyBench::measure_prepared(self, m, x as usize, bufs))
+    }
 }
 
 /// Sequential bandwidth sweep (§5.2, Figures 5, 15).
@@ -65,6 +100,14 @@ impl Workload for BandwidthBench {
 
     fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
         self.run_on(m, x as usize)
+    }
+
+    fn prep(&self) -> Option<PrepSpec> {
+        Some(self.prep_spec())
+    }
+
+    fn measure_prepared(&self, m: &mut Machine, x: u64, bufs: &mut PrepBuffers) -> Option<f64> {
+        Some(BandwidthBench::measure_prepared(self, m, x as usize, bufs))
     }
 }
 
@@ -187,6 +230,16 @@ impl Workload for SuccessfulCas {
     fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
         self.bench().run_on(m, x as usize)
     }
+
+    fn prep(&self) -> Option<PrepSpec> {
+        // Zero-filled like the read/FAA/SWP latency preps (a successful CAS
+        // expects the value it finds), so those points share the snapshot.
+        Some(self.bench().prep_spec())
+    }
+
+    fn measure_prepared(&self, m: &mut Machine, x: u64, bufs: &mut PrepBuffers) -> Option<f64> {
+        Some(self.bench().measure_prepared(m, x as usize, bufs))
+    }
 }
 
 /// FAA delta-sensitivity (operand width × delta magnitude).
@@ -197,6 +250,14 @@ impl Workload for FaaDeltaBench {
 
     fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
         self.run_on(m, x as usize)
+    }
+
+    fn prep(&self) -> Option<PrepSpec> {
+        Some(self.prep_spec())
+    }
+
+    fn measure_prepared(&self, m: &mut Machine, x: u64, bufs: &mut PrepBuffers) -> Option<f64> {
+        Some(FaaDeltaBench::measure_prepared(self, m, x as usize, bufs))
     }
 }
 
@@ -294,6 +355,17 @@ impl Workload for MechanismVariant {
 
     fn measure(&self, m: &mut Machine, x: u64) -> Option<f64> {
         self.bench.run_on(m, x as usize)
+    }
+
+    fn prep(&self) -> Option<PrepSpec> {
+        // The variant's mechanism configuration travels in the job's cfg,
+        // and the prep cache is keyed by machine pool — so two variants can
+        // never share a snapshot even though their specs compare equal.
+        Some(self.bench.prep_spec())
+    }
+
+    fn measure_prepared(&self, m: &mut Machine, x: u64, bufs: &mut PrepBuffers) -> Option<f64> {
+        Some(self.bench.measure_prepared(m, x as usize, bufs))
     }
 }
 

@@ -11,7 +11,7 @@ use atomics_repro::bench::bandwidth::BandwidthBench;
 use atomics_repro::bench::latency::LatencyBench;
 use atomics_repro::bench::placement::{PrepLocality, PrepState};
 use atomics_repro::coordinator::dataset::collect_latency_dataset;
-use atomics_repro::sweep::{SweepExecutor, SweepJob, SweepPlan};
+use atomics_repro::sweep::{SweepExecutor, SweepJob, SweepPlan, Workload};
 use std::sync::Arc;
 
 const SIZES: [usize; 3] = [4 << 10, 64 << 10, 1 << 20];
@@ -97,6 +97,44 @@ fn thread_count_does_not_change_results() {
                 a.arch,
                 xa
             );
+        }
+    }
+}
+
+/// THE golden gate for the prep-reuse fast path: for every registered
+/// workload family, the executor (chunked prep-affinity scheduling,
+/// snapshot-restored prepared machines, pooled resets) reproduces the
+/// fresh-machine-per-point reference bit-for-bit. A family whose fast
+/// path drifts by one ULP fails here.
+#[test]
+fn every_family_identical_to_fresh_machine_runs() {
+    let sizes = [4 << 10, 64 << 10];
+    for cfg in [arch::haswell(), arch::bulldozer()] {
+        for family in atomics_repro::sweep::family_names() {
+            // Bulldozer thread-axis grids (32-core ladders) are the unit
+            // tests' turf; here they'd dominate the runtime without adding
+            // prep-path coverage (thread-axis workloads declare no prep).
+            if cfg.name == "Bulldozer" && family != "latency" && family != "cas-success" {
+                continue;
+            }
+            let jobs = atomics_repro::sweep::jobs_for(family, &[cfg.clone()], &sizes)
+                .expect("registered family");
+            let out = SweepExecutor::new(4).run(&jobs);
+            assert_eq!(out.len(), jobs.len());
+            for (job, o) in jobs.iter().zip(&out) {
+                assert!(o.failures.is_empty(), "{family}/{}: {:?}", o.name, o.failures);
+                for &(x, got) in &o.points {
+                    let mut fresh = atomics_repro::sim::Machine::new(job.cfg.clone());
+                    let want = job.workload.measure(&mut fresh, x);
+                    assert_eq!(
+                        want.map(f64::to_bits),
+                        got.map(f64::to_bits),
+                        "{} {family}: {} at x={x}: fresh {want:?} vs executor {got:?}",
+                        cfg.name,
+                        o.name
+                    );
+                }
+            }
         }
     }
 }

@@ -7,7 +7,7 @@ use atomics_repro::arch;
 use atomics_repro::atomics::OpKind;
 use atomics_repro::bench::falseshare::{run_false_sharing, Layout};
 use atomics_repro::bench::latency::LatencyBench;
-use atomics_repro::bench::locks::{run_lock, LockKind};
+use atomics_repro::bench::locks::{run_lock, run_lock_stepwise, LockKind};
 use atomics_repro::bench::placement::{PrepLocality, PrepState};
 use atomics_repro::sim::Machine;
 use atomics_repro::sweep::{jobs_for, SuccessfulCas, SweepExecutor, Workload};
@@ -136,6 +136,37 @@ fn lock_family_carries_per_thread_engine_stats() {
             "{}: every thread pays engine latency",
             kind.label()
         );
+    }
+}
+
+/// THE golden gate for spin fast-forward: the production scheduler
+/// (memoized poll replay, flat event structures) and the stepwise
+/// reference scheduler (every poll a full engine walk) produce
+/// bit-identical results on the real §6.1 programs — spin-heavy ticket
+/// locks and consumer polls included — across protocols with and without
+/// write combining.
+#[test]
+fn lock_results_identical_fast_and_stepwise() {
+    for cfg in [arch::ivybridge(), arch::bulldozer(), arch::xeonphi()] {
+        let mut m = Machine::new(cfg);
+        for kind in LockKind::ALL {
+            let fast = run_lock(&mut m, kind, 8, 30).unwrap();
+            let slow = run_lock_stepwise(&mut m, kind, 8, 30).unwrap();
+            let name = format!("{} on {}", kind.label(), m.cfg.name);
+            assert_eq!(
+                fast.acq_per_sec.to_bits(),
+                slow.acq_per_sec.to_bits(),
+                "{name}: fast {} vs stepwise {}",
+                fast.acq_per_sec,
+                slow.acq_per_sec
+            );
+            assert_eq!(fast.elapsed_ns.to_bits(), slow.elapsed_ns.to_bits(), "{name}");
+            assert_eq!(fast.per_thread, slow.per_thread, "{name}");
+            assert_eq!(fast.attempts, slow.attempts, "{name}");
+            assert_eq!(fast.failed_attempts, slow.failed_attempts, "{name}");
+            assert_eq!(fast.spin_reads, slow.spin_reads, "{name}");
+            assert_eq!(fast.acquisitions, slow.acquisitions, "{name}");
+        }
     }
 }
 

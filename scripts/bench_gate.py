@@ -13,8 +13,16 @@ Bootstrap: bench numbers are machine-dependent, so a fresh checkout (or a
 baseline still carrying "calibrated": false) cannot be gated against.  In
 that case the script rewrites the baseline from the fresh run, marks it
 calibrated, and exits 0 with a notice — commit the file to arm the gate
-on this machine.  `--update-baseline` forces the same rewrite (the escape
-hatch after an intentional slowdown).
+on this machine.
+
+New entries: a throughput key present in the fresh results but absent
+from the committed baseline (a PR added a benchmark) is reported as
+"new (unadjudicated)" and does not fail the gate — it has no baseline to
+regress against.  Refresh flow: run `./ci.sh --update-baseline` (or
+`python3 scripts/bench_gate.py BASELINE FRESH --update-baseline`) to fold
+the new entries into the baseline, then commit BENCH_baseline.json; from
+the next run on they are gated like every other key.  The same flag is
+the escape hatch after an intentional slowdown.
 
 Usage: bench_gate.py BASELINE FRESH [--threshold 0.20] [--update-baseline]
 """
@@ -84,6 +92,19 @@ def main(argv):
             status = f"REGRESSION (<{1.0 - threshold:.0%} of baseline)"
             failures.append(k)
         print(f"  {k:<28} baseline {base:>12.1f}  fresh {new:>12.1f}  ({ratio:.2f}x) {status}")
+    unadjudicated = [k for k in throughput_keys(fresh) if k not in baseline]
+    for k in unadjudicated:
+        print(
+            f"  {k:<28} baseline {'-':>12}  fresh {float(fresh[k]):>12.1f}  "
+            f"new (unadjudicated)"
+        )
+    if unadjudicated:
+        print(
+            "bench gate: "
+            f"{len(unadjudicated)} new entr{'y' if len(unadjudicated) == 1 else 'ies'} "
+            "not in the baseline; run ./ci.sh --update-baseline and commit "
+            "BENCH_baseline.json to start gating them"
+        )
     if failures:
         print(
             f"bench gate: FAIL — {', '.join(failures)} regressed more than "
