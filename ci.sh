@@ -62,6 +62,12 @@ echo "== smoke: repro contend (machine-accurate Fig. 8 path) =="
 echo "== smoke: repro locks (§6.1 lock/queue + false-sharing path) =="
 ./target/release/repro locks --arch haswell --threads 2 --acq 50 --stats
 
+echo "== smoke: repro fit --backend native (offline Table 2 fit) =="
+./target/release/repro fit --backend native --arch haswell
+
+echo "== smoke: repro calibrate (contention-plateau calibrator) =="
+./target/release/repro calibrate --arch haswell --ops 400
+
 echo "== bench-regression gate (BENCH_sweep.json vs BENCH_baseline.json) =="
 BENCH_FAST=1 cargo bench --bench bench_sweep
 # cargo runs bench binaries with cwd = the package root, so the fresh

@@ -1,10 +1,13 @@
 //! End-to-end sweep-executor benchmark: times the full figure-style latency
 //! grid single-threaded vs. with all cores, the machine-accurate
-//! contention grid (Fig. 8), and the §6.1 lock/queue grid (the multicore
+//! contention grid (Fig. 8), the §6.1 lock/queue grid (the multicore
 //! program scheduler's spin-fast-forward path, full topology-derived
-//! thread ladders including the Phi's 61-core point), prints the
-//! speedups, and writes `BENCH_sweep.json` so future PRs can track sweep,
-//! contend, and locks throughput (gated by `scripts/bench_gate.py`).
+//! thread ladders including the Phi's 61-core point), and the native
+//! Table 2 fit over all four architectures (dataset collection + the
+//! closed-form solve), prints the speedups, and writes `BENCH_sweep.json`
+//! so future PRs can track sweep, contend, locks, and fit throughput
+//! (gated by `scripts/bench_gate.py`; `fit_points_per_sec` ships
+//! unadjudicated until the next baseline refresh).
 //! Uses the in-tree harness (criterion is not vendored offline).
 //! `BENCH_FAST=1` reduces samples.
 
@@ -98,12 +101,36 @@ fn main() {
         locks_points as f64 / (locks_ms / 1e3).max(1e-9)
     );
 
+    // Native Table 2 fit end-to-end: dataset collection (through the
+    // executor) + the pure-Rust closed-form solve, all four testbeds.
+    // Throughput is dataset rows per second — the "fit_points_per_sec"
+    // key is new and unadjudicated until the next baseline refresh.
+    use atomics_repro::coordinator::dataset::{collect_latency_dataset, fit_sizes};
+    use atomics_repro::fit::{FitBackend, FitCfg, NativeFit};
+    use atomics_repro::model::params::Theta;
+    let t0 = Instant::now();
+    let mut fit_points = 0usize;
+    for cfg in arch::all() {
+        let ds = collect_latency_dataset(&cfg, &fit_sizes(&cfg));
+        fit_points += ds.len();
+        let r = NativeFit
+            .fit(cfg.name, &ds, Theta::from_config(&cfg), &FitCfg::default())
+            .expect("native fit is infallible on a collected dataset");
+        black_box(&r);
+    }
+    let fit_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "  fit (native)     {fit_ms:>10.1} ms   ({fit_points} points, {:.0} points/s)",
+        fit_points as f64 / (fit_ms / 1e3).max(1e-9)
+    );
+
     let json = format!(
         "{{\"bench\":\"sweep\",\"series\":{},\"points\":{},\"threads\":{},\
          \"single_ms\":{:.1},\"parallel_ms\":{:.1},\"speedup\":{:.3},\
          \"points_per_sec_parallel\":{:.1},\
          \"contend_points\":{},\"contend_ms\":{:.1},\"contend_points_per_sec\":{:.1},\
-         \"locks_points\":{},\"locks_ms\":{:.1},\"locks_points_per_sec\":{:.3}}}\n",
+         \"locks_points\":{},\"locks_ms\":{:.1},\"locks_points_per_sec\":{:.3},\
+         \"fit_points\":{},\"fit_ms\":{:.1},\"fit_points_per_sec\":{:.1}}}\n",
         jobs.len(),
         n_points,
         threads,
@@ -116,7 +143,10 @@ fn main() {
         contend_points as f64 / (contend_ms / 1e3).max(1e-9),
         locks_points,
         locks_ms,
-        locks_points as f64 / (locks_ms / 1e3).max(1e-9)
+        locks_points as f64 / (locks_ms / 1e3).max(1e-9),
+        fit_points,
+        fit_ms,
+        fit_points as f64 / (fit_ms / 1e3).max(1e-9)
     );
     match std::fs::File::create("BENCH_sweep.json").and_then(|mut f| f.write_all(json.as_bytes()))
     {

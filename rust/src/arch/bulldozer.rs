@@ -62,6 +62,12 @@ pub fn bulldozer() -> MachineConfig {
         }),
         muw: true, // §5.5: the MuW fast-migration state
         contended_write_combining: false, // §5.4: Bulldozer suffers
+        // Fitted by `repro calibrate --arch bulldozer` against the Fig. 8
+        // plateau targets (data::fig8_targets); see EXPERIMENTS.md. The
+        // lowest of the four: HyperTransport hand-offs pipeline poorly,
+        // and half the round-robin hand-offs are already cheap intra-
+        // module SharedL2 transfers, so little overlap is left to claim.
+        handoff_overlap: 0.22,
         cas128_penalty: (20.0, 5.0), // §5.3
         unaligned: UnalignedCfg { bus_lock_ns: 560.0 },
         frequency_mhz: 2100,

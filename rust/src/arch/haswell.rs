@@ -56,6 +56,9 @@ pub fn haswell() -> MachineConfig {
         ht_assist: None,
         muw: false,
         contended_write_combining: true, // §5.4
+        // Fitted by `repro calibrate --arch haswell` against the Fig. 8
+        // plateau targets (data::fig8_targets); see EXPERIMENTS.md.
+        handoff_overlap: 0.70,
         cas128_penalty: (0.0, 0.0),      // §5.3: identical on Intel
         unaligned: UnalignedCfg { bus_lock_ns: 480.0 }, // §5.7: CAS up to ≈750ns
         frequency_mhz: 3400,

@@ -58,6 +58,9 @@ pub fn ivybridge() -> MachineConfig {
         ht_assist: None,
         muw: false,
         contended_write_combining: true, // §5.4: ~100 GB/s contended writes
+        // Fitted by `repro calibrate --arch ivybridge` against the Fig. 8
+        // plateau targets (data::fig8_targets); see EXPERIMENTS.md.
+        handoff_overlap: 0.64,
         cas128_penalty: (0.0, 0.0),
         unaligned: UnalignedCfg { bus_lock_ns: 520.0 },
         frequency_mhz: 2700,

@@ -53,6 +53,13 @@ pub fn xeonphi() -> MachineConfig {
         ht_assist: None,
         muw: false,
         contended_write_combining: false, // §5.4: bandwidth collapses
+        // Fitted by `repro calibrate --arch xeonphi` against the Fig. 8
+        // plateau targets (data::fig8_targets); see EXPERIMENTS.md. The
+        // highest of the four: with 61 requesters queued on the ring the
+        // directory pipelines hand-offs almost completely, which is how
+        // the Phi sustains its comparatively high contended-FAA plateau
+        // despite the 197.6 ns cache-to-cache transfer.
+        handoff_overlap: 0.95,
         cas128_penalty: (0.0, 0.0),
         unaligned: UnalignedCfg { bus_lock_ns: 900.0 },
         frequency_mhz: 1238,

@@ -13,6 +13,12 @@
 //!   in shape (monotone bandwidth decline for atomics, write-combining
 //!   scaling on the Intel parts), which the `contention_engine` integration
 //!   tests pin on all four architectures.
+//!
+//! Absolute plateau heights of the machine model are *calibrated*, not
+//! hand-picked: each architecture's `MachineConfig::handoff_overlap` is
+//! fitted by [`crate::fit::calibrate`] against the paper's measured
+//! Fig. 8 plateau targets ([`crate::data::fig8_targets`]); `repro
+//! calibrate` re-derives the values and reports per-target residuals.
 
 use crate::atomics::OpKind;
 use crate::sim::event::run_contention as run_analytic;

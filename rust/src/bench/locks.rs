@@ -8,6 +8,14 @@
 //! * **test-and-set spinlock** — acquire via `SWP(lock, 1)`, release via a
 //!   plain store; every failed attempt is a wasted serialized RMW (the
 //!   contention-management pathology Dice et al. analyze);
+//! * **TAS spinlock with bounded exponential backoff** — the same acquire
+//!   protocol, but a failed `SWP` sleeps `BACKOFF_BASE_NS · 2^k` (capped
+//!   at [`BACKOFF_MAX_NS`], `k` = consecutive failures) before retrying —
+//!   Dice et al.'s lightweight contention management. Backed-off threads
+//!   keep the lock line out of their caches while they sleep, so the
+//!   holder's release and the eventual winning `SWP` stop competing with
+//!   a wall of doomed retries: the failed-attempt ratio collapses
+//!   relative to plain TAS at the same thread count;
 //! * **ticket lock** — `FAA` takes a ticket, waiters spin on plain reads
 //!   of the owner word (reads replicate, so waiting is cheap) and exactly
 //!   one RMW per acquisition reaches the interconnect;
@@ -46,11 +54,22 @@ pub const ACQ_PER_THREAD: usize = 100;
 /// reads through a full serialized run).
 const MAX_SPIN: u64 = 1 << 22;
 
+/// First backoff pause of the TAS-with-backoff lock, ns (Dice et al.'s
+/// bounded exponential scheme: double per consecutive failure).
+pub const BACKOFF_BASE_NS: f64 = 40.0;
+
+/// Backoff cap, ns — bounds both the tail latency of an unlucky thread
+/// and the idle gap after a release (`BACKOFF_BASE_NS · 2^6`).
+pub const BACKOFF_MAX_NS: f64 = 2560.0;
+
 /// Which synchronization primitive to benchmark.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LockKind {
     /// Test-and-set spinlock (SWP acquire, store release).
     TasSpin,
+    /// TAS spinlock with bounded exponential backoff on failed acquires
+    /// (Dice et al.'s lightweight contention management).
+    TasBackoff,
     /// Ticket lock (FAA ticket, read spin, store release).
     Ticket,
     /// Multi-producer single-consumer queue (CAS tail reservation).
@@ -58,11 +77,13 @@ pub enum LockKind {
 }
 
 impl LockKind {
-    pub const ALL: [LockKind; 3] = [LockKind::TasSpin, LockKind::Ticket, LockKind::Mpsc];
+    pub const ALL: [LockKind; 4] =
+        [LockKind::TasSpin, LockKind::TasBackoff, LockKind::Ticket, LockKind::Mpsc];
 
     pub fn label(self) -> &'static str {
         match self {
             LockKind::TasSpin => "tas-spinlock",
+            LockKind::TasBackoff => "tas-backoff",
             LockKind::Ticket => "ticket-lock",
             LockKind::Mpsc => "mpsc-queue",
         }
@@ -72,6 +93,7 @@ impl LockKind {
     pub fn parse(s: &str) -> Option<LockKind> {
         match s {
             "tas" | "tas-spinlock" | "spinlock" => Some(LockKind::TasSpin),
+            "tas-backoff" | "backoff" | "tas-ebo" => Some(LockKind::TasBackoff),
             "ticket" | "ticket-lock" => Some(LockKind::Ticket),
             "mpsc" | "queue" | "mpsc-queue" => Some(LockKind::Mpsc),
             _ => None,
@@ -81,7 +103,7 @@ impl LockKind {
     /// The atomic primitive the acquire path is built on.
     pub fn primitive(self) -> OpKind {
         match self {
-            LockKind::TasSpin => OpKind::Swp,
+            LockKind::TasSpin | LockKind::TasBackoff => OpKind::Swp,
             LockKind::Ticket => OpKind::Faa,
             LockKind::Mpsc => OpKind::Cas,
         }
@@ -202,6 +224,78 @@ impl CoreProgram for TasProgram {
                     self.failures += 1;
                     assert!(self.failures < MAX_SPIN, "TAS acquire livelock");
                     Some(swp_acquire())
+                }
+            }
+            TasPhase::CsRead => {
+                self.phase = TasPhase::CsWrite;
+                Some(Step::new(Op::Write { value: res.value.wrapping_add(1) }, COUNTER_ADDR))
+            }
+            TasPhase::CsWrite => {
+                self.phase = TasPhase::Release;
+                Some(Step::counted(Op::Write { value: 0 }, LOCK_ADDR))
+            }
+            TasPhase::Release => {
+                self.acquired += 1;
+                self.remaining -= 1;
+                self.phase = TasPhase::Acquire;
+                (self.remaining > 0).then(swp_acquire)
+            }
+        }
+    }
+}
+
+/// [`TasProgram`] with Dice et al.'s bounded exponential backoff: the
+/// k-th consecutive failed `SWP` sleeps `BACKOFF_BASE_NS · 2^(k-1)` ns
+/// (capped at [`BACKOFF_MAX_NS`]) before retrying, via
+/// [`Step::after`]. The streak resets on every successful acquire.
+struct TasBackoffProgram {
+    remaining: usize,
+    phase: TasPhase,
+    /// Consecutive failed acquires since the last success.
+    streak: u32,
+    attempts: u64,
+    failures: u64,
+    acquired: u64,
+}
+
+impl TasBackoffProgram {
+    fn new(acquisitions: usize) -> TasBackoffProgram {
+        TasBackoffProgram {
+            remaining: acquisitions,
+            phase: TasPhase::Acquire,
+            streak: 0,
+            attempts: 0,
+            failures: 0,
+            acquired: 0,
+        }
+    }
+
+    /// Current pause: base · 2^(streak−1), capped. `streak` ≥ 1 here.
+    fn pause_ns(&self) -> f64 {
+        // 40 · 2^6 = 2560 = the cap, so higher exponents are moot.
+        let exp = self.streak.saturating_sub(1).min(6);
+        (BACKOFF_BASE_NS * f64::from(1u32 << exp)).min(BACKOFF_MAX_NS)
+    }
+}
+
+impl CoreProgram for TasBackoffProgram {
+    fn first(&mut self) -> Option<Step> {
+        (self.remaining > 0).then(swp_acquire)
+    }
+
+    fn next(&mut self, _prev: Step, res: &Access) -> Option<Step> {
+        match self.phase {
+            TasPhase::Acquire => {
+                self.attempts += 1;
+                if res.value == 0 {
+                    self.streak = 0;
+                    self.phase = TasPhase::CsRead;
+                    Some(Step::new(Op::Read, COUNTER_ADDR))
+                } else {
+                    self.failures += 1;
+                    self.streak += 1;
+                    assert!(self.failures < MAX_SPIN, "TAS-backoff acquire livelock");
+                    Some(swp_acquire().after(self.pause_ns()))
                 }
             }
             TasPhase::CsRead => {
@@ -426,6 +520,7 @@ impl CoreProgram for ConsumerProgram {
 /// after the run.
 enum LockProgram {
     Tas(TasProgram),
+    TasBackoff(TasBackoffProgram),
     Ticket(TicketProgram),
     Producer(ProducerProgram),
     Consumer(ConsumerProgram),
@@ -435,6 +530,7 @@ impl CoreProgram for LockProgram {
     fn first(&mut self) -> Option<Step> {
         match self {
             LockProgram::Tas(p) => p.first(),
+            LockProgram::TasBackoff(p) => p.first(),
             LockProgram::Ticket(p) => p.first(),
             LockProgram::Producer(p) => p.first(),
             LockProgram::Consumer(p) => p.first(),
@@ -444,6 +540,7 @@ impl CoreProgram for LockProgram {
     fn next(&mut self, prev: Step, res: &Access) -> Option<Step> {
         match self {
             LockProgram::Tas(p) => p.next(prev, res),
+            LockProgram::TasBackoff(p) => p.next(prev, res),
             LockProgram::Ticket(p) => p.next(prev, res),
             LockProgram::Producer(p) => p.next(prev, res),
             LockProgram::Consumer(p) => p.next(prev, res),
@@ -492,6 +589,9 @@ fn run_lock_impl(
         LockKind::TasSpin => {
             (0..threads).map(|_| LockProgram::Tas(TasProgram::new(work_per_thread))).collect()
         }
+        LockKind::TasBackoff => (0..threads)
+            .map(|_| LockProgram::TasBackoff(TasBackoffProgram::new(work_per_thread)))
+            .collect(),
         LockKind::Ticket => (0..threads)
             .map(|_| LockProgram::Ticket(TicketProgram::new(work_per_thread)))
             .collect(),
@@ -515,6 +615,11 @@ fn run_lock_impl(
     for p in &progs {
         match p {
             LockProgram::Tas(p) => {
+                acquisitions += p.acquired;
+                attempts += p.attempts;
+                failed_attempts += p.failures;
+            }
+            LockProgram::TasBackoff(p) => {
                 acquisitions += p.acquired;
                 attempts += p.attempts;
                 failed_attempts += p.failures;
@@ -645,11 +750,61 @@ mod tests {
     #[test]
     fn parse_round_trip() {
         assert_eq!(LockKind::parse("tas"), Some(LockKind::TasSpin));
+        assert_eq!(LockKind::parse("backoff"), Some(LockKind::TasBackoff));
         assert_eq!(LockKind::parse("ticket"), Some(LockKind::Ticket));
         assert_eq!(LockKind::parse("mpsc"), Some(LockKind::Mpsc));
         assert_eq!(LockKind::parse("nope"), None);
         for kind in LockKind::ALL {
             assert_eq!(LockKind::parse(kind.label()), Some(kind));
         }
+    }
+
+    /// Dice et al.'s claim, reproduced on the simulated machine: bounded
+    /// exponential backoff slashes the wasted serialized retries of a
+    /// contended TAS lock. Same work, same machine, same thread count —
+    /// only the waiting policy differs.
+    #[test]
+    fn backoff_cuts_failed_attempts_under_contention() {
+        let mut m = Machine::new(arch::ivybridge());
+        let plain = run_lock(&mut m, LockKind::TasSpin, 8, 50).unwrap();
+        let backoff = run_lock(&mut m, LockKind::TasBackoff, 8, 50).unwrap();
+        assert_eq!(backoff.acquisitions, plain.acquisitions, "same useful work");
+        assert!(
+            backoff.failed_attempts < plain.failed_attempts,
+            "backoff must waste fewer retries: {} vs {}",
+            backoff.failed_attempts,
+            plain.failed_attempts
+        );
+        assert!(backoff.fail_ratio() < plain.fail_ratio());
+    }
+
+    /// Uncontended, the backoff lock never sleeps: its schedule is the
+    /// plain TAS schedule (zero failures → zero pauses).
+    #[test]
+    fn backoff_is_free_without_contention() {
+        let mut m = Machine::new(arch::haswell());
+        let plain = run_lock(&mut m, LockKind::TasSpin, 1, 50).unwrap();
+        let backoff = run_lock(&mut m, LockKind::TasBackoff, 1, 50).unwrap();
+        assert_eq!(backoff.failed_attempts, 0);
+        assert_eq!(
+            backoff.elapsed_ns.to_bits(),
+            plain.elapsed_ns.to_bits(),
+            "no failures, no pauses: identical schedule"
+        );
+    }
+
+    /// The pause ladder doubles from the base to the cap and saturates.
+    #[test]
+    fn backoff_ladder_doubles_and_caps() {
+        let mut p = TasBackoffProgram::new(1);
+        let mut seen = Vec::new();
+        for streak in 1..=8 {
+            p.streak = streak;
+            seen.push(p.pause_ns());
+        }
+        assert_eq!(seen[0], BACKOFF_BASE_NS);
+        assert_eq!(seen[1], 2.0 * BACKOFF_BASE_NS);
+        assert!(seen.windows(2).all(|w| w[1] >= w[0]), "{seen:?} not monotone");
+        assert_eq!(*seen.last().unwrap(), BACKOFF_MAX_NS);
     }
 }

@@ -140,6 +140,17 @@ pub fn fit_sizes(cfg: &MachineConfig) -> Vec<usize> {
     v
 }
 
+/// The smoke-sized fit grid (tests, `--fast` table runs): one sub-L1
+/// size plus one larger size capped at 2 MB, so the slowest chase stays
+/// debug-test sized — [`fit_sizes`]'s full grid reaches 4×L3 (120 MB on
+/// Ivy Bridge). Remote/shared rows keep every fittable θ column active
+/// at these sizes; columns that lose their only local excitation (e.g.
+/// a memory level the capped buffer never spills to) pin to the seed,
+/// which the solver handles by construction.
+pub fn fit_sizes_fast(cfg: &MachineConfig) -> Vec<usize> {
+    vec![cfg.l1.size / 2, (cfg.l2.size * 2).min(2 << 20)]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

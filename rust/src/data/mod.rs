@@ -1,0 +1,11 @@
+//! Digitized reference data from the source paper — measured values the
+//! simulator is *calibrated against*, as opposed to the configuration
+//! parameters (Table 1–3) it is *built from*.
+//!
+//! Currently one table: [`fig8_targets`], the contended-bandwidth plateaus
+//! of Fig. 8 that the [`crate::fit::calibrate`] subsystem fits each
+//! architecture's `handoff_overlap` to.
+
+pub mod fig8_targets;
+
+pub use fig8_targets::{targets_for, Fig8Target, FIG8_TARGETS};

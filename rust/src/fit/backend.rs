@@ -1,0 +1,260 @@
+//! The [`FitBackend`] abstraction: *how* the Table 2 fit executes.
+//!
+//! Two implementations ship:
+//!
+//! * [`NativeFit`] (the default) — the pure-Rust solver in
+//!   [`crate::fit::solver`]: closed-form normal equations with the
+//!   `fit_step`-equivalent projected-descent fallback. Zero native
+//!   dependencies; works in the offline image, so `repro fit` no longer
+//!   depends on the `vendor/xla` stub being real.
+//! * [`PjrtFit`] — the historical path through the AOT-compiled JAX
+//!   `fit_step` executable ([`crate::runtime::Runtime`] +
+//!   [`crate::coordinator::fit::fit_theta`]). Kept behind the same
+//!   degrade-gracefully error as before: without `make artifacts` (or on
+//!   the stubbed `xla`), [`FitBackend::fit`] returns the load error and
+//!   callers fall back to the paper-seed θ.
+//!
+//! Both report through one [`FitReport`] — θ in `f64`, the final loss as
+//! the masked MSE in unscaled ns² (the f32 truncation of the PJRT path
+//! happens only at the executable boundary, and its loss is re-evaluated
+//! in `f64` on the way out).
+
+use crate::coordinator::dataset::DataPoint;
+use crate::fit::solver::{self, GdCfg, Row};
+use crate::model::params::Theta;
+use crate::runtime::Runtime;
+use anyhow::Result;
+
+/// Fit hyperparameters, shared by both backends. The PJRT descent honors
+/// all three fields. The native backend solves in closed form (no step
+/// size, no iterations); its rarely-taken descent *fallback* derives a
+/// stable step itself (ignoring `lr`, whose scale is meaningless in the
+/// column-scaled space) and widens `max_iters`/`tol` to convergence-grade
+/// floors — see [`NativeFit::fit`] — because a fallback that stops short
+/// would silently report a worse θ than the closed form it stands in for.
+#[derive(Debug, Clone, Copy)]
+pub struct FitCfg {
+    /// PJRT `fit_step` learning rate (the executable's semantics are
+    /// fixed at export time; truncated to f32 at the boundary).
+    pub lr: f64,
+    pub max_iters: usize,
+    /// Stop when the relative loss improvement over a 100-iter window
+    /// drops below this.
+    pub tol: f64,
+}
+
+impl Default for FitCfg {
+    fn default() -> Self {
+        FitCfg { lr: 5e-4, max_iters: 2000, tol: 1e-5 }
+    }
+}
+
+/// Fit outcome for one architecture — backend-independent.
+#[derive(Debug, Clone)]
+pub struct FitReport {
+    pub arch: String,
+    /// Which backend produced the fit (`"native"` / `"pjrt"`).
+    pub backend: &'static str,
+    /// How the θ was obtained (`"closed-form"`, `"gradient-descent"`,
+    /// `"pjrt fit_step"`).
+    pub method: &'static str,
+    pub theta: Theta,
+    pub seed_theta: Theta,
+    /// Masked MSE at the fitted θ, unscaled ns², evaluated in `f64`.
+    pub final_loss: f64,
+    pub iterations: usize,
+    pub n_points: usize,
+}
+
+/// A Table 2 fitting engine.
+pub trait FitBackend {
+    fn name(&self) -> &'static str;
+
+    /// Fit θ from a latency dataset, seeding from `init`.
+    fn fit(
+        &self,
+        arch: &str,
+        dataset: &[DataPoint],
+        init: Theta,
+        cfg: &FitCfg,
+    ) -> Result<FitReport>;
+}
+
+/// Convert the dataset to solver rows (features already `f64`).
+pub fn rows_of(dataset: &[DataPoint]) -> Vec<Row> {
+    dataset.iter().map(|d| (d.features, d.measured_ns)).collect()
+}
+
+/// The pure-Rust default backend.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeFit;
+
+impl FitBackend for NativeFit {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn fit(
+        &self,
+        arch: &str,
+        dataset: &[DataPoint],
+        init: Theta,
+        cfg: &FitCfg,
+    ) -> Result<FitReport> {
+        let rows = rows_of(dataset);
+        let init_v = init.to_vec();
+        // The fallback descent overrides the caller's budget upward (see
+        // the FitCfg docs): iterations > 0 already signals the degenerate
+        // path, and it must then actually converge.
+        let gd = GdCfg { lr: None, max_iters: cfg.max_iters.max(20_000), tol: cfg.tol.min(1e-9) };
+        let s = solver::solve(&rows, &init_v, gd);
+        Ok(FitReport {
+            arch: arch.to_string(),
+            backend: self.name(),
+            method: s.method.label(),
+            theta: Theta::from_vec(&s.theta),
+            seed_theta: init,
+            final_loss: s.loss,
+            iterations: s.iterations,
+            n_points: dataset.len(),
+        })
+    }
+}
+
+/// The PJRT path: AOT `fit_step` through [`Runtime`]. The artifacts are
+/// loaded and compiled once on first use and reused across `fit` calls
+/// (the per-architecture CLI loop fits four times on one `Runtime`, as
+/// the pre-backend code did); load *failure* is re-attempted per call and
+/// is the degrade-gracefully error the pre-backend code surfaced.
+pub struct PjrtFit {
+    pub artifacts_dir: String,
+    runtime: std::sync::OnceLock<Runtime>,
+}
+
+impl Default for PjrtFit {
+    fn default() -> Self {
+        PjrtFit::new(Runtime::default_dir())
+    }
+}
+
+impl PjrtFit {
+    pub fn new(artifacts_dir: impl Into<String>) -> PjrtFit {
+        PjrtFit { artifacts_dir: artifacts_dir.into(), runtime: std::sync::OnceLock::new() }
+    }
+
+    /// The compiled runtime, loading it on first use.
+    fn runtime(&self) -> Result<&Runtime> {
+        if self.runtime.get().is_none() {
+            let rt = Runtime::load(&self.artifacts_dir)?;
+            // A racing loader already filled the cell: drop ours.
+            let _ = self.runtime.set(rt);
+        }
+        Ok(self.runtime.get().expect("just initialized"))
+    }
+}
+
+impl FitBackend for PjrtFit {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn fit(
+        &self,
+        arch: &str,
+        dataset: &[DataPoint],
+        init: Theta,
+        cfg: &FitCfg,
+    ) -> Result<FitReport> {
+        crate::coordinator::fit::fit_theta(self.runtime()?, arch, dataset, init, *cfg)
+    }
+}
+
+/// CLI-facing backend selector (`repro fit --backend native|pjrt`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FitBackendKind {
+    Native,
+    Pjrt,
+}
+
+impl FitBackendKind {
+    pub fn parse(s: &str) -> Option<FitBackendKind> {
+        match s {
+            "native" | "rust" => Some(FitBackendKind::Native),
+            "pjrt" | "xla" => Some(FitBackendKind::Pjrt),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            FitBackendKind::Native => "native",
+            FitBackendKind::Pjrt => "pjrt",
+        }
+    }
+
+    pub fn create(self) -> Box<dyn FitBackend> {
+        match self {
+            FitBackendKind::Native => Box::new(NativeFit),
+            FitBackendKind::Pjrt => Box::<PjrtFit>::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+    use crate::coordinator::dataset::{collect_latency_dataset, fit_sizes_fast};
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(FitBackendKind::parse("native"), Some(FitBackendKind::Native));
+        assert_eq!(FitBackendKind::parse("pjrt"), Some(FitBackendKind::Pjrt));
+        assert_eq!(FitBackendKind::parse("tpu"), None);
+        for k in [FitBackendKind::Native, FitBackendKind::Pjrt] {
+            assert_eq!(FitBackendKind::parse(k.label()), Some(k));
+            assert_eq!(k.create().name(), k.label());
+        }
+    }
+
+    /// The native backend fits real simulator measurements offline: the
+    /// recovered θ stays near the Table 2 seed (the O residuals the
+    /// 8-parameter model cannot express shift it by a few ns, exactly
+    /// like the paper's median-based calibration) and the loss is finite
+    /// ns².
+    #[test]
+    fn native_fits_simulator_measurements_offline() {
+        let cfg = arch::haswell();
+        let ds = collect_latency_dataset(&cfg, &fit_sizes_fast(&cfg));
+        let seed = Theta::from_config(&cfg);
+        let r = NativeFit.fit(cfg.name, &ds, seed, &FitCfg::default()).unwrap();
+        assert_eq!(r.backend, "native");
+        assert_eq!(r.n_points, ds.len());
+        assert!(r.final_loss.is_finite() && r.final_loss >= 0.0);
+        assert!(r.theta.to_vec().iter().all(|&x| x >= 0.0), "θ stays physical");
+        assert!(
+            (r.theta.e_cas - seed.e_cas).abs() < 5.0,
+            "E(CAS) near Table 2: fitted {} vs seed {}",
+            r.theta.e_cas,
+            seed.e_cas
+        );
+        // the fit must actually use the measurements: loss at the fitted
+        // θ is no worse than at the seed
+        let rows = rows_of(&ds);
+        assert!(
+            r.final_loss <= solver::masked_mse(&rows, &seed.to_vec()) + 1e-3,
+            "fit cannot be worse than its seed"
+        );
+    }
+
+    /// Without artifacts the PJRT backend degrades to an error — the
+    /// contract `repro fit --backend pjrt` reports to the user.
+    #[test]
+    fn pjrt_degrades_gracefully_without_artifacts() {
+        let backend = PjrtFit::new("/nonexistent/artifacts");
+        let cfg = arch::haswell();
+        let ds = collect_latency_dataset(&cfg, &[16 << 10]);
+        let err = backend.fit(cfg.name, &ds, Theta::from_config(&cfg), &FitCfg::default());
+        assert!(err.is_err(), "stubbed/missing artifacts must surface an error");
+    }
+}

@@ -1,0 +1,254 @@
+//! Contention-plateau calibration: fit each architecture's
+//! `handoff_overlap` — the fraction of a contended ownership transfer
+//! that overlaps the next queued read-for-ownership, which sets the
+//! Fig. 8 bandwidth plateau of the multi-core scheduler — against the
+//! paper's measured plateau targets ([`crate::data::fig8_targets`]).
+//!
+//! The objective is the mean relative bandwidth residual over the
+//! architecture's targets, each evaluated by actually *running* the
+//! machine-accurate scheduler ([`run_contention`]) at the target thread
+//! count with the candidate overlap. Plateau bandwidth is monotone in
+//! the overlap (less un-overlapped transfer per hand-off → shorter line
+//! occupancy), so each per-target residual is V-shaped and the summed
+//! objective is unimodal on the search interval: a coarse grid brackets
+//! the minimum, golden-section refines it. Everything runs in virtual
+//! time — two calibrations of the same architecture are bit-identical,
+//! which `tests/fit_native.rs` pins.
+//!
+//! This replaced the global `HANDOFF_OVERLAP = 0.5` constant: the fitted
+//! values ship as per-architecture `MachineConfig::handoff_overlap`
+//! defaults, and `repro calibrate` re-derives them (reporting the
+//! per-target residual and writing `results/calibration_<arch>.csv`).
+
+use crate::atomics::OpKind;
+use crate::data::fig8_targets::Fig8Target;
+use crate::sim::multicore::run_contention;
+use crate::sim::{Machine, MachineConfig};
+
+/// Calibration search parameters. The defaults match `repro calibrate`.
+#[derive(Debug, Clone, Copy)]
+pub struct CalibrationCfg {
+    /// Operations per thread per evaluation (2000 matches the figure
+    /// sweeps; tests shrink it).
+    pub ops_per_thread: usize,
+    /// Search interval for the overlap (open at both machine limits: 0
+    /// would serialize full transfers, 1 would make hand-offs free).
+    pub lo: f64,
+    pub hi: f64,
+    /// Coarse-grid evaluations bracketing the minimum (≥ 3).
+    pub coarse: usize,
+    /// Golden-section refinement evaluations inside the bracket.
+    pub refine: usize,
+}
+
+impl Default for CalibrationCfg {
+    fn default() -> Self {
+        CalibrationCfg { ops_per_thread: 2000, lo: 0.02, hi: 0.98, coarse: 17, refine: 28 }
+    }
+}
+
+/// One target evaluated at the fitted overlap.
+#[derive(Debug, Clone, Copy)]
+pub struct CalPoint {
+    pub op: OpKind,
+    pub threads: usize,
+    pub target_gbs: f64,
+    pub achieved_gbs: f64,
+    /// Digitized from the paper's plot (vs extrapolated).
+    pub from_paper: bool,
+}
+
+impl CalPoint {
+    /// |achieved − target| / target.
+    pub fn rel_residual(&self) -> f64 {
+        (self.achieved_gbs - self.target_gbs).abs() / self.target_gbs.max(f64::MIN_POSITIVE)
+    }
+}
+
+/// Outcome of calibrating one architecture.
+#[derive(Debug, Clone)]
+pub struct CalibrationReport {
+    pub arch: String,
+    /// The overlap minimizing the mean relative residual.
+    pub fitted_overlap: f64,
+    /// The value shipped in the architecture's `MachineConfig` (what the
+    /// engine currently runs with).
+    pub shipped_overlap: f64,
+    /// Per-target achievement at the fitted overlap.
+    pub points: Vec<CalPoint>,
+    /// Mean of [`CalPoint::rel_residual`] at the fitted overlap.
+    pub mean_rel_residual: f64,
+    /// Objective evaluations spent, including the final reporting pass
+    /// at the fitted overlap (each runs every target once).
+    pub evaluations: usize,
+}
+
+/// Plateau bandwidth of `(op, threads)` on `cfg` with the candidate
+/// overlap installed — one machine-accurate contention run.
+pub fn plateau_bandwidth(
+    cfg: &MachineConfig,
+    overlap: f64,
+    op: OpKind,
+    threads: usize,
+    ops_per_thread: usize,
+) -> f64 {
+    let mut c = cfg.clone();
+    c.handoff_overlap = overlap;
+    let mut m = Machine::new(c);
+    run_contention(&mut m, threads, op, ops_per_thread).bandwidth_gbs
+}
+
+/// Mean relative residual of every target at one candidate overlap.
+fn objective(
+    cfg: &MachineConfig,
+    targets: &[Fig8Target],
+    overlap: f64,
+    ops_per_thread: usize,
+) -> f64 {
+    let sum: f64 = targets
+        .iter()
+        .map(|t| {
+            let got = plateau_bandwidth(cfg, overlap, t.op, t.threads, ops_per_thread);
+            (got - t.gbs).abs() / t.gbs.max(f64::MIN_POSITIVE)
+        })
+        .sum();
+    sum / targets.len().max(1) as f64
+}
+
+/// Fit `cfg`'s handoff overlap against `targets`. Returns `None` when
+/// `targets` is empty (an unknown architecture). Deterministic: fixed
+/// evaluation schedule, virtual-time simulation only.
+pub fn calibrate(
+    cfg: &MachineConfig,
+    targets: &[Fig8Target],
+    ccfg: &CalibrationCfg,
+) -> Option<CalibrationReport> {
+    if targets.is_empty() {
+        return None;
+    }
+    assert!(ccfg.lo < ccfg.hi && ccfg.coarse >= 3);
+    for t in targets {
+        assert!(
+            t.threads >= 1 && t.threads <= cfg.topology.n_cores,
+            "{}: target thread count {} outside the machine",
+            cfg.name,
+            t.threads
+        );
+    }
+    let mut evaluations = 0;
+    let mut eval = |ov: f64| {
+        evaluations += 1;
+        objective(cfg, targets, ov, ccfg.ops_per_thread)
+    };
+
+    // Coarse grid: bracket the minimum.
+    let step = (ccfg.hi - ccfg.lo) / (ccfg.coarse - 1) as f64;
+    let grid: Vec<f64> = (0..ccfg.coarse).map(|i| ccfg.lo + step * i as f64).collect();
+    let scores: Vec<f64> = grid.iter().map(|&ov| eval(ov)).collect();
+    let best = scores
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).expect("finite objective"))
+        .map(|(i, _)| i)
+        .expect("non-empty grid");
+    let mut a = grid[best.saturating_sub(1)];
+    let mut b = grid[(best + 1).min(grid.len() - 1)];
+
+    // Golden-section refinement inside [a, b].
+    let invphi = (5.0f64.sqrt() - 1.0) / 2.0;
+    let mut c = b - invphi * (b - a);
+    let mut d = a + invphi * (b - a);
+    let mut fc = eval(c);
+    let mut fd = eval(d);
+    for _ in 0..ccfg.refine {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - invphi * (b - a);
+            fc = eval(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + invphi * (b - a);
+            fd = eval(d);
+        }
+    }
+    let fitted = if fc < fd { c } else { d };
+
+    // One reporting pass at the fitted overlap (counted as an
+    // evaluation): re-simulating here keeps the search loop free of
+    // per-target bookkeeping at the cost of one extra objective pass.
+    evaluations += 1;
+    let points: Vec<CalPoint> = targets
+        .iter()
+        .map(|t| CalPoint {
+            op: t.op,
+            threads: t.threads,
+            target_gbs: t.gbs,
+            achieved_gbs: plateau_bandwidth(cfg, fitted, t.op, t.threads, ccfg.ops_per_thread),
+            from_paper: t.from_paper,
+        })
+        .collect();
+    let mean_rel_residual =
+        points.iter().map(|p| p.rel_residual()).sum::<f64>() / points.len() as f64;
+
+    Some(CalibrationReport {
+        arch: cfg.name.to_string(),
+        fitted_overlap: fitted,
+        shipped_overlap: cfg.handoff_overlap,
+        points,
+        mean_rel_residual,
+        evaluations,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+
+    /// Shrunk search for unit tests (integration tests use their own).
+    fn test_cfg() -> CalibrationCfg {
+        CalibrationCfg { ops_per_thread: 200, lo: 0.02, hi: 0.98, coarse: 9, refine: 12 }
+    }
+
+    #[test]
+    fn plateau_bandwidth_is_monotone_in_overlap() {
+        // The physical premise of the search: more hand-off overlap →
+        // shorter line occupancy → higher plateau.
+        let cfg = arch::haswell();
+        let lo = plateau_bandwidth(&cfg, 0.1, OpKind::Faa, 4, 300);
+        let mid = plateau_bandwidth(&cfg, 0.5, OpKind::Faa, 4, 300);
+        let hi = plateau_bandwidth(&cfg, 0.9, OpKind::Faa, 4, 300);
+        assert!(lo < mid && mid < hi, "{lo} < {mid} < {hi} violated");
+    }
+
+    #[test]
+    fn calibrate_recovers_a_synthetic_overlap() {
+        // Generate the target *from* the simulator at a known overlap;
+        // the calibrator must find it (and drive the residual to ~0).
+        let cfg = arch::haswell();
+        let planted = 0.42;
+        let targets = [Fig8Target {
+            arch: cfg.name,
+            op: OpKind::Faa,
+            threads: 4,
+            gbs: plateau_bandwidth(&cfg, planted, OpKind::Faa, 4, 200),
+            from_paper: false,
+        }];
+        let r = calibrate(&cfg, &targets, &test_cfg()).unwrap();
+        assert!(
+            (r.fitted_overlap - planted).abs() < 0.02,
+            "fitted {} vs planted {planted}",
+            r.fitted_overlap
+        );
+        assert!(r.mean_rel_residual < 0.02, "residual {}", r.mean_rel_residual);
+    }
+
+    #[test]
+    fn no_targets_is_none() {
+        assert!(calibrate(&arch::haswell(), &[], &test_cfg()).is_none());
+    }
+}

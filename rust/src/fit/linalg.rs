@@ -1,0 +1,116 @@
+//! Minimal dense linear algebra for the native fitting backend: an
+//! in-place Cholesky factorization and triangular solves over the tiny
+//! (`THETA_DIM` × `THETA_DIM`) normal-equation systems the Table 2 fit
+//! produces. Everything is `f64` and allocation-light; no external crates
+//! (the image is offline).
+
+/// Solve `A·x = b` for symmetric positive-definite `A` (row-major,
+/// `n × n`) via Cholesky (`A = L·Lᵀ`). Returns `None` when `A` is not
+/// numerically positive-definite (a non-positive pivot), leaving the
+/// caller to regularize or fall back. `a` is consumed as scratch.
+pub fn cholesky_solve(mut a: Vec<f64>, b: &[f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    assert_eq!(a.len(), n * n, "square system");
+    // Factor: L overwrites the lower triangle of a.
+    for j in 0..n {
+        let mut d = a[j * n + j];
+        for k in 0..j {
+            d -= a[j * n + k] * a[j * n + k];
+        }
+        if d <= 0.0 || !d.is_finite() {
+            return None;
+        }
+        let d = d.sqrt();
+        a[j * n + j] = d;
+        for i in (j + 1)..n {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= a[i * n + k] * a[j * n + k];
+            }
+            a[i * n + j] = s / d;
+        }
+    }
+    // Forward: L·y = b.
+    let mut x = b.to_vec();
+    for i in 0..n {
+        for k in 0..i {
+            x[i] -= a[i * n + k] * x[k];
+        }
+        x[i] /= a[i * n + i];
+    }
+    // Backward: Lᵀ·x = y.
+    for i in (0..n).rev() {
+        for k in (i + 1)..n {
+            x[i] -= a[k * n + i] * x[k];
+        }
+        x[i] /= a[i * n + i];
+    }
+    Some(x)
+}
+
+/// `y = A·x` for row-major `A` (`n × n`).
+pub fn matvec(a: &[f64], x: &[f64]) -> Vec<f64> {
+    let n = x.len();
+    assert_eq!(a.len(), n * n);
+    (0..n)
+        .map(|i| (0..n).map(|j| a[i * n + j] * x[j]).sum())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_identity() {
+        let n = 3;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let x = cholesky_solve(a, &[1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(x, vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn solves_known_spd_system() {
+        // A = [[4,2],[2,3]], b = [10, 9] → x = [1.5, 2]
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        let x = cholesky_solve(a.clone(), &[10.0, 9.0]).unwrap();
+        assert!((x[0] - 1.5).abs() < 1e-12, "{x:?}");
+        assert!((x[1] - 2.0).abs() < 1e-12, "{x:?}");
+        let back = matvec(&a, &x);
+        assert!((back[0] - 10.0).abs() < 1e-12 && (back[1] - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        // eigenvalues 3 and -1: not PD
+        assert!(cholesky_solve(vec![1.0, 2.0, 2.0, 1.0], &[1.0, 1.0]).is_none());
+        // outright singular
+        assert!(cholesky_solve(vec![1.0, 1.0, 1.0, 1.0], &[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn random_spd_roundtrip() {
+        // A = MᵀM + I is SPD; solving must invert it to ~machine epsilon.
+        let n = 6;
+        let mut rng = crate::util::rng::Rng::new(7);
+        let m: Vec<f64> = (0..n * n).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                for k in 0..n {
+                    a[i * n + j] += m[k * n + i] * m[k * n + j];
+                }
+            }
+            a[i * n + i] += 1.0;
+        }
+        let x_true: Vec<f64> = (0..n).map(|i| i as f64 - 2.0).collect();
+        let b = matvec(&a, &x_true);
+        let x = cholesky_solve(a, &b).unwrap();
+        for (got, want) in x.iter().zip(&x_true) {
+            assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! The native fit & calibration subsystem: everything that turns
+//! simulator measurements back into model parameters, with zero native
+//! dependencies.
+//!
+//! Three layers (DESIGN.md §8):
+//!
+//! * [`linalg`] + [`solver`] — a batched pure-Rust linear-least-squares
+//!   engine over the [`crate::model::features`] design matrix:
+//!   closed-form normal-equations solve (Cholesky, `f64`, absent-column
+//!   pinning, iterative refinement) with a projected-gradient-descent
+//!   fallback matching the AOT `fit_step` semantics (masked MSE, θ ≥ 0,
+//!   per-parameter scaling).
+//! * [`backend`] — the [`FitBackend`] trait behind `repro fit
+//!   --backend native|pjrt`: [`NativeFit`] (default, offline) and
+//!   [`PjrtFit`] (the historical AOT path, degrade-gracefully). The
+//!   `vendor/xla` stub stopped being load-bearing the day this landed.
+//! * [`calibrate`] — the contention-plateau calibrator behind
+//!   `repro calibrate`: golden-section + grid refinement of each
+//!   architecture's `handoff_overlap` against the Fig. 8 plateau targets
+//!   ([`crate::data::fig8_targets`]), deterministic by construction.
+//!
+//! ## Invariants
+//!
+//! * **`f64` end-to-end.** Datasets, solves, losses, and reports are all
+//!   `f64`; the PJRT path truncates to f32 only at the executable
+//!   boundary and re-evaluates its final loss in `f64` (unscaled ns²).
+//! * **Exact on noiseless data.** The closed form recovers a θ that
+//!   generated its dataset to ≤1e-9 relative error on every
+//!   architecture's real design matrix (`tests/fit_native.rs`).
+//! * **Deterministic.** No wall clock, no randomness: fits and
+//!   calibrations are bit-reproducible.
+
+pub mod backend;
+pub mod calibrate;
+pub mod linalg;
+pub mod solver;
+
+pub use backend::{FitBackend, FitBackendKind, FitCfg, FitReport, NativeFit, PjrtFit};
+pub use calibrate::{calibrate, CalibrationCfg, CalibrationReport, CalPoint};

@@ -28,17 +28,27 @@
 //!   layer.
 //! * [`graph`] — Graph500-style Kronecker graphs and the parallel BFS case
 //!   study (§6.1, Fig. 10b) running on simulated atomics.
+//! * [`fit`] — the native fit & calibration subsystem: a pure-Rust
+//!   linear-least-squares engine (closed-form normal equations +
+//!   `fit_step`-equivalent projected descent) behind the [`fit::FitBackend`]
+//!   trait (`repro fit --backend native|pjrt`), and the
+//!   contention-plateau calibrator (`repro calibrate`) that fits each
+//!   architecture's `handoff_overlap` against the Fig. 8 targets in
+//!   [`data::fig8_targets`].
+//! * [`data`] — digitized reference measurements from the paper (the
+//!   calibration targets).
 //! * [`runtime`] — PJRT loader for the AOT-compiled JAX artifacts
 //!   (prediction, NRMSE, gradient fit step); Python never runs at
-//!   benchmark time.
+//!   benchmark time. Optional since the native fit backend landed — the
+//!   vendored `xla` stub is no longer load-bearing for `repro fit`.
 //! * [`sweep`] — the scenario layer: the [`sweep::Workload`] trait every
 //!   bench family implements, [`sweep::SweepPlan`] grids, the one-table
 //!   family registry ([`sweep::families`]) behind `repro sweep --family`,
 //!   and the parallel [`sweep::SweepExecutor`] (per-worker machine pools,
 //!   deterministic input-ordered results, panic isolation) that every
 //!   figure, dataset, and the `repro sweep` subcommand run through.
-//! * [`coordinator`] — dataset collection + the model-fitting loop
-//!   (Table 2) driving the PJRT executables.
+//! * [`coordinator`] — dataset collection + the PJRT fit loop (the
+//!   [`fit::PjrtFit`] backend's engine room).
 //! * [`report`] — regenerates every table and figure of the paper.
 //! * [`harness`] — in-tree micro-benchmark harness (criterion is not
 //!   vendored in this offline environment).
@@ -84,6 +94,8 @@ pub mod arch;
 pub mod atomics;
 pub mod bench;
 pub mod coordinator;
+pub mod data;
+pub mod fit;
 pub mod graph;
 pub mod harness;
 pub mod model;

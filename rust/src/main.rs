@@ -21,13 +21,22 @@
 //!                                   contended same-line benchmark (Fig. 8)
 //!                                   through the machine-accurate multi-core
 //!                                   scheduler, with per-thread stats
-//!   repro locks [--arch NAME] [--kind tas|ticket|mpsc|all] [--threads N]
-//!               [--acq N] [--stats]  §6.1 lock/queue case study (TAS
-//!                                   spinlock, ticket lock, MPSC queue on
+//!   repro locks [--arch NAME] [--kind tas|tas-backoff|ticket|mpsc|all]
+//!               [--threads N] [--acq N] [--stats]
+//!                                   §6.1 lock/queue case study (TAS
+//!                                   spinlock ± bounded exponential
+//!                                   backoff, ticket lock, MPSC queue on
 //!                                   simulated atomics) + false-sharing
 //!                                   contrast, machine-accurate engine
 //!   repro validate                  model-vs-simulator NRMSE per series
-//!   repro fit [--arch NAME]         Table 2 fit via the PJRT fit_step
+//!   repro fit [--arch NAME] [--backend native|pjrt]
+//!                                   Table 2 fit — native pure-Rust solver
+//!                                   (default, offline) or the PJRT
+//!                                   fit_step executable
+//!   repro calibrate [--arch NAME] [--ops N]
+//!                                   fit per-arch handoff_overlap against
+//!                                   the Fig. 8 plateau targets; writes
+//!                                   results/calibration_<arch>.csv
 //!   repro bfs [--scale N] [--threads N] [--arch NAME]
 //!   repro ablation                  §6.2 hardware-extension ablations
 //!   repro latency --arch A --op OP --state S --locality L [--size BYTES]
@@ -39,12 +48,11 @@ use atomics_repro::atomics::OpKind;
 use atomics_repro::bench::latency::LatencyBench;
 use atomics_repro::bench::placement::{PrepLocality, PrepState};
 use atomics_repro::coordinator::dataset::{collect_latency_dataset, fit_sizes};
-use atomics_repro::coordinator::fit::{fit_theta, FitCfg};
+use atomics_repro::fit::{self, FitBackend, FitBackendKind, FitCfg};
 use atomics_repro::graph::{kronecker_edges, parallel_bfs, BfsMode, Csr};
 use atomics_repro::graph::bfs::validate_tree;
 use atomics_repro::model::params::Theta;
 use atomics_repro::report::{figures, tables};
-use atomics_repro::runtime::Runtime;
 use atomics_repro::sweep::SweepExecutor;
 use atomics_repro::util::cli::Args;
 use atomics_repro::util::table::Table;
@@ -71,6 +79,7 @@ fn main() {
         Some("locks") => cmd_locks(&args),
         Some("validate") => cmd_validate(),
         Some("fit") => cmd_fit(&args),
+        Some("calibrate") => cmd_calibrate(&args),
         Some("bfs") => cmd_bfs(&args),
         Some("ablation") => cmd_ablation(),
         Some("latency") => cmd_latency(&args),
@@ -91,7 +100,7 @@ fn main() {
 fn usage() {
     eprintln!("repro — reproduction driver for 'Evaluating the Cost of Atomic Operations'");
     eprintln!(
-        "subcommands: table <n> | figure <id> | all | sweep | contend | locks | validate | fit | bfs | ablation | latency | info"
+        "subcommands: table <n> | figure <id> | all | sweep | contend | locks | validate | fit | calibrate | bfs | ablation | latency | info"
     );
     eprintln!("see README.md for details");
 }
@@ -100,13 +109,11 @@ fn cmd_table(args: &Args) -> i32 {
     match args.positionals.first().map(|s| s.as_str()) {
         Some("1") => println!("{}", tables::table1().render()),
         Some("2") => {
-            let rt = Runtime::load(Runtime::default_dir()).ok();
-            if rt.is_none() {
-                eprintln!(
-                    "(artifacts not found — printing paper values only; run `make artifacts`)"
-                );
-            }
-            println!("{}", tables::table2(rt.as_ref()).render());
+            // The fitted column runs offline through the native backend
+            // by default; --backend pjrt restores the historical path
+            // (degrading to paper values when artifacts are missing).
+            let Some(backend) = parse_backend(args) else { return 2 };
+            println!("{}", tables::table2(Some(backend.as_ref())).render());
         }
         Some("3") => println!("{}", tables::table3().render()),
         other => {
@@ -136,8 +143,7 @@ fn cmd_figure(args: &Args) -> i32 {
 
 fn cmd_all() -> i32 {
     println!("{}", tables::table1().render());
-    let rt = Runtime::load(Runtime::default_dir()).ok();
-    println!("{}", tables::table2(rt.as_ref()).render());
+    println!("{}", tables::table2(Some(&fit::NativeFit as &dyn FitBackend)).render());
     println!("{}", tables::table3().render());
     for id in figures::ALL_FIGURES {
         println!("──────────────────────────────────────────────────");
@@ -400,7 +406,7 @@ fn cmd_locks(args: &Args) -> i32 {
         Some(s) => match LockKind::parse(s) {
             Some(k) => vec![k],
             None => {
-                eprintln!("unknown kind '{s}' (tas | ticket | mpsc | all)");
+                eprintln!("unknown kind '{s}' (tas | tas-backoff | ticket | mpsc | all)");
                 return 2;
             }
         },
@@ -479,14 +485,21 @@ fn cmd_validate() -> i32 {
     0
 }
 
-fn cmd_fit(args: &Args) -> i32 {
-    let rt = match Runtime::load(Runtime::default_dir()) {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("cannot load artifacts ({e}); run `make artifacts` first");
-            return 1;
+/// Parse `--backend native|pjrt` (default native). `None` = bad value
+/// (already reported).
+fn parse_backend(args: &Args) -> Option<Box<dyn FitBackend>> {
+    let name = args.opt("backend").unwrap_or("native");
+    match FitBackendKind::parse(name) {
+        Some(kind) => Some(kind.create()),
+        None => {
+            eprintln!("unknown backend '{name}' (native | pjrt)");
+            None
         }
-    };
+    }
+}
+
+fn cmd_fit(args: &Args) -> i32 {
+    let Some(backend) = parse_backend(args) else { return 2 };
     let configs = match args.opt("arch") {
         Some(name) => match arch::by_name(name) {
             Some(c) => vec![c],
@@ -497,25 +510,126 @@ fn cmd_fit(args: &Args) -> i32 {
         },
         None => arch::all(),
     };
+    let mut fitted_any = false;
     for cfg in configs {
         let ds = collect_latency_dataset(&cfg, &fit_sizes(&cfg));
         let seed = Theta::from_config(&cfg);
-        match fit_theta(&rt, cfg.name, &ds, seed, FitCfg::default()) {
+        match backend.fit(cfg.name, &ds, seed, &FitCfg::default()) {
             Ok(r) => {
+                fitted_any = true;
                 println!(
-                    "{}: {} points, {} iters, final loss {:.3}",
-                    r.arch, r.n_points, r.iterations, r.final_loss
+                    "{}: {} backend ({}), {} points, {} iters, final loss {:.4} ns²",
+                    r.arch, r.backend, r.method, r.n_points, r.iterations, r.final_loss
                 );
+                let mut csv = atomics_repro::util::csv::Csv::new(&[
+                    "param", "paper_ns", "fitted_ns",
+                ]);
                 for (i, name) in Theta::NAMES.iter().enumerate() {
-                    println!(
-                        "  {:<8} paper {:>7.2}  fitted {:>7.2}",
-                        name,
-                        r.seed_theta.to_vec()[i],
-                        r.theta.to_vec()[i]
-                    );
+                    let (paper, fitted) = (r.seed_theta.to_vec()[i], r.theta.to_vec()[i]);
+                    println!("  {name:<8} paper {paper:>7.2}  fitted {fitted:>7.2}");
+                    csv.row(&[name.to_string(), paper.to_string(), fitted.to_string()]);
+                }
+                let slug = cfg.name.to_lowercase().replace(' ', "_");
+                let path = format!(
+                    "{}/fit_theta_{}.csv",
+                    atomics_repro::report::results_dir(),
+                    slug
+                );
+                if let Err(e) = csv.write(&path) {
+                    eprintln!("warning: could not write {path}: {e}");
                 }
             }
-            Err(e) => eprintln!("{}: fit failed: {e}", cfg.name),
+            Err(e) => eprintln!(
+                "{}: {} fit failed: {e}{}",
+                cfg.name,
+                backend.name(),
+                if backend.name() == "pjrt" {
+                    " (run `make artifacts`, or use --backend native)"
+                } else {
+                    ""
+                }
+            ),
+        }
+    }
+    if fitted_any {
+        0
+    } else {
+        1
+    }
+}
+
+fn cmd_calibrate(args: &Args) -> i32 {
+    use atomics_repro::data::fig8_targets::targets_for;
+    use atomics_repro::fit::calibrate::{calibrate, CalibrationCfg};
+
+    let configs = match args.opt("arch") {
+        Some(name) => match arch::by_name(name) {
+            Some(c) => vec![c],
+            None => {
+                eprintln!("unknown arch '{name}'");
+                return 2;
+            }
+        },
+        None => arch::all(),
+    };
+    let ccfg = CalibrationCfg {
+        ops_per_thread: args
+            .opt_parse("ops", CalibrationCfg::default().ops_per_thread)
+            .max(1),
+        ..CalibrationCfg::default()
+    };
+
+    for cfg in configs {
+        let targets = targets_for(cfg.name);
+        let Some(r) = calibrate(&cfg, &targets, &ccfg) else {
+            eprintln!("{}: no Fig. 8 targets on record", cfg.name);
+            continue;
+        };
+        let mut t = Table::new(
+            format!(
+                "calibrate — {} handoff_overlap: fitted {:.4} (shipped {:.2}), mean residual {:.1}%, {} sim runs",
+                r.arch,
+                r.fitted_overlap,
+                r.shipped_overlap,
+                r.mean_rel_residual * 100.0,
+                r.evaluations * targets.len()
+            ),
+            &["op", "threads", "target GB/s", "fitted GB/s", "residual %", "source"],
+        );
+        let mut csv = atomics_repro::util::csv::Csv::new(&[
+            "op",
+            "threads",
+            "target_gbs",
+            "achieved_gbs",
+            "rel_residual",
+            "fitted_overlap",
+            "shipped_overlap",
+        ]);
+        for p in &r.points {
+            t.row(&[
+                p.op.label().to_string(),
+                p.threads.to_string(),
+                format!("{:.3}", p.target_gbs),
+                format!("{:.3}", p.achieved_gbs),
+                format!("{:.1}", p.rel_residual() * 100.0),
+                if p.from_paper { "Fig. 8".into() } else { "extrapolated".into() },
+            ]);
+            csv.row(&[
+                p.op.label().to_string(),
+                p.threads.to_string(),
+                p.target_gbs.to_string(),
+                p.achieved_gbs.to_string(),
+                p.rel_residual().to_string(),
+                r.fitted_overlap.to_string(),
+                r.shipped_overlap.to_string(),
+            ]);
+        }
+        println!("{}", t.render());
+        let slug = cfg.name.to_lowercase().replace(' ', "_");
+        let path =
+            format!("{}/calibration_{}.csv", atomics_repro::report::results_dir(), slug);
+        if let Err(e) = csv.write(&path) {
+            eprintln!("warning: could not write {path}: {e}");
         }
     }
     0

@@ -1,9 +1,14 @@
 //! Featurization: the analytical latency model (Eq. 1–8) is linear in the
 //! parameter vector θ once the query (state, location, sharer geometry) is
 //! fixed, so every query maps to a coefficient vector `f` with
-//! `L(query) = f · θ`. The JAX/Pallas layer evaluates and fits exactly this
-//! linear form in batch; the Rust analytical module (Eq. 1–11) and this
-//! featurization must always agree — a property the tests pin down.
+//! `L(query) = f · θ`. Both fit backends consume exactly this linear form
+//! in batch — the native least-squares engine ([`crate::fit::solver`])
+//! builds its normal equations from these rows, and the JAX/Pallas layer
+//! evaluates the same `F·θ` through PJRT; the Rust analytical module
+//! (Eq. 1–11) and this featurization must always agree — a property the
+//! tests pin down. Architectures missing a parameter (no L3, no
+//! interconnect) produce identically-zero columns here, which is what
+//! lets the native solver pin those parameters instead of fitting noise.
 
 use crate::atomics::OpKind;
 use crate::model::params::THETA_DIM;

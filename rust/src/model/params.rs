@@ -1,5 +1,6 @@
 //! The θ parameter vector of the analytical model — the quantities of
-//! Table 2 — with packing/unpacking for the JAX/Pallas fitting path.
+//! Table 2 — with packing/unpacking for the fit backends (the native
+//! least-squares solver in [`crate::fit`] and the JAX/Pallas PJRT path).
 
 use crate::atomics::OpKind;
 use crate::sim::config::MachineConfig;

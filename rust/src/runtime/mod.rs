@@ -7,6 +7,15 @@
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`. All executables are compiled once at load
 //! and reused across the fit loop / figure sweeps.
+//!
+//! This module is the **f32 boundary** of the fit pipeline: the AOT
+//! executables were exported with f32 shapes, so [`Batch::pack`] truncates
+//! the `f64` dataset here and nowhere else — everything upstream
+//! ([`crate::fit`], [`crate::coordinator::fit`]) computes and reports in
+//! `f64`. Since the native fit backend ([`crate::fit::NativeFit`]) landed,
+//! this path is optional: `repro fit` only touches PJRT under
+//! `--backend pjrt`, and the vendored `xla` stub failing to load degrades
+//! that backend gracefully instead of blocking the fit.
 
 use crate::model::params::THETA_DIM;
 use anyhow::{Context, Result};

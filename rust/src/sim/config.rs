@@ -81,6 +81,15 @@ pub struct MachineConfig {
     /// Intel same-line store combining under contention (§5.4: "annihilating
     /// the need for the actual execution of all the writes").
     pub contended_write_combining: bool,
+    /// Fraction of a contended cache-to-cache ownership transfer that
+    /// overlaps with the next queued requester's in-flight
+    /// read-for-ownership (§5.4: the fabric pipelines hand-offs once the
+    /// request queues are deep). Sets the contended-bandwidth plateau of
+    /// the multi-core scheduler ([`crate::sim::multicore`]); per
+    /// architecture, fitted by `repro calibrate` against the Fig. 8
+    /// plateau targets in [`crate::data::fig8_targets`] (this replaced a
+    /// single global `HANDOFF_OVERLAP = 0.5`). Must lie in `[0, 1)`.
+    pub handoff_overlap: f64,
     /// Extra latency for 128-bit atomics: (local/shared-die ns, remote ns).
     /// Zero on Intel; ≈(20, 5) on Bulldozer (§5.3).
     pub cas128_penalty: (f64, f64),
@@ -137,6 +146,7 @@ mod tests {
             ht_assist: None,
             muw: false,
             contended_write_combining: true,
+            handoff_overlap: 0.5,
             cas128_penalty: (0.0, 0.0),
             unaligned: UnalignedCfg { bus_lock_ns: 300.0 },
             frequency_mhz: 3400,

@@ -23,11 +23,16 @@
 //! mechanism behind Bulldozer's curve rising again past 8 threads). The
 //! granted operation executes through [`Machine::access`]; its latency is
 //! the engine's, not a formula's. The line stays busy for the execute phase
-//! plus the un-overlappable part of the ownership transfer
-//! ([`HANDOFF_OVERLAP`]): with other requesters queued, the next
-//! read-for-ownership is already in flight while the previous response
-//! returns, which is what keeps contended bandwidth at a plateau instead
-//! of degrading linearly in transfer cost.
+//! plus the un-overlappable part of the ownership transfer (the
+//! architecture's `handoff_overlap`): with other requesters queued, the
+//! next read-for-ownership is already in flight while the previous
+//! response returns, which is what keeps contended bandwidth at a plateau
+//! instead of degrading linearly in transfer cost. The overlap fraction
+//! is a per-architecture [`MachineConfig`](crate::sim::MachineConfig)
+//! parameter fitted by the calibration subsystem
+//! ([`crate::fit::calibrate`]) against the paper's measured Fig. 8
+//! plateaus ([`crate::data::fig8_targets`]) — it used to be a single
+//! hand-picked global constant (`HANDOFF_OVERLAP = 0.5`).
 //!
 //! Plain stores on the Intel parts are absorbed by the store buffers
 //! (§5.4: the architecture "detects that issued operations access the same
@@ -98,12 +103,6 @@ use std::collections::BinaryHeap;
 /// Base address of the shared contended line — clear of the latency/
 /// bandwidth benches' buffer ranges so pooled machines cannot alias.
 const SHARED_ADDR: u64 = 0x5000_0000;
-
-/// Fraction of a cache-to-cache transfer that overlaps with the next
-/// queued requester's in-flight read-for-ownership (§5.4: the fabric
-/// pipelines hand-offs once the request queues are deep). Applied only
-/// while other requests are pending; a lone thread overlaps nothing.
-pub const HANDOFF_OVERLAP: f64 = 0.5;
 
 /// Per-thread coherence statistics of one contention run.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -389,7 +388,7 @@ pub fn run_contention(
         let occupancy = if heap.is_empty() {
             acc.latency
         } else {
-            exec_ns + transfer_ns(m, acc.distance) * (1.0 - HANDOFF_OVERLAP)
+            exec_ns + transfer_ns(m, acc.distance) * (1.0 - m.cfg.handoff_overlap)
         };
         line_free_at = start + occupancy;
         owner = t;
@@ -445,20 +444,35 @@ fn run_unserialized(
 /// work (a lock acquisition, an enqueued item, a per-word update); spin
 /// reads and failed-attempt retries pass `false` so they never inflate
 /// [`ContentionStats::ops`], though their latency still accrues.
+///
+/// `delay_ns` issues the step that many nanoseconds after the previous
+/// step completed instead of immediately — the hook backoff protocols
+/// (Dice et al.'s contention management, [`crate::bench::locks`]'s
+/// TAS-with-backoff) hang their deliberate waits on. Delay time is *not*
+/// arbitration stall: [`ContentionStats::stall_ns`] starts counting only
+/// once the delayed step is ready to issue.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Step {
     pub op: Op,
     pub addr: u64,
     pub counted: bool,
+    pub delay_ns: f64,
 }
 
 impl Step {
     pub fn new(op: Op, addr: u64) -> Step {
-        Step { op, addr, counted: false }
+        Step { op, addr, counted: false, delay_ns: 0.0 }
     }
 
     pub fn counted(op: Op, addr: u64) -> Step {
-        Step { op, addr, counted: true }
+        Step { op, addr, counted: true, delay_ns: 0.0 }
+    }
+
+    /// The same step issued `delay_ns` after the previous step completed
+    /// (a deliberate backoff pause; negative values are treated as 0).
+    pub fn after(mut self, delay_ns: f64) -> Step {
+        self.delay_ns = delay_ns.max(0.0);
+        self
     }
 }
 
@@ -588,6 +602,12 @@ impl ReadyQueue {
         }
         let t = first as usize;
         Some((t, self.time[t], self.seq[t]))
+    }
+
+    /// The queued thread's wake time (`None` when it has no queued
+    /// request — it is the one being processed, or it is done).
+    fn wake_of(&self, t: usize) -> Option<f64> {
+        (self.pos[t] != ABSENT).then(|| self.time[t])
     }
 
     fn sift_up(&mut self, mut i: usize) {
@@ -750,7 +770,11 @@ fn run_program_impl<P: CoreProgram>(
                 }
                 serial_slot[t] = slot as u32;
             }
-            ready.push(t, 0.0, next_seq);
+            // A delayed first step (deliberate backoff) issues late and
+            // does not accrue stall while sleeping.
+            let wake = step.delay_ns.max(0.0);
+            queued_since[t] = wake;
+            ready.push(t, wake, next_seq);
             next_seq += 1;
         }
     }
@@ -823,17 +847,24 @@ fn run_program_impl<P: CoreProgram>(
         }
 
         if serial {
+            // Pipelined-handoff occupancy applies only when a rival's
+            // read-for-ownership is actually outstanding: its pending
+            // step serializes on this line AND its wake time lands
+            // within this grant (a thread deep in a deliberate backoff
+            // pause has not issued anything yet — Step::after sleepers
+            // must not earn the line overlapped-transfer pricing).
             let contended = pending.iter().enumerate().any(|(u, s)| {
                 u != t
                     && matches!(s, Some(s2)
                         if line_of(s2.addr) == line && serializes(m, s2.op.kind()))
+                    && ready.wake_of(u).is_some_and(|w| w <= end)
             });
             let occupancy = if contended {
                 let exec_ns = match kind {
                     OpKind::Write => m.cfg.timing.write_issue.max(1.0),
                     k => m.cfg.timing.exec(k).max(1.0),
                 };
-                exec_ns + transfer_ns(m, acc.distance) * (1.0 - HANDOFF_OVERLAP)
+                exec_ns + transfer_ns(m, acc.distance) * (1.0 - m.cfg.handoff_overlap)
             } else {
                 acc.latency
             };
@@ -864,8 +895,11 @@ fn run_program_impl<P: CoreProgram>(
                     }
                     serial_slot[t] = slot as u32;
                 }
-                queued_since[t] = end;
-                ready.push(t, end, next_seq);
+                // A backoff pause shifts the issue time; the pause itself
+                // is deliberate, so stall accounting starts at the wake.
+                let wake = end + next.delay_ns.max(0.0);
+                queued_since[t] = wake;
+                ready.push(t, wake, next_seq);
                 next_seq += 1;
             }
             None => {
@@ -1182,6 +1216,42 @@ mod tests {
             assert_eq!(fast.elapsed_ns.to_bits(), slow.elapsed_ns.to_bits(), "{}", cfg.name);
             assert_eq!(fast.per_thread, slow.per_thread, "{}", cfg.name);
         }
+    }
+
+    /// `Step::after` delays issue without accruing stall: a lone thread
+    /// inserting a pause between two reads finishes later by exactly the
+    /// pause, and its stall stays zero (the pause is deliberate waiting,
+    /// not arbitration).
+    #[test]
+    fn delayed_steps_shift_time_but_not_stall() {
+        // Plain reads: no store-buffer interaction, so the only timing
+        // difference between the two runs is the pause itself.
+        struct TwoReads {
+            pause: f64,
+            issued: u8,
+        }
+        impl CoreProgram for TwoReads {
+            fn first(&mut self) -> Option<Step> {
+                Some(Step::counted(Op::Read, SHARED_ADDR))
+            }
+            fn next(&mut self, _prev: Step, _res: &Access) -> Option<Step> {
+                self.issued += 1;
+                (self.issued == 1)
+                    .then(|| Step::counted(Op::Read, SHARED_ADDR).after(self.pause))
+            }
+        }
+        let mut m = Machine::new(arch::haswell());
+        let plain =
+            run_program(&mut m, &mut [TwoReads { pause: 0.0, issued: 0 }], OpKind::Read);
+        let paused =
+            run_program(&mut m, &mut [TwoReads { pause: 250.0, issued: 0 }], OpKind::Read);
+        assert_eq!(plain.total_ops(), 2);
+        assert_eq!(paused.total_ops(), 2);
+        let dt = paused.elapsed_ns - plain.elapsed_ns;
+        assert!((dt - 250.0).abs() < 1e-9, "pause must shift completion: {dt}");
+        assert_eq!(paused.per_thread[0].stall_ns, 0.0, "a pause is not a stall");
+        // and Step::after clamps nonsense
+        assert_eq!(Step::new(Op::Read, SHARED_ADDR).after(-3.0).delay_ns, 0.0);
     }
 
     /// The FAA hammer (no read spins) must also agree — the flat scheduler

@@ -447,7 +447,12 @@ mod tests {
             .collect();
         assert_eq!(
             names,
-            vec!["tas-spinlock Macq/s", "ticket-lock Macq/s", "mpsc-queue Macq/s"]
+            vec![
+                "tas-spinlock Macq/s",
+                "tas-backoff Macq/s",
+                "ticket-lock Macq/s",
+                "mpsc-queue Macq/s"
+            ]
         );
     }
 }

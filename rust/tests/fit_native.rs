@@ -1,0 +1,262 @@
+//! Integration tests for the native fit & calibration subsystem
+//! (`crate::fit`): exact recovery on every architecture's real design
+//! matrix, gradient-descent agreement, offline end-to-end fits of
+//! simulator measurements, and calibrator determinism + residual gates.
+
+use atomics_repro::arch;
+use atomics_repro::atomics::OpKind;
+use atomics_repro::bench::placement::PrepLocality;
+use atomics_repro::coordinator::dataset::{
+    collect_latency_dataset, fit_sizes, fit_sizes_fast, states_for, DataPoint,
+};
+use atomics_repro::data::fig8_targets::targets_for;
+use atomics_repro::fit::backend::rows_of;
+use atomics_repro::fit::calibrate::{calibrate, plateau_bandwidth, CalibrationCfg};
+use atomics_repro::fit::solver::{gradient_descent, masked_mse, GdCfg};
+use atomics_repro::fit::{FitBackend, FitCfg, NativeFit};
+use atomics_repro::model::features::featurize_sized;
+use atomics_repro::model::params::{Theta, THETA_DIM};
+use atomics_repro::model::query::Query;
+use atomics_repro::sim::timing::Level;
+use atomics_repro::sim::MachineConfig;
+
+/// A *noiseless* dataset over the architecture's real fit grid: the same
+/// (op × state × locality × size) queries the measurement path walks,
+/// with targets computed analytically from `theta` — so the generating θ
+/// is the unique least-squares solution (up to absent columns, which
+/// [`Theta::from_config`] already zeroes).
+fn synthetic_dataset(cfg: &MachineConfig, theta: &Theta) -> Vec<DataPoint> {
+    let tv = theta.to_vec();
+    let mut out = Vec::new();
+    for op in [OpKind::Read, OpKind::Cas, OpKind::Faa, OpKind::Swp] {
+        for state in states_for(cfg) {
+            for locality in PrepLocality::available(&cfg.topology) {
+                for &size in &fit_sizes(cfg) {
+                    let query =
+                        Query::new(op, state.to_model(), Level::L1, locality.to_distance());
+                    let (features, dominant) = featurize_sized(cfg, &query, size);
+                    let mut query = query;
+                    query.loc.level = dominant;
+                    let y: f64 = features.iter().zip(&tv).map(|(a, b)| a * b).sum();
+                    out.push(DataPoint {
+                        query,
+                        features,
+                        measured_ns: y,
+                        buffer_bytes: size,
+                        series: format!("synthetic {op:?} {state:?} {locality:?}"),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The tentpole guarantee: from noiseless data on the real design matrix
+/// the native solver recovers the Table 2 seed θ to ≤1e-9 relative on
+/// all four architectures, starting from zero knowledge (θ₀ = 0). Absent
+/// parameters (Haswell's H, Phi's R_L3) have zero feature columns *and*
+/// zero seed values, so pinning them to the init recovers them too.
+#[test]
+fn native_solver_recovers_seed_theta_exactly_on_all_arches() {
+    for cfg in arch::all() {
+        let seed = Theta::from_config(&cfg);
+        let ds = synthetic_dataset(&cfg, &seed);
+        assert!(ds.len() >= 3 * THETA_DIM, "{}: grid too small", cfg.name);
+        let zero = Theta::from_vec(&[0.0; THETA_DIM]);
+        let r = NativeFit.fit(cfg.name, &ds, zero, &FitCfg::default()).unwrap();
+        for ((got, want), name) in
+            r.theta.to_vec().iter().zip(seed.to_vec()).zip(Theta::NAMES)
+        {
+            assert!(
+                (got - want).abs() <= 1e-9 * want.abs().max(1.0),
+                "{} {name}: fitted {got} vs seed {want}",
+                cfg.name
+            );
+        }
+        assert!(r.final_loss < 1e-12, "{}: noiseless loss {}", cfg.name, r.final_loss);
+    }
+}
+
+/// Native-vs-GD agreement: the seed θ is a stationary point of the
+/// projected descent on its own noiseless data (zero gradient, zero
+/// projection pressure), and from a perturbed start the descent walks
+/// back to the closed-form answer on the real Haswell design matrix.
+#[test]
+fn gradient_descent_agrees_with_closed_form_on_real_grid() {
+    let cfg = arch::haswell();
+    let seed = Theta::from_config(&cfg);
+    let ds = synthetic_dataset(&cfg, &seed);
+    let rows = rows_of(&ds);
+
+    // Stationarity: starting at the truth, the descent stays there.
+    let stay = gradient_descent(&rows, &seed.to_vec(), GdCfg::default());
+    for (got, want) in stay.theta.iter().zip(seed.to_vec()) {
+        assert!((got - want).abs() < 1e-9, "seed must be stationary: {got} vs {want}");
+    }
+
+    // Agreement in direction: from a perturbed start the descent moves
+    // decisively toward the closed-form minimizer (the exact minimum of
+    // the same loss) — the dominant error components die within the
+    // iteration budget even if the flattest direction converges slowly.
+    let perturbed: [f64; THETA_DIM] =
+        std::array::from_fn(|i| seed.to_vec()[i] * 1.3 + 0.5);
+    let start_loss = masked_mse(&rows, &perturbed);
+    let gd = gradient_descent(&rows, &perturbed, GdCfg::default());
+    let closed = NativeFit.fit(cfg.name, &ds, seed, &FitCfg::default()).unwrap();
+    assert!(closed.final_loss < 1e-12, "closed form is exact on noiseless data");
+    assert!(
+        gd.loss < 0.05 * start_loss,
+        "descent must close most of the gap to the closed form: {} of {start_loss}",
+        gd.loss
+    );
+    assert!(gd.theta.iter().all(|&x| x >= 0.0), "projection respected");
+}
+
+/// The acceptance criterion for `repro fit`: real simulator measurements,
+/// all four architectures, zero PJRT — and the fitted θ is physical,
+/// anchored near Table 2, and a strict improvement over the seed in
+/// masked MSE (the O residuals the linear model cannot express are what
+/// remains).
+#[test]
+fn native_fit_produces_table2_theta_offline_for_all_arches() {
+    for cfg in arch::all() {
+        let ds = collect_latency_dataset(&cfg, &fit_sizes_fast(&cfg));
+        let seed = Theta::from_config(&cfg);
+        let r = NativeFit.fit(cfg.name, &ds, seed, &FitCfg::default()).unwrap();
+        assert_eq!(r.backend, "native", "{}", cfg.name);
+        assert_eq!(r.n_points, ds.len());
+        let fitted = r.theta.to_vec();
+        assert!(
+            fitted.iter().all(|x| x.is_finite() && *x >= 0.0),
+            "{}: unphysical θ {fitted:?}",
+            cfg.name
+        );
+        // Reads carry no O residual, so they anchor R_L1 near Table 2.
+        assert!(
+            (r.theta.r_l1 - seed.r_l1).abs() < 0.5 * seed.r_l1 + 1.0,
+            "{}: R_L1 fitted {} vs seed {}",
+            cfg.name,
+            r.theta.r_l1,
+            seed.r_l1
+        );
+        assert!(
+            (r.theta.e_cas - seed.e_cas).abs() < 8.0,
+            "{}: E(CAS) fitted {} vs seed {}",
+            cfg.name,
+            r.theta.e_cas,
+            seed.e_cas
+        );
+        let rows = rows_of(&ds);
+        // (1e-3 ns² slack: clamping sub-ns numerical negatives to zero
+        // can nudge the closed-form optimum by strictly less than this.)
+        assert!(
+            r.final_loss <= masked_mse(&rows, &seed.to_vec()) + 1e-3,
+            "{}: fit {} worse than seed {}",
+            cfg.name,
+            r.final_loss,
+            masked_mse(&rows, &seed.to_vec())
+        );
+    }
+}
+
+/// Reduced calibration search for test runtimes (the CLI default uses
+/// 2000 ops/thread and a finer schedule).
+fn test_calibration() -> CalibrationCfg {
+    CalibrationCfg { ops_per_thread: 200, lo: 0.02, hi: 0.98, coarse: 7, refine: 10 }
+}
+
+/// The calibrator is bit-deterministic and lands every architecture's
+/// Fig. 8 plateau residual under the gate — the `repro calibrate`
+/// acceptance criterion. The fitted overlap must also genuinely beat the
+/// search endpoints (the optimizer optimized something).
+#[test]
+fn calibrator_is_deterministic_and_residual_below_threshold() {
+    for cfg in arch::all() {
+        let targets = targets_for(cfg.name);
+        assert!(!targets.is_empty(), "{}: no targets", cfg.name);
+        let ccfg = test_calibration();
+        let a = calibrate(&cfg, &targets, &ccfg).unwrap();
+        let b = calibrate(&cfg, &targets, &ccfg).unwrap();
+        assert_eq!(
+            a.fitted_overlap.to_bits(),
+            b.fitted_overlap.to_bits(),
+            "{}: calibration must be deterministic",
+            cfg.name
+        );
+        assert_eq!(a.mean_rel_residual.to_bits(), b.mean_rel_residual.to_bits());
+        assert!(
+            (ccfg.lo..=ccfg.hi).contains(&a.fitted_overlap),
+            "{}: fitted {} outside search interval",
+            cfg.name,
+            a.fitted_overlap
+        );
+        assert!(
+            a.mean_rel_residual < 0.30,
+            "{}: plateau residual {:.1}% above the 30% gate (fitted overlap {})",
+            cfg.name,
+            a.mean_rel_residual * 100.0,
+            a.fitted_overlap
+        );
+
+        // Sanity of the search: the fit beats both interval endpoints.
+        let residual_at = |ov: f64| -> f64 {
+            targets
+                .iter()
+                .map(|t| {
+                    let got =
+                        plateau_bandwidth(&cfg, ov, t.op, t.threads, ccfg.ops_per_thread);
+                    (got - t.gbs).abs() / t.gbs
+                })
+                .sum::<f64>()
+                / targets.len() as f64
+        };
+        for endpoint in [ccfg.lo, ccfg.hi] {
+            assert!(
+                a.mean_rel_residual <= residual_at(endpoint) + 1e-12,
+                "{}: fitted residual {} worse than endpoint {} ({})",
+                cfg.name,
+                a.mean_rel_residual,
+                endpoint,
+                residual_at(endpoint)
+            );
+        }
+    }
+}
+
+/// The shipped per-architecture `handoff_overlap` values track what the
+/// calibrator chooses. The tight (30%) gate above holds for the *fitted*
+/// value, which is robust to the exact hand-off distance mix the
+/// deterministic schedule produces; the shipped defaults are sanity-
+/// gated more loosely (they were derived from the schedule's transfer
+/// mix analytically — `repro calibrate` is the authoritative refit, and
+/// even a fully socket-interleaved schedule stays under this bound).
+#[test]
+fn shipped_overlaps_reproduce_the_plateau_targets() {
+    for cfg in arch::all() {
+        let targets = targets_for(cfg.name);
+        let mean: f64 = targets
+            .iter()
+            .map(|t| {
+                let got =
+                    plateau_bandwidth(&cfg, cfg.handoff_overlap, t.op, t.threads, 400);
+                (got - t.gbs).abs() / t.gbs
+            })
+            .sum::<f64>()
+            / targets.len() as f64;
+        assert!(
+            mean < 0.60,
+            "{}: shipped overlap {} misses the Fig. 8 plateaus by {:.1}%",
+            cfg.name,
+            cfg.handoff_overlap,
+            mean * 100.0
+        );
+        // and the shipped values are genuinely per-architecture
+        assert!((0.0..1.0).contains(&cfg.handoff_overlap), "{}", cfg.name);
+    }
+    let overlaps: Vec<f64> = arch::all().iter().map(|c| c.handoff_overlap).collect();
+    assert!(
+        overlaps.windows(2).any(|w| w[0] != w[1]),
+        "per-arch calibration must not collapse back to one global value: {overlaps:?}"
+    );
+}
