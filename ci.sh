@@ -68,6 +68,13 @@ echo "== smoke: repro fit --backend native (offline Table 2 fit) =="
 echo "== smoke: repro calibrate (contention-plateau calibrator) =="
 ./target/release/repro calibrate --arch haswell --ops 400
 
+echo "== smoke: run-level parallelism (--run-threads run pool) =="
+./target/release/repro contend --arch haswell --op faa --ops 200 --run-threads 2
+./target/release/repro calibrate --arch haswell --ops 400 --run-threads 2
+
+echo "== smoke: scripts/scalability.sh (2-rung contend ladder) =="
+BIN=./target/release/repro scripts/scalability.sh --arch haswell --ops 300 --rungs "1 2"
+
 echo "== bench-regression gate (BENCH_sweep.json vs BENCH_baseline.json) =="
 BENCH_FAST=1 cargo bench --bench bench_sweep
 # cargo runs bench binaries with cwd = the package root, so the fresh

@@ -2,12 +2,17 @@
 //! grid single-threaded vs. with all cores, the machine-accurate
 //! contention grid (Fig. 8), the §6.1 lock/queue grid (the multicore
 //! program scheduler's spin-fast-forward path, full topology-derived
-//! thread ladders including the Phi's 61-core point), and the native
+//! thread ladders including the Phi's 61-core point), the native
 //! Table 2 fit over all four architectures (dataset collection + the
-//! closed-form solve), prints the speedups, and writes `BENCH_sweep.json`
-//! so future PRs can track sweep, contend, locks, and fit throughput
-//! (gated by `scripts/bench_gate.py`; `fit_points_per_sec` ships
+//! closed-form solve), the contention-plateau calibrator on the run
+//! pool, and the run-level contend grid at 1 vs. min(4, cores) run-pool
+//! workers (bit-equality asserted between rungs), prints the speedups,
+//! and writes `BENCH_sweep.json` so future PRs can track sweep, contend,
+//! locks, fit, and calibrate throughput (gated by
+//! `scripts/bench_gate.py`; `calibrate_points_per_sec` ships
 //! unadjudicated until the next baseline refresh).
+//! Every grid gets one untimed warmup pass before its timed pass, so the
+//! numbers exclude first-touch page faults and lazy-init costs.
 //! Uses the in-tree harness (criterion is not vendored offline).
 //! `BENCH_FAST=1` reduces samples.
 
@@ -34,6 +39,10 @@ fn main() {
         "sweep executor end-to-end ({} series, {n_points} points)",
         jobs.len()
     ));
+
+    // untimed warmup pass over the grid (all cores — fastest way to touch
+    // every code path and fault in the allocator's arenas)
+    black_box(SweepExecutor::new(threads).run(&jobs));
 
     let t0 = Instant::now();
     let single_out = SweepExecutor::new(1).run(&jobs);
@@ -75,6 +84,7 @@ fn main() {
         })
         .collect();
     let contend_points: usize = contend_jobs.iter().map(|j| j.xs.len()).sum();
+    black_box(SweepExecutor::new(threads).run(&contend_jobs)); // warmup
     let t0 = Instant::now();
     let contend_out = SweepExecutor::new(threads).run(&contend_jobs);
     let contend_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -82,6 +92,60 @@ fn main() {
     println!(
         "  contend grid     {contend_ms:>10.1} ms   ({contend_points} points, {:.0} points/s)",
         contend_points as f64 / (contend_ms / 1e3).max(1e-9)
+    );
+
+    // Run-level parallelism: the same contention grid as *whole-run* work
+    // items on a RunPool (one multicore simulation per item, the unit
+    // `repro contend --run-threads` parallelizes) at 1 worker vs.
+    // min(4, cores) workers. The two rungs must be bit-identical — the
+    // run-pool contract — and the scaling factor is recorded in
+    // BENCH_sweep.json (`contend_runpool_scaling`).
+    use atomics_repro::bench::contention::{run_model_in, ContentionModel, OPS_PER_THREAD};
+    use atomics_repro::sim::{Machine, RunArena};
+    use atomics_repro::sweep::RunPool;
+    let cfgs = arch::all();
+    let run_items: Vec<(usize, OpKind, usize)> = cfgs
+        .iter()
+        .enumerate()
+        .flat_map(|(ai, cfg)| {
+            let counts = paper_thread_counts(cfg);
+            [OpKind::Cas, OpKind::Faa, OpKind::Write].into_iter().flat_map(move |op| {
+                counts.clone().into_iter().map(move |n| (ai, op, n))
+            })
+        })
+        .collect();
+    let run_grid = |workers: usize| -> (f64, Vec<f64>) {
+        let t0 = Instant::now();
+        let vals = RunPool::new(workers).map(
+            &run_items,
+            || {
+                let machines: Vec<Option<Machine>> = (0..cfgs.len()).map(|_| None).collect();
+                (machines, RunArena::new())
+            },
+            |(machines, arena), &(ai, op, n)| {
+                let m = machines[ai].get_or_insert_with(|| Machine::new(cfgs[ai].clone()));
+                run_model_in(m, arena, ContentionModel::MachineAccurate, n, op, OPS_PER_THREAD)
+                    .bandwidth_gbs
+            },
+        );
+        (t0.elapsed().as_secs_f64() * 1e3, vals)
+    };
+    let runpool_workers = threads.clamp(2, 4);
+    black_box(run_grid(runpool_workers)); // warmup
+    let (runpool_1_ms, serial_vals) = run_grid(1);
+    let (runpool_n_ms, parallel_vals) = run_grid(runpool_workers);
+    for (i, (a, b)) in serial_vals.iter().zip(&parallel_vals).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "run-pool must be bit-identical to serial at item {i} ({:?})",
+            run_items[i]
+        );
+    }
+    let runpool_scaling = runpool_1_ms / runpool_n_ms.max(1e-9);
+    println!(
+        "  contend run-pool {runpool_n_ms:>10.1} ms   ({} whole runs, {runpool_workers} workers, {runpool_scaling:.2}x vs 1 worker at {runpool_1_ms:.1} ms)",
+        run_items.len()
     );
 
     // §6.1 lock/queue grid through the multicore program scheduler: the
@@ -92,6 +156,7 @@ fn main() {
     let locks_jobs = atomics_repro::sweep::jobs_for("locks", &arch::all(), &[])
         .expect("locks family registered");
     let locks_points: usize = locks_jobs.iter().map(|j| j.xs.len()).sum();
+    black_box(SweepExecutor::new(threads).run(&locks_jobs)); // warmup
     let t0 = Instant::now();
     let locks_out = SweepExecutor::new(threads).run(&locks_jobs);
     let locks_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -108,6 +173,16 @@ fn main() {
     use atomics_repro::coordinator::dataset::{collect_latency_dataset, fit_sizes};
     use atomics_repro::fit::{FitBackend, FitCfg, NativeFit};
     use atomics_repro::model::params::Theta;
+    {
+        // warmup: one untimed dataset collection + solve (largest testbed)
+        let cfg = arch::xeonphi();
+        let ds = collect_latency_dataset(&cfg, &fit_sizes(&cfg));
+        black_box(
+            NativeFit
+                .fit(cfg.name, &ds, Theta::from_config(&cfg), &FitCfg::default())
+                .expect("native fit is infallible on a collected dataset"),
+        );
+    }
     let t0 = Instant::now();
     let mut fit_points = 0usize;
     for cfg in arch::all() {
@@ -124,13 +199,49 @@ fn main() {
         fit_points as f64 / (fit_ms / 1e3).max(1e-9)
     );
 
+    // Contention-plateau calibrator on the run pool (coarse grid +
+    // reporting pass parallel, golden-section sequential by nature), all
+    // four testbeds. Throughput is simulator runs per second — the
+    // "calibrate_points_per_sec" key is new and unadjudicated until the
+    // next baseline refresh.
+    use atomics_repro::data::fig8_targets::targets_for;
+    use atomics_repro::fit::calibrate::{calibrate, CalibrationCfg};
+    let ccfg = CalibrationCfg {
+        ops_per_thread: if std::env::var("BENCH_FAST").is_ok() { 150 } else { 300 },
+        run_threads: threads,
+        ..CalibrationCfg::default()
+    };
+    {
+        // warmup: one untimed calibration (largest testbed)
+        let cfg = arch::xeonphi();
+        let targets = targets_for(cfg.name);
+        black_box(calibrate(&cfg, &targets, &ccfg).expect("Fig. 8 targets on record"));
+    }
+    let t0 = Instant::now();
+    let mut calibrate_runs = 0usize;
+    for cfg in arch::all() {
+        let targets = targets_for(cfg.name);
+        let r = calibrate(&cfg, &targets, &ccfg).expect("Fig. 8 targets on record");
+        calibrate_runs += r.evaluations * targets.len();
+        black_box(&r);
+    }
+    let calibrate_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "  calibrate        {calibrate_ms:>10.1} ms   ({calibrate_runs} sim runs, {:.0} runs/s, {threads} run-thread(s))",
+        calibrate_runs as f64 / (calibrate_ms / 1e3).max(1e-9)
+    );
+
     let json = format!(
         "{{\"bench\":\"sweep\",\"series\":{},\"points\":{},\"threads\":{},\
          \"single_ms\":{:.1},\"parallel_ms\":{:.1},\"speedup\":{:.3},\
          \"points_per_sec_parallel\":{:.1},\
          \"contend_points\":{},\"contend_ms\":{:.1},\"contend_points_per_sec\":{:.1},\
          \"locks_points\":{},\"locks_ms\":{:.1},\"locks_points_per_sec\":{:.3},\
-         \"fit_points\":{},\"fit_ms\":{:.1},\"fit_points_per_sec\":{:.1}}}\n",
+         \"fit_points\":{},\"fit_ms\":{:.1},\"fit_points_per_sec\":{:.1},\
+         \"calibrate_runs\":{},\"calibrate_ms\":{:.1},\"calibrate_points_per_sec\":{:.1},\
+         \"contend_runpool_workers\":{},\"contend_runpool_1_ms\":{:.1},\
+         \"contend_runpool_n_ms\":{:.1},\"contend_runpool_scaling\":{:.3},\
+         \"note\":\"one untimed warmup pass per grid before the timed pass\"}}\n",
         jobs.len(),
         n_points,
         threads,
@@ -146,7 +257,14 @@ fn main() {
         locks_points as f64 / (locks_ms / 1e3).max(1e-9),
         fit_points,
         fit_ms,
-        fit_points as f64 / (fit_ms / 1e3).max(1e-9)
+        fit_points as f64 / (fit_ms / 1e3).max(1e-9),
+        calibrate_runs,
+        calibrate_ms,
+        calibrate_runs as f64 / (calibrate_ms / 1e3).max(1e-9),
+        runpool_workers,
+        runpool_1_ms,
+        runpool_n_ms,
+        runpool_scaling
     );
     match std::fs::File::create("BENCH_sweep.json").and_then(|mut f| f.write_all(json.as_bytes()))
     {

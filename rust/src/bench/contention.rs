@@ -23,7 +23,7 @@
 use crate::atomics::OpKind;
 use crate::sim::event::run_contention as run_analytic;
 pub use crate::sim::event::ContentionResult;
-use crate::sim::multicore::{agg, run_contention as run_machine, ContentionStats};
+use crate::sim::multicore::{agg, run_contention_in, ContentionStats, RunArena};
 use crate::sim::{Machine, MachineConfig};
 
 /// Per-thread operation count used by the figure sweeps (large enough that
@@ -111,13 +111,28 @@ pub fn run_model(
     op: OpKind,
     ops_per_thread: usize,
 ) -> ContentionPoint {
+    run_model_in(m, &mut RunArena::new(), model, threads, op, ops_per_thread)
+}
+
+/// [`run_model`] on a caller-provided [`RunArena`] — what a run-pool
+/// worker calls so consecutive points on the same worker share one
+/// arena's allocations. Bit-identical to [`run_model`] whether the arena
+/// is fresh or reused.
+pub fn run_model_in(
+    m: &mut Machine,
+    arena: &mut RunArena,
+    model: ContentionModel,
+    threads: usize,
+    op: OpKind,
+    ops_per_thread: usize,
+) -> ContentionPoint {
     assert!(
         !(model == ContentionModel::Analytic && op == OpKind::Read),
         "the analytic contention model has no shared-read path; use the machine model for reads"
     );
     match model {
         ContentionModel::MachineAccurate => {
-            let r = run_machine(m, threads, op, ops_per_thread);
+            let r = run_contention_in(m, arena, threads, op, ops_per_thread);
             ContentionPoint {
                 threads,
                 op,

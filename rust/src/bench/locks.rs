@@ -29,7 +29,8 @@
 
 use crate::atomics::{Op, OpKind};
 use crate::sim::multicore::{
-    agg, run_program, run_program_stepwise, ContentionStats, CoreProgram, MulticoreResult, Step,
+    agg, run_program, run_program_in, run_program_stepwise, ContentionStats, CoreProgram,
+    MulticoreResult, RunArena, Step,
 };
 use crate::sim::{Access, Machine};
 
@@ -561,6 +562,22 @@ pub fn run_lock(
     run_lock_impl(m, kind, threads, work_per_thread, run_program)
 }
 
+/// [`run_lock`] on a caller-provided [`RunArena`] — what a run-pool
+/// worker calls so consecutive (kind, thread-count) points on the same
+/// worker share one arena's allocations. Bit-identical to [`run_lock`]
+/// whether the arena is fresh or reused (the arena resets on entry).
+pub fn run_lock_in(
+    m: &mut Machine,
+    arena: &mut RunArena,
+    kind: LockKind,
+    threads: usize,
+    work_per_thread: usize,
+) -> Option<LockResult> {
+    run_lock_impl(m, kind, threads, work_per_thread, |m, progs, label| {
+        run_program_in(m, arena, progs, label)
+    })
+}
+
 /// [`run_lock`] through the stepwise reference scheduler
 /// ([`run_program_stepwise`]) — every spin poll pays a full engine walk.
 /// Bit-identical to [`run_lock`] by the scheduler's contract; exists so
@@ -580,7 +597,7 @@ fn run_lock_impl(
     kind: LockKind,
     threads: usize,
     work_per_thread: usize,
-    scheduler: fn(&mut Machine, &mut [LockProgram], OpKind) -> MulticoreResult,
+    scheduler: impl FnOnce(&mut Machine, &mut [LockProgram], OpKind) -> MulticoreResult,
 ) -> Option<LockResult> {
     if threads < kind.min_threads() || threads > m.cfg.topology.n_cores || work_per_thread < 1 {
         return None;

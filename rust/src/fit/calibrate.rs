@@ -15,6 +15,13 @@
 //! time — two calibrations of the same architecture are bit-identical,
 //! which `tests/fit_native.rs` pins.
 //!
+//! Wall-clock: every simulation run is independent, so the coarse grid
+//! fans all (overlap, target) pairs out over a [`RunPool`]
+//! (`CalibrationCfg::run_threads` / `--run-threads`), and each
+//! golden-section probe fans out over its targets. Per-overlap residuals
+//! are summed in target input order, so the fit is bit-identical to the
+//! serial schedule for any worker count (`tests/run_parallel.rs`).
+//!
 //! This replaced the global `HANDOFF_OVERLAP = 0.5` constant: the fitted
 //! values ship as per-architecture `MachineConfig::handoff_overlap`
 //! defaults, and `repro calibrate` re-derives them (reporting the
@@ -22,8 +29,9 @@
 
 use crate::atomics::OpKind;
 use crate::data::fig8_targets::Fig8Target;
-use crate::sim::multicore::run_contention;
+use crate::sim::multicore::{run_contention, run_contention_in, RunArena};
 use crate::sim::{Machine, MachineConfig};
+use crate::sweep::RunPool;
 
 /// Calibration search parameters. The defaults match `repro calibrate`.
 #[derive(Debug, Clone, Copy)]
@@ -39,11 +47,24 @@ pub struct CalibrationCfg {
     pub coarse: usize,
     /// Golden-section refinement evaluations inside the bracket.
     pub refine: usize,
+    /// Run-pool workers for the simulation runs (the coarse grid fans out
+    /// over every (overlap, target) pair; golden-section evaluations stay
+    /// sequential but fan out over targets). 0 = the CLI default
+    /// ([`RunPool::with_defaults`], i.e. `--run-threads`). The fit is
+    /// bit-identical for any value (pinned by `tests/run_parallel.rs`).
+    pub run_threads: usize,
 }
 
 impl Default for CalibrationCfg {
     fn default() -> Self {
-        CalibrationCfg { ops_per_thread: 2000, lo: 0.02, hi: 0.98, coarse: 17, refine: 28 }
+        CalibrationCfg {
+            ops_per_thread: 2000,
+            lo: 0.02,
+            hi: 0.98,
+            coarse: 17,
+            refine: 28,
+            run_threads: 0,
+        }
     }
 }
 
@@ -98,21 +119,53 @@ pub fn plateau_bandwidth(
     run_contention(&mut m, threads, op, ops_per_thread).bandwidth_gbs
 }
 
-/// Mean relative residual of every target at one candidate overlap.
-fn objective(
-    cfg: &MachineConfig,
-    targets: &[Fig8Target],
+/// [`plateau_bandwidth`] on a run-pool worker's pooled machine and arena.
+/// Installing the candidate overlap on the pooled machine is bit-identical
+/// to building a fresh machine from an edited config: `handoff_overlap`
+/// is structurally inert (only the scheduler's occupancy formula reads
+/// it, at run time), and [`run_contention_in`] resets the machine on
+/// entry.
+fn plateau_bandwidth_in(
+    m: &mut Machine,
+    arena: &mut RunArena,
     overlap: f64,
+    op: OpKind,
+    threads: usize,
     ops_per_thread: usize,
 ) -> f64 {
-    let sum: f64 = targets
+    std::sync::Arc::make_mut(&mut m.cfg).handoff_overlap = overlap;
+    run_contention_in(m, arena, threads, op, ops_per_thread).bandwidth_gbs
+}
+
+/// Mean relative residual of every target at each candidate overlap.
+/// Every (overlap, target) pair is an independent simulation run, so the
+/// whole grid fans out over the pool; the per-overlap residuals are then
+/// summed in target input order — the exact summation order of the
+/// historical serial loop, so the objective values are bit-identical for
+/// any worker count.
+fn objective_grid(
+    pool: &RunPool,
+    cfg: &MachineConfig,
+    targets: &[Fig8Target],
+    overlaps: &[f64],
+    ops_per_thread: usize,
+) -> Vec<f64> {
+    let items: Vec<(f64, Fig8Target)> = overlaps
         .iter()
-        .map(|t| {
-            let got = plateau_bandwidth(cfg, overlap, t.op, t.threads, ops_per_thread);
+        .flat_map(|&ov| targets.iter().map(move |&t| (ov, t)))
+        .collect();
+    let residuals: Vec<f64> = pool.map(
+        &items,
+        || (Machine::new(cfg.clone()), RunArena::new()),
+        |(m, arena), &(ov, t)| {
+            let got = plateau_bandwidth_in(m, arena, ov, t.op, t.threads, ops_per_thread);
             (got - t.gbs).abs() / t.gbs.max(f64::MIN_POSITIVE)
-        })
-        .sum();
-    sum / targets.len().max(1) as f64
+        },
+    );
+    residuals
+        .chunks(targets.len().max(1))
+        .map(|per_overlap| per_overlap.iter().sum::<f64>() / targets.len().max(1) as f64)
+        .collect()
 }
 
 /// Fit `cfg`'s handoff overlap against `targets`. Returns `None` when
@@ -135,16 +188,29 @@ pub fn calibrate(
             t.threads
         );
     }
-    let mut evaluations = 0;
-    let mut eval = |ov: f64| {
-        evaluations += 1;
-        objective(cfg, targets, ov, ccfg.ops_per_thread)
+    let pool = if ccfg.run_threads >= 1 {
+        RunPool::new(ccfg.run_threads)
+    } else {
+        RunPool::with_defaults()
     };
+    let mut evaluations = 0;
 
-    // Coarse grid: bracket the minimum.
+    // Coarse grid: bracket the minimum. The grid phase is where the run
+    // pool pays off most — all coarse × targets runs are independent and
+    // fan out at once (golden-section below is inherently sequential:
+    // each probe depends on the previous bracket).
     let step = (ccfg.hi - ccfg.lo) / (ccfg.coarse - 1) as f64;
     let grid: Vec<f64> = (0..ccfg.coarse).map(|i| ccfg.lo + step * i as f64).collect();
-    let scores: Vec<f64> = grid.iter().map(|&ov| eval(ov)).collect();
+    let scores: Vec<f64> =
+        objective_grid(&pool, cfg, targets, &grid, ccfg.ops_per_thread);
+    evaluations += grid.len();
+
+    // Sequential evaluations still fan their per-target runs out over
+    // the pool.
+    let mut eval = |ov: f64| {
+        evaluations += 1;
+        objective_grid(&pool, cfg, targets, std::slice::from_ref(&ov), ccfg.ops_per_thread)[0]
+    };
     let best = scores
         .iter()
         .enumerate()
@@ -181,16 +247,24 @@ pub fn calibrate(
     // evaluation): re-simulating here keeps the search loop free of
     // per-target bookkeeping at the cost of one extra objective pass.
     evaluations += 1;
-    let points: Vec<CalPoint> = targets
-        .iter()
-        .map(|t| CalPoint {
+    let points: Vec<CalPoint> = pool.map(
+        targets,
+        || (Machine::new(cfg.clone()), RunArena::new()),
+        |(m, arena), t| CalPoint {
             op: t.op,
             threads: t.threads,
             target_gbs: t.gbs,
-            achieved_gbs: plateau_bandwidth(cfg, fitted, t.op, t.threads, ccfg.ops_per_thread),
+            achieved_gbs: plateau_bandwidth_in(
+                m,
+                arena,
+                fitted,
+                t.op,
+                t.threads,
+                ccfg.ops_per_thread,
+            ),
             from_paper: t.from_paper,
-        })
-        .collect();
+        },
+    );
     let mean_rel_residual =
         points.iter().map(|p| p.rel_residual()).sum::<f64>() / points.len() as f64;
 
@@ -210,8 +284,16 @@ mod tests {
     use crate::arch;
 
     /// Shrunk search for unit tests (integration tests use their own).
+    /// `run_threads: 1` keeps unit tests on the inline serial path.
     fn test_cfg() -> CalibrationCfg {
-        CalibrationCfg { ops_per_thread: 200, lo: 0.02, hi: 0.98, coarse: 9, refine: 12 }
+        CalibrationCfg {
+            ops_per_thread: 200,
+            lo: 0.02,
+            hi: 0.98,
+            coarse: 9,
+            refine: 12,
+            run_threads: 1,
+        }
     }
 
     #[test]

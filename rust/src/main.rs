@@ -20,7 +20,9 @@
 //!                 [--model machine|analytic] [--stats]
 //!                                   contended same-line benchmark (Fig. 8)
 //!                                   through the machine-accurate multi-core
-//!                                   scheduler, with per-thread stats
+//!                                   scheduler, with per-thread stats; one
+//!                                   concurrent simulation per run-pool
+//!                                   worker (--run-threads)
 //!   repro locks [--arch NAME] [--kind tas|tas-backoff|ticket|mpsc|all]
 //!               [--threads N] [--acq N] [--stats]
 //!                                   §6.1 lock/queue case study (TAS
@@ -36,13 +38,18 @@
 //!   repro calibrate [--arch NAME] [--ops N]
 //!                                   fit per-arch handoff_overlap against
 //!                                   the Fig. 8 plateau targets; writes
-//!                                   results/calibration_<arch>.csv
+//!                                   results/calibration_<arch>.csv; the
+//!                                   coarse grid and reporting pass run on
+//!                                   the run pool (--run-threads)
 //!   repro bfs [--scale N] [--threads N] [--arch NAME]
 //!   repro ablation                  §6.2 hardware-extension ablations
 //!   repro latency --arch A --op OP --state S --locality L [--size BYTES]
 //!   repro info                      testbed summaries
 //!
-//! Global flags: --fast (reduced sweeps), --artifacts DIR, --results DIR.
+//! Global flags: --fast (reduced sweeps), --artifacts DIR, --results DIR,
+//! --run-threads N (run-pool width for contend/locks/figure 8/calibrate;
+//! default: all cores), --pin-workers (pin run-pool workers to cores,
+//! Linux only — elsewhere a no-op).
 
 use atomics_repro::atomics::OpKind;
 use atomics_repro::bench::latency::LatencyBench;
@@ -68,6 +75,15 @@ fn main() {
     }
     if let Some(d) = args.opt("results") {
         std::env::set_var("RESULTS_DIR", d);
+    }
+    // Run-level parallelism knobs, consumed by RunPool::with_defaults()
+    // wherever a multicore simulation family runs (contend, locks,
+    // figure 8, calibrate).
+    if let Some(n) = args.opt("run-threads") {
+        std::env::set_var("RUN_THREADS", n);
+    }
+    if args.flag("pin-workers") {
+        std::env::set_var("PIN_WORKERS", "1");
     }
 
     let code = match args.subcommand.as_deref() {
@@ -281,8 +297,9 @@ fn parse_op(s: &str) -> Option<OpKind> {
 
 fn cmd_contend(args: &Args) -> i32 {
     use atomics_repro::bench::contention::{
-        paper_thread_counts, run_model, ContentionModel, OPS_PER_THREAD,
+        paper_thread_counts, run_model_in, ContentionModel, OPS_PER_THREAD,
     };
+    use atomics_repro::sim::RunArena;
 
     let arch_name = args.opt("arch").unwrap_or("ivybridge");
     let Some(cfg) = arch::by_name(arch_name) else {
@@ -322,7 +339,6 @@ fn cmd_contend(args: &Args) -> i32 {
         None => paper_thread_counts(&cfg),
     };
 
-    let mut m = atomics_repro::sim::Machine::new(cfg.clone());
     let mut t = Table::new(
         format!(
             "contend — {} {} ({} model, {} ops/thread)",
@@ -333,34 +349,42 @@ fn cmd_contend(args: &Args) -> i32 {
         ),
         &["threads", "GB/s", "mean ns", "hops/op", "inv/op", "stall ns/op", "CAS fail %"],
     );
+    // Each thread count is one run-level work item on the pool; results
+    // stream back in input order, so the table is byte-identical to the
+    // retained serial path for any --run-threads.
     let mut last = None;
-    for &n in &counts {
-        let p = run_model(&mut m, model, n, op, ops_per_thread);
-        if p.per_thread.is_empty() {
-            // analytic model: bandwidth + latency only
-            t.row(&[
-                n.to_string(),
-                format!("{:.3}", p.bandwidth_gbs),
-                format!("{:.1}", p.mean_latency_ns),
-                "-".into(),
-                "-".into(),
-                "-".into(),
-                "-".into(),
-            ]);
-        } else {
-            let ops_total = p.total_ops().max(1) as f64;
-            t.row(&[
-                n.to_string(),
-                format!("{:.3}", p.bandwidth_gbs),
-                format!("{:.1}", p.mean_latency_ns),
-                format!("{:.3}", p.total_line_hops() as f64 / ops_total),
-                format!("{:.3}", p.total_invalidations() as f64 / ops_total),
-                format!("{:.1}", p.mean_stall_ns()),
-                format!("{:.1}", p.cas_failure_rate() * 100.0),
-            ]);
-        }
-        last = Some(p);
-    }
+    atomics_repro::sweep::RunPool::with_defaults().run_streaming(
+        &counts,
+        || (atomics_repro::sim::Machine::new(cfg.clone()), RunArena::new()),
+        |(m, arena), &n| run_model_in(m, arena, model, n, op, ops_per_thread),
+        |i, p| {
+            let n = counts[i];
+            if p.per_thread.is_empty() {
+                // analytic model: bandwidth + latency only
+                t.row(&[
+                    n.to_string(),
+                    format!("{:.3}", p.bandwidth_gbs),
+                    format!("{:.1}", p.mean_latency_ns),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            } else {
+                let ops_total = p.total_ops().max(1) as f64;
+                t.row(&[
+                    n.to_string(),
+                    format!("{:.3}", p.bandwidth_gbs),
+                    format!("{:.1}", p.mean_latency_ns),
+                    format!("{:.3}", p.total_line_hops() as f64 / ops_total),
+                    format!("{:.3}", p.total_invalidations() as f64 / ops_total),
+                    format!("{:.1}", p.mean_stall_ns()),
+                    format!("{:.1}", p.cas_failure_rate() * 100.0),
+                ]);
+            }
+            last = Some(p);
+        },
+    );
     println!("{}", t.render());
 
     if args.flag("stats") {

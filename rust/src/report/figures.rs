@@ -5,6 +5,9 @@
 //! build [`SweepJob`]s and hand them to the shared [`SweepExecutor`], which
 //! parallelizes point-granular work items over all cores (thread count via
 //! `SWEEP_THREADS`) while returning series in deterministic input order.
+//! The multicore figures (Fig. 8, locks) are run-granular instead: each
+//! whole simulation is one work item on a [`crate::sweep::RunPool`]
+//! (`--run-threads`), streaming rows back in input order.
 
 use crate::arch;
 use crate::atomics::{OpKind, Width};
@@ -20,7 +23,7 @@ use crate::model::query::Query;
 use crate::report::{render_series, sweep_sizes, write_series_csv};
 use crate::sim::MachineConfig;
 use crate::sweep::{
-    ContentionWorkload, MechanismVariant, SweepExecutor, SweepJob, TwoOperandCas, UnalignedChase,
+    MechanismVariant, SweepExecutor, SweepJob, TwoOperandCas, UnalignedChase,
 };
 use crate::util::table::Table;
 use anyhow::{bail, Result};
@@ -302,83 +305,24 @@ pub fn figure7() -> String {
 /// stats table (line hops, invalidations, arbitration stalls, CAS failure
 /// rate) that the analytic model cannot produce.
 pub fn figure8() -> String {
-    use crate::bench::contention::{run_model, ContentionModel, ContentionPoint, OPS_PER_THREAD};
+    figure8_with(&crate::sweep::RunPool::with_defaults())
+}
 
-    let ops = [OpKind::Cas, OpKind::Faa, OpKind::Write];
+/// [`figure8`] on an explicit run pool — each thread count is one
+/// stealable run-level work item (the full six-series row on the
+/// worker's pooled machine), so the ladders of the three architectures
+/// regenerate in parallel per `--run-threads` while staying byte-
+/// identical to the serial path (`tests/run_parallel.rs` pins a pool of
+/// 1 against larger pools).
+pub fn figure8_with(pool: &crate::sweep::RunPool) -> String {
+    use crate::bench::contention::{
+        run_model_in, ContentionModel, ContentionPoint, OPS_PER_THREAD,
+    };
+    use crate::sim::multicore::RunArena;
+
     let mut out = String::new();
     for cfg in [arch::ivybridge(), arch::bulldozer(), arch::xeonphi()] {
         let counts = paper_thread_counts(&cfg);
-        let xs: Vec<u64> = counts.iter().map(|&n| n as u64).collect();
-
-        // The machine-accurate CAS series runs once, directly — it both
-        // fills the table's CAS column and supplies the per-thread stats
-        // (the Workload interface only returns the bandwidth scalar).
-        // Panic isolation matches the executor's: a failing point reports
-        // and the rest of the figure drains.
-        let cas_points: Vec<Option<ContentionPoint>> = {
-            let mut m = crate::sim::Machine::new(cfg.clone());
-            counts
-                .iter()
-                .map(|&n| {
-                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                        run_model(
-                            &mut m,
-                            ContentionModel::MachineAccurate,
-                            n,
-                            OpKind::Cas,
-                            OPS_PER_THREAD,
-                        )
-                    }));
-                    match r {
-                        Ok(p) => Some(p),
-                        Err(e) => {
-                            let msg = crate::sweep::executor::panic_message(e.as_ref());
-                            let line = format!(
-                                "!! sweep failure: CAS contended [{} threads={n}] panicked: {msg}\n",
-                                cfg.name
-                            );
-                            out.push_str(&line);
-                            eprint!("{line}");
-                            // a panicking run may leave the machine
-                            // inconsistent: replace it
-                            m = crate::sim::Machine::new(cfg.clone());
-                            None
-                        }
-                    }
-                })
-                .collect()
-        };
-
-        // Everything else goes through the executor: the remaining
-        // machine-accurate series, then the analytic baselines.
-        let mut jobs: Vec<SweepJob> = [OpKind::Faa, OpKind::Write]
-            .into_iter()
-            .map(|op| {
-                SweepJob::new(&cfg, Arc::new(ContentionWorkload::new(op)), xs.iter().copied())
-            })
-            .collect();
-        jobs.extend(ops.into_iter().map(|op| {
-            SweepJob::new(&cfg, Arc::new(ContentionWorkload::analytic(op)), xs.iter().copied())
-        }));
-        let results = executor().run(&jobs);
-        // the column mapping below is positional — pin it to the series
-        // names so a reordering of the jobs list cannot mislabel columns
-        debug_assert_eq!(
-            results.iter().map(|o| o.name.as_str()).collect::<Vec<_>>(),
-            [
-                "FAA contended",
-                "write contended",
-                "CAS contended (analytic)",
-                "FAA contended (analytic)",
-                "write contended (analytic)"
-            ]
-        );
-        for o in &results {
-            for f in &o.failures {
-                out.push_str(&format!("!! sweep failure: {f}\n"));
-                eprintln!("sweep failure: {f}");
-            }
-        }
 
         let mut t = Table::new(
             format!(
@@ -396,35 +340,6 @@ pub fn figure8() -> String {
             "faa_analytic_gbs",
             "write_analytic_gbs",
         ]);
-        for (i, &n) in counts.iter().enumerate() {
-            // columns: CAS (direct run above), then the 5 executor series
-            // (machine FAA/write, analytic CAS/FAA/write)
-            let mut v = vec![cas_points[i].as_ref().map_or(f64::NAN, |p| p.bandwidth_gbs)];
-            v.extend((0..5).map(|j| results[j].points[i].1.unwrap_or(f64::NAN)));
-            t.row(&[
-                n.to_string(),
-                format!("{:.3}", v[0]),
-                format!("{:.3}", v[1]),
-                format!("{:.3}", v[2]),
-                format!("{:.3}", v[3]),
-                format!("{:.3}", v[4]),
-                format!("{:.3}", v[5]),
-            ]);
-            csv.row(&[
-                n.to_string(),
-                v[0].to_string(),
-                v[1].to_string(),
-                v[2].to_string(),
-                v[3].to_string(),
-                v[4].to_string(),
-                v[5].to_string(),
-            ]);
-        }
-        out.push_str(&t.render());
-        out.push('\n');
-        let slug = cfg.name.to_lowercase().replace(' ', "_");
-        let _ = csv.write(format!("{}/figure8_{}.csv", crate::report::results_dir(), slug));
-
         // Per-thread-count coherence stats (CAS — the op with failure
         // semantics): what the machine-accurate engine adds over a number.
         let mut st = Table::new(
@@ -439,31 +354,111 @@ pub fn figure8() -> String {
             "cas_fail_rate",
             "mops_per_sec",
         ]);
-        for (p, &n) in cas_points.iter().zip(&counts) {
-            let Some(p) = p else { continue };
-            let ops_total = p.total_ops().max(1) as f64;
-            let hops = p.total_line_hops() as f64 / ops_total;
-            let inv = p.total_invalidations() as f64 / ops_total;
-            let stall = p.mean_stall_ns();
-            let fail = p.cas_failure_rate();
-            let mops = p.bandwidth_gbs / 8.0 * 1e3; // 8B ops → Mops/s
-            st.row(&[
-                n.to_string(),
-                format!("{hops:.3}"),
-                format!("{inv:.3}"),
-                format!("{stall:.1}"),
-                format!("{:.1}", fail * 100.0),
-                format!("{mops:.2}"),
-            ]);
-            stats_csv.row(&[
-                n.to_string(),
-                hops.to_string(),
-                inv.to_string(),
-                stall.to_string(),
-                fail.to_string(),
-                mops.to_string(),
-            ]);
-        }
+
+        // One run-level work item per thread count: the machine-accurate
+        // CAS run (kept whole — it supplies the per-thread stats table),
+        // then machine FAA/write and the three analytic baselines, all on
+        // the worker's pooled (machine, arena). Rows stream back in input
+        // order, filling the tables and CSVs as each count finishes while
+        // the bigger counts still simulate. Panic isolation matches the
+        // executor's: a failing row reports, the worker replaces its
+        // possibly-inconsistent machine, and the rest of the figure
+        // drains (the failed row is omitted from the tables).
+        type Row = Result<(ContentionPoint, [f64; 5]), String>;
+        pool.run_streaming(
+            &counts,
+            || (crate::sim::Machine::new(cfg.clone()), RunArena::new()),
+            |(m, arena), &n| -> Row {
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    let cas = run_model_in(
+                        m,
+                        arena,
+                        ContentionModel::MachineAccurate,
+                        n,
+                        OpKind::Cas,
+                        OPS_PER_THREAD,
+                    );
+                    let rest = [
+                        (ContentionModel::MachineAccurate, OpKind::Faa),
+                        (ContentionModel::MachineAccurate, OpKind::Write),
+                        (ContentionModel::Analytic, OpKind::Cas),
+                        (ContentionModel::Analytic, OpKind::Faa),
+                        (ContentionModel::Analytic, OpKind::Write),
+                    ]
+                    .map(|(model, op)| {
+                        run_model_in(m, arena, model, n, op, OPS_PER_THREAD).bandwidth_gbs
+                    });
+                    (cas, rest)
+                }))
+                .map_err(|e| {
+                    *m = crate::sim::Machine::new(cfg.clone());
+                    *arena = RunArena::new();
+                    crate::sweep::executor::panic_message(e.as_ref())
+                })
+            },
+            |i, row: Row| {
+                let n = counts[i];
+                let (cas, rest) = match row {
+                    Ok(r) => r,
+                    Err(msg) => {
+                        let line = format!(
+                            "!! sweep failure: contended row [{} threads={n}] panicked: {msg}\n",
+                            cfg.name
+                        );
+                        out.push_str(&line);
+                        eprint!("{line}");
+                        return;
+                    }
+                };
+                // columns: CAS, machine FAA/write, analytic CAS/FAA/write
+                let v = [cas.bandwidth_gbs, rest[0], rest[1], rest[2], rest[3], rest[4]];
+                t.row(&[
+                    n.to_string(),
+                    format!("{:.3}", v[0]),
+                    format!("{:.3}", v[1]),
+                    format!("{:.3}", v[2]),
+                    format!("{:.3}", v[3]),
+                    format!("{:.3}", v[4]),
+                    format!("{:.3}", v[5]),
+                ]);
+                csv.row(&[
+                    n.to_string(),
+                    v[0].to_string(),
+                    v[1].to_string(),
+                    v[2].to_string(),
+                    v[3].to_string(),
+                    v[4].to_string(),
+                    v[5].to_string(),
+                ]);
+                let ops_total = cas.total_ops().max(1) as f64;
+                let hops = cas.total_line_hops() as f64 / ops_total;
+                let inv = cas.total_invalidations() as f64 / ops_total;
+                let stall = cas.mean_stall_ns();
+                let fail = cas.cas_failure_rate();
+                let mops = cas.bandwidth_gbs / 8.0 * 1e3; // 8B ops → Mops/s
+                st.row(&[
+                    n.to_string(),
+                    format!("{hops:.3}"),
+                    format!("{inv:.3}"),
+                    format!("{stall:.1}"),
+                    format!("{:.1}", fail * 100.0),
+                    format!("{mops:.2}"),
+                ]);
+                stats_csv.row(&[
+                    n.to_string(),
+                    hops.to_string(),
+                    inv.to_string(),
+                    stall.to_string(),
+                    fail.to_string(),
+                    mops.to_string(),
+                ]);
+            },
+        );
+
+        out.push_str(&t.render());
+        out.push('\n');
+        let slug = cfg.name.to_lowercase().replace(' ', "_");
+        let _ = csv.write(format!("{}/figure8_{}.csv", crate::report::results_dir(), slug));
         out.push_str(&st.render());
         out.push('\n');
         let _ = stats_csv
@@ -820,7 +815,74 @@ pub fn locks_report(
     work_per_thread: usize,
     with_stats: bool,
 ) -> String {
-    use crate::bench::locks::run_lock;
+    locks_report_with(
+        &crate::sweep::RunPool::with_defaults(),
+        cfg,
+        kinds,
+        counts,
+        work_per_thread,
+        with_stats,
+    )
+}
+
+/// Render one finished kind's ladder table, plus the per-thread stats
+/// table of its last realizable point when `with_stats`.
+fn flush_lock_kind(
+    out: &mut String,
+    kind: crate::bench::locks::LockKind,
+    t: Table,
+    last: Option<&crate::bench::locks::LockResult>,
+    with_stats: bool,
+) {
+    out.push_str(&t.render());
+    out.push('\n');
+    if with_stats {
+        if let Some(r) = last {
+            let mut d = Table::new(
+                format!("{} per-thread stats at {} threads", kind.label(), r.threads),
+                &["thread", "ops", "hops", "inv", "CAS fails", "stall ns", "mean ns"],
+            );
+            const MAX_ROWS: usize = 16;
+            for st in r.per_thread.iter().take(MAX_ROWS) {
+                d.row(&[
+                    st.core.to_string(),
+                    st.ops.to_string(),
+                    st.line_hops.to_string(),
+                    st.invalidations.to_string(),
+                    st.cas_failures.to_string(),
+                    format!("{:.0}", st.stall_ns),
+                    format!("{:.1}", st.mean_latency_ns()),
+                ]);
+            }
+            out.push_str(&d.render());
+            if r.per_thread.len() > MAX_ROWS {
+                out.push_str(&format!(
+                    "({} more threads elided)\n",
+                    r.per_thread.len() - MAX_ROWS
+                ));
+            }
+            out.push('\n');
+        }
+    }
+}
+
+/// [`locks_report`] on an explicit run pool — every (kind, thread count)
+/// point is one stealable run-level work item on a worker's pooled
+/// (machine, arena). Results stream back in input (kind-major) order, so
+/// each kind's table fills row by row as its counts finish and renders
+/// as soon as its last count lands — and the whole report is
+/// byte-identical for any pool width (`tests/run_parallel.rs` pins a
+/// pool of 1 against larger pools).
+pub fn locks_report_with(
+    pool: &crate::sweep::RunPool,
+    cfg: &MachineConfig,
+    kinds: &[crate::bench::locks::LockKind],
+    counts: &[usize],
+    work_per_thread: usize,
+    with_stats: bool,
+) -> String {
+    use crate::bench::locks::{run_lock_in, LockKind, LockResult};
+    use crate::sim::multicore::RunArena;
 
     let mut out = String::new();
     let mut csv = crate::util::csv::Csv::new(&[
@@ -847,23 +909,45 @@ pub fn locks_report(
         "stall_ns",
         "latency_ns",
     ]);
-    let mut m = crate::sim::Machine::new(cfg.clone());
-    for &kind in kinds {
-        let mut t = Table::new(
-            format!(
-                "locks — {} {} ({} acquire, {} per thread)",
-                cfg.name,
-                kind.label(),
-                kind.primitive().label(),
-                work_per_thread
-            ),
-            &["threads", "Macq/s", "fail %", "spin reads", "hops/op", "stall ns/op"],
-        );
-        let mut last = None;
-        for &n in counts {
-            let Some(r) = run_lock(&mut m, kind, n, work_per_thread) else {
-                continue; // below the kind's minimum thread count
+
+    let items: Vec<(LockKind, usize)> = kinds
+        .iter()
+        .flat_map(|&k| counts.iter().map(move |&n| (k, n)))
+        .collect();
+    let per_kind = counts.len().max(1);
+    // The table of the kind currently streaming in, and its last
+    // realizable result (feeds the `--stats` table). A kind flushes when
+    // its successor's first point arrives, and at the end.
+    let mut cur: Option<(LockKind, Table)> = None;
+    let mut last: Option<LockResult> = None;
+    pool.run_streaming(
+        &items,
+        || (crate::sim::Machine::new(cfg.clone()), RunArena::new()),
+        |(m, arena), &(kind, n)| run_lock_in(m, arena, kind, n, work_per_thread),
+        |i, r| {
+            let (kind, n) = items[i];
+            if i % per_kind == 0 {
+                if let Some((prev, t)) = cur.take() {
+                    flush_lock_kind(&mut out, prev, t, last.take().as_ref(), with_stats);
+                }
+                cur = Some((
+                    kind,
+                    Table::new(
+                        format!(
+                            "locks — {} {} ({} acquire, {} per thread)",
+                            cfg.name,
+                            kind.label(),
+                            kind.primitive().label(),
+                            work_per_thread
+                        ),
+                        &["threads", "Macq/s", "fail %", "spin reads", "hops/op", "stall ns/op"],
+                    ),
+                ));
+            }
+            let Some(r) = r else {
+                return; // below the kind's minimum thread count
             };
+            let t = &mut cur.as_mut().expect("table created at kind boundary").1;
             t.row(&[
                 n.to_string(),
                 format!("{:.3}", r.acq_per_sec / 1e6),
@@ -903,36 +987,26 @@ pub fn locks_report(
                 ]);
             }
             last = Some(r);
-        }
-        out.push_str(&t.render());
-        out.push('\n');
-        if with_stats {
-            if let Some(r) = last {
-                let mut d = Table::new(
-                    format!("{} per-thread stats at {} threads", kind.label(), r.threads),
-                    &["thread", "ops", "hops", "inv", "CAS fails", "stall ns", "mean ns"],
-                );
-                const MAX_ROWS: usize = 16;
-                for st in r.per_thread.iter().take(MAX_ROWS) {
-                    d.row(&[
-                        st.core.to_string(),
-                        st.ops.to_string(),
-                        st.line_hops.to_string(),
-                        st.invalidations.to_string(),
-                        st.cas_failures.to_string(),
-                        format!("{:.0}", st.stall_ns),
-                        format!("{:.1}", st.mean_latency_ns()),
-                    ]);
-                }
-                out.push_str(&d.render());
-                if r.per_thread.len() > MAX_ROWS {
-                    out.push_str(&format!(
-                        "({} more threads elided)\n",
-                        r.per_thread.len() - MAX_ROWS
-                    ));
-                }
-                out.push('\n');
-            }
+        },
+    );
+    if let Some((prev, t)) = cur.take() {
+        flush_lock_kind(&mut out, prev, t, last.take().as_ref(), with_stats);
+    }
+    if counts.is_empty() {
+        // Degenerate call: render the (empty) ladder table per kind, as
+        // the serial loop did.
+        for &kind in kinds {
+            let t = Table::new(
+                format!(
+                    "locks — {} {} ({} acquire, {} per thread)",
+                    cfg.name,
+                    kind.label(),
+                    kind.primitive().label(),
+                    work_per_thread
+                ),
+                &["threads", "Macq/s", "fail %", "spin reads", "hops/op", "stall ns/op"],
+            );
+            flush_lock_kind(&mut out, kind, t, None, with_stats);
         }
     }
     let slug = cfg.name.to_lowercase().replace(' ', "_");

@@ -26,6 +26,6 @@ pub mod writebuffer;
 pub use cache::{line_of, Line, LINE_SIZE};
 pub use config::MachineConfig;
 pub use engine::{Access, Machine};
-pub use multicore::{ContentionStats, MulticoreResult};
+pub use multicore::{ContentionStats, MulticoreResult, RunArena};
 pub use timing::Level;
 pub use topology::{CoreId, Distance, Topology};

@@ -282,12 +282,100 @@ fn serializes(m: &Machine, kind: OpKind) -> bool {
     }
 }
 
+/// Reusable per-run scratch for the multicore schedulers — every flat
+/// structure [`run_contention`] and [`run_program`] used to allocate at
+/// run entry (per-thread stats, the request heaps, the spin memo, the
+/// line table). A worker in a run-level pool
+/// ([`crate::sweep::RunPool`]) holds one arena next to its pooled
+/// [`Machine`] and reuses it across runs, so a long calibrate or ladder
+/// campaign allocates per *worker*, not per *run*.
+///
+/// Reuse is bit-identical to a fresh arena by construction:
+/// [`RunArena::reset`] restores every structure to its logical initial
+/// state (cleared heaps, zeroed stats, `EMPTY_LINE` keys), and the only
+/// thing that survives is *capacity*. Capacity is unobservable — the
+/// line table's slot indices are internal (a grown table merely probes
+/// different slots for the same keys, and `free_at` is (re)set on
+/// insert), and vector spare capacity never enters the schedule.
+pub struct RunArena {
+    per_thread: Vec<ContentionStats>,
+    // run_contention's serializing path
+    heap: BinaryHeap<Request>,
+    remaining: Vec<usize>,
+    expected: Vec<u64>,
+    // run_program's event loop
+    pending: Vec<Option<Step>>,
+    queued_since: Vec<f64>,
+    memo: Vec<Option<(Step, ReadMemo)>>,
+    serial_slot: Vec<u32>,
+    ready: ReadyQueue,
+    lines: LineTable,
+}
+
+impl RunArena {
+    pub fn new() -> RunArena {
+        RunArena {
+            per_thread: Vec::new(),
+            heap: BinaryHeap::new(),
+            remaining: Vec::new(),
+            expected: Vec::new(),
+            pending: Vec::new(),
+            queued_since: Vec::new(),
+            memo: Vec::new(),
+            serial_slot: Vec::new(),
+            ready: ReadyQueue::new(0),
+            lines: LineTable::new(64),
+        }
+    }
+
+    /// Restore the logical initial state for a `threads`-wide run,
+    /// keeping every allocation.
+    fn reset(&mut self, threads: usize) {
+        self.per_thread.clear();
+        self.per_thread
+            .extend((0..threads).map(|t| ContentionStats { core: t, ..ContentionStats::default() }));
+        self.heap.clear();
+        self.remaining.clear();
+        self.expected.clear();
+        self.pending.clear();
+        self.pending.resize(threads, None);
+        self.queued_since.clear();
+        self.queued_since.resize(threads, 0.0);
+        self.memo.clear();
+        self.memo.resize(threads, None);
+        self.serial_slot.clear();
+        self.serial_slot.resize(threads, ABSENT);
+        self.ready.reset(threads);
+        self.lines.reset();
+    }
+}
+
+impl Default for RunArena {
+    fn default() -> Self {
+        RunArena::new()
+    }
+}
+
 /// Run the machine-accurate contention benchmark: `threads` cores issue
 /// `ops_per_thread` operations of `kind` against one shared line, through
 /// the full engine. Resets the machine on entry (fresh-machine semantics);
-/// the coherence invariants hold afterwards.
+/// the coherence invariants hold afterwards. Allocates a throwaway
+/// [`RunArena`]; pooled callers use [`run_contention_in`].
 pub fn run_contention(
     m: &mut Machine,
+    threads: usize,
+    kind: OpKind,
+    ops_per_thread: usize,
+) -> MulticoreResult {
+    run_contention_in(m, &mut RunArena::new(), threads, kind, ops_per_thread)
+}
+
+/// [`run_contention`] on a caller-provided [`RunArena`] — the arena is
+/// reset on entry, so results are bit-identical whether the arena is
+/// fresh or reused (pinned by `tests/run_parallel.rs`).
+pub fn run_contention_in(
+    m: &mut Machine,
+    arena: &mut RunArena,
     threads: usize,
     kind: OpKind,
     ops_per_thread: usize,
@@ -299,14 +387,13 @@ pub fn run_contention(
     );
     assert!(ops_per_thread >= 1);
     m.reset();
-
-    let mut per_thread: Vec<ContentionStats> = (0..threads)
-        .map(|t| ContentionStats { core: t, ..ContentionStats::default() })
-        .collect();
+    arena.reset(threads);
 
     if !serializes(m, kind) {
-        return run_unserialized(m, threads, kind, ops_per_thread, per_thread);
+        return run_unserialized(m, threads, kind, ops_per_thread, &mut arena.per_thread);
     }
+
+    let RunArena { per_thread, heap, remaining, expected, .. } = arena;
 
     let topo = m.cfg.topology;
     let exec_ns = match kind {
@@ -317,11 +404,14 @@ pub fn run_contention(
     // prefers same-die requesters in bounded batches.
     let prefer_local = prefers_same_die(&m.cfg);
 
-    let mut heap: BinaryHeap<Request> = (0..threads)
-        .map(|t| Request { time: 0.0, thread: t })
-        .collect();
-    let mut remaining = vec![ops_per_thread; threads];
-    let mut expected = vec![0u64; threads];
+    // `Request`'s order is total (ties in time break on the unique thread
+    // id), so pushing one-by-one pops in the same sequence the historical
+    // `collect()`-built heap did.
+    for t in 0..threads {
+        heap.push(Request { time: 0.0, thread: t });
+    }
+    remaining.resize(threads, ops_per_thread);
+    expected.resize(threads, 0u64);
     let mut owner: CoreId = 0;
     let mut line_free_at = 0.0f64;
     let mut finish = 0.0f64;
@@ -331,7 +421,7 @@ pub fn run_contention(
         // Same-die preference: serve a ready same-die requester first, if
         // the head of the queue is remote and the batch bound allows.
         let req = if prefer_local && !heap.is_empty() && local_batch < MAX_LOCAL_BATCH {
-            prefer_same_die(&mut heap, req, &topo, owner, line_free_at)
+            prefer_same_die(heap, req, &topo, owner, line_free_at)
         } else {
             req
         };
@@ -399,7 +489,9 @@ pub fn run_contention(
         }
     }
 
-    finalize(kind, threads, finish, per_thread)
+    // The one per-run allocation the arena keeps: the caller owns the
+    // result, the arena keeps its stats buffer for the next run.
+    finalize(kind, threads, finish, per_thread.clone())
 }
 
 /// The non-serializing path: reads replicate, combined stores retire into
@@ -410,7 +502,7 @@ fn run_unserialized(
     threads: usize,
     kind: OpKind,
     ops_per_thread: usize,
-    mut per_thread: Vec<ContentionStats>,
+    per_thread: &mut [ContentionStats],
 ) -> MulticoreResult {
     let mut finish = 0.0f64;
     for t in 0..threads {
@@ -435,7 +527,7 @@ fn run_unserialized(
         st.finish_ns = m.clock_of(t);
         finish = finish.max(st.finish_ns);
     }
-    finalize(kind, threads, finish, per_thread)
+    finalize(kind, threads, finish, per_thread.to_vec())
 }
 
 /// One step of a per-core [`CoreProgram`]: an operation against an address.
@@ -532,7 +624,19 @@ pub fn run_program<P: CoreProgram>(
     programs: &mut [P],
     label: OpKind,
 ) -> MulticoreResult {
-    run_program_impl(m, programs, label, true)
+    run_program_impl(m, &mut RunArena::new(), programs, label, true)
+}
+
+/// [`run_program`] on a caller-provided [`RunArena`] — the arena is reset
+/// on entry, so a reused arena is bit-identical to a fresh one (pinned by
+/// `tests/run_parallel.rs`).
+pub fn run_program_in<P: CoreProgram>(
+    m: &mut Machine,
+    arena: &mut RunArena,
+    programs: &mut [P],
+    label: OpKind,
+) -> MulticoreResult {
+    run_program_impl(m, arena, programs, label, true)
 }
 
 /// The reference scheduler: identical event processing to [`run_program`]
@@ -545,7 +649,7 @@ pub fn run_program_stepwise<P: CoreProgram>(
     programs: &mut [P],
     label: OpKind,
 ) -> MulticoreResult {
-    run_program_impl(m, programs, label, false)
+    run_program_impl(m, &mut RunArena::new(), programs, label, false)
 }
 
 /// Flat indexed min-heap of pending per-thread requests ordered by
@@ -570,6 +674,18 @@ impl ReadyQueue {
             time: vec![0.0; threads],
             seq: vec![0; threads],
         }
+    }
+
+    /// Restore the logical state of `ReadyQueue::new(threads)` keeping
+    /// the allocations.
+    fn reset(&mut self, threads: usize) {
+        self.heap.clear();
+        self.pos.clear();
+        self.pos.resize(threads, ABSENT);
+        self.time.clear();
+        self.time.resize(threads, 0.0);
+        self.seq.clear();
+        self.seq.resize(threads, 0);
     }
 
     #[inline]
@@ -664,6 +780,16 @@ impl LineTable {
         LineTable { keys: vec![EMPTY_LINE; cap], free_at: vec![0.0; cap], len: 0 }
     }
 
+    /// Empty the table keeping its (possibly grown) capacity. Capacity
+    /// changes only internal slot indices, never an observable number:
+    /// slots are resolved per run through [`LineTable::slot_of`] and
+    /// `free_at` is set to 0 on insert, so a reused table behaves exactly
+    /// like `LineTable::new(64)`.
+    fn reset(&mut self) {
+        self.keys.fill(EMPTY_LINE);
+        self.len = 0;
+    }
+
     #[inline]
     fn hash(line: u64) -> usize {
         let h = line.wrapping_mul(0x9E37_79B9_7F4A_7C15);
@@ -729,6 +855,7 @@ fn refresh_serial_slots(lines: &mut LineTable, pending: &[Option<Step>], serial_
 
 fn run_program_impl<P: CoreProgram>(
     m: &mut Machine,
+    arena: &mut RunArena,
     programs: &mut [P],
     label: OpKind,
     fast: bool,
@@ -740,33 +867,37 @@ fn run_program_impl<P: CoreProgram>(
         m.cfg.topology.n_cores
     );
     m.reset();
+    arena.reset(threads);
     // The spin fast path requires uniform repeat pricing (no frequency
     // jitter, no prefetchers); otherwise every poll takes the full engine
     // walk and the run degenerates to the stepwise scheduler.
     let spin_ok = fast && m.spin_fast_path_ok();
 
-    let mut per_thread: Vec<ContentionStats> = (0..threads)
-        .map(|t| ContentionStats { core: t, ..ContentionStats::default() })
-        .collect();
-    let mut pending: Vec<Option<Step>> = vec![None; threads];
-    let mut queued_since = vec![0.0f64; threads];
-    // Memoized spin poll per thread: (the repeated step, its pricing).
-    // Validity is re-verified against the live machine on every replay, so
-    // a stale memo can only cost a fallback, never a wrong result.
-    let mut memo: Vec<Option<(Step, ReadMemo)>> = vec![None; threads];
-    // Cached LineTable slot of the pending step's line for serializing
-    // steps (ABSENT otherwise) — the hot loop does zero hashing per event.
-    let mut serial_slot: Vec<u32> = vec![ABSENT; threads];
+    // Arena fields, split into disjoint borrows. `memo` holds the spin
+    // poll per thread: (the repeated step, its pricing); validity is
+    // re-verified against the live machine on every replay, so a stale
+    // memo can only cost a fallback, never a wrong result. `serial_slot`
+    // caches the LineTable slot of the pending step's line for
+    // serializing steps (ABSENT otherwise) — the hot loop does zero
+    // hashing per event.
+    let RunArena {
+        per_thread,
+        pending,
+        queued_since,
+        memo,
+        serial_slot,
+        ready,
+        lines,
+        ..
+    } = arena;
     let mut next_seq = 0u64;
-    let mut ready = ReadyQueue::new(threads);
-    let mut lines = LineTable::new(64);
     for (t, p) in programs.iter_mut().enumerate() {
         if let Some(step) = p.first() {
             pending[t] = Some(step);
             if serializes(m, step.op.kind()) {
                 let (slot, grew) = lines.slot_of(line_of(step.addr));
                 if grew {
-                    refresh_serial_slots(&mut lines, &pending, &mut serial_slot);
+                    refresh_serial_slots(lines, pending, serial_slot);
                 }
                 serial_slot[t] = slot as u32;
             }
@@ -891,7 +1022,7 @@ fn run_program_impl<P: CoreProgram>(
                 if serializes(m, next.op.kind()) {
                     let (slot, grew) = lines.slot_of(line_of(next.addr));
                     if grew {
-                        refresh_serial_slots(&mut lines, &pending, &mut serial_slot);
+                        refresh_serial_slots(lines, pending, serial_slot);
                     }
                     serial_slot[t] = slot as u32;
                 }
@@ -909,7 +1040,7 @@ fn run_program_impl<P: CoreProgram>(
         }
     }
 
-    finalize(label, threads, finish, per_thread)
+    finalize(label, threads, finish, per_thread.clone())
 }
 
 fn finalize(

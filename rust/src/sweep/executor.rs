@@ -72,6 +72,24 @@ impl SweepOutcome {
     }
 }
 
+/// One completed sweep point, delivered by
+/// [`SweepExecutor::run_streaming`] in strict lexicographic (job, point)
+/// input order.
+#[derive(Debug, Clone)]
+pub struct PointEvent {
+    /// Index of the job in the submitted slice.
+    pub job: usize,
+    /// Index of the point within the job's coordinates.
+    pub point: usize,
+    /// The x coordinate (`jobs[job].xs[point]`).
+    pub x: u64,
+    /// Measured value; `None` = unrealizable on this architecture, or the
+    /// measurement panicked (then `failure` is set).
+    pub value: Option<f64>,
+    /// Formatted description of a panicked measurement, when one occurred.
+    pub failure: Option<String>,
+}
+
 /// A fixed-width thread pool executing sweep jobs.
 #[derive(Debug, Clone, Copy)]
 pub struct SweepExecutor {
@@ -92,8 +110,17 @@ impl SweepExecutor {
         self.threads
     }
 
-    /// Run every point of every job, returning outcomes in job input order.
-    pub fn run(&self, jobs: &[SweepJob]) -> Vec<SweepOutcome> {
+    /// Run every point of every job, streaming each completed point to
+    /// `on_point` in strict lexicographic (job, point) input order — the
+    /// consumption API the figures and CSV writers emit rows through as
+    /// a campaign progresses. Completions arriving out of order are
+    /// parked and released as soon as the input-order prefix is
+    /// contiguous, so buffered memory is bounded by the out-of-order
+    /// window and the delivery sequence (values *and* failure messages)
+    /// is deterministic for any thread count. `on_point` runs on the
+    /// submitting thread. [`SweepExecutor::run`] is a thin collector over
+    /// this method.
+    pub fn run_streaming(&self, jobs: &[SweepJob], mut on_point: impl FnMut(PointEvent)) {
         // Intern pool keys to dense indices once — the hot loop then
         // indexes a Vec instead of cloning and hashing a string per point.
         let mut interner: HashMap<&str, u32> = HashMap::new();
@@ -108,78 +135,112 @@ impl SweepExecutor {
         drop(interner);
 
         let chunks = build_chunks(jobs, &pool_ids);
+        if chunks.is_empty() {
+            return;
+        }
 
+        // Flat (job, point) → release-buffer index, for in-order delivery.
+        let mut offsets = Vec::with_capacity(jobs.len());
+        let mut total = 0usize;
+        for job in jobs {
+            offsets.push(total);
+            total += job.xs.len();
+        }
+
+        let cursor = AtomicUsize::new(0);
+        let workers = self.threads.min(chunks.len());
+        std::thread::scope(|s| {
+            let (tx, rx) = mpsc::channel::<(usize, usize, Result<Option<f64>, String>)>();
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let cursor = &cursor;
+                let chunks = &chunks;
+                let pool_ids = &pool_ids;
+                s.spawn(move || {
+                    let mut machines: Vec<Option<Machine>> =
+                        (0..n_pools).map(|_| None).collect();
+                    let mut cache = PrepCache::default();
+                    'steal: loop {
+                        let c = cursor.fetch_add(1, Ordering::Relaxed);
+                        if c >= chunks.len() {
+                            break;
+                        }
+                        for (i, &(j, p)) in chunks[c].iter().enumerate() {
+                            let job = &jobs[j];
+                            let pool = pool_ids[j] as usize;
+                            let x = job.xs[p];
+                            // Snapshots only pay off when a same-key
+                            // item follows in this chunk.
+                            let will_reuse = i + 1 < chunks[c].len();
+                            let result = catch_unwind(AssertUnwindSafe(|| {
+                                run_item(job, pool, x, &mut machines, &mut cache, will_reuse)
+                            }));
+                            let out = match result {
+                                Ok(v) => Ok(v),
+                                Err(e) => {
+                                    // a panicking measurement may leave
+                                    // the pooled machine (and, mid-copy,
+                                    // the snapshot) inconsistent:
+                                    // discard both
+                                    machines[pool] = None;
+                                    cache = PrepCache::default();
+                                    Err(panic_message(e.as_ref()))
+                                }
+                            };
+                            if tx.send((j, p, out)).is_err() {
+                                break 'steal;
+                            }
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            let mut parked: Vec<Option<PointEvent>> = (0..total).map(|_| None).collect();
+            let mut next = 0usize;
+            for (j, p, r) in rx {
+                let job = &jobs[j];
+                let ev = match r {
+                    Ok(v) => PointEvent { job: j, point: p, x: job.xs[p], value: v, failure: None },
+                    Err(msg) => PointEvent {
+                        job: j,
+                        point: p,
+                        x: job.xs[p],
+                        value: None,
+                        failure: Some(format!(
+                            "{} [{} {}={}] panicked: {}",
+                            job.workload.series_name(),
+                            job.cfg.name,
+                            job.workload.axis(),
+                            job.xs[p],
+                            msg
+                        )),
+                    },
+                };
+                parked[offsets[j] + p] = Some(ev);
+                while next < total {
+                    match parked[next].take() {
+                        Some(ev) => {
+                            on_point(ev);
+                            next += 1;
+                        }
+                        None => break,
+                    }
+                }
+            }
+        });
+    }
+
+    /// Run every point of every job, returning outcomes in job input order.
+    pub fn run(&self, jobs: &[SweepJob]) -> Vec<SweepOutcome> {
         let mut values: Vec<Vec<Option<f64>>> =
             jobs.iter().map(|j| vec![None; j.xs.len()]).collect();
         let mut failures: Vec<Vec<String>> = vec![Vec::new(); jobs.len()];
-
-        if !chunks.is_empty() {
-            let cursor = AtomicUsize::new(0);
-            let workers = self.threads.min(chunks.len());
-            std::thread::scope(|s| {
-                let (tx, rx) = mpsc::channel::<(usize, usize, Result<Option<f64>, String>)>();
-                for _ in 0..workers {
-                    let tx = tx.clone();
-                    let cursor = &cursor;
-                    let chunks = &chunks;
-                    let pool_ids = &pool_ids;
-                    s.spawn(move || {
-                        let mut machines: Vec<Option<Machine>> =
-                            (0..n_pools).map(|_| None).collect();
-                        let mut cache = PrepCache::default();
-                        'steal: loop {
-                            let c = cursor.fetch_add(1, Ordering::Relaxed);
-                            if c >= chunks.len() {
-                                break;
-                            }
-                            for (i, &(j, p)) in chunks[c].iter().enumerate() {
-                                let job = &jobs[j];
-                                let pool = pool_ids[j] as usize;
-                                let x = job.xs[p];
-                                // Snapshots only pay off when a same-key
-                                // item follows in this chunk.
-                                let will_reuse = i + 1 < chunks[c].len();
-                                let result = catch_unwind(AssertUnwindSafe(|| {
-                                    run_item(job, pool, x, &mut machines, &mut cache, will_reuse)
-                                }));
-                                let out = match result {
-                                    Ok(v) => Ok(v),
-                                    Err(e) => {
-                                        // a panicking measurement may leave
-                                        // the pooled machine (and, mid-copy,
-                                        // the snapshot) inconsistent:
-                                        // discard both
-                                        machines[pool] = None;
-                                        cache = PrepCache::default();
-                                        Err(panic_message(e.as_ref()))
-                                    }
-                                };
-                                if tx.send((j, p, out)).is_err() {
-                                    break 'steal;
-                                }
-                            }
-                        }
-                    });
-                }
-                drop(tx);
-                for (j, p, r) in rx {
-                    match r {
-                        Ok(v) => values[j][p] = v,
-                        Err(msg) => {
-                            let job = &jobs[j];
-                            failures[j].push(format!(
-                                "{} [{} {}={}] panicked: {}",
-                                job.workload.series_name(),
-                                job.cfg.name,
-                                job.workload.axis(),
-                                job.xs[p],
-                                msg
-                            ));
-                        }
-                    }
-                }
-            });
-        }
+        self.run_streaming(jobs, |ev| {
+            values[ev.job][ev.point] = ev.value;
+            if let Some(msg) = ev.failure {
+                failures[ev.job].push(msg);
+            }
+        });
 
         jobs.iter()
             .zip(values)
@@ -411,5 +472,32 @@ mod tests {
     #[test]
     fn empty_job_list_is_fine() {
         assert!(SweepExecutor::new(2).run(&[]).is_empty());
+    }
+
+    #[test]
+    fn streaming_delivers_every_point_in_input_order() {
+        let cfg = arch::haswell();
+        let jobs: Vec<SweepJob> = [OpKind::Read, OpKind::Faa]
+            .into_iter()
+            .map(|op| {
+                SweepJob::sized(
+                    &cfg,
+                    Arc::new(LatencyBench::new(op, PrepState::M, PrepLocality::Local)),
+                    &[4096, 8192, 16384],
+                )
+            })
+            .collect();
+        let mut seen: Vec<(usize, usize, u64, Option<f64>)> = Vec::new();
+        SweepExecutor::new(3)
+            .run_streaming(&jobs, |ev| seen.push((ev.job, ev.point, ev.x, ev.value)));
+        let order: Vec<(usize, usize)> = seen.iter().map(|&(j, p, _, _)| (j, p)).collect();
+        let expect: Vec<(usize, usize)> =
+            (0..2).flat_map(|j| (0..3).map(move |p| (j, p))).collect();
+        assert_eq!(order, expect, "lexicographic (job, point) delivery");
+        // ... and the streamed values are exactly run()'s.
+        let out = SweepExecutor::new(3).run(&jobs);
+        for &(j, p, x, v) in &seen {
+            assert_eq!(out[j].points[p], (x, v));
+        }
     }
 }

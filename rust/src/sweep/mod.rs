@@ -21,6 +21,11 @@
 //!   ([`Workload::prep`] — same-spec points pay one `prepare()` per
 //!   size), isolate panics to the failing item, and return results in
 //!   deterministic input order regardless of thread count.
+//! * [`RunPool`] — run-level parallelism for the ladder paths whose work
+//!   items are whole multicore runs rather than [`Workload`] points
+//!   (`repro contend`, the Fig. 8 / locks figures, calibrate objective
+//!   evaluations): per-worker `(Machine, RunArena)` state, results
+//!   streamed to the caller in input order (see [`runpool`]).
 //! * [`thin_points`] — the `--points N` budget: deterministic grid
 //!   thinning for incremental runs (kept points bit-identical to the
 //!   full run's).
@@ -62,9 +67,11 @@
 pub mod executor;
 pub mod families;
 pub mod plan;
+pub mod runpool;
 pub mod workload;
 
-pub use executor::{SweepExecutor, SweepOutcome};
+pub use executor::{PointEvent, SweepExecutor, SweepOutcome};
+pub use runpool::RunPool;
 pub use families::{family_names, jobs_for, FamilySpec, FAMILIES};
 pub use plan::{SweepJob, SweepKind, SweepPlan};
 pub use workload::{

@@ -1,0 +1,245 @@
+//! Run-level parallelism: a pool that maps independent *simulation runs*
+//! over per-worker state, streaming results back in input order.
+//!
+//! [`SweepExecutor`](crate::sweep::SweepExecutor) parallelizes the
+//! declarative sweep campaign; the heavyweight ladder paths —
+//! `repro contend`, the Fig. 8 / §6.1 figures, every calibrate objective
+//! evaluation — instead loop over `run_contention`/`run_program` calls
+//! whose work items are not [`Workload`](crate::sweep::Workload) points.
+//! [`RunPool`] is the thin generic layer those paths share: each work
+//! item is one full multicore run, each worker owns a
+//! `(Machine, RunArena)` it builds once and reuses (reset-per-run, like
+//! the executor's machine pool), and completed results are released to a
+//! sink strictly in input order while later items are still running.
+//!
+//! ## Invariants
+//!
+//! * **Bit-identical to serial.** Every run owns a disjoint machine in
+//!   pure virtual time, workers only reset-and-reuse state whose reuse is
+//!   already pinned bit-identical ([`Machine::reset`],
+//!   [`RunArena`](crate::sim::multicore::RunArena)), and the sink sees
+//!   results in input order — so any worker count produces byte-identical
+//!   reports (pinned by `tests/run_parallel.rs`).
+//! * **Streaming order.** The sink runs on the submitting thread and is
+//!   called exactly once per item, in item order, as soon as the item and
+//!   all earlier items have finished — a long ladder emits its first rows
+//!   while the tail still simulates, and buffered memory is bounded by
+//!   the out-of-order window, not the grid.
+//! * **Worker count 1 runs inline** (no threads spawned, no pinning) —
+//!   the retained serial path the golden tests compare against.
+//!
+//! Panics in `work` are *not* isolated here — they propagate on scope
+//! join exactly as in a serial loop. Callers wanting per-item isolation
+//! (the figures) wrap their `work` body in `catch_unwind` and rebuild the
+//! worker state they may have poisoned.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// A pool of run-level workers; see the module docs. Cheap to build —
+/// threads are spawned per [`RunPool::run_streaming`] call and joined
+/// before it returns.
+#[derive(Debug, Clone, Copy)]
+pub struct RunPool {
+    threads: usize,
+    pin: bool,
+}
+
+impl RunPool {
+    /// A pool with an explicit worker count (clamped to ≥ 1). Workers are
+    /// not pinned; see [`RunPool::pinned`].
+    pub fn new(threads: usize) -> RunPool {
+        RunPool { threads: threads.max(1), pin: false }
+    }
+
+    /// Opt into pinning each worker to a CPU (worker i → CPU i, wrapped)
+    /// via [`crate::util::affinity`] — a no-op off Linux and with a
+    /// single worker.
+    pub fn pinned(mut self, pin: bool) -> RunPool {
+        self.pin = pin;
+        self
+    }
+
+    /// The CLI's pool: `RUN_THREADS` (set by `--run-threads`) if valid,
+    /// else [`crate::sweep::default_threads`]; pinning per `PIN_WORKERS=1`
+    /// (set by `--pin-workers`).
+    pub fn with_defaults() -> RunPool {
+        let threads = std::env::var("RUN_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&n: &usize| n >= 1)
+            .unwrap_or_else(crate::sweep::default_threads);
+        let pin = std::env::var("PIN_WORKERS").map(|v| v == "1").unwrap_or(false);
+        RunPool { threads, pin }
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `work` over every item on up to [`RunPool::threads`] workers,
+    /// each owning one `make_worker()` state, and hand each result to
+    /// `sink(index, result)` on this thread in strict input order as
+    /// completions allow (see the module invariants).
+    pub fn run_streaming<T, W, R>(
+        &self,
+        items: &[T],
+        make_worker: impl Fn() -> W + Sync,
+        work: impl Fn(&mut W, &T) -> R + Sync,
+        mut sink: impl FnMut(usize, R),
+    ) where
+        T: Sync,
+        R: Send,
+    {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let workers = self.threads.min(n);
+        if workers == 1 {
+            let mut state = make_worker();
+            for (i, item) in items.iter().enumerate() {
+                sink(i, work(&mut state, item));
+            }
+            return;
+        }
+
+        let pin = self.pin;
+        let cursor = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<(usize, R)>();
+        std::thread::scope(|s| {
+            for wid in 0..workers {
+                let tx = tx.clone();
+                let cursor = &cursor;
+                let make_worker = &make_worker;
+                let work = &work;
+                s.spawn(move || {
+                    if pin {
+                        let _ = crate::util::affinity::pin_current_thread(wid);
+                    }
+                    let mut state = make_worker();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        if tx.send((i, work(&mut state, &items[i]))).is_err() {
+                            break;
+                        }
+                    }
+                });
+            }
+            drop(tx);
+            // In-order release: park out-of-order completions, drain the
+            // contiguous prefix to the sink.
+            let mut parked: Vec<Option<R>> = (0..n).map(|_| None).collect();
+            let mut next = 0usize;
+            for (i, r) in rx {
+                parked[i] = Some(r);
+                while next < n {
+                    match parked[next].take() {
+                        Some(r) => {
+                            sink(next, r);
+                            next += 1;
+                        }
+                        None => break,
+                    }
+                }
+            }
+        });
+    }
+
+    /// [`RunPool::run_streaming`] collecting the results in input order.
+    pub fn map<T, W, R>(
+        &self,
+        items: &[T],
+        make_worker: impl Fn() -> W + Sync,
+        work: impl Fn(&mut W, &T) -> R + Sync,
+    ) -> Vec<R>
+    where
+        T: Sync,
+        R: Send,
+    {
+        let mut out = Vec::with_capacity(items.len());
+        self.run_streaming(items, make_worker, work, |_, r| out.push(r));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slow_square(x: &u64) -> u64 {
+        // Uneven, deterministic work so completions genuinely arrive out
+        // of input order under contention.
+        let mut acc = 0u64;
+        for i in 0..(x % 7) * 4000 {
+            acc = acc.wrapping_add(i).rotate_left(1);
+        }
+        std::hint::black_box(acc);
+        x * x
+    }
+
+    #[test]
+    fn map_matches_serial_for_any_worker_count() {
+        let items: Vec<u64> = (0..67).collect();
+        let serial: Vec<u64> = items.iter().map(slow_square).collect();
+        for threads in [1, 2, 4, 7] {
+            let got = RunPool::new(threads).map(&items, || (), |_, x| slow_square(x));
+            assert_eq!(got, serial, "worker count {threads}");
+        }
+    }
+
+    #[test]
+    fn streaming_sink_sees_input_order() {
+        let items: Vec<u64> = (0..40).collect();
+        let mut seen = Vec::new();
+        RunPool::new(4).run_streaming(
+            &items,
+            || (),
+            |_, x| slow_square(x),
+            |i, r| seen.push((i, r)),
+        );
+        let indices: Vec<usize> = seen.iter().map(|&(i, _)| i).collect();
+        assert_eq!(indices, (0..items.len()).collect::<Vec<_>>());
+        assert!(seen.iter().all(|&(i, r)| r == items[i] * items[i]));
+    }
+
+    #[test]
+    fn empty_items_is_a_noop() {
+        let mut calls = 0;
+        RunPool::new(4).run_streaming(&[] as &[u64], || (), |_, x| *x, |_, _| calls += 1);
+        assert_eq!(calls, 0);
+    }
+
+    #[test]
+    fn each_worker_builds_state_once_and_reuses_it() {
+        // The worker state is a counter of runs on that worker; the sum
+        // over all results must equal the item count (every item ran on
+        // exactly one worker's state).
+        let items: Vec<u64> = (0..32).collect();
+        let runs: Vec<u64> = RunPool::new(3).map(
+            &items,
+            || 0u64,
+            |count, _| {
+                *count += 1;
+                1
+            },
+        );
+        assert_eq!(runs.iter().sum::<u64>(), items.len() as u64);
+    }
+
+    #[test]
+    fn clamps_zero_threads_to_one() {
+        assert_eq!(RunPool::new(0).threads(), 1);
+    }
+
+    #[test]
+    fn pinned_pool_is_bit_identical_to_unpinned() {
+        let items: Vec<u64> = (0..24).collect();
+        let plain = RunPool::new(2).map(&items, || (), |_, x| slow_square(x));
+        let pinned = RunPool::new(2).pinned(true).map(&items, || (), |_, x| slow_square(x));
+        assert_eq!(plain, pinned);
+    }
+}

@@ -1,0 +1,63 @@
+//! CPU affinity shim for run-pool worker pinning (`--pin-workers`).
+//!
+//! On Linux this calls `sched_setaffinity(2)` directly (declared here —
+//! glibc is already linked by std, and no libc crate is vendored in the
+//! offline image); everywhere else it compiles to a no-op that reports
+//! pinning as unavailable. Pinning is strictly an opt-in wall-clock
+//! stabilizer: simulated results are in virtual time and bit-identical
+//! with or without it, so a failed or unsupported pin is never an error.
+
+/// Pin the calling thread to one CPU, wrapping `cpu` modulo the number of
+/// available CPUs. Returns whether the pin took effect (`false` on
+/// unsupported platforms or if the syscall fails, e.g. under a restricted
+/// cpuset).
+#[cfg(target_os = "linux")]
+pub fn pin_current_thread(cpu: usize) -> bool {
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cpu = cpu % n.max(1);
+    // A 1024-bit cpu_set_t, the glibc default size.
+    let mut mask = [0u64; 16];
+    if cpu >= mask.len() * 64 {
+        return false;
+    }
+    mask[cpu / 64] = 1u64 << (cpu % 64);
+    // pid 0 = the calling thread.
+    unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+}
+
+/// Non-Linux platforms: pinning is unavailable; always `false`.
+#[cfg(not(target_os = "linux"))]
+pub fn pin_current_thread(cpu: usize) -> bool {
+    let _ = cpu;
+    false
+}
+
+/// Whether this build can pin threads at all (the `--pin-workers` smoke
+/// asserts the flag degrades to a no-op elsewhere).
+pub fn pinning_supported() -> bool {
+    cfg!(target_os = "linux")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pin_reports_platform_support() {
+        // Pin from a scratch thread so the test runner's thread keeps its
+        // original mask either way.
+        let ok = std::thread::spawn(|| pin_current_thread(0)).join().unwrap();
+        if !pinning_supported() {
+            assert!(!ok, "non-Linux pinning must be a no-op");
+        }
+    }
+
+    #[test]
+    fn pin_wraps_out_of_range_cpus() {
+        let ok = std::thread::spawn(|| pin_current_thread(usize::MAX - 7)).join().unwrap();
+        assert_eq!(ok, std::thread::spawn(|| pin_current_thread(0)).join().unwrap());
+    }
+}

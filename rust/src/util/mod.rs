@@ -5,6 +5,7 @@
 //! (a PRNG, summary statistics, a property-testing helper, table/CSV
 //! formatting, CLI parsing) are implemented here.
 
+pub mod affinity;
 pub mod cli;
 pub mod fxhash;
 pub mod csv;

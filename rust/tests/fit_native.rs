@@ -163,7 +163,14 @@ fn native_fit_produces_table2_theta_offline_for_all_arches() {
 /// Reduced calibration search for test runtimes (the CLI default uses
 /// 2000 ops/thread and a finer schedule).
 fn test_calibration() -> CalibrationCfg {
-    CalibrationCfg { ops_per_thread: 200, lo: 0.02, hi: 0.98, coarse: 7, refine: 10 }
+    CalibrationCfg {
+        ops_per_thread: 200,
+        lo: 0.02,
+        hi: 0.98,
+        coarse: 7,
+        refine: 10,
+        run_threads: 1,
+    }
 }
 
 /// The calibrator is bit-deterministic and lands every architecture's

@@ -1,0 +1,291 @@
+//! Run-level parallelism golden tests: every ladder that now runs on a
+//! [`RunPool`] must be *bit-identical* to the retained serial path for
+//! any worker count — parallelism is a wall-clock optimization, never a
+//! semantic one. Also pins arena reuse (a worker's [`RunArena`] carried
+//! across runs) against fresh-arena runs, and the `--pin-workers` no-op
+//! contract off Linux.
+
+use atomics_repro::arch;
+use atomics_repro::atomics::OpKind;
+use atomics_repro::bench::contention::{
+    run_model, run_model_in, ContentionModel, ContentionPoint,
+};
+use atomics_repro::bench::locks::{run_lock, run_lock_in, LockKind, LockResult};
+use atomics_repro::data::fig8_targets::targets_for;
+use atomics_repro::fit::calibrate::{calibrate, CalibrationCfg};
+use atomics_repro::sim::{Machine, RunArena};
+use atomics_repro::sweep::RunPool;
+use atomics_repro::util::affinity;
+
+/// Small-but-contended op count: large enough to exercise hand-offs,
+/// serialization slots, and CAS failures on every topology, small enough
+/// that the full matrix (4 arches × 3 pool widths × ladders) stays fast.
+const OPS: usize = 150;
+
+fn assert_point_bits_eq(a: &ContentionPoint, b: &ContentionPoint, ctx: &str) {
+    assert_eq!(a.threads, b.threads, "{ctx}: threads");
+    assert_eq!(a.op, b.op, "{ctx}: op");
+    assert_eq!(
+        a.bandwidth_gbs.to_bits(),
+        b.bandwidth_gbs.to_bits(),
+        "{ctx}: bandwidth {} vs {}",
+        a.bandwidth_gbs,
+        b.bandwidth_gbs
+    );
+    assert_eq!(
+        a.mean_latency_ns.to_bits(),
+        b.mean_latency_ns.to_bits(),
+        "{ctx}: mean latency"
+    );
+    assert_eq!(a.elapsed_ns.to_bits(), b.elapsed_ns.to_bits(), "{ctx}: elapsed");
+    assert_eq!(a.per_thread, b.per_thread, "{ctx}: per-thread stats");
+}
+
+fn assert_lock_bits_eq(a: &LockResult, b: &LockResult, ctx: &str) {
+    assert_eq!(a.kind, b.kind, "{ctx}: kind");
+    assert_eq!(a.threads, b.threads, "{ctx}: threads");
+    assert_eq!(a.acquisitions, b.acquisitions, "{ctx}: acquisitions");
+    assert_eq!(a.attempts, b.attempts, "{ctx}: attempts");
+    assert_eq!(a.failed_attempts, b.failed_attempts, "{ctx}: failed attempts");
+    assert_eq!(a.spin_reads, b.spin_reads, "{ctx}: spin reads");
+    assert_eq!(a.elapsed_ns.to_bits(), b.elapsed_ns.to_bits(), "{ctx}: elapsed");
+    assert_eq!(a.acq_per_sec.to_bits(), b.acq_per_sec.to_bits(), "{ctx}: acq/s");
+    assert_eq!(a.per_thread, b.per_thread, "{ctx}: per-thread stats");
+}
+
+/// Contend ladders (the `repro contend` / Fig. 8 unit): the machine-
+/// accurate runs from a RunPool of 1, 2, and 4 workers are bit-identical
+/// to a plain serial loop over one reused machine, on all four arches.
+#[test]
+fn contend_bit_identical_across_pool_widths() {
+    for cfg in arch::all() {
+        let counts = atomics_repro::bench::contention::paper_thread_counts(&cfg);
+        let items: Vec<(OpKind, usize)> = [OpKind::Cas, OpKind::Faa, OpKind::Write]
+            .into_iter()
+            .flat_map(|op| counts.iter().map(move |&n| (op, n)))
+            .collect();
+
+        // retained serial path: one machine, fresh arena per run
+        let mut m = Machine::new(cfg.clone());
+        let serial: Vec<ContentionPoint> = items
+            .iter()
+            .map(|&(op, n)| run_model(&mut m, ContentionModel::MachineAccurate, n, op, OPS))
+            .collect();
+
+        for workers in [1usize, 2, 4] {
+            let got = RunPool::new(workers).map(
+                &items,
+                || (Machine::new(cfg.clone()), RunArena::new()),
+                |(m, arena), &(op, n)| {
+                    run_model_in(m, arena, ContentionModel::MachineAccurate, n, op, OPS)
+                },
+            );
+            assert_eq!(got.len(), serial.len());
+            for (i, (s, p)) in serial.iter().zip(&got).enumerate() {
+                let (op, n) = items[i];
+                assert_point_bits_eq(
+                    s,
+                    p,
+                    &format!("{} {:?} threads={n} workers={workers}", cfg.name, op),
+                );
+            }
+        }
+    }
+}
+
+/// Lock/queue ladders (§6.1): same contract, over every lock kind. Kinds
+/// below their minimum thread count return None identically on both
+/// paths.
+#[test]
+fn locks_bit_identical_across_pool_widths() {
+    for cfg in arch::all() {
+        let counts = [1usize, 2, 4];
+        let items: Vec<(LockKind, usize)> = LockKind::ALL
+            .iter()
+            .flat_map(|&k| counts.iter().map(move |&n| (k, n)))
+            .collect();
+
+        let mut m = Machine::new(cfg.clone());
+        let serial: Vec<Option<LockResult>> =
+            items.iter().map(|&(k, n)| run_lock(&mut m, k, n, 30)).collect();
+
+        for workers in [1usize, 2, 4] {
+            let got = RunPool::new(workers).map(
+                &items,
+                || (Machine::new(cfg.clone()), RunArena::new()),
+                |(m, arena), &(k, n)| run_lock_in(m, arena, k, n, 30),
+            );
+            for (i, (s, p)) in serial.iter().zip(&got).enumerate() {
+                let (k, n) = items[i];
+                let ctx = format!("{} {} threads={n} workers={workers}", cfg.name, k.label());
+                match (s, p) {
+                    (None, None) => {}
+                    (Some(a), Some(b)) => assert_lock_bits_eq(a, b, &ctx),
+                    _ => panic!("{ctx}: Some/None mismatch"),
+                }
+            }
+        }
+    }
+}
+
+/// The calibrator (coarse grid + reporting pass on the pool): fitted
+/// overlap, residual, evaluation count, and every reported point are
+/// bit-identical across run-thread counts on all four arches.
+#[test]
+fn calibrate_bit_identical_across_run_threads() {
+    for cfg in arch::all() {
+        let targets = targets_for(cfg.name);
+        assert!(!targets.is_empty(), "{}: no Fig. 8 targets", cfg.name);
+        let ccfg = |run_threads: usize| CalibrationCfg {
+            ops_per_thread: 120,
+            lo: 0.05,
+            hi: 0.95,
+            coarse: 5,
+            refine: 5,
+            run_threads,
+        };
+        let base = calibrate(&cfg, &targets, &ccfg(1)).unwrap();
+        for workers in [2usize, 4] {
+            let r = calibrate(&cfg, &targets, &ccfg(workers)).unwrap();
+            assert_eq!(
+                base.fitted_overlap.to_bits(),
+                r.fitted_overlap.to_bits(),
+                "{} workers={workers}: fitted overlap {} vs {}",
+                cfg.name,
+                base.fitted_overlap,
+                r.fitted_overlap
+            );
+            assert_eq!(
+                base.mean_rel_residual.to_bits(),
+                r.mean_rel_residual.to_bits(),
+                "{} workers={workers}: residual",
+                cfg.name
+            );
+            assert_eq!(base.evaluations, r.evaluations, "{}: evaluations", cfg.name);
+            assert_eq!(base.points.len(), r.points.len());
+            for (a, b) in base.points.iter().zip(&r.points) {
+                assert_eq!(a.op, b.op);
+                assert_eq!(a.threads, b.threads);
+                assert_eq!(a.target_gbs.to_bits(), b.target_gbs.to_bits());
+                assert_eq!(
+                    a.achieved_gbs.to_bits(),
+                    b.achieved_gbs.to_bits(),
+                    "{} workers={workers}: achieved at {:?}x{}",
+                    cfg.name,
+                    a.op,
+                    a.threads
+                );
+                assert_eq!(a.from_paper, b.from_paper);
+            }
+        }
+    }
+}
+
+/// Arena reuse is unobservable: a single arena carried across a mixed
+/// run sequence (different thread counts, ops, lock kinds — each run
+/// larger and smaller than the last, so both grow and shrink paths hit)
+/// produces bit-identical results to a fresh arena per run.
+#[test]
+fn arena_reuse_bit_identical_to_fresh() {
+    for cfg in [arch::haswell(), arch::bulldozer()] {
+        let mut m = Machine::new(cfg.clone());
+        let mut arena = RunArena::new();
+        let seq = [
+            (OpKind::Cas, 4usize),
+            (OpKind::Faa, 2),
+            (OpKind::Write, 4),
+            (OpKind::Cas, 1),
+            (OpKind::Cas, 4),
+        ];
+        for &(op, n) in &seq {
+            let reused =
+                run_model_in(&mut m, &mut arena, ContentionModel::MachineAccurate, n, op, OPS);
+            let fresh = run_model_in(
+                &mut m,
+                &mut RunArena::new(),
+                ContentionModel::MachineAccurate,
+                n,
+                op,
+                OPS,
+            );
+            assert_point_bits_eq(
+                &reused,
+                &fresh,
+                &format!("{} {:?} threads={n} (reused arena)", cfg.name, op),
+            );
+        }
+        // and across engines: the program scheduler shares the same arena
+        for &(k, n) in &[(LockKind::TasSpin, 4usize), (LockKind::Mpsc, 2), (LockKind::Ticket, 4)]
+        {
+            let reused = run_lock_in(&mut m, &mut arena, k, n, 25);
+            let fresh = run_lock_in(&mut m, &mut RunArena::new(), k, n, 25);
+            match (&reused, &fresh) {
+                (Some(a), Some(b)) => assert_lock_bits_eq(
+                    a,
+                    b,
+                    &format!("{} {} threads={n} (reused arena)", cfg.name, k.label()),
+                ),
+                (None, None) => {}
+                _ => panic!("{} {}: Some/None mismatch", cfg.name, k.label()),
+            }
+        }
+    }
+}
+
+/// A full report through the pool: `locks_report_with` renders the same
+/// bytes at 1 and 4 workers (tables, stats tables, elision lines — the
+/// whole §6.1 text).
+#[test]
+fn locks_report_renders_identical_bytes_across_pool_widths() {
+    let cfg = arch::haswell();
+    let kinds = LockKind::ALL.to_vec();
+    let counts = [1usize, 2, 4];
+    let one = atomics_repro::report::figures::locks_report_with(
+        &RunPool::new(1),
+        &cfg,
+        &kinds,
+        &counts,
+        25,
+        true,
+    );
+    let four = atomics_repro::report::figures::locks_report_with(
+        &RunPool::new(4),
+        &cfg,
+        &kinds,
+        &counts,
+        25,
+        true,
+    );
+    assert!(!one.is_empty());
+    assert_eq!(one, four, "locks report must not depend on pool width");
+}
+
+/// `--pin-workers` smoke: results are bit-identical with pinning
+/// requested, and on non-Linux platforms the pin itself reports `false`
+/// (a documented no-op) while everything still runs.
+#[test]
+fn pin_workers_is_a_harmless_opt_in() {
+    let cfg = arch::haswell();
+    let counts = [1usize, 2, 4];
+    let plain = RunPool::new(2).map(
+        &counts,
+        || (Machine::new(cfg.clone()), RunArena::new()),
+        |(m, arena), &n| {
+            run_model_in(m, arena, ContentionModel::MachineAccurate, n, OpKind::Faa, OPS)
+        },
+    );
+    let pinned = RunPool::new(2).pinned(true).map(
+        &counts,
+        || (Machine::new(cfg.clone()), RunArena::new()),
+        |(m, arena), &n| {
+            run_model_in(m, arena, ContentionModel::MachineAccurate, n, OpKind::Faa, OPS)
+        },
+    );
+    for (i, (a, b)) in plain.iter().zip(&pinned).enumerate() {
+        assert_point_bits_eq(a, b, &format!("pinned vs plain, item {i}"));
+    }
+    let pin_took = std::thread::spawn(|| affinity::pin_current_thread(0)).join().unwrap();
+    if !affinity::pinning_supported() {
+        assert!(!pin_took, "pinning must be a no-op off Linux");
+    }
+}

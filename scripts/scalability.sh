@@ -1,0 +1,64 @@
+#!/usr/bin/env bash
+# Run-thread scalability ladder for the machine-accurate contend grid:
+# times `repro contend` (CAS, FAA, write over the paper's thread ladder)
+# at each run-pool width and prints points/s per rung, so run-level
+# scaling is visible — and regressions audible — without the full bench.
+#
+#   scripts/scalability.sh [--arch NAME] [--ops N] [--rungs "1 2 4 8"]
+#
+#   --arch   architecture to sweep (default ivybridge)
+#   --ops    ops per thread per run (default 600)
+#   --rungs  run-thread counts to time (default "1 2 4 N" where N = nproc)
+#   BIN      override the repro binary (default target/release/repro,
+#            built on demand)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+ARCH=ivybridge
+OPS=600
+RUNGS=""
+while [ $# -gt 0 ]; do
+    case "$1" in
+        --arch)  ARCH="$2";  shift 2 ;;
+        --ops)   OPS="$2";   shift 2 ;;
+        --rungs) RUNGS="$2"; shift 2 ;;
+        *) echo "unknown argument '$1'" >&2; exit 2 ;;
+    esac
+done
+
+if [ -z "$RUNGS" ]; then
+    N=$( (command -v nproc >/dev/null && nproc) || echo 4 )
+    RUNGS="1 2 4"
+    case " $RUNGS " in *" $N "*) ;; *) RUNGS="$RUNGS $N" ;; esac
+fi
+
+BIN="${BIN:-target/release/repro}"
+if [ ! -x "$BIN" ]; then
+    echo "building $BIN ..." >&2
+    cargo build --release
+fi
+
+# Points per contend invocation: the paper thread ladder is derived from
+# the topology (powers of two below the core count, plus the count).
+case "$ARCH" in
+    haswell)    PER_OP=3 ;;   # 1 2 4
+    ivybridge)  PER_OP=6 ;;   # 1 2 4 8 16 24
+    bulldozer)  PER_OP=6 ;;   # 1 2 4 8 16 32
+    xeonphi)    PER_OP=7 ;;   # 1 2 4 8 16 32 61
+    *) echo "unknown arch '$ARCH'" >&2; exit 2 ;;
+esac
+POINTS=$((PER_OP * 3))  # cas + faa + write
+
+echo "contend scalability — $ARCH, $OPS ops/thread, $POINTS whole runs per rung"
+for R in $RUNGS; do
+    START=$(date +%s.%N)
+    for OP in cas faa write; do
+        "$BIN" contend --arch "$ARCH" --op "$OP" --ops "$OPS" \
+            --run-threads "$R" >/dev/null
+    done
+    END=$(date +%s.%N)
+    echo "$START $END $R $POINTS" | awk '{
+        dt = $2 - $1; if (dt <= 0) dt = 1e-9;
+        printf "  run-threads %-3s %8.2fs   %7.2f points/s\n", $3, dt, $4 / dt
+    }'
+done
