@@ -72,6 +72,10 @@ echo "== smoke: run-level parallelism (--run-threads run pool) =="
 ./target/release/repro contend --arch haswell --op faa --ops 200 --run-threads 2
 ./target/release/repro calibrate --arch haswell --ops 400 --run-threads 2
 
+echo "== smoke: routed interconnect fabric (--topology routed) =="
+./target/release/repro contend --arch phi --op faa --ops 200 --topology routed --stats
+./target/release/repro calibrate --arch phi --topology routed --ops 300 --run-threads 2
+
 echo "== smoke: scripts/scalability.sh (2-rung contend ladder) =="
 BIN=./target/release/repro scripts/scalability.sh --arch haswell --ops 300 --rungs "1 2"
 

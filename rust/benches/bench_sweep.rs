@@ -5,12 +5,14 @@
 //! thread ladders including the Phi's 61-core point), the native
 //! Table 2 fit over all four architectures (dataset collection + the
 //! closed-form solve), the contention-plateau calibrator on the run
-//! pool, and the run-level contend grid at 1 vs. min(4, cores) run-pool
-//! workers (bit-equality asserted between rungs), prints the speedups,
+//! pool, the run-level contend grid at 1 vs. min(4, cores) run-pool
+//! workers (bit-equality asserted between rungs), and the routed-fabric
+//! contend grid (link-level interconnect pricing), prints the speedups,
 //! and writes `BENCH_sweep.json` so future PRs can track sweep, contend,
-//! locks, fit, and calibrate throughput (gated by
-//! `scripts/bench_gate.py`; `calibrate_points_per_sec` ships
-//! unadjudicated until the next baseline refresh).
+//! locks, fit, calibrate, and fabric throughput (gated by
+//! `scripts/bench_gate.py`; `calibrate_points_per_sec` and
+//! `contend_fabric_points_per_sec` ship unadjudicated until the next
+//! baseline refresh).
 //! Every grid gets one untimed warmup pass before its timed pass, so the
 //! numbers exclude first-touch page faults and lazy-init costs.
 //! Uses the in-tree harness (criterion is not vendored offline).
@@ -231,6 +233,51 @@ fn main() {
         calibrate_runs as f64 / (calibrate_ms / 1e3).max(1e-9)
     );
 
+    // Routed-fabric contend grid: the same whole-run unit as the run-pool
+    // section but priced through the link-level interconnect fabric
+    // (`repro contend --topology routed`), FAA on all four testbeds. The
+    // "contend_fabric_points_per_sec" key is new and unadjudicated until
+    // the next baseline refresh.
+    let fabric_cfgs: Vec<_> = arch::all()
+        .into_iter()
+        .map(|mut cfg| {
+            cfg.fabric = atomics_repro::sim::Fabric::routed_for(&cfg);
+            cfg
+        })
+        .collect();
+    let fabric_items: Vec<(usize, usize)> = fabric_cfgs
+        .iter()
+        .enumerate()
+        .flat_map(|(ai, cfg)| paper_thread_counts(cfg).into_iter().map(move |n| (ai, n)))
+        .collect();
+    let fabric_ops = if std::env::var("BENCH_FAST").is_ok() { 300 } else { OPS_PER_THREAD };
+    let run_fabric = || -> f64 {
+        let t0 = Instant::now();
+        let vals = RunPool::new(runpool_workers).map(
+            &fabric_items,
+            || {
+                let machines: Vec<Option<Machine>> =
+                    (0..fabric_cfgs.len()).map(|_| None).collect();
+                (machines, RunArena::new())
+            },
+            |(machines, arena), &(ai, n)| {
+                let m =
+                    machines[ai].get_or_insert_with(|| Machine::new(fabric_cfgs[ai].clone()));
+                run_model_in(m, arena, ContentionModel::MachineAccurate, n, OpKind::Faa, fabric_ops)
+                    .bandwidth_gbs
+            },
+        );
+        black_box(vals);
+        t0.elapsed().as_secs_f64() * 1e3
+    };
+    black_box(run_fabric()); // warmup
+    let fabric_ms = run_fabric();
+    let fabric_points = fabric_items.len();
+    println!(
+        "  contend fabric   {fabric_ms:>10.1} ms   ({fabric_points} routed points, {:.1} points/s, {runpool_workers} workers)",
+        fabric_points as f64 / (fabric_ms / 1e3).max(1e-9)
+    );
+
     let json = format!(
         "{{\"bench\":\"sweep\",\"series\":{},\"points\":{},\"threads\":{},\
          \"single_ms\":{:.1},\"parallel_ms\":{:.1},\"speedup\":{:.3},\
@@ -241,6 +288,8 @@ fn main() {
          \"calibrate_runs\":{},\"calibrate_ms\":{:.1},\"calibrate_points_per_sec\":{:.1},\
          \"contend_runpool_workers\":{},\"contend_runpool_1_ms\":{:.1},\
          \"contend_runpool_n_ms\":{:.1},\"contend_runpool_scaling\":{:.3},\
+         \"contend_fabric_points\":{},\"contend_fabric_ms\":{:.1},\
+         \"contend_fabric_points_per_sec\":{:.1},\
          \"note\":\"one untimed warmup pass per grid before the timed pass\"}}\n",
         jobs.len(),
         n_points,
@@ -264,7 +313,10 @@ fn main() {
         runpool_workers,
         runpool_1_ms,
         runpool_n_ms,
-        runpool_scaling
+        runpool_scaling,
+        fabric_points,
+        fabric_ms,
+        fabric_points as f64 / (fabric_ms / 1e3).max(1e-9)
     );
     match std::fs::File::create("BENCH_sweep.json").and_then(|mut f| f.write_all(json.as_bytes()))
     {

@@ -8,6 +8,7 @@
 //! -line atomics always broadcast invalidations to remote dies (§5.1.2).
 
 use crate::sim::config::*;
+use crate::sim::fabric::Fabric;
 use crate::sim::mechanisms::Mechanisms;
 use crate::sim::protocol::ProtocolKind;
 use crate::sim::timing::{Level, LocalityClass, OpMatch, OverheadTable, StateClass, Timing};
@@ -68,6 +69,9 @@ pub fn bulldozer() -> MachineConfig {
         // and half the round-robin hand-offs are already cheap intra-
         // module SharedL2 transfers, so little overlap is left to claim.
         handoff_overlap: 0.22,
+        // Scalar hand-off pricing by default; `--topology routed` opts
+        // into the die-to-die HyperTransport fabric (sim::fabric).
+        fabric: Fabric::Scalar,
         cas128_penalty: (20.0, 5.0), // §5.3
         unaligned: UnalignedCfg { bus_lock_ns: 560.0 },
         frequency_mhz: 2100,

@@ -5,6 +5,7 @@
 
 use crate::atomics::OpKind;
 use crate::sim::config::*;
+use crate::sim::fabric::Fabric;
 use crate::sim::mechanisms::Mechanisms;
 use crate::sim::protocol::ProtocolKind;
 use crate::sim::timing::{Level, LocalityClass, OpMatch, OverheadTable, StateClass, Timing};
@@ -59,6 +60,9 @@ pub fn haswell() -> MachineConfig {
         // Fitted by `repro calibrate --arch haswell` against the Fig. 8
         // plateau targets (data::fig8_targets); see EXPERIMENTS.md.
         handoff_overlap: 0.70,
+        // Scalar hand-off pricing by default; `--topology routed` opts
+        // into the ring-bus fabric (sim::fabric).
+        fabric: Fabric::Scalar,
         cas128_penalty: (0.0, 0.0),      // §5.3: identical on Intel
         unaligned: UnalignedCfg { bus_lock_ns: 480.0 }, // §5.7: CAS up to ≈750ns
         frequency_mhz: 3400,

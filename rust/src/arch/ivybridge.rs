@@ -6,6 +6,7 @@
 
 use crate::atomics::OpKind;
 use crate::sim::config::*;
+use crate::sim::fabric::Fabric;
 use crate::sim::mechanisms::Mechanisms;
 use crate::sim::protocol::ProtocolKind;
 use crate::sim::timing::{Level, LocalityClass, OpMatch, OverheadTable, StateClass, Timing};
@@ -61,6 +62,9 @@ pub fn ivybridge() -> MachineConfig {
         // Fitted by `repro calibrate --arch ivybridge` against the Fig. 8
         // plateau targets (data::fig8_targets); see EXPERIMENTS.md.
         handoff_overlap: 0.64,
+        // Scalar hand-off pricing by default; `--topology routed` opts
+        // into the two-ring + QPI fabric (sim::fabric).
+        fabric: Fabric::Scalar,
         cas128_penalty: (0.0, 0.0),
         unaligned: UnalignedCfg { bus_lock_ns: 520.0 },
         frequency_mhz: 2700,

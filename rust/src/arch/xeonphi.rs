@@ -9,6 +9,7 @@
 
 use crate::atomics::OpKind;
 use crate::sim::config::*;
+use crate::sim::fabric::Fabric;
 use crate::sim::mechanisms::Mechanisms;
 use crate::sim::protocol::ProtocolKind;
 use crate::sim::timing::{Level, LocalityClass, OpMatch, OverheadTable, Timing};
@@ -60,6 +61,11 @@ pub fn xeonphi() -> MachineConfig {
         // the Phi sustains its comparatively high contended-FAA plateau
         // despite the 197.6 ns cache-to-cache transfer.
         handoff_overlap: 0.95,
+        // Scalar hand-off pricing by default — the scalar plateau is
+        // capped at the uncontended rate, so Fig. 8c's ~3 GB/s raw
+        // plateau needs `--topology routed`: the 61-stop directory ring
+        // (sim::fabric) pipelines in-flight FAA hand-offs.
+        fabric: Fabric::Scalar,
         cas128_penalty: (0.0, 0.0),
         unaligned: UnalignedCfg { bus_lock_ns: 900.0 },
         frequency_mhz: 1238,

@@ -24,7 +24,7 @@ use crate::atomics::OpKind;
 use crate::sim::event::run_contention as run_analytic;
 pub use crate::sim::event::ContentionResult;
 use crate::sim::multicore::{agg, run_contention_in, ContentionStats, RunArena};
-use crate::sim::{Machine, MachineConfig};
+use crate::sim::{LinkStats, Machine, MachineConfig};
 
 /// Per-thread operation count used by the figure sweeps (large enough that
 /// the warm-up transient is negligible).
@@ -72,6 +72,9 @@ pub struct ContentionPoint {
     /// Per-thread coherence stats — empty for the analytic model, which
     /// cannot attribute costs to threads.
     pub per_thread: Vec<ContentionStats>,
+    /// Per-link fabric traffic — non-empty only for machine-accurate
+    /// runs priced through a routed fabric ([`crate::sim::fabric`]).
+    pub links: Vec<LinkStats>,
 }
 
 impl ContentionPoint {
@@ -141,6 +144,7 @@ pub fn run_model_in(
                 mean_latency_ns: r.mean_latency_ns,
                 elapsed_ns: r.elapsed_ns,
                 per_thread: r.per_thread,
+                links: r.links,
             }
         }
         ContentionModel::Analytic => {
@@ -156,6 +160,7 @@ pub fn run_model_in(
                 mean_latency_ns: r.mean_latency_ns,
                 elapsed_ns: total_bytes / r.bandwidth_gbs.max(f64::MIN_POSITIVE),
                 per_thread: Vec::new(),
+                links: Vec::new(),
             }
         }
     }

@@ -71,6 +71,43 @@ pub fn targets_for(arch_name: &str) -> Vec<Fig8Target> {
     FIG8_TARGETS.iter().filter(|t| t.arch == arch_name).copied().collect()
 }
 
+/// Plateau targets for fitting the *routed fabric*'s injection leg
+/// ([`crate::sim::fabric::RoutedFabric::inject_ns`], via
+/// `fit::calibrate::calibrate_fabric`). Two deliberate differences from
+/// [`FIG8_TARGETS`]:
+///
+/// * **Xeon Phi FAA uses the paper's raw ~3 GB/s plateau** — the number
+///   the scalar model provably cannot reach (it sits *above* the Phi's
+///   uncontended FAA rate). The routed fabric can: pipelined hand-offs
+///   bound the plateau by `8 / (E(FAA) + inject)` instead of the
+///   uncontended latency, and `8 / E(FAA) = 8 / 2.4 ≈ 3.33 GB/s > 3.0`.
+/// * **Xeon Phi CAS is excluded.** The FAA and CAS plateaus imply very
+///   different injection legs (`8/3.0 − 2.4 ≈ 0.27 ns` vs
+///   `8/0.37 − 12.4 ≈ 9.2 ns`), so a joint mean-residual objective is
+///   bimodal with near-tied valleys — a coarse grid can bracket the CAS
+///   valley and the refine pass then converges ~77% off the FAA target.
+///   Phi CAS stays a scalar-model target; the fabric fit is the FAA
+///   story (the pipelining effect CAS's 12.4 ns execute phase drowns).
+///
+/// The other three architectures' CAS/FAA pairs are mutually consistent
+/// (one injection leg satisfies both), so both ops participate.
+pub const FABRIC_TARGETS: &[Fig8Target] = &[
+    Fig8Target { arch: "Ivy Bridge", op: OpKind::Faa, threads: 24, gbs: 0.45, from_paper: true },
+    Fig8Target { arch: "Ivy Bridge", op: OpKind::Cas, threads: 24, gbs: 0.48, from_paper: true },
+    Fig8Target { arch: "Bulldozer", op: OpKind::Faa, threads: 32, gbs: 0.14, from_paper: true },
+    Fig8Target { arch: "Bulldozer", op: OpKind::Cas, threads: 32, gbs: 0.14, from_paper: true },
+    // Fig. 8c, raw: contended FAA on the Phi ring genuinely scales past
+    // its uncontended rate.
+    Fig8Target { arch: "Xeon Phi", op: OpKind::Faa, threads: 61, gbs: 3.0, from_paper: true },
+    Fig8Target { arch: "Haswell", op: OpKind::Faa, threads: 4, gbs: 0.70, from_paper: false },
+    Fig8Target { arch: "Haswell", op: OpKind::Cas, threads: 4, gbs: 0.76, from_paper: false },
+];
+
+/// The routed-fabric calibration targets of one architecture.
+pub fn fabric_targets_for(arch_name: &str) -> Vec<Fig8Target> {
+    FABRIC_TARGETS.iter().filter(|t| t.arch == arch_name).copied().collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,5 +143,30 @@ mod tests {
     #[test]
     fn unknown_arch_has_no_targets() {
         assert!(targets_for("VAX").is_empty());
+        assert!(fabric_targets_for("VAX").is_empty());
+    }
+
+    #[test]
+    fn fabric_targets_stay_below_the_pipelined_execute_bound() {
+        // The routed fabric's plateau is bounded by 8 / E(op) (injection
+        // leg → 0): even Phi FAA's raw 3 GB/s target must clear it.
+        for t in FABRIC_TARGETS {
+            let cfg = arch::by_name(&t.arch.to_lowercase().replace(' ', "")).unwrap();
+            let bound = 8.0 / cfg.timing.exec(t.op).max(f64::MIN_POSITIVE);
+            assert!(t.gbs < bound, "{} {:?}: {} ≥ bound {}", t.arch, t.op, t.gbs, bound);
+            assert_eq!(t.threads, cfg.topology.n_cores);
+        }
+    }
+
+    #[test]
+    fn phi_fabric_targets_are_faa_only_with_the_raw_plateau() {
+        let ts = fabric_targets_for("Xeon Phi");
+        assert_eq!(ts.len(), 1, "joint FAA+CAS fabric objective is bimodal — FAA only");
+        assert_eq!(ts[0].op, OpKind::Faa);
+        assert!(ts[0].gbs > 2.0, "must be the raw above-uncontended plateau");
+        // every other arch keeps both ops
+        for name in ["Haswell", "Ivy Bridge", "Bulldozer"] {
+            assert_eq!(fabric_targets_for(name).len(), 2, "{name}");
+        }
     }
 }

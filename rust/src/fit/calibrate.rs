@@ -29,6 +29,7 @@
 
 use crate::atomics::OpKind;
 use crate::data::fig8_targets::Fig8Target;
+use crate::sim::fabric::{Fabric, RoutedFabric, Topology as _};
 use crate::sim::multicore::{run_contention, run_contention_in, RunArena};
 use crate::sim::{Machine, MachineConfig};
 use crate::sweep::RunPool;
@@ -278,6 +279,250 @@ pub fn calibrate(
     })
 }
 
+/// Search parameters for the routed-fabric fit ([`calibrate_fabric`]).
+/// The knob is [`RoutedFabric::inject_ns`] — the sender's local
+/// injection leg, in nanoseconds. Defaults match `repro calibrate
+/// --topology routed`.
+#[derive(Debug, Clone, Copy)]
+pub struct FabricCalibrationCfg {
+    /// Operations per thread per evaluation.
+    pub ops_per_thread: usize,
+    /// Search interval for the injection leg, ns. The upper end must
+    /// cover Bulldozer (its 0.14 GB/s plateau implies ~32 ns); the lower
+    /// end must reach the Phi FAA kink (~0.27 ns).
+    pub lo_ns: f64,
+    pub hi_ns: f64,
+    /// Coarse-grid evaluations bracketing the minimum (≥ 3).
+    pub coarse: usize,
+    /// Golden-section refinement evaluations inside the bracket.
+    pub refine: usize,
+    /// Run-pool workers (0 = `RunPool::with_defaults`), exactly as in
+    /// [`CalibrationCfg::run_threads`].
+    pub run_threads: usize,
+}
+
+impl Default for FabricCalibrationCfg {
+    fn default() -> Self {
+        FabricCalibrationCfg {
+            ops_per_thread: 2000,
+            lo_ns: 0.05,
+            hi_ns: 60.0,
+            coarse: 17,
+            refine: 28,
+            run_threads: 0,
+        }
+    }
+}
+
+/// Outcome of fitting one architecture's routed-fabric injection leg.
+#[derive(Debug, Clone)]
+pub struct FabricCalibrationReport {
+    pub arch: String,
+    /// The topology's label (e.g. `"phi-ring"`, `"ht-mesh"`).
+    pub topology: String,
+    /// The injection leg minimizing the mean relative residual, ns.
+    pub fitted_inject_ns: f64,
+    /// `Fabric::routed_for`'s uncalibrated default, ns.
+    pub default_inject_ns: f64,
+    /// Per-target achievement at the fitted injection leg.
+    pub points: Vec<CalPoint>,
+    /// Mean of [`CalPoint::rel_residual`] at the fitted injection leg.
+    pub mean_rel_residual: f64,
+    /// Objective evaluations spent, including the final reporting pass.
+    pub evaluations: usize,
+}
+
+/// Plateau bandwidth of `(op, threads)` on `cfg` with the routed fabric
+/// `base` installed at injection leg `inject_ns` — one machine-accurate
+/// contention run on a throwaway machine.
+pub fn fabric_plateau_bandwidth(
+    cfg: &MachineConfig,
+    base: &RoutedFabric,
+    inject_ns: f64,
+    op: OpKind,
+    threads: usize,
+    ops_per_thread: usize,
+) -> f64 {
+    let mut c = cfg.clone();
+    c.fabric = Fabric::Routed(base.clone().with_inject(inject_ns));
+    let mut m = Machine::new(c);
+    run_contention(&mut m, threads, op, ops_per_thread).bandwidth_gbs
+}
+
+/// [`fabric_plateau_bandwidth`] on a pooled machine and arena. Installing
+/// the candidate fabric on the pooled machine is bit-identical to a fresh
+/// machine from an edited config: the fabric only enters the scheduler's
+/// occupancy pricing at run time, and [`run_contention_in`] resets the
+/// machine (and the arena's fabric state) on entry.
+fn fabric_plateau_bandwidth_in(
+    m: &mut Machine,
+    arena: &mut RunArena,
+    base: &RoutedFabric,
+    inject_ns: f64,
+    op: OpKind,
+    threads: usize,
+    ops_per_thread: usize,
+) -> f64 {
+    std::sync::Arc::make_mut(&mut m.cfg).fabric =
+        Fabric::Routed(base.clone().with_inject(inject_ns));
+    run_contention_in(m, arena, threads, op, ops_per_thread).bandwidth_gbs
+}
+
+/// Mean relative residual of every target at each candidate injection
+/// leg — the fabric analogue of [`objective_grid`], with the identical
+/// fan-out and input-order summation so the fit is bit-identical for any
+/// worker count.
+fn fabric_objective_grid(
+    pool: &RunPool,
+    cfg: &MachineConfig,
+    base: &RoutedFabric,
+    targets: &[Fig8Target],
+    injects: &[f64],
+    ops_per_thread: usize,
+) -> Vec<f64> {
+    let items: Vec<(f64, Fig8Target)> = injects
+        .iter()
+        .flat_map(|&x| targets.iter().map(move |&t| (x, t)))
+        .collect();
+    let residuals: Vec<f64> = pool.map(
+        &items,
+        || (Machine::new(cfg.clone()), RunArena::new()),
+        |(m, arena), &(x, t)| {
+            let got =
+                fabric_plateau_bandwidth_in(m, arena, base, x, t.op, t.threads, ops_per_thread);
+            (got - t.gbs).abs() / t.gbs.max(f64::MIN_POSITIVE)
+        },
+    );
+    residuals
+        .chunks(targets.len().max(1))
+        .map(|per_inject| per_inject.iter().sum::<f64>() / targets.len().max(1) as f64)
+        .collect()
+}
+
+/// Fit the routed fabric's injection leg against `targets`
+/// ([`crate::data::fig8_targets::fabric_targets_for`]). The topology is
+/// taken from `cfg.fabric` when already routed, else
+/// [`Fabric::routed_for`]. Plateau bandwidth is monotone *decreasing* in
+/// the injection leg, so each per-target residual is V-shaped and the
+/// same coarse-grid + golden-section search as [`calibrate`] applies
+/// (the Phi target set is FAA-only precisely to keep the summed
+/// objective unimodal — see `data::fig8_targets::FABRIC_TARGETS`).
+/// Returns `None` when `targets` is empty. [`calibrate`] itself is
+/// untouched: its evaluation schedule stays bit-pinned by
+/// `tests/run_parallel.rs`.
+pub fn calibrate_fabric(
+    cfg: &MachineConfig,
+    targets: &[Fig8Target],
+    ccfg: &FabricCalibrationCfg,
+) -> Option<FabricCalibrationReport> {
+    if targets.is_empty() {
+        return None;
+    }
+    assert!(ccfg.lo_ns < ccfg.hi_ns && ccfg.lo_ns > 0.0 && ccfg.coarse >= 3);
+    for t in targets {
+        assert!(
+            t.threads >= 1 && t.threads <= cfg.topology.n_cores,
+            "{}: target thread count {} outside the machine",
+            cfg.name,
+            t.threads
+        );
+    }
+    let base = match &cfg.fabric {
+        Fabric::Routed(rt) => rt.clone(),
+        Fabric::Scalar => match Fabric::routed_for(cfg) {
+            Fabric::Routed(rt) => rt,
+            Fabric::Scalar => unreachable!("routed_for always builds a routed fabric"),
+        },
+    };
+    let pool = if ccfg.run_threads >= 1 {
+        RunPool::new(ccfg.run_threads)
+    } else {
+        RunPool::with_defaults()
+    };
+    let mut evaluations = 0;
+
+    let step = (ccfg.hi_ns - ccfg.lo_ns) / (ccfg.coarse - 1) as f64;
+    let grid: Vec<f64> = (0..ccfg.coarse).map(|i| ccfg.lo_ns + step * i as f64).collect();
+    let scores: Vec<f64> =
+        fabric_objective_grid(&pool, cfg, &base, targets, &grid, ccfg.ops_per_thread);
+    evaluations += grid.len();
+
+    let mut eval = |x: f64| {
+        evaluations += 1;
+        fabric_objective_grid(
+            &pool,
+            cfg,
+            &base,
+            targets,
+            std::slice::from_ref(&x),
+            ccfg.ops_per_thread,
+        )[0]
+    };
+    let best = scores
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).expect("finite objective"))
+        .map(|(i, _)| i)
+        .expect("non-empty grid");
+    let mut a = grid[best.saturating_sub(1)];
+    let mut b = grid[(best + 1).min(grid.len() - 1)];
+
+    let invphi = (5.0f64.sqrt() - 1.0) / 2.0;
+    let mut c = b - invphi * (b - a);
+    let mut d = a + invphi * (b - a);
+    let mut fc = eval(c);
+    let mut fd = eval(d);
+    for _ in 0..ccfg.refine {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - invphi * (b - a);
+            fc = eval(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + invphi * (b - a);
+            fd = eval(d);
+        }
+    }
+    let fitted = if fc < fd { c } else { d };
+
+    evaluations += 1;
+    let points: Vec<CalPoint> = pool.map(
+        targets,
+        || (Machine::new(cfg.clone()), RunArena::new()),
+        |(m, arena), t| CalPoint {
+            op: t.op,
+            threads: t.threads,
+            target_gbs: t.gbs,
+            achieved_gbs: fabric_plateau_bandwidth_in(
+                m,
+                arena,
+                &base,
+                fitted,
+                t.op,
+                t.threads,
+                ccfg.ops_per_thread,
+            ),
+            from_paper: t.from_paper,
+        },
+    );
+    let mean_rel_residual =
+        points.iter().map(|p| p.rel_residual()).sum::<f64>() / points.len() as f64;
+
+    Some(FabricCalibrationReport {
+        arch: cfg.name.to_string(),
+        topology: base.topo.label().to_string(),
+        fitted_inject_ns: fitted,
+        default_inject_ns: base.inject_ns,
+        points,
+        mean_rel_residual,
+        evaluations,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,5 +577,61 @@ mod tests {
     #[test]
     fn no_targets_is_none() {
         assert!(calibrate(&arch::haswell(), &[], &test_cfg()).is_none());
+        assert!(calibrate_fabric(&arch::haswell(), &[], &fabric_test_cfg()).is_none());
+    }
+
+    fn fabric_test_cfg() -> FabricCalibrationCfg {
+        FabricCalibrationCfg {
+            ops_per_thread: 200,
+            lo_ns: 0.05,
+            hi_ns: 60.0,
+            coarse: 9,
+            refine: 12,
+            run_threads: 1,
+        }
+    }
+
+    fn base_fabric(cfg: &crate::sim::MachineConfig) -> RoutedFabric {
+        match Fabric::routed_for(cfg) {
+            Fabric::Routed(rt) => rt,
+            Fabric::Scalar => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn fabric_plateau_decreases_with_inject() {
+        // The physical premise of the fabric search: a longer injection
+        // leg → longer line occupancy per hand-off → lower plateau.
+        let cfg = arch::xeonphi();
+        let base = base_fabric(&cfg);
+        let lo = fabric_plateau_bandwidth(&cfg, &base, 0.5, OpKind::Faa, 16, 200);
+        let mid = fabric_plateau_bandwidth(&cfg, &base, 5.0, OpKind::Faa, 16, 200);
+        let hi = fabric_plateau_bandwidth(&cfg, &base, 30.0, OpKind::Faa, 16, 200);
+        assert!(lo > mid && mid > hi, "{lo} > {mid} > {hi} violated");
+    }
+
+    #[test]
+    fn calibrate_fabric_recovers_a_synthetic_inject() {
+        // Generate the target *from* the routed simulator at a known
+        // injection leg; the fabric calibrator must find it.
+        let cfg = arch::haswell();
+        let base = base_fabric(&cfg);
+        let planted = 5.0;
+        let targets = [Fig8Target {
+            arch: cfg.name,
+            op: OpKind::Faa,
+            threads: 4,
+            gbs: fabric_plateau_bandwidth(&cfg, &base, planted, OpKind::Faa, 4, 200),
+            from_paper: false,
+        }];
+        let r = calibrate_fabric(&cfg, &targets, &fabric_test_cfg()).unwrap();
+        assert!(
+            (r.fitted_inject_ns - planted).abs() < 0.2,
+            "fitted {} vs planted {planted}",
+            r.fitted_inject_ns
+        );
+        assert!(r.mean_rel_residual < 0.02, "residual {}", r.mean_rel_residual);
+        assert_eq!(r.topology, "ring");
+        assert!(r.evaluations >= 9 + 2 + 12 + 1);
     }
 }

@@ -36,4 +36,7 @@ pub mod linalg;
 pub mod solver;
 
 pub use backend::{FitBackend, FitBackendKind, FitCfg, FitReport, NativeFit, PjrtFit};
-pub use calibrate::{calibrate, CalibrationCfg, CalibrationReport, CalPoint};
+pub use calibrate::{
+    calibrate, calibrate_fabric, CalPoint, CalibrationCfg, CalibrationReport,
+    FabricCalibrationCfg, FabricCalibrationReport,
+};

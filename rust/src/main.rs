@@ -17,12 +17,16 @@
 //!                                   --list prints the family names (one
 //!                                   per line)
 //!   repro contend --arch NAME [--op OP] [--threads N] [--ops N]
-//!                 [--model machine|analytic] [--stats]
+//!                 [--model machine|analytic] [--topology scalar|routed]
+//!                 [--stats]
 //!                                   contended same-line benchmark (Fig. 8)
 //!                                   through the machine-accurate multi-core
 //!                                   scheduler, with per-thread stats; one
 //!                                   concurrent simulation per run-pool
-//!                                   worker (--run-threads)
+//!                                   worker (--run-threads); --topology
+//!                                   routed prices hand-offs over the
+//!                                   link-level interconnect fabric and
+//!                                   --stats then adds a per-link table
 //!   repro locks [--arch NAME] [--kind tas|tas-backoff|ticket|mpsc|all]
 //!               [--threads N] [--acq N] [--stats]
 //!                                   §6.1 lock/queue case study (TAS
@@ -35,21 +39,28 @@
 //!                                   Table 2 fit — native pure-Rust solver
 //!                                   (default, offline) or the PJRT
 //!                                   fit_step executable
-//!   repro calibrate [--arch NAME] [--ops N]
+//!   repro calibrate [--arch NAME] [--ops N] [--topology scalar|routed]
 //!                                   fit per-arch handoff_overlap against
 //!                                   the Fig. 8 plateau targets; writes
 //!                                   results/calibration_<arch>.csv; the
 //!                                   coarse grid and reporting pass run on
-//!                                   the run pool (--run-threads)
+//!                                   the run pool (--run-threads);
+//!                                   --topology routed instead fits the
+//!                                   routed fabric's injection leg and
+//!                                   writes
+//!                                   results/calibration_fabric_<arch>.csv
 //!   repro bfs [--scale N] [--threads N] [--arch NAME]
+//!                                   §6.3 BFS case study; the CAS and SWP
+//!                                   mode runs are run-pool work items
+//!                                   (--run-threads)
 //!   repro ablation                  §6.2 hardware-extension ablations
 //!   repro latency --arch A --op OP --state S --locality L [--size BYTES]
 //!   repro info                      testbed summaries
 //!
 //! Global flags: --fast (reduced sweeps), --artifacts DIR, --results DIR,
-//! --run-threads N (run-pool width for contend/locks/figure 8/calibrate;
-//! default: all cores), --pin-workers (pin run-pool workers to cores,
-//! Linux only — elsewhere a no-op).
+//! --run-threads N (run-pool width for contend/locks/figure 8/calibrate/
+//! bfs; default: all cores), --pin-workers (pin run-pool workers to
+//! cores, Linux only — elsewhere a no-op).
 
 use atomics_repro::atomics::OpKind;
 use atomics_repro::bench::latency::LatencyBench;
@@ -302,7 +313,7 @@ fn cmd_contend(args: &Args) -> i32 {
     use atomics_repro::sim::RunArena;
 
     let arch_name = args.opt("arch").unwrap_or("ivybridge");
-    let Some(cfg) = arch::by_name(arch_name) else {
+    let Some(mut cfg) = arch::by_name(arch_name) else {
         eprintln!("unknown arch '{arch_name}'");
         return 2;
     };
@@ -315,6 +326,23 @@ fn cmd_contend(args: &Args) -> i32 {
         eprintln!("unknown model '{}' (machine | analytic)", args.opt("model").unwrap_or(""));
         return 2;
     };
+    let routed = match args.opt("topology").unwrap_or("scalar") {
+        "scalar" => false,
+        "routed" => true,
+        other => {
+            eprintln!("unknown topology '{other}' (scalar | routed)");
+            return 2;
+        }
+    };
+    if routed && model == ContentionModel::Analytic {
+        eprintln!("--topology routed requires --model machine (the analytic model has no fabric)");
+        return 2;
+    }
+    if routed {
+        // Everything downstream reads the fabric out of the config, so the
+        // streamed table path needs no other change.
+        cfg.fabric = atomics_repro::sim::Fabric::routed_for(&cfg);
+    }
     if args.flag("stats") && model == ContentionModel::Analytic {
         eprintln!("--stats requires --model machine (the analytic model has no per-thread stats)");
         return 2;
@@ -341,11 +369,12 @@ fn cmd_contend(args: &Args) -> i32 {
 
     let mut t = Table::new(
         format!(
-            "contend — {} {} ({} model, {} ops/thread)",
+            "contend — {} {} ({} model, {} ops/thread{})",
             cfg.name,
             op.label(),
             model.label(),
-            ops_per_thread
+            ops_per_thread,
+            if routed { ", routed fabric" } else { "" }
         ),
         &["threads", "GB/s", "mean ns", "hops/op", "inv/op", "stall ns/op", "CAS fail %"],
     );
@@ -411,6 +440,43 @@ fn cmd_contend(args: &Args) -> i32 {
         println!("{}", d.render());
         if p.per_thread.len() > MAX_ROWS {
             println!("({} more threads elided)", p.per_thread.len() - MAX_ROWS);
+        }
+
+        if !p.links.is_empty() {
+            // Busiest links first (by bytes, ties in topology order) —
+            // the Phi ring alone has 122, most of them idle off-route.
+            let mut order: Vec<usize> = (0..p.links.len()).collect();
+            order.sort_by(|&a, &b| {
+                p.links[b].bytes.cmp(&p.links[a].bytes).then(a.cmp(&b))
+            });
+            let active = p.links.iter().filter(|l| l.entered > 0).count();
+            let mut lt = Table::new(
+                format!(
+                    "per-link fabric traffic at {} threads ({active}/{} links active)",
+                    p.threads,
+                    p.links.len()
+                ),
+                &["link", "msgs in", "msgs out", "bytes", "peak in-flight", "GB/s"],
+            );
+            for &i in order.iter().take(MAX_ROWS) {
+                let l = &p.links[i];
+                lt.row(&[
+                    l.label.clone(),
+                    l.entered.to_string(),
+                    l.left.to_string(),
+                    l.bytes.to_string(),
+                    l.peak_inflight.to_string(),
+                    format!("{:.3}", l.gbs),
+                ]);
+            }
+            println!("{}", lt.render());
+            if p.links.len() > MAX_ROWS {
+                println!("({} more links elided)", p.links.len() - MAX_ROWS);
+            }
+            let slug = cfg.name.to_lowercase().replace(' ', "_");
+            if let Some(path) = figures::write_links_csv(&slug, &p.links) {
+                println!("(full per-link traffic written to {path})");
+            }
         }
     }
     0
@@ -596,6 +662,14 @@ fn cmd_calibrate(args: &Args) -> i32 {
         },
         None => arch::all(),
     };
+    match args.opt("topology").unwrap_or("scalar") {
+        "scalar" => {}
+        "routed" => return calibrate_fabric_cmd(args, configs),
+        other => {
+            eprintln!("unknown topology '{other}' (scalar | routed)");
+            return 2;
+        }
+    }
     let ccfg = CalibrationCfg {
         ops_per_thread: args
             .opt_parse("ops", CalibrationCfg::default().ops_per_thread)
@@ -659,6 +733,82 @@ fn cmd_calibrate(args: &Args) -> i32 {
     0
 }
 
+/// `repro calibrate --topology routed`: fit each architecture's routed-
+/// fabric injection leg against the fabric plateau targets (which, unlike
+/// the scalar set, use the Phi's raw above-uncontended FAA plateau).
+fn calibrate_fabric_cmd(args: &Args, configs: Vec<atomics_repro::sim::MachineConfig>) -> i32 {
+    use atomics_repro::data::fig8_targets::fabric_targets_for;
+    use atomics_repro::fit::calibrate::{calibrate_fabric, FabricCalibrationCfg};
+
+    let ccfg = FabricCalibrationCfg {
+        ops_per_thread: args
+            .opt_parse("ops", FabricCalibrationCfg::default().ops_per_thread)
+            .max(1),
+        ..FabricCalibrationCfg::default()
+    };
+
+    for cfg in configs {
+        let targets = fabric_targets_for(cfg.name);
+        let Some(r) = calibrate_fabric(&cfg, &targets, &ccfg) else {
+            eprintln!("{}: no routed-fabric targets on record", cfg.name);
+            continue;
+        };
+        let mut t = Table::new(
+            format!(
+                "calibrate — {} fabric ({}) inject: fitted {:.3} ns (default {:.2}), mean residual {:.1}%, {} sim runs",
+                r.arch,
+                r.topology,
+                r.fitted_inject_ns,
+                r.default_inject_ns,
+                r.mean_rel_residual * 100.0,
+                r.evaluations * targets.len()
+            ),
+            &["op", "threads", "target GB/s", "fitted GB/s", "residual %", "source"],
+        );
+        let mut csv = atomics_repro::util::csv::Csv::new(&[
+            "op",
+            "threads",
+            "target_gbs",
+            "achieved_gbs",
+            "rel_residual",
+            "fitted_inject_ns",
+            "default_inject_ns",
+            "topology",
+        ]);
+        for p in &r.points {
+            t.row(&[
+                p.op.label().to_string(),
+                p.threads.to_string(),
+                format!("{:.3}", p.target_gbs),
+                format!("{:.3}", p.achieved_gbs),
+                format!("{:.1}", p.rel_residual() * 100.0),
+                if p.from_paper { "Fig. 8".into() } else { "extrapolated".into() },
+            ]);
+            csv.row(&[
+                p.op.label().to_string(),
+                p.threads.to_string(),
+                p.target_gbs.to_string(),
+                p.achieved_gbs.to_string(),
+                p.rel_residual().to_string(),
+                r.fitted_inject_ns.to_string(),
+                r.default_inject_ns.to_string(),
+                r.topology.clone(),
+            ]);
+        }
+        println!("{}", t.render());
+        let slug = cfg.name.to_lowercase().replace(' ', "_");
+        let path = format!(
+            "{}/calibration_fabric_{}.csv",
+            atomics_repro::report::results_dir(),
+            slug
+        );
+        if let Err(e) = csv.write(&path) {
+            eprintln!("warning: could not write {path}: {e}");
+        }
+    }
+    0
+}
+
 fn cmd_bfs(args: &Args) -> i32 {
     let scale: u32 = args.opt_parse("scale", 14);
     let threads: usize = args.opt_parse("threads", 4);
@@ -675,9 +825,21 @@ fn cmd_bfs(args: &Args) -> i32 {
     );
     let csr = Csr::from_edges(1 << scale, &kronecker_edges(scale, 0xBF5));
     let root = csr.first_non_isolated().unwrap();
-    for mode in [BfsMode::Cas, BfsMode::Swp] {
-        let mut m = atomics_repro::sim::Machine::new(cfg.clone());
-        let r = parallel_bfs(&mut m, &csr, root, threads, mode);
+    // The two BFS modes are independent simulations — run-level work
+    // items on the pool (--run-threads). Each item gets a *fresh* machine
+    // (unlike the contend engines, `parallel_bfs` has no fresh-machine
+    // reset, so a pooled machine would leak cache state between modes);
+    // `map` returns in input order, so output text and the fail-fast
+    // exit code match the retained serial path bit-for-bit at any width.
+    let modes = [BfsMode::Cas, BfsMode::Swp];
+    let results = atomics_repro::sweep::RunPool::with_defaults().map(
+        &modes,
+        || (),
+        |(), &mode| {
+            parallel_bfs(&mut atomics_repro::sim::Machine::new(cfg.clone()), &csr, root, threads, mode)
+        },
+    );
+    for (mode, r) in modes.iter().zip(&results) {
         if let Err(e) = validate_tree(&csr, root, &r.parent) {
             eprintln!("{}: INVALID TREE: {e}", mode.label());
             return 1;

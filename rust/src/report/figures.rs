@@ -467,6 +467,43 @@ pub fn figure8_with(pool: &crate::sweep::RunPool) -> String {
     out
 }
 
+/// Write the per-link fabric traffic of a routed contention run to
+/// `results/contend_links_<slug>.csv` — the CSV twin of `repro contend
+/// --stats`'s per-link table, one row per link in topology order (the
+/// table shows the busiest 16; the CSV is complete). Returns the path,
+/// or `None` for a scalar run (no links) or a write failure (reported).
+pub fn write_links_csv(slug: &str, links: &[crate::sim::LinkStats]) -> Option<String> {
+    if links.is_empty() {
+        return None;
+    }
+    let mut csv = crate::util::csv::Csv::new(&[
+        "link",
+        "msgs_in",
+        "msgs_out",
+        "bytes",
+        "peak_inflight",
+        "gbs",
+    ]);
+    for l in links {
+        csv.row(&[
+            l.label.clone(),
+            l.entered.to_string(),
+            l.left.to_string(),
+            l.bytes.to_string(),
+            l.peak_inflight.to_string(),
+            l.gbs.to_string(),
+        ]);
+    }
+    let path = format!("{}/contend_links_{}.csv", crate::report::results_dir(), slug);
+    match csv.write(&path) {
+        Ok(()) => Some(path),
+        Err(e) => {
+            eprintln!("warning: could not write {path}: {e}");
+            None
+        }
+    }
+}
+
 /// Fig. 8d: CAS fetching two operands (Bulldozer, E state).
 pub fn figure8d() -> String {
     let cfg = arch::bulldozer();

@@ -1,6 +1,7 @@
 //! Full machine configuration: everything Table 1 records about a testbed,
 //! plus the timing parameters (Table 2) and overhead residuals (Table 3).
 
+use crate::sim::fabric::Fabric;
 use crate::sim::mechanisms::Mechanisms;
 use crate::sim::protocol::ProtocolKind;
 use crate::sim::timing::{OverheadTable, Timing};
@@ -90,6 +91,14 @@ pub struct MachineConfig {
     /// plateau targets in [`crate::data::fig8_targets`] (this replaced a
     /// single global `HANDOFF_OVERLAP = 0.5`). Must lie in `[0, 1)`.
     pub handoff_overlap: f64,
+    /// How contended line hand-offs are priced by the multicore engine
+    /// ([`crate::sim::fabric`]): `Fabric::Scalar` (the default on every
+    /// shipped arch) keeps the legacy `handoff_overlap` pricing
+    /// bit-identical to the pre-fabric engine; `Fabric::Routed` prices
+    /// hand-offs through an explicit link-level topology (ring bus / HT
+    /// mesh / Phi directory ring) with per-link traffic stats. Opted
+    /// into via `--topology routed` or `Fabric::routed_for`.
+    pub fabric: Fabric,
     /// Extra latency for 128-bit atomics: (local/shared-die ns, remote ns).
     /// Zero on Intel; ≈(20, 5) on Bulldozer (§5.3).
     pub cas128_penalty: (f64, f64),
@@ -147,6 +156,7 @@ mod tests {
             muw: false,
             contended_write_combining: true,
             handoff_overlap: 0.5,
+            fabric: Fabric::Scalar,
             cas128_penalty: (0.0, 0.0),
             unaligned: UnalignedCfg { bus_lock_ns: 300.0 },
             frequency_mhz: 3400,

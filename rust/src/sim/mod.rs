@@ -14,6 +14,7 @@ pub mod coherence;
 pub mod config;
 pub mod engine;
 pub mod event;
+pub mod fabric;
 pub mod mechanisms;
 pub mod memstore;
 pub mod multicore;
@@ -26,6 +27,7 @@ pub mod writebuffer;
 pub use cache::{line_of, Line, LINE_SIZE};
 pub use config::MachineConfig;
 pub use engine::{Access, Machine};
+pub use fabric::{Fabric, LinkStats};
 pub use multicore::{ContentionStats, MulticoreResult, RunArena};
 pub use timing::Level;
 pub use topology::{CoreId, Distance, Topology};

@@ -34,6 +34,16 @@
 //! plateaus ([`crate::data::fig8_targets`]) — it used to be a single
 //! hand-picked global constant (`HANDOFF_OVERLAP = 0.5`).
 //!
+//! When the config opts into a routed fabric
+//! (`MachineConfig::fabric = Fabric::Routed`, see [`crate::sim::fabric`]
+//! and DESIGN.md §10), the scalar transfer share is replaced by
+//! link-level pricing: the hand-off routes over the architecture's
+//! explicit interconnect topology, the sender serializes only on
+//! first-link queueing plus the local injection leg, and the remote legs
+//! pipeline in flight — per-link traffic lands in
+//! [`MulticoreResult::links`]. The default remains `Fabric::Scalar`,
+//! bit-identical to the pre-fabric engine.
+//!
 //! Plain stores on the Intel parts are absorbed by the store buffers
 //! (§5.4: the architecture "detects that issued operations access the same
 //! cache line in an arbitrary order, annihilating the need for the actual
@@ -96,6 +106,7 @@ use crate::atomics::{Op, OpKind};
 use crate::sim::arbitration::{prefer_same_die, prefers_same_die, Request, MAX_LOCAL_BATCH};
 use crate::sim::cache::line_of;
 use crate::sim::engine::{Access, Machine, ReadMemo};
+use crate::sim::fabric::{FabricState, LinkStats, Topology as _};
 use crate::sim::timing::Level;
 use crate::sim::topology::{CoreId, Distance};
 use std::collections::BinaryHeap;
@@ -165,6 +176,10 @@ pub struct MulticoreResult {
     pub elapsed_ns: f64,
     /// One entry per thread, indexed by thread id.
     pub per_thread: Vec<ContentionStats>,
+    /// Per-link fabric traffic ([`crate::sim::fabric`]) — one entry per
+    /// topology link when the run priced hand-offs through a routed
+    /// fabric, empty under the default `Fabric::Scalar` pricing.
+    pub links: Vec<LinkStats>,
 }
 
 impl MulticoreResult {
@@ -310,6 +325,9 @@ pub struct RunArena {
     serial_slot: Vec<u32>,
     ready: ReadyQueue,
     lines: LineTable,
+    // routed-fabric traffic state (sized per run to the topology's links;
+    // stays empty under Fabric::Scalar)
+    fabric: FabricState,
 }
 
 impl RunArena {
@@ -325,6 +343,7 @@ impl RunArena {
             serial_slot: Vec::new(),
             ready: ReadyQueue::new(0),
             lines: LineTable::new(64),
+            fabric: FabricState::new(),
         }
     }
 
@@ -347,6 +366,7 @@ impl RunArena {
         self.serial_slot.resize(threads, ABSENT);
         self.ready.reset(threads);
         self.lines.reset();
+        self.fabric.ensure(0);
     }
 }
 
@@ -393,7 +413,16 @@ pub fn run_contention_in(
         return run_unserialized(m, threads, kind, ops_per_thread, &mut arena.per_thread);
     }
 
-    let RunArena { per_thread, heap, remaining, expected, .. } = arena;
+    // Routed fabric (opt-in via `MachineConfig::fabric`): price hand-offs
+    // through the link-level topology instead of the scalar transfer
+    // share. Holding an `Arc` clone of the config keeps the fabric
+    // borrow disjoint from the machine.
+    let cfg = m.cfg.clone();
+    let routed = cfg.fabric.routed();
+    arena.fabric.ensure(routed.map_or(0, |rt| rt.topo.links().len()));
+    let shared_line = line_of(SHARED_ADDR);
+
+    let RunArena { per_thread, heap, remaining, expected, fabric, .. } = arena;
 
     let topo = m.cfg.topology;
     let exec_ns = match kind {
@@ -449,14 +478,15 @@ pub fn run_contention_in(
         let acc = m.access64(t, next_op(kind, expected[t]), SHARED_ADDR);
         let end = start + acc.latency;
 
+        // A line hop = the data arrived cache-to-cache from another core
+        // (memory fills are cold misses, not ping-pong).
+        let migrated = acc.distance != Distance::Local && acc.level != Level::Memory;
         let st = &mut per_thread[t];
         st.ops += 1;
         st.stall_ns += stall;
         st.latency_ns += stall + acc.latency;
         st.finish_ns = end;
-        // A line hop = the data arrived cache-to-cache from another core
-        // (memory fills are cold misses, not ping-pong).
-        if acc.distance != Distance::Local && acc.level != Level::Memory {
+        if migrated {
             st.line_hops += 1;
         }
         st.interconnect_hops += m.stats.hops - hops_before;
@@ -475,8 +505,20 @@ pub fn run_contention_in(
 
         // Line occupancy: execute phase plus the un-overlappable part of
         // the transfer. A lone requester (empty queue) overlaps nothing.
+        // Routed pricing charges the sender only the first-link queue
+        // wait + the local injection leg; the remote legs of the route
+        // pipeline in flight (DESIGN.md §10) — grant starts are monotone
+        // non-decreasing, which is what keeps the fabric's streaming
+        // in-flight tracking valid.
         let occupancy = if heap.is_empty() {
             acc.latency
+        } else if let Some(rt) = routed {
+            let handoff = if migrated {
+                fabric.handoff(rt, owner, t, shared_line, start)
+            } else {
+                rt.inject_ns
+            };
+            exec_ns + handoff
         } else {
             exec_ns + transfer_ns(m, acc.distance) * (1.0 - m.cfg.handoff_overlap)
         };
@@ -489,9 +531,13 @@ pub fn run_contention_in(
         }
     }
 
+    let links = match routed {
+        Some(rt) => fabric.finish(rt, finish),
+        None => Vec::new(),
+    };
     // The one per-run allocation the arena keeps: the caller owns the
     // result, the arena keeps its stats buffer for the next run.
-    finalize(kind, threads, finish, per_thread.clone())
+    finalize(kind, threads, finish, per_thread.clone(), links)
 }
 
 /// The non-serializing path: reads replicate, combined stores retire into
@@ -527,7 +573,9 @@ fn run_unserialized(
         st.finish_ns = m.clock_of(t);
         finish = finish.max(st.finish_ns);
     }
-    finalize(kind, threads, finish, per_thread.to_vec())
+    // Unserialized ops never enter the fabric: reads replicate, combined
+    // stores retire in the issuing core's buffer.
+    finalize(kind, threads, finish, per_thread.to_vec(), Vec::new())
 }
 
 /// One step of a per-core [`CoreProgram`]: an operation against an address.
@@ -769,6 +817,9 @@ impl ReadyQueue {
 struct LineTable {
     keys: Vec<u64>,
     free_at: Vec<f64>,
+    /// Core last granted the line (`ABSENT` before the first grant) —
+    /// the route source for routed-fabric hand-off pricing.
+    owner: Vec<u32>,
     len: usize,
 }
 
@@ -777,7 +828,12 @@ const EMPTY_LINE: u64 = u64::MAX;
 impl LineTable {
     fn new(capacity_hint: usize) -> LineTable {
         let cap = capacity_hint.next_power_of_two().max(64);
-        LineTable { keys: vec![EMPTY_LINE; cap], free_at: vec![0.0; cap], len: 0 }
+        LineTable {
+            keys: vec![EMPTY_LINE; cap],
+            free_at: vec![0.0; cap],
+            owner: vec![ABSENT; cap],
+            len: 0,
+        }
     }
 
     /// Empty the table keeping its (possibly grown) capacity. Capacity
@@ -787,6 +843,7 @@ impl LineTable {
     /// like `LineTable::new(64)`.
     fn reset(&mut self) {
         self.keys.fill(EMPTY_LINE);
+        self.owner.fill(ABSENT);
         self.len = 0;
     }
 
@@ -819,6 +876,7 @@ impl LineTable {
             if self.keys[i] == EMPTY_LINE {
                 self.keys[i] = line;
                 self.free_at[i] = 0.0;
+                self.owner[i] = ABSENT;
                 self.len += 1;
                 return i;
             }
@@ -830,11 +888,13 @@ impl LineTable {
         let new_cap = self.keys.len() * 2;
         let old_keys = std::mem::replace(&mut self.keys, vec![EMPTY_LINE; new_cap]);
         let old_free = std::mem::replace(&mut self.free_at, vec![0.0; new_cap]);
+        let old_owner = std::mem::replace(&mut self.owner, vec![ABSENT; new_cap]);
         self.len = 0;
-        for (k, f) in old_keys.into_iter().zip(old_free) {
+        for ((k, f), o) in old_keys.into_iter().zip(old_free).zip(old_owner) {
             if k != EMPTY_LINE {
                 let slot = self.probe_insert(k);
                 self.free_at[slot] = f;
+                self.owner[slot] = o;
             }
         }
     }
@@ -880,6 +940,12 @@ fn run_program_impl<P: CoreProgram>(
     // caches the LineTable slot of the pending step's line for
     // serializing steps (ABSENT otherwise) — the hot loop does zero
     // hashing per event.
+    // Routed fabric (opt-in): see `run_contention_in` — same pricing,
+    // with the line table carrying the previous owner per line.
+    let cfg = m.cfg.clone();
+    let routed = cfg.fabric.routed();
+    arena.fabric.ensure(routed.map_or(0, |rt| rt.topo.links().len()));
+
     let RunArena {
         per_thread,
         pending,
@@ -888,6 +954,7 @@ fn run_program_impl<P: CoreProgram>(
         serial_slot,
         ready,
         lines,
+        fabric,
         ..
     } = arena;
     let mut next_seq = 0u64;
@@ -961,6 +1028,7 @@ fn run_program_impl<P: CoreProgram>(
         };
         let end = start + acc.latency;
 
+        let migrated = acc.distance != Distance::Local && acc.level != Level::Memory;
         let st = &mut per_thread[t];
         if step.counted {
             st.ops += 1;
@@ -968,7 +1036,7 @@ fn run_program_impl<P: CoreProgram>(
         st.stall_ns += stall;
         st.latency_ns += stall + acc.latency;
         st.finish_ns = end;
-        if acc.distance != Distance::Local && acc.level != Level::Memory {
+        if migrated {
             st.line_hops += 1;
         }
         st.interconnect_hops += d_hops;
@@ -995,11 +1063,26 @@ fn run_program_impl<P: CoreProgram>(
                     OpKind::Write => m.cfg.timing.write_issue.max(1.0),
                     k => m.cfg.timing.exec(k).max(1.0),
                 };
-                exec_ns + transfer_ns(m, acc.distance) * (1.0 - m.cfg.handoff_overlap)
+                if let Some(rt) = routed {
+                    // Routed pricing: route from the line's previous
+                    // owner; a line not yet granted (or supplied without
+                    // migrating) pays only the injection leg.
+                    let prev = lines.owner[serial_slot[t] as usize];
+                    let handoff = if migrated && prev != ABSENT {
+                        fabric.handoff(rt, prev as usize, t, line, start)
+                    } else {
+                        rt.inject_ns
+                    };
+                    exec_ns + handoff
+                } else {
+                    exec_ns + transfer_ns(m, acc.distance) * (1.0 - m.cfg.handoff_overlap)
+                }
             } else {
                 acc.latency
             };
-            lines.free_at[serial_slot[t] as usize] = start + occupancy.max(f64::MIN_POSITIVE);
+            let slot = serial_slot[t] as usize;
+            lines.free_at[slot] = start + occupancy.max(f64::MIN_POSITIVE);
+            lines.owner[slot] = t as u32;
         }
 
         finish = finish.max(end);
@@ -1040,7 +1123,11 @@ fn run_program_impl<P: CoreProgram>(
         }
     }
 
-    finalize(label, threads, finish, per_thread.clone())
+    let links = match routed {
+        Some(rt) => fabric.finish(rt, finish),
+        None => Vec::new(),
+    };
+    finalize(label, threads, finish, per_thread.clone(), links)
 }
 
 fn finalize(
@@ -1048,6 +1135,7 @@ fn finalize(
     threads: usize,
     finish: f64,
     per_thread: Vec<ContentionStats>,
+    links: Vec<LinkStats>,
 ) -> MulticoreResult {
     let total_ops: u64 = per_thread.iter().map(|t| t.ops).sum();
     let total_latency: f64 = per_thread.iter().map(|t| t.latency_ns).sum();
@@ -1059,6 +1147,7 @@ fn finalize(
         mean_latency_ns: total_latency / total_ops.max(1) as f64,
         elapsed_ns: finish,
         per_thread,
+        links,
     }
 }
 
@@ -1180,6 +1269,25 @@ mod tests {
             assert!(st.finish_ns > 0.0);
         }
         assert!(r.elapsed_ns >= r.per_thread.iter().fold(0.0, |a, t| t.finish_ns.max(a)));
+    }
+
+    #[test]
+    fn routed_fabric_reports_link_traffic_and_scalar_does_not() {
+        use crate::sim::fabric::Fabric;
+        let cfg = arch::xeonphi();
+        let mut m = Machine::new(cfg.clone());
+        let scalar = run_contention(&mut m, 8, OpKind::Faa, 100);
+        assert!(scalar.links.is_empty(), "scalar pricing must not report links");
+
+        let mut rcfg = cfg;
+        rcfg.fabric = Fabric::routed_for(&rcfg);
+        let mut m2 = Machine::new(rcfg);
+        let routed = run_contention(&mut m2, 8, OpKind::Faa, 100);
+        assert!(!routed.links.is_empty());
+        let entered: u64 = routed.links.iter().map(|l| l.entered).sum();
+        let left: u64 = routed.links.iter().map(|l| l.left).sum();
+        assert!(entered > 0, "contended hand-offs must traverse links");
+        assert_eq!(entered, left, "every message that entered a link must leave it");
     }
 
     #[test]

@@ -1,0 +1,175 @@
+//! Topology-invariant properties of the routed interconnect fabric
+//! (`sim::fabric`) and its engine wiring:
+//!
+//! * route symmetry — A→B and B→A have the same hop count on every
+//!   architecture's topology (ring arcs and HT meshes are symmetric,
+//!   and the Phi's tag-directory detour visits the same arcs each way);
+//! * conservation — every message that enters a link leaves it by the
+//!   end of the run, on every architecture;
+//! * scalar bit-identity — the default `Fabric::Scalar` pricing is the
+//!   pre-fabric engine: deterministic, identical under an explicitly
+//!   installed `Scalar`, identical across fresh/reused arenas, and
+//!   carrying no link traffic (absolute plateau values stay pinned by
+//!   `tests/contention_engine.rs`);
+//! * determinism — routed runs are bit-identical across run-pool widths
+//!   1/2/4 (virtual time never depends on host scheduling);
+//! * pipelining — concurrent hand-offs on disjoint Phi ring legs are
+//!   each charged only the injection leg, and a routed contended-FAA
+//!   run finishes far faster than the serialized sum of full route
+//!   traversals (the effect `--topology routed` exists to model).
+
+use atomics_repro::arch;
+use atomics_repro::atomics::OpKind;
+use atomics_repro::sim::fabric::{Fabric, FabricState, Topology as _};
+use atomics_repro::sim::multicore::{run_contention, run_contention_in, RunArena};
+use atomics_repro::sim::Machine;
+use atomics_repro::sweep::RunPool;
+
+/// Cache lines exercising distinct Phi tag-directory stops (the third
+/// maps high addresses, catching modulo mistakes).
+const LINES: [u64; 3] = [0, 7, 0x5000_0000 / 64];
+
+fn routed(cfg: &atomics_repro::sim::MachineConfig) -> Fabric {
+    let f = Fabric::routed_for(cfg);
+    assert!(f.is_routed(), "{}: routed_for must produce a routed fabric", cfg.name);
+    f
+}
+
+#[test]
+fn routes_are_symmetric_in_hop_count_on_every_arch() {
+    for cfg in arch::all() {
+        let fab = routed(&cfg);
+        let rt = fab.routed().unwrap();
+        let n = cfg.topology.n_cores;
+        let (mut fwd, mut rev) = (Vec::new(), Vec::new());
+        for &line in &LINES {
+            for a in (0..n).step_by(3) {
+                for b in (0..n).step_by(5) {
+                    rt.topo.route_into(a, b, line, &mut fwd);
+                    rt.topo.route_into(b, a, line, &mut rev);
+                    assert_eq!(
+                        fwd.len(),
+                        rev.len(),
+                        "{}: hop count {a}->{b} vs {b}->{a} (line {line})",
+                        cfg.name
+                    );
+                    for &l in fwd.iter().chain(&rev) {
+                        assert!(l < rt.topo.links().len(), "{}: link index in bounds", cfg.name);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_message_entering_a_link_leaves_it() {
+    for cfg in arch::all() {
+        let threads = cfg.topology.n_cores.min(16);
+        let mut rcfg = cfg.clone();
+        rcfg.fabric = routed(&cfg);
+        let mut m = Machine::new(rcfg);
+        let r = run_contention(&mut m, threads, OpKind::Faa, 100);
+        let mut entered_total = 0u64;
+        for l in &r.links {
+            assert_eq!(l.entered, l.left, "{} link '{}': conservation", cfg.name, l.label);
+            assert_eq!(l.bytes, l.entered * 64, "{} link '{}': 64B messages", cfg.name, l.label);
+            entered_total += l.entered;
+        }
+        assert!(
+            entered_total > 0,
+            "{}: {threads} contending threads must put traffic on the fabric",
+            cfg.name
+        );
+    }
+}
+
+#[test]
+fn scalar_default_is_bit_identical_and_carries_no_links() {
+    for cfg in arch::all() {
+        let threads = cfg.topology.n_cores.min(8);
+        // default config (Fabric::Scalar is the shipped default)
+        let base = run_contention(&mut Machine::new(cfg.clone()), threads, OpKind::Cas, 150);
+        assert!(base.links.is_empty(), "{}: scalar runs carry no link stats", cfg.name);
+        // repeated run: deterministic
+        let again = run_contention(&mut Machine::new(cfg.clone()), threads, OpKind::Cas, 150);
+        assert_eq!(base, again, "{}: scalar runs are deterministic", cfg.name);
+        // explicitly installed Scalar: the same engine path
+        let mut scfg = cfg.clone();
+        scfg.fabric = Fabric::Scalar;
+        let explicit = run_contention(&mut Machine::new(scfg), threads, OpKind::Cas, 150);
+        assert_eq!(base, explicit, "{}: explicit Scalar == default", cfg.name);
+        // reused arena: bit-identical to the fresh-arena path
+        let mut m = Machine::new(cfg.clone());
+        let mut arena = RunArena::new();
+        run_contention_in(&mut m, &mut arena, threads, OpKind::Faa, 150);
+        let reused = run_contention_in(&mut m, &mut arena, threads, OpKind::Cas, 150);
+        assert_eq!(base, reused, "{}: reused arena == fresh arena", cfg.name);
+    }
+}
+
+#[test]
+fn routed_runs_are_bit_identical_across_run_pool_widths() {
+    let cfg = arch::xeonphi();
+    let mut rcfg = cfg.clone();
+    rcfg.fabric = routed(&cfg);
+    let counts = [1usize, 2, 4, 8];
+    let run = |width: usize| {
+        RunPool::new(width).map(
+            &counts,
+            || (Machine::new(rcfg.clone()), RunArena::new()),
+            |(m, arena), &n| run_contention_in(m, arena, n, OpKind::Faa, 150),
+        )
+    };
+    let serial = run(1);
+    assert!(serial.iter().all(|r| !r.links.is_empty()), "routed runs report links");
+    for width in [2usize, 4] {
+        assert_eq!(serial, run(width), "width {width} vs serial");
+    }
+}
+
+#[test]
+fn disjoint_phi_ring_handoffs_are_charged_only_the_injection_leg() {
+    let cfg = arch::xeonphi();
+    let fab = routed(&cfg);
+    let rt = fab.routed().unwrap();
+    let mut st = FabricState::new();
+    st.ensure(rt.topo.links().len());
+    // Two hand-offs at t=0 whose tag-directory routes share no link:
+    // 0→1 via TD stop 10 and 30→31 via TD stop 40. Neither waits on the
+    // other — each pays exactly the injection leg, and both message
+    // trains are in flight at once (the pipelining the scalar model's
+    // serialized hand-off charge cannot express).
+    let a = st.handoff(rt, 0, 1, 10, 0.0);
+    let b = st.handoff(rt, 30, 31, 40, 0.0);
+    assert_eq!(a, rt.inject_ns, "first hand-off: no queue wait");
+    assert_eq!(b, rt.inject_ns, "disjoint second hand-off: no queue wait");
+    assert!(st.inflight_total() >= 2, "both trains in flight concurrently");
+    let links = st.finish(rt, 1000.0);
+    let entered: u64 = links.iter().map(|l| l.entered).sum();
+    let left: u64 = links.iter().map(|l| l.left).sum();
+    assert_eq!(entered, left, "finish drains every in-flight message");
+    assert!(entered > 0);
+}
+
+#[test]
+fn routed_phi_faa_beats_the_serialized_sum_of_route_traversals() {
+    let cfg = arch::xeonphi();
+    let mut rcfg = cfg.clone();
+    rcfg.fabric = routed(&cfg);
+    let mut m = Machine::new(rcfg);
+    let r = run_contention(&mut m, 16, OpKind::Faa, 200);
+    let total_ops = r.total_ops() as f64;
+    // If every hand-off serialized behind the full ring + tag-directory
+    // traversal (Table 2's H = 161.2 ns), the run could not finish before
+    // ops × (E(FAA) + H). Route pricing charges senders only the local
+    // injection leg, so concurrent FAAs overlap on the ring and the run
+    // lands far below that bound.
+    let serialized = total_ops * (cfg.timing.e_faa + cfg.timing.hop);
+    assert!(
+        r.elapsed_ns < 0.5 * serialized,
+        "pipelined {} ns vs serialized bound {} ns",
+        r.elapsed_ns,
+        serialized
+    );
+}

@@ -260,6 +260,48 @@ fn locks_report_renders_identical_bytes_across_pool_widths() {
     assert_eq!(one, four, "locks report must not depend on pool width");
 }
 
+/// `repro bfs` (the last PR 6 residual): its per-mode BFS simulations
+/// are run-pool work items, each on a fresh machine (`parallel_bfs` has
+/// no fresh-machine reset, so machines must not be pooled across
+/// items). Parent trees, MTEPS bits, and claim counters are identical
+/// to the serial fresh-machine path at widths 1, 2, and 4.
+#[test]
+fn bfs_bit_identical_across_pool_widths() {
+    use atomics_repro::graph::bfs::validate_tree;
+    use atomics_repro::graph::{kronecker_edges, parallel_bfs, BfsMode, Csr};
+
+    let cfg = arch::haswell();
+    let scale = 8u32;
+    let csr = Csr::from_edges(1 << scale, &kronecker_edges(scale, 0xBF5));
+    let root = csr.first_non_isolated().unwrap();
+    let modes = [BfsMode::Cas, BfsMode::Swp];
+
+    let serial: Vec<_> = modes
+        .iter()
+        .map(|&mode| parallel_bfs(&mut Machine::new(cfg.clone()), &csr, root, 4, mode))
+        .collect();
+    for (r, mode) in serial.iter().zip(&modes) {
+        validate_tree(&csr, root, &r.parent)
+            .unwrap_or_else(|e| panic!("{}: invalid tree: {e}", mode.label()));
+    }
+
+    for workers in [1usize, 2, 4] {
+        let got = RunPool::new(workers).map(
+            &modes,
+            || (),
+            |(), &mode| parallel_bfs(&mut Machine::new(cfg.clone()), &csr, root, 4, mode),
+        );
+        for ((s, p), mode) in serial.iter().zip(&got).zip(&modes) {
+            let ctx = format!("{} workers={workers}", mode.label());
+            assert_eq!(s.parent, p.parent, "{ctx}: parent tree");
+            assert_eq!(s.mteps.to_bits(), p.mteps.to_bits(), "{ctx}: MTEPS");
+            assert_eq!(s.elapsed_ns.to_bits(), p.elapsed_ns.to_bits(), "{ctx}: elapsed");
+            assert_eq!(s.edges_scanned, p.edges_scanned, "{ctx}: edges scanned");
+            assert_eq!(s.wasted_claims, p.wasted_claims, "{ctx}: wasted claims");
+        }
+    }
+}
+
 /// `--pin-workers` smoke: results are bit-identical with pinning
 /// requested, and on non-Linux platforms the pin itself reports `false`
 /// (a documented no-op) while everything still runs.
