@@ -79,6 +79,14 @@ echo "== smoke: routed interconnect fabric (--topology routed) =="
 echo "== smoke: scripts/scalability.sh (2-rung contend ladder) =="
 BIN=./target/release/repro scripts/scalability.sh --arch haswell --ops 300 --rungs "1 2"
 
+echo "== smoke: repro predict (batched prediction serving) =="
+# full canonical grid of one testbed, CSV out
+./target/release/repro predict --grid --arch haswell >/dev/null
+# a CSV batch through stdin, JSON-lines out, schema version checked
+PREDICT_OUT=$(printf 'op,state,level,distance,arch\ncas,S,L3,on chip,haswell\nfaa,M,L2,local,ivy\n' \
+    | ./target/release/repro predict --input - --json)
+echo "$PREDICT_OUT" | grep -q '"v":1'
+
 echo "== bench-regression gate (BENCH_sweep.json vs BENCH_baseline.json) =="
 BENCH_FAST=1 cargo bench --bench bench_sweep
 # cargo runs bench binaries with cwd = the package root, so the fresh

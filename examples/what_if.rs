@@ -1,7 +1,13 @@
 //! What-if architecture explorer: quantify the paper's §6.2 hardware
 //! proposals by running the same S/O-state workloads on Bulldozer with the
 //! MOESI+OL/SL states (§6.2.1), HT Assist S/O tracking (§6.2.2), and the
-//! FastLock relaxed-atomics prefix (§6.2.3) enabled.
+//! FastLock relaxed-atomics prefix (§6.2.3) enabled — then sketch a
+//! cross-architecture what-if through the serving engine's batch API.
+//!
+//! Fast mode is an explicit API choice here
+//! ([`report::sweep_sizes_with`]), not an env-var mutation: the example
+//! asks for the reduced sweep directly instead of flipping `FAST` for the
+//! whole process.
 //!
 //! Run: `cargo run --release --example what_if`
 
@@ -9,10 +15,15 @@ use atomics_repro::arch;
 use atomics_repro::atomics::OpKind;
 use atomics_repro::bench::latency::LatencyBench;
 use atomics_repro::bench::placement::{PrepLocality, PrepState};
+use atomics_repro::model::query::ModelState;
+use atomics_repro::report;
+use atomics_repro::sim::timing::Level;
+use atomics_repro::sim::topology::Distance;
+use atomics_repro::{ArchId, PredictEngine, PredictRequest, QueryBuilder};
 
 fn main() {
-    std::env::set_var("FAST", "1");
-    let sizes: Vec<usize> = vec![64 << 10, 1 << 20];
+    // explicit fast-mode: take the head of the reduced figure sweep
+    let sizes: Vec<usize> = report::sweep_sizes_with(true).into_iter().take(2).collect();
 
     println!("§6.2.1/§6.2.2 — S-state CAS latency on die-local shared lines [ns]");
     println!("(the baseline broadcasts invalidations to remote dies; both fixes suppress them)\n");
@@ -49,5 +60,32 @@ fn main() {
             .collect();
         let mean = vals.iter().sum::<f64>() / vals.len() as f64;
         println!("  {:<28} {:>7.2} GB/s", name, mean);
+    }
+
+    // Model-level what-if through the serving API: where would a
+    // contended shared-line CAS land on each testbed? One batch, one
+    // engine, the same backend `repro predict` serves.
+    println!("\nmodel what-if — shared-line CAS (L3-or-last-level, die-local sharers) [ns]");
+    let mut engine = PredictEngine::shipped();
+    let reqs: Vec<PredictRequest> = ArchId::ALL
+        .iter()
+        .map(|&a| {
+            let level = if a.config().has_l3() { Level::L3 } else { Level::L2 };
+            let query = QueryBuilder::new(OpKind::Cas, ModelState::S)
+                .level(level)
+                .distance(Distance::SameDie)
+                .build()
+                .expect("valid query");
+            PredictRequest::new(a, query)
+        })
+        .collect();
+    let responses = engine.predict_batch(&reqs).expect("grid points are valid");
+    for r in &responses {
+        println!(
+            "  {:<11} {:>7.1} ns  ({:>5.2} GB/s over distinct lines)",
+            r.arch.label(),
+            r.latency_ns,
+            r.bandwidth_gbs
+        );
     }
 }

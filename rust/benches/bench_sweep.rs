@@ -7,12 +7,14 @@
 //! closed-form solve), the contention-plateau calibrator on the run
 //! pool, the run-level contend grid at 1 vs. min(4, cores) run-pool
 //! workers (bit-equality asserted between rungs), and the routed-fabric
-//! contend grid (link-level interconnect pricing), prints the speedups,
-//! and writes `BENCH_sweep.json` so future PRs can track sweep, contend,
-//! locks, fit, calibrate, and fabric throughput (gated by
-//! `scripts/bench_gate.py`; `calibrate_points_per_sec` and
-//! `contend_fabric_points_per_sec` ship unadjudicated until the next
-//! baseline refresh).
+//! contend grid (link-level interconnect pricing), the batched
+//! prediction-serving engine on a ≥10k-point tiled canonical grid vs.
+//! the rebuild-everything one-off path, prints the speedups, and writes
+//! `BENCH_sweep.json` so future PRs can track sweep, contend, locks,
+//! fit, calibrate, fabric, and predict throughput (gated by
+//! `scripts/bench_gate.py`; `calibrate_points_per_sec`,
+//! `contend_fabric_points_per_sec`, and `predict_points_per_sec` ship
+//! unadjudicated until the next baseline refresh).
 //! Every grid gets one untimed warmup pass before its timed pass, so the
 //! numbers exclude first-touch page faults and lazy-init costs.
 //! Uses the in-tree harness (criterion is not vendored offline).
@@ -278,6 +280,64 @@ fn main() {
         fabric_points as f64 / (fabric_ms / 1e3).max(1e-9)
     );
 
+    // Prediction-serving engine: the canonical grid of all four testbeds,
+    // tiled to a ≥10k-point batch, through the batched engine vs. the
+    // one-off path that rebuilds the machine description and θ per query
+    // (the cost the scalar CLI paths pay). The batched pass runs without
+    // the cache so the number measures the hoisted-θ + matrix-product
+    // path, not cache hits. Bit-identity between the two paths is
+    // asserted point-by-point. The "predict_points_per_sec" key is new
+    // and unadjudicated until the next baseline refresh.
+    use atomics_repro::serve::{canonical_grid, ArchId, PredictEngine, PredictRequest};
+    let predict_base: Vec<PredictRequest> = ArchId::ALL
+        .iter()
+        .flat_map(|&a| {
+            canonical_grid(&a.config())
+                .into_iter()
+                .map(move |query| PredictRequest { arch: a, query })
+        })
+        .collect();
+    let repeats = 10_000 / predict_base.len() + 1;
+    let predict_reqs: Vec<PredictRequest> = (0..repeats)
+        .flat_map(|_| predict_base.iter().copied())
+        .collect();
+    let predict_points = predict_reqs.len();
+
+    let one_off = |reqs: &[PredictRequest]| -> Vec<f64> {
+        reqs.iter()
+            .map(|r| {
+                let cfg = r.arch.config();
+                let theta = Theta::from_config(&cfg);
+                atomics_repro::model::analytical::latency(&cfg, &r.query, &theta, true)
+            })
+            .collect()
+    };
+    black_box(one_off(&predict_base)); // warmup (one tile faults in everything)
+    let t0 = Instant::now();
+    let oneoff_vals = one_off(&predict_reqs);
+    let predict_oneoff_ms = t0.elapsed().as_secs_f64() * 1e3;
+    black_box(&oneoff_vals);
+
+    let mut predict_engine = PredictEngine::shipped().without_cache();
+    black_box(predict_engine.predict_batch(&predict_base).expect("grid is valid")); // warmup
+    let t0 = Instant::now();
+    let predicted = predict_engine.predict_batch(&predict_reqs).expect("grid is valid");
+    let predict_ms = t0.elapsed().as_secs_f64() * 1e3;
+    for (i, (p, v)) in predicted.iter().zip(&oneoff_vals).enumerate() {
+        assert_eq!(
+            p.latency_ns.to_bits(),
+            v.to_bits(),
+            "batched predict must be bit-identical to the one-off path at point {i} ({:?})",
+            predict_reqs[i]
+        );
+    }
+    black_box(&predicted);
+    let predict_speedup = predict_oneoff_ms / predict_ms.max(1e-9);
+    println!(
+        "  predict          {predict_ms:>10.1} ms   ({predict_points} points, {:.0} points/s, {predict_speedup:.1}x vs one-off at {predict_oneoff_ms:.1} ms)",
+        predict_points as f64 / (predict_ms / 1e3).max(1e-9)
+    );
+
     let json = format!(
         "{{\"bench\":\"sweep\",\"series\":{},\"points\":{},\"threads\":{},\
          \"single_ms\":{:.1},\"parallel_ms\":{:.1},\"speedup\":{:.3},\
@@ -290,6 +350,8 @@ fn main() {
          \"contend_runpool_n_ms\":{:.1},\"contend_runpool_scaling\":{:.3},\
          \"contend_fabric_points\":{},\"contend_fabric_ms\":{:.1},\
          \"contend_fabric_points_per_sec\":{:.1},\
+         \"predict_points\":{},\"predict_ms\":{:.1},\"predict_points_per_sec\":{:.1},\
+         \"predict_oneoff_ms\":{:.1},\"predict_speedup_vs_oneoff\":{:.2},\
          \"note\":\"one untimed warmup pass per grid before the timed pass\"}}\n",
         jobs.len(),
         n_points,
@@ -316,7 +378,12 @@ fn main() {
         runpool_scaling,
         fabric_points,
         fabric_ms,
-        fabric_points as f64 / (fabric_ms / 1e3).max(1e-9)
+        fabric_points as f64 / (fabric_ms / 1e3).max(1e-9),
+        predict_points,
+        predict_ms,
+        predict_points as f64 / (predict_ms / 1e3).max(1e-9),
+        predict_oneoff_ms,
+        predict_speedup
     );
     match std::fs::File::create("BENCH_sweep.json").and_then(|mut f| f.write_all(json.as_bytes()))
     {

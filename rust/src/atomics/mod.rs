@@ -70,6 +70,28 @@ impl OpKind {
     }
 
     pub const ALL_ATOMICS: [OpKind; 3] = [OpKind::Cas, OpKind::Faa, OpKind::Swp];
+
+    /// Every operation kind, in label order.
+    pub const ALL: [OpKind; 5] =
+        [OpKind::Read, OpKind::Write, OpKind::Cas, OpKind::Faa, OpKind::Swp];
+}
+
+/// Single-source parser for op labels: accepts any casing/punctuation of
+/// [`OpKind::label`] (plus the x86 mnemonics), so CLI flags, CSV batches,
+/// and report output all round-trip through the same table.
+impl std::str::FromStr for OpKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<OpKind, String> {
+        match crate::util::norm_token(s).as_str() {
+            "read" | "load" | "mov" => Ok(OpKind::Read),
+            "write" | "store" => Ok(OpKind::Write),
+            "cas" | "cmpxchg" => Ok(OpKind::Cas),
+            "faa" | "xadd" => Ok(OpKind::Faa),
+            "swp" | "swap" | "xchg" => Ok(OpKind::Swp),
+            _ => Err(format!("unknown op '{s}' (cas | faa | swp | read | write)")),
+        }
+    }
 }
 
 /// A fully-specified operation as issued by a benchmark or workload.
@@ -180,5 +202,15 @@ mod tests {
     fn widths() {
         assert_eq!(Width::W64.bytes(), 8);
         assert_eq!(Width::W128.bytes(), 16);
+    }
+
+    #[test]
+    fn labels_round_trip_through_fromstr() {
+        for op in OpKind::ALL {
+            assert_eq!(op.label().parse::<OpKind>(), Ok(op));
+            assert_eq!(op.label().to_lowercase().parse::<OpKind>(), Ok(op));
+        }
+        assert_eq!("Xadd".parse::<OpKind>(), Ok(OpKind::Faa));
+        assert!("bogus".parse::<OpKind>().is_err());
     }
 }

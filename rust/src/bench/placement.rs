@@ -102,6 +102,42 @@ impl PrepLocality {
     }
 }
 
+/// Single-source parser for prep-state labels, shared with the
+/// `repro latency --state` flag.
+impl std::str::FromStr for PrepState {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<PrepState, String> {
+        // The prep states mirror the model states one-to-one, so they
+        // share one parse table.
+        Ok(match s.parse::<crate::model::ModelState>()? {
+            crate::model::ModelState::E => PrepState::E,
+            crate::model::ModelState::M => PrepState::M,
+            crate::model::ModelState::S => PrepState::S,
+            crate::model::ModelState::O => PrepState::O,
+        })
+    }
+}
+
+/// Single-source parser for locality labels: any casing/punctuation of
+/// [`PrepLocality::label`] plus the historical `repro latency` aliases.
+impl std::str::FromStr for PrepLocality {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<PrepLocality, String> {
+        match crate::util::norm_token(s).as_str() {
+            "local" => Ok(PrepLocality::Local),
+            "onchip" | "samedie" | "ondie" => Ok(PrepLocality::OnChip),
+            "sharedl2" => Ok(PrepLocality::SharedL2),
+            "sharedl3otherdie" | "otherdie" | "samesocket" => Ok(PrepLocality::OtherDie),
+            "othersocket" | "socket" => Ok(PrepLocality::OtherSocket),
+            _ => Err(format!(
+                "unknown locality '{s}' (local | onchip | sharedl2 | otherdie | othersocket)"
+            )),
+        }
+    }
+}
+
 /// Core roles for one benchmark run.
 #[derive(Debug, Clone, Copy)]
 pub struct Cast {
@@ -416,5 +452,33 @@ mod tests {
         let cast = choose_cast(&m.cfg.topology, PrepLocality::Local).unwrap();
         prepare(&mut m, 0x10000, 8, PrepState::M, cast, FillPattern::Zero);
         assert_eq!(m.stats.accesses, 0, "measurement must start clean");
+    }
+
+    #[test]
+    fn prep_labels_round_trip_through_fromstr() {
+        for st in [PrepState::E, PrepState::M, PrepState::S, PrepState::O] {
+            assert_eq!(st.label().parse::<PrepState>(), Ok(st));
+            assert_eq!(st.label().to_lowercase().parse::<PrepState>(), Ok(st));
+        }
+        for loc in [
+            PrepLocality::Local,
+            PrepLocality::OnChip,
+            PrepLocality::SharedL2,
+            PrepLocality::OtherDie,
+            PrepLocality::OtherSocket,
+        ] {
+            assert_eq!(loc.label().parse::<PrepLocality>(), Ok(loc), "{}", loc.label());
+        }
+        // the historical `repro latency` CLI aliases keep parsing
+        for (alias, want) in [
+            ("onchip", PrepLocality::OnChip),
+            ("on-chip", PrepLocality::OnChip),
+            ("sharedl2", PrepLocality::SharedL2),
+            ("otherdie", PrepLocality::OtherDie),
+            ("othersocket", PrepLocality::OtherSocket),
+            ("socket", PrepLocality::OtherSocket),
+        ] {
+            assert_eq!(alias.parse::<PrepLocality>(), Ok(want), "{alias}");
+        }
     }
 }

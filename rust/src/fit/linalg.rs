@@ -57,6 +57,29 @@ pub fn matvec(a: &[f64], x: &[f64]) -> Vec<f64> {
         .collect()
 }
 
+/// `y = A·x` for a rectangular row-major `A` (`rows × cols`) — the batched
+/// prediction product of the serving layer ([`crate::serve`]): one design
+/// matrix of N featurized queries against θ in a single pass.
+///
+/// The per-row accumulation order (left-to-right from 0.0) is exactly that
+/// of [`crate::model::features::dot`], so a batched row is **bit-identical**
+/// to the one-off scalar evaluation of the same feature vector — the
+/// invariant the predict golden tests pin.
+pub fn matvec_rect(a: &[f64], rows: usize, cols: usize, x: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), rows * cols, "matrix shape");
+    assert_eq!(x.len(), cols, "vector length");
+    let mut y = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &a[r * cols..(r + 1) * cols];
+        let mut acc = 0.0;
+        for j in 0..cols {
+            acc += row[j] * x[j];
+        }
+        y.push(acc);
+    }
+    y
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -89,6 +112,27 @@ mod tests {
         assert!(cholesky_solve(vec![1.0, 2.0, 2.0, 1.0], &[1.0, 1.0]).is_none());
         // outright singular
         assert!(cholesky_solve(vec![1.0, 1.0, 1.0, 1.0], &[1.0, 1.0]).is_none());
+    }
+
+    #[test]
+    fn rect_matvec_matches_square_and_dot() {
+        // square case agrees with matvec
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        assert_eq!(matvec_rect(&a, 2, 2, &[1.5, 2.0]), matvec(&a, &[1.5, 2.0]));
+        // rectangular rows are bit-identical to the scalar dot of each row
+        let mut rng = crate::util::rng::Rng::new(11);
+        let (rows, cols) = (5, 8);
+        let a: Vec<f64> = (0..rows * cols).map(|_| rng.next_f64() * 4.0 - 2.0).collect();
+        let x: Vec<f64> = (0..cols).map(|_| rng.next_f64()).collect();
+        let y = matvec_rect(&a, rows, cols, &x);
+        for r in 0..rows {
+            let scalar: f64 = a[r * cols..(r + 1) * cols]
+                .iter()
+                .zip(&x)
+                .map(|(p, q)| p * q)
+                .sum();
+            assert_eq!(y[r].to_bits(), scalar.to_bits(), "row {r}");
+        }
     }
 
     #[test]

@@ -50,6 +50,11 @@
 //! * [`coordinator`] — dataset collection + the PJRT fit loop (the
 //!   [`fit::PjrtFit`] backend's engine room).
 //! * [`report`] — regenerates every table and figure of the paper.
+//! * [`serve`] — the prediction-serving query engine (`repro predict`):
+//!   per-arch θ tables built once, a batched design-matrix evaluator
+//!   bit-identical to the scalar model path, an LRU over canonical
+//!   queries, and a versioned CSV/JSON batch API streamed through the
+//!   run pool ([`sweep::RunPool`]).
 //! * [`harness`] — in-tree micro-benchmark harness (criterion is not
 //!   vendored in this offline environment).
 //!
@@ -101,6 +106,16 @@ pub mod harness;
 pub mod model;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod sweep;
 pub mod util;
+
+// The stable serving API at the crate root: external callers (and
+// `examples/what_if.rs`) construct queries and predict through these
+// without spelling out module paths.
+pub use model::query::{ModelState, Query, QueryBuilder, QueryError};
+pub use serve::{
+    ArchId, PredictEngine, PredictRequest, PredictResponse, ThetaTable,
+    PREDICT_SCHEMA_VERSION,
+};

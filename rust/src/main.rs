@@ -55,6 +55,18 @@
 //!                                   (--run-threads)
 //!   repro ablation                  §6.2 hardware-extension ablations
 //!   repro latency --arch A --op OP --state S --locality L [--size BYTES]
+//!   repro predict --input FILE|- [--json] [--output FILE] [--arch NAME]
+//!                 [--grid] [--fitted] [--no-cache] [--chunk N]
+//!                                   batched analytical-model predictions
+//!                                   through the serving engine: CSV or
+//!                                   JSON-lines batches of op, state,
+//!                                   level, distance [, invalidate][, arch]
+//!                                   stream results in input order over the
+//!                                   run pool (--run-threads); --grid
+//!                                   predicts the full canonical grid
+//!                                   (optionally one --arch) instead of
+//!                                   reading a file; --fitted overrides θ
+//!                                   from results/fit_theta_<arch>.csv
 //!   repro info                      testbed summaries
 //!
 //! Global flags: --fast (reduced sweeps), --artifacts DIR, --results DIR,
@@ -110,6 +122,7 @@ fn main() {
         Some("bfs") => cmd_bfs(&args),
         Some("ablation") => cmd_ablation(),
         Some("latency") => cmd_latency(&args),
+        Some("predict") => cmd_predict(&args),
         Some("info") => cmd_info(),
         Some(other) => {
             eprintln!("unknown subcommand '{other}'");
@@ -127,7 +140,7 @@ fn main() {
 fn usage() {
     eprintln!("repro — reproduction driver for 'Evaluating the Cost of Atomic Operations'");
     eprintln!(
-        "subcommands: table <n> | figure <id> | all | sweep | contend | locks | validate | fit | calibrate | bfs | ablation | latency | info"
+        "subcommands: table <n> | figure <id> | all | sweep | contend | locks | validate | fit | calibrate | bfs | ablation | latency | predict | info"
     );
     eprintln!("see README.md for details");
 }
@@ -294,16 +307,11 @@ fn cmd_sweep(args: &Args) -> i32 {
     }
 }
 
-/// Parse an `--op` CLI value (shared by `contend` and `latency`).
+/// Parse an `--op` CLI value (shared by `contend` and `latency`) through
+/// the crate's single-source [`OpKind`] parser — the same table `repro
+/// predict` batch ingest uses.
 fn parse_op(s: &str) -> Option<OpKind> {
-    match s {
-        "cas" => Some(OpKind::Cas),
-        "faa" => Some(OpKind::Faa),
-        "swp" => Some(OpKind::Swp),
-        "read" => Some(OpKind::Read),
-        "write" => Some(OpKind::Write),
-        _ => None,
-    }
+    s.parse().ok()
 }
 
 fn cmd_contend(args: &Args) -> i32 {
@@ -906,24 +914,17 @@ fn cmd_latency(args: &Args) -> i32 {
         }
         Some(op) => op,
     };
-    let state = match args.opt("state").unwrap_or("M") {
-        "E" | "e" => PrepState::E,
-        "M" | "m" => PrepState::M,
-        "S" | "s" => PrepState::S,
-        "O" | "o" => PrepState::O,
-        other => {
-            eprintln!("unknown state '{other}'");
+    let state: PrepState = match args.opt("state").unwrap_or("M").parse() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
             return 2;
         }
     };
-    let locality = match args.opt("locality").unwrap_or("local") {
-        "local" => PrepLocality::Local,
-        "onchip" | "on-chip" => PrepLocality::OnChip,
-        "sharedl2" => PrepLocality::SharedL2,
-        "otherdie" => PrepLocality::OtherDie,
-        "othersocket" | "socket" => PrepLocality::OtherSocket,
-        other => {
-            eprintln!("unknown locality '{other}'");
+    let locality: PrepLocality = match args.opt("locality").unwrap_or("local").parse() {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("{e}");
             return 2;
         }
     };
@@ -945,6 +946,134 @@ fn cmd_latency(args: &Args) -> i32 {
             1
         }
     }
+}
+
+fn cmd_predict(args: &Args) -> i32 {
+    use atomics_repro::serve::{
+        canonical_grid, parse_batch, ArchId, PredictEngine, PredictRequest, ThetaTable,
+        RESPONSE_CSV_HEADER,
+    };
+    use std::io::Write;
+
+    let default_arch = match args.opt("arch") {
+        Some(name) => match name.parse::<ArchId>() {
+            Ok(a) => Some(a),
+            Err(e) => {
+                eprintln!("{e}");
+                return 2;
+            }
+        },
+        None => None,
+    };
+
+    let reqs: Vec<PredictRequest> = if args.flag("grid") {
+        let arches: Vec<ArchId> = match default_arch {
+            Some(a) => vec![a],
+            None => ArchId::ALL.to_vec(),
+        };
+        arches
+            .iter()
+            .flat_map(|&a| {
+                canonical_grid(&a.config())
+                    .into_iter()
+                    .map(move |query| PredictRequest { arch: a, query })
+            })
+            .collect()
+    } else {
+        let Some(input) = args.opt("input") else {
+            eprintln!(
+                "usage: repro predict --input FILE|- [--json] [--output FILE] [--arch NAME] \
+                 [--grid] [--fitted] [--no-cache] [--chunk N]"
+            );
+            return 2;
+        };
+        let text = if input == "-" {
+            use std::io::Read;
+            let mut s = String::new();
+            if let Err(e) = std::io::stdin().read_to_string(&mut s) {
+                eprintln!("stdin: {e}");
+                return 2;
+            }
+            s
+        } else {
+            match std::fs::read_to_string(input) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("{input}: {e}");
+                    return 2;
+                }
+            }
+        };
+        match parse_batch(&text, default_arch) {
+            Ok(r) => r,
+            Err(e) => {
+                eprint!("{e}");
+                return 2;
+            }
+        }
+    };
+    if reqs.is_empty() {
+        eprintln!("empty batch");
+        return 2;
+    }
+
+    let table = if args.flag("fitted") {
+        ThetaTable::with_fitted_from(&atomics_repro::report::results_dir())
+    } else {
+        ThetaTable::shipped()
+    };
+    let mut engine = PredictEngine::new(table);
+    if args.flag("no-cache") {
+        engine = engine.without_cache();
+    }
+    let chunk: usize = args.opt_parse("chunk", 256).max(1);
+
+    let json = args.flag("json");
+    let mut out: Box<dyn Write> = match args.opt("output") {
+        Some(path) => match std::fs::File::create(path) {
+            Ok(f) => Box::new(std::io::BufWriter::new(f)),
+            Err(e) => {
+                eprintln!("{path}: {e}");
+                return 2;
+            }
+        },
+        None => Box::new(std::io::BufWriter::new(std::io::stdout())),
+    };
+    let mut write_failed = false;
+    if !json {
+        // response labels never contain commas/quotes, so plain joins are
+        // valid CSV here
+        if writeln!(out, "{}", RESPONSE_CSV_HEADER.join(",")).is_err() {
+            write_failed = true;
+        }
+    }
+
+    let pool = atomics_repro::sweep::RunPool::with_defaults();
+    let t0 = std::time::Instant::now();
+    let streamed = engine.predict_streaming(&reqs, &pool, chunk, |_, responses| {
+        for r in responses {
+            let line = if json { r.to_json() } else { r.csv_row().join(",") };
+            if writeln!(out, "{line}").is_err() {
+                write_failed = true;
+            }
+        }
+    });
+    if let Err(e) = streamed {
+        eprint!("{e}");
+        return 1;
+    }
+    if out.flush().is_err() || write_failed {
+        eprintln!("error writing output");
+        return 1;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "{} prediction(s) in {:.3}s ({:.0} points/s)",
+        reqs.len(),
+        elapsed,
+        reqs.len() as f64 / elapsed.max(1e-9)
+    );
+    0
 }
 
 fn cmd_info() -> i32 {

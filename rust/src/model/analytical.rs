@@ -11,6 +11,26 @@ use crate::model::query::Query;
 use crate::sim::cache::LINE_SIZE;
 use crate::sim::config::{MachineConfig, WritePolicy};
 
+/// The Table 3 O residual for one query — the non-featurized additive term
+/// of Eq. 1, shared by the scalar path ([`latency`]) and the batched
+/// serving evaluator ([`crate::serve`]) so the two cannot drift.
+pub fn overhead(cfg: &MachineConfig, q: &Query) -> f64 {
+    use crate::sim::protocol::CohState;
+    use crate::sim::timing::{LocalityClass, StateClass};
+    let state = match q.state {
+        crate::model::query::ModelState::E => CohState::E,
+        crate::model::query::ModelState::M => CohState::M,
+        crate::model::query::ModelState::S => CohState::S,
+        crate::model::query::ModelState::O => CohState::O,
+    };
+    cfg.overheads.lookup(
+        q.op,
+        StateClass::of(state),
+        q.loc.level,
+        LocalityClass::of(q.loc.distance),
+    )
+}
+
 /// Eq. 1: L(A, S) = R_O(S) + E(A) + O. The O residual is taken from the
 /// architecture's overhead table (Table 3) when `with_overheads`.
 pub fn latency(cfg: &MachineConfig, q: &Query, theta: &Theta, with_overheads: bool) -> f64 {
@@ -18,20 +38,7 @@ pub fn latency(cfg: &MachineConfig, q: &Query, theta: &Theta, with_overheads: bo
     if !with_overheads {
         return base;
     }
-    use crate::sim::timing::{LocalityClass, StateClass};
-    use crate::sim::protocol::CohState;
-    let state = match q.state {
-        crate::model::query::ModelState::E => CohState::E,
-        crate::model::query::ModelState::M => CohState::M,
-        crate::model::query::ModelState::S => CohState::S,
-        crate::model::query::ModelState::O => CohState::O,
-    };
-    base + cfg.overheads.lookup(
-        q.op,
-        StateClass::of(state),
-        q.loc.level,
-        LocalityClass::of(q.loc.distance),
-    )
+    base + overhead(cfg, q)
 }
 
 /// Eq. 9: every atomic touches a distinct line — B = C_size / L.

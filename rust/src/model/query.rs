@@ -1,7 +1,26 @@
-//! Model input space: one `Query` describes a single benchmark point the
-//! model predicts (Eq. 1): which operation, in which coherency state the
-//! line is, where the line physically lives, and how far the furthest
-//! sharer is (for the max-invalidation term of Eq. 7/8).
+//! Model input space — the crate's **stable query API**.
+//!
+//! One [`Query`] describes a single point the model predicts (Eq. 1):
+//! which operation, in which coherency state the line is, where the line
+//! physically lives, and how far the furthest sharer is (for the
+//! max-invalidation term of Eq. 7/8).
+//!
+//! Since the serving layer ([`crate::serve`]) landed, this module is the
+//! single source of truth three consumers share:
+//!
+//! * **Construction** — [`QueryBuilder`] validates field combinations
+//!   (no invalidation distance on exclusive states or plain reads)
+//!   before a [`Query`] exists; `Query::new` remains the thin positional
+//!   constructor for code that builds known-valid points.
+//! * **Parsing** — [`ModelState`] implements `FromStr` (as do
+//!   [`OpKind`], [`Level`](crate::sim::timing::Level), and
+//!   [`Distance`]), and every parser accepts its own `label()` output,
+//!   so CLI flags, CSV/JSON batches, and report text all round-trip
+//!   through the same tables.
+//! * **Canonicalization** — [`Query::canonical`] collapses
+//!   semantically-identical queries (an invalidation distance that
+//!   cannot contribute to Eq. 8) onto one representative, which is what
+//!   the predict cache keys on (DESIGN.md §11).
 
 use crate::atomics::OpKind;
 use crate::sim::timing::Level;
@@ -34,10 +53,30 @@ impl ModelState {
     pub fn is_dirty(self) -> bool {
         matches!(self, ModelState::M | ModelState::O)
     }
+
+    /// Every model state, in Eq. 1 order.
+    pub const ALL: [ModelState; 4] =
+        [ModelState::E, ModelState::M, ModelState::S, ModelState::O];
+}
+
+/// Single-source parser for state labels (case-insensitive single
+/// letters), shared by CLI parsing and CSV batch ingest.
+impl std::str::FromStr for ModelState {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<ModelState, String> {
+        match crate::util::norm_token(s).as_str() {
+            "e" | "exclusive" => Ok(ModelState::E),
+            "m" | "modified" => Ok(ModelState::M),
+            "s" | "shared" => Ok(ModelState::S),
+            "o" | "owned" => Ok(ModelState::O),
+            _ => Err(format!("unknown state '{s}' (E | M | S | O)")),
+        }
+    }
 }
 
 /// Where the line physically lives relative to the requester.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct LineLoc {
     /// Cache level holding the line (or Memory).
     pub level: Level,
@@ -46,7 +85,7 @@ pub struct LineLoc {
 }
 
 /// One model evaluation point.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Query {
     pub op: OpKind,
     pub state: ModelState,
@@ -71,6 +110,138 @@ impl Query {
         self.invalidate_distance = Some(d);
         self
     }
+
+    /// Whether the invalidation term of Eq. 8 applies: only ownership-
+    /// taking operations on shared states snoop sharers.
+    pub fn invalidates(&self) -> bool {
+        self.state.is_shared() && self.op != OpKind::Read
+    }
+
+    /// The canonical representative of this query's equivalence class —
+    /// the serving cache key (DESIGN.md §11). Two queries with the same
+    /// canonical form predict bit-identical numbers: the invalidation
+    /// distance only enters Eq. 8 when [`Query::invalidates`], so it is
+    /// dropped for exclusive states and plain reads and defaulted to the
+    /// line's own distance (exactly `Query::new`'s default) when a
+    /// shared-state atomic leaves it unset.
+    pub fn canonical(mut self) -> Query {
+        self.invalidate_distance = if self.invalidates() {
+            Some(self.invalidate_distance.unwrap_or(self.loc.distance))
+        } else {
+            None
+        };
+        self
+    }
+}
+
+/// Why a [`QueryBuilder`] refused to build.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum QueryError {
+    /// An invalidation distance was given for a state with no sharers
+    /// (E/M — Eq. 2 has no invalidation term).
+    InvalidateOnExclusive { state: ModelState },
+    /// An invalidation distance was given for a plain read (reads never
+    /// take ownership, so Eq. 8's max-term never applies).
+    InvalidateOnRead,
+}
+
+impl std::fmt::Display for QueryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueryError::InvalidateOnExclusive { state } => write!(
+                f,
+                "invalidate distance is meaningless for state {} (no sharers to invalidate)",
+                state.label()
+            ),
+            QueryError::InvalidateOnRead => {
+                write!(f, "invalidate distance is meaningless for a plain read")
+            }
+        }
+    }
+}
+
+impl std::error::Error for QueryError {}
+
+/// Validating constructor for [`Query`] — the serving API's front door.
+///
+/// `Query::new` silently accepts any field combination; the builder
+/// instead rejects combinations the model defines no semantics for, so
+/// batch ingest surfaces bad rows instead of predicting nonsense:
+///
+/// ```
+/// use atomics_repro::atomics::OpKind;
+/// use atomics_repro::model::query::{ModelState, QueryBuilder};
+/// use atomics_repro::sim::timing::Level;
+/// use atomics_repro::sim::topology::Distance;
+///
+/// let q = QueryBuilder::new(OpKind::Cas, ModelState::S)
+///     .level(Level::L3)
+///     .distance(Distance::SameDie)
+///     .invalidate(Distance::OtherSocket)
+///     .build()
+///     .unwrap();
+/// assert_eq!(q.invalidate_distance, Some(Distance::OtherSocket));
+///
+/// // E-state lines have no sharers — an invalidate distance is an error.
+/// assert!(QueryBuilder::new(OpKind::Cas, ModelState::E)
+///     .invalidate(Distance::SameDie)
+///     .build()
+///     .is_err());
+/// ```
+#[derive(Debug, Clone, Copy)]
+pub struct QueryBuilder {
+    op: OpKind,
+    state: ModelState,
+    level: Level,
+    distance: Distance,
+    invalidate: Option<Distance>,
+}
+
+impl QueryBuilder {
+    /// Start a query for `op` on a line in `state`; the line defaults to
+    /// the requester's own L1 until [`QueryBuilder::level`] /
+    /// [`QueryBuilder::distance`] place it elsewhere.
+    pub fn new(op: OpKind, state: ModelState) -> QueryBuilder {
+        QueryBuilder { op, state, level: Level::L1, distance: Distance::Local, invalidate: None }
+    }
+
+    /// Cache level holding the line (or Memory).
+    pub fn level(mut self, level: Level) -> QueryBuilder {
+        self.level = level;
+        self
+    }
+
+    /// Distance class from the requester to the line's holder.
+    pub fn distance(mut self, distance: Distance) -> QueryBuilder {
+        self.distance = distance;
+        self
+    }
+
+    /// Distance to the furthest sharer to invalidate (Eq. 8's max-term).
+    /// Only valid for shared states under ownership-taking operations;
+    /// left unset, shared states default to the line's own distance.
+    pub fn invalidate(mut self, d: Distance) -> QueryBuilder {
+        self.invalidate = Some(d);
+        self
+    }
+
+    /// Validate and build. The result is already canonical
+    /// ([`Query::canonical`]).
+    pub fn build(self) -> Result<Query, QueryError> {
+        if let Some(_d) = self.invalidate {
+            if !self.state.is_shared() {
+                return Err(QueryError::InvalidateOnExclusive { state: self.state });
+            }
+            if self.op == OpKind::Read {
+                return Err(QueryError::InvalidateOnRead);
+            }
+        }
+        let mut q = Query::new(self.op, self.state, self.level, self.distance);
+        if let Some(d) = self.invalidate {
+            q = q.with_invalidate(d);
+        }
+        Ok(q.canonical())
+    }
 }
 
 #[cfg(test)]
@@ -91,5 +262,67 @@ mod tests {
         assert!(ModelState::O.is_shared() && ModelState::O.is_dirty());
         assert!(ModelState::M.is_dirty() && !ModelState::M.is_shared());
         assert!(!ModelState::E.is_dirty());
+    }
+
+    #[test]
+    fn state_labels_round_trip() {
+        for s in ModelState::ALL {
+            assert_eq!(s.label().parse::<ModelState>(), Ok(s));
+            assert_eq!(s.label().to_lowercase().parse::<ModelState>(), Ok(s));
+        }
+        assert!("Q".parse::<ModelState>().is_err());
+    }
+
+    #[test]
+    fn canonical_drops_unusable_invalidation() {
+        // a read of a shared line never invalidates — canonical form drops
+        // the distance Query::new defaulted in
+        let q = Query::new(OpKind::Read, ModelState::S, Level::L3, Distance::SameDie);
+        assert_eq!(q.invalidate_distance, Some(Distance::SameDie));
+        assert_eq!(q.canonical().invalidate_distance, None);
+        // an E-state CAS can't invalidate either
+        let q = Query::new(OpKind::Cas, ModelState::E, Level::L2, Distance::Local)
+            .with_invalidate(Distance::SameDie);
+        assert_eq!(q.canonical().invalidate_distance, None);
+        // a shared-state atomic with the distance unset gets the default
+        let mut q = Query::new(OpKind::Faa, ModelState::O, Level::L3, Distance::SameDie);
+        q.invalidate_distance = None;
+        assert_eq!(q.canonical().invalidate_distance, Some(Distance::SameDie));
+        // canonicalizing twice is a no-op
+        assert_eq!(q.canonical(), q.canonical().canonical());
+    }
+
+    #[test]
+    fn builder_validates_invalidation() {
+        assert_eq!(
+            QueryBuilder::new(OpKind::Cas, ModelState::E)
+                .invalidate(Distance::SameDie)
+                .build(),
+            Err(QueryError::InvalidateOnExclusive { state: ModelState::E })
+        );
+        assert_eq!(
+            QueryBuilder::new(OpKind::Read, ModelState::S)
+                .invalidate(Distance::SameDie)
+                .build(),
+            Err(QueryError::InvalidateOnRead)
+        );
+        let q = QueryBuilder::new(OpKind::Swp, ModelState::O)
+            .level(Level::L3)
+            .distance(Distance::SameDie)
+            .build()
+            .unwrap();
+        assert_eq!(q.invalidate_distance, Some(Distance::SameDie));
+    }
+
+    #[test]
+    fn builder_matches_query_new() {
+        // On valid inputs the builder and the positional constructor agree.
+        let b = QueryBuilder::new(OpKind::Cas, ModelState::S)
+            .level(Level::L3)
+            .distance(Distance::SameDie)
+            .build()
+            .unwrap();
+        let n = Query::new(OpKind::Cas, ModelState::S, Level::L3, Distance::SameDie);
+        assert_eq!(b, n.canonical());
     }
 }

@@ -324,12 +324,25 @@ pub fn figure8_with(pool: &crate::sweep::RunPool) -> String {
     for cfg in [arch::ivybridge(), arch::bulldozer(), arch::xeonphi()] {
         let counts = paper_thread_counts(&cfg);
 
+        // column labels come from the single-source op labels, like every
+        // other emitter since the serving layer landed
+        let ana = |op: OpKind| format!("{} ana", op.label());
+        let header = [
+            "threads".to_string(),
+            OpKind::Cas.label().to_string(),
+            OpKind::Faa.label().to_string(),
+            OpKind::Write.label().to_string(),
+            ana(OpKind::Cas),
+            ana(OpKind::Faa),
+            ana(OpKind::Write),
+        ];
+        let header: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
         let mut t = Table::new(
             format!(
                 "Figure 8 — {} contended bandwidth [GB/s] vs threads (machine-accurate | analytic)",
                 cfg.name
             ),
-            &["threads", "CAS", "FAA", "write", "CAS ana", "FAA ana", "write ana"],
+            &header,
         );
         let mut csv = crate::util::csv::Csv::new(&[
             "threads",

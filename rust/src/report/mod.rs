@@ -77,13 +77,20 @@ pub fn fast_mode() -> bool {
     cfg!(test) || std::env::var("FAST").is_ok()
 }
 
-/// The sweep used by figure regeneration.
-pub fn sweep_sizes() -> Vec<usize> {
-    if fast_mode() {
+/// The sweep used by figure regeneration, with fast-mode as an explicit
+/// parameter — the programmatic API (examples, external callers) passes
+/// its own choice instead of mutating the `FAST` env var.
+pub fn sweep_sizes_with(fast: bool) -> Vec<usize> {
+    if fast {
         crate::bench::size_sweep_small()
     } else {
         crate::bench::size_sweep()
     }
+}
+
+/// The sweep used by figure regeneration (env-driven: [`fast_mode`]).
+pub fn sweep_sizes() -> Vec<usize> {
+    sweep_sizes_with(fast_mode())
 }
 
 #[cfg(test)]

@@ -1,0 +1,494 @@
+//! The stable serving API: versioned request/response types and their
+//! CSV / JSON-lines wire formats.
+//!
+//! One [`PredictRequest`] is one model point (`(arch, query)`); one
+//! [`PredictResponse`] is that point plus the Eq. 1 latency and Eq. 9
+//! distinct-line bandwidth. Responses carry
+//! [`PREDICT_SCHEMA_VERSION`] in their JSON form (`"v"`), so external
+//! consumers can detect schema changes.
+//!
+//! Both ingest formats parse **exclusively** through the crate's
+//! single-source `FromStr` impls ([`OpKind`], [`ModelState`],
+//! [`Level`], [`Distance`], [`ArchId`]) and validate through
+//! [`QueryBuilder`], so a CSV batch, a JSON batch, and a CLI flag all
+//! accept exactly the same spellings — any `label()` output round-trips.
+//! Malformed batches fail with a [`BatchError`] naming every bad line,
+//! not just the first.
+
+use crate::atomics::OpKind;
+use crate::model::query::{ModelState, Query, QueryBuilder};
+use crate::serve::theta::ArchId;
+use crate::sim::timing::Level;
+use crate::sim::topology::Distance;
+use crate::util::csv::split_line;
+use crate::util::norm_token;
+
+/// Version of the `repro predict` response schema (the `"v"` field of the
+/// JSON form). Bump on any breaking change to field names or semantics.
+pub const PREDICT_SCHEMA_VERSION: u32 = 1;
+
+/// One point to predict: a testbed and a (validated, canonical) query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PredictRequest {
+    pub arch: ArchId,
+    pub query: Query,
+}
+
+impl PredictRequest {
+    pub fn new(arch: ArchId, query: Query) -> PredictRequest {
+        PredictRequest { arch, query: query.canonical() }
+    }
+}
+
+/// One prediction: the request echoed back plus the model outputs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PredictResponse {
+    pub arch: ArchId,
+    pub query: Query,
+    /// Eq. 1 latency in ns (with the Table 3 residual).
+    pub latency_ns: f64,
+    /// Eq. 9 distinct-line bandwidth in GB/s.
+    pub bandwidth_gbs: f64,
+}
+
+/// CSV header of the response stream (input columns echoed, outputs
+/// appended).
+pub const RESPONSE_CSV_HEADER: [&str; 8] = [
+    "op", "state", "level", "distance", "invalidate", "arch", "latency_ns", "bandwidth_gbs",
+];
+
+impl PredictResponse {
+    /// Cells matching [`RESPONSE_CSV_HEADER`]; `invalidate` is `-` when
+    /// the canonical query carries none.
+    pub fn csv_row(&self) -> Vec<String> {
+        let q = &self.query;
+        vec![
+            q.op.label().to_string(),
+            q.state.label().to_string(),
+            q.loc.level.label().to_string(),
+            q.loc.distance.label().to_string(),
+            q.invalidate_distance.map(|d| d.label().to_string()).unwrap_or_else(|| "-".into()),
+            self.arch.slug().to_string(),
+            format!("{}", self.latency_ns),
+            format!("{}", self.bandwidth_gbs),
+        ]
+    }
+
+    /// The JSON-lines form, led by the schema version. Every string field
+    /// is a `label()`/`slug()` output, so the object round-trips through
+    /// [`parse_batch`] as a request.
+    pub fn to_json(&self) -> String {
+        let q = &self.query;
+        let invalidate = match q.invalidate_distance {
+            Some(d) => format!("\"{}\"", d.label()),
+            None => "null".to_string(),
+        };
+        format!(
+            "{{\"v\":{},\"arch\":\"{}\",\"op\":\"{}\",\"state\":\"{}\",\"level\":\"{}\",\
+             \"distance\":\"{}\",\"invalidate\":{},\"latency_ns\":{},\"bandwidth_gbs\":{}}}",
+            PREDICT_SCHEMA_VERSION,
+            self.arch.slug(),
+            q.op.label(),
+            q.state.label(),
+            q.loc.level.label(),
+            q.loc.distance.label(),
+            invalidate,
+            self.latency_ns,
+            self.bandwidth_gbs,
+        )
+    }
+}
+
+/// Every failed line of a batch, in line order (1-based line numbers of
+/// the input text; for programmatic batches, 1-based request ordinals).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BatchError {
+    pub errors: Vec<(usize, String)>,
+}
+
+impl std::fmt::Display for BatchError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(f, "{} bad record(s) in batch:", self.errors.len())?;
+        for (line, msg) in self.errors.iter().take(20) {
+            writeln!(f, "  line {line}: {msg}")?;
+        }
+        if self.errors.len() > 20 {
+            writeln!(f, "  ... and {} more", self.errors.len() - 20)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for BatchError {}
+
+/// Parse a batch of requests from text — CSV (default) or JSON-lines
+/// (sniffed: first non-whitespace character `{`). `default_arch` fills
+/// rows/objects without an `arch` field; with no default, such rows are
+/// errors. All bad lines are collected into one [`BatchError`].
+pub fn parse_batch(
+    text: &str,
+    default_arch: Option<ArchId>,
+) -> Result<Vec<PredictRequest>, BatchError> {
+    match text.trim_start().chars().next() {
+        Some('{') => parse_json_lines(text, default_arch),
+        _ => parse_csv(text, default_arch),
+    }
+}
+
+/// Field bag one row/object reduces to before becoming a request.
+#[derive(Default)]
+struct RawRecord {
+    op: Option<String>,
+    state: Option<String>,
+    level: Option<String>,
+    distance: Option<String>,
+    invalidate: Option<String>,
+    arch: Option<String>,
+}
+
+impl RawRecord {
+    fn set(&mut self, key: &str, value: String) -> Result<(), String> {
+        let slot = match norm_token(key).as_str() {
+            "op" => &mut self.op,
+            "state" => &mut self.state,
+            "level" => &mut self.level,
+            "distance" => &mut self.distance,
+            "invalidate" | "invalidatedistance" => &mut self.invalidate,
+            "arch" => &mut self.arch,
+            // response echo fields are ignored so emitted JSON round-trips
+            "v" | "latencyns" | "bandwidthgbs" => return Ok(()),
+            _ => return Err(format!("unknown field '{key}'")),
+        };
+        *slot = Some(value);
+        Ok(())
+    }
+
+    fn build(self, default_arch: Option<ArchId>) -> Result<PredictRequest, String> {
+        let need = |v: Option<String>, name: &str| {
+            v.filter(|s| !s.trim().is_empty())
+                .ok_or_else(|| format!("missing field '{name}'"))
+        };
+        let op: OpKind = need(self.op, "op")?.parse()?;
+        let state: ModelState = need(self.state, "state")?.parse()?;
+        let level: Level = need(self.level, "level")?.parse()?;
+        let distance: Distance = need(self.distance, "distance")?.parse()?;
+        let arch = match self.arch.filter(|s| !s.trim().is_empty()) {
+            Some(s) => s.parse::<ArchId>()?,
+            None => default_arch.ok_or_else(|| {
+                "missing field 'arch' (no --arch default given)".to_string()
+            })?,
+        };
+        let mut b = QueryBuilder::new(op, state).level(level).distance(distance);
+        if let Some(inv) = self.invalidate {
+            let inv = inv.trim();
+            if !(inv.is_empty() || inv == "-" || norm_token(inv) == "none" || norm_token(inv) == "null")
+            {
+                b = b.invalidate(inv.parse::<Distance>()?);
+            }
+        }
+        let query = b.build().map_err(|e| e.to_string())?;
+        Ok(PredictRequest { arch, query })
+    }
+}
+
+fn parse_csv(
+    text: &str,
+    default_arch: Option<ArchId>,
+) -> Result<Vec<PredictRequest>, BatchError> {
+    let mut lines = text.lines().enumerate();
+    let (header_line, header) = loop {
+        match lines.next() {
+            Some((_, l)) if l.trim().is_empty() => continue,
+            Some((i, l)) => break (i + 1, l),
+            None => return Ok(Vec::new()),
+        }
+    };
+    let columns: Vec<String> = split_line(header).iter().map(|c| c.trim().to_string()).collect();
+    {
+        // header must name known fields (this also rejects header-less data)
+        let mut probe = RawRecord::default();
+        for c in &columns {
+            if let Err(e) = probe.set(c, String::new()) {
+                return Err(BatchError {
+                    errors: vec![(header_line, format!("bad header: {e}"))],
+                });
+            }
+        }
+    }
+    let mut out = Vec::new();
+    let mut errors = Vec::new();
+    for (i, line) in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let lineno = i + 1;
+        let cells = split_line(line);
+        if cells.len() != columns.len() {
+            errors.push((
+                lineno,
+                format!("expected {} cells, got {}", columns.len(), cells.len()),
+            ));
+            continue;
+        }
+        let mut rec = RawRecord::default();
+        let mut ok = true;
+        for (col, cell) in columns.iter().zip(cells) {
+            if let Err(e) = rec.set(col, cell) {
+                errors.push((lineno, e));
+                ok = false;
+                break;
+            }
+        }
+        if !ok {
+            continue;
+        }
+        match rec.build(default_arch) {
+            Ok(r) => out.push(r),
+            Err(e) => errors.push((lineno, e)),
+        }
+    }
+    if errors.is_empty() {
+        Ok(out)
+    } else {
+        Err(BatchError { errors })
+    }
+}
+
+fn parse_json_lines(
+    text: &str,
+    default_arch: Option<ArchId>,
+) -> Result<Vec<PredictRequest>, BatchError> {
+    let mut out = Vec::new();
+    let mut errors = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let lineno = i + 1;
+        let parsed = parse_flat_object(line).and_then(|pairs| {
+            let mut rec = RawRecord::default();
+            for (k, v) in pairs {
+                rec.set(&k, v)?;
+            }
+            rec.build(default_arch)
+        });
+        match parsed {
+            Ok(r) => out.push(r),
+            Err(e) => errors.push((lineno, e)),
+        }
+    }
+    if errors.is_empty() {
+        Ok(out)
+    } else {
+        Err(BatchError { errors })
+    }
+}
+
+/// Parse one flat JSON object (`{"key": "value", "n": 1.5, "x": null}`)
+/// into key/value string pairs — the subset of JSON the predict wire
+/// format needs (no nesting, no arrays; serde is not vendored in this
+/// offline image). `null` becomes the empty string.
+fn parse_flat_object(line: &str) -> Result<Vec<(String, String)>, String> {
+    let mut chars = line.chars().peekable();
+    let mut pairs = Vec::new();
+
+    fn skip_ws(chars: &mut std::iter::Peekable<std::str::Chars>) {
+        while chars.peek().is_some_and(|c| c.is_whitespace()) {
+            chars.next();
+        }
+    }
+
+    fn parse_string(chars: &mut std::iter::Peekable<std::str::Chars>) -> Result<String, String> {
+        if chars.next() != Some('"') {
+            return Err("expected '\"'".to_string());
+        }
+        let mut s = String::new();
+        loop {
+            match chars.next() {
+                Some('"') => return Ok(s),
+                Some('\\') => match chars.next() {
+                    Some('"') => s.push('"'),
+                    Some('\\') => s.push('\\'),
+                    Some('/') => s.push('/'),
+                    Some('n') => s.push('\n'),
+                    Some('t') => s.push('\t'),
+                    Some(c) => return Err(format!("unsupported escape '\\{c}'")),
+                    None => return Err("unterminated string".to_string()),
+                },
+                Some(c) => s.push(c),
+                None => return Err("unterminated string".to_string()),
+            }
+        }
+    }
+
+    skip_ws(&mut chars);
+    if chars.next() != Some('{') {
+        return Err("expected '{'".to_string());
+    }
+    skip_ws(&mut chars);
+    if chars.peek() == Some(&'}') {
+        chars.next();
+    } else {
+        loop {
+            skip_ws(&mut chars);
+            let key = parse_string(&mut chars).map_err(|e| format!("bad key: {e}"))?;
+            skip_ws(&mut chars);
+            if chars.next() != Some(':') {
+                return Err(format!("expected ':' after key '{key}'"));
+            }
+            skip_ws(&mut chars);
+            let value = if chars.peek() == Some(&'"') {
+                parse_string(&mut chars).map_err(|e| format!("bad value for '{key}': {e}"))?
+            } else {
+                // bare token: number / null / true / false
+                let mut tok = String::new();
+                while chars.peek().is_some_and(|&c| c != ',' && c != '}' && !c.is_whitespace()) {
+                    tok.push(chars.next().unwrap());
+                }
+                if tok.is_empty() {
+                    return Err(format!("missing value for '{key}'"));
+                }
+                if tok == "null" {
+                    String::new()
+                } else {
+                    tok
+                }
+            };
+            pairs.push((key, value));
+            skip_ws(&mut chars);
+            match chars.next() {
+                Some(',') => continue,
+                Some('}') => break,
+                _ => return Err("expected ',' or '}'".to_string()),
+            }
+        }
+    }
+    skip_ws(&mut chars);
+    if chars.next().is_some() {
+        return Err("trailing characters after object".to_string());
+    }
+    Ok(pairs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_batch_parses_labels_and_aliases() {
+        let text = "op,state,level,distance,invalidate,arch\n\
+                    CAS,S,L3,on chip,other socket,haswell\n\
+                    faa,m,l2,local,-,ivy_bridge\n\
+                    read,S,L3,\"shared L3 domain (other die)\",,bulldozer\n";
+        let reqs = parse_batch(text, None).unwrap();
+        assert_eq!(reqs.len(), 3);
+        assert_eq!(reqs[0].arch, ArchId::Haswell);
+        assert_eq!(reqs[0].query.op, OpKind::Cas);
+        assert_eq!(reqs[0].query.invalidate_distance, Some(Distance::OtherSocket));
+        assert_eq!(reqs[1].arch, ArchId::IvyBridge);
+        assert_eq!(reqs[1].query.invalidate_distance, None);
+        assert_eq!(reqs[2].query.loc.distance, Distance::SameSocket);
+        // canonical: a read never invalidates
+        assert_eq!(reqs[2].query.invalidate_distance, None);
+    }
+
+    #[test]
+    fn csv_columns_may_be_reordered_and_arch_defaulted() {
+        let text = "arch,distance,level,state,op\nhaswell,local,L1,M,swp\n";
+        let reqs = parse_batch(text, None).unwrap();
+        assert_eq!(reqs[0].query.op, OpKind::Swp);
+        let text = "op,state,level,distance\ncas,E,L1,local\n";
+        let reqs = parse_batch(text, Some(ArchId::XeonPhi)).unwrap();
+        assert_eq!(reqs[0].arch, ArchId::XeonPhi);
+        assert!(parse_batch(text, None).is_err(), "no arch column and no default");
+    }
+
+    #[test]
+    fn malformed_csv_reports_every_bad_line() {
+        let text = "op,state,level,distance,arch\n\
+                    cas,E,L1,local,haswell\n\
+                    zap,E,L1,local,haswell\n\
+                    cas,E,L9,local,haswell\n\
+                    cas,E,L1,local\n\
+                    cas,E,L1,local,alpha\n";
+        let err = parse_batch(text, None).unwrap_err();
+        let lines: Vec<usize> = err.errors.iter().map(|&(l, _)| l).collect();
+        assert_eq!(lines, vec![3, 4, 5, 6]);
+        assert!(err.errors[0].1.contains("unknown op"), "{err}");
+        assert!(err.errors[2].1.contains("cells"), "{err}");
+        let shown = err.to_string();
+        assert!(shown.contains("line 3") && shown.contains("line 6"), "{shown}");
+    }
+
+    #[test]
+    fn bad_header_is_an_error() {
+        let err = parse_batch("op,state,level,distance,frobnicate\n", None).unwrap_err();
+        assert!(err.errors[0].1.contains("bad header"), "{err}");
+    }
+
+    #[test]
+    fn invalid_query_semantics_surface_per_line() {
+        // invalidate on an E-state line: QueryBuilder must reject
+        let text = "op,state,level,distance,invalidate,arch\n\
+                    cas,E,L1,local,on chip,haswell\n";
+        let err = parse_batch(text, None).unwrap_err();
+        assert!(err.errors[0].1.contains("meaningless"), "{err}");
+    }
+
+    #[test]
+    fn json_lines_parse_and_response_round_trips() {
+        let text = "{\"op\":\"CAS\",\"state\":\"S\",\"level\":\"L3\",\
+                    \"distance\":\"on chip\",\"invalidate\":null,\"arch\":\"haswell\"}\n";
+        let reqs = parse_batch(text, None).unwrap();
+        assert_eq!(reqs.len(), 1);
+        let r = reqs[0];
+        let resp = PredictResponse {
+            arch: r.arch,
+            query: r.query,
+            latency_ns: 12.5,
+            bandwidth_gbs: 5.12,
+        };
+        let json = resp.to_json();
+        assert!(json.starts_with(&format!("{{\"v\":{PREDICT_SCHEMA_VERSION},")), "{json}");
+        // the emitted response parses back to the same request
+        let back = parse_batch(&json, None).unwrap();
+        assert_eq!(back, reqs);
+    }
+
+    #[test]
+    fn malformed_json_reports_line_numbers() {
+        let text = "{\"op\":\"cas\",\"state\":\"E\",\"level\":\"L1\",\"distance\":\"local\",\"arch\":\"haswell\"}\n\
+                    {\"op\":\"cas\" \"state\":\"E\"}\n\
+                    {\"op\":\"cas\",\"state\":\"E\",\"level\":\"L1\",\"distance\":\"local\",\"arch\":\"mars\"}\n";
+        let err = parse_batch(text, None).unwrap_err();
+        let lines: Vec<usize> = err.errors.iter().map(|&(l, _)| l).collect();
+        assert_eq!(lines, vec![2, 3]);
+    }
+
+    #[test]
+    fn csv_row_matches_header_shape() {
+        let reqs = parse_batch(
+            "op,state,level,distance,arch\ncas,S,L3,on chip,haswell\n",
+            None,
+        )
+        .unwrap();
+        let resp = PredictResponse {
+            arch: reqs[0].arch,
+            query: reqs[0].query,
+            latency_ns: 1.0,
+            bandwidth_gbs: 64.0,
+        };
+        assert_eq!(resp.csv_row().len(), RESPONSE_CSV_HEADER.len());
+        // and the row's input cells parse back through the CSV path
+        let mut csv = crate::util::csv::Csv::new(&RESPONSE_CSV_HEADER);
+        csv.row(&resp.csv_row());
+        let back = parse_batch(&csv.to_string(), None).unwrap();
+        assert_eq!(back[0], reqs[0]);
+    }
+
+    #[test]
+    fn empty_input_is_an_empty_batch() {
+        assert_eq!(parse_batch("", None).unwrap(), Vec::new());
+        assert_eq!(parse_batch("\n\n", None).unwrap(), Vec::new());
+    }
+}

@@ -1,0 +1,96 @@
+//! Batched model evaluation: N queries → one design matrix → one
+//! rectangular matrix–vector product.
+//!
+//! The one-off path ([`crate::model::analytical::latency`]) featurizes a
+//! query and dots it against θ; this module stacks N feature rows into an
+//! `N × FEATURE_DIM` design matrix and evaluates them in a single
+//! [`matvec_rect`] pass, then adds the same Table 3 residual
+//! ([`analytical::overhead`]) per row. Because `matvec_rect` replicates
+//! [`dot`](crate::model::features::dot)'s accumulation order and the
+//! residual is literally the shared function, every batched value is
+//! **bit-identical** to the scalar evaluation of the same query — the
+//! invariant `tests/predict_serve.rs` pins on all four testbeds.
+
+use crate::fit::linalg::matvec_rect;
+use crate::model::analytical;
+use crate::model::features::{featurize, FEATURE_DIM};
+use crate::model::params::Theta;
+use crate::model::query::Query;
+use crate::sim::cache::LINE_SIZE;
+use crate::sim::config::MachineConfig;
+
+/// Stack the feature rows of `queries` into a row-major
+/// `queries.len() × FEATURE_DIM` design matrix.
+pub fn design_matrix(cfg: &MachineConfig, queries: &[Query]) -> Vec<f64> {
+    let mut a = Vec::with_capacity(queries.len() * FEATURE_DIM);
+    for q in queries {
+        a.extend_from_slice(&featurize(cfg, q));
+    }
+    a
+}
+
+/// Eq. 1 latency for every query in one pass (with the Table 3 residual),
+/// bit-identical per element to `analytical::latency(cfg, q, theta, true)`.
+pub fn latency_batch(cfg: &MachineConfig, theta: &Theta, queries: &[Query]) -> Vec<f64> {
+    let a = design_matrix(cfg, queries);
+    let mut y = matvec_rect(&a, queries.len(), FEATURE_DIM, &theta.to_vec());
+    for (l, q) in y.iter_mut().zip(queries) {
+        *l += analytical::overhead(cfg, q);
+    }
+    y
+}
+
+/// Eq. 9 distinct-line bandwidth from a latency, bit-identical to
+/// [`analytical::bandwidth_distinct_lines`].
+pub fn bandwidth_from_latency(latency_ns: f64) -> f64 {
+    LINE_SIZE as f64 / latency_ns
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+    use crate::atomics::OpKind;
+    use crate::model::query::ModelState;
+    use crate::sim::timing::Level;
+    use crate::sim::topology::Distance;
+
+    #[test]
+    fn batched_rows_are_bit_identical_to_scalar_path() {
+        for cfg in arch::all() {
+            let theta = Theta::from_config(&cfg);
+            let mut queries = Vec::new();
+            for op in OpKind::ALL {
+                for state in ModelState::ALL {
+                    queries.push(
+                        Query::new(op, state, Level::L2, Distance::Local).canonical(),
+                    );
+                }
+            }
+            let batched = latency_batch(&cfg, &theta, &queries);
+            for (q, &got) in queries.iter().zip(&batched) {
+                let scalar = analytical::latency(&cfg, q, &theta, true);
+                assert_eq!(got.to_bits(), scalar.to_bits(), "{}: {q:?}", cfg.name);
+            }
+        }
+    }
+
+    #[test]
+    fn eq9_bandwidth_matches_analytical() {
+        let cfg = arch::haswell();
+        let theta = Theta::from_config(&cfg);
+        let q = Query::new(OpKind::Cas, ModelState::M, Level::L3, Distance::SameDie);
+        let l = analytical::latency(&cfg, &q, &theta, true);
+        assert_eq!(
+            bandwidth_from_latency(l).to_bits(),
+            analytical::bandwidth_distinct_lines(&cfg, &q, &theta).to_bits()
+        );
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let cfg = arch::haswell();
+        let theta = Theta::from_config(&cfg);
+        assert!(latency_batch(&cfg, &theta, &[]).is_empty());
+    }
+}

@@ -1,0 +1,223 @@
+//! A small intrusive-list LRU cache for the prediction engine.
+//!
+//! Keys are canonicalized `(arch, query)` pairs —
+//! [`Query::canonical`](crate::model::query::Query::canonical) collapses
+//! equivalent queries first, so one cache entry serves every spelling of
+//! the same point (DESIGN.md §11). The implementation is a slab of
+//! doubly-linked slots indexed by a [`FastMap`], so `get`/`insert` are
+//! O(1) and eviction never scans. Hit/miss counters surface through
+//! [`PredictEngine::cache_stats`](crate::serve::PredictEngine::cache_stats).
+
+use crate::util::fxhash::FastMap;
+use std::hash::Hash;
+
+const NIL: usize = usize::MAX;
+
+#[derive(Debug, Clone)]
+struct Slot<K, V> {
+    key: K,
+    val: V,
+    prev: usize,
+    next: usize,
+}
+
+/// Least-recently-used map with a fixed capacity (≥ 1).
+#[derive(Debug, Clone)]
+pub struct Lru<K: Hash + Eq + Clone, V> {
+    cap: usize,
+    map: FastMap<K, usize>,
+    slots: Vec<Slot<K, V>>,
+    head: usize,
+    tail: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl<K: Hash + Eq + Clone, V> Lru<K, V> {
+    pub fn new(capacity: usize) -> Lru<K, V> {
+        let cap = capacity.max(1);
+        Lru {
+            cap,
+            map: FastMap::default(),
+            slots: Vec::with_capacity(cap.min(1024)),
+            head: NIL,
+            tail: NIL,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Look up `k`, marking it most-recently used on a hit.
+    pub fn get(&mut self, k: &K) -> Option<&V> {
+        match self.map.get(k) {
+            Some(&i) => {
+                self.hits += 1;
+                self.touch(i);
+                Some(&self.slots[i].val)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) `k`, evicting the least-recently-used entry
+    /// when full.
+    pub fn insert(&mut self, k: K, v: V) {
+        if let Some(&i) = self.map.get(&k) {
+            self.slots[i].val = v;
+            self.touch(i);
+            return;
+        }
+        let i = if self.slots.len() == self.cap {
+            let t = self.tail;
+            self.unlink(t);
+            let old_key = std::mem::replace(&mut self.slots[t].key, k.clone());
+            self.map.remove(&old_key);
+            self.slots[t].val = v;
+            t
+        } else {
+            self.slots.push(Slot { key: k.clone(), val: v, prev: NIL, next: NIL });
+            self.slots.len() - 1
+        };
+        self.map.insert(k, i);
+        self.push_front(i);
+    }
+
+    fn touch(&mut self, i: usize) {
+        if self.head == i {
+            return;
+        }
+        self.unlink(i);
+        self.push_front(i);
+    }
+
+    fn unlink(&mut self, i: usize) {
+        let (p, n) = (self.slots[i].prev, self.slots[i].next);
+        if p != NIL {
+            self.slots[p].next = n;
+        } else {
+            self.head = n;
+        }
+        if n != NIL {
+            self.slots[n].prev = p;
+        } else {
+            self.tail = p;
+        }
+        self.slots[i].prev = NIL;
+        self.slots[i].next = NIL;
+    }
+
+    fn push_front(&mut self, i: usize) {
+        self.slots[i].prev = NIL;
+        self.slots[i].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = i;
+        }
+        self.head = i;
+        if self.tail == NIL {
+            self.tail = i;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stores_and_retrieves() {
+        let mut c: Lru<u64, u64> = Lru::new(8);
+        assert!(c.get(&1).is_none());
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.get(&1), Some(&10));
+        assert_eq!(c.get(&2), Some(&20));
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.hits(), 2);
+        assert_eq!(c.misses(), 1);
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: Lru<u64, u64> = Lru::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert_eq!(c.get(&1), Some(&10)); // 1 is now most recent
+        c.insert(3, 30); // evicts 2
+        assert!(c.get(&2).is_none());
+        assert_eq!(c.get(&1), Some(&10));
+        assert_eq!(c.get(&3), Some(&30));
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn insert_refreshes_existing_key() {
+        let mut c: Lru<u64, u64> = Lru::new(2);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        c.insert(1, 11); // refresh, not a new entry — 2 stays
+        c.insert(3, 30); // evicts 2 (1 was refreshed)
+        assert_eq!(c.get(&1), Some(&11));
+        assert!(c.get(&2).is_none());
+        assert_eq!(c.get(&3), Some(&30));
+    }
+
+    #[test]
+    fn capacity_one_works() {
+        let mut c: Lru<u64, u64> = Lru::new(1);
+        c.insert(1, 10);
+        c.insert(2, 20);
+        assert!(c.get(&1).is_none());
+        assert_eq!(c.get(&2), Some(&20));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn zero_capacity_clamps_to_one() {
+        let mut c: Lru<u64, u64> = Lru::new(0);
+        assert_eq!(c.capacity(), 1);
+        c.insert(1, 10);
+        assert_eq!(c.get(&1), Some(&10));
+    }
+
+    #[test]
+    fn heavy_churn_keeps_map_and_list_consistent() {
+        let mut c: Lru<u64, u64> = Lru::new(16);
+        for i in 0..1000u64 {
+            c.insert(i % 37, i);
+            let _ = c.get(&(i % 11));
+            assert!(c.len() <= 16);
+        }
+        // the 16 most recent distinct keys must all be present
+        let mut seen = std::collections::HashSet::new();
+        let mut i = 1000u64;
+        while seen.len() < 16 {
+            i -= 1;
+            seen.insert(i % 37);
+        }
+        // at least the very last insert is retrievable with its last value
+        assert_eq!(c.get(&(999 % 37)), Some(&999));
+    }
+}

@@ -1,0 +1,393 @@
+//! The prediction engine: θ tables + canonical-query cache + batched
+//! evaluation + streaming.
+//!
+//! A [`PredictEngine`] owns a shared [`ThetaTable`] (configs and θ built
+//! once) and an optional [`Lru`] keyed on canonical `(arch, query)`
+//! pairs. Evaluation order per batch:
+//!
+//! 1. **Validate** every request against its architecture (L3 queries
+//!    need an L3; every distance class must be realizable on the
+//!    topology) — all failures are collected into one [`BatchError`].
+//! 2. **Canonicalize** ([`Query::canonical`]) and probe the cache.
+//! 3. **Batch-evaluate** the misses per architecture through
+//!    [`batch::latency_batch`] — one design matrix, one
+//!    [`matvec_rect`](crate::fit::linalg::matvec_rect) pass.
+//!
+//! Because the cached value is the bit-exact scalar/batched latency and
+//! canonicalization is semantics-preserving, a warm cache returns values
+//! bit-identical to a cold engine at any batch size, chunking, or
+//! [`RunPool`] width — the invariants `tests/predict_serve.rs` pins.
+
+use crate::atomics::OpKind;
+use crate::model::query::{ModelState, Query};
+use crate::serve::api::{BatchError, PredictRequest, PredictResponse};
+use crate::serve::batch;
+use crate::serve::cache::Lru;
+use crate::serve::theta::{ArchId, ThetaTable};
+use crate::sim::config::MachineConfig;
+use crate::sim::timing::Level;
+use crate::sim::topology::Distance;
+use crate::sweep::runpool::RunPool;
+use std::sync::Arc;
+
+/// Default LRU capacity — comfortably larger than the full canonical
+/// grid of all four testbeds combined.
+pub const DEFAULT_CACHE_CAPACITY: usize = 16 * 1024;
+
+/// Cache hit/miss counters (see [`PredictEngine::cache_stats`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+/// The batched prediction engine behind `repro predict` and
+/// [`PredictEngine::predict`]-style programmatic callers.
+#[derive(Debug, Clone)]
+pub struct PredictEngine {
+    table: Arc<ThetaTable>,
+    cache: Option<Lru<(ArchId, Query), f64>>,
+}
+
+impl PredictEngine {
+    /// Engine over `table` with the default cache.
+    pub fn new(table: ThetaTable) -> PredictEngine {
+        PredictEngine {
+            table: Arc::new(table),
+            cache: Some(Lru::new(DEFAULT_CACHE_CAPACITY)),
+        }
+    }
+
+    /// The common default: shipped Table 2 θ, default cache.
+    pub fn shipped() -> PredictEngine {
+        PredictEngine::new(ThetaTable::shipped())
+    }
+
+    /// Disable the cache (every evaluation goes through the batch path).
+    pub fn without_cache(mut self) -> PredictEngine {
+        self.cache = None;
+        self
+    }
+
+    /// Replace the cache with one of `capacity` entries.
+    pub fn with_cache_capacity(mut self, capacity: usize) -> PredictEngine {
+        self.cache = Some(Lru::new(capacity));
+        self
+    }
+
+    pub fn table(&self) -> &ThetaTable {
+        &self.table
+    }
+
+    /// Hit/miss counters of this engine's cache (zeros when disabled).
+    pub fn cache_stats(&self) -> CacheStats {
+        match &self.cache {
+            Some(c) => CacheStats { hits: c.hits(), misses: c.misses() },
+            None => CacheStats::default(),
+        }
+    }
+
+    /// A fresh engine sharing this one's θ table but with an empty cache
+    /// of the same capacity — the per-worker state of
+    /// [`PredictEngine::predict_streaming`].
+    pub fn worker_clone(&self) -> PredictEngine {
+        PredictEngine {
+            table: Arc::clone(&self.table),
+            cache: self.cache.as_ref().map(|c| Lru::new(c.capacity())),
+        }
+    }
+
+    /// Arch-level validation: the query's level and distance classes must
+    /// exist on the target machine. (Query *semantics* were already
+    /// validated by [`QueryBuilder`](crate::model::query::QueryBuilder)
+    /// or the batch parser.)
+    pub fn validate(&self, req: &PredictRequest) -> Result<(), String> {
+        let cfg = self.table.cfg(req.arch);
+        let q = &req.query;
+        if q.loc.level == Level::L3 && !cfg.has_l3() {
+            return Err(format!("{}: no L3 on this architecture", cfg.name));
+        }
+        let check = |d: Distance, what: &str| -> Result<(), String> {
+            if d.available(&cfg.topology) {
+                Ok(())
+            } else {
+                Err(format!(
+                    "{}: {what} '{}' not realizable on this topology",
+                    cfg.name,
+                    d.label()
+                ))
+            }
+        };
+        check(q.loc.distance, "distance")?;
+        if let Some(d) = q.invalidate_distance {
+            check(d, "invalidate distance")?;
+        }
+        Ok(())
+    }
+
+    /// Predict one point.
+    pub fn predict(&mut self, req: &PredictRequest) -> Result<PredictResponse, String> {
+        self.validate(req)?;
+        let q = req.query.canonical();
+        let latency = self.latency_of(req.arch, q);
+        Ok(respond(req.arch, q, latency))
+    }
+
+    /// Predict a batch, preserving input order. Validation failures are
+    /// collected per request (1-based ordinals) before any evaluation.
+    pub fn predict_batch(
+        &mut self,
+        reqs: &[PredictRequest],
+    ) -> Result<Vec<PredictResponse>, BatchError> {
+        self.validate_all(reqs)?;
+        Ok(self.eval_unchecked(reqs))
+    }
+
+    /// Predict a large batch by streaming `chunk`-sized slices through
+    /// `pool` ([`RunPool::run_streaming`] semantics: the sink runs on this
+    /// thread, chunks arrive in input order, `first_index` is the index of
+    /// the chunk's first request). Each worker evaluates on a
+    /// [`PredictEngine::worker_clone`]; predictions are pure functions of
+    /// the request, so results are bit-identical at any worker count.
+    pub fn predict_streaming(
+        &self,
+        reqs: &[PredictRequest],
+        pool: &RunPool,
+        chunk: usize,
+        mut sink: impl FnMut(usize, Vec<PredictResponse>),
+    ) -> Result<(), BatchError> {
+        self.validate_all(reqs)?;
+        let chunk = chunk.max(1);
+        let chunks: Vec<&[PredictRequest]> = reqs.chunks(chunk).collect();
+        pool.run_streaming(
+            &chunks,
+            || self.worker_clone(),
+            |eng, slice| eng.eval_unchecked(slice),
+            |i, responses| sink(i * chunk, responses),
+        );
+        Ok(())
+    }
+
+    fn validate_all(&self, reqs: &[PredictRequest]) -> Result<(), BatchError> {
+        let mut errors = Vec::new();
+        for (i, r) in reqs.iter().enumerate() {
+            if let Err(e) = self.validate(r) {
+                errors.push((i + 1, e));
+            }
+        }
+        if errors.is_empty() {
+            Ok(())
+        } else {
+            Err(BatchError { errors })
+        }
+    }
+
+    /// Cache-probe + per-arch batched evaluation of pre-validated
+    /// requests, preserving input order.
+    fn eval_unchecked(&mut self, reqs: &[PredictRequest]) -> Vec<PredictResponse> {
+        let mut out: Vec<Option<PredictResponse>> = vec![None; reqs.len()];
+        let mut miss_idx: [Vec<usize>; 4] = Default::default();
+        let mut miss_q: [Vec<Query>; 4] = Default::default();
+        for (i, r) in reqs.iter().enumerate() {
+            let q = r.query.canonical();
+            if let Some(cache) = &mut self.cache {
+                if let Some(&latency) = cache.get(&(r.arch, q)) {
+                    out[i] = Some(respond(r.arch, q, latency));
+                    continue;
+                }
+            }
+            let a = arch_index(r.arch);
+            miss_idx[a].push(i);
+            miss_q[a].push(q);
+        }
+        for (a, arch) in ArchId::ALL.iter().enumerate() {
+            if miss_q[a].is_empty() {
+                continue;
+            }
+            let latencies =
+                batch::latency_batch(self.table.cfg(*arch), self.table.theta(*arch), &miss_q[a]);
+            for ((&i, &q), &latency) in
+                miss_idx[a].iter().zip(&miss_q[a]).zip(&latencies)
+            {
+                if let Some(cache) = &mut self.cache {
+                    cache.insert((*arch, q), latency);
+                }
+                out[i] = Some(respond(*arch, q, latency));
+            }
+        }
+        out.into_iter().map(|r| r.expect("every request evaluated")).collect()
+    }
+
+    fn latency_of(&mut self, arch: ArchId, q: Query) -> f64 {
+        if let Some(cache) = &mut self.cache {
+            if let Some(&latency) = cache.get(&(arch, q)) {
+                return latency;
+            }
+        }
+        let latency = crate::model::analytical::latency(
+            self.table.cfg(arch),
+            &q,
+            self.table.theta(arch),
+            true,
+        );
+        if let Some(cache) = &mut self.cache {
+            cache.insert((arch, q), latency);
+        }
+        latency
+    }
+}
+
+fn respond(arch: ArchId, query: Query, latency_ns: f64) -> PredictResponse {
+    PredictResponse {
+        arch,
+        query,
+        latency_ns,
+        bandwidth_gbs: batch::bandwidth_from_latency(latency_ns),
+    }
+}
+
+fn arch_index(a: ArchId) -> usize {
+    ArchId::ALL.iter().position(|&x| x == a).expect("ArchId::ALL is total")
+}
+
+/// Every canonical query realizable on `cfg`: op × state × level ×
+/// distance, with unrealizable levels/distances skipped and default
+/// invalidation semantics ([`Query::new`] + [`Query::canonical`]). Used
+/// by `repro predict --grid`, the golden tests, and the benchmark.
+pub fn canonical_grid(cfg: &MachineConfig) -> Vec<Query> {
+    let mut out = Vec::new();
+    for op in OpKind::ALL {
+        for state in ModelState::ALL {
+            for level in Level::ALL {
+                if level == Level::L3 && !cfg.has_l3() {
+                    continue;
+                }
+                for d in Distance::ALL {
+                    if !d.available(&cfg.topology) {
+                        continue;
+                    }
+                    out.push(Query::new(op, state, level, d).canonical());
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch;
+    use crate::model::analytical;
+    use crate::model::params::Theta;
+
+    fn grid_requests() -> Vec<PredictRequest> {
+        let mut reqs = Vec::new();
+        for a in ArchId::ALL {
+            for q in canonical_grid(&a.config()) {
+                reqs.push(PredictRequest { arch: a, query: q });
+            }
+        }
+        reqs
+    }
+
+    #[test]
+    fn batch_matches_scalar_one_off_path_bitwise() {
+        let reqs = grid_requests();
+        let mut engine = PredictEngine::shipped().without_cache();
+        let got = engine.predict_batch(&reqs).unwrap();
+        for (r, resp) in reqs.iter().zip(&got) {
+            // the one-off path: rebuild everything per query
+            let cfg = r.arch.config();
+            let theta = Theta::from_config(&cfg);
+            let scalar = analytical::latency(&cfg, &r.query, &theta, true);
+            assert_eq!(resp.latency_ns.to_bits(), scalar.to_bits(), "{r:?}");
+        }
+    }
+
+    #[test]
+    fn warm_cache_is_bit_identical_to_cold() {
+        let reqs = grid_requests();
+        let mut cold = PredictEngine::shipped().without_cache();
+        let want = cold.predict_batch(&reqs).unwrap();
+        let mut cached = PredictEngine::shipped();
+        let first = cached.predict_batch(&reqs).unwrap();
+        let second = cached.predict_batch(&reqs).unwrap();
+        assert_eq!(first, want);
+        assert_eq!(second, want);
+        let stats = cached.cache_stats();
+        assert_eq!(stats.hits, reqs.len() as u64, "second pass fully cached");
+        assert_eq!(stats.misses, reqs.len() as u64);
+    }
+
+    #[test]
+    fn validation_rejects_unrealizable_points() {
+        let mut engine = PredictEngine::shipped();
+        // Xeon Phi has no L3
+        let req = PredictRequest::new(
+            ArchId::XeonPhi,
+            Query::new(OpKind::Cas, ModelState::M, Level::L3, Distance::Local),
+        );
+        let err = engine.predict(&req).unwrap_err();
+        assert!(err.contains("no L3"), "{err}");
+        // Haswell is single-socket with private L2s
+        let req = PredictRequest::new(
+            ArchId::Haswell,
+            Query::new(OpKind::Faa, ModelState::E, Level::L2, Distance::OtherSocket),
+        );
+        let err = engine.predict(&req).unwrap_err();
+        assert!(err.contains("not realizable"), "{err}");
+        // batch: each bad request is reported with its ordinal
+        let good = PredictRequest::new(
+            ArchId::Haswell,
+            Query::new(OpKind::Faa, ModelState::E, Level::L2, Distance::Local),
+        );
+        let err = engine.predict_batch(&[good, req]).unwrap_err();
+        assert_eq!(err.errors.len(), 1);
+        assert_eq!(err.errors[0].0, 2);
+    }
+
+    #[test]
+    fn streaming_matches_batch_at_any_width_and_chunking() {
+        let reqs = grid_requests();
+        let mut engine = PredictEngine::shipped();
+        let want = engine.predict_batch(&reqs).unwrap();
+        for threads in [1, 2, 4] {
+            for chunk in [7, 64] {
+                let pool = RunPool::new(threads);
+                let mut got = Vec::new();
+                let mut starts = Vec::new();
+                engine
+                    .predict_streaming(&reqs, &pool, chunk, |first, responses| {
+                        starts.push(first);
+                        got.extend(responses);
+                    })
+                    .unwrap();
+                assert_eq!(got, want, "threads={threads} chunk={chunk}");
+                let expect: Vec<usize> = (0..reqs.len()).step_by(chunk).collect();
+                assert_eq!(starts, expect, "sink sees chunks in input order");
+            }
+        }
+    }
+
+    #[test]
+    fn canonical_grid_respects_architecture() {
+        let phi = arch::xeonphi();
+        assert!(canonical_grid(&phi).iter().all(|q| q.loc.level != Level::L3));
+        let haswell = arch::haswell();
+        let g = canonical_grid(&haswell);
+        assert!(g.iter().all(|q| matches!(
+            q.loc.distance,
+            Distance::Local | Distance::SameDie
+        )));
+        // 5 ops × 4 states × 4 levels × 2 distances
+        assert_eq!(g.len(), 5 * 4 * 4 * 2);
+        // a grid engine accepts its own grid
+        let mut engine = PredictEngine::shipped();
+        for a in ArchId::ALL {
+            for q in canonical_grid(&a.config()) {
+                engine.predict(&PredictRequest { arch: a, query: q }).unwrap();
+            }
+        }
+    }
+}

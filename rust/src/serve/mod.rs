@@ -1,0 +1,61 @@
+//! The prediction-serving query engine behind `repro predict`.
+//!
+//! The one-off CLI paths answer a single model question by rebuilding the
+//! architecture config, reseeding θ, featurizing, and dotting — fine for
+//! one query, wasteful for ten thousand. This subsystem serves *batches*
+//! of analytical-model queries at high throughput while staying
+//! **bit-identical** to the scalar path (`BENCH_sweep.json` records the
+//! speedup as `predict_speedup_vs_oneoff`):
+//!
+//! * [`theta`] — per-architecture `(config, θ)` pairs built **once**,
+//!   seeded from Table 2 or overridden by `repro fit` output CSVs, with
+//!   provenance tracked per entry ([`ThetaSource`]).
+//! * [`batch`] — N queries → one design matrix → one
+//!   [`matvec_rect`](crate::fit::linalg::matvec_rect) pass, plus the
+//!   shared Table 3 residual ([`crate::model::analytical::overhead`]).
+//! * [`cache`] — an O(1) LRU keyed on canonical `(arch, query)` pairs
+//!   ([`Query::canonical`](crate::model::query::Query::canonical)
+//!   collapses equivalent spellings first).
+//! * [`api`] — the versioned wire schema ([`PREDICT_SCHEMA_VERSION`]):
+//!   [`PredictRequest`] / [`PredictResponse`], CSV and JSON-lines ingest
+//!   and emit, line-numbered [`BatchError`]s.
+//! * [`engine`] — [`PredictEngine`]: validation, caching, per-arch
+//!   batched evaluation, and chunked streaming over the
+//!   [`RunPool`](crate::sweep::RunPool) machinery (results stream to the
+//!   sink in input order).
+//!
+//! Serving invariants (tested in `tests/predict_serve.rs`, documented in
+//! DESIGN.md §11): batched == scalar bit-for-bit on all four testbeds;
+//! warm cache == cold path bit-for-bit; any worker count / chunking
+//! produces identical output in input order; θ provenance is explicit.
+//!
+//! ```
+//! use atomics_repro::atomics::OpKind;
+//! use atomics_repro::model::query::{ModelState, QueryBuilder};
+//! use atomics_repro::serve::{ArchId, PredictEngine, PredictRequest};
+//! use atomics_repro::sim::timing::Level;
+//! use atomics_repro::sim::topology::Distance;
+//!
+//! let query = QueryBuilder::new(OpKind::Cas, ModelState::S)
+//!     .level(Level::L3)
+//!     .distance(Distance::SameDie)
+//!     .build()
+//!     .unwrap();
+//! let mut engine = PredictEngine::shipped();
+//! let resp = engine.predict(&PredictRequest::new(ArchId::Haswell, query)).unwrap();
+//! assert!(resp.latency_ns > 0.0 && resp.bandwidth_gbs > 0.0);
+//! ```
+
+pub mod api;
+pub mod batch;
+pub mod cache;
+pub mod engine;
+pub mod theta;
+
+pub use api::{
+    parse_batch, BatchError, PredictRequest, PredictResponse, PREDICT_SCHEMA_VERSION,
+    RESPONSE_CSV_HEADER,
+};
+pub use cache::Lru;
+pub use engine::{canonical_grid, CacheStats, PredictEngine, DEFAULT_CACHE_CAPACITY};
+pub use theta::{parse_theta_csv, ArchId, ThetaSource, ThetaTable};

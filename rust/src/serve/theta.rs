@@ -1,0 +1,308 @@
+//! Precomputed per-architecture model parameters for the serving layer.
+//!
+//! Every `repro predict` evaluation needs a `(MachineConfig, θ)` pair.
+//! Building a [`MachineConfig`] is not free — it constructs the full
+//! overhead-rule table — and the one-off CLI paths pay it per query. The
+//! [`ThetaTable`] builds all four testbeds **once** and serves shared
+//! references for the lifetime of the engine; that hoisting (plus the
+//! batched matrix product in [`crate::serve::batch`]) is where the
+//! serving layer's throughput comes from.
+//!
+//! θ provenance (DESIGN.md §11): each entry records whether its θ is the
+//! shipped Table 2 seed ([`Theta::from_config`]) or was loaded from a
+//! `repro fit` output CSV (`results/fit_theta_<slug>.csv`, header
+//! `param,paper_ns,fitted_ns`, param names from [`Theta::NAMES`]). A
+//! missing CSV silently keeps the shipped seed; a *malformed* CSV is
+//! reported on stderr and also falls back — predict never serves a
+//! half-parsed θ.
+
+use crate::arch;
+use crate::model::params::{Theta, THETA_DIM};
+use crate::sim::config::MachineConfig;
+use crate::util::csv::split_line;
+use crate::util::norm_token;
+
+/// One of the four paper testbeds, as a cheap copyable identifier — the
+/// serving API's architecture handle (configs stay inside the
+/// [`ThetaTable`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArchId {
+    Haswell,
+    IvyBridge,
+    Bulldozer,
+    XeonPhi,
+}
+
+impl ArchId {
+    /// All four testbeds, in [`arch::all`] order.
+    pub const ALL: [ArchId; 4] =
+        [ArchId::Haswell, ArchId::IvyBridge, ArchId::Bulldozer, ArchId::XeonPhi];
+
+    /// Display name, matching [`MachineConfig::name`].
+    pub fn label(self) -> &'static str {
+        match self {
+            ArchId::Haswell => "Haswell",
+            ArchId::IvyBridge => "Ivy Bridge",
+            ArchId::Bulldozer => "Bulldozer",
+            ArchId::XeonPhi => "Xeon Phi",
+        }
+    }
+
+    /// File-name slug, matching `repro fit`'s output naming
+    /// (`fit_theta_<slug>.csv`).
+    pub fn slug(self) -> &'static str {
+        match self {
+            ArchId::Haswell => "haswell",
+            ArchId::IvyBridge => "ivy_bridge",
+            ArchId::Bulldozer => "bulldozer",
+            ArchId::XeonPhi => "xeon_phi",
+        }
+    }
+
+    /// Build this testbed's full machine description (Table 1–3).
+    pub fn config(self) -> MachineConfig {
+        match self {
+            ArchId::Haswell => arch::haswell(),
+            ArchId::IvyBridge => arch::ivybridge(),
+            ArchId::Bulldozer => arch::bulldozer(),
+            ArchId::XeonPhi => arch::xeonphi(),
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            ArchId::Haswell => 0,
+            ArchId::IvyBridge => 1,
+            ArchId::Bulldozer => 2,
+            ArchId::XeonPhi => 3,
+        }
+    }
+}
+
+/// Single-source parser for architecture names: the [`arch::by_name`]
+/// aliases plus any casing/punctuation of [`ArchId::label`] /
+/// [`ArchId::slug`], so fit-output slugs (`ivy_bridge`) and report names
+/// (`Ivy Bridge`) round-trip alike.
+impl std::str::FromStr for ArchId {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<ArchId, String> {
+        match norm_token(s).as_str() {
+            "haswell" => Ok(ArchId::Haswell),
+            "ivybridge" | "ivy" => Ok(ArchId::IvyBridge),
+            "bulldozer" | "amd" => Ok(ArchId::Bulldozer),
+            "xeonphi" | "phi" | "mic" => Ok(ArchId::XeonPhi),
+            _ => Err(format!(
+                "unknown arch '{s}' (haswell | ivybridge | bulldozer | xeonphi)"
+            )),
+        }
+    }
+}
+
+/// Where an entry's θ came from (DESIGN.md §11 provenance).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ThetaSource {
+    /// The Table 2 seed baked into the architecture config.
+    Shipped,
+    /// Loaded from a `repro fit` output CSV at this path.
+    Fitted { path: String },
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    cfg: MachineConfig,
+    theta: Theta,
+    source: ThetaSource,
+}
+
+/// The per-architecture `(config, θ, provenance)` table every
+/// [`PredictEngine`](crate::serve::PredictEngine) evaluation reads.
+#[derive(Debug, Clone)]
+pub struct ThetaTable {
+    entries: Vec<Entry>,
+}
+
+impl ThetaTable {
+    /// All four testbeds with their shipped Table 2 seed θ.
+    pub fn shipped() -> ThetaTable {
+        let entries = ArchId::ALL
+            .iter()
+            .map(|&a| {
+                let cfg = a.config();
+                let theta = Theta::from_config(&cfg);
+                Entry { cfg, theta, source: ThetaSource::Shipped }
+            })
+            .collect();
+        ThetaTable { entries }
+    }
+
+    /// [`ThetaTable::shipped`], overriding each architecture whose
+    /// `<dir>/fit_theta_<slug>.csv` exists and parses. Malformed files are
+    /// reported on stderr and ignored (the shipped seed stays).
+    pub fn with_fitted_from(dir: &str) -> ThetaTable {
+        let mut table = ThetaTable::shipped();
+        for a in ArchId::ALL {
+            let path = format!("{dir}/fit_theta_{}.csv", a.slug());
+            let Ok(text) = std::fs::read_to_string(&path) else { continue };
+            match parse_theta_csv(&text) {
+                Ok(theta) => {
+                    let e = &mut table.entries[a.index()];
+                    e.theta = theta;
+                    e.source = ThetaSource::Fitted { path };
+                }
+                Err(err) => {
+                    eprintln!("warning: ignoring {path}: {err}");
+                }
+            }
+        }
+        table
+    }
+
+    pub fn cfg(&self, a: ArchId) -> &MachineConfig {
+        &self.entries[a.index()].cfg
+    }
+
+    pub fn theta(&self, a: ArchId) -> &Theta {
+        &self.entries[a.index()].theta
+    }
+
+    pub fn source(&self, a: ArchId) -> &ThetaSource {
+        &self.entries[a.index()].source
+    }
+}
+
+/// Parse one `repro fit` θ CSV (`param,paper_ns,fitted_ns`; param names
+/// from [`Theta::NAMES`], matched through [`norm_token`]). All eight
+/// parameters must be present with finite fitted values — a partial file
+/// is an error, never a partially-overridden θ.
+pub fn parse_theta_csv(text: &str) -> Result<Theta, String> {
+    let mut lines = text.lines();
+    let header = lines.next().ok_or_else(|| "empty θ CSV".to_string())?;
+    let cols: Vec<String> =
+        split_line(header).iter().map(|c| norm_token(c)).collect();
+    if cols != ["param", "paperns", "fittedns"] {
+        return Err(format!("unexpected θ CSV header '{header}'"));
+    }
+    let mut vals: [Option<f64>; THETA_DIM] = [None; THETA_DIM];
+    for (i, line) in lines.enumerate() {
+        let lineno = i + 2;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let cells = split_line(line);
+        if cells.len() != 3 {
+            return Err(format!("line {lineno}: expected 3 cells, got {}", cells.len()));
+        }
+        let key = norm_token(&cells[0]);
+        let Some(idx) = Theta::NAMES.iter().position(|n| norm_token(n) == key) else {
+            return Err(format!("line {lineno}: unknown parameter '{}'", cells[0]));
+        };
+        let v: f64 = cells[2]
+            .trim()
+            .parse()
+            .map_err(|_| format!("line {lineno}: bad fitted_ns '{}'", cells[2]))?;
+        if !v.is_finite() {
+            return Err(format!("line {lineno}: non-finite fitted_ns '{}'", cells[2]));
+        }
+        vals[idx] = Some(v);
+    }
+    let mut theta = [0.0; THETA_DIM];
+    for (i, v) in vals.iter().enumerate() {
+        match v {
+            Some(x) => theta[i] = *x,
+            None => return Err(format!("missing parameter '{}'", Theta::NAMES[i])),
+        }
+    }
+    Ok(Theta::from_vec(&theta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::csv::Csv;
+
+    fn fit_csv_for(cfg: &MachineConfig, bump: f64) -> String {
+        let seed = Theta::from_config(cfg).to_vec();
+        let mut csv = Csv::new(&["param", "paper_ns", "fitted_ns"]);
+        for (i, name) in Theta::NAMES.iter().enumerate() {
+            csv.row(&[name.to_string(), seed[i].to_string(), (seed[i] + bump).to_string()]);
+        }
+        csv.to_string()
+    }
+
+    #[test]
+    fn arch_labels_and_slugs_round_trip() {
+        for a in ArchId::ALL {
+            assert_eq!(a.label().parse::<ArchId>(), Ok(a));
+            assert_eq!(a.slug().parse::<ArchId>(), Ok(a));
+            assert_eq!(a.config().name, a.label());
+        }
+        assert_eq!("IVY".parse::<ArchId>(), Ok(ArchId::IvyBridge));
+        assert_eq!("xeon-phi".parse::<ArchId>(), Ok(ArchId::XeonPhi));
+        assert!("alpha".parse::<ArchId>().is_err());
+    }
+
+    #[test]
+    fn shipped_table_matches_seed() {
+        let t = ThetaTable::shipped();
+        for a in ArchId::ALL {
+            assert_eq!(*t.source(a), ThetaSource::Shipped);
+            assert_eq!(t.theta(a).to_vec(), Theta::from_config(t.cfg(a)).to_vec());
+        }
+    }
+
+    #[test]
+    fn parses_fit_output_csv() {
+        let cfg = arch::haswell();
+        let theta = parse_theta_csv(&fit_csv_for(&cfg, 0.5)).unwrap();
+        let seed = Theta::from_config(&cfg);
+        assert_eq!(theta.r_l1, seed.r_l1 + 0.5);
+        assert_eq!(theta.e_swp, seed.e_swp + 0.5);
+    }
+
+    #[test]
+    fn rejects_malformed_theta_csv() {
+        assert!(parse_theta_csv("").is_err());
+        assert!(parse_theta_csv("a,b,c\n").is_err());
+        // missing parameter rows
+        let partial = "param,paper_ns,fitted_ns\n\"R_L1,l\",1.0,1.0\n";
+        let err = parse_theta_csv(partial).unwrap_err();
+        assert!(err.contains("missing parameter"), "{err}");
+        // bad number
+        let cfg = arch::haswell();
+        let bad = fit_csv_for(&cfg, 0.0).replace("1.17,1.17", "1.17,oops");
+        assert!(parse_theta_csv(&bad).is_err());
+        // non-finite value
+        let nan = fit_csv_for(&cfg, 0.0).replace("1.17,1.17", "1.17,NaN");
+        assert!(parse_theta_csv(&nan).is_err());
+    }
+
+    #[test]
+    fn fitted_override_and_fallback() {
+        let dir = std::env::temp_dir().join("atomics_repro_theta_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let dir_s = dir.to_str().unwrap().to_string();
+        // a valid fitted file for haswell, a corrupt one for bulldozer,
+        // nothing for the others
+        std::fs::write(
+            dir.join("fit_theta_haswell.csv"),
+            fit_csv_for(&arch::haswell(), 1.0),
+        )
+        .unwrap();
+        std::fs::write(dir.join("fit_theta_bulldozer.csv"), "garbage\n").unwrap();
+        let t = ThetaTable::with_fitted_from(&dir_s);
+        assert_eq!(
+            *t.source(ArchId::Haswell),
+            ThetaSource::Fitted { path: format!("{dir_s}/fit_theta_haswell.csv") }
+        );
+        assert_eq!(
+            t.theta(ArchId::Haswell).r_l1,
+            Theta::from_config(&arch::haswell()).r_l1 + 1.0
+        );
+        // corrupt and absent files keep the shipped seed
+        assert_eq!(*t.source(ArchId::Bulldozer), ThetaSource::Shipped);
+        assert_eq!(*t.source(ArchId::IvyBridge), ThetaSource::Shipped);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

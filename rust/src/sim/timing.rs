@@ -28,6 +28,25 @@ impl Level {
             Level::Memory => "RAM",
         }
     }
+
+    /// Every level, nearest first.
+    pub const ALL: [Level; 4] = [Level::L1, Level::L2, Level::L3, Level::Memory];
+}
+
+/// Single-source parser for level labels: any casing of [`Level::label`]
+/// plus the common aliases, shared by CLI parsing and CSV batch ingest.
+impl std::str::FromStr for Level {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Level, String> {
+        match crate::util::norm_token(s).as_str() {
+            "l1" => Ok(Level::L1),
+            "l2" => Ok(Level::L2),
+            "l3" => Ok(Level::L3),
+            "ram" | "memory" | "mem" | "dram" => Ok(Level::Memory),
+            _ => Err(format!("unknown level '{s}' (L1 | L2 | L3 | RAM)")),
+        }
+    }
 }
 
 /// Table 2: the model parameters of one architecture, in nanoseconds.

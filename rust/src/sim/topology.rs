@@ -45,6 +45,48 @@ impl Distance {
             Distance::OtherSocket => "other socket",
         }
     }
+
+    /// Every distance class, nearest first.
+    pub const ALL: [Distance; 5] = [
+        Distance::Local,
+        Distance::SharedL2,
+        Distance::SameDie,
+        Distance::SameSocket,
+        Distance::OtherSocket,
+    ];
+
+    /// Whether `topo` can realize this distance class at all (e.g. there
+    /// is no `SharedL2` on private-L2 parts and no `OtherSocket` on
+    /// single-socket parts) — the serving layer's per-arch validation.
+    pub fn available(self, topo: &Topology) -> bool {
+        match self {
+            Distance::Local => true,
+            Distance::SharedL2 => topo.cores_per_l2 > 1,
+            Distance::SameDie => topo.cores_per_die > topo.cores_per_l2,
+            Distance::SameSocket => topo.n_dies() > 1 && topo.dies_per_socket > 1,
+            Distance::OtherSocket => topo.n_sockets() > 1,
+        }
+    }
+}
+
+/// Single-source parser for distance labels: any casing/punctuation of
+/// [`Distance::label`] plus the CLI aliases, shared by `repro predict`
+/// batch ingest, CLI flags, and report round-trips.
+impl std::str::FromStr for Distance {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Distance, String> {
+        match crate::util::norm_token(s).as_str() {
+            "local" => Ok(Distance::Local),
+            "sharedl2" => Ok(Distance::SharedL2),
+            "onchip" | "samedie" | "ondie" => Ok(Distance::SameDie),
+            "sharedl3domainotherdie" | "samesocket" | "otherdie" => Ok(Distance::SameSocket),
+            "othersocket" | "socket" => Ok(Distance::OtherSocket),
+            _ => Err(format!(
+                "unknown distance '{s}' (local | shared L2 | on chip | same socket | other socket)"
+            )),
+        }
+    }
 }
 
 /// Physical layout of cores.
@@ -217,5 +259,30 @@ mod tests {
         assert_eq!(t.distance_to_die(0, 0), Distance::SameDie);
         assert_eq!(t.distance_to_die(0, 1), Distance::SameSocket);
         assert_eq!(t.distance_to_die(0, 2), Distance::OtherSocket);
+    }
+
+    #[test]
+    fn labels_round_trip_through_fromstr() {
+        for d in Distance::ALL {
+            assert_eq!(d.label().parse::<Distance>(), Ok(d));
+        }
+        assert_eq!("on-chip".parse::<Distance>(), Ok(Distance::SameDie));
+        assert_eq!("otherdie".parse::<Distance>(), Ok(Distance::SameSocket));
+        assert!("nearby".parse::<Distance>().is_err());
+    }
+
+    #[test]
+    fn availability_matches_topologies() {
+        let bd = bulldozer();
+        assert!(Distance::ALL.iter().all(|d| d.available(&bd)));
+        let haswell = Topology::new(4, 1, 4, 1);
+        assert!(Distance::Local.available(&haswell));
+        assert!(Distance::SameDie.available(&haswell));
+        assert!(!Distance::SharedL2.available(&haswell));
+        assert!(!Distance::SameSocket.available(&haswell));
+        assert!(!Distance::OtherSocket.available(&haswell));
+        let ivy = Topology::new(24, 1, 12, 1);
+        assert!(Distance::OtherSocket.available(&ivy));
+        assert!(!Distance::SameSocket.available(&ivy));
     }
 }

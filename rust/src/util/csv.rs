@@ -48,6 +48,38 @@ impl Csv {
     }
 }
 
+/// Split one CSV line into cells, undoing [`Csv`]'s quoting (doubled
+/// quotes inside quoted cells) — the ingest counterpart used by the θ-table
+/// loader and `repro predict` batch parsing.
+pub fn split_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cell = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            if c == '"' {
+                if chars.peek() == Some(&'"') {
+                    cell.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            } else {
+                cell.push(c);
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => out.push(std::mem::take(&mut cell)),
+                _ => cell.push(c),
+            }
+        }
+    }
+    out.push(cell);
+    out
+}
+
 fn escape_cell(cell: &str) -> String {
     if cell.contains([',', '"', '\n']) {
         format!("\"{}\"", cell.replace('"', "\"\""))
@@ -79,6 +111,15 @@ mod tests {
         let s = c.to_string();
         assert!(s.contains("\"x,y\""));
         assert!(s.contains("\"he said \"\"hi\"\"\""));
+    }
+
+    #[test]
+    fn split_line_round_trips_quoting() {
+        let cells = vec!["R_L1,l".to_string(), "plain".to_string(), "he said \"hi\"".to_string()];
+        let line = escape_row(&cells);
+        assert_eq!(split_line(&line), cells);
+        assert_eq!(split_line("a,b,"), vec!["a", "b", ""]);
+        assert_eq!(split_line(""), vec![""]);
     }
 
     #[test]

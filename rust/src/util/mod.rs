@@ -13,3 +13,28 @@ pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
+
+/// Normalize a user-supplied token for label matching: lowercase with
+/// every non-alphanumeric character stripped. All `FromStr` impls in the
+/// crate (ops, states, levels, distances, architectures) match on this
+/// form, so `"Shared L2"`, `"shared-l2"`, and `"sharedl2"` parse alike
+/// and every `label()` output round-trips through its parser.
+pub fn norm_token(s: &str) -> String {
+    s.chars()
+        .filter(|c| c.is_ascii_alphanumeric())
+        .map(|c| c.to_ascii_lowercase())
+        .collect()
+}
+
+#[cfg(test)]
+mod norm_tests {
+    use super::norm_token;
+
+    #[test]
+    fn strips_and_lowers() {
+        assert_eq!(norm_token("Shared L2"), "sharedl2");
+        assert_eq!(norm_token("shared-l2"), "sharedl2");
+        assert_eq!(norm_token("shared L3 domain (other die)"), "sharedl3domainotherdie");
+        assert_eq!(norm_token("CAS"), "cas");
+    }
+}

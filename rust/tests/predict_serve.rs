@@ -1,0 +1,231 @@
+//! Serving-layer golden tests (DESIGN.md §11): the batched `repro
+//! predict` engine must be **bit-identical** to the one-off scalar model
+//! path on every testbed, with or without the cache, at any streaming
+//! width/chunking, and its wire formats must round-trip through the
+//! crate's single-source label parsers.
+
+use atomics_repro::arch;
+use atomics_repro::atomics::OpKind;
+use atomics_repro::model::analytical;
+use atomics_repro::model::params::Theta;
+use atomics_repro::model::query::{ModelState, Query, QueryBuilder};
+use atomics_repro::serve::{
+    canonical_grid, parse_batch, parse_theta_csv, ArchId, PredictEngine, PredictRequest,
+    PredictResponse, ThetaSource, ThetaTable, PREDICT_SCHEMA_VERSION, RESPONSE_CSV_HEADER,
+};
+use atomics_repro::sim::timing::Level;
+use atomics_repro::sim::topology::Distance;
+use atomics_repro::sweep::RunPool;
+
+/// Every canonical grid point of every testbed as a request batch.
+fn full_grid() -> Vec<PredictRequest> {
+    let mut reqs = Vec::new();
+    for a in ArchId::ALL {
+        for query in canonical_grid(&a.config()) {
+            reqs.push(PredictRequest { arch: a, query });
+        }
+    }
+    reqs
+}
+
+#[test]
+fn golden_batched_equals_one_off_on_all_arches() {
+    let reqs = full_grid();
+    assert!(reqs.len() > 300, "grid unexpectedly small: {}", reqs.len());
+    let mut engine = PredictEngine::shipped();
+    let got = engine.predict_batch(&reqs).unwrap();
+    for (r, resp) in reqs.iter().zip(&got) {
+        // the one-off path the CLI pays per query: rebuild the config,
+        // reseed θ, evaluate the scalar model
+        let cfg = r.arch.config();
+        let theta = Theta::from_config(&cfg);
+        let latency = analytical::latency(&cfg, &r.query, &theta, true);
+        let bandwidth = analytical::bandwidth_distinct_lines(&cfg, &r.query, &theta);
+        assert_eq!(
+            resp.latency_ns.to_bits(),
+            latency.to_bits(),
+            "{}: {:?}",
+            cfg.name,
+            r.query
+        );
+        assert_eq!(
+            resp.bandwidth_gbs.to_bits(),
+            bandwidth.to_bits(),
+            "{}: {:?}",
+            cfg.name,
+            r.query
+        );
+    }
+}
+
+#[test]
+fn cache_hit_path_is_bit_identical_to_cold_path() {
+    let reqs = full_grid();
+    let mut uncached = PredictEngine::shipped().without_cache();
+    let want = uncached.predict_batch(&reqs).unwrap();
+
+    let mut cached = PredictEngine::shipped();
+    let cold = cached.predict_batch(&reqs).unwrap();
+    let warm = cached.predict_batch(&reqs).unwrap();
+    assert_eq!(cold, want);
+    assert_eq!(warm, want);
+    let stats = cached.cache_stats();
+    assert_eq!(stats.misses, reqs.len() as u64, "first pass all misses");
+    assert_eq!(stats.hits, reqs.len() as u64, "second pass all hits");
+
+    // single-point predictions agree with the batch too
+    let mut single = PredictEngine::shipped();
+    for (r, w) in reqs.iter().zip(&want).step_by(17) {
+        let got = single.predict(r).unwrap();
+        assert_eq!(got.latency_ns.to_bits(), w.latency_ns.to_bits(), "{r:?}");
+    }
+}
+
+#[test]
+fn streaming_is_bit_identical_and_ordered_at_any_width() {
+    let reqs = full_grid();
+    let mut engine = PredictEngine::shipped();
+    let want = engine.predict_batch(&reqs).unwrap();
+    for threads in [1, 2, 4] {
+        let pool = RunPool::new(threads);
+        let mut got: Vec<PredictResponse> = Vec::new();
+        let mut first_indices = Vec::new();
+        engine
+            .predict_streaming(&reqs, &pool, 50, |first, responses| {
+                first_indices.push(first);
+                got.extend(responses);
+            })
+            .unwrap();
+        assert_eq!(got.len(), want.len(), "threads={threads}");
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!(g.latency_ns.to_bits(), w.latency_ns.to_bits(), "threads={threads}");
+            assert_eq!(g.arch, w.arch);
+            assert_eq!(g.query, w.query);
+        }
+        let expect: Vec<usize> = (0..reqs.len()).step_by(50).collect();
+        assert_eq!(first_indices, expect, "threads={threads}: input order");
+    }
+}
+
+#[test]
+fn csv_and_json_round_trip_through_the_engine() {
+    // emit a response stream as CSV, parse it back, predict again: fixed
+    // point after one round
+    let reqs: Vec<PredictRequest> = full_grid().into_iter().step_by(23).collect();
+    let mut engine = PredictEngine::shipped();
+    let responses = engine.predict_batch(&reqs).unwrap();
+
+    let mut csv = atomics_repro::util::csv::Csv::new(&RESPONSE_CSV_HEADER);
+    for r in &responses {
+        csv.row(&r.csv_row());
+    }
+    let back = parse_batch(&csv.to_string(), None).unwrap();
+    assert_eq!(back, reqs, "CSV round-trip");
+
+    let json: String =
+        responses.iter().map(|r| r.to_json() + "\n").collect();
+    assert!(json.contains(&format!("\"v\":{PREDICT_SCHEMA_VERSION},")));
+    let back = parse_batch(&json, None).unwrap();
+    assert_eq!(back, reqs, "JSON round-trip");
+
+    // and predictions over the round-tripped batch are bit-identical
+    let again = engine.predict_batch(&back).unwrap();
+    for (a, b) in again.iter().zip(&responses) {
+        assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+    }
+}
+
+#[test]
+fn malformed_batches_fail_with_line_numbers() {
+    let text = "op,state,level,distance,arch\n\
+                cas,E,L1,local,haswell\n\
+                frob,E,L1,local,haswell\n\
+                cas,E,L1,nowhere,haswell\n";
+    let err = parse_batch(text, None).unwrap_err();
+    let lines: Vec<usize> = err.errors.iter().map(|&(l, _)| l).collect();
+    assert_eq!(lines, vec![3, 4]);
+
+    // arch-level validation failures carry request ordinals
+    let ok = PredictRequest::new(
+        ArchId::Haswell,
+        Query::new(OpKind::Faa, ModelState::M, Level::L2, Distance::Local),
+    );
+    let no_l3 = PredictRequest::new(
+        ArchId::XeonPhi,
+        Query::new(OpKind::Faa, ModelState::M, Level::L3, Distance::Local),
+    );
+    let mut engine = PredictEngine::shipped();
+    let err = engine.predict_batch(&[ok, no_l3]).unwrap_err();
+    assert_eq!(err.errors.len(), 1);
+    assert_eq!(err.errors[0].0, 2);
+    assert!(err.errors[0].1.contains("no L3"), "{err}");
+}
+
+#[test]
+fn builder_and_parsers_share_one_label_table() {
+    // every label of every enum round-trips through the batch parser
+    for a in ArchId::ALL {
+        let cfg = a.config();
+        for q in canonical_grid(&cfg).into_iter().step_by(7) {
+            // the distance cell is quoted: the splitter must accept quoted
+            // cells whether or not the label needs them
+            let distance = format!("\"{}\"", q.loc.distance.label());
+            let invalidate = q
+                .invalidate_distance
+                .map(|d| d.label().to_string())
+                .unwrap_or_else(|| "-".into());
+            let text = format!(
+                "op,state,level,distance,invalidate,arch\n{},{},{},{},{},{}\n",
+                q.op.label(),
+                q.state.label(),
+                q.loc.level.label(),
+                distance,
+                invalidate,
+                a.slug(),
+            );
+            let parsed = parse_batch(&text, None).unwrap();
+            assert_eq!(parsed, vec![PredictRequest { arch: a, query: q }], "{text}");
+        }
+    }
+    // the builder validates what the parser validates
+    assert!(QueryBuilder::new(OpKind::Read, ModelState::S)
+        .invalidate(Distance::SameDie)
+        .build()
+        .is_err());
+}
+
+#[test]
+fn fitted_theta_overrides_shipped_and_falls_back() {
+    let dir = std::env::temp_dir().join("atomics_repro_predict_serve_theta");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    // write a haswell θ CSV with every parameter bumped by 1 ns
+    let cfg = arch::haswell();
+    let seed = Theta::from_config(&cfg).to_vec();
+    let mut csv = atomics_repro::util::csv::Csv::new(&["param", "paper_ns", "fitted_ns"]);
+    for (i, name) in Theta::NAMES.iter().enumerate() {
+        csv.row(&[name.to_string(), seed[i].to_string(), (seed[i] + 1.0).to_string()]);
+    }
+    let path = dir.join("fit_theta_haswell.csv");
+    csv.write(&path).unwrap();
+    // sanity: the file as written parses back
+    let parsed = parse_theta_csv(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(parsed.r_l1, seed[0] + 1.0);
+
+    let table = ThetaTable::with_fitted_from(dir.to_str().unwrap());
+    assert!(matches!(table.source(ArchId::Haswell), ThetaSource::Fitted { .. }));
+    assert_eq!(*table.source(ArchId::Bulldozer), ThetaSource::Shipped);
+
+    // predictions with the fitted table differ from shipped on haswell
+    // (local L1 read = r_l1, so exactly +1 ns) but match on bulldozer
+    let q = Query::new(OpKind::Read, ModelState::E, Level::L1, Distance::Local);
+    let mut fitted = PredictEngine::new(table);
+    let mut shipped = PredictEngine::shipped();
+    let f = fitted.predict(&PredictRequest::new(ArchId::Haswell, q)).unwrap();
+    let s = shipped.predict(&PredictRequest::new(ArchId::Haswell, q)).unwrap();
+    assert!((f.latency_ns - s.latency_ns - 1.0).abs() < 1e-12);
+    let fb = fitted.predict(&PredictRequest::new(ArchId::Bulldozer, q)).unwrap();
+    let sb = shipped.predict(&PredictRequest::new(ArchId::Bulldozer, q)).unwrap();
+    assert_eq!(fb.latency_ns.to_bits(), sb.latency_ns.to_bits());
+    let _ = std::fs::remove_dir_all(&dir);
+}
