@@ -76,6 +76,10 @@ echo "== smoke: routed interconnect fabric (--topology routed) =="
 ./target/release/repro contend --arch phi --op faa --ops 200 --topology routed --stats
 ./target/release/repro calibrate --arch phi --topology routed --ops 300 --run-threads 2
 
+echo "== smoke: steady-state fast-forward (--steady-state on) =="
+./target/release/repro contend --arch haswell --op cas --threads 2 --ops 400 --steady-state on
+./target/release/repro calibrate --arch haswell --steady-state on --ops 400
+
 echo "== smoke: scripts/scalability.sh (2-rung contend ladder) =="
 BIN=./target/release/repro scripts/scalability.sh --arch haswell --ops 300 --rungs "1 2"
 

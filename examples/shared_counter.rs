@@ -1,16 +1,20 @@
 //! Shared-counter contention study (§5.4, Fig. 8): what happens to a hot
 //! FAA counter as threads pile on, across all four testbeds — through the
 //! machine-accurate multi-core engine, so each row also explains *why*
-//! (line ping-pong, arbitration stalls).
+//! (line ping-pong, arbitration stalls). Runs with steady-state
+//! fast-forward (DESIGN.md §12) and prints the detected period under each
+//! contended row: the cycle the run settles into, its per-period stats,
+//! and how much of the run was replayed without cache walks — with
+//! bit-identical results to `--steady-state off`.
 //!
 //! Run: `cargo run --release --example shared_counter`
 
 use atomics_repro::arch;
 use atomics_repro::atomics::OpKind;
 use atomics_repro::bench::contention::{
-    paper_thread_counts, run_model, ContentionModel, OPS_PER_THREAD,
+    paper_thread_counts, run_model_steady_in, ContentionModel, OPS_PER_THREAD,
 };
-use atomics_repro::sim::Machine;
+use atomics_repro::sim::{Machine, RunArena, SteadyMode};
 
 fn main() {
     println!("Contended FAA bandwidth (one shared counter), machine-accurate engine\n");
@@ -21,9 +25,26 @@ fn main() {
             "threads", "FAA [GB/s]", "write [GB/s]", "hops/op", "stall [ns/op]"
         );
         let mut m = Machine::new(cfg.clone());
+        let mut arena = RunArena::new();
         for n in paper_thread_counts(&cfg) {
-            let faa = run_model(&mut m, ContentionModel::MachineAccurate, n, OpKind::Faa, OPS_PER_THREAD);
-            let wr = run_model(&mut m, ContentionModel::MachineAccurate, n, OpKind::Write, OPS_PER_THREAD);
+            let (faa, steady) = run_model_steady_in(
+                &mut m,
+                &mut arena,
+                ContentionModel::MachineAccurate,
+                n,
+                OpKind::Faa,
+                OPS_PER_THREAD,
+                SteadyMode::Auto,
+            );
+            let (wr, _) = run_model_steady_in(
+                &mut m,
+                &mut arena,
+                ContentionModel::MachineAccurate,
+                n,
+                OpKind::Write,
+                OPS_PER_THREAD,
+                SteadyMode::Auto,
+            );
             println!(
                 "{:>8} {:>12.3} {:>14.3} {:>9.3} {:>13.1}",
                 n,
@@ -32,10 +53,29 @@ fn main() {
                 faa.total_line_hops() as f64 / faa.total_ops().max(1) as f64,
                 faa.mean_stall_ns()
             );
+            if steady.engaged {
+                // Per-period stats of the detected cycle: in the contend
+                // hammer every event is one retired op, so a period is
+                // period_events ops spread over the n threads.
+                println!(
+                    "{:>8} steady period: {} events / {:.1} ns ({} ops per thread, {:.1} ns/op); {} periods fast-forwarded, {} walks skipped{}",
+                    "",
+                    steady.period_events,
+                    steady.period_ns,
+                    steady.period_events / n.max(1),
+                    steady.period_ns / steady.period_events.max(1) as f64,
+                    steady.periods_fast_forwarded,
+                    steady.events_skipped,
+                    if steady.aborted { " (aborted, tail stepwise)" } else { "" }
+                );
+            }
         }
         println!();
     }
     println!("Takeaways (§5.4): Intel writes combine and scale; atomics serialize on");
     println!("line ownership (hops/op → 1, stalls dominate); Xeon Phi collapses on");
-    println!("the ring. `--model analytic` via `repro contend` cross-validates.");
+    println!("the ring. The steady rows show the fast-forward (DESIGN.md §12) at");
+    println!("work: results are bit-identical to `--steady-state off`, only the");
+    println!("wall-clock shrinks. `--model analytic` via `repro contend`");
+    println!("cross-validates.");
 }

@@ -23,7 +23,9 @@
 use crate::atomics::OpKind;
 use crate::sim::event::run_contention as run_analytic;
 pub use crate::sim::event::ContentionResult;
-use crate::sim::multicore::{agg, run_contention_in, ContentionStats, RunArena};
+use crate::sim::multicore::{
+    agg, run_contention_steady, ContentionStats, RunArena, SteadyInfo, SteadyMode,
+};
 use crate::sim::{LinkStats, Machine, MachineConfig};
 
 /// Per-thread operation count used by the figure sweeps (large enough that
@@ -129,14 +131,33 @@ pub fn run_model_in(
     op: OpKind,
     ops_per_thread: usize,
 ) -> ContentionPoint {
+    run_model_steady_in(m, arena, model, threads, op, ops_per_thread, SteadyMode::Off).0
+}
+
+/// [`run_model_in`] with an explicit steady-state fast-forward policy
+/// ([`SteadyMode`], DESIGN.md §12). Only the machine-accurate engine has a
+/// stepwise schedule to fast-forward; the analytic model is already
+/// closed-form and reports a default (disengaged) [`SteadyInfo`].
+/// Bit-identical to `SteadyMode::Off` for every mode — the fast path only
+/// changes wall-clock time, never results.
+#[allow(clippy::too_many_arguments)]
+pub fn run_model_steady_in(
+    m: &mut Machine,
+    arena: &mut RunArena,
+    model: ContentionModel,
+    threads: usize,
+    op: OpKind,
+    ops_per_thread: usize,
+    steady: SteadyMode,
+) -> (ContentionPoint, SteadyInfo) {
     assert!(
         !(model == ContentionModel::Analytic && op == OpKind::Read),
         "the analytic contention model has no shared-read path; use the machine model for reads"
     );
     match model {
         ContentionModel::MachineAccurate => {
-            let r = run_contention_in(m, arena, threads, op, ops_per_thread);
-            ContentionPoint {
+            let (r, info) = run_contention_steady(m, arena, threads, op, ops_per_thread, steady);
+            let point = ContentionPoint {
                 threads,
                 op,
                 model,
@@ -145,14 +166,15 @@ pub fn run_model_in(
                 elapsed_ns: r.elapsed_ns,
                 per_thread: r.per_thread,
                 links: r.links,
-            }
+            };
+            (point, info)
         }
         ContentionModel::Analytic => {
             let r = run_analytic(&m.cfg, threads, op, ops_per_thread);
             // the analytic engine reports bandwidth over the whole run,
             // so its elapsed time is total bytes / bandwidth by definition
             let total_bytes = (threads * ops_per_thread) as f64 * 8.0;
-            ContentionPoint {
+            let point = ContentionPoint {
                 threads,
                 op,
                 model,
@@ -161,7 +183,8 @@ pub fn run_model_in(
                 elapsed_ns: total_bytes / r.bandwidth_gbs.max(f64::MIN_POSITIVE),
                 per_thread: Vec::new(),
                 links: Vec::new(),
-            }
+            };
+            (point, SteadyInfo::default())
         }
     }
 }
@@ -245,6 +268,37 @@ mod tests {
         let an = run_model(&mut m, ContentionModel::Analytic, 4, OpKind::Faa, 200);
         assert!(an.per_thread.is_empty());
         assert!(an.bandwidth_gbs > 0.0);
+    }
+
+    #[test]
+    fn steady_on_bit_identical_to_off() {
+        let cfg = arch::haswell();
+        let mut m = Machine::new(cfg);
+        let mut arena = RunArena::new();
+        let (off, off_info) = run_model_steady_in(
+            &mut m,
+            &mut arena,
+            ContentionModel::MachineAccurate,
+            4,
+            OpKind::Cas,
+            600,
+            SteadyMode::Off,
+        );
+        assert!(!off_info.engaged);
+        let (on, on_info) = run_model_steady_in(
+            &mut m,
+            &mut arena,
+            ContentionModel::MachineAccurate,
+            4,
+            OpKind::Cas,
+            600,
+            SteadyMode::On,
+        );
+        assert_eq!(off.bandwidth_gbs.to_bits(), on.bandwidth_gbs.to_bits());
+        assert_eq!(off.mean_latency_ns.to_bits(), on.mean_latency_ns.to_bits());
+        assert_eq!(off.elapsed_ns.to_bits(), on.elapsed_ns.to_bits());
+        assert_eq!(off.per_thread, on.per_thread);
+        assert!(!on_info.aborted);
     }
 
     #[test]

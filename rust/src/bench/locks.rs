@@ -29,10 +29,10 @@
 
 use crate::atomics::{Op, OpKind};
 use crate::sim::multicore::{
-    agg, run_program, run_program_in, run_program_stepwise, ContentionStats, CoreProgram,
+    agg, run_program, run_program_steady, run_program_stepwise, ContentionStats, CoreProgram,
     MulticoreResult, RunArena, Step,
 };
-use crate::sim::{Access, Machine};
+use crate::sim::{Access, Machine, SteadyInfo, SteadyMode};
 
 /// The lock word: TAS lock state / ticket dispenser / queue tail — clear
 /// of the latency buffers (0x4000_0000) and the contended line
@@ -243,6 +243,17 @@ impl CoreProgram for TasProgram {
             }
         }
     }
+
+    fn phase_key(&self) -> Option<u64> {
+        // The phase alone determines the next step for a given SWP result;
+        // the counters are monotone and must stay out (DESIGN.md §12).
+        Some(self.phase as u64)
+    }
+
+    fn remaining_hint(&self) -> Option<u64> {
+        // One counted step (the release store) per remaining acquisition.
+        Some(self.remaining as u64)
+    }
 }
 
 /// [`TasProgram`] with Dice et al.'s bounded exponential backoff: the
@@ -314,6 +325,18 @@ impl CoreProgram for TasBackoffProgram {
                 (self.remaining > 0).then(swp_acquire)
             }
         }
+    }
+
+    fn phase_key(&self) -> Option<u64> {
+        // The streak feeds the pause ladder, so it is behavior-affecting —
+        // but `pause_ns` saturates at streak 7 (exp capped at 6), so
+        // larger streaks are behaviorally identical and the key caps with
+        // it; an uncapped streak would never recur.
+        Some(self.phase as u64 | (u64::from(self.streak.min(7)) << 8))
+    }
+
+    fn remaining_hint(&self) -> Option<u64> {
+        Some(self.remaining as u64)
     }
 }
 
@@ -391,6 +414,18 @@ impl CoreProgram for TicketProgram {
                 (self.remaining > 0).then(|| Step::new(Op::Faa { delta: 1 }, LOCK_ADDR))
             }
         }
+    }
+
+    fn phase_key(&self) -> Option<u64> {
+        // `ticket` is a monotone absolute value and stays out of the key:
+        // the spin exit test (`serving == my_ticket`) is a *relative*
+        // comparison whose truth pattern repeats each rotation of the
+        // acquisition order, which is exactly what phase_key may assume.
+        Some(self.phase as u64)
+    }
+
+    fn remaining_hint(&self) -> Option<u64> {
+        Some(self.remaining as u64)
     }
 }
 
@@ -471,6 +506,17 @@ impl CoreProgram for ProducerProgram {
             }
         }
     }
+
+    fn phase_key(&self) -> Option<u64> {
+        // `expected`/`slot` are monotone and excluded. The queue's growing
+        // slot addresses enter the pending-step digest directly and keep
+        // an MPSC run aperiodic — opting in is still correct, just moot.
+        Some(self.phase as u64)
+    }
+
+    fn remaining_hint(&self) -> Option<u64> {
+        Some(self.remaining as u64)
+    }
 }
 
 /// Poll slot `i` until a producer publishes it, bump the head word, move
@@ -514,6 +560,19 @@ impl CoreProgram for ConsumerProgram {
             }
         }
     }
+
+    fn phase_key(&self) -> Option<u64> {
+        // The poll-vs-publish phase is recoverable from the pending step
+        // itself (Read of a slot vs Write of the head), so a constant is
+        // enough; `consumed` is monotone and shows up through the growing
+        // slot address anyway.
+        Some(0)
+    }
+
+    fn remaining_hint(&self) -> Option<u64> {
+        // One counted step (the head publish) per item left to drain.
+        Some(self.total - self.consumed)
+    }
 }
 
 /// The concrete program a thread runs — an enum (not a boxed trait
@@ -547,6 +606,29 @@ impl CoreProgram for LockProgram {
             LockProgram::Consumer(p) => p.next(prev, res),
         }
     }
+
+    fn phase_key(&self) -> Option<u64> {
+        // Disambiguate variants so a TAS `Acquire` and a ticket `Take`
+        // (both discriminant 0) can never alias in the wrap fingerprint.
+        let (tag, key) = match self {
+            LockProgram::Tas(p) => (1u64, p.phase_key()),
+            LockProgram::TasBackoff(p) => (2, p.phase_key()),
+            LockProgram::Ticket(p) => (3, p.phase_key()),
+            LockProgram::Producer(p) => (4, p.phase_key()),
+            LockProgram::Consumer(p) => (5, p.phase_key()),
+        };
+        key.map(|k| (tag << 32) | k)
+    }
+
+    fn remaining_hint(&self) -> Option<u64> {
+        match self {
+            LockProgram::Tas(p) => p.remaining_hint(),
+            LockProgram::TasBackoff(p) => p.remaining_hint(),
+            LockProgram::Ticket(p) => p.remaining_hint(),
+            LockProgram::Producer(p) => p.remaining_hint(),
+            LockProgram::Consumer(p) => p.remaining_hint(),
+        }
+    }
 }
 
 /// Run one lock/queue point: `threads` cores, `work_per_thread`
@@ -559,7 +641,10 @@ pub fn run_lock(
     threads: usize,
     work_per_thread: usize,
 ) -> Option<LockResult> {
-    run_lock_impl(m, kind, threads, work_per_thread, run_program)
+    run_lock_impl(m, kind, threads, work_per_thread, |m, progs, label| {
+        (run_program(m, progs, label), SteadyInfo::default())
+    })
+    .map(|(r, _)| r)
 }
 
 /// [`run_lock`] on a caller-provided [`RunArena`] — what a run-pool
@@ -573,8 +658,25 @@ pub fn run_lock_in(
     threads: usize,
     work_per_thread: usize,
 ) -> Option<LockResult> {
+    run_lock_in_steady(m, arena, kind, threads, work_per_thread, SteadyMode::Off).map(|(r, _)| r)
+}
+
+/// [`run_lock_in`] with an explicit steady-state fast-forward policy
+/// ([`SteadyMode`], DESIGN.md §12). Every lock program opts into
+/// [`CoreProgram::phase_key`], so periodic schedules (TAS retry storms,
+/// ticket rotations, saturated backoff ladders) can be detected, verified
+/// and replayed cheaply; results are bit-identical to `SteadyMode::Off`
+/// by the scheduler's contract, which the golden tests pin per kind.
+pub fn run_lock_in_steady(
+    m: &mut Machine,
+    arena: &mut RunArena,
+    kind: LockKind,
+    threads: usize,
+    work_per_thread: usize,
+    steady: SteadyMode,
+) -> Option<(LockResult, SteadyInfo)> {
     run_lock_impl(m, kind, threads, work_per_thread, |m, progs, label| {
-        run_program_in(m, arena, progs, label)
+        run_program_steady(m, arena, progs, label, steady)
     })
 }
 
@@ -589,7 +691,10 @@ pub fn run_lock_stepwise(
     threads: usize,
     work_per_thread: usize,
 ) -> Option<LockResult> {
-    run_lock_impl(m, kind, threads, work_per_thread, run_program_stepwise)
+    run_lock_impl(m, kind, threads, work_per_thread, |m, progs, label| {
+        (run_program_stepwise(m, progs, label), SteadyInfo::default())
+    })
+    .map(|(r, _)| r)
 }
 
 fn run_lock_impl(
@@ -597,8 +702,8 @@ fn run_lock_impl(
     kind: LockKind,
     threads: usize,
     work_per_thread: usize,
-    scheduler: impl FnOnce(&mut Machine, &mut [LockProgram], OpKind) -> MulticoreResult,
-) -> Option<LockResult> {
+    scheduler: impl FnOnce(&mut Machine, &mut [LockProgram], OpKind) -> (MulticoreResult, SteadyInfo),
+) -> Option<(LockResult, SteadyInfo)> {
     if threads < kind.min_threads() || threads > m.cfg.topology.n_cores || work_per_thread < 1 {
         return None;
     }
@@ -623,7 +728,7 @@ fn run_lock_impl(
         }
     };
 
-    let r = scheduler(m, &mut progs, kind.primitive());
+    let (r, steady) = scheduler(m, &mut progs, kind.primitive());
 
     let mut acquisitions = 0u64;
     let mut attempts = 0u64;
@@ -657,7 +762,7 @@ fn run_lock_impl(
         }
     }
     let elapsed_ns = r.elapsed_ns;
-    Some(LockResult {
+    let result = LockResult {
         kind,
         threads,
         acquisitions,
@@ -667,7 +772,8 @@ fn run_lock_impl(
         elapsed_ns,
         acq_per_sec: acquisitions as f64 / (elapsed_ns * 1e-9).max(f64::MIN_POSITIVE),
         per_thread: r.per_thread,
-    })
+    };
+    Some((result, steady))
 }
 
 #[cfg(test)]
@@ -808,6 +914,33 @@ mod tests {
             plain.elapsed_ns.to_bits(),
             "no failures, no pauses: identical schedule"
         );
+    }
+
+    /// Steady-state fast-forward must be invisible in the results for
+    /// every lock kind — same counters, same schedule, same bits.
+    #[test]
+    fn steady_on_bit_identical_to_off_for_all_kinds() {
+        let mut m = Machine::new(arch::ivybridge());
+        let mut arena = RunArena::new();
+        for kind in LockKind::ALL {
+            let (off, off_info) =
+                run_lock_in_steady(&mut m, &mut arena, kind, 4, 60, SteadyMode::Off).unwrap();
+            assert!(!off_info.engaged, "{}", kind.label());
+            let (on, on_info) =
+                run_lock_in_steady(&mut m, &mut arena, kind, 4, 60, SteadyMode::On).unwrap();
+            assert!(!on_info.aborted, "{}", kind.label());
+            assert_eq!(off.acquisitions, on.acquisitions, "{}", kind.label());
+            assert_eq!(off.attempts, on.attempts, "{}", kind.label());
+            assert_eq!(off.failed_attempts, on.failed_attempts, "{}", kind.label());
+            assert_eq!(off.spin_reads, on.spin_reads, "{}", kind.label());
+            assert_eq!(
+                off.elapsed_ns.to_bits(),
+                on.elapsed_ns.to_bits(),
+                "{}",
+                kind.label()
+            );
+            assert_eq!(off.per_thread, on.per_thread, "{}", kind.label());
+        }
     }
 
     /// The pause ladder doubles from the base to the cap and saturates.

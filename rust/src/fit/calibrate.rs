@@ -30,7 +30,7 @@
 use crate::atomics::OpKind;
 use crate::data::fig8_targets::Fig8Target;
 use crate::sim::fabric::{Fabric, RoutedFabric, Topology as _};
-use crate::sim::multicore::{run_contention, run_contention_in, RunArena};
+use crate::sim::multicore::{run_contention, run_contention_steady, RunArena, SteadyMode};
 use crate::sim::{Machine, MachineConfig};
 use crate::sweep::RunPool;
 
@@ -54,6 +54,11 @@ pub struct CalibrationCfg {
     /// ([`RunPool::with_defaults`], i.e. `--run-threads`). The fit is
     /// bit-identical for any value (pinned by `tests/run_parallel.rs`).
     pub run_threads: usize,
+    /// Steady-state fast-forward policy for every contention run the
+    /// search evaluates ([`SteadyMode`], DESIGN.md §12). The fit is
+    /// bit-identical for every mode — fast-forward only cuts wall-clock
+    /// time — so the default `Auto` simply makes calibration cheaper.
+    pub steady: SteadyMode,
 }
 
 impl Default for CalibrationCfg {
@@ -65,6 +70,7 @@ impl Default for CalibrationCfg {
             coarse: 17,
             refine: 28,
             run_threads: 0,
+            steady: SteadyMode::Auto,
         }
     }
 }
@@ -133,9 +139,10 @@ fn plateau_bandwidth_in(
     op: OpKind,
     threads: usize,
     ops_per_thread: usize,
+    steady: SteadyMode,
 ) -> f64 {
     std::sync::Arc::make_mut(&mut m.cfg).handoff_overlap = overlap;
-    run_contention_in(m, arena, threads, op, ops_per_thread).bandwidth_gbs
+    run_contention_steady(m, arena, threads, op, ops_per_thread, steady).0.bandwidth_gbs
 }
 
 /// Mean relative residual of every target at each candidate overlap.
@@ -150,6 +157,7 @@ fn objective_grid(
     targets: &[Fig8Target],
     overlaps: &[f64],
     ops_per_thread: usize,
+    steady: SteadyMode,
 ) -> Vec<f64> {
     let items: Vec<(f64, Fig8Target)> = overlaps
         .iter()
@@ -159,7 +167,7 @@ fn objective_grid(
         &items,
         || (Machine::new(cfg.clone()), RunArena::new()),
         |(m, arena), &(ov, t)| {
-            let got = plateau_bandwidth_in(m, arena, ov, t.op, t.threads, ops_per_thread);
+            let got = plateau_bandwidth_in(m, arena, ov, t.op, t.threads, ops_per_thread, steady);
             (got - t.gbs).abs() / t.gbs.max(f64::MIN_POSITIVE)
         },
     );
@@ -203,14 +211,21 @@ pub fn calibrate(
     let step = (ccfg.hi - ccfg.lo) / (ccfg.coarse - 1) as f64;
     let grid: Vec<f64> = (0..ccfg.coarse).map(|i| ccfg.lo + step * i as f64).collect();
     let scores: Vec<f64> =
-        objective_grid(&pool, cfg, targets, &grid, ccfg.ops_per_thread);
+        objective_grid(&pool, cfg, targets, &grid, ccfg.ops_per_thread, ccfg.steady);
     evaluations += grid.len();
 
     // Sequential evaluations still fan their per-target runs out over
     // the pool.
     let mut eval = |ov: f64| {
         evaluations += 1;
-        objective_grid(&pool, cfg, targets, std::slice::from_ref(&ov), ccfg.ops_per_thread)[0]
+        objective_grid(
+            &pool,
+            cfg,
+            targets,
+            std::slice::from_ref(&ov),
+            ccfg.ops_per_thread,
+            ccfg.steady,
+        )[0]
     };
     let best = scores
         .iter()
@@ -262,6 +277,7 @@ pub fn calibrate(
                 t.op,
                 t.threads,
                 ccfg.ops_per_thread,
+                ccfg.steady,
             ),
             from_paper: t.from_paper,
         },
@@ -299,6 +315,11 @@ pub struct FabricCalibrationCfg {
     /// Run-pool workers (0 = `RunPool::with_defaults`), exactly as in
     /// [`CalibrationCfg::run_threads`].
     pub run_threads: usize,
+    /// Steady-state fast-forward policy for every routed contention run,
+    /// exactly as in [`CalibrationCfg::steady`]. Bit-identical for every
+    /// mode — the fingerprint covers the per-link fabric state, so routed
+    /// periods verify and replay like scalar ones.
+    pub steady: SteadyMode,
 }
 
 impl Default for FabricCalibrationCfg {
@@ -310,6 +331,7 @@ impl Default for FabricCalibrationCfg {
             coarse: 17,
             refine: 28,
             run_threads: 0,
+            steady: SteadyMode::Auto,
         }
     }
 }
@@ -354,6 +376,7 @@ pub fn fabric_plateau_bandwidth(
 /// machine from an edited config: the fabric only enters the scheduler's
 /// occupancy pricing at run time, and [`run_contention_in`] resets the
 /// machine (and the arena's fabric state) on entry.
+#[allow(clippy::too_many_arguments)]
 fn fabric_plateau_bandwidth_in(
     m: &mut Machine,
     arena: &mut RunArena,
@@ -362,16 +385,18 @@ fn fabric_plateau_bandwidth_in(
     op: OpKind,
     threads: usize,
     ops_per_thread: usize,
+    steady: SteadyMode,
 ) -> f64 {
     std::sync::Arc::make_mut(&mut m.cfg).fabric =
         Fabric::Routed(base.clone().with_inject(inject_ns));
-    run_contention_in(m, arena, threads, op, ops_per_thread).bandwidth_gbs
+    run_contention_steady(m, arena, threads, op, ops_per_thread, steady).0.bandwidth_gbs
 }
 
 /// Mean relative residual of every target at each candidate injection
 /// leg — the fabric analogue of [`objective_grid`], with the identical
 /// fan-out and input-order summation so the fit is bit-identical for any
 /// worker count.
+#[allow(clippy::too_many_arguments)]
 fn fabric_objective_grid(
     pool: &RunPool,
     cfg: &MachineConfig,
@@ -379,6 +404,7 @@ fn fabric_objective_grid(
     targets: &[Fig8Target],
     injects: &[f64],
     ops_per_thread: usize,
+    steady: SteadyMode,
 ) -> Vec<f64> {
     let items: Vec<(f64, Fig8Target)> = injects
         .iter()
@@ -388,8 +414,16 @@ fn fabric_objective_grid(
         &items,
         || (Machine::new(cfg.clone()), RunArena::new()),
         |(m, arena), &(x, t)| {
-            let got =
-                fabric_plateau_bandwidth_in(m, arena, base, x, t.op, t.threads, ops_per_thread);
+            let got = fabric_plateau_bandwidth_in(
+                m,
+                arena,
+                base,
+                x,
+                t.op,
+                t.threads,
+                ops_per_thread,
+                steady,
+            );
             (got - t.gbs).abs() / t.gbs.max(f64::MIN_POSITIVE)
         },
     );
@@ -443,8 +477,15 @@ pub fn calibrate_fabric(
 
     let step = (ccfg.hi_ns - ccfg.lo_ns) / (ccfg.coarse - 1) as f64;
     let grid: Vec<f64> = (0..ccfg.coarse).map(|i| ccfg.lo_ns + step * i as f64).collect();
-    let scores: Vec<f64> =
-        fabric_objective_grid(&pool, cfg, &base, targets, &grid, ccfg.ops_per_thread);
+    let scores: Vec<f64> = fabric_objective_grid(
+        &pool,
+        cfg,
+        &base,
+        targets,
+        &grid,
+        ccfg.ops_per_thread,
+        ccfg.steady,
+    );
     evaluations += grid.len();
 
     let mut eval = |x: f64| {
@@ -456,6 +497,7 @@ pub fn calibrate_fabric(
             targets,
             std::slice::from_ref(&x),
             ccfg.ops_per_thread,
+            ccfg.steady,
         )[0]
     };
     let best = scores
@@ -505,6 +547,7 @@ pub fn calibrate_fabric(
                 t.op,
                 t.threads,
                 ccfg.ops_per_thread,
+                ccfg.steady,
             ),
             from_paper: t.from_paper,
         },
@@ -538,6 +581,7 @@ mod tests {
             coarse: 9,
             refine: 12,
             run_threads: 1,
+            steady: SteadyMode::Auto,
         }
     }
 
@@ -574,6 +618,30 @@ mod tests {
         assert!(r.mean_rel_residual < 0.02, "residual {}", r.mean_rel_residual);
     }
 
+    /// The whole fit — grid, golden section, reporting pass — must land
+    /// on the same bits whether the contention runs fast-forward or not.
+    #[test]
+    fn calibration_bit_identical_for_every_steady_mode() {
+        let cfg = arch::haswell();
+        let targets = [Fig8Target {
+            arch: cfg.name,
+            op: OpKind::Cas,
+            threads: 4,
+            gbs: plateau_bandwidth(&cfg, 0.5, OpKind::Cas, 4, 300),
+            from_paper: false,
+        }];
+        let base = CalibrationCfg { ops_per_thread: 300, coarse: 5, refine: 6, ..test_cfg() };
+        let off =
+            calibrate(&cfg, &targets, &CalibrationCfg { steady: SteadyMode::Off, ..base }).unwrap();
+        let on =
+            calibrate(&cfg, &targets, &CalibrationCfg { steady: SteadyMode::On, ..base }).unwrap();
+        assert_eq!(off.fitted_overlap.to_bits(), on.fitted_overlap.to_bits());
+        assert_eq!(off.mean_rel_residual.to_bits(), on.mean_rel_residual.to_bits());
+        for (p_off, p_on) in off.points.iter().zip(&on.points) {
+            assert_eq!(p_off.achieved_gbs.to_bits(), p_on.achieved_gbs.to_bits());
+        }
+    }
+
     #[test]
     fn no_targets_is_none() {
         assert!(calibrate(&arch::haswell(), &[], &test_cfg()).is_none());
@@ -588,6 +656,7 @@ mod tests {
             coarse: 9,
             refine: 12,
             run_threads: 1,
+            steady: SteadyMode::Auto,
         }
     }
 

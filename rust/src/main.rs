@@ -18,7 +18,7 @@
 //!                                   per line)
 //!   repro contend --arch NAME [--op OP] [--threads N] [--ops N]
 //!                 [--model machine|analytic] [--topology scalar|routed]
-//!                 [--stats]
+//!                 [--steady-state auto|on|off] [--stats]
 //!                                   contended same-line benchmark (Fig. 8)
 //!                                   through the machine-accurate multi-core
 //!                                   scheduler, with per-thread stats; one
@@ -26,9 +26,14 @@
 //!                                   worker (--run-threads); --topology
 //!                                   routed prices hand-offs over the
 //!                                   link-level interconnect fabric and
-//!                                   --stats then adds a per-link table
+//!                                   --stats then adds a per-link table;
+//!                                   --steady-state controls the verified
+//!                                   periodic fast-forward (bit-identical
+//!                                   results, less wall-clock; default
+//!                                   auto)
 //!   repro locks [--arch NAME] [--kind tas|tas-backoff|ticket|mpsc|all]
-//!               [--threads N] [--acq N] [--stats]
+//!               [--threads N] [--acq N] [--steady-state auto|on|off]
+//!               [--stats]
 //!                                   §6.1 lock/queue case study (TAS
 //!                                   spinlock ± bounded exponential
 //!                                   backoff, ticket lock, MPSC queue on
@@ -40,6 +45,7 @@
 //!                                   (default, offline) or the PJRT
 //!                                   fit_step executable
 //!   repro calibrate [--arch NAME] [--ops N] [--topology scalar|routed]
+//!                   [--steady-state auto|on|off]
 //!                                   fit per-arch handoff_overlap against
 //!                                   the Fig. 8 plateau targets; writes
 //!                                   results/calibration_<arch>.csv; the
@@ -314,9 +320,22 @@ fn parse_op(s: &str) -> Option<OpKind> {
     s.parse().ok()
 }
 
+/// Parse `--steady-state auto|on|off` (default auto; shared by `contend`,
+/// `locks` and `calibrate`). `None` = bad value (already reported).
+fn parse_steady(args: &Args) -> Option<atomics_repro::sim::SteadyMode> {
+    let s = args.opt("steady-state").unwrap_or("auto");
+    match atomics_repro::sim::SteadyMode::parse(s) {
+        Some(m) => Some(m),
+        None => {
+            eprintln!("unknown steady-state mode '{s}' (auto | on | off)");
+            None
+        }
+    }
+}
+
 fn cmd_contend(args: &Args) -> i32 {
     use atomics_repro::bench::contention::{
-        paper_thread_counts, run_model_in, ContentionModel, OPS_PER_THREAD,
+        paper_thread_counts, run_model_steady_in, ContentionModel, OPS_PER_THREAD,
     };
     use atomics_repro::sim::RunArena;
 
@@ -359,6 +378,7 @@ fn cmd_contend(args: &Args) -> i32 {
         eprintln!("--op read is machine-model only (the analytic engine has no shared-read path)");
         return 2;
     }
+    let Some(steady) = parse_steady(args) else { return 2 };
     let ops_per_thread: usize = args.opt_parse("ops", OPS_PER_THREAD).max(1);
     let counts: Vec<usize> = match args.opt("threads") {
         Some(s) => match s.parse::<usize>() {
@@ -393,8 +413,8 @@ fn cmd_contend(args: &Args) -> i32 {
     atomics_repro::sweep::RunPool::with_defaults().run_streaming(
         &counts,
         || (atomics_repro::sim::Machine::new(cfg.clone()), RunArena::new()),
-        |(m, arena), &n| run_model_in(m, arena, model, n, op, ops_per_thread),
-        |i, p| {
+        |(m, arena), &n| run_model_steady_in(m, arena, model, n, op, ops_per_thread, steady),
+        |i, (p, steady_info)| {
             let n = counts[i];
             if p.per_thread.is_empty() {
                 // analytic model: bandwidth + latency only
@@ -419,14 +439,29 @@ fn cmd_contend(args: &Args) -> i32 {
                     format!("{:.1}", p.cas_failure_rate() * 100.0),
                 ]);
             }
-            last = Some(p);
+            last = Some((p, steady_info));
         },
     );
     println!("{}", t.render());
+    // Diagnostics on stderr so stdout stays byte-identical to
+    // --steady-state off (the fast path changes wall-clock only).
+    if let Some((_, info)) = &last {
+        if info.engaged {
+            eprintln!(
+                "steady-state: period of {} events ({:.1} ns) at the last point; \
+                 fast-forwarded {} period(s), {} events skipped{}",
+                info.period_events,
+                info.period_ns,
+                info.periods_fast_forwarded,
+                info.events_skipped,
+                if info.aborted { " (aborted mid-replay, finished stepwise)" } else { "" }
+            );
+        }
+    }
 
     if args.flag("stats") {
         // counts is never empty and the analytic model was rejected above
-        let p = last.expect("at least one contention point ran");
+        let (p, _) = last.expect("at least one contention point ran");
         let elapsed = p.elapsed_ns;
         let mut d = Table::new(
             format!("per-thread stats at {} threads", p.threads),
@@ -509,6 +544,7 @@ fn cmd_locks(args: &Args) -> i32 {
             }
         },
     };
+    let Some(steady) = parse_steady(args) else { return 2 };
     let work: usize = args.opt_parse("acq", ACQ_PER_THREAD).max(1);
     // With a single kind selected, its minimum applies (MPSC needs a
     // producer and the consumer); with several, kinds below their minimum
@@ -535,7 +571,7 @@ fn cmd_locks(args: &Args) -> i32 {
     };
     print!(
         "{}",
-        figures::locks_report(&cfg, &kinds, &counts, work, args.flag("stats"))
+        figures::locks_report_steady(&cfg, &kinds, &counts, work, args.flag("stats"), steady)
     );
     // The §6.1 story ends with the layout advice: show the false-sharing
     // contrast unless the run is focused on a single kind.
@@ -678,10 +714,12 @@ fn cmd_calibrate(args: &Args) -> i32 {
             return 2;
         }
     }
+    let Some(steady) = parse_steady(args) else { return 2 };
     let ccfg = CalibrationCfg {
         ops_per_thread: args
             .opt_parse("ops", CalibrationCfg::default().ops_per_thread)
             .max(1),
+        steady,
         ..CalibrationCfg::default()
     };
 
@@ -748,10 +786,12 @@ fn calibrate_fabric_cmd(args: &Args, configs: Vec<atomics_repro::sim::MachineCon
     use atomics_repro::data::fig8_targets::fabric_targets_for;
     use atomics_repro::fit::calibrate::{calibrate_fabric, FabricCalibrationCfg};
 
+    let Some(steady) = parse_steady(args) else { return 2 };
     let ccfg = FabricCalibrationCfg {
         ops_per_thread: args
             .opt_parse("ops", FabricCalibrationCfg::default().ops_per_thread)
             .max(1),
+        steady,
         ..FabricCalibrationCfg::default()
     };
 

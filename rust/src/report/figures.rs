@@ -875,6 +875,29 @@ pub fn locks_report(
     )
 }
 
+/// [`locks_report`] with an explicit steady-state fast-forward policy
+/// ([`crate::sim::SteadyMode`], DESIGN.md §12) — what `repro locks
+/// --steady-state` drives. Byte-identical output for every mode: the
+/// fast path only changes wall-clock time, never results.
+pub fn locks_report_steady(
+    cfg: &MachineConfig,
+    kinds: &[crate::bench::locks::LockKind],
+    counts: &[usize],
+    work_per_thread: usize,
+    with_stats: bool,
+    steady: crate::sim::SteadyMode,
+) -> String {
+    locks_report_steady_with(
+        &crate::sweep::RunPool::with_defaults(),
+        cfg,
+        kinds,
+        counts,
+        work_per_thread,
+        with_stats,
+        steady,
+    )
+}
+
 /// Render one finished kind's ladder table, plus the per-thread stats
 /// table of its last realizable point when `with_stats`.
 fn flush_lock_kind(
@@ -931,7 +954,31 @@ pub fn locks_report_with(
     work_per_thread: usize,
     with_stats: bool,
 ) -> String {
-    use crate::bench::locks::{run_lock_in, LockKind, LockResult};
+    locks_report_steady_with(
+        pool,
+        cfg,
+        kinds,
+        counts,
+        work_per_thread,
+        with_stats,
+        crate::sim::SteadyMode::Off,
+    )
+}
+
+/// [`locks_report_with`] with an explicit [`crate::sim::SteadyMode`]; the
+/// per-point [`crate::sim::SteadyInfo`] is intentionally dropped so the
+/// rendered report stays byte-identical to the `Off` reference.
+#[allow(clippy::too_many_arguments)]
+pub fn locks_report_steady_with(
+    pool: &crate::sweep::RunPool,
+    cfg: &MachineConfig,
+    kinds: &[crate::bench::locks::LockKind],
+    counts: &[usize],
+    work_per_thread: usize,
+    with_stats: bool,
+    steady: crate::sim::SteadyMode,
+) -> String {
+    use crate::bench::locks::{run_lock_in_steady, LockKind, LockResult};
     use crate::sim::multicore::RunArena;
 
     let mut out = String::new();
@@ -973,7 +1020,9 @@ pub fn locks_report_with(
     pool.run_streaming(
         &items,
         || (crate::sim::Machine::new(cfg.clone()), RunArena::new()),
-        |(m, arena), &(kind, n)| run_lock_in(m, arena, kind, n, work_per_thread),
+        |(m, arena), &(kind, n)| {
+            run_lock_in_steady(m, arena, kind, n, work_per_thread, steady).map(|(r, _)| r)
+        },
         |i, r| {
             let (kind, n) = items[i];
             if i % per_kind == 0 {

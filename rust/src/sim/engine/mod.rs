@@ -103,6 +103,33 @@ impl ReadMemo {
     }
 }
 
+/// Recorded outputs of one line walk — everything [`Machine::access`]
+/// takes from [`Machine::access_line`] — captured by
+/// [`Machine::access64_traced`] and substituted back by
+/// [`Machine::replay_access64`]. The walk is the only part of an access
+/// that reads or mutates the cache/coherence structures, and it takes no
+/// time input: its outputs are a function of the (core, op kind, line)
+/// sequence alone. The multicore steady-state fast path
+/// (`sim/multicore.rs`, DESIGN.md §12) exploits that: once a contended
+/// run's walk outputs are proven periodic, whole periods replay through
+/// [`Machine::replay_access64`] — identical arithmetic with the walk
+/// skipped — instead of re-walking the hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WalkMemo {
+    /// The walk's raw cost contribution, ns (before exec/overhead/uplift).
+    pub cost: f64,
+    /// Which level served the line.
+    pub level: Level,
+    /// Distance class to the data source.
+    pub distance: Distance,
+    /// Coherence state of the line before the access, at its holder.
+    pub prior_state: CohState,
+    /// May [`Machine::replay_access64`] substitute this memo? False for
+    /// unaligned or non-64-bit accesses (they take extra walks/penalties
+    /// the replay path does not model).
+    pub replayable: bool,
+}
+
 /// The simulated machine.
 ///
 /// The configuration is held behind an [`Arc`] so that pooled machines,
@@ -275,6 +302,21 @@ impl Machine {
 
     /// Execute `op` at byte address `addr` with operand `width` from `core`.
     pub fn access(&mut self, core: CoreId, op: Op, addr: u64, width: Width) -> Access {
+        self.access_traced(core, op, addr, width).0
+    }
+
+    /// [`Machine::access`] that also reports the line walk's outputs as a
+    /// [`WalkMemo`]. Behaviorally identical to `access` — the memo is
+    /// assembled from values the access computes anyway — and used by the
+    /// multicore steady-state detector to record one period of walk
+    /// outputs for later substitution via [`Machine::replay_access64`].
+    pub fn access_traced(
+        &mut self,
+        core: CoreId,
+        op: Op,
+        addr: u64,
+        width: Width,
+    ) -> (Access, WalkMemo) {
         self.stats.accesses += 1;
         let kind = op.kind();
         let offset = addr % LINE_SIZE;
@@ -297,6 +339,13 @@ impl Machine {
         let mut distance = walk.distance;
         let prior_state = walk.prior_state;
         let mut cost = walk.cost;
+        let memo = WalkMemo {
+            cost: walk.cost,
+            level: walk.level,
+            distance: walk.distance,
+            prior_state: walk.prior_state,
+            replayable: !unaligned && width == Width::W64,
+        };
 
         if unaligned {
             // The operand spans two lines: fetch the second line too.
@@ -362,6 +411,92 @@ impl Machine {
         }
 
         self.clock[core] += latency;
+        (
+            Access {
+                latency,
+                level,
+                distance,
+                value: returned,
+                modified,
+                prior_state,
+            },
+            memo,
+        )
+    }
+
+    /// Convenience: an aligned 64-bit access.
+    pub fn access64(&mut self, core: CoreId, op: Op, addr: u64) -> Access {
+        self.access(core, op, addr, Width::W64)
+    }
+
+    /// Convenience: an aligned 64-bit access, with the walk memo.
+    pub fn access64_traced(&mut self, core: CoreId, op: Op, addr: u64) -> (Access, WalkMemo) {
+        self.access_traced(core, op, addr, Width::W64)
+    }
+
+    /// Re-execute an aligned 64-bit access with the line walk *substituted*
+    /// from `memo` instead of walked live. Mirrors [`Machine::access`]
+    /// statement for statement — write-buffer drains, execute-stage and
+    /// overhead-table arithmetic, frequency uplift, memory semantics,
+    /// store-buffer retirement, and the core clock all run live in the
+    /// identical order — with exactly two substitutions: the
+    /// `access_line` call (cost/level/distance/prior-state come from the
+    /// memo, and no cache/coherence structure is read or touched) and the
+    /// global [`Stats`] counters (not incremented here; the steady-state
+    /// controller settles them once per fast-forwarded period via
+    /// [`Stats::merge_scaled`]). If the walk outputs for this access
+    /// really would equal the memo — the periodicity premise the caller
+    /// verified — the returned [`Access`], the memory image, the write
+    /// buffer, and the core clock are bit-identical to `access64`, by
+    /// induction over identical f64 operations on identical inputs.
+    ///
+    /// Only callable under [`Machine::spin_fast_path_ok`] (jitter keys on
+    /// the frozen access counter) and only with `memo.replayable`; both
+    /// are debug-asserted.
+    pub fn replay_access64(&mut self, core: CoreId, op: Op, addr: u64, memo: &WalkMemo) -> Access {
+        debug_assert!(memo.replayable);
+        debug_assert!(self.spin_fast_path_ok());
+        let kind = op.kind();
+        let now = self.clock[core];
+
+        let mut latency = 0.0;
+        if kind.is_atomic() {
+            let stall = self.wb[core].drain_for_atomic(now, line_of(addr));
+            latency += stall;
+        }
+
+        let level = memo.level;
+        let distance = memo.distance;
+        let prior_state = memo.prior_state;
+        let mut cost = memo.cost;
+
+        cost += self.cfg.timing.exec(kind);
+        cost += self.cfg.overheads.lookup(
+            kind,
+            StateClass::of(prior_state),
+            level,
+            LocalityClass::of(distance),
+        );
+
+        let uplift = self.cfg.mechanisms.frequency_uplift();
+        if uplift != 1.0 && level != Level::Memory {
+            cost /= uplift;
+        }
+
+        let old = self.mem.read(addr & !7);
+        let (new, returned, modified) = op.apply(old);
+        if modified {
+            self.mem.write(addr & !7, new);
+        }
+
+        if kind == OpKind::Write {
+            let stall = self.wb[core].push_write(now, line_of(addr), cost);
+            latency += self.cfg.timing.write_issue + stall;
+        } else {
+            latency += cost;
+        }
+
+        self.clock[core] += latency;
         Access {
             latency,
             level,
@@ -370,11 +505,6 @@ impl Machine {
             modified,
             prior_state,
         }
-    }
-
-    /// Convenience: an aligned 64-bit access.
-    pub fn access64(&mut self, core: CoreId, op: Op, addr: u64) -> Access {
-        self.access(core, op, addr, Width::W64)
     }
 
     // ----- memoized spin polls (multicore fast path) ------------------------

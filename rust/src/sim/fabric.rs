@@ -551,6 +551,45 @@ impl FabricState {
         self.inflight.iter().map(|&x| x as u64).sum()
     }
 
+    /// Append this state's *dynamics* to a steady-state fingerprint
+    /// (DESIGN.md §12), canonicalized relative to `base` (the earliest
+    /// pending grant time): per-link busy-until offsets and the multiset
+    /// of undelivered message expiries as sorted `(offset, link)` pairs.
+    /// Anything at or before `base` is bucketed as "irrelevant past"
+    /// (`u64::MAX`): the next `handoff` runs at `now ≥ base`, so a link
+    /// free by `base` imposes no queue wait regardless of exactly when it
+    /// went idle, and an expiry due by `base` is popped by that handoff's
+    /// `expire` before any in-flight peak is read — such entries shift
+    /// only the unobserved interim `left`/`inflight` accounting, never a
+    /// latency or a reported counter. Non-mutating; the heap is iterated
+    /// (arbitrary order) and the future entries sorted into `out`.
+    pub fn steady_key(&self, base: f64, out: &mut Vec<u64>) {
+        out.push(self.busy_until.len() as u64);
+        for &b in &self.busy_until {
+            out.push(if b <= base { u64::MAX } else { (b - base).to_bits() });
+        }
+        let mark = out.len();
+        out.push(0);
+        for &Reverse((tb, l)) in self.expiry.iter() {
+            let t = f64::from_bits(tb);
+            if t > base {
+                out.push((t - base).to_bits());
+                out.push(l as u64);
+            }
+        }
+        let n = (out.len() - mark - 1) / 2;
+        out[mark] = n as u64;
+        // Sort the (offset, link) pairs so heap iteration order cannot
+        // alias two identical states to different keys.
+        let tail = &mut out[mark + 1..];
+        let mut pairs: Vec<(u64, u64)> = tail.chunks(2).map(|c| (c[0], c[1])).collect();
+        pairs.sort_unstable();
+        for (i, (a, b)) in pairs.into_iter().enumerate() {
+            tail[2 * i] = a;
+            tail[2 * i + 1] = b;
+        }
+    }
+
     /// Drain all in-flight messages and report per-link stats for a run
     /// that finished at `elapsed_ns`.
     pub fn finish(&mut self, rt: &RoutedFabric, elapsed_ns: f64) -> Vec<LinkStats> {

@@ -62,6 +62,58 @@ impl Stats {
         self.back_invalidations += other.back_invalidations;
         self.muw_migrations += other.muw_migrations;
     }
+
+    /// Merge `k` copies of `other` at once: `self += k · other`, field by
+    /// field. Because every counter is a `u64`, the product equals `k`
+    /// repeated [`Stats::merge`] calls exactly — this is what lets the
+    /// multicore steady-state fast-forward settle `k` periods' worth of
+    /// engine counters in one call (DESIGN.md §12) while staying
+    /// bit-identical to the stepwise run.
+    pub fn merge_scaled(&mut self, other: &Stats, k: u64) {
+        self.accesses += other.accesses * k;
+        self.l1_hits += other.l1_hits * k;
+        self.l2_hits += other.l2_hits * k;
+        self.l3_hits += other.l3_hits * k;
+        self.memory_accesses += other.memory_accesses * k;
+        self.cache_to_cache += other.cache_to_cache * k;
+        self.invalidations_sent += other.invalidations_sent * k;
+        self.remote_invalidation_broadcasts += other.remote_invalidation_broadcasts * k;
+        self.writebacks += other.writebacks * k;
+        self.hops += other.hops * k;
+        self.write_buffer_drains += other.write_buffer_drains * k;
+        self.prefetches_issued += other.prefetches_issued * k;
+        self.prefetch_hits += other.prefetch_hits * k;
+        self.bus_locks += other.bus_locks * k;
+        self.ht_assist_filtered += other.ht_assist_filtered * k;
+        self.back_invalidations += other.back_invalidations * k;
+        self.muw_migrations += other.muw_migrations * k;
+    }
+
+    /// `self − other`, field by field. Callers only subtract a recorded
+    /// prefix of the same run, where every field of `other` is ≤ the
+    /// matching field of `self`.
+    pub fn delta_since(&self, other: &Stats) -> Stats {
+        Stats {
+            accesses: self.accesses - other.accesses,
+            l1_hits: self.l1_hits - other.l1_hits,
+            l2_hits: self.l2_hits - other.l2_hits,
+            l3_hits: self.l3_hits - other.l3_hits,
+            memory_accesses: self.memory_accesses - other.memory_accesses,
+            cache_to_cache: self.cache_to_cache - other.cache_to_cache,
+            invalidations_sent: self.invalidations_sent - other.invalidations_sent,
+            remote_invalidation_broadcasts: self.remote_invalidation_broadcasts
+                - other.remote_invalidation_broadcasts,
+            writebacks: self.writebacks - other.writebacks,
+            hops: self.hops - other.hops,
+            write_buffer_drains: self.write_buffer_drains - other.write_buffer_drains,
+            prefetches_issued: self.prefetches_issued - other.prefetches_issued,
+            prefetch_hits: self.prefetch_hits - other.prefetch_hits,
+            bus_locks: self.bus_locks - other.bus_locks,
+            ht_assist_filtered: self.ht_assist_filtered - other.ht_assist_filtered,
+            back_invalidations: self.back_invalidations - other.back_invalidations,
+            muw_migrations: self.muw_migrations - other.muw_migrations,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -94,5 +146,33 @@ mod tests {
     #[test]
     fn zero_rate_on_empty() {
         assert_eq!(Stats::default().hit_rate_l1(), 0.0);
+    }
+
+    #[test]
+    fn merge_scaled_equals_repeated_merge() {
+        let delta = Stats {
+            accesses: 7,
+            l3_hits: 2,
+            cache_to_cache: 5,
+            hops: 11,
+            invalidations_sent: 3,
+            ..Default::default()
+        };
+        let mut scaled = Stats { accesses: 1, hops: 1, ..Default::default() };
+        let mut repeated = scaled.clone();
+        scaled.merge_scaled(&delta, 9);
+        for _ in 0..9 {
+            repeated.merge(&delta);
+        }
+        assert_eq!(scaled, repeated);
+    }
+
+    #[test]
+    fn delta_since_inverts_merge() {
+        let base = Stats { accesses: 5, writebacks: 2, ..Default::default() };
+        let delta = Stats { accesses: 3, hops: 4, ..Default::default() };
+        let mut total = base.clone();
+        total.merge(&delta);
+        assert_eq!(total.delta_since(&base), delta);
     }
 }

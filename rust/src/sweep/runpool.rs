@@ -52,9 +52,10 @@ impl RunPool {
         RunPool { threads: threads.max(1), pin: false }
     }
 
-    /// Opt into pinning each worker to a CPU (worker i → CPU i, wrapped)
-    /// via [`crate::util::affinity`] — a no-op off Linux and with a
-    /// single worker.
+    /// Opt into pinning each worker to a CPU — NUMA-node round-robin via
+    /// [`crate::util::affinity::worker_cpu`] (flat worker → CPU when no
+    /// node topology is readable) — a no-op off Linux and with a single
+    /// worker.
     pub fn pinned(mut self, pin: bool) -> RunPool {
         self.pin = pin;
         self
@@ -115,7 +116,13 @@ impl RunPool {
                 let work = &work;
                 s.spawn(move || {
                     if pin {
-                        let _ = crate::util::affinity::pin_current_thread(wid);
+                        // NUMA-aware placement: workers round-robin across
+                        // nodes (flat worker→CPU off Linux or single-node).
+                        // Placement is wall-clock only; results are in
+                        // virtual time and bit-identical either way.
+                        let _ = crate::util::affinity::pin_current_thread(
+                            crate::util::affinity::worker_cpu(wid),
+                        );
                     }
                     let mut state = make_worker();
                     loop {

@@ -41,6 +41,90 @@ pub fn pinning_supported() -> bool {
     cfg!(target_os = "linux")
 }
 
+/// The machine's NUMA nodes as sorted CPU lists, read from
+/// `/sys/devices/system/node/node*/cpulist` (kernel list format, e.g.
+/// `0-3,8-11`). Empty off Linux, when sysfs is unavailable (containers
+/// often mask it), or on any parse surprise — callers must treat empty as
+/// "no topology known" and fall back to flat numbering.
+#[cfg(target_os = "linux")]
+pub fn node_cpulists() -> Vec<Vec<usize>> {
+    let Ok(entries) = std::fs::read_dir("/sys/devices/system/node") else {
+        return Vec::new();
+    };
+    let mut nodes: Vec<(usize, Vec<usize>)> = Vec::new();
+    for e in entries.flatten() {
+        let name = e.file_name().into_string().unwrap_or_default();
+        let Some(idx) = name.strip_prefix("node").and_then(|s| s.parse::<usize>().ok()) else {
+            continue;
+        };
+        let Ok(text) = std::fs::read_to_string(e.path().join("cpulist")) else {
+            continue;
+        };
+        let cpus = parse_cpulist(text.trim());
+        if !cpus.is_empty() {
+            nodes.push((idx, cpus));
+        }
+    }
+    // read_dir order is arbitrary; node index order is the stable one.
+    nodes.sort_by_key(|&(i, _)| i);
+    nodes.into_iter().map(|(_, c)| c).collect()
+}
+
+/// Non-Linux platforms: no NUMA topology to read.
+#[cfg(not(target_os = "linux"))]
+pub fn node_cpulists() -> Vec<Vec<usize>> {
+    Vec::new()
+}
+
+/// Parse the kernel's cpulist format: comma-separated CPUs and inclusive
+/// ranges (`0-3,8-11,16`). Malformed fields are skipped rather than
+/// failing the whole list — pinning is best-effort by contract.
+fn parse_cpulist(s: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for field in s.split(',') {
+        let field = field.trim();
+        if field.is_empty() {
+            continue;
+        }
+        match field.split_once('-') {
+            Some((a, b)) => {
+                if let (Ok(a), Ok(b)) = (a.trim().parse::<usize>(), b.trim().parse::<usize>()) {
+                    if a <= b && b - a < 4096 {
+                        cpus.extend(a..=b);
+                    }
+                }
+            }
+            None => {
+                if let Ok(c) = field.parse::<usize>() {
+                    cpus.push(c);
+                }
+            }
+        }
+    }
+    cpus.sort_unstable();
+    cpus.dedup();
+    cpus
+}
+
+/// The CPU run-pool worker `wid` should pin to: workers round-robin
+/// across NUMA nodes (worker i → node i mod N, then walk that node's CPU
+/// list), so a 2-worker pool on a 2-node machine lands one worker per
+/// node instead of two hyperthread-adjacent CPUs on node 0. With fewer
+/// than two known nodes (including off Linux) this is the identity —
+/// exactly the historical flat numbering. Pinning placement only affects
+/// wall-clock: results are in virtual time and bit-identical regardless.
+pub fn worker_cpu(wid: usize) -> usize {
+    worker_cpu_in(&node_cpulists(), wid)
+}
+
+fn worker_cpu_in(nodes: &[Vec<usize>], wid: usize) -> usize {
+    if nodes.len() < 2 {
+        return wid;
+    }
+    let node = &nodes[wid % nodes.len()];
+    node[(wid / nodes.len()) % node.len()]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -59,5 +143,39 @@ mod tests {
     fn pin_wraps_out_of_range_cpus() {
         let ok = std::thread::spawn(|| pin_current_thread(usize::MAX - 7)).join().unwrap();
         assert_eq!(ok, std::thread::spawn(|| pin_current_thread(0)).join().unwrap());
+    }
+
+    #[test]
+    fn cpulist_parses_ranges_singles_and_junk() {
+        assert_eq!(parse_cpulist("0-3,8-11"), vec![0, 1, 2, 3, 8, 9, 10, 11]);
+        assert_eq!(parse_cpulist("5"), vec![5]);
+        assert_eq!(parse_cpulist("2, 0-1 ,2"), vec![0, 1, 2]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("x,3-1,4"), vec![4]);
+    }
+
+    #[test]
+    fn worker_cpus_round_robin_across_nodes() {
+        // 2 nodes of 4 CPUs: even workers on node 0, odd on node 1,
+        // walking each node's list as the pool outgrows the node count.
+        let nodes = vec![vec![0, 1, 2, 3], vec![4, 5, 6, 7]];
+        let got: Vec<usize> = (0..8).map(|w| worker_cpu_in(&nodes, w)).collect();
+        assert_eq!(got, vec![0, 4, 1, 5, 2, 6, 3, 7]);
+    }
+
+    #[test]
+    fn worker_cpus_flat_without_topology() {
+        assert_eq!(worker_cpu_in(&[], 3), 3);
+        assert_eq!(worker_cpu_in(&[vec![0, 1, 2, 3]], 2), 2);
+    }
+
+    #[test]
+    fn node_cpulists_is_safe_to_call() {
+        // Smoke: whatever sysfs says (or doesn't — containers often mask
+        // it), every reported node must be a non-empty sorted CPU list.
+        for node in node_cpulists() {
+            assert!(!node.is_empty());
+            assert!(node.windows(2).all(|w| w[0] < w[1]));
+        }
     }
 }

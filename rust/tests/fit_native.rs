@@ -170,6 +170,7 @@ fn test_calibration() -> CalibrationCfg {
         coarse: 7,
         refine: 10,
         run_threads: 1,
+        ..CalibrationCfg::default()
     }
 }
 

@@ -143,6 +143,7 @@ fn calibrate_bit_identical_across_run_threads() {
             coarse: 5,
             refine: 5,
             run_threads,
+            ..CalibrationCfg::default()
         };
         let base = calibrate(&cfg, &targets, &ccfg(1)).unwrap();
         for workers in [2usize, 4] {
@@ -298,6 +299,108 @@ fn bfs_bit_identical_across_pool_widths() {
             assert_eq!(s.elapsed_ns.to_bits(), p.elapsed_ns.to_bits(), "{ctx}: elapsed");
             assert_eq!(s.edges_scanned, p.edges_scanned, "{ctx}: edges scanned");
             assert_eq!(s.wasted_claims, p.wasted_claims, "{ctx}: wasted claims");
+        }
+    }
+}
+
+/// Steady-state fast-forward goldens (`--steady-state`): `on` is
+/// bit-identical to the retained stepwise `off` path for contend ladders
+/// under both the scalar and the routed fabric, on all four arches, at
+/// pool widths 1, 2, and 4. Like the pool itself, the detector is a
+/// wall-clock optimization only — down to the per-link fabric counters.
+#[test]
+fn steady_contend_bit_identical_scalar_and_routed_across_pool_widths() {
+    use atomics_repro::sim::fabric::Fabric;
+    use atomics_repro::sim::multicore::run_contention_steady;
+    use atomics_repro::sim::SteadyMode;
+
+    const STEADY_OPS: usize = 400;
+    for base in arch::all() {
+        for use_routed in [false, true] {
+            let mut cfg = base.clone();
+            if use_routed {
+                cfg.fabric = Fabric::routed_for(&cfg);
+            }
+            let fab = if use_routed { "routed" } else { "scalar" };
+            let n = cfg.topology.n_cores.min(4);
+            let items = [(OpKind::Cas, n), (OpKind::Faa, n), (OpKind::Write, n)];
+
+            // Reference: the stepwise path, serial.
+            let mut m = Machine::new(cfg.clone());
+            let off: Vec<_> = items
+                .iter()
+                .map(|&(op, n)| {
+                    run_contention_steady(
+                        &mut m,
+                        &mut RunArena::new(),
+                        n,
+                        op,
+                        STEADY_OPS,
+                        SteadyMode::Off,
+                    )
+                    .0
+                })
+                .collect();
+
+            for workers in [1usize, 2, 4] {
+                let on = RunPool::new(workers).map(
+                    &items,
+                    || (Machine::new(cfg.clone()), RunArena::new()),
+                    |(m, arena), &(op, n)| {
+                        run_contention_steady(m, arena, n, op, STEADY_OPS, SteadyMode::On)
+                    },
+                );
+                for (i, (o, (p, info))) in off.iter().zip(&on).enumerate() {
+                    let (op, n) = items[i];
+                    let ctx =
+                        format!("{} {fab} {:?} threads={n} workers={workers}", base.name, op);
+                    assert!(!info.aborted, "{ctx}: replay aborted");
+                    assert_eq!(
+                        o.bandwidth_gbs.to_bits(),
+                        p.bandwidth_gbs.to_bits(),
+                        "{ctx}: bandwidth {} vs {}",
+                        o.bandwidth_gbs,
+                        p.bandwidth_gbs
+                    );
+                    assert_eq!(
+                        o.mean_latency_ns.to_bits(),
+                        p.mean_latency_ns.to_bits(),
+                        "{ctx}: mean latency"
+                    );
+                    assert_eq!(o.elapsed_ns.to_bits(), p.elapsed_ns.to_bits(), "{ctx}: elapsed");
+                    assert_eq!(o.per_thread, p.per_thread, "{ctx}: per-thread stats");
+                    assert_eq!(o.links, p.links, "{ctx}: per-link fabric stats");
+                }
+            }
+        }
+    }
+}
+
+/// Steady-state goldens over the lock/queue family: `--steady-state on`
+/// is bit-identical to `off` for every lock kind on every arch (kinds
+/// below their minimum thread count return None identically).
+#[test]
+fn steady_locks_bit_identical_for_every_kind() {
+    use atomics_repro::bench::locks::run_lock_in_steady;
+    use atomics_repro::sim::{SteadyInfo, SteadyMode};
+
+    for cfg in arch::all() {
+        let mut m = Machine::new(cfg.clone());
+        for &kind in LockKind::ALL.iter() {
+            let off =
+                run_lock_in_steady(&mut m, &mut RunArena::new(), kind, 4, 40, SteadyMode::Off);
+            let on =
+                run_lock_in_steady(&mut m, &mut RunArena::new(), kind, 4, 40, SteadyMode::On);
+            let ctx = format!("{} {} steady", cfg.name, kind.label());
+            match (off, on) {
+                (None, None) => {}
+                (Some((a, ai)), Some((b, bi))) => {
+                    assert_eq!(ai, SteadyInfo::default(), "{ctx}: off must stay inert");
+                    assert!(!bi.aborted, "{ctx}: replay aborted");
+                    assert_lock_bits_eq(&a, &b, &ctx);
+                }
+                _ => panic!("{ctx}: Some/None mismatch"),
+            }
         }
     }
 }

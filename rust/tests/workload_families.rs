@@ -170,6 +170,48 @@ fn lock_results_identical_fast_and_stepwise() {
     }
 }
 
+/// The steady-state extension of the gate above: with cycle detection
+/// and period fast-forward armed (`SteadyMode::On`), every lock kind
+/// still produces bit-identical results to the plain fast scheduler —
+/// which the previous test pins to the stepwise reference, closing the
+/// stepwise ≡ fast ≡ fast+steady chain.
+#[test]
+fn lock_results_identical_with_steady_fast_forward() {
+    use atomics_repro::bench::locks::run_lock_in_steady;
+    use atomics_repro::sim::{RunArena, SteadyMode};
+
+    for cfg in [arch::ivybridge(), arch::bulldozer(), arch::xeonphi()] {
+        let mut m = Machine::new(cfg);
+        for kind in LockKind::ALL {
+            let plain = run_lock(&mut m, kind, 8, 30).unwrap();
+            let (steady, info) = run_lock_in_steady(
+                &mut m,
+                &mut RunArena::new(),
+                kind,
+                8,
+                30,
+                SteadyMode::On,
+            )
+            .unwrap();
+            let name = format!("{} on {} (steady)", kind.label(), m.cfg.name);
+            assert!(!info.aborted, "{name}: replay contradicted a verified period");
+            assert_eq!(
+                plain.acq_per_sec.to_bits(),
+                steady.acq_per_sec.to_bits(),
+                "{name}: plain {} vs steady {}",
+                plain.acq_per_sec,
+                steady.acq_per_sec
+            );
+            assert_eq!(plain.elapsed_ns.to_bits(), steady.elapsed_ns.to_bits(), "{name}");
+            assert_eq!(plain.per_thread, steady.per_thread, "{name}");
+            assert_eq!(plain.attempts, steady.attempts, "{name}");
+            assert_eq!(plain.failed_attempts, steady.failed_attempts, "{name}");
+            assert_eq!(plain.spin_reads, steady.spin_reads, "{name}");
+            assert_eq!(plain.acquisitions, steady.acquisitions, "{name}");
+        }
+    }
+}
+
 /// Direct lock runs and executor-pooled runs agree bit-for-bit (the
 /// fresh-machine-semantics contract of run_program).
 #[test]

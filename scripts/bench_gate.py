@@ -18,13 +18,25 @@ on this machine.
 New entries: a throughput key present in the fresh results but absent
 from the committed baseline (a PR added a benchmark) is reported as
 "new (unadjudicated)" and does not fail the gate — it has no baseline to
-regress against.  Refresh flow: run `./ci.sh --update-baseline` (or
-`python3 scripts/bench_gate.py BASELINE FRESH --update-baseline`) to fold
-the new entries into the baseline, then commit BENCH_baseline.json; from
-the next run on they are gated like every other key.  The same flag is
-the escape hatch after an intentional slowdown.
+regress against.  `--list-new` prints exactly those keys, one per line,
+and exits 0 (nothing else on stdout, so it pipes cleanly) — the quick way
+to see which keys a PR added (e.g. the `fit_`, `calibrate_`,
+`contend_fabric_` and `predict_` families arrived unadjudicated this
+way) before deciding to adopt them.
+
+Baseline refresh flow:
+  1. `python3 scripts/bench_gate.py BASELINE FRESH --list-new` to see
+     what would be adopted;
+  2. `./ci.sh --update-baseline` (or `python3 scripts/bench_gate.py
+     BASELINE FRESH --update-baseline`) to rewrite the baseline from the
+     fresh run — this folds new keys in AND re-anchors every existing
+     key, so only do it on an otherwise healthy run;
+  3. commit BENCH_baseline.json; from the next run on the new keys are
+     gated like every other key.
+The same flag is the escape hatch after an intentional slowdown.
 
 Usage: bench_gate.py BASELINE FRESH [--threshold 0.20] [--update-baseline]
+                                    [--list-new]
 """
 
 import json
@@ -48,6 +60,7 @@ def main(argv):
         if a.startswith("--threshold="):
             threshold = float(a.split("=", 1)[1])
     update = "--update-baseline" in argv[1:]
+    list_new = "--list-new" in argv[1:]
 
     try:
         with open(fresh_path) as f:
@@ -62,6 +75,14 @@ def main(argv):
             baseline = json.load(f)
     except (OSError, ValueError):
         pass
+
+    if list_new:
+        # Unadjudicated keys only, one per line (empty baseline = all new).
+        known = baseline or {}
+        for k in throughput_keys(fresh):
+            if k not in known:
+                print(k)
+        return 0
 
     if update or baseline is None or not baseline.get("calibrated", False):
         out = dict(fresh)

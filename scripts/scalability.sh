@@ -3,6 +3,8 @@
 # times `repro contend` (CAS, FAA, write over the paper's thread ladder)
 # at each run-pool width and prints points/s per rung, so run-level
 # scaling is visible — and regressions audible — without the full bench.
+# A final pair of rungs times the serial ladder with --steady-state off
+# vs on (the periodic fast-forward's wall-clock win).
 #
 #   scripts/scalability.sh [--arch NAME] [--ops N] [--rungs "1 2 4 8"]
 #
@@ -60,5 +62,21 @@ for R in $RUNGS; do
     echo "$START $END $R $POINTS" | awk '{
         dt = $2 - $1; if (dt <= 0) dt = 1e-9;
         printf "  run-threads %-3s %8.2fs   %7.2f points/s\n", $3, dt, $4 / dt
+    }'
+done
+
+# Steady rung: the same ladder serially, stepwise vs periodic
+# fast-forward — the --steady-state wall-clock win without the full
+# bench (results are bit-identical; engagement diagnostics silenced).
+for MODE in off on; do
+    START=$(date +%s.%N)
+    for OP in cas faa write; do
+        "$BIN" contend --arch "$ARCH" --op "$OP" --ops "$OPS" \
+            --run-threads 1 --steady-state "$MODE" >/dev/null 2>&1
+    done
+    END=$(date +%s.%N)
+    echo "$START $END $MODE $POINTS" | awk '{
+        dt = $2 - $1; if (dt <= 0) dt = 1e-9;
+        printf "  steady-state %-3s %6.2fs   %7.2f points/s\n", $3, dt, $4 / dt
     }'
 done
