@@ -80,6 +80,38 @@ echo "== smoke: steady-state fast-forward (--steady-state on) =="
 ./target/release/repro contend --arch haswell --op cas --threads 2 --ops 400 --steady-state on
 ./target/release/repro calibrate --arch haswell --steady-state on --ops 400
 
+echo "== smoke: simulation tracing (--trace / repro trace, Chrome trace-event JSON) =="
+TRACE_DIR=$(mktemp -d)
+# boolean flags last: Args treats "--flag value" as flag=value
+RESULTS_DIR="$TRACE_DIR" ./target/release/repro contend --arch haswell --op cas \
+    --threads 2 --ops 200 --trace --stats
+RESULTS_DIR="$TRACE_DIR" ./target/release/repro trace --arch phi --op faa \
+    --threads 4 --ops 200 --topology routed
+if command -v python3 >/dev/null 2>&1; then
+    python3 - "$TRACE_DIR/trace_haswell.json" "$TRACE_DIR/trace_xeon_phi.json" <<'EOF'
+import json, sys
+for path in sys.argv[1:]:
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc["traceEvents"]
+    assert events, f"{path}: no trace events"
+    phases = {e["ph"] for e in events}
+    assert "X" in phases, f"{path}: no grant slices"
+    print(f"{path}: {len(events)} events OK")
+EOF
+else
+    echo "(python3 not installed — skipping trace JSON validation)"
+fi
+rm -rf "$TRACE_DIR"
+
+echo "== smoke: harness self-profiling (--profile) and leveled logging (REPRO_LOG) =="
+./target/release/repro predict --grid --arch haswell --profile >/dev/null
+# quiet mode may silence diagnostics but must leave stdout byte-identical
+./target/release/repro contend --arch haswell --op faa --threads 2 --ops 200 >/tmp/contend_info.out
+REPRO_LOG=quiet ./target/release/repro contend --arch haswell --op faa --threads 2 --ops 200 >/tmp/contend_quiet.out
+cmp /tmp/contend_info.out /tmp/contend_quiet.out
+rm -f /tmp/contend_info.out /tmp/contend_quiet.out
+
 echo "== smoke: scripts/scalability.sh (2-rung contend ladder) =="
 BIN=./target/release/repro scripts/scalability.sh --arch haswell --ops 300 --rungs "1 2"
 

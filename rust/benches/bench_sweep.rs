@@ -9,9 +9,12 @@
 //! workers (bit-equality asserted between rungs), the routed-fabric
 //! contend grid (link-level interconnect pricing), the 100k-op contended
 //! ladder stepwise vs. steady-state fast-forward (bit-equality asserted;
-//! `contend_ff_ms`/`contend_ff_speedup`), and the batched
-//! prediction-serving engine on a ≥10k-point tiled canonical grid vs.
-//! the rebuild-everything one-off path, prints the speedups, and writes
+//! `contend_ff_ms`/`contend_ff_speedup`), the same ladder untraced vs.
+//! with a ChromeTrace sink attached (bit-equality asserted;
+//! `contend_trace_overhead_pct` — the cost of observation), and the
+//! batched prediction-serving engine on a ≥10k-point tiled canonical
+//! grid vs. the rebuild-everything one-off path, prints the speedups,
+//! and writes
 //! `BENCH_sweep.json` so future PRs can track sweep, contend, locks,
 //! fit, calibrate, fabric, and predict throughput (gated by
 //! `scripts/bench_gate.py`; `calibrate_points_per_sec`,
@@ -332,6 +335,81 @@ fn main() {
         ff_counts.len()
     );
 
+    // Tracing overhead: the same Haswell CAS ladder untraced (NoTrace —
+    // the observer hook compiled away) vs. with a buffered ChromeTrace
+    // sink attached (every grant/hand-off/steady event recorded, no file
+    // I/O in the timed region). Bit-equality is asserted point-by-point —
+    // the DESIGN.md §13 contract — and the cost of observation lands in
+    // "contend_trace_overhead_pct" (a pct key: reported by the gate but
+    // never gated on, like every non-throughput key).
+    use atomics_repro::bench::contention::run_model_sink;
+    use atomics_repro::obs::ChromeTrace;
+    let trace_ops = if std::env::var("BENCH_FAST").is_ok() { 2_000 } else { 10_000 };
+    let run_traced = || -> (f64, Vec<f64>, usize) {
+        let mut m = Machine::new(ff_cfg.clone());
+        let mut arena = RunArena::new();
+        let mut events = 0usize;
+        let t0 = Instant::now();
+        let vals: Vec<f64> = ff_counts
+            .iter()
+            .map(|&n| {
+                let mut sink = ChromeTrace::new("bench");
+                let v = run_model_sink(
+                    &mut m,
+                    &mut arena,
+                    n,
+                    OpKind::Cas,
+                    trace_ops,
+                    SteadyMode::Off,
+                    &mut sink,
+                )
+                .0
+                .bandwidth_gbs;
+                events += sink.len();
+                black_box(&sink);
+                v
+            })
+            .collect();
+        (t0.elapsed().as_secs_f64() * 1e3, vals, events)
+    };
+    let run_plain = || -> (f64, Vec<f64>) {
+        let mut m = Machine::new(ff_cfg.clone());
+        let mut arena = RunArena::new();
+        let t0 = Instant::now();
+        let vals: Vec<f64> = ff_counts
+            .iter()
+            .map(|&n| {
+                run_model_steady_in(
+                    &mut m,
+                    &mut arena,
+                    ContentionModel::MachineAccurate,
+                    n,
+                    OpKind::Cas,
+                    trace_ops,
+                    SteadyMode::Off,
+                )
+                .0
+                .bandwidth_gbs
+            })
+            .collect();
+        (t0.elapsed().as_secs_f64() * 1e3, vals)
+    };
+    black_box(run_traced()); // warmup
+    let (trace_plain_ms, trace_plain_vals) = run_plain();
+    let (trace_on_ms, trace_on_vals, trace_events) = run_traced();
+    for (i, (a, b)) in trace_plain_vals.iter().zip(&trace_on_vals).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "attaching a trace sink must be bit-identical at ladder point {i} ({} threads)",
+            ff_counts[i]
+        );
+    }
+    let trace_overhead_pct = (trace_on_ms / trace_plain_ms.max(1e-9) - 1.0) * 100.0;
+    println!(
+        "  contend trace    {trace_on_ms:>10.1} ms   ({trace_events} events, {trace_overhead_pct:+.1}% vs untraced at {trace_plain_ms:.1} ms)"
+    );
+
     // Prediction-serving engine: the canonical grid of all four testbeds,
     // tiled to a ≥10k-point batch, through the batched engine vs. the
     // one-off path that rebuilds the machine description and θ per query
@@ -404,6 +482,9 @@ fn main() {
          \"contend_fabric_points_per_sec\":{:.1},\
          \"contend_ff_ops\":{},\"contend_ff_off_ms\":{:.1},\
          \"contend_ff_ms\":{:.1},\"contend_ff_speedup\":{:.2},\
+         \"contend_trace_ops\":{},\"contend_trace_events\":{},\
+         \"contend_trace_plain_ms\":{:.1},\"contend_trace_ms\":{:.1},\
+         \"contend_trace_overhead_pct\":{:.2},\
          \"predict_points\":{},\"predict_ms\":{:.1},\"predict_points_per_sec\":{:.1},\
          \"predict_oneoff_ms\":{:.1},\"predict_speedup_vs_oneoff\":{:.2},\
          \"note\":\"one untimed warmup pass per grid before the timed pass\"}}\n",
@@ -437,6 +518,11 @@ fn main() {
         ff_off_ms,
         ff_on_ms,
         ff_speedup,
+        trace_ops,
+        trace_events,
+        trace_plain_ms,
+        trace_on_ms,
+        trace_overhead_pct,
         predict_points,
         predict_ms,
         predict_points as f64 / (predict_ms / 1e3).max(1e-9),

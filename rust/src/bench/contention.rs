@@ -21,10 +21,12 @@
 //! calibrate` re-derives the values and reports per-target residuals.
 
 use crate::atomics::OpKind;
+use crate::obs::TraceSink;
 use crate::sim::event::run_contention as run_analytic;
 pub use crate::sim::event::ContentionResult;
 use crate::sim::multicore::{
-    agg, run_contention_steady, ContentionStats, RunArena, SteadyInfo, SteadyMode,
+    agg, run_contention_sink, run_contention_steady, ContentionStats, RunArena, SteadyInfo,
+    SteadyMode,
 };
 use crate::sim::{LinkStats, Machine, MachineConfig};
 
@@ -187,6 +189,35 @@ pub fn run_model_steady_in(
             (point, SteadyInfo::default())
         }
     }
+}
+
+/// The machine-accurate point of [`run_model_steady_in`] with an attached
+/// [`TraceSink`] observer (DESIGN.md §13) — machine model only; the
+/// analytic engine is closed-form and has no event schedule to observe.
+/// Bit-identical to [`run_model_steady_in`] by the scheduler's
+/// no-perturbation contract.
+#[allow(clippy::too_many_arguments)]
+pub fn run_model_sink<S: TraceSink>(
+    m: &mut Machine,
+    arena: &mut RunArena,
+    threads: usize,
+    op: OpKind,
+    ops_per_thread: usize,
+    steady: SteadyMode,
+    sink: &mut S,
+) -> (ContentionPoint, SteadyInfo) {
+    let (r, info) = run_contention_sink(m, arena, threads, op, ops_per_thread, steady, sink);
+    let point = ContentionPoint {
+        threads,
+        op,
+        model: ContentionModel::MachineAccurate,
+        bandwidth_gbs: r.bandwidth_gbs,
+        mean_latency_ns: r.mean_latency_ns,
+        elapsed_ns: r.elapsed_ns,
+        per_thread: r.per_thread,
+        links: r.links,
+    };
+    (point, info)
 }
 
 /// Sweep thread counts 1..=max (clamped to the core count) for one

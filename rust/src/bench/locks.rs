@@ -28,9 +28,10 @@
 //! the scheduler's per-thread [`ContentionStats`].
 
 use crate::atomics::{Op, OpKind};
+use crate::obs::TraceSink;
 use crate::sim::multicore::{
-    agg, run_program, run_program_steady, run_program_stepwise, ContentionStats, CoreProgram,
-    MulticoreResult, RunArena, Step,
+    agg, run_program, run_program_sink, run_program_steady, run_program_stepwise, ContentionStats,
+    CoreProgram, MulticoreResult, RunArena, Step,
 };
 use crate::sim::{Access, Machine, SteadyInfo, SteadyMode};
 
@@ -677,6 +678,25 @@ pub fn run_lock_in_steady(
 ) -> Option<(LockResult, SteadyInfo)> {
     run_lock_impl(m, kind, threads, work_per_thread, |m, progs, label| {
         run_program_steady(m, arena, progs, label, steady)
+    })
+}
+
+/// [`run_lock_in_steady`] with an attached [`TraceSink`] observer
+/// (DESIGN.md §13): the §6.1 lock/queue programs priced through
+/// [`run_program_sink`], so a timeline or metrics sink sees every grant,
+/// spin replay and hand-off of the lock schedule. Bit-identical to
+/// [`run_lock_in_steady`] by the scheduler's no-perturbation contract.
+pub fn run_lock_sink<S: TraceSink>(
+    m: &mut Machine,
+    arena: &mut RunArena,
+    kind: LockKind,
+    threads: usize,
+    work_per_thread: usize,
+    steady: SteadyMode,
+    sink: &mut S,
+) -> Option<(LockResult, SteadyInfo)> {
+    run_lock_impl(m, kind, threads, work_per_thread, |m, progs, label| {
+        run_program_sink(m, arena, progs, label, steady, sink)
     })
 }
 

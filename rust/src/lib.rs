@@ -28,6 +28,10 @@
 //!   layer.
 //! * [`graph`] — Graph500-style Kronecker graphs and the parallel BFS case
 //!   study (§6.1, Fig. 10b) running on simulated atomics.
+//! * [`obs`] — the observability layer (DESIGN.md §13): a zero-cost-off
+//!   [`obs::TraceSink`] observer hook in both multicore schedulers with
+//!   Chrome/Perfetto timeline and metrics-histogram sinks, plus harness
+//!   self-profiling behind `repro … --profile`.
 //! * [`fit`] — the native fit & calibration subsystem: a pure-Rust
 //!   linear-least-squares engine (closed-form normal equations +
 //!   `fit_step`-equivalent projected descent) behind the [`fit::FitBackend`]
@@ -104,6 +108,7 @@ pub mod fit;
 pub mod graph;
 pub mod harness;
 pub mod model;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod serve;

@@ -18,7 +18,7 @@
 //!                                   per line)
 //!   repro contend --arch NAME [--op OP] [--threads N] [--ops N]
 //!                 [--model machine|analytic] [--topology scalar|routed]
-//!                 [--steady-state auto|on|off] [--stats]
+//!                 [--steady-state auto|on|off] [--stats] [--trace]
 //!                                   contended same-line benchmark (Fig. 8)
 //!                                   through the machine-accurate multi-core
 //!                                   scheduler, with per-thread stats; one
@@ -30,7 +30,18 @@
 //!                                   --steady-state controls the verified
 //!                                   periodic fast-forward (bit-identical
 //!                                   results, less wall-clock; default
-//!                                   auto)
+//!                                   auto); --trace re-runs the last point
+//!                                   with the observer sinks attached
+//!                                   (DESIGN.md §13) — bit-identical
+//!                                   numbers, plus latency/hand-off
+//!                                   histogram tables and a Perfetto-
+//!                                   loadable results/trace_<arch>.json
+//!   repro trace [--arch NAME] [--op OP] [--threads N] [--ops N]
+//!               [--topology scalar|routed] [--steady-state auto|on|off]
+//!                                   one traced contention point: metrics
+//!                                   histograms per (op, coherence state),
+//!                                   hand-off distance distribution, and
+//!                                   the Chrome-trace timeline JSON
 //!   repro locks [--arch NAME] [--kind tas|tas-backoff|ticket|mpsc|all]
 //!               [--threads N] [--acq N] [--steady-state auto|on|off]
 //!               [--stats]
@@ -78,7 +89,12 @@
 //! Global flags: --fast (reduced sweeps), --artifacts DIR, --results DIR,
 //! --run-threads N (run-pool width for contend/locks/figure 8/calibrate/
 //! bfs; default: all cores), --pin-workers (pin run-pool workers to
-//! cores, Linux only — elsewhere a no-op).
+//! cores, Linux only — elsewhere a no-op), --profile (harness
+//! self-profiling summary on stderr after the command: run-pool
+//! busy/idle, sweep prep-cache and predict-LRU hit rates, DESIGN.md §13).
+//!
+//! Diagnostics honor `REPRO_LOG=quiet|info|debug` (default info); stdout
+//! is byte-identical at every level.
 
 use atomics_repro::atomics::OpKind;
 use atomics_repro::bench::latency::LatencyBench;
@@ -92,7 +108,7 @@ use atomics_repro::report::{figures, tables};
 use atomics_repro::sweep::SweepExecutor;
 use atomics_repro::util::cli::Args;
 use atomics_repro::util::table::Table;
-use atomics_repro::{arch, graph};
+use atomics_repro::{arch, graph, log_info};
 
 fn main() {
     let args = Args::from_env();
@@ -114,6 +130,11 @@ fn main() {
     if args.flag("pin-workers") {
         std::env::set_var("PIN_WORKERS", "1");
     }
+    // Harness self-profiling (DESIGN.md §13): the env var reaches the
+    // RunPool workers; the summary prints on stderr after the command.
+    if args.flag("profile") {
+        std::env::set_var("REPRO_PROFILE", "1");
+    }
 
     let code = match args.subcommand.as_deref() {
         Some("table") => cmd_table(&args),
@@ -121,6 +142,7 @@ fn main() {
         Some("all") => cmd_all(),
         Some("sweep") => cmd_sweep(&args),
         Some("contend") => cmd_contend(&args),
+        Some("trace") => cmd_trace(&args),
         Some("locks") => cmd_locks(&args),
         Some("validate") => cmd_validate(),
         Some("fit") => cmd_fit(&args),
@@ -140,13 +162,25 @@ fn main() {
             2
         }
     };
+    if args.flag("profile") {
+        // Requested output, not an advisory diagnostic: prints at every
+        // REPRO_LOG level (stderr, so stdout pipelines stay clean).
+        let snap = atomics_repro::obs::profile::global().snapshot();
+        let lines = snap.summary_lines();
+        if lines.is_empty() {
+            eprintln!("profile: nothing recorded (no pool runs or cache probes)");
+        }
+        for line in lines {
+            eprintln!("{line}");
+        }
+    }
     std::process::exit(code);
 }
 
 fn usage() {
     eprintln!("repro — reproduction driver for 'Evaluating the Cost of Atomic Operations'");
     eprintln!(
-        "subcommands: table <n> | figure <id> | all | sweep | contend | locks | validate | fit | calibrate | bfs | ablation | latency | predict | info"
+        "subcommands: table <n> | figure <id> | all | sweep | contend | trace | locks | validate | fit | calibrate | bfs | ablation | latency | predict | info"
     );
     eprintln!("see README.md for details");
 }
@@ -296,7 +330,7 @@ fn cmd_sweep(args: &Args) -> i32 {
             failures += o.failures.len();
         }
         println!("{}", t.render());
-        eprintln!(
+        log_info!(
             "{n_points} points in {elapsed:.2}s on {threads} thread(s) ({:.0} points/s)",
             n_points as f64 / elapsed.max(1e-9)
         );
@@ -374,6 +408,10 @@ fn cmd_contend(args: &Args) -> i32 {
         eprintln!("--stats requires --model machine (the analytic model has no per-thread stats)");
         return 2;
     }
+    if args.flag("trace") && model == ContentionModel::Analytic {
+        eprintln!("--trace requires --model machine (the analytic model has no event schedule)");
+        return 2;
+    }
     if op == OpKind::Read && model == ContentionModel::Analytic {
         eprintln!("--op read is machine-model only (the analytic engine has no shared-read path)");
         return 2;
@@ -447,7 +485,7 @@ fn cmd_contend(args: &Args) -> i32 {
     // --steady-state off (the fast path changes wall-clock only).
     if let Some((_, info)) = &last {
         if info.engaged {
-            eprintln!(
+            log_info!(
                 "steady-state: period of {} events ({:.1} ns) at the last point; \
                  fast-forwarded {} period(s), {} events skipped{}",
                 info.period_events,
@@ -459,16 +497,30 @@ fn cmd_contend(args: &Args) -> i32 {
         }
     }
 
+    // --trace: re-run the last point serially with the observer sinks
+    // attached (DESIGN.md §13). The sinks cannot perturb the schedule, so
+    // the metrics registry's per-thread stats are bit-identical to the
+    // pooled run's — the --stats tables below render from the registry
+    // when tracing, byte-for-byte the same output.
+    let traced = args
+        .flag("trace")
+        .then(|| trace_contend_point(&cfg, op, *counts.last().expect("counts never empty"),
+                                     ops_per_thread, steady));
+
     if args.flag("stats") {
         // counts is never empty and the analytic model was rejected above
         let (p, _) = last.expect("at least one contention point ran");
         let elapsed = p.elapsed_ns;
+        let per_thread = match &traced {
+            Some((_, metrics, _)) => metrics.per_thread(),
+            None => p.per_thread.as_slice(),
+        };
         let mut d = Table::new(
             format!("per-thread stats at {} threads", p.threads),
             &["thread", "ops", "hops", "inv", "CAS fails", "stall ns", "mean ns", "Mops/s"],
         );
         const MAX_ROWS: usize = 16;
-        for s in p.per_thread.iter().take(MAX_ROWS) {
+        for s in per_thread.iter().take(MAX_ROWS) {
             d.row(&[
                 s.core.to_string(),
                 s.ops.to_string(),
@@ -481,8 +533,8 @@ fn cmd_contend(args: &Args) -> i32 {
             ]);
         }
         println!("{}", d.render());
-        if p.per_thread.len() > MAX_ROWS {
-            println!("({} more threads elided)", p.per_thread.len() - MAX_ROWS);
+        if per_thread.len() > MAX_ROWS {
+            println!("({} more threads elided)", per_thread.len() - MAX_ROWS);
         }
 
         if !p.links.is_empty() {
@@ -521,6 +573,131 @@ fn cmd_contend(args: &Args) -> i32 {
                 println!("(full per-link traffic written to {path})");
             }
         }
+    }
+
+    if let Some((_, metrics, path)) = &traced {
+        println!("{}", metrics.latency_table().render());
+        println!("{}", metrics.handoff_table().render());
+        if let Some(line) = metrics.steady_line() {
+            println!("{line}");
+        }
+        println!("{}", metrics.summary_line());
+        if let Some(path) = path {
+            println!("(trace written to {path})");
+        }
+    }
+    0
+}
+
+/// Re-run one machine-model contention point serially with the Chrome
+/// timeline and metrics-histogram sinks attached (DESIGN.md §13) and
+/// write the Perfetto-loadable JSON to `results/trace_<arch>.json`.
+/// Returns the traced point, its metrics registry, and the written path —
+/// every number bit-identical to the untraced run by the scheduler's
+/// no-perturbation contract.
+fn trace_contend_point(
+    cfg: &atomics_repro::sim::MachineConfig,
+    op: OpKind,
+    threads: usize,
+    ops_per_thread: usize,
+    steady: atomics_repro::sim::SteadyMode,
+) -> (
+    atomics_repro::bench::contention::ContentionPoint,
+    atomics_repro::obs::Metrics,
+    Option<String>,
+) {
+    use atomics_repro::obs::{ChromeTrace, Metrics, Tee};
+    use atomics_repro::sim::{Machine, RunArena};
+
+    let labels: Vec<String> = cfg
+        .fabric
+        .routed()
+        .map(|rt| rt.topo.links().iter().map(|l| l.label.clone()).collect())
+        .unwrap_or_default();
+    let title = format!("{} {} x{threads}", cfg.name, op.label());
+    let mut sink = Tee(ChromeTrace::new(title).with_link_labels(labels), Metrics::new());
+    let mut m = Machine::new(cfg.clone());
+    let (point, _info) = atomics_repro::bench::contention::run_model_sink(
+        &mut m,
+        &mut RunArena::new(),
+        threads,
+        op,
+        ops_per_thread,
+        steady,
+        &mut sink,
+    );
+    let Tee(chrome, metrics) = sink;
+    let slug = cfg.name.to_lowercase().replace(' ', "_");
+    let path = format!("{}/trace_{slug}.json", atomics_repro::report::results_dir());
+    let written = match chrome.write(&path) {
+        Ok(()) => Some(path),
+        Err(e) => {
+            log_info!("(trace write to {path} failed: {e})");
+            None
+        }
+    };
+    (point, metrics, written)
+}
+
+fn cmd_trace(args: &Args) -> i32 {
+    use atomics_repro::bench::contention::OPS_PER_THREAD;
+
+    let arch_name = args.opt("arch").unwrap_or("ivybridge");
+    let Some(mut cfg) = arch::by_name(arch_name) else {
+        eprintln!("unknown arch '{arch_name}'");
+        return 2;
+    };
+    let op_name = args.opt("op").unwrap_or("faa");
+    let Some(op) = parse_op(op_name) else {
+        eprintln!("unknown op '{op_name}' (cas | faa | swp | read | write)");
+        return 2;
+    };
+    let routed = match args.opt("topology").unwrap_or("scalar") {
+        "scalar" => false,
+        "routed" => true,
+        other => {
+            eprintln!("unknown topology '{other}' (scalar | routed)");
+            return 2;
+        }
+    };
+    if routed {
+        cfg.fabric = atomics_repro::sim::Fabric::routed_for(&cfg);
+    }
+    let Some(steady) = parse_steady(args) else { return 2 };
+    let ops_per_thread: usize = args.opt_parse("ops", OPS_PER_THREAD).max(1);
+    let threads: usize = args.opt_parse("threads", cfg.topology.n_cores);
+    if !(1..=cfg.topology.n_cores).contains(&threads) {
+        eprintln!("--threads {threads} outside 1..={} on {}", cfg.topology.n_cores, cfg.name);
+        return 2;
+    }
+
+    let (p, metrics, path) = trace_contend_point(&cfg, op, threads, ops_per_thread, steady);
+    let mut t = Table::new(
+        format!(
+            "trace — {} {} at {threads} threads ({ops_per_thread} ops/thread{})",
+            cfg.name,
+            op.label(),
+            if routed { ", routed fabric" } else { "" }
+        ),
+        &["GB/s", "mean ns", "grants", "hand-offs", "CAS fails", "steady replays"],
+    );
+    t.row(&[
+        format!("{:.3}", p.bandwidth_gbs),
+        format!("{:.1}", p.mean_latency_ns),
+        metrics.grants().to_string(),
+        metrics.handoffs().to_string(),
+        metrics.cas_failed().to_string(),
+        metrics.steady_replays().to_string(),
+    ]);
+    println!("{}", t.render());
+    println!("{}", metrics.latency_table().render());
+    println!("{}", metrics.handoff_table().render());
+    if let Some(line) = metrics.steady_line() {
+        println!("{line}");
+    }
+    println!("{}", metrics.summary_line());
+    if let Some(path) = path {
+        println!("(trace written to {path})");
     }
     0
 }
@@ -670,7 +847,7 @@ fn cmd_fit(args: &Args) -> i32 {
                     slug
                 );
                 if let Err(e) = csv.write(&path) {
-                    eprintln!("warning: could not write {path}: {e}");
+                    log_info!("warning: could not write {path}: {e}");
                 }
             }
             Err(e) => eprintln!(
@@ -773,7 +950,7 @@ fn cmd_calibrate(args: &Args) -> i32 {
         let path =
             format!("{}/calibration_{}.csv", atomics_repro::report::results_dir(), slug);
         if let Err(e) = csv.write(&path) {
-            eprintln!("warning: could not write {path}: {e}");
+            log_info!("warning: could not write {path}: {e}");
         }
     }
     0
@@ -851,7 +1028,7 @@ fn calibrate_fabric_cmd(args: &Args, configs: Vec<atomics_repro::sim::MachineCon
             slug
         );
         if let Err(e) = csv.write(&path) {
-            eprintln!("warning: could not write {path}: {e}");
+            log_info!("warning: could not write {path}: {e}");
         }
     }
     0
@@ -1107,7 +1284,7 @@ fn cmd_predict(args: &Args) -> i32 {
         return 1;
     }
     let elapsed = t0.elapsed().as_secs_f64();
-    eprintln!(
+    log_info!(
         "{} prediction(s) in {:.3}s ({:.0} points/s)",
         reqs.len(),
         elapsed,

@@ -1,0 +1,415 @@
+//! Chrome trace-event JSON sink (DESIGN.md §13) — open the output in
+//! Perfetto (ui.perfetto.dev) or `chrome://tracing`.
+//!
+//! Layout: one track per simulated core (pid 1), complete-event (`ph:"X"`)
+//! slices for grants, async spans (`ph:"b"`/`"e"`) arcing from the old
+//! owner's track to the new owner's for line hand-offs, counter tracks
+//! (`ph:"C"`, pid 2) showing instantaneous per-link GB/s for routed-fabric
+//! busy windows, and global instants (`ph:"i"`) for steady-state detector
+//! transitions. Timestamps are microseconds (the trace-event unit);
+//! simulation times are nanoseconds, so `ts = ns * 1e-3`.
+//!
+//! The sink only buffers events during the run; JSON is rendered when
+//! [`ChromeTrace::write`] is called, after the simulation finished — so
+//! even this sink allocates nothing per event beyond the `Vec` push.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+use crate::atomics::OpKind;
+
+use super::{TraceEvent, TraceSink};
+
+/// Bytes moved per hand-off message leg (`sim::fabric::MSG_BYTES`): one
+/// cache line. A link busy for `w` ns therefore sustains `64/w` GB/s.
+const LINE_BYTES: f64 = 64.0;
+
+/// A buffering [`TraceSink`] that renders Chrome trace-event JSON.
+#[derive(Debug, Clone, Default)]
+pub struct ChromeTrace {
+    title: String,
+    events: Vec<TraceEvent>,
+    link_labels: Vec<String>,
+}
+
+impl ChromeTrace {
+    pub fn new(title: impl Into<String>) -> ChromeTrace {
+        ChromeTrace {
+            title: title.into(),
+            events: Vec::new(),
+            link_labels: Vec::new(),
+        }
+    }
+
+    /// Name the fabric-link counter tracks (index-aligned with
+    /// `LinkBusy::link`); unnamed links render as `link <i>`.
+    pub fn with_link_labels(mut self, labels: Vec<String>) -> ChromeTrace {
+        self.link_labels = labels;
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    fn link_name(&self, i: u32) -> String {
+        self.link_labels
+            .get(i as usize)
+            .cloned()
+            .unwrap_or_else(|| format!("link {i}"))
+    }
+
+    /// Render the buffered events as a Chrome trace-event JSON document.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256 + self.events.len() * 160);
+        out.push_str("{\"displayTimeUnit\":\"ns\",\"otherData\":{\"title\":\"");
+        out.push_str(&esc(&self.title));
+        out.push_str("\"},\"traceEvents\":[");
+        let mut first = true;
+        let mut push = |out: &mut String, ev: String| {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push('\n');
+            out.push_str(&ev);
+        };
+
+        // Metadata: name the processes and one thread per core track.
+        push(
+            &mut out,
+            meta_event("process_name", 1, 0, &format!("sim: {}", self.title)),
+        );
+        push(&mut out, meta_event("process_name", 2, 0, "fabric links"));
+        let mut max_core: i64 = -1;
+        for ev in &self.events {
+            match *ev {
+                TraceEvent::Grant { thread, .. } => max_core = max_core.max(thread as i64),
+                TraceEvent::Handoff { from, to, .. } => {
+                    max_core = max_core.max(from.max(to) as i64)
+                }
+                _ => {}
+            }
+        }
+        for c in 0..=max_core {
+            push(
+                &mut out,
+                meta_event("thread_name", 1, c as u32 + 1, &format!("core {c}")),
+            );
+        }
+
+        let mut handoff_id: u64 = 0;
+        for ev in &self.events {
+            match *ev {
+                TraceEvent::Grant {
+                    thread,
+                    op,
+                    addr,
+                    start_ns,
+                    stall_ns,
+                    latency_ns,
+                    end_ns: _,
+                    counted,
+                    cas_failed,
+                    spin_replay,
+                    steady_replay,
+                    d_hops,
+                    d_inv,
+                    level,
+                    distance,
+                    prior_state,
+                } => {
+                    let name = if cas_failed && op == OpKind::Cas {
+                        "CAS (failed)".to_string()
+                    } else {
+                        op.label().to_string()
+                    };
+                    push(
+                        &mut out,
+                        format!(
+                            "{{\"name\":\"{}\",\"cat\":\"grant\",\"ph\":\"X\",\
+                             \"ts\":{},\"dur\":{},\"pid\":1,\"tid\":{},\"args\":{{\
+                             \"addr\":\"0x{:x}\",\"stall_ns\":{},\"counted\":{},\
+                             \"cas_failed\":{},\"spin_replay\":{},\"steady_replay\":{},\
+                             \"hops\":{},\"invalidations\":{},\"level\":\"{}\",\
+                             \"distance\":\"{}\",\"state\":\"{}\"}}}}",
+                            esc(&name),
+                            us(start_ns),
+                            us(latency_ns),
+                            thread + 1,
+                            addr,
+                            fnum(stall_ns),
+                            counted,
+                            cas_failed,
+                            spin_replay,
+                            steady_replay,
+                            d_hops,
+                            d_inv,
+                            level.label(),
+                            esc(distance.label()),
+                            prior_state.label(),
+                        ),
+                    );
+                }
+                TraceEvent::Handoff {
+                    line,
+                    from,
+                    to,
+                    grant_ns,
+                    arrive_ns,
+                    prior_state,
+                    distance,
+                } => {
+                    handoff_id += 1;
+                    let args = format!(
+                        "{{\"line\":\"0x{:x}\",\"from\":{},\"to\":{},\
+                         \"state\":\"{}\",\"distance\":\"{}\"}}",
+                        line,
+                        from,
+                        to,
+                        prior_state.label(),
+                        esc(distance.label()),
+                    );
+                    push(
+                        &mut out,
+                        format!(
+                            "{{\"name\":\"handoff\",\"cat\":\"handoff\",\"ph\":\"b\",\
+                             \"id\":{handoff_id},\"ts\":{},\"pid\":1,\"tid\":{},\"args\":{args}}}",
+                            us(grant_ns),
+                            from + 1,
+                        ),
+                    );
+                    push(
+                        &mut out,
+                        format!(
+                            "{{\"name\":\"handoff\",\"cat\":\"handoff\",\"ph\":\"e\",\
+                             \"id\":{handoff_id},\"ts\":{},\"pid\":1,\"tid\":{},\"args\":{args}}}",
+                            us(arrive_ns),
+                            to + 1,
+                        ),
+                    );
+                }
+                TraceEvent::LinkBusy {
+                    link,
+                    begin_ns,
+                    end_ns,
+                } => {
+                    let window = end_ns - begin_ns;
+                    let gbs = if window > 0.0 { LINE_BYTES / window } else { 0.0 };
+                    let name = esc(&self.link_name(link));
+                    push(
+                        &mut out,
+                        format!(
+                            "{{\"name\":\"{name}\",\"cat\":\"link\",\"ph\":\"C\",\
+                             \"ts\":{},\"pid\":2,\"tid\":0,\"args\":{{\"GB/s\":{}}}}}",
+                            us(begin_ns),
+                            fnum(gbs),
+                        ),
+                    );
+                    push(
+                        &mut out,
+                        format!(
+                            "{{\"name\":\"{name}\",\"cat\":\"link\",\"ph\":\"C\",\
+                             \"ts\":{},\"pid\":2,\"tid\":0,\"args\":{{\"GB/s\":0}}}}",
+                            us(end_ns),
+                        ),
+                    );
+                }
+                TraceEvent::Steady {
+                    time_ns,
+                    transition,
+                    period_events,
+                    period_ns,
+                    periods,
+                } => {
+                    push(
+                        &mut out,
+                        format!(
+                            "{{\"name\":\"steady: {}\",\"cat\":\"steady\",\"ph\":\"i\",\
+                             \"s\":\"g\",\"ts\":{},\"pid\":1,\"tid\":0,\"args\":{{\
+                             \"period_events\":{},\"period_ns\":{},\"periods\":{}}}}}",
+                            transition.label(),
+                            us(time_ns),
+                            period_events,
+                            fnum(period_ns),
+                            periods,
+                        ),
+                    );
+                }
+            }
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+
+    /// Write the JSON document, creating parent directories as needed.
+    pub fn write(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent)?;
+            }
+        }
+        fs::write(path, self.to_json())
+    }
+}
+
+impl TraceSink for ChromeTrace {
+    #[inline]
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn record(&mut self, ev: &TraceEvent) {
+        self.events.push(*ev);
+    }
+}
+
+fn meta_event(name: &str, pid: u32, tid: u32, value: &str) -> String {
+    format!(
+        "{{\"name\":\"{name}\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
+         \"args\":{{\"name\":\"{}\"}}}}",
+        esc(value)
+    )
+}
+
+/// Nanoseconds → trace-event microseconds, JSON-safe (finite or 0).
+fn us(ns: f64) -> String {
+    fnum(ns * 1e-3)
+}
+
+/// JSON number from an f64: non-finite values (never produced by a
+/// healthy run) degrade to 0 so the document always parses.
+fn fnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Minimal JSON string escaping (quotes, backslashes, control chars).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::SteadyTransition;
+    use crate::sim::protocol::CohState;
+    use crate::sim::timing::Level;
+    use crate::sim::topology::Distance;
+
+    fn sample() -> ChromeTrace {
+        let mut t = ChromeTrace::new("unit").with_link_labels(vec!["ring 0-1".into()]);
+        t.record(&TraceEvent::Grant {
+            thread: 0,
+            op: OpKind::Cas,
+            addr: 0x5000_0000,
+            start_ns: 10.0,
+            stall_ns: 2.5,
+            latency_ns: 20.0,
+            end_ns: 30.0,
+            counted: true,
+            cas_failed: false,
+            spin_replay: false,
+            steady_replay: false,
+            d_hops: 1,
+            d_inv: 1,
+            level: Level::L3,
+            distance: Distance::SameDie,
+            prior_state: CohState::M,
+        });
+        t.record(&TraceEvent::Handoff {
+            line: 0x140000,
+            from: 1,
+            to: 0,
+            grant_ns: 10.0,
+            arrive_ns: 30.0,
+            prior_state: CohState::M,
+            distance: Distance::SameDie,
+        });
+        t.record(&TraceEvent::LinkBusy {
+            link: 0,
+            begin_ns: 10.0,
+            end_ns: 26.0,
+        });
+        t.record(&TraceEvent::Steady {
+            time_ns: 30.0,
+            transition: SteadyTransition::Engage,
+            period_events: 2,
+            period_ns: 40.0,
+            periods: 0,
+        });
+        t
+    }
+
+    #[test]
+    fn json_contains_all_phases() {
+        let s = sample().to_json();
+        for needle in [
+            "\"traceEvents\":[",
+            "\"ph\":\"M\"",
+            "\"ph\":\"X\"",
+            "\"ph\":\"b\"",
+            "\"ph\":\"e\"",
+            "\"ph\":\"C\"",
+            "\"ph\":\"i\"",
+            "\"core 1\"",
+            "ring 0-1",
+            "steady: engage",
+        ] {
+            assert!(s.contains(needle), "missing {needle} in:\n{s}");
+        }
+    }
+
+    #[test]
+    fn timestamps_are_microseconds() {
+        let s = sample().to_json();
+        // Grant at 10 ns ⇒ ts 0.01 µs.
+        assert!(s.contains("\"ts\":0.01"), "{s}");
+    }
+
+    #[test]
+    fn link_counter_reports_gbs() {
+        // 64 bytes over a 16 ns window ⇒ 4 GB/s.
+        let s = sample().to_json();
+        assert!(s.contains("\"GB/s\":4"), "{s}");
+    }
+
+    #[test]
+    fn escaping_and_nonfinite_are_safe() {
+        assert_eq!(esc("a\"b\\c\n"), "a\\\"b\\\\c\\n");
+        assert_eq!(fnum(f64::NAN), "0");
+        assert_eq!(fnum(f64::INFINITY), "0");
+        assert_eq!(fnum(2.5), "2.5");
+    }
+
+    #[test]
+    fn unnamed_links_get_indexed_names() {
+        let t = ChromeTrace::new("x");
+        assert_eq!(t.link_name(3), "link 3");
+    }
+}

@@ -1,0 +1,607 @@
+//! Run-metrics registry: counters and fixed-log2-bucket histograms built
+//! from the [`TraceEvent`](super::TraceEvent) stream (DESIGN.md §13).
+//!
+//! [`Metrics`] is itself a [`TraceSink`], so it attaches to a run exactly
+//! like any other sink (or alongside one via [`super::Tee`]). It mirrors
+//! the scheduler's per-thread [`ContentionStats`] *from the event stream
+//! alone*, in event order with the scheduler's own operand order — so its
+//! `per_thread()` reconciles bit-for-bit with the run result (pinned by
+//! `tests/trace_identity.rs`), while the histograms add the structure the
+//! flat sums cannot show: latency by (op, coherence state), hand-off
+//! distances, link busy time, steady-state phase history.
+
+use std::collections::BTreeMap;
+
+use crate::atomics::OpKind;
+use crate::sim::protocol::CohState;
+use crate::sim::timing::Level;
+use crate::sim::topology::Distance;
+use crate::sim::ContentionStats;
+use crate::util::table::{num, Table};
+
+use super::{SteadyTransition, TraceEvent, TraceSink};
+
+/// Number of histogram buckets. Bucket 0 holds values below 1 ns; bucket
+/// `i` (1 ≤ i < 31) holds `[2^(i-1), 2^i)` ns; bucket 31 saturates.
+pub const HIST_BUCKETS: usize = 32;
+
+/// A fixed-log2-bucket histogram over nanosecond values. Fixed buckets —
+/// no per-observation allocation, and two histograms always merge/compare
+/// bucket-by-bucket.
+#[derive(Debug, Clone, Default)]
+pub struct Hist {
+    buckets: [u64; HIST_BUCKETS],
+    count: u64,
+    sum: f64,
+    max: f64,
+}
+
+impl Hist {
+    pub fn new() -> Hist {
+        Hist::default()
+    }
+
+    /// Bucket index for a value (NaN and negatives land in bucket 0).
+    pub fn bucket_index(v: f64) -> usize {
+        if !(v >= 1.0) {
+            return 0;
+        }
+        let mut i = 1;
+        let mut edge = 2.0;
+        while v >= edge && i < HIST_BUCKETS - 1 {
+            i += 1;
+            edge *= 2.0;
+        }
+        i
+    }
+
+    /// `[lower, upper)` bounds of a bucket in ns (the last upper is ∞).
+    pub fn bucket_range(i: usize) -> (f64, f64) {
+        assert!(i < HIST_BUCKETS);
+        let lower = if i == 0 { 0.0 } else { (1u64 << (i - 1)) as f64 };
+        let upper = if i == HIST_BUCKETS - 1 {
+            f64::INFINITY
+        } else {
+            (1u64 << i) as f64
+        };
+        (lower, upper)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.buckets[Hist::bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn buckets(&self) -> &[u64; HIST_BUCKETS] {
+        &self.buckets
+    }
+
+    /// Upper edge of the bucket holding the q-quantile observation
+    /// (clamped to the observed max). Bucket-resolution by design.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, &b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= target {
+                return Hist::bucket_range(i).1.min(self.max);
+            }
+        }
+        self.max
+    }
+}
+
+fn op_index(op: OpKind) -> usize {
+    match op {
+        OpKind::Read => 0,
+        OpKind::Write => 1,
+        OpKind::Cas => 2,
+        OpKind::Faa => 3,
+        OpKind::Swp => 4,
+    }
+}
+
+fn state_index(s: CohState) -> usize {
+    match s {
+        CohState::M => 0,
+        CohState::O => 1,
+        CohState::E => 2,
+        CohState::S => 3,
+        CohState::F => 4,
+        CohState::I => 5,
+        CohState::Ol => 6,
+        CohState::Sl => 7,
+    }
+}
+
+const STATE_ORDER: [CohState; 8] = [
+    CohState::M,
+    CohState::O,
+    CohState::E,
+    CohState::S,
+    CohState::F,
+    CohState::I,
+    CohState::Ol,
+    CohState::Sl,
+];
+
+fn distance_index(d: Distance) -> usize {
+    match d {
+        Distance::Local => 0,
+        Distance::SharedL2 => 1,
+        Distance::SameDie => 2,
+        Distance::SameSocket => 3,
+        Distance::OtherSocket => 4,
+    }
+}
+
+/// Structured run metrics accumulated from a trace-event stream.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    /// Latency histograms keyed (op index, prior-coherence-state index).
+    /// A map keeps only the populated (op, state) cells allocated.
+    lat: BTreeMap<(usize, usize), Hist>,
+    /// Hand-off counts per distance class.
+    handoff_dist: [u64; 5],
+    /// Grant-to-arrival latency of line hand-offs.
+    handoff_lat: Hist,
+    /// Per-thread stats mirrored from the event stream in event order.
+    per_thread: Vec<ContentionStats>,
+    grants: u64,
+    counted_ops: u64,
+    handoffs: u64,
+    cas_failed: u64,
+    spin_replays: u64,
+    steady_replays: u64,
+    link_windows: u64,
+    /// Total busy ns per link index.
+    link_busy_ns: Vec<f64>,
+    steady_engaged: bool,
+    steady_period_events: u64,
+    steady_period_ns: f64,
+    steady_periods: u64,
+    steady_history: Vec<(f64, SteadyTransition)>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Per-thread stats rebuilt from grants — bit-identical to the
+    /// scheduler's own on the serialized paths (golden-tested).
+    pub fn per_thread(&self) -> &[ContentionStats] {
+        &self.per_thread
+    }
+
+    pub fn grants(&self) -> u64 {
+        self.grants
+    }
+
+    pub fn counted_ops(&self) -> u64 {
+        self.counted_ops
+    }
+
+    pub fn handoffs(&self) -> u64 {
+        self.handoffs
+    }
+
+    pub fn cas_failed(&self) -> u64 {
+        self.cas_failed
+    }
+
+    pub fn spin_replays(&self) -> u64 {
+        self.spin_replays
+    }
+
+    pub fn steady_replays(&self) -> u64 {
+        self.steady_replays
+    }
+
+    pub fn link_windows(&self) -> u64 {
+        self.link_windows
+    }
+
+    pub fn invalidations(&self) -> u64 {
+        self.per_thread.iter().map(|st| st.invalidations).sum()
+    }
+
+    pub fn interconnect_hops(&self) -> u64 {
+        self.per_thread.iter().map(|st| st.interconnect_hops).sum()
+    }
+
+    pub fn line_hops(&self) -> u64 {
+        self.per_thread.iter().map(|st| st.line_hops).sum()
+    }
+
+    pub fn steady_engaged(&self) -> bool {
+        self.steady_engaged
+    }
+
+    pub fn steady_periods(&self) -> u64 {
+        self.steady_periods
+    }
+
+    pub fn steady_history(&self) -> &[(f64, SteadyTransition)] {
+        &self.steady_history
+    }
+
+    /// Latency histogram of one populated (op, prior-state) cell.
+    pub fn latency_hist(&self, op: OpKind, state: CohState) -> Option<&Hist> {
+        self.lat.get(&(op_index(op), state_index(state)))
+    }
+
+    pub fn handoff_latency(&self) -> &Hist {
+        &self.handoff_lat
+    }
+
+    fn thread_mut(&mut self, t: usize) -> &mut ContentionStats {
+        while self.per_thread.len() <= t {
+            let core = self.per_thread.len();
+            self.per_thread.push(ContentionStats {
+                core,
+                ..ContentionStats::default()
+            });
+        }
+        &mut self.per_thread[t]
+    }
+
+    /// Latency-by-(op, coherence state) table: one row per populated
+    /// cell, bucket-resolution quantiles.
+    pub fn latency_table(&self) -> Table {
+        let mut t = Table::new(
+            "latency by (op, prior coherence state) [ns]",
+            &["op", "state", "grants", "mean", "p50", "p99", "max"],
+        );
+        for (&(oi, si), h) in &self.lat {
+            t.row(&[
+                OpKind::ALL[oi].label().to_string(),
+                STATE_ORDER[si].label().to_string(),
+                h.count().to_string(),
+                num(h.mean(), 2),
+                num(h.quantile(0.50), 2),
+                num(h.quantile(0.99), 2),
+                num(h.max(), 2),
+            ]);
+        }
+        t
+    }
+
+    /// Hand-off distance distribution table.
+    pub fn handoff_table(&self) -> Table {
+        let mut t = Table::new(
+            "line hand-offs by distance",
+            &["distance", "hand-offs", "share %"],
+        );
+        let total = self.handoffs.max(1) as f64;
+        for d in Distance::ALL {
+            let n = self.handoff_dist[distance_index(d)];
+            if n > 0 {
+                t.row(&[
+                    d.label().to_string(),
+                    n.to_string(),
+                    num(100.0 * n as f64 / total, 1),
+                ]);
+            }
+        }
+        t
+    }
+
+    /// One-line steady-state summary, if the detector ever transitioned.
+    pub fn steady_line(&self) -> Option<String> {
+        if self.steady_history.is_empty() {
+            return None;
+        }
+        let phases: Vec<String> = self
+            .steady_history
+            .iter()
+            .map(|(t, tr)| format!("{}@{:.0}ns", tr.label(), t))
+            .collect();
+        Some(if self.steady_engaged {
+            format!(
+                "steady-state: engaged (period {} events / {:.1} ns), {} period(s) replayed [{}]",
+                self.steady_period_events,
+                self.steady_period_ns,
+                self.steady_periods,
+                phases.join(", ")
+            )
+        } else {
+            format!("steady-state: not engaged [{}]", phases.join(", "))
+        })
+    }
+
+    /// One-line fast-path summary (replay counts, CAS failures, links).
+    pub fn summary_line(&self) -> String {
+        let mut s = format!(
+            "trace: {} grant(s), {} hand-off(s), {} invalidation(s), {} CAS failure(s)",
+            self.grants,
+            self.handoffs,
+            self.invalidations(),
+            self.cas_failed
+        );
+        if self.spin_replays > 0 {
+            s.push_str(&format!(", {} spin replay(s)", self.spin_replays));
+        }
+        if self.steady_replays > 0 {
+            s.push_str(&format!(", {} steady replay(s)", self.steady_replays));
+        }
+        if self.link_windows > 0 {
+            let busy: f64 = self.link_busy_ns.iter().sum();
+            s.push_str(&format!(
+                ", {} link window(s) ({:.0} ns busy)",
+                self.link_windows, busy
+            ));
+        }
+        s
+    }
+}
+
+impl TraceSink for Metrics {
+    #[inline]
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn record(&mut self, ev: &TraceEvent) {
+        match *ev {
+            TraceEvent::Grant {
+                thread,
+                op,
+                addr: _,
+                start_ns: _,
+                stall_ns,
+                latency_ns,
+                end_ns,
+                counted,
+                cas_failed,
+                spin_replay,
+                steady_replay,
+                d_hops,
+                d_inv,
+                level,
+                distance,
+                prior_state,
+            } => {
+                self.grants += 1;
+                if counted {
+                    self.counted_ops += 1;
+                }
+                if cas_failed {
+                    self.cas_failed += 1;
+                }
+                if spin_replay {
+                    self.spin_replays += 1;
+                }
+                if steady_replay {
+                    self.steady_replays += 1;
+                }
+                self.lat
+                    .entry((op_index(op), state_index(prior_state)))
+                    .or_default()
+                    .observe(latency_ns);
+                // Mirror the scheduler's per-thread accumulation exactly:
+                // same operands, same order, so every f64 comes out
+                // bit-identical (tests/trace_identity.rs).
+                let migrated = distance != Distance::Local && level != Level::Memory;
+                let st = self.thread_mut(thread as usize);
+                if counted {
+                    st.ops += 1;
+                }
+                st.stall_ns += stall_ns;
+                st.latency_ns += stall_ns + latency_ns;
+                st.finish_ns = end_ns;
+                if migrated {
+                    st.line_hops += 1;
+                }
+                st.interconnect_hops += d_hops;
+                st.invalidations += d_inv;
+                if cas_failed {
+                    st.cas_failures += 1;
+                }
+            }
+            TraceEvent::Handoff {
+                grant_ns,
+                arrive_ns,
+                distance,
+                ..
+            } => {
+                self.handoffs += 1;
+                self.handoff_dist[distance_index(distance)] += 1;
+                self.handoff_lat.observe(arrive_ns - grant_ns);
+            }
+            TraceEvent::LinkBusy {
+                link,
+                begin_ns,
+                end_ns,
+            } => {
+                self.link_windows += 1;
+                let i = link as usize;
+                if self.link_busy_ns.len() <= i {
+                    self.link_busy_ns.resize(i + 1, 0.0);
+                }
+                self.link_busy_ns[i] += end_ns - begin_ns;
+            }
+            TraceEvent::Steady {
+                time_ns,
+                transition,
+                period_events,
+                period_ns,
+                periods,
+            } => {
+                self.steady_history.push((time_ns, transition));
+                match transition {
+                    SteadyTransition::Engage => {
+                        self.steady_engaged = true;
+                        self.steady_period_events = period_events;
+                        self.steady_period_ns = period_ns;
+                    }
+                    SteadyTransition::ReplayEnd | SteadyTransition::Abort => {
+                        self.steady_periods = self.steady_periods.max(periods);
+                    }
+                    _ => {}
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(Hist::bucket_index(0.0), 0);
+        assert_eq!(Hist::bucket_index(0.99), 0);
+        assert_eq!(Hist::bucket_index(1.0), 1);
+        assert_eq!(Hist::bucket_index(1.99), 1);
+        assert_eq!(Hist::bucket_index(2.0), 2);
+        assert_eq!(Hist::bucket_index(3.99), 2);
+        assert_eq!(Hist::bucket_index(4.0), 3);
+        assert_eq!(Hist::bucket_index(f64::NAN), 0);
+        assert_eq!(Hist::bucket_index(1.0e30), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_ranges_tile_the_axis() {
+        for i in 1..HIST_BUCKETS {
+            let (lo, _) = Hist::bucket_range(i);
+            let (_, prev_hi) = Hist::bucket_range(i - 1);
+            assert_eq!(lo, prev_hi);
+        }
+        assert!(Hist::bucket_range(HIST_BUCKETS - 1).1.is_infinite());
+    }
+
+    #[test]
+    fn hist_mean_and_quantiles() {
+        let mut h = Hist::new();
+        for v in [1.0, 2.0, 3.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - 26.5).abs() < 1e-12);
+        assert_eq!(h.max(), 100.0);
+        // p50 lands in the [2,4) bucket → upper edge 4 (clamped by max).
+        assert_eq!(h.quantile(0.5), 4.0);
+        assert_eq!(h.quantile(1.0), 100.0);
+        assert!(Hist::new().quantile(0.5).is_nan());
+    }
+
+    #[test]
+    fn grant_events_accumulate_per_thread() {
+        let mut m = Metrics::new();
+        let ev = TraceEvent::Grant {
+            thread: 1,
+            op: OpKind::Cas,
+            addr: 0x40,
+            start_ns: 10.0,
+            stall_ns: 2.0,
+            latency_ns: 8.0,
+            end_ns: 18.0,
+            counted: true,
+            cas_failed: true,
+            spin_replay: false,
+            steady_replay: false,
+            d_hops: 1,
+            d_inv: 2,
+            level: Level::L3,
+            distance: Distance::SameDie,
+            prior_state: CohState::M,
+        };
+        m.record(&ev);
+        m.record(&ev);
+        assert_eq!(m.grants(), 2);
+        assert_eq!(m.cas_failed(), 2);
+        assert_eq!(m.per_thread().len(), 2);
+        let st = &m.per_thread()[1];
+        assert_eq!(st.core, 1);
+        assert_eq!(st.ops, 2);
+        assert_eq!(st.line_hops, 2); // SameDie + L3 ⇒ migrated
+        assert_eq!(st.interconnect_hops, 2);
+        assert_eq!(st.invalidations, 4);
+        assert_eq!(st.cas_failures, 2);
+        assert_eq!(st.stall_ns, 4.0);
+        assert_eq!(st.latency_ns, 20.0);
+        assert_eq!(st.finish_ns, 18.0);
+        assert_eq!(m.latency_hist(OpKind::Cas, CohState::M).unwrap().count(), 2);
+        assert!(m.latency_hist(OpKind::Faa, CohState::M).is_none());
+    }
+
+    #[test]
+    fn handoff_and_link_events() {
+        let mut m = Metrics::new();
+        m.record(&TraceEvent::Handoff {
+            line: 1,
+            from: 0,
+            to: 1,
+            grant_ns: 5.0,
+            arrive_ns: 25.0,
+            prior_state: CohState::M,
+            distance: Distance::OtherSocket,
+        });
+        m.record(&TraceEvent::LinkBusy {
+            link: 2,
+            begin_ns: 5.0,
+            end_ns: 15.0,
+        });
+        assert_eq!(m.handoffs(), 1);
+        assert_eq!(m.link_windows(), 1);
+        assert_eq!(m.handoff_latency().count(), 1);
+        let t = m.handoff_table();
+        assert_eq!(t.rows.len(), 1);
+        assert_eq!(t.rows[0][0], Distance::OtherSocket.label());
+        assert!(m.summary_line().contains("1 link window(s)"));
+    }
+
+    #[test]
+    fn steady_transitions_tracked() {
+        let mut m = Metrics::new();
+        assert!(m.steady_line().is_none());
+        m.record(&TraceEvent::Steady {
+            time_ns: 100.0,
+            transition: SteadyTransition::Engage,
+            period_events: 8,
+            period_ns: 64.0,
+            periods: 0,
+        });
+        m.record(&TraceEvent::Steady {
+            time_ns: 900.0,
+            transition: SteadyTransition::ReplayEnd,
+            period_events: 8,
+            period_ns: 64.0,
+            periods: 12,
+        });
+        assert!(m.steady_engaged());
+        assert_eq!(m.steady_periods(), 12);
+        let line = m.steady_line().unwrap();
+        assert!(line.contains("engaged"), "{line}");
+        assert!(line.contains("12 period(s)"), "{line}");
+    }
+}

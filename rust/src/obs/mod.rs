@@ -1,0 +1,283 @@
+//! Simulation tracing, run metrics, and harness self-profiling
+//! (DESIGN.md §13).
+//!
+//! The paper's central findings are *temporal* — serialized hand-offs, CAS
+//! retry storms, link saturation — yet until this layer the engine only
+//! reported end-of-run aggregates. `obs` adds three observation surfaces:
+//!
+//! 1. **[`TraceSink`]** — an observer hook threaded through both multicore
+//!    schedulers ([`crate::sim::multicore::run_contention_sink`],
+//!    [`crate::sim::multicore::run_program_sink`]). Every scheduler event
+//!    (grants, line hand-offs with coherence state, invalidation counts,
+//!    CAS fail/retry, spin fast-forward replays, steady-state phase
+//!    transitions, routed-fabric link busy windows) is offered to the sink
+//!    as a [`TraceEvent`]. The default [`NoTrace`] compiles to nothing on
+//!    the hot path: the schedulers are monomorphized per sink type and
+//!    every emission site is guarded by `if sink.enabled()`, which
+//!    `NoTrace` pins to a constant `false` — no allocation, one
+//!    statically-false branch, the event struct never constructed.
+//! 2. **[`Metrics`]** — a registry of counters and fixed-log2-bucket
+//!    histograms ([`metrics`]) accumulated from the same event stream:
+//!    latency per (op, coherence-state class), hand-off distances,
+//!    steady-state periods skipped, and per-thread
+//!    [`ContentionStats`](crate::sim::ContentionStats) that reconcile
+//!    bit-for-bit with the scheduler's own (pinned by
+//!    `tests/trace_identity.rs`).
+//! 3. **Harness self-profiling** ([`profile`]) — wall-clock accounting of
+//!    the harness itself (run-pool worker busy/idle, sweep prep-cache and
+//!    predict-LRU hit rates), surfaced by `repro … --profile`.
+//!
+//! ## The no-perturbation invariant
+//!
+//! Attaching *any* sink leaves every reported number bit-identical to the
+//! untraced run: sinks only read values the scheduler already computed —
+//! they never trigger an engine walk, round a float, or reorder an
+//! accumulation. Golden tests (`tests/trace_identity.rs`) pin this across
+//! all four architectures, scalar/routed fabrics, pool widths, and
+//! steady-state modes. Wall-clock self-profiling is likewise invisible to
+//! results because all simulation time is virtual.
+
+pub mod chrome;
+pub mod metrics;
+pub mod profile;
+
+pub use chrome::ChromeTrace;
+pub use metrics::{Hist, Metrics};
+
+use crate::atomics::OpKind;
+use crate::sim::protocol::CohState;
+use crate::sim::timing::Level;
+use crate::sim::topology::Distance;
+
+/// One scheduler event, as offered to a [`TraceSink`]. Plain old data
+/// (`Copy`): recording one is a struct copy, never an allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TraceEvent {
+    /// One operation granted and executed (the scheduler's unit of work).
+    /// Carries everything the per-thread stats accumulate, so a metrics
+    /// sink can reconcile against [`crate::sim::ContentionStats`] exactly:
+    /// summing `d_inv` over grants equals `total_invalidations()`, counting
+    /// `cas_failed` equals the CAS-failure sum, and so on.
+    Grant {
+        thread: u32,
+        op: OpKind,
+        addr: u64,
+        /// Virtual grant time (after arbitration), ns.
+        start_ns: f64,
+        /// Arbitration stall absorbed before this grant, ns.
+        stall_ns: f64,
+        /// Engine-priced latency of the operation, ns.
+        latency_ns: f64,
+        /// Completion time as the scheduler recorded it (`finish_ns`
+        /// last-writer), carried verbatim so metric sinks reproduce
+        /// per-thread stats bit-for-bit rather than re-deriving the sum.
+        end_ns: f64,
+        /// Did the step retire one unit of useful work?
+        counted: bool,
+        /// CAS attempt that lost to a rival (`modified == false`).
+        cas_failed: bool,
+        /// Served by the PR 4 spin fast path (verified L1-hit replica).
+        spin_replay: bool,
+        /// Served by the §12 steady-state replay (walk substituted from
+        /// the verified period record).
+        steady_replay: bool,
+        /// Die-crossing interconnect hops this operation caused.
+        d_hops: u64,
+        /// Invalidation messages this operation sent.
+        d_inv: u64,
+        /// Level that served the line.
+        level: Level,
+        /// Distance class to the data source.
+        distance: Distance,
+        /// Coherence state of the line *before* the access, at its holder.
+        prior_state: CohState,
+    },
+    /// A line migrated cache-to-cache into the granted core (one unit of
+    /// [`crate::sim::ContentionStats::line_hops`]). Emitted only on the
+    /// serialized paths, where the previous owner is known.
+    Handoff {
+        line: u64,
+        from: u32,
+        to: u32,
+        /// Grant time at the receiving core, ns.
+        grant_ns: f64,
+        /// Data arrival (grant + engine latency), ns.
+        arrive_ns: f64,
+        /// Coherence state the line left behind at the supplier.
+        prior_state: CohState,
+        distance: Distance,
+    },
+    /// One routed-fabric link busy window: the link serializes `[begin,
+    /// end)` for one hand-off message leg (DESIGN.md §10).
+    LinkBusy { link: u32, begin_ns: f64, end_ns: f64 },
+    /// A steady-state detector phase transition (DESIGN.md §12).
+    Steady {
+        /// Latest event-completion time when the transition was taken, ns.
+        time_ns: f64,
+        transition: SteadyTransition,
+        /// Detected period length in events (0 before a period exists).
+        period_events: u64,
+        /// Virtual-time length of one period, ns.
+        period_ns: f64,
+        /// Periods replayed so far (meaningful at `ReplayEnd`/`Abort`).
+        periods: u64,
+    },
+}
+
+/// Steady-state detector transitions a trace records (DESIGN.md §12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SteadyTransition {
+    /// A wrap fingerprint recurred; one full period now verifies live.
+    VerifyBegin,
+    /// The verify window failed; back to observing.
+    VerifyFail,
+    /// Verification closed; whole periods now replay walk-free.
+    Engage,
+    /// The replay budget ran out; frozen stats settled, tail is stepwise.
+    ReplayEnd,
+    /// A live event contradicted the verified record mid-replay (should
+    /// be unreachable; traced so a contract violation is visible).
+    Abort,
+    /// The detector gave up (aperiodic run or caps hit); rest is stepwise.
+    GiveUp,
+}
+
+impl SteadyTransition {
+    pub fn label(self) -> &'static str {
+        match self {
+            SteadyTransition::VerifyBegin => "verify-begin",
+            SteadyTransition::VerifyFail => "verify-fail",
+            SteadyTransition::Engage => "engage",
+            SteadyTransition::ReplayEnd => "replay-end",
+            SteadyTransition::Abort => "abort",
+            SteadyTransition::GiveUp => "give-up",
+        }
+    }
+}
+
+/// Observer hook for the multicore schedulers. Implementations must be
+/// pure observers: reading the event stream, never feeding anything back
+/// into the simulation (the no-perturbation invariant above).
+pub trait TraceSink {
+    /// Is this sink recording? Every scheduler emission site is guarded
+    /// by this, so a constant-`false` implementation ([`NoTrace`])
+    /// dead-code-eliminates the event construction entirely.
+    fn enabled(&self) -> bool;
+
+    /// Record one event. Only called when [`TraceSink::enabled`] is true.
+    fn record(&mut self, ev: &TraceEvent);
+}
+
+/// The default sink: observation off. `enabled()` is a constant `false`,
+/// so the monomorphized schedulers skip every emission with one
+/// statically-false branch and zero allocation — the untraced hot path is
+/// the same machine code as before the observer hook existed.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoTrace;
+
+impl TraceSink for NoTrace {
+    #[inline(always)]
+    fn enabled(&self) -> bool {
+        false
+    }
+
+    #[inline(always)]
+    fn record(&mut self, _ev: &TraceEvent) {}
+}
+
+/// A sink that buffers every event — the reconciliation substrate the
+/// golden tests (and ad-hoc analysis) use.
+#[derive(Debug, Clone, Default)]
+pub struct CollectSink {
+    pub events: Vec<TraceEvent>,
+}
+
+impl CollectSink {
+    pub fn new() -> CollectSink {
+        CollectSink::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+impl TraceSink for CollectSink {
+    #[inline]
+    fn enabled(&self) -> bool {
+        true
+    }
+
+    fn record(&mut self, ev: &TraceEvent) {
+        self.events.push(*ev);
+    }
+}
+
+/// Fan one event stream out to two sinks (e.g. a [`ChromeTrace`] *and* a
+/// [`Metrics`] registry on the same run). Enabled when either side is.
+#[derive(Debug)]
+pub struct Tee<A: TraceSink, B: TraceSink>(pub A, pub B);
+
+impl<A: TraceSink, B: TraceSink> TraceSink for Tee<A, B> {
+    #[inline]
+    fn enabled(&self) -> bool {
+        self.0.enabled() || self.1.enabled()
+    }
+
+    fn record(&mut self, ev: &TraceEvent) {
+        if self.0.enabled() {
+            self.0.record(ev);
+        }
+        if self.1.enabled() {
+            self.1.record(ev);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_trace_is_disabled() {
+        assert!(!NoTrace.enabled());
+    }
+
+    #[test]
+    fn collect_sink_buffers_in_order() {
+        let mut s = CollectSink::new();
+        assert!(s.is_empty());
+        let ev = TraceEvent::LinkBusy { link: 3, begin_ns: 1.0, end_ns: 2.0 };
+        s.record(&ev);
+        s.record(&TraceEvent::Steady {
+            time_ns: 5.0,
+            transition: SteadyTransition::Engage,
+            period_events: 4,
+            period_ns: 10.0,
+            periods: 0,
+        });
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.events[0], ev);
+    }
+
+    #[test]
+    fn tee_fans_out_to_both_sides() {
+        let mut t = Tee(CollectSink::new(), CollectSink::new());
+        assert!(t.enabled());
+        t.record(&TraceEvent::LinkBusy { link: 0, begin_ns: 0.0, end_ns: 1.0 });
+        assert_eq!(t.0.len(), 1);
+        assert_eq!(t.1.len(), 1);
+    }
+
+    #[test]
+    fn tee_with_no_trace_still_records_the_live_side() {
+        let mut t = Tee(NoTrace, CollectSink::new());
+        assert!(t.enabled());
+        t.record(&TraceEvent::LinkBusy { link: 0, begin_ns: 0.0, end_ns: 1.0 });
+        assert_eq!(t.1.len(), 1);
+    }
+}

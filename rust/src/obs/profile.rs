@@ -1,0 +1,238 @@
+//! Harness self-profiling (DESIGN.md §13): wall-clock accounting of the
+//! harness itself, as opposed to the virtual-time simulation the trace
+//! sinks observe.
+//!
+//! A single process-wide [`HarnessProfile`] of relaxed atomic counters
+//! collects [`RunPool`](crate::sweep::RunPool) worker busy/capacity time,
+//! [`SweepExecutor`](crate::sweep::SweepExecutor) prep-cache hits, and
+//! `serve/cache.rs` predict-LRU hits — global because pool workers and
+//! `worker_clone()`d predict engines are short-lived: their local counters
+//! die with them, while the user asks one question ("where did the wall
+//! time go?") about the whole process. `repro … --profile` prints the
+//! [`snapshot`](HarnessProfile::snapshot) on stderr after the command.
+//!
+//! Counter updates are unconditional (same policy as the LRU's own
+//! `hits`/`misses` fields): one relaxed atomic add per cache probe or
+//! pool item is noise next to the simulation work it brackets. Only the
+//! *timed* pool accounting is gated (behind the pool's `profiled` flag)
+//! because it adds two `Instant::now()` calls per item.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide harness profile counters.
+#[derive(Debug, Default)]
+pub struct HarnessProfile {
+    pool_runs: AtomicU64,
+    pool_items: AtomicU64,
+    pool_busy_ns: AtomicU64,
+    pool_capacity_ns: AtomicU64,
+    pool_workers_max: AtomicU64,
+    prep_hits: AtomicU64,
+    prep_misses: AtomicU64,
+    lru_hits: AtomicU64,
+    lru_misses: AtomicU64,
+}
+
+static GLOBAL: HarnessProfile = HarnessProfile::new();
+
+/// The process-wide profile all harness layers report into.
+pub fn global() -> &'static HarnessProfile {
+    &GLOBAL
+}
+
+impl HarnessProfile {
+    pub const fn new() -> HarnessProfile {
+        HarnessProfile {
+            pool_runs: AtomicU64::new(0),
+            pool_items: AtomicU64::new(0),
+            pool_busy_ns: AtomicU64::new(0),
+            pool_capacity_ns: AtomicU64::new(0),
+            pool_workers_max: AtomicU64::new(0),
+            prep_hits: AtomicU64::new(0),
+            prep_misses: AtomicU64::new(0),
+            lru_hits: AtomicU64::new(0),
+            lru_misses: AtomicU64::new(0),
+        }
+    }
+
+    /// One item's work duration inside a pool worker.
+    pub fn add_pool_item(&self, busy_ns: u64) {
+        self.pool_items.fetch_add(1, Ordering::Relaxed);
+        self.pool_busy_ns.fetch_add(busy_ns, Ordering::Relaxed);
+    }
+
+    /// One completed `run_streaming` call: wall-clock span × worker count
+    /// is the capacity the busy time is measured against.
+    pub fn add_pool_run(&self, workers: u64, span_ns: u64) {
+        self.pool_runs.fetch_add(1, Ordering::Relaxed);
+        self.pool_capacity_ns
+            .fetch_add(span_ns.saturating_mul(workers), Ordering::Relaxed);
+        self.pool_workers_max.fetch_max(workers, Ordering::Relaxed);
+    }
+
+    /// One sweep prep-cache probe (prepared-machine snapshot reuse).
+    pub fn add_prep(&self, hit: bool) {
+        if hit {
+            self.prep_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.prep_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One predict-LRU probe (`serve/cache.rs`).
+    pub fn add_lru(&self, hit: bool) {
+        if hit {
+            self.lru_hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.lru_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> ProfileSnapshot {
+        ProfileSnapshot {
+            pool_runs: self.pool_runs.load(Ordering::Relaxed),
+            pool_items: self.pool_items.load(Ordering::Relaxed),
+            pool_busy_ns: self.pool_busy_ns.load(Ordering::Relaxed),
+            pool_capacity_ns: self.pool_capacity_ns.load(Ordering::Relaxed),
+            pool_workers_max: self.pool_workers_max.load(Ordering::Relaxed),
+            prep_hits: self.prep_hits.load(Ordering::Relaxed),
+            prep_misses: self.prep_misses.load(Ordering::Relaxed),
+            lru_hits: self.lru_hits.load(Ordering::Relaxed),
+            lru_misses: self.lru_misses.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Zero all counters (tests isolate themselves with this).
+    pub fn reset(&self) {
+        self.pool_runs.store(0, Ordering::Relaxed);
+        self.pool_items.store(0, Ordering::Relaxed);
+        self.pool_busy_ns.store(0, Ordering::Relaxed);
+        self.pool_capacity_ns.store(0, Ordering::Relaxed);
+        self.pool_workers_max.store(0, Ordering::Relaxed);
+        self.prep_hits.store(0, Ordering::Relaxed);
+        self.prep_misses.store(0, Ordering::Relaxed);
+        self.lru_hits.store(0, Ordering::Relaxed);
+        self.lru_misses.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A point-in-time copy of the harness profile.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct ProfileSnapshot {
+    pub pool_runs: u64,
+    pub pool_items: u64,
+    pub pool_busy_ns: u64,
+    pub pool_capacity_ns: u64,
+    pub pool_workers_max: u64,
+    pub prep_hits: u64,
+    pub prep_misses: u64,
+    pub lru_hits: u64,
+    pub lru_misses: u64,
+}
+
+fn ratio(part: u64, whole: u64) -> f64 {
+    if whole == 0 {
+        f64::NAN
+    } else {
+        100.0 * part as f64 / whole as f64
+    }
+}
+
+impl ProfileSnapshot {
+    /// Worker utilization in percent (busy / span×workers), NaN if no
+    /// timed pool run happened.
+    pub fn pool_utilization_pct(&self) -> f64 {
+        ratio(self.pool_busy_ns, self.pool_capacity_ns)
+    }
+
+    pub fn prep_hit_pct(&self) -> f64 {
+        ratio(self.prep_hits, self.prep_hits + self.prep_misses)
+    }
+
+    pub fn lru_hit_pct(&self) -> f64 {
+        ratio(self.lru_hits, self.lru_hits + self.lru_misses)
+    }
+
+    /// Human summary, one line per active subsystem (empty if nothing
+    /// was profiled).
+    pub fn summary_lines(&self) -> Vec<String> {
+        let mut lines = Vec::new();
+        if self.pool_runs > 0 {
+            let util = self.pool_utilization_pct();
+            let busy_s = self.pool_busy_ns as f64 * 1e-9;
+            let cap_s = self.pool_capacity_ns as f64 * 1e-9;
+            let mut line = format!(
+                "profile: run-pool: {} run(s), {} item(s), {} worker(s) max",
+                self.pool_runs, self.pool_items, self.pool_workers_max
+            );
+            if util.is_finite() {
+                line.push_str(&format!(
+                    ", {util:.1}% busy ({busy_s:.3}s of {cap_s:.3}s capacity)"
+                ));
+            }
+            lines.push(line);
+        }
+        let prep = self.prep_hits + self.prep_misses;
+        if prep > 0 {
+            lines.push(format!(
+                "profile: prep-cache: {}/{} hit ({:.1}%)",
+                self.prep_hits,
+                prep,
+                self.prep_hit_pct()
+            ));
+        }
+        let lru = self.lru_hits + self.lru_misses;
+        if lru > 0 {
+            lines.push(format!(
+                "profile: predict-lru: {}/{} hit ({:.1}%)",
+                self.lru_hits,
+                lru,
+                self.lru_hit_pct()
+            ));
+        }
+        lines
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_profile_accumulates_and_snapshots() {
+        let p = HarnessProfile::new();
+        p.add_pool_item(600);
+        p.add_pool_item(400);
+        p.add_pool_run(2, 1000);
+        p.add_prep(true);
+        p.add_prep(false);
+        p.add_lru(true);
+        let s = p.snapshot();
+        assert_eq!(s.pool_items, 2);
+        assert_eq!(s.pool_busy_ns, 1000);
+        assert_eq!(s.pool_capacity_ns, 2000);
+        assert_eq!(s.pool_workers_max, 2);
+        assert!((s.pool_utilization_pct() - 50.0).abs() < 1e-9);
+        assert!((s.prep_hit_pct() - 50.0).abs() < 1e-9);
+        assert!((s.lru_hit_pct() - 100.0).abs() < 1e-9);
+        let lines = s.summary_lines();
+        assert_eq!(lines.len(), 3, "{lines:?}");
+        assert!(lines[0].contains("run-pool"));
+        assert!(lines[1].contains("prep-cache: 1/2 hit"));
+        p.reset();
+        assert_eq!(p.snapshot(), ProfileSnapshot::default());
+    }
+
+    #[test]
+    fn empty_snapshot_has_no_lines() {
+        assert!(ProfileSnapshot::default().summary_lines().is_empty());
+        assert!(ProfileSnapshot::default().pool_utilization_pct().is_nan());
+    }
+
+    #[test]
+    fn global_is_shared() {
+        // Only sanity-check the accessor: other tests run concurrently,
+        // so the global's values are not asserted here.
+        let _ = global().snapshot();
+    }
+}

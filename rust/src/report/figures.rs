@@ -44,7 +44,7 @@ fn run_series_reporting(jobs: &[SweepJob], out: &mut String) -> Vec<Option<Serie
     for o in &outcomes {
         for f in &o.failures {
             out.push_str(&format!("!! sweep failure: {f}\n"));
-            eprintln!("sweep failure: {f}");
+            crate::log_info!("sweep failure: {f}");
         }
     }
     outcomes.iter().map(|o| o.series()).collect()
@@ -511,7 +511,7 @@ pub fn write_links_csv(slug: &str, links: &[crate::sim::LinkStats]) -> Option<St
     match csv.write(&path) {
         Ok(()) => Some(path),
         Err(e) => {
-            eprintln!("warning: could not write {path}: {e}");
+            crate::log_info!("warning: could not write {path}: {e}");
             None
         }
     }

@@ -56,7 +56,7 @@ pub fn write_series_csv(name: &str, series: &[Series]) {
     }
     let path = format!("{}/{}.csv", results_dir(), name);
     if let Err(e) = csv.write(&path) {
-        eprintln!("warning: could not write {path}: {e}");
+        crate::log_info!("warning: could not write {path}: {e}");
     }
 }
 

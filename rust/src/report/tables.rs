@@ -100,7 +100,7 @@ pub fn table2(fit: Option<&dyn FitBackend>) -> Table {
                         // Degrade loudly: the fitted column falls back to
                         // the paper seed, and the reader is told so (the
                         // pjrt backend errors here without artifacts).
-                        eprintln!(
+                        crate::log_info!(
                             "({}: {} fit failed — fitted column shows the paper seed; {e})",
                             cfg.name,
                             backend.name()

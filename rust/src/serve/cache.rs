@@ -67,16 +67,21 @@ impl<K: Hash + Eq + Clone, V> Lru<K, V> {
         self.misses
     }
 
-    /// Look up `k`, marking it most-recently used on a hit.
+    /// Look up `k`, marking it most-recently used on a hit. Probes also
+    /// feed the process-wide harness profile (DESIGN.md §13) so
+    /// `repro predict --profile` can report the aggregate hit rate across
+    /// short-lived `worker_clone()`d engines.
     pub fn get(&mut self, k: &K) -> Option<&V> {
         match self.map.get(k) {
             Some(&i) => {
                 self.hits += 1;
+                crate::obs::profile::global().add_lru(true);
                 self.touch(i);
                 Some(&self.slots[i].val)
             }
             None => {
                 self.misses += 1;
+                crate::obs::profile::global().add_lru(false);
                 None
             }
         }

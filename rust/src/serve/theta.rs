@@ -151,7 +151,7 @@ impl ThetaTable {
                     e.source = ThetaSource::Fitted { path };
                 }
                 Err(err) => {
-                    eprintln!("warning: ignoring {path}: {err}");
+                    crate::log_info!("warning: ignoring {path}: {err}");
                 }
             }
         }

@@ -451,6 +451,18 @@ pub struct LinkStats {
     pub gbs: f64,
 }
 
+/// One link busy window observed while routing a hand-off — the tracing
+/// by-product of [`FabricState::handoff_traced`]. The link serializes the
+/// message over `[begin_ns, busy_until_ns)` and delivers it downstream at
+/// `deliver_ns` (`begin + hop_ns`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkWindow {
+    pub link: u32,
+    pub begin_ns: f64,
+    pub busy_until_ns: f64,
+    pub deliver_ns: f64,
+}
+
 /// Mutable per-run fabric state, reused across runs via `RunArena`.
 ///
 /// In-flight tracking is streaming: grant starts are monotone
@@ -520,6 +532,35 @@ impl FabricState {
         line: u64,
         now: f64,
     ) -> f64 {
+        self.handoff_inner(rt, from, to, line, now, None)
+    }
+
+    /// [`FabricState::handoff`] that additionally appends one
+    /// [`LinkWindow`] per route leg to `windows` — the tracing variant.
+    /// Same arithmetic as the untraced path (it *is* the untraced path;
+    /// the windows are copies of values it computes anyway), so calling
+    /// this instead of `handoff` cannot change a priced latency.
+    pub fn handoff_traced(
+        &mut self,
+        rt: &RoutedFabric,
+        from: CoreId,
+        to: CoreId,
+        line: u64,
+        now: f64,
+        windows: &mut Vec<LinkWindow>,
+    ) -> f64 {
+        self.handoff_inner(rt, from, to, line, now, Some(windows))
+    }
+
+    fn handoff_inner(
+        &mut self,
+        rt: &RoutedFabric,
+        from: CoreId,
+        to: CoreId,
+        line: u64,
+        now: f64,
+        mut windows: Option<&mut Vec<LinkWindow>>,
+    ) -> f64 {
         self.expire(now);
         let mut route = std::mem::take(&mut self.route);
         rt.topo.route_into(from, to, line, &mut route);
@@ -541,6 +582,14 @@ impl FabricState {
             }
             t = begin + spec.hop_ns;
             self.expiry.push(Reverse((t.to_bits(), l as u32)));
+            if let Some(w) = windows.as_deref_mut() {
+                w.push(LinkWindow {
+                    link: l as u32,
+                    begin_ns: begin,
+                    busy_until_ns: self.busy_until[l],
+                    deliver_ns: t,
+                });
+            }
         }
         self.route = route;
         wait + rt.inject_ns

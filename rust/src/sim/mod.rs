@@ -28,6 +28,9 @@ pub use cache::{line_of, Line, LINE_SIZE};
 pub use config::MachineConfig;
 pub use engine::{Access, Machine};
 pub use fabric::{Fabric, LinkStats};
-pub use multicore::{ContentionStats, MulticoreResult, RunArena, SteadyInfo, SteadyMode};
+pub use multicore::{
+    run_contention_sink, run_program_sink, ContentionStats, MulticoreResult, RunArena, SteadyInfo,
+    SteadyMode,
+};
 pub use timing::Level;
 pub use topology::{CoreId, Distance, Topology};

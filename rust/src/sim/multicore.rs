@@ -103,10 +103,11 @@
 //! ```
 
 use crate::atomics::{Op, OpKind};
+use crate::obs::{NoTrace, SteadyTransition, TraceEvent, TraceSink};
 use crate::sim::arbitration::{prefer_same_die, prefers_same_die, Request, MAX_LOCAL_BATCH};
 use crate::sim::cache::line_of;
 use crate::sim::engine::{Access, Machine, ReadMemo, WalkMemo};
-use crate::sim::fabric::{FabricState, LinkStats, Topology as _};
+use crate::sim::fabric::{FabricState, LinkStats, LinkWindow, Topology as _};
 use crate::sim::stats::Stats;
 use crate::sim::timing::Level;
 use crate::sim::topology::{CoreId, Distance};
@@ -647,6 +648,45 @@ impl SteadyCtl {
     }
 }
 
+/// Classify a detector phase change as the [`SteadyTransition`] a trace
+/// records (`None` when the phase did not change). Pure observation: the
+/// mapping reads the controller, never mutates it.
+fn steady_transition(old: SteadyPhase, c: &SteadyCtl) -> Option<SteadyTransition> {
+    if old == c.phase {
+        return None;
+    }
+    Some(match (old, c.phase) {
+        (SteadyPhase::Observe, SteadyPhase::Verify) => SteadyTransition::VerifyBegin,
+        (SteadyPhase::Verify, SteadyPhase::Observe) => SteadyTransition::VerifyFail,
+        (SteadyPhase::Verify, SteadyPhase::Replay) => SteadyTransition::Engage,
+        (SteadyPhase::Replay, SteadyPhase::Done) => {
+            if c.info.aborted {
+                SteadyTransition::Abort
+            } else {
+                SteadyTransition::ReplayEnd
+            }
+        }
+        // Any other edge into Done is the detector giving up (caps hit,
+        // unfingerprintable wrap, unreplayable walk).
+        _ => SteadyTransition::GiveUp,
+    })
+}
+
+/// Emit a [`TraceEvent::Steady`] if the detector's phase changed since
+/// `old`. Call sites pass the loop's `finish` (latest completion) as the
+/// timestamp. Only invoked under `sink.enabled()`.
+fn emit_steady<S: TraceSink>(sink: &mut S, old: SteadyPhase, c: &SteadyCtl, now: f64) {
+    if let Some(tr) = steady_transition(old, c) {
+        sink.record(&TraceEvent::Steady {
+            time_ns: now,
+            transition: tr,
+            period_events: c.period_len as u64,
+            period_ns: c.info.period_ns,
+            periods: c.periods_done,
+        });
+    }
+}
+
 /// Is steady-state detection worth arming for this run at all?
 fn steady_eligible(mode: SteadyMode, m: &Machine, work_hint: usize) -> bool {
     match mode {
@@ -962,6 +1002,31 @@ pub fn run_contention_steady(
     ops_per_thread: usize,
     mode: SteadyMode,
 ) -> (MulticoreResult, SteadyInfo) {
+    run_contention_sink(m, arena, threads, kind, ops_per_thread, mode, &mut NoTrace)
+}
+
+/// [`run_contention_steady`] with an observer attached (DESIGN.md §13).
+///
+/// The scheduler is monomorphized per sink type and every emission site
+/// is guarded by `sink.enabled()`, so the [`NoTrace`] instantiation the
+/// untraced wrappers pass compiles the observation away — no allocation,
+/// one statically-false branch per site. Any sink sees one
+/// [`TraceEvent::Grant`] per scheduled operation, a
+/// [`TraceEvent::Handoff`] per line migration, per-link
+/// [`TraceEvent::LinkBusy`] windows under `--topology routed`, and
+/// [`TraceEvent::Steady`] detector transitions; the returned numbers are
+/// bit-identical with any sink attached (pinned by
+/// `tests/trace_identity.rs` — observation never perturbs the
+/// simulation).
+pub fn run_contention_sink<S: TraceSink>(
+    m: &mut Machine,
+    arena: &mut RunArena,
+    threads: usize,
+    kind: OpKind,
+    ops_per_thread: usize,
+    mode: SteadyMode,
+    sink: &mut S,
+) -> (MulticoreResult, SteadyInfo) {
     assert!(
         threads >= 1 && threads <= m.cfg.topology.n_cores,
         "thread count {threads} outside 1..={}",
@@ -972,7 +1037,7 @@ pub fn run_contention_steady(
     arena.reset(threads);
 
     if !serializes(m, kind) {
-        let res = run_unserialized(m, threads, kind, ops_per_thread, &mut arena.per_thread);
+        let res = run_unserialized(m, threads, kind, ops_per_thread, &mut arena.per_thread, sink);
         return (res, SteadyInfo::default());
     }
     let mut ctl = steady_eligible(mode, m, ops_per_thread).then(|| SteadyCtl::new(threads));
@@ -1009,6 +1074,10 @@ pub fn run_contention_steady(
     let mut line_free_at = 0.0f64;
     let mut finish = 0.0f64;
     let mut local_batch = 0u32;
+    // Link-window scratch for traced routed hand-offs. `Vec::new` does
+    // not allocate; it only grows if an enabled sink observes a routed
+    // migration, so the NoTrace path stays allocation-free.
+    let mut link_windows: Vec<LinkWindow> = Vec::new();
 
     loop {
         // Steady-state boundary processing: between events, each time the
@@ -1016,6 +1085,7 @@ pub fn run_contention_steady(
         // `SteadyMode::Off` (no controller exists).
         if let Some(c) = ctl.as_mut() {
             if c.at_boundary() {
+                let phase_before = c.phase;
                 if c.tracing() && !(c.phase == SteadyPhase::Verify && c.verify_left > 0) {
                     let mut scratch = std::mem::take(&mut c.key_scratch);
                     let base = contend_key(
@@ -1053,6 +1123,9 @@ pub fn run_contention_steady(
                     if !ok {
                         c.finish_replay(&mut m.stats, false);
                     }
+                }
+                if sink.enabled() {
+                    emit_steady(sink, phase_before, c, finish);
                 }
             }
         }
@@ -1100,6 +1173,9 @@ pub fn run_contention_steady(
                     // skipped and fall back to live execution.
                     debug_assert!(false, "steady replay grant-order divergence");
                     c.finish_replay(&mut m.stats, true);
+                    if sink.enabled() {
+                        emit_steady(sink, SteadyPhase::Replay, c, finish);
+                    }
                 }
             }
         }
@@ -1119,6 +1195,7 @@ pub fn run_contention_steady(
                     - inv_before;
                 if let Some(c) = ctl.as_mut() {
                     if c.tracing() {
+                        let phase_before = c.phase;
                         if walk.replayable {
                             c.note_event(EventRec {
                                 thread: t as u32,
@@ -1132,6 +1209,9 @@ pub fn run_contention_steady(
                             });
                         } else {
                             c.phase = SteadyPhase::Done;
+                        }
+                        if sink.enabled() {
+                            emit_steady(sink, phase_before, c, finish);
                         }
                     }
                 }
@@ -1164,6 +1244,40 @@ pub fn run_contention_steady(
             }
         }
 
+        if sink.enabled() {
+            sink.record(&TraceEvent::Grant {
+                thread: t as u32,
+                op: kind,
+                addr: SHARED_ADDR,
+                start_ns: start,
+                stall_ns: stall,
+                latency_ns: acc.latency,
+                end_ns: end,
+                counted: true,
+                cas_failed: kind == OpKind::Cas && !acc.modified,
+                spin_replay: false,
+                steady_replay: sub.is_some(),
+                d_hops,
+                d_inv,
+                level: acc.level,
+                distance: acc.distance,
+                prior_state: acc.prior_state,
+            });
+            if migrated {
+                // `owner` still names the previous grantee here (it is
+                // reassigned below) — the core the line migrated from.
+                sink.record(&TraceEvent::Handoff {
+                    line: shared_line,
+                    from: owner as u32,
+                    to: t as u32,
+                    grant_ns: start,
+                    arrive_ns: end,
+                    prior_state: acc.prior_state,
+                    distance: acc.distance,
+                });
+            }
+        }
+
         // Line occupancy: execute phase plus the un-overlappable part of
         // the transfer. A lone requester (empty queue) overlaps nothing.
         // Routed pricing charges the sender only the first-link queue
@@ -1175,7 +1289,21 @@ pub fn run_contention_steady(
             acc.latency
         } else if let Some(rt) = routed {
             let handoff = if migrated {
-                fabric.handoff(rt, owner, t, shared_line, start)
+                if sink.enabled() {
+                    link_windows.clear();
+                    let h = fabric
+                        .handoff_traced(rt, owner, t, shared_line, start, &mut link_windows);
+                    for w in &link_windows {
+                        sink.record(&TraceEvent::LinkBusy {
+                            link: w.link,
+                            begin_ns: w.begin_ns,
+                            end_ns: w.busy_until_ns,
+                        });
+                    }
+                    h
+                } else {
+                    fabric.handoff(rt, owner, t, shared_line, start)
+                }
             } else {
                 rt.inject_ns
             };
@@ -1200,6 +1328,9 @@ pub fn run_contention_steady(
     if let Some(c) = ctl.as_mut() {
         if c.phase == SteadyPhase::Replay {
             c.finish_replay(&mut m.stats, false);
+            if sink.enabled() {
+                emit_steady(sink, SteadyPhase::Replay, c, finish);
+            }
         }
     }
 
@@ -1216,12 +1347,13 @@ pub fn run_contention_steady(
 /// The non-serializing path: reads replicate, combined stores retire into
 /// the issuing core's buffer — each thread streams back-to-back through
 /// the engine with no arbitration.
-fn run_unserialized(
+fn run_unserialized<S: TraceSink>(
     m: &mut Machine,
     threads: usize,
     kind: OpKind,
     ops_per_thread: usize,
     per_thread: &mut [ContentionStats],
+    sink: &mut S,
 ) -> MulticoreResult {
     let mut finish = 0.0f64;
     for t in 0..threads {
@@ -1230,10 +1362,44 @@ fn run_unserialized(
         let mut latency = 0.0;
         let mut hops = 0u64;
         for _ in 0..ops_per_thread {
+            // Per-op stat deltas exist only for the trace (the batch
+            // accounting below is unchanged); these are pure reads of
+            // counters the engine maintains anyway.
+            let (clock_b, inv_b, hops_b) = if sink.enabled() {
+                (
+                    m.clock_of(t),
+                    m.stats.invalidations_sent + m.stats.remote_invalidation_broadcasts,
+                    m.stats.hops,
+                )
+            } else {
+                (0.0, 0, 0)
+            };
             let acc = m.access64(t, next_op(kind, 0), SHARED_ADDR);
             latency += acc.latency;
             if acc.distance != Distance::Local && acc.level != Level::Memory {
                 hops += 1;
+            }
+            if sink.enabled() {
+                sink.record(&TraceEvent::Grant {
+                    thread: t as u32,
+                    op: kind,
+                    addr: SHARED_ADDR,
+                    start_ns: clock_b,
+                    stall_ns: 0.0,
+                    latency_ns: acc.latency,
+                    end_ns: m.clock_of(t),
+                    counted: true,
+                    cas_failed: false,
+                    spin_replay: false,
+                    steady_replay: false,
+                    d_hops: m.stats.hops - hops_b,
+                    d_inv: m.stats.invalidations_sent
+                        + m.stats.remote_invalidation_broadcasts
+                        - inv_b,
+                    level: acc.level,
+                    distance: acc.distance,
+                    prior_state: acc.prior_state,
+                });
             }
         }
         let st = &mut per_thread[t];
@@ -1373,7 +1539,8 @@ pub fn run_program<P: CoreProgram>(
     programs: &mut [P],
     label: OpKind,
 ) -> MulticoreResult {
-    run_program_impl(m, &mut RunArena::new(), programs, label, true, SteadyMode::Off).0
+    run_program_impl(m, &mut RunArena::new(), programs, label, true, SteadyMode::Off, &mut NoTrace)
+        .0
 }
 
 /// [`run_program`] on a caller-provided [`RunArena`] — the arena is reset
@@ -1385,7 +1552,7 @@ pub fn run_program_in<P: CoreProgram>(
     programs: &mut [P],
     label: OpKind,
 ) -> MulticoreResult {
-    run_program_impl(m, arena, programs, label, true, SteadyMode::Off).0
+    run_program_impl(m, arena, programs, label, true, SteadyMode::Off, &mut NoTrace).0
 }
 
 /// [`run_program_in`] with a steady-state fast-forward policy
@@ -1403,7 +1570,25 @@ pub fn run_program_steady<P: CoreProgram>(
     label: OpKind,
     mode: SteadyMode,
 ) -> (MulticoreResult, SteadyInfo) {
-    run_program_impl(m, arena, programs, label, true, mode)
+    run_program_impl(m, arena, programs, label, true, mode, &mut NoTrace)
+}
+
+/// [`run_program_steady`] with an attached [`TraceSink`] observer
+/// (DESIGN.md §13). The scheduler is monomorphized over the sink type:
+/// with [`NoTrace`] every emission site folds to a constant-false branch
+/// and the generated code is the untraced scheduler. Sinks only *read*
+/// values the scheduler already computed, so every reported number is
+/// bit-identical whether or not a sink is attached — pinned by
+/// `tests/trace_identity.rs`.
+pub fn run_program_sink<P: CoreProgram, S: TraceSink>(
+    m: &mut Machine,
+    arena: &mut RunArena,
+    programs: &mut [P],
+    label: OpKind,
+    mode: SteadyMode,
+    sink: &mut S,
+) -> (MulticoreResult, SteadyInfo) {
+    run_program_impl(m, arena, programs, label, true, mode, sink)
 }
 
 /// The reference scheduler: identical event processing to [`run_program`]
@@ -1416,7 +1601,8 @@ pub fn run_program_stepwise<P: CoreProgram>(
     programs: &mut [P],
     label: OpKind,
 ) -> MulticoreResult {
-    run_program_impl(m, &mut RunArena::new(), programs, label, false, SteadyMode::Off).0
+    run_program_impl(m, &mut RunArena::new(), programs, label, false, SteadyMode::Off, &mut NoTrace)
+        .0
 }
 
 /// Flat indexed min-heap of pending per-thread requests ordered by
@@ -1632,13 +1818,14 @@ fn refresh_serial_slots(lines: &mut LineTable, pending: &[Option<Step>], serial_
     }
 }
 
-fn run_program_impl<P: CoreProgram>(
+fn run_program_impl<P: CoreProgram, S: TraceSink>(
     m: &mut Machine,
     arena: &mut RunArena,
     programs: &mut [P],
     label: OpKind,
     fast: bool,
     mode: SteadyMode,
+    sink: &mut S,
 ) -> (MulticoreResult, SteadyInfo) {
     let threads = programs.len();
     assert!(
@@ -1701,6 +1888,10 @@ fn run_program_impl<P: CoreProgram>(
         }
     }
     let mut finish = 0.0f64;
+    // Scratch for routed-link trace windows. `Vec::new()` performs no
+    // allocation, so the untraced path stays allocation-free; a live sink
+    // pays one allocation on the first routed hand-off, then reuses it.
+    let mut link_windows: Vec<LinkWindow> = Vec::new();
 
     loop {
         // Steady-state boundary processing (see `run_contention_steady`):
@@ -1709,6 +1900,7 @@ fn run_program_impl<P: CoreProgram>(
         // guard fires once per wrap.
         if let Some(c) = ctl.as_mut() {
             if c.at_boundary() {
+                let phase_before = c.phase;
                 if c.tracing() && !(c.phase == SteadyPhase::Verify && c.verify_left > 0) {
                     let mut scratch = std::mem::take(&mut c.key_scratch);
                     let base = program_key(
@@ -1749,6 +1941,9 @@ fn run_program_impl<P: CoreProgram>(
                         c.finish_replay(&mut m.stats, false);
                     }
                 }
+                if sink.enabled() {
+                    emit_steady(sink, phase_before, c, finish);
+                }
             }
         }
 
@@ -1788,6 +1983,9 @@ fn run_program_impl<P: CoreProgram>(
                     // unreachable while the `phase_key` contract holds.
                     debug_assert!(false, "steady replay event divergence");
                     c.finish_replay(&mut m.stats, true);
+                    if sink.enabled() {
+                        emit_steady(sink, SteadyPhase::Replay, c, finish);
+                    }
                 }
             }
         }
@@ -1830,6 +2028,7 @@ fn run_program_impl<P: CoreProgram>(
                         - inv_before;
                     if let Some(c) = ctl.as_mut() {
                         if c.tracing() {
+                            let phase_before = c.phase;
                             if walk.replayable {
                                 c.note_event(EventRec {
                                     thread: t as u32,
@@ -1843,6 +2042,9 @@ fn run_program_impl<P: CoreProgram>(
                                 });
                             } else {
                                 c.phase = SteadyPhase::Done;
+                            }
+                            if sink.enabled() {
+                                emit_steady(sink, phase_before, c, finish);
                             }
                         }
                     }
@@ -1869,6 +2071,27 @@ fn run_program_impl<P: CoreProgram>(
             st.cas_failures += 1;
         }
 
+        if sink.enabled() {
+            sink.record(&TraceEvent::Grant {
+                thread: t as u32,
+                op: kind,
+                addr: step.addr,
+                start_ns: start,
+                stall_ns: stall,
+                latency_ns: acc.latency,
+                end_ns: end,
+                counted: step.counted,
+                cas_failed: kind == OpKind::Cas && !acc.modified,
+                spin_replay: replayed,
+                steady_replay: sub.is_some(),
+                d_hops,
+                d_inv,
+                level: acc.level,
+                distance: acc.distance,
+                prior_state: acc.prior_state,
+            });
+        }
+
         if serial {
             // Pipelined-handoff occupancy applies only when a rival's
             // read-for-ownership is actually outstanding: its pending
@@ -1882,6 +2105,9 @@ fn run_program_impl<P: CoreProgram>(
                         if line_of(s2.addr) == line && serializes(m, s2.op.kind()))
                     && ready.wake_of(u).is_some_and(|w| w <= end)
             });
+            // Previous owner read before this grant reassigns it —
+            // consumed by the routed pricing and the hand-off trace.
+            let prev = lines.owner[serial_slot[t] as usize];
             let occupancy = if contended {
                 let exec_ns = match kind {
                     OpKind::Write => m.cfg.timing.write_issue.max(1.0),
@@ -1891,9 +2117,28 @@ fn run_program_impl<P: CoreProgram>(
                     // Routed pricing: route from the line's previous
                     // owner; a line not yet granted (or supplied without
                     // migrating) pays only the injection leg.
-                    let prev = lines.owner[serial_slot[t] as usize];
                     let handoff = if migrated && prev != ABSENT {
-                        fabric.handoff(rt, prev as usize, t, line, start)
+                        if sink.enabled() {
+                            link_windows.clear();
+                            let h = fabric.handoff_traced(
+                                rt,
+                                prev as usize,
+                                t,
+                                line,
+                                start,
+                                &mut link_windows,
+                            );
+                            for w in &link_windows {
+                                sink.record(&TraceEvent::LinkBusy {
+                                    link: w.link,
+                                    begin_ns: w.begin_ns,
+                                    end_ns: w.busy_until_ns,
+                                });
+                            }
+                            h
+                        } else {
+                            fabric.handoff(rt, prev as usize, t, line, start)
+                        }
                     } else {
                         rt.inject_ns
                     };
@@ -1907,6 +2152,17 @@ fn run_program_impl<P: CoreProgram>(
             let slot = serial_slot[t] as usize;
             lines.free_at[slot] = start + occupancy.max(f64::MIN_POSITIVE);
             lines.owner[slot] = t as u32;
+            if sink.enabled() && migrated && prev != ABSENT && prev != t as u32 {
+                sink.record(&TraceEvent::Handoff {
+                    line,
+                    from: prev,
+                    to: t as u32,
+                    grant_ns: start,
+                    arrive_ns: end,
+                    prior_state: acc.prior_state,
+                    distance: acc.distance,
+                });
+            }
         }
 
         finish = finish.max(end);
@@ -1952,6 +2208,9 @@ fn run_program_impl<P: CoreProgram>(
     if let Some(c) = ctl.as_mut() {
         if c.phase == SteadyPhase::Replay {
             c.finish_replay(&mut m.stats, false);
+            if sink.enabled() {
+                emit_steady(sink, SteadyPhase::Replay, c, finish);
+            }
         }
     }
 

@@ -331,6 +331,7 @@ fn run_item(
     if let Some(spec) = job.workload.prep() {
         let key = (pool as u32, spec, x);
         if cache.key == Some(key) {
+            crate::obs::profile::global().add_prep(true);
             let snap = cache.snapshot.as_ref().expect("cache key implies snapshot");
             // Fast path: restore the prepared snapshot in place instead of
             // re-running the preparation phase.
@@ -343,6 +344,7 @@ fn run_item(
         }
         // Miss: fresh reset + prepare; snapshot only when items with the
         // same key follow (a singleton chunk would clone for nothing).
+        crate::obs::profile::global().add_prep(false);
         cache.key = None;
         let m = ensure_machine(machines, pool, job);
         m.reset();

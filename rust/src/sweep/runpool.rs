@@ -35,6 +35,7 @@
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
+use std::time::Instant;
 
 /// A pool of run-level workers; see the module docs. Cheap to build —
 /// threads are spawned per [`RunPool::run_streaming`] call and joined
@@ -43,13 +44,14 @@ use std::sync::mpsc;
 pub struct RunPool {
     threads: usize,
     pin: bool,
+    profile: bool,
 }
 
 impl RunPool {
     /// A pool with an explicit worker count (clamped to ≥ 1). Workers are
     /// not pinned; see [`RunPool::pinned`].
     pub fn new(threads: usize) -> RunPool {
-        RunPool { threads: threads.max(1), pin: false }
+        RunPool { threads: threads.max(1), pin: false, profile: false }
     }
 
     /// Opt into pinning each worker to a CPU — NUMA-node round-robin via
@@ -61,9 +63,21 @@ impl RunPool {
         self
     }
 
+    /// Opt into harness self-profiling (DESIGN.md §13): per-item busy
+    /// wall-clock and per-run span accounting into
+    /// [`crate::obs::profile::global`], surfaced by `repro … --profile`.
+    /// Off by default — the untimed path takes no `Instant` reads, so
+    /// profiling cannot perturb an unprofiled run (results are in virtual
+    /// time and bit-identical either way).
+    pub fn profiled(mut self, profile: bool) -> RunPool {
+        self.profile = profile;
+        self
+    }
+
     /// The CLI's pool: `RUN_THREADS` (set by `--run-threads`) if valid,
     /// else [`crate::sweep::default_threads`]; pinning per `PIN_WORKERS=1`
-    /// (set by `--pin-workers`).
+    /// (set by `--pin-workers`); profiling per `REPRO_PROFILE=1` (set by
+    /// `--profile`).
     pub fn with_defaults() -> RunPool {
         let threads = std::env::var("RUN_THREADS")
             .ok()
@@ -71,7 +85,8 @@ impl RunPool {
             .filter(|&n: &usize| n >= 1)
             .unwrap_or_else(crate::sweep::default_threads);
         let pin = std::env::var("PIN_WORKERS").map(|v| v == "1").unwrap_or(false);
-        RunPool { threads, pin }
+        let profile = std::env::var("REPRO_PROFILE").map(|v| v == "1").unwrap_or(false);
+        RunPool { threads, pin, profile }
     }
 
     pub fn threads(&self) -> usize {
@@ -97,10 +112,26 @@ impl RunPool {
             return;
         }
         let workers = self.threads.min(n);
+        // Self-profiling (opt-in): per-item busy time and the whole-run
+        // span feed the global harness profile. The unprofiled path takes
+        // zero clock reads.
+        let profile = self.profile;
+        let run_start = profile.then(Instant::now);
         if workers == 1 {
             let mut state = make_worker();
             for (i, item) in items.iter().enumerate() {
-                sink(i, work(&mut state, item));
+                if profile {
+                    let t0 = Instant::now();
+                    let r = work(&mut state, item);
+                    crate::obs::profile::global()
+                        .add_pool_item(t0.elapsed().as_nanos() as u64);
+                    sink(i, r);
+                } else {
+                    sink(i, work(&mut state, item));
+                }
+            }
+            if let Some(t0) = run_start {
+                crate::obs::profile::global().add_pool_run(1, t0.elapsed().as_nanos() as u64);
             }
             return;
         }
@@ -130,7 +161,16 @@ impl RunPool {
                         if i >= n {
                             break;
                         }
-                        if tx.send((i, work(&mut state, &items[i]))).is_err() {
+                        let r = if profile {
+                            let t0 = Instant::now();
+                            let r = work(&mut state, &items[i]);
+                            crate::obs::profile::global()
+                                .add_pool_item(t0.elapsed().as_nanos() as u64);
+                            r
+                        } else {
+                            work(&mut state, &items[i])
+                        };
+                        if tx.send((i, r)).is_err() {
                             break;
                         }
                     }
@@ -154,6 +194,9 @@ impl RunPool {
                 }
             }
         });
+        if let Some(t0) = run_start {
+            crate::obs::profile::global().add_pool_run(workers, t0.elapsed().as_nanos() as u64);
+        }
     }
 
     /// [`RunPool::run_streaming`] collecting the results in input order.
@@ -240,6 +283,21 @@ mod tests {
     #[test]
     fn clamps_zero_threads_to_one() {
         assert_eq!(RunPool::new(0).threads(), 1);
+    }
+
+    #[test]
+    fn profiled_pool_is_bit_identical_and_records() {
+        let items: Vec<u64> = (0..24).collect();
+        let plain = RunPool::new(2).map(&items, || (), |_, x| slow_square(x));
+        // Other tests share the global profile; assert on deltas only.
+        let before = crate::obs::profile::global().snapshot();
+        let profiled =
+            RunPool::new(2).profiled(true).map(&items, || (), |_, x| slow_square(x));
+        let after = crate::obs::profile::global().snapshot();
+        assert_eq!(plain, profiled);
+        assert!(after.pool_items >= before.pool_items + items.len() as u64);
+        assert!(after.pool_runs >= before.pool_runs + 1);
+        assert!(after.pool_workers_max >= 2);
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! Leveled stderr diagnostics (`REPRO_LOG=quiet|info|debug`, default
+//! `info`).
+//!
+//! Every informational `eprintln!` in the harness goes through
+//! [`log_info!`](crate::log_info)/[`log_debug!`](crate::log_debug) so
+//! stderr is filterable (`REPRO_LOG=quiet` for byte-clean pipelines,
+//! `debug` for extra detail) while **stdout stays byte-identical at every
+//! level** — tables, CSV echoes, and JSON always print unconditionally.
+//! Hard errors (usage failures, bad batch rows) also stay unconditional:
+//! the level only governs advisory diagnostics.
+//!
+//! The level is parsed from the environment once, on first use, and
+//! cached in an atomic — callers pay one relaxed load per suppressed
+//! line.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Diagnostic verbosity, ordered: `Quiet < Info < Debug`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LogLevel {
+    Quiet = 0,
+    Info = 1,
+    Debug = 2,
+}
+
+impl LogLevel {
+    pub fn label(self) -> &'static str {
+        match self {
+            LogLevel::Quiet => "quiet",
+            LogLevel::Info => "info",
+            LogLevel::Debug => "debug",
+        }
+    }
+}
+
+const UNSET: u8 = u8::MAX;
+
+static LEVEL: AtomicU8 = AtomicU8::new(UNSET);
+
+fn from_u8(raw: u8) -> LogLevel {
+    match raw {
+        0 => LogLevel::Quiet,
+        2 => LogLevel::Debug,
+        _ => LogLevel::Info,
+    }
+}
+
+/// Parse a `REPRO_LOG` value; anything unrecognized (or unset) is the
+/// `info` default, so a typo can only ever *add* diagnostics.
+pub fn parse(s: Option<&str>) -> LogLevel {
+    let norm = s.map(|v| v.trim().to_ascii_lowercase());
+    match norm.as_deref() {
+        Some("quiet") | Some("q") | Some("off") | Some("0") => LogLevel::Quiet,
+        Some("debug") | Some("verbose") | Some("2") => LogLevel::Debug,
+        _ => LogLevel::Info,
+    }
+}
+
+/// The active level — from `REPRO_LOG` on first call, cached after.
+pub fn level() -> LogLevel {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != UNSET {
+        return from_u8(raw);
+    }
+    let parsed = parse(std::env::var("REPRO_LOG").ok().as_deref());
+    LEVEL.store(parsed as u8, Ordering::Relaxed);
+    parsed
+}
+
+/// Override the level programmatically (tests; `main` honoring a flag).
+pub fn set_level(l: LogLevel) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn info_enabled() -> bool {
+    level() >= LogLevel::Info
+}
+
+pub fn debug_enabled() -> bool {
+    level() >= LogLevel::Debug
+}
+
+/// `eprintln!` an advisory diagnostic, suppressed by `REPRO_LOG=quiet`.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        if $crate::util::log::info_enabled() {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+/// `eprintln!` detail shown only under `REPRO_LOG=debug`.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        if $crate::util::log::debug_enabled() {
+            eprintln!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_values() {
+        assert_eq!(parse(None), LogLevel::Info);
+        assert_eq!(parse(Some("info")), LogLevel::Info);
+        assert_eq!(parse(Some("bogus")), LogLevel::Info);
+        assert_eq!(parse(Some("quiet")), LogLevel::Quiet);
+        assert_eq!(parse(Some(" QUIET ")), LogLevel::Quiet);
+        assert_eq!(parse(Some("0")), LogLevel::Quiet);
+        assert_eq!(parse(Some("debug")), LogLevel::Debug);
+        assert_eq!(parse(Some("verbose")), LogLevel::Debug);
+    }
+
+    #[test]
+    fn ordering_matches_verbosity() {
+        assert!(LogLevel::Quiet < LogLevel::Info);
+        assert!(LogLevel::Info < LogLevel::Debug);
+        assert_eq!(from_u8(LogLevel::Debug as u8), LogLevel::Debug);
+        assert_eq!(from_u8(LogLevel::Quiet as u8), LogLevel::Quiet);
+    }
+
+    #[test]
+    fn set_level_governs_gates() {
+        // Tests in one binary share the static; exercise all levels and
+        // restore the parsed default at the end.
+        set_level(LogLevel::Quiet);
+        assert!(!info_enabled() && !debug_enabled());
+        set_level(LogLevel::Debug);
+        assert!(info_enabled() && debug_enabled());
+        set_level(LogLevel::Info);
+        assert!(info_enabled() && !debug_enabled());
+        assert_eq!(LogLevel::Info.label(), "info");
+    }
+}

@@ -9,6 +9,7 @@ pub mod affinity;
 pub mod cli;
 pub mod fxhash;
 pub mod csv;
+pub mod log;
 pub mod prop;
 pub mod rng;
 pub mod stats;

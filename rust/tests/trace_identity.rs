@@ -1,0 +1,407 @@
+//! Observer-hook golden tests (DESIGN.md §13): attaching any
+//! [`TraceSink`] to the multicore schedulers leaves every reported number
+//! **bit-identical** — tracing is an observation, never a perturbation.
+//! Also reconciles the emitted event stream against the schedulers' own
+//! stats (each grant/hand-off/invalidation is seen exactly once), pins
+//! the metrics registry's per-thread mirror against the scheduler's, and
+//! structurally validates the Chrome trace-event JSON.
+
+use atomics_repro::arch;
+use atomics_repro::atomics::OpKind;
+use atomics_repro::bench::contention::{
+    run_model_sink, run_model_steady_in, ContentionModel, ContentionPoint,
+};
+use atomics_repro::bench::locks::{run_lock_in_steady, run_lock_sink, LockKind, LockResult};
+use atomics_repro::obs::{ChromeTrace, CollectSink, Metrics, Tee, TraceEvent};
+use atomics_repro::sim::{Fabric, Machine, MachineConfig, RunArena, SteadyMode};
+use atomics_repro::sweep::RunPool;
+
+/// Contended-enough op count (hand-offs, CAS failures, steady periods on
+/// every arch) that keeps the full matrix fast.
+const OPS: usize = 150;
+
+/// Each arch in both interconnect pricings: scalar hop model and the
+/// routed link-level fabric.
+fn variants() -> Vec<(String, MachineConfig)> {
+    let mut v = Vec::new();
+    for cfg in arch::all() {
+        v.push((format!("{} scalar", cfg.name), cfg.clone()));
+        let mut routed = cfg.clone();
+        routed.fabric = Fabric::routed_for(&cfg);
+        v.push((format!("{} routed", cfg.name), routed));
+    }
+    v
+}
+
+fn assert_point_bits_eq(a: &ContentionPoint, b: &ContentionPoint, ctx: &str) {
+    assert_eq!(a.threads, b.threads, "{ctx}: threads");
+    assert_eq!(a.op, b.op, "{ctx}: op");
+    assert_eq!(a.bandwidth_gbs.to_bits(), b.bandwidth_gbs.to_bits(), "{ctx}: bandwidth");
+    assert_eq!(a.mean_latency_ns.to_bits(), b.mean_latency_ns.to_bits(), "{ctx}: latency");
+    assert_eq!(a.elapsed_ns.to_bits(), b.elapsed_ns.to_bits(), "{ctx}: elapsed");
+    assert_eq!(a.per_thread, b.per_thread, "{ctx}: per-thread stats");
+    assert_eq!(a.links, b.links, "{ctx}: link stats");
+}
+
+fn assert_lock_bits_eq(a: &LockResult, b: &LockResult, ctx: &str) {
+    assert_eq!(a.kind, b.kind, "{ctx}: kind");
+    assert_eq!(a.threads, b.threads, "{ctx}: threads");
+    assert_eq!(a.acquisitions, b.acquisitions, "{ctx}: acquisitions");
+    assert_eq!(a.attempts, b.attempts, "{ctx}: attempts");
+    assert_eq!(a.failed_attempts, b.failed_attempts, "{ctx}: failed attempts");
+    assert_eq!(a.spin_reads, b.spin_reads, "{ctx}: spin reads");
+    assert_eq!(a.elapsed_ns.to_bits(), b.elapsed_ns.to_bits(), "{ctx}: elapsed");
+    assert_eq!(a.acq_per_sec.to_bits(), b.acq_per_sec.to_bits(), "{ctx}: acq/s");
+    assert_eq!(a.per_thread, b.per_thread, "{ctx}: per-thread stats");
+}
+
+/// Contend (Fig. 8 unit): tracing on vs off, on every arch × topology ×
+/// op × steady mode. The traced run's events must also reconcile with the
+/// scheduler's own sums — every grant, invalidation, interconnect hop,
+/// CAS failure and (for serializing atomics) line hop is seen exactly
+/// once — and the metrics registry's per-thread mirror must be the
+/// scheduler's stats, bitwise.
+#[test]
+fn contend_trace_attached_is_bit_identical_and_reconciles() {
+    for (name, cfg) in variants() {
+        for op in [OpKind::Cas, OpKind::Faa] {
+            for steady in [SteadyMode::Off, SteadyMode::On] {
+                let threads = cfg.topology.n_cores.min(4);
+                let ctx = format!("{name} {op:?} steady={steady:?}");
+
+                let mut m = Machine::new(cfg.clone());
+                let (plain, plain_info) = run_model_steady_in(
+                    &mut m,
+                    &mut RunArena::new(),
+                    ContentionModel::MachineAccurate,
+                    threads,
+                    op,
+                    OPS,
+                    steady,
+                );
+
+                let mut sink = Tee(CollectSink::new(), Metrics::new());
+                let mut m2 = Machine::new(cfg.clone());
+                let (traced, traced_info) = run_model_sink(
+                    &mut m2,
+                    &mut RunArena::new(),
+                    threads,
+                    op,
+                    OPS,
+                    steady,
+                    &mut sink,
+                );
+                assert_point_bits_eq(&plain, &traced, &ctx);
+                assert_eq!(plain_info.engaged, traced_info.engaged, "{ctx}: engaged");
+                assert_eq!(
+                    plain_info.events_skipped, traced_info.events_skipped,
+                    "{ctx}: events skipped"
+                );
+
+                let Tee(collect, metrics) = sink;
+                // The registry's per-thread mirror IS the scheduler's.
+                assert_eq!(metrics.per_thread(), &traced.per_thread[..], "{ctx}: mirror");
+
+                // Event-count reconciliation against the result's sums.
+                let mut grants = 0u64;
+                let mut counted = 0u64;
+                let mut inv = 0u64;
+                let mut hops = 0u64;
+                let mut cas_failed = 0u64;
+                let mut handoffs = 0u64;
+                for ev in &collect.events {
+                    match *ev {
+                        TraceEvent::Grant {
+                            counted: c,
+                            cas_failed: cf,
+                            d_hops,
+                            d_inv,
+                            ..
+                        } => {
+                            grants += 1;
+                            if c {
+                                counted += 1;
+                            }
+                            inv += d_inv;
+                            hops += d_hops;
+                            if cf {
+                                cas_failed += 1;
+                            }
+                        }
+                        TraceEvent::Handoff { .. } => handoffs += 1,
+                        _ => {}
+                    }
+                }
+                let total_ops: u64 = traced.per_thread.iter().map(|t| t.ops).sum();
+                assert_eq!(grants, total_ops, "{ctx}: one grant per op");
+                assert_eq!(counted, total_ops, "{ctx}: all contend grants counted");
+                assert_eq!(inv, traced.total_invalidations(), "{ctx}: invalidations");
+                let total_hops: u64 =
+                    traced.per_thread.iter().map(|t| t.interconnect_hops).sum();
+                assert_eq!(hops, total_hops, "{ctx}: interconnect hops");
+                let total_cas: u64 = traced.per_thread.iter().map(|t| t.cas_failures).sum();
+                assert_eq!(cas_failed, total_cas, "{ctx}: CAS failures");
+                // CAS/FAA serialize on every machine, so each line hop is
+                // exactly one hand-off event.
+                assert_eq!(handoffs, traced.total_line_hops(), "{ctx}: hand-offs");
+                assert_eq!(metrics.grants(), grants, "{ctx}: metrics grants");
+                assert_eq!(metrics.handoffs(), handoffs, "{ctx}: metrics hand-offs");
+                if steady == SteadyMode::On && traced_info.engaged {
+                    assert!(
+                        metrics.steady_engaged(),
+                        "{ctx}: steady engage transition observed"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The traced serial run against pooled untraced runs at widths 1/2/4:
+/// observation composes with run-level parallelism without breaking the
+/// pool's bit-identity contract.
+#[test]
+fn traced_serial_matches_pooled_untraced_at_every_width() {
+    let cfg = arch::ivybridge();
+    let counts = [1usize, 2, 4];
+    let op = OpKind::Cas;
+
+    let traced: Vec<ContentionPoint> = counts
+        .iter()
+        .map(|&n| {
+            let mut sink = Tee(CollectSink::new(), Metrics::new());
+            let mut m = Machine::new(cfg.clone());
+            run_model_sink(&mut m, &mut RunArena::new(), n, op, OPS, SteadyMode::Off, &mut sink)
+                .0
+        })
+        .collect();
+
+    for workers in [1usize, 2, 4] {
+        let pooled = RunPool::new(workers).map(
+            &counts,
+            || (Machine::new(cfg.clone()), RunArena::new()),
+            |(m, arena), &n| {
+                run_model_steady_in(
+                    m,
+                    arena,
+                    ContentionModel::MachineAccurate,
+                    n,
+                    op,
+                    OPS,
+                    SteadyMode::Off,
+                )
+                .0
+            },
+        );
+        for (t, p) in traced.iter().zip(&pooled) {
+            assert_point_bits_eq(t, p, &format!("threads={} workers={workers}", t.threads));
+        }
+    }
+}
+
+/// Locks (§6.1): the program-path scheduler with a sink attached is
+/// bit-identical for every lock kind, and the metrics mirror matches the
+/// scheduler's per-thread stats.
+#[test]
+fn locks_trace_attached_is_bit_identical() {
+    for cfg in [arch::haswell(), arch::ivybridge()] {
+        for kind in LockKind::ALL {
+            for steady in [SteadyMode::Off, SteadyMode::On] {
+                let ctx = format!("{} {} steady={steady:?}", cfg.name, kind.label());
+                let mut m = Machine::new(cfg.clone());
+                let plain =
+                    run_lock_in_steady(&mut m, &mut RunArena::new(), kind, 4, 40, steady);
+
+                let mut sink = Tee(CollectSink::new(), Metrics::new());
+                let mut m2 = Machine::new(cfg.clone());
+                let traced = run_lock_sink(
+                    &mut m2,
+                    &mut RunArena::new(),
+                    kind,
+                    4,
+                    40,
+                    steady,
+                    &mut sink,
+                );
+                match (plain, traced) {
+                    (Some((a, _)), Some((b, _))) => {
+                        assert_lock_bits_eq(&a, &b, &ctx);
+                        let Tee(collect, metrics) = sink;
+                        assert_eq!(metrics.per_thread(), &b.per_thread[..], "{ctx}: mirror");
+                        assert!(!collect.events.is_empty(), "{ctx}: events flowed");
+                        // Uncounted spin polls exist, so grants ≥ counted.
+                        assert!(metrics.grants() >= metrics.counted_ops(), "{ctx}");
+                    }
+                    (None, None) => {}
+                    _ => panic!("{ctx}: traced and untraced disagree on feasibility"),
+                }
+            }
+        }
+    }
+}
+
+/// Predict: the serving engine's results are bit-identical whether or not
+/// harness profiling observes it, and LRU probes feed the global profile.
+#[test]
+fn predict_profiled_is_bit_identical_and_feeds_profile() {
+    use atomics_repro::serve::{canonical_grid, ArchId, PredictEngine, PredictRequest};
+    let cfg = arch::haswell();
+    let reqs: Vec<PredictRequest> = canonical_grid(&cfg)
+        .into_iter()
+        .take(24)
+        .map(|q| PredictRequest::new(ArchId::Haswell, q))
+        .collect();
+
+    let mut plain_engine = PredictEngine::shipped();
+    let plain = plain_engine.predict_batch(&reqs).expect("valid grid batch");
+
+    let before = atomics_repro::obs::profile::global().snapshot();
+    let mut engine = PredictEngine::shipped();
+    let first = engine.predict_batch(&reqs).expect("valid grid batch");
+    let second = engine.predict_batch(&reqs).expect("valid grid batch");
+    let after = atomics_repro::obs::profile::global().snapshot();
+
+    for ((a, b), c) in plain.iter().zip(&first).zip(&second) {
+        assert_eq!(a.latency_ns.to_bits(), b.latency_ns.to_bits());
+        assert_eq!(b.latency_ns.to_bits(), c.latency_ns.to_bits());
+        assert_eq!(b.bandwidth_gbs.to_bits(), c.bandwidth_gbs.to_bits());
+    }
+    // The repeat pass hits the LRU; the counters reach the global profile
+    // (other tests share it, so assert deltas only).
+    assert!(
+        after.lru_hits + after.lru_misses >= before.lru_hits + before.lru_misses + 2 * 24,
+        "LRU probes recorded: before={before:?} after={after:?}"
+    );
+    assert!(after.lru_hits >= before.lru_hits + 24, "repeat pass hits");
+}
+
+// ---------------------------------------------------------------------
+// Chrome trace-event JSON: structural validation without a JSON crate.
+// ---------------------------------------------------------------------
+
+/// Minimal recursive-descent JSON syntax check (objects, arrays, strings
+/// with escapes, numbers, literals). Returns the rest on success.
+fn skip_ws(s: &[u8], mut i: usize) -> usize {
+    while i < s.len() && matches!(s[i], b' ' | b'\t' | b'\n' | b'\r') {
+        i += 1;
+    }
+    i
+}
+
+fn parse_value(s: &[u8], i: usize) -> Result<usize, String> {
+    let i = skip_ws(s, i);
+    let Some(&c) = s.get(i) else {
+        return Err("unexpected end".into());
+    };
+    match c {
+        b'{' => {
+            let mut i = skip_ws(s, i + 1);
+            if s.get(i) == Some(&b'}') {
+                return Ok(i + 1);
+            }
+            loop {
+                i = parse_string(s, skip_ws(s, i))?;
+                i = skip_ws(s, i);
+                if s.get(i) != Some(&b':') {
+                    return Err(format!("expected ':' at {i}"));
+                }
+                i = parse_value(s, i + 1)?;
+                i = skip_ws(s, i);
+                match s.get(i) {
+                    Some(&b',') => i += 1,
+                    Some(&b'}') => return Ok(i + 1),
+                    _ => return Err(format!("expected ',' or '}}' at {i}")),
+                }
+            }
+        }
+        b'[' => {
+            let mut i = skip_ws(s, i + 1);
+            if s.get(i) == Some(&b']') {
+                return Ok(i + 1);
+            }
+            loop {
+                i = parse_value(s, i)?;
+                i = skip_ws(s, i);
+                match s.get(i) {
+                    Some(&b',') => i += 1,
+                    Some(&b']') => return Ok(i + 1),
+                    _ => return Err(format!("expected ',' or ']' at {i}")),
+                }
+            }
+        }
+        b'"' => parse_string(s, i),
+        b't' if s[i..].starts_with(b"true") => Ok(i + 4),
+        b'f' if s[i..].starts_with(b"false") => Ok(i + 5),
+        b'n' if s[i..].starts_with(b"null") => Ok(i + 4),
+        b'-' | b'0'..=b'9' => {
+            let mut j = i + 1;
+            while j < s.len()
+                && matches!(s[j], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
+            {
+                j += 1;
+            }
+            Ok(j)
+        }
+        c => Err(format!("unexpected byte {c:#x} at {i}")),
+    }
+}
+
+fn parse_string(s: &[u8], i: usize) -> Result<usize, String> {
+    if s.get(i) != Some(&b'"') {
+        return Err(format!("expected string at {i}"));
+    }
+    let mut i = i + 1;
+    while let Some(&c) = s.get(i) {
+        match c {
+            b'"' => return Ok(i + 1),
+            b'\\' => i += 2,
+            _ => i += 1,
+        }
+    }
+    Err("unterminated string".into())
+}
+
+fn assert_valid_json(doc: &str) {
+    let bytes = doc.as_bytes();
+    let end = parse_value(bytes, 0).unwrap_or_else(|e| panic!("invalid JSON: {e}"));
+    assert_eq!(skip_ws(bytes, end), bytes.len(), "trailing garbage after document");
+}
+
+/// A real routed contention run through the Chrome sink: the document
+/// parses, and its phase counts reconcile with the metrics registry —
+/// one `"X"` slice per grant, one `"b"`/`"e"` pair per hand-off, two
+/// `"C"` samples per link busy window, one `"i"` instant per steady
+/// transition.
+#[test]
+fn chrome_trace_json_parses_and_counts_reconcile() {
+    let mut cfg = arch::ivybridge();
+    cfg.fabric = Fabric::routed_for(&cfg);
+    let mut sink = Tee(ChromeTrace::new("trace test"), Metrics::new());
+    let mut m = Machine::new(cfg.clone());
+    let _ = run_model_sink(
+        &mut m,
+        &mut RunArena::new(),
+        4,
+        OpKind::Cas,
+        OPS,
+        SteadyMode::On,
+        &mut sink,
+    );
+    let Tee(chrome, metrics) = sink;
+    assert!(!chrome.is_empty(), "a contended run emits events");
+    let doc = chrome.to_json();
+    assert_valid_json(&doc);
+
+    let count = |needle: &str| doc.matches(needle).count() as u64;
+    assert_eq!(count("\"ph\":\"X\""), metrics.grants(), "grant slices");
+    assert_eq!(count("\"ph\":\"b\""), metrics.handoffs(), "hand-off span begins");
+    assert_eq!(count("\"ph\":\"e\""), metrics.handoffs(), "hand-off span ends");
+    assert_eq!(count("\"ph\":\"C\""), 2 * metrics.link_windows(), "link samples");
+    assert_eq!(
+        count("\"ph\":\"i\""),
+        metrics.steady_history().len() as u64,
+        "steady instants"
+    );
+    assert!(metrics.handoffs() > 0, "4 contended threads migrate the line");
+    assert!(metrics.link_windows() > 0, "routed fabric reports busy windows");
+}

@@ -6,7 +6,9 @@ BENCH_baseline.json and fails (exit 1) when any throughput entry regresses
 by more than the threshold (default 20%).
 
 Throughput entries are the keys containing "per_sec" — higher is better.
-Wall-clock keys (\*_ms) are machine-load noise and are reported but never
+Wall-clock keys (\*_ms) are machine-load noise, and ratio keys
+(\*_speedup, \*_pct — e.g. `contend_trace_overhead_pct`, the cost of
+attaching a trace sink) are informational; both are reported but never
 gated on.
 
 Bootstrap: bench numbers are machine-dependent, so a fresh checkout (or a
@@ -22,7 +24,9 @@ regress against.  `--list-new` prints exactly those keys, one per line,
 and exits 0 (nothing else on stdout, so it pipes cleanly) — the quick way
 to see which keys a PR added (e.g. the `fit_`, `calibrate_`,
 `contend_fabric_` and `predict_` families arrived unadjudicated this
-way) before deciding to adopt them.
+way) before deciding to adopt them.  Non-throughput keys a PR adds
+(like the trace-overhead pct) never need adjudication — only `per_sec`
+keys are gated.
 
 Baseline refresh flow:
   1. `python3 scripts/bench_gate.py BASELINE FRESH --list-new` to see
